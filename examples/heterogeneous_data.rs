@@ -1,0 +1,62 @@
+//! Heterogeneous-data (federated-style) extension — the paper's
+//! conclusion flags data heterogeneity as the natural next step for
+//! A²CiD²; its theory already covers it through the ζ² term.
+//!
+//! This example Dirichlet-skews the label distribution across workers
+//! (smaller α = more skew) and compares the async baseline with A²CiD² on
+//! the ring: with heterogeneity, local models drift toward their local
+//! optima between averagings, so consensus — and hence the momentum's
+//! acceleration — matters much more than in the IID case.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_data
+//! ```
+
+use a2cid2::config::Method;
+use a2cid2::data::Sharding;
+use a2cid2::experiments::common::{base_config, set_workers, train_once, Scale};
+use a2cid2::graph::Topology;
+use a2cid2::metrics::Table;
+
+fn main() -> a2cid2::Result<()> {
+    let scale = Scale::from_env();
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Ring;
+    cfg.task = a2cid2::config::Task::CifarLike;
+    set_workers(&mut cfg, 16, scale);
+
+    let mut table = Table::new(
+        "heterogeneous data (Dirichlet label skew), ring n=16",
+        &["sharding", "method", "final loss", "held-out acc", "consensus"],
+    );
+    let shardings = [
+        ("iid".to_string(), Sharding::Iid),
+        ("dirichlet a=1.0".to_string(), Sharding::Dirichlet { alpha: 1.0 }),
+        ("dirichlet a=0.1".to_string(), Sharding::Dirichlet { alpha: 0.1 }),
+    ];
+    for (name, sharding) in shardings {
+        for method in [Method::AsyncBaseline, Method::Acid] {
+            cfg.sharding = sharding.clone();
+            cfg.method = method;
+            let out = train_once(&cfg)?;
+            let cons = out
+                .consensus
+                .as_ref()
+                .map(|s| s.tail_mean(0.5))
+                .unwrap_or(f64::NAN);
+            table.row(&[
+                name.clone(),
+                method.name().into(),
+                format!("{:.4}", out.final_loss),
+                format!("{:.3}", out.accuracy.unwrap_or(f64::NAN)),
+                format!("{cons:.4}"),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "Note: increasing skew raises the consensus floor; A2CiD2's lower \
+         effective chi keeps local replicas closer to the average."
+    );
+    Ok(())
+}

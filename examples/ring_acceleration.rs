@@ -1,0 +1,64 @@
+//! Ring acceleration demo: sweep worker counts on the ring and print the
+//! three-way comparison (AR-SGD, async baseline, A²CiD²) plus consensus,
+//! dumping loss curves to CSV for plotting.
+//!
+//! ```bash
+//! cargo run --release --example ring_acceleration [-- n_max] [-- out.csv]
+//! ```
+
+use a2cid2::config::Method;
+use a2cid2::experiments::common::{base_config, set_workers, train_once, Scale};
+use a2cid2::graph::Topology;
+use a2cid2::metrics::{Recorder, Table};
+
+fn main() -> a2cid2::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_max: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let csv = args.get(1).cloned().unwrap_or_else(|| "results/ring_acceleration.csv".into());
+
+    let scale = Scale::from_env();
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Ring;
+    cfg.task = a2cid2::config::Task::ImagenetLike;
+
+    let mut table = Table::new(
+        "ring acceleration sweep",
+        &["n", "method", "final loss", "held-out acc", "consensus", "chi1", "sqrt(chi1*chi2)"],
+    );
+    let mut rec = Recorder::new();
+    let mut n = 4usize;
+    while n <= n_max {
+        set_workers(&mut cfg, n, scale);
+        for method in [Method::AllReduce, Method::AsyncBaseline, Method::Acid] {
+            cfg.method = method;
+            let out = train_once(&cfg)?;
+            let cons = out
+                .consensus
+                .as_ref()
+                .and_then(|s| s.last())
+                .map(|(_, v)| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into());
+            let (c1, cacc) = out
+                .chis
+                .map(|(a, b)| (format!("{a:.1}"), format!("{:.1}", (a * b).sqrt())))
+                .unwrap_or(("-".into(), "-".into()));
+            table.row(&[
+                n.to_string(),
+                method.name().into(),
+                format!("{:.4}", out.final_loss),
+                format!("{:.3}", out.accuracy.unwrap_or(f64::NAN)),
+                cons,
+                c1,
+                cacc,
+            ]);
+            let mut series = out.loss.clone();
+            series.name = format!("loss/n{n}/{}", method.name());
+            rec.series.push(series);
+        }
+        n *= 2;
+    }
+    table.print();
+    rec.write_csv(std::path::Path::new(&csv), 1000)?;
+    println!("loss curves -> {csv}");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): train a
+//! transformer language model with asynchronous decentralized workers on
+//! the ring graph, with all three layers composed on the request path —
+//!
+//!   L1 Pallas fused-mixing kernel + L2 JAX transformer fwd/bwd
+//!   (AOT-compiled HLO, executed via PJRT — Python-free), driven by
+//!   L3's worker cells (gradient + communication threads) and the FIFO
+//!   availability-queue coordinator.
+//!
+//! Runs the async baseline and A²CiD² back-to-back on the same corpus and
+//! logs per-method loss curves + consensus to CSV.
+//!
+//! ```bash
+//! make artifacts   # builds transformer artifacts (preset: small, ~0.9M)
+//! cargo run --release --example train_lm_e2e [-- workers] [-- steps]
+//! # paper-scale (~100M params; heavy!):
+//! #   A2CID2_TRANSFORMER_PRESET=paper make artifacts && ...
+//! ```
+
+use std::sync::Arc;
+
+use a2cid2::config::Method;
+use a2cid2::data::MarkovCorpus;
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::metrics::{Recorder, Table};
+use a2cid2::optim::LrSchedule;
+use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
+use a2cid2::runtime::pjrt::PjrtContext;
+use a2cid2::runtime::pjrt_grad::LmPjrtGradSource;
+use a2cid2::runtime::worker::{run_async, GradSource, RuntimeOptions};
+
+fn main() -> a2cid2::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    // --- artifacts (L1 + L2, compiled once by `make artifacts`).
+    let manifest = Manifest::load(default_artifact_dir())?;
+    let ctx = PjrtContext::cpu()?;
+    let meta = manifest.get("transformer_grad")?;
+    let param_dim = meta.param_dim()?;
+    let vocab = meta.int("vocab")? as usize;
+    let seq = meta.int("seq")? as usize;
+    let batch = meta.int("batch")? as usize;
+    let init = manifest.load_init("transformer")?;
+    println!(
+        "transformer artifact: P={param_dim} vocab={vocab} seq={seq} batch={batch} \
+         ({} layers, d={})",
+        meta.int("n_layers")?,
+        meta.int("d_model")?
+    );
+
+    // --- workload: synthetic Markov corpus with a known entropy floor.
+    let branch = 4;
+    let corpus = Arc::new(MarkovCorpus::generate(vocab, branch, 200_000, 11));
+    println!(
+        "corpus: {} tokens over {vocab} symbols, entropy floor {:.3} nats/token",
+        corpus.tokens.len(),
+        MarkovCorpus::entropy_floor(branch)
+    );
+
+    let graph = Arc::new(Graph::build(&Topology::Ring, n)?);
+    let spectrum = graph.spectrum(1.0);
+    println!(
+        "ring n={n}: chi1={:.2} chi2={:.2} sqrt={:.2}",
+        spectrum.chi1,
+        spectrum.chi2,
+        spectrum.chi_acc()
+    );
+
+    let mut rec = Recorder::new();
+    let mut table = Table::new(
+        "train_lm_e2e — asynchronous decentralized transformer LM (ring)",
+        &[
+            "method",
+            "wall s",
+            "steps/worker",
+            "pairings",
+            "final loss",
+            "floor",
+            "consensus end",
+        ],
+    );
+    for method in [Method::AsyncBaseline, Method::Acid] {
+        let sources: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| {
+                let exe = ctx
+                    .load_artifact(&manifest, "transformer_grad")
+                    .expect("load transformer_grad");
+                Box::new(LmPjrtGradSource::new(
+                    exe,
+                    corpus.clone(),
+                    batch,
+                    seq,
+                    param_dim,
+                    1000 + w as u64,
+                )) as Box<dyn GradSource>
+            })
+            .collect();
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method,
+            lr: LrSchedule::WarmupStep {
+                base_lr: 0.05,
+                scale: (n as f64).sqrt(),
+                warmup_steps: steps / 10,
+                milestones: vec![steps / 2, steps * 3 / 4],
+            },
+            momentum: 0.9,
+            steps_per_worker: steps,
+            seed: 0,
+            monitor_interval: std::time::Duration::from_millis(200),
+            link_delay: None,
+        };
+        let t0 = std::time::Instant::now();
+        let res = run_async(graph.clone(), sources, init.clone(), opts)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let loss = res.recorder.get("train_loss").cloned().unwrap_or_default();
+        let final_loss = loss.tail_mean(0.15);
+        let consensus = res
+            .recorder
+            .get("consensus")
+            .and_then(|s| s.last())
+            .map(|(_, v)| v)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{}: {:.1}s, loss {:.3} (start {:.3}), {} pairings",
+            res.acid.label(),
+            wall,
+            final_loss,
+            loss.points.first().map(|p| p.1).unwrap_or(f64::NAN),
+            res.pairing.total
+        );
+        table.row(&[
+            res.acid.label().into(),
+            format!("{wall:.1}"),
+            format!("{:?}", res.grads_per_worker.iter().max().unwrap()),
+            res.pairing.total.to_string(),
+            format!("{final_loss:.3}"),
+            format!("{:.3}", MarkovCorpus::entropy_floor(branch)),
+            format!("{consensus:.4}"),
+        ]);
+        for (name, series_name) in [("loss", "train_loss"), ("consensus", "consensus")] {
+            if let Some(s) = res.recorder.get(series_name) {
+                let mut s = s.clone();
+                s.name = format!("{name}/{}", res.acid.label());
+                rec.series.push(s);
+            }
+        }
+    }
+    table.print();
+    let csv = "results/train_lm_e2e.csv";
+    rec.write_csv(std::path::Path::new(csv), 2000)?;
+    println!("curves -> {csv}");
+    Ok(())
+}

@@ -1,0 +1,198 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (``python -m compile.aot --out ../artifacts``):
+
+  <model>_train_step.hlo.txt  (x, xt, batch_a, batch_b, eta, dt, lr)
+                              -> (new_x, new_xt, loss)
+  <model>_grad.hlo.txt        (x, batch_a, batch_b) -> (loss, grad)
+  <model>_eval.hlo.txt        (x, batch_a, batch_b) -> (loss,)
+  <model>_comm_step.hlo.txt   (x, xt, x_peer, eta, dt, alpha, alpha_t)
+                              -> (new_x, new_xt)
+  <model>_init.bin            raw little-endian f32[P] initial parameters
+  acid_mix_grad_<N>.hlo.txt   standalone fused kernel (tests/perf)
+  acid_mix_comm_<N>.hlo.txt   standalone fused kernel (tests/perf)
+  manifest.txt                one artifact per line: name + key=value
+
+Python runs ONCE at build time; `make artifacts` is a no-op afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), F32)
+
+
+def vec(n):
+    return jax.ShapeDtypeStruct((n,), F32)
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = []
+
+    def add(self, name, **kv):
+        fields = " ".join(f"{k}={v}" for k, v in kv.items())
+        self.lines.append(f"{name} {fields}")
+
+    def write(self, outdir):
+        with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+            f.write("# a2cid2 artifact manifest: <name> key=value...\n")
+            f.write("\n".join(self.lines) + "\n")
+
+
+def emit(outdir, manifest, name, fn, args, **meta):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    manifest.add(name, file=fname, **meta)
+    print(f"  {fname}  ({len(text) / 1024:.0f} KiB)")
+
+
+def emit_model(outdir, manifest, spec, seed):
+    dim = spec.param_spec().dim
+    ba, bb = spec.batch_shapes()
+    name = spec.name
+    print(f"[{name}] P={dim}")
+
+    # Initial parameters as raw bytes (one consensus init for all workers).
+    init = spec.init(seed)
+    init_file = f"{name}_init.bin"
+    with open(os.path.join(outdir, init_file), "wb") as f:
+        f.write(bytes(memoryview(jax.device_get(init).astype("float32"))))
+    manifest.add(
+        f"{name}_init",
+        file=init_file,
+        kind="init",
+        model=name,
+        param_dim=dim,
+        seed=seed,
+    )
+
+    common = dict(model=name, param_dim=dim)
+    if name == "mlp":
+        common.update(
+            feat_dim=spec.dim, n_classes=spec.n_classes, batch=spec.batch
+        )
+    else:
+        common.update(
+            vocab=spec.vocab,
+            seq=spec.seq,
+            batch=spec.batch,
+            d_model=spec.d_model,
+            n_layers=spec.n_layers,
+            n_heads=spec.n_heads,
+        )
+
+    emit(
+        outdir,
+        manifest,
+        f"{name}_train_step",
+        M.make_train_step(spec),
+        (vec(dim), vec(dim), ba, bb, scalar(), scalar(), scalar()),
+        kind="train_step",
+        **common,
+    )
+    emit(
+        outdir,
+        manifest,
+        f"{name}_grad",
+        M.make_grad_only(spec),
+        (vec(dim), ba, bb),
+        kind="grad",
+        **common,
+    )
+    emit(
+        outdir,
+        manifest,
+        f"{name}_eval",
+        M.make_eval_loss(spec),
+        (vec(dim), ba, bb),
+        kind="eval",
+        **common,
+    )
+    emit(
+        outdir,
+        manifest,
+        f"{name}_comm_step",
+        M.make_comm_step(dim),
+        (vec(dim), vec(dim), vec(dim), scalar(), scalar(), scalar(), scalar()),
+        kind="comm_step",
+        **common,
+    )
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument(
+        "--transformer-preset",
+        default=os.environ.get("A2CID2_TRANSFORMER_PRESET", "small"),
+        help="tiny | small | medium | paper (~100M params)",
+    )
+    parser.add_argument(
+        "--kernel-sizes",
+        default="4096,65536",
+        help="comma-separated standalone-kernel sizes",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = Manifest()
+
+    emit_model(args.out, manifest, M.MlpSpec(), args.seed)
+    emit_model(
+        args.out, manifest, M.TransformerSpec.preset(args.transformer_preset), args.seed
+    )
+
+    for n in [int(s) for s in args.kernel_sizes.split(",") if s]:
+        emit(
+            args.out,
+            manifest,
+            f"acid_mix_grad_{n}",
+            M.make_mix_grad(n),
+            (vec(n), vec(n), vec(n), scalar(), scalar(), scalar()),
+            kind="kernel_grad",
+            param_dim=n,
+        )
+        emit(
+            args.out,
+            manifest,
+            f"acid_mix_comm_{n}",
+            M.make_comm_step(n),
+            (vec(n), vec(n), vec(n), scalar(), scalar(), scalar(), scalar()),
+            kind="kernel_comm",
+            param_dim=n,
+        )
+
+    manifest.write(args.out)
+    print(f"manifest: {len(manifest.lines)} artifacts -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Layer-1 Pallas kernels: the fused A2CiD2 mixing + update hot-spot.
+
+Every gossip event touches the full flat parameter vector. Done naively
+that is a chain of BLAS-1 passes (mix x, mix x~, subtract step / form m,
+apply to x, apply to x~): 5+ reads and writes of each element. These
+kernels fuse each event into a single pass — for P parameters:
+
+* ``mix_grad``:  3 reads (x, x~, g) + 2 writes per element;
+* ``mix_comm``:  3 reads (x, x~, x_peer) + 2 writes per element.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the kernel is element-wise
+and memory-bound, so instead of GPU threadblocks the flat vector is tiled
+into VMEM-sized blocks with a 1-D grid; ``BlockSpec`` expresses the
+HBM->VMEM pipeline. The scalar event parameters (dt, eta, gamma, alphas)
+ride along as a tiny SMEM-resident operand block replicated to every grid
+step. There is no MXU work here; the roofline is bytes/s.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops (see
+/opt/xla-example/README.md). On a real TPU the same code compiles with
+``interpret=False``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size in elements (§Perf, iteration 2). The kernel is element-wise
+# and HBM-bound, so larger blocks amortize grid/dispatch overhead: 32768
+# f32 = 128 KiB per operand; with 3 inputs + 2 outputs resident that is
+# 640 KiB of VMEM per grid step — double-buffered, well under the ~16 MiB
+# VMEM budget. (Iteration 1 used 4096 = 80 KiB/step: correct but 8× more
+# grid steps than needed for a pure-bandwidth kernel.)
+BLOCK = 32768
+
+
+def _grid(n):
+    return (n + BLOCK - 1) // BLOCK
+
+
+def _scalar_spec():
+    # The scalar bundle is a small (k,) f32 vector mapped whole to every
+    # grid step (index_map pins block 0).
+    return pl.BlockSpec((8,), lambda i: (0,))
+
+
+def _vec_spec():
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def _weights(scal_ref):
+    """Recover (wa, wb) from the scalar bundle: s[0]=eta, s[1]=dt."""
+    c = jnp.exp(-2.0 * scal_ref[0] * scal_ref[1])
+    return 0.5 * (1.0 + c), 0.5 * (1.0 - c)
+
+
+def _mix_grad_kernel(scal_ref, x_ref, xt_ref, g_ref, ox_ref, oxt_ref):
+    """out = mixing flow fused with the gradient step on both rows.
+
+    scal layout: [eta, dt, gamma, 0, 0, 0, 0, 0]
+    """
+    wa, wb = _weights(scal_ref)
+    gamma = scal_ref[2]
+    x = x_ref[...]
+    xt = xt_ref[...]
+    step = gamma * g_ref[...]
+    ox_ref[...] = wa * x + wb * xt - step
+    oxt_ref[...] = wb * x + wa * xt - step
+
+
+def _mix_comm_kernel(scal_ref, x_ref, xt_ref, xp_ref, ox_ref, oxt_ref):
+    """out = mixing flow fused with the p2p averaging update.
+
+    scal layout: [eta, dt, alpha, alpha_tilde, 0, 0, 0, 0]
+    """
+    wa, wb = _weights(scal_ref)
+    alpha = scal_ref[2]
+    alpha_tilde = scal_ref[3]
+    x = x_ref[...]
+    xt = xt_ref[...]
+    mx = wa * x + wb * xt
+    mxt = wb * x + wa * xt
+    m = mx - xp_ref[...]
+    ox_ref[...] = mx - alpha * m
+    oxt_ref[...] = mxt - alpha_tilde * m
+
+
+def _pack_scalars(*vals):
+    s = jnp.zeros((8,), jnp.float32)
+    for i, v in enumerate(vals):
+        s = s.at[i].set(v.astype(jnp.float32) if hasattr(v, "astype") else v)
+    return s
+
+
+@functools.partial(jax.named_call, name="acid_mix_grad")
+def mix_grad(x, xt, g, eta, dt, gamma):
+    """Fused momentum mixing + gradient step over a flat f32 vector.
+
+    Matches ``ref.mix_grad`` to f32 precision for any (eta >= 0, dt >= 0).
+    """
+    n = x.shape[0]
+    scal = _pack_scalars(eta, dt, gamma)
+    return pl.pallas_call(
+        _mix_grad_kernel,
+        grid=(_grid(n),),
+        in_specs=[_scalar_spec(), _vec_spec(), _vec_spec(), _vec_spec()],
+        out_specs=[_vec_spec(), _vec_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=True,
+    )(scal, x, xt, g)
+
+
+@functools.partial(jax.named_call, name="acid_mix_comm")
+def mix_comm(x, xt, x_peer, eta, dt, alpha, alpha_tilde):
+    """Fused momentum mixing + p2p averaging over a flat f32 vector.
+
+    ``x_peer`` must already be mixed to the event time (the engine's
+    contract; see ref.mix_comm).
+    """
+    n = x.shape[0]
+    scal = _pack_scalars(eta, dt, alpha, alpha_tilde)
+    return pl.pallas_call(
+        _mix_comm_kernel,
+        grid=(_grid(n),),
+        in_specs=[_scalar_spec(), _vec_spec(), _vec_spec(), _vec_spec()],
+        out_specs=[_vec_spec(), _vec_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=True,
+    )(scal, x, xt, x_peer)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the A2CiD2 kernels.
+
+These are the ground truth the Pallas kernels (``acid_mix.py``) are
+verified against in ``python/tests/test_kernel.py`` (pytest + hypothesis),
+and they mirror the closed-form math of the paper:
+
+between two events, the (x, x~) pair of a worker follows the mixing ODE
+``d(x, x~)/dt = [[-eta, eta], [eta, -eta]] (x, x~)`` whose flow is
+
+    exp(dt * A) = [[(1+c)/2, (1-c)/2],
+                   [(1-c)/2, (1+c)/2]],   c = exp(-2 * eta * dt).
+
+A gradient spike then applies ``-gamma * g`` to BOTH rows (Eq. 4), and a
+communication spike applies ``-alpha * m`` to x and ``-alpha_tilde * m``
+to x~ with ``m = x_mixed - x_peer`` (Algorithm 1, lines 15-19).
+"""
+
+import jax.numpy as jnp
+
+
+def mix_weights(eta, dt):
+    """Mixing weights (wa, wb) of exp(dt * [[-eta, eta], [eta, -eta]])."""
+    c = jnp.exp(-2.0 * eta * dt)
+    return 0.5 * (1.0 + c), 0.5 * (1.0 - c)
+
+
+def mix(x, xt, eta, dt):
+    """Apply the continuous momentum flow for elapsed time dt."""
+    wa, wb = mix_weights(eta, dt)
+    return wa * x + wb * xt, wb * x + wa * xt
+
+
+def mix_grad(x, xt, g, eta, dt, gamma):
+    """Momentum flow then gradient step on both rows (SDE Eq. 4)."""
+    mx, mxt = mix(x, xt, eta, dt)
+    return mx - gamma * g, mxt - gamma * g
+
+
+def mix_comm(x, xt, x_peer, eta, dt, alpha, alpha_tilde):
+    """Momentum flow then the p2p averaging update.
+
+    ``x_peer`` must already be mixed to the event time (both endpoints mix
+    first, then exchange) — the same contract as the Rust engines.
+    """
+    mx, mxt = mix(x, xt, eta, dt)
+    m = mx - x_peer
+    return mx - alpha * m, mxt - alpha_tilde * m

@@ -1,0 +1,315 @@
+"""Layer-2 JAX models over flat parameter vectors.
+
+The Rust coordinator treats a model replica as an opaque ``f32[P]`` vector
+(that is what the gossip layer averages), so every model here exposes:
+
+* ``init(seed) -> f32[P]`` — parameter initialization (run once at build
+  time; the bytes are shipped in ``artifacts/<model>_init.bin``);
+* ``train_step(x, xt, batch..., eta, dt, lr) -> (new_x, new_xt, loss)`` —
+  the request-path gradient event: fwd/bwd on the mini-batch, then the
+  fused L1 Pallas kernel applies the A2CiD2 mixing + SGD step to both
+  rows (Algorithm 1, lines 6-12);
+* ``comm_step(x, xt, x_peer, eta, dt, alpha, alpha_tilde)`` — the p2p
+  averaging event via the fused kernel (lines 13-19).
+
+Both are lowered ONCE to HLO text by ``aot.py``; Python never runs on the
+request path.
+
+Models:
+* ``MlpSpec``   — `dim -> hidden -> classes` ReLU classifier (the
+  CIFAR-like workload).
+* ``TransformerSpec`` — pre-LN causal transformer LM (the end-to-end
+  driver). ``preset="paper"`` builds a ~100M-parameter configuration; the
+  recorded e2e run uses a smaller preset sized for this CPU image
+  (EXPERIMENTS.md notes the substitution).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import acid_mix
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Named shapes making up the flat vector, in order."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def dim(self) -> int:
+        total = 0
+        for _, shape in self.entries:
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+    def unflatten(self, flat):
+        """Slice the flat vector into a dict of named arrays."""
+        out = {}
+        offset = 0
+        for name, shape in self.entries:
+            size = 1
+            for s in shape:
+                size *= s
+            out[name] = flat[offset : offset + size].reshape(shape)
+            offset += size
+        return out
+
+    def flatten(self, tree) -> jnp.ndarray:
+        return jnp.concatenate([tree[name].reshape(-1) for name, _ in self.entries])
+
+
+# --------------------------------------------------------------------------
+# MLP classifier
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    dim: int = 32
+    hidden: int = 64
+    n_classes: int = 10
+    batch: int = 16
+
+    @property
+    def name(self) -> str:
+        return "mlp"
+
+    def param_spec(self) -> ParamSpec:
+        return ParamSpec(
+            (
+                ("w1", (self.hidden, self.dim)),
+                ("b1", (self.hidden,)),
+                ("w2", (self.n_classes, self.hidden)),
+                ("b2", (self.n_classes,)),
+            )
+        )
+
+    def init(self, seed: int) -> jnp.ndarray:
+        spec = self.param_spec()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        tree = {
+            "w1": jax.random.normal(k1, (self.hidden, self.dim), jnp.float32)
+            * jnp.sqrt(2.0 / self.dim),
+            "b1": jnp.zeros((self.hidden,), jnp.float32),
+            "w2": jax.random.normal(k2, (self.n_classes, self.hidden), jnp.float32)
+            * jnp.sqrt(1.0 / self.hidden),
+            "b2": jnp.zeros((self.n_classes,), jnp.float32),
+        }
+        return spec.flatten(tree)
+
+    def loss(self, flat, xb, yb):
+        """Mean softmax cross-entropy on a (B, dim) batch."""
+        p = self.param_spec().unflatten(flat)
+        h = jnp.maximum(xb @ p["w1"].T + p["b1"], 0.0)
+        logits = h @ p["w2"].T + p["b2"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=-1))
+
+    def batch_shapes(self):
+        return (
+            jax.ShapeDtypeStruct((self.batch, self.dim), jnp.float32),
+            jax.ShapeDtypeStruct((self.batch,), jnp.int32),
+        )
+
+
+# --------------------------------------------------------------------------
+# Transformer LM
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerSpec:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq: int = 64
+    batch: int = 8
+
+    @classmethod
+    def preset(cls, name: str) -> "TransformerSpec":
+        """Named sizes: tiny (tests), small (e2e driver), paper (~100M)."""
+        if name == "tiny":
+            return cls(vocab=64, d_model=32, n_layers=2, n_heads=2, seq=16, batch=4)
+        if name == "small":
+            return cls(vocab=256, d_model=128, n_layers=4, n_heads=4, seq=64, batch=8)
+        if name == "medium":
+            return cls(vocab=512, d_model=256, n_layers=6, n_heads=8, seq=128, batch=8)
+        if name == "paper":
+            # ~100M parameters: 12 x 768 with a 32k vocabulary.
+            return cls(vocab=32768, d_model=768, n_layers=12, n_heads=12, seq=256, batch=8)
+        raise ValueError(f"unknown preset '{name}'")
+
+    @property
+    def name(self) -> str:
+        return "transformer"
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def param_spec(self) -> ParamSpec:
+        entries: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_emb", (self.vocab, self.d_model)),
+            ("pos_emb", (self.seq, self.d_model)),
+        ]
+        for layer in range(self.n_layers):
+            p = f"l{layer}."
+            entries += [
+                (p + "ln1_g", (self.d_model,)),
+                (p + "ln1_b", (self.d_model,)),
+                (p + "wqkv", (self.d_model, 3 * self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "ln2_g", (self.d_model,)),
+                (p + "ln2_b", (self.d_model,)),
+                (p + "w_ff1", (self.d_model, self.d_ff)),
+                (p + "b_ff1", (self.d_ff,)),
+                (p + "w_ff2", (self.d_ff, self.d_model)),
+                (p + "b_ff2", (self.d_model,)),
+            ]
+        entries += [
+            ("lnf_g", (self.d_model,)),
+            ("lnf_b", (self.d_model,)),
+            ("head", (self.d_model, self.vocab)),
+        ]
+        return ParamSpec(tuple(entries))
+
+    def init(self, seed: int) -> jnp.ndarray:
+        spec = self.param_spec()
+        key = jax.random.PRNGKey(seed)
+        tree = {}
+        for name, shape in spec.entries:
+            key, sub = jax.random.split(key)
+            if name.endswith(("_g",)):
+                tree[name] = jnp.ones(shape, jnp.float32)
+            elif name.endswith(("_b", "ln1_b", "ln2_b", "lnf_b")) or name.startswith("b_"):
+                tree[name] = jnp.zeros(shape, jnp.float32)
+            elif len(shape) == 1:
+                tree[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                fan_in = shape[0]
+                std = 0.02 if "emb" in name else (1.0 / fan_in) ** 0.5
+                tree[name] = jax.random.normal(sub, shape, jnp.float32) * std
+        return spec.flatten(tree)
+
+    @staticmethod
+    def _layer_norm(x, g, b):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+    def loss(self, flat, tokens, targets):
+        """Mean next-token cross-entropy on (B, S) int32 token batches."""
+        p = self.param_spec().unflatten(flat)
+        B, S = tokens.shape
+        h = p["tok_emb"][tokens] + p["pos_emb"][None, :S, :]
+        mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+        neg_inf = jnp.float32(-1e9)
+        for layer in range(self.n_layers):
+            pref = f"l{layer}."
+            x = self._layer_norm(h, p[pref + "ln1_g"], p[pref + "ln1_b"])
+            qkv = x @ p[pref + "wqkv"]  # (B,S,3D)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, S, self.n_heads, self.d_head).transpose(0, 2, 1, 3)
+            k = k.reshape(B, S, self.n_heads, self.d_head).transpose(0, 2, 1, 3)
+            v = v.reshape(B, S, self.n_heads, self.d_head).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+                jnp.float32(self.d_head)
+            )
+            att = jnp.where(mask[None, None] > 0, att, neg_inf)
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            out = out.transpose(0, 2, 1, 3).reshape(B, S, self.d_model)
+            h = h + out @ p[pref + "wo"]
+            x = self._layer_norm(h, p[pref + "ln2_g"], p[pref + "ln2_b"])
+            ff = jax.nn.gelu(x @ p[pref + "w_ff1"] + p[pref + "b_ff1"])
+            h = h + ff @ p[pref + "w_ff2"] + p[pref + "b_ff2"]
+        h = self._layer_norm(h, p["lnf_g"], p["lnf_b"])
+        logits = h @ p["head"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    def batch_shapes(self):
+        return (
+            jax.ShapeDtypeStruct((self.batch, self.seq), jnp.int32),
+            jax.ShapeDtypeStruct((self.batch, self.seq), jnp.int32),
+        )
+
+
+# --------------------------------------------------------------------------
+# Request-path step functions (lowered to HLO by aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_train_step(spec):
+    """(x, xt, batch_a, batch_b, eta, dt, lr) -> (new_x, new_xt, loss).
+
+    fwd/bwd through the model (L2) and the fused A2CiD2 mixing + SGD step
+    through the Pallas kernel (L1), all in one HLO module. Heavy-ball
+    momentum on the gradient is folded on the Rust side (it owns the
+    velocity buffer); here ``lr`` multiplies the raw batch gradient.
+    """
+
+    def step(x, xt, batch_a, batch_b, eta, dt, lr):
+        loss, grad = jax.value_and_grad(spec.loss)(x, batch_a, batch_b)
+        new_x, new_xt = acid_mix.mix_grad(x, xt, grad, eta, dt, lr)
+        return new_x, new_xt, loss
+
+    return step
+
+
+def make_grad_only(spec):
+    """(x, batch_a, batch_b) -> (loss, grad): for the Rust-side optimizer
+    path (heavy-ball momentum folds the gradient before the mixing kernel
+    is applied via the comm/grad artifacts)."""
+
+    def fn(x, batch_a, batch_b):
+        loss, grad = jax.value_and_grad(spec.loss)(x, batch_a, batch_b)
+        return loss, grad
+
+    return fn
+
+
+def make_eval_loss(spec):
+    """(x, batch_a, batch_b) -> loss, no gradient (validation pass)."""
+
+    def fn(x, batch_a, batch_b):
+        return (spec.loss(x, batch_a, batch_b),)
+
+    return fn
+
+
+def make_comm_step(dim: int):
+    """(x, xt, x_peer, eta, dt, alpha, alpha_tilde) -> (new_x, new_xt)."""
+
+    def step(x, xt, x_peer, eta, dt, alpha, alpha_tilde):
+        return acid_mix.mix_comm(x, xt, x_peer, eta, dt, alpha, alpha_tilde)
+
+    return step
+
+
+def make_mix_grad(dim: int):
+    """Standalone fused kernel artifact (tests + perf bench):
+    (x, xt, g, eta, dt, gamma) -> (new_x, new_xt)."""
+
+    def step(x, xt, g, eta, dt, gamma):
+        return acid_mix.mix_grad(x, xt, g, eta, dt, gamma)
+
+    return step

@@ -1,0 +1,133 @@
+"""Pallas kernel vs pure-jnp oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes and event parameters; fixed cases pin the
+closed-form math (doubly-stochastic weights, mass conservation, baseline
+reductions).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import acid_mix, ref
+
+# Sizes that exercise: sub-block, exact block, multi-block, ragged tail.
+SIZES = [1, 7, 4096, 8192, 10_000]
+
+
+def rand_vec(rng, n):
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_mix_grad_matches_ref(n):
+    rng = np.random.default_rng(n)
+    x, xt, g = (rand_vec(rng, n) for _ in range(3))
+    out = acid_mix.mix_grad(x, xt, g, 0.25, 0.8, 0.05)
+    want = ref.mix_grad(x, xt, g, 0.25, 0.8, 0.05)
+    np.testing.assert_allclose(out[0], want[0], atol=1e-6)
+    np.testing.assert_allclose(out[1], want[1], atol=1e-6)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_mix_comm_matches_ref(n):
+    rng = np.random.default_rng(100 + n)
+    x, xt, xp = (rand_vec(rng, n) for _ in range(3))
+    out = acid_mix.mix_comm(x, xt, xp, 0.25, 0.8, 0.5, 1.7)
+    want = ref.mix_comm(x, xt, xp, 0.25, 0.8, 0.5, 1.7)
+    np.testing.assert_allclose(out[0], want[0], atol=1e-6)
+    np.testing.assert_allclose(out[1], want[1], atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9000),
+    eta=st.floats(min_value=0.0, max_value=5.0),
+    dt=st.floats(min_value=0.0, max_value=10.0),
+    gamma=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mix_grad_hypothesis(n, eta, dt, gamma, seed):
+    rng = np.random.default_rng(seed)
+    x, xt, g = (rand_vec(rng, n) for _ in range(3))
+    out = acid_mix.mix_grad(x, xt, g, eta, dt, gamma)
+    want = ref.mix_grad(x, xt, g, eta, dt, gamma)
+    np.testing.assert_allclose(out[0], want[0], atol=1e-5)
+    np.testing.assert_allclose(out[1], want[1], atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9000),
+    eta=st.floats(min_value=0.0, max_value=5.0),
+    dt=st.floats(min_value=0.0, max_value=10.0),
+    alpha=st.floats(min_value=0.0, max_value=1.0),
+    alpha_tilde=st.floats(min_value=0.0, max_value=8.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mix_comm_hypothesis(n, eta, dt, alpha, alpha_tilde, seed):
+    rng = np.random.default_rng(seed)
+    x, xt, xp = (rand_vec(rng, n) for _ in range(3))
+    out = acid_mix.mix_comm(x, xt, xp, eta, dt, alpha, alpha_tilde)
+    want = ref.mix_comm(x, xt, xp, eta, dt, alpha, alpha_tilde)
+    np.testing.assert_allclose(out[0], want[0], atol=1e-5)
+    np.testing.assert_allclose(out[1], want[1], atol=1e-5)
+
+
+def test_mixing_weights_doubly_stochastic():
+    for eta in [0.0, 0.1, 2.0]:
+        for dt in [0.0, 0.5, 100.0]:
+            wa, wb = ref.mix_weights(eta, dt)
+            assert float(wa + wb) == pytest.approx(1.0, abs=1e-6)
+            assert float(wa) >= 0.5 - 1e-6
+
+
+def test_mass_conservation():
+    rng = np.random.default_rng(0)
+    x, xt = rand_vec(rng, 5000), rand_vec(rng, 5000)
+    mx, mxt = ref.mix(x, xt, 0.7, 0.3)
+    np.testing.assert_allclose(np.asarray(mx + mxt), np.asarray(x + xt), atol=1e-5)
+
+
+def test_eta_zero_is_identity_mixing():
+    rng = np.random.default_rng(1)
+    x, xt, g = (rand_vec(rng, 4096) for _ in range(3))
+    ox, oxt = acid_mix.mix_grad(x, xt, g, 0.0, 5.0, 0.1)
+    np.testing.assert_allclose(np.asarray(ox), np.asarray(x - 0.1 * g), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(oxt), np.asarray(xt - 0.1 * g), atol=1e-6)
+
+
+def test_baseline_comm_is_averaging():
+    # alpha = alpha_tilde = 1/2, eta = 0, xt == x: both rows land on the
+    # pairwise average (Eq. 6).
+    rng = np.random.default_rng(2)
+    x = rand_vec(rng, 4096)
+    xp = rand_vec(rng, 4096)
+    ox, oxt = acid_mix.mix_comm(x, x, xp, 0.0, 1.0, 0.5, 0.5)
+    np.testing.assert_allclose(np.asarray(ox), np.asarray(0.5 * (x + xp)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(oxt), np.asarray(ox), atol=1e-6)
+
+
+def test_semigroup_two_small_steps_equal_one_big():
+    rng = np.random.default_rng(3)
+    x, xt = rand_vec(rng, 2048), rand_vec(rng, 2048)
+    a1, b1 = ref.mix(x, xt, 0.4, 0.25)
+    a1, b1 = ref.mix(a1, b1, 0.4, 0.75)
+    a2, b2 = ref.mix(x, xt, 0.4, 1.0)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), atol=1e-5)
+
+
+def test_kernel_jit_composes():
+    # The kernel must lower inside a jitted graph (the aot.py path).
+    @jax.jit
+    def step(x, xt, g):
+        return acid_mix.mix_grad(x, xt, g, 0.2, 0.5, 0.1)
+
+    rng = np.random.default_rng(4)
+    x, xt, g = (rand_vec(rng, 4096) for _ in range(3))
+    out = step(x, xt, g)
+    want = ref.mix_grad(x, xt, g, 0.2, 0.5, 0.1)
+    np.testing.assert_allclose(out[0], want[0], atol=1e-6)

@@ -1,0 +1,136 @@
+"""L2 model checks: shapes, losses, gradients, and the fused train step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def test_mlp_param_dim():
+    spec = M.MlpSpec(dim=32, hidden=64, n_classes=10)
+    assert spec.param_spec().dim == 64 * 32 + 64 + 10 * 64 + 10
+
+
+def test_param_spec_round_trip():
+    spec = M.MlpSpec().param_spec()
+    flat = jnp.arange(spec.dim, dtype=jnp.float32)
+    tree = spec.unflatten(flat)
+    back = spec.flatten(tree)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_mlp_initial_loss_is_log_k():
+    spec = M.MlpSpec()
+    flat = spec.init(0)
+    # Head starts near zero -> logits near-uniform -> loss ~= log(K).
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.standard_normal((spec.batch, spec.dim)), jnp.float32)
+    yb = jnp.asarray(rng.integers(0, spec.n_classes, spec.batch), jnp.int32)
+    loss = spec.loss(flat, xb, yb)
+    assert float(loss) == pytest.approx(np.log(spec.n_classes), rel=0.2)
+
+
+def test_mlp_gradient_descends():
+    spec = M.MlpSpec(dim=8, hidden=16, n_classes=4, batch=32)
+    flat = spec.init(1)
+    rng = np.random.default_rng(1)
+    xb = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    yb = jnp.asarray(rng.integers(0, 4, 32), jnp.int32)
+    grad_fn = jax.jit(jax.value_and_grad(spec.loss))
+    l0, _ = grad_fn(flat, xb, yb)
+    for _ in range(50):
+        _, g = grad_fn(flat, xb, yb)
+        flat = flat - 0.5 * g
+    l1, _ = grad_fn(flat, xb, yb)
+    assert float(l1) < 0.5 * float(l0)
+
+
+def test_transformer_shapes_and_loss():
+    spec = M.TransformerSpec.preset("tiny")
+    flat = spec.init(0)
+    assert flat.shape == (spec.param_spec().dim,)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, spec.vocab, (spec.batch, spec.seq)), jnp.int32)
+    tgts = jnp.asarray(rng.integers(0, spec.vocab, (spec.batch, spec.seq)), jnp.int32)
+    loss = spec.loss(flat, toks, tgts)
+    # Random targets -> about log(vocab).
+    assert float(loss) == pytest.approx(np.log(spec.vocab), rel=0.25)
+
+
+def test_transformer_causality():
+    # Changing a future token must not change earlier positions' loss
+    # contributions: compare per-position NLL directly via logits trick --
+    # here we check that prefix loss is unchanged when the tail changes.
+    spec = M.TransformerSpec.preset("tiny")
+    flat = spec.init(3)
+    rng = np.random.default_rng(3)
+    toks = np.asarray(rng.integers(0, spec.vocab, (1, spec.seq)), np.int32)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % spec.vocab
+
+    def prefix_loss(tokens):
+        # Loss restricted to the first half of positions.
+        p = spec.param_spec()
+        tgt = np.roll(tokens, -1, axis=1)
+        full = spec.loss(flat, jnp.asarray(tokens), jnp.asarray(tgt))
+        del p, full
+        # Recompute with masked mean over first half only, via vmap-free
+        # trick: zero out tail targets' contribution by comparing two
+        # sums is overkill here; instead check logits prefix equality.
+        return None
+
+    # Direct: logits over the prefix must be identical.
+    # (Reuse the internal forward by calling loss with equal targets and
+    # verifying the total only differs through the final position.)
+    t_same = jnp.asarray(np.roll(toks, -1, axis=1))
+    l1 = spec.loss(flat, jnp.asarray(toks), t_same)
+    l2 = spec.loss(flat, jnp.asarray(toks2), t_same)
+    # Only the last input token differs; with causal masking it can only
+    # influence the last position's prediction: per-position mean over S
+    # positions bounds the difference by ~(max nll)/S, not zero, so assert
+    # a loose bound instead of equality.
+    assert abs(float(l1) - float(l2)) < np.log(spec.vocab) * 2.0 / spec.seq + 0.1
+
+
+def test_transformer_learns_constant_sequence():
+    spec = M.TransformerSpec(vocab=16, d_model=32, n_layers=1, n_heads=2, seq=8, batch=4)
+    flat = spec.init(4)
+    toks = jnp.ones((spec.batch, spec.seq), jnp.int32) * 3
+    tgts = toks
+    grad_fn = jax.jit(jax.value_and_grad(spec.loss))
+    for _ in range(60):
+        _, g = grad_fn(flat, toks, tgts)
+        flat = flat - 0.5 * g
+    loss, _ = grad_fn(flat, toks, tgts)
+    assert float(loss) < 0.1
+
+
+def test_train_step_composes_l1_and_l2():
+    spec = M.MlpSpec(dim=8, hidden=16, n_classes=4, batch=8)
+    step = jax.jit(M.make_train_step(spec))
+    flat = spec.init(5)
+    xt = flat + 0.05
+    rng = np.random.default_rng(5)
+    xb = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    yb = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+    eta, dt, lr = 0.3, 0.6, 0.1
+    new_x, new_xt, loss = step(flat, xt, xb, yb, eta, dt, lr)
+    # Oracle: grad from value_and_grad + ref.mix_grad.
+    l_ref, g = jax.value_and_grad(spec.loss)(flat, xb, yb)
+    want_x, want_xt = ref.mix_grad(flat, xt, g, eta, dt, lr)
+    assert float(loss) == pytest.approx(float(l_ref), abs=1e-6)
+    np.testing.assert_allclose(np.asarray(new_x), np.asarray(want_x), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_xt), np.asarray(want_xt), atol=1e-5)
+
+
+def test_presets():
+    tiny = M.TransformerSpec.preset("tiny")
+    small = M.TransformerSpec.preset("small")
+    assert tiny.param_spec().dim < small.param_spec().dim
+    paper = M.TransformerSpec.preset("paper")
+    assert paper.param_spec().dim > 80_000_000, "paper preset ~100M params"
+    with pytest.raises(ValueError):
+        M.TransformerSpec.preset("nope")

@@ -1,0 +1,180 @@
+//! Perf bench — the §Perf deliverable's measurement harness.
+//!
+//! Measures the L3 hot paths against their practical rooflines:
+//!   * fused gossip kernels (mix_grad / mix_comm) vs memcpy bandwidth;
+//!   * simulator event throughput (events/s);
+//!   * PJRT dispatch overhead for the standalone L1 kernel artifacts
+//!     (needs `make artifacts`; skipped gracefully if missing);
+//!
+//! `A2CID2_BENCH_FULL=1` raises iteration counts.
+
+use std::time::Instant;
+
+use a2cid2::gossip::vecops;
+use a2cid2::metrics::Table;
+
+/// Time `f` over `iters` iterations after `warmup`, returning seconds/iter.
+fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn gb_per_s(bytes_per_iter: usize, secs: f64) -> f64 {
+    bytes_per_iter as f64 / secs / 1e9
+}
+
+fn main() {
+    let full = std::env::var("A2CID2_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let iters = if full { 400 } else { 100 };
+    let n: usize = 4 * 1024 * 1024; // 16 MiB per f32 buffer
+
+    let mut table = Table::new(
+        "Perf — L3 hot paths (bytes/element per column 'notes')",
+        &["kernel", "elements", "time/iter", "effective GB/s", "notes"],
+    );
+
+    // Roofline reference: memcpy.
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let t = time_it(3, iters, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    });
+    table.row(&[
+        "memcpy (roofline)".into(),
+        n.to_string(),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.1}", gb_per_s(8 * n, t)),
+        "1R + 1W".into(),
+    ]);
+
+    // Fused mixing + gradient step: 3R + 2W per element.
+    let g = vec![0.5f32; n];
+    let mut x = vec![1.0f32; n];
+    let mut xt = vec![0.5f32; n];
+    let t = time_it(3, iters, || {
+        vecops::mix_grad(0.9, 0.1, 0.01, &g, &mut x, &mut xt);
+        std::hint::black_box(&x);
+    });
+    table.row(&[
+        "mix_grad (fused)".into(),
+        n.to_string(),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.1}", gb_per_s(20 * n, t)),
+        "3R + 2W".into(),
+    ]);
+
+    // Fused mixing + comm step: 3R + 2W per element.
+    let xp = vec![0.25f32; n];
+    let t = time_it(3, iters, || {
+        vecops::mix_comm(0.9, 0.1, 0.5, 1.5, &xp, &mut x, &mut xt);
+        std::hint::black_box(&x);
+    });
+    table.row(&[
+        "mix_comm (fused)".into(),
+        n.to_string(),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.1}", gb_per_s(20 * n, t)),
+        "3R + 2W".into(),
+    ]);
+
+    // Unfused composition for comparison (what fusing saves).
+    let t = time_it(3, iters, || {
+        vecops::mix_pair(0.9, 0.1, &mut x, &mut xt);
+        vecops::axpy(-0.01, &g, &mut x);
+        vecops::axpy(-0.01, &g, &mut xt);
+        std::hint::black_box(&x);
+    });
+    table.row(&[
+        "mix+2*axpy (unfused)".into(),
+        n.to_string(),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.1}", gb_per_s(32 * n, t)),
+        "(2R+2W) + 2*(2R+1W)".into(),
+    ]);
+
+    // Simulator event throughput on a pure-gossip workload.
+    {
+        use a2cid2::graph::{Graph, Topology};
+        let graph = Graph::build(&Topology::Ring, 64).unwrap();
+        let rates = graph.edge_rates(1.0);
+        let dim = 1024;
+        let acid = a2cid2::gossip::AcidParams::accelerated(200.0, 1.0);
+        let mixer = a2cid2::gossip::Mixer::new(acid.eta);
+        let mut workers: Vec<a2cid2::gossip::WorkerState> = (0..64)
+            .map(|i| a2cid2::gossip::WorkerState::new(vec![i as f32; dim]))
+            .collect();
+        // Gradient clocks at ~zero rate: comm-only stream.
+        let mut queue = a2cid2::simulator::EventQueue::new(&vec![1e-9; 64], &rates, 1);
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        while let Some(ev) = queue.next(500.0) {
+            if let a2cid2::simulator::EventKind::Comm { edge } = ev.kind {
+                let (i, j) = graph.edges[edge];
+                let (l, r) = workers.split_at_mut(j);
+                a2cid2::gossip::dynamics::comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+                events += 1;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "simulator comm events".into(),
+            format!("dim={dim}"),
+            format!("{:.2} us/event", secs / events as f64 * 1e6),
+            format!("{:.1}", gb_per_s(events as usize * dim * 24, secs)),
+            format!("{events} events"),
+        ]);
+    }
+
+    // PJRT kernel dispatch (the L1 artifact), if artifacts are built.
+    match pjrt_kernel_bench(if full { 200 } else { 50 }) {
+        Ok(rows) => {
+            for r in rows {
+                table.row(&r);
+            }
+        }
+        Err(e) => println!("(skipping PJRT kernel bench: {e})"),
+    }
+
+    table.print();
+}
+
+fn pjrt_kernel_bench(iters: usize) -> a2cid2::Result<Vec<Vec<String>>> {
+    use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
+    use a2cid2::runtime::pjrt::{lit_f32, lit_scalar, PjrtContext};
+    let manifest = Manifest::load(default_artifact_dir())?;
+    let ctx = PjrtContext::cpu()?;
+    let mut out = Vec::new();
+    for size in [4096usize, 65536] {
+        let name = format!("acid_mix_grad_{size}");
+        let exe = ctx.load_artifact(&manifest, &name)?;
+        let x = vec![1.0f32; size];
+        let t = time_it(3, iters, || {
+            let outs = exe
+                .run(&[
+                    lit_f32(&x),
+                    lit_f32(&x),
+                    lit_f32(&x),
+                    lit_scalar(0.1),
+                    lit_scalar(0.5),
+                    lit_scalar(0.01),
+                ])
+                .expect("kernel run");
+            std::hint::black_box(outs);
+        });
+        out.push(vec![
+            format!("PJRT {name}"),
+            size.to_string(),
+            format!("{:.1} us/call", t * 1e6),
+            format!("{:.2}", size as f64 * 20.0 / t / 1e9),
+            "incl. literal copies".into(),
+        ]);
+    }
+    Ok(out)
+}

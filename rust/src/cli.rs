@@ -1,0 +1,195 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and subcommands; generates usage text from the declared
+//! options.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// A simple CLI definition: subcommand name → options.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self { program, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse a raw argv (excluding the program name). The first
+    /// non-option token becomes the subcommand; later ones are positional.
+    pub fn parse(&self, argv: &[String]) -> crate::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.options.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage())
+                    })?;
+                if spec.is_flag {
+                    anyhow::ensure!(
+                        inline_val.is_none(),
+                        "--{name} is a flag and takes no value"
+                    );
+                    args.flags.push(name);
+                } else {
+                    let value = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    args.options.insert(name, value);
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Render usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for s in &self.specs {
+            let tail = if s.is_flag {
+                String::new()
+            } else {
+                match s.default {
+                    Some(d) => format!(" <value>  (default: {d})"),
+                    None => " <value>".to_string(),
+                }
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", s.name, tail, s.help));
+        }
+        out
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{name}={raw}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("demo", "test cli")
+            .opt("workers", "worker count", Some("8"))
+            .opt("topology", "graph", Some("ring"))
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&["run", "--workers", "16"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("workers"), Some("16"));
+        assert_eq!(a.get("topology"), Some("ring"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cli()
+            .parse(&argv(&["--workers=4", "--verbose", "cmd", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("workers"), Some("4"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.command.as_deref(), Some("cmd"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors_with_usage() {
+        let err = cli().parse(&argv(&["--nope", "1"])).unwrap_err().to_string();
+        assert!(err.contains("unknown option"));
+        assert!(err.contains("--workers"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = cli().parse(&argv(&["--workers", "32"])).unwrap();
+        let w: usize = a.get_parse("workers").unwrap();
+        assert_eq!(w, 32);
+        let bad: crate::Result<usize> = a.get_parse("topology");
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&argv(&["--workers"])).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Configuration system: a hand-rolled TOML-subset parser plus the typed
+//! experiment/runtime configs the launcher consumes.
+//!
+//! Supported TOML subset (all the framework needs): `[table]` headers,
+//! `key = value` with string / integer / float / boolean / homogeneous
+//! array values, `#` comments. No serde offline — the parser is ~150 lines
+//! and fully tested.
+
+mod parser;
+
+pub use parser::{parse_toml, TomlValue};
+
+use crate::data::Sharding;
+use crate::graph::Topology;
+
+/// Which dynamic to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Synchronous All-Reduce SGD (the paper's centralized baseline).
+    AllReduce,
+    /// Asynchronous pairwise gossip, η = 0 (≈ AD-PSGD).
+    AsyncBaseline,
+    /// Asynchronous gossip + continuous momentum (the paper's method).
+    Acid,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> crate::Result<Method> {
+        Ok(match s {
+            "allreduce" | "ar" | "ar-sgd" => Method::AllReduce,
+            "baseline" | "async" | "async-baseline" | "adpsgd" => Method::AsyncBaseline,
+            "acid" | "a2cid2" => Method::Acid,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::AllReduce => "ar-sgd",
+            Method::AsyncBaseline => "async-baseline",
+            Method::Acid => "a2cid2",
+        }
+    }
+}
+
+/// Which synthetic task to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Gaussian mixture, 10 classes ("CIFAR-like").
+    CifarLike,
+    /// Gaussian mixture, 100 classes ("ImageNet-like").
+    ImagenetLike,
+    /// Strongly-convex linear regression.
+    Quadratic,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> crate::Result<Task> {
+        Ok(match s {
+            "cifar" | "cifar-like" | "gm10" => Task::CifarLike,
+            "imagenet" | "imagenet-like" | "gm100" => Task::ImagenetLike,
+            "quadratic" | "convex" => Task::Quadratic,
+            other => anyhow::bail!("unknown task '{other}'"),
+        })
+    }
+}
+
+/// Full experiment configuration (simulator or real-thread runtime).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub n_workers: usize,
+    pub topology: Topology,
+    pub method: Method,
+    pub task: Task,
+    /// Expected p2p averagings per gradient step per worker (the paper's
+    /// "#com/#grad" knob).
+    pub comm_rate: f64,
+    pub batch_size: usize,
+    pub base_lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    /// Total *local* gradient steps per worker (the paper fixes total
+    /// samples, so per-worker steps shrink as n grows).
+    pub steps_per_worker: u64,
+    pub sharding: Sharding,
+    pub dataset_size: usize,
+    pub seed: u64,
+    /// Compute-time jitter: each gradient duration is
+    /// `max(0, N(1, jitter))` time units (stragglers).
+    pub compute_jitter: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            n_workers: 8,
+            topology: Topology::Ring,
+            method: Method::Acid,
+            task: Task::CifarLike,
+            comm_rate: 1.0,
+            batch_size: 16,
+            base_lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            steps_per_worker: 500,
+            sharding: Sharding::FullShuffled,
+            dataset_size: 4096,
+            seed: 0,
+            compute_jitter: 0.1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> crate::Result<Self> {
+        anyhow::ensure!(self.n_workers >= 2, "need >= 2 workers");
+        anyhow::ensure!(self.comm_rate >= 0.0, "negative comm rate");
+        anyhow::ensure!(self.batch_size >= 1, "batch size must be >= 1");
+        anyhow::ensure!(self.base_lr > 0.0, "lr must be positive");
+        anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
+        anyhow::ensure!(self.steps_per_worker >= 1, "need >= 1 step");
+        anyhow::ensure!(self.dataset_size >= self.batch_size, "dataset < batch");
+        anyhow::ensure!(self.compute_jitter >= 0.0, "negative jitter");
+        Ok(self)
+    }
+
+    /// Load from a TOML file; unknown keys are an error (catch typos).
+    pub fn from_toml(text: &str) -> crate::Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in doc.iter_table("experiment") {
+            match key.as_str() {
+                "n_workers" => cfg.n_workers = value.as_int()? as usize,
+                "topology" => cfg.topology = Topology::parse(value.as_str()?)?,
+                "method" => cfg.method = Method::parse(value.as_str()?)?,
+                "task" => cfg.task = Task::parse(value.as_str()?)?,
+                "comm_rate" => cfg.comm_rate = value.as_float()?,
+                "batch_size" => cfg.batch_size = value.as_int()? as usize,
+                "base_lr" => cfg.base_lr = value.as_float()?,
+                "momentum" => cfg.momentum = value.as_float()?,
+                "weight_decay" => cfg.weight_decay = value.as_float()?,
+                "steps_per_worker" => cfg.steps_per_worker = value.as_int()? as u64,
+                "dataset_size" => cfg.dataset_size = value.as_int()? as usize,
+                "seed" => cfg.seed = value.as_int()? as u64,
+                "compute_jitter" => cfg.compute_jitter = value.as_float()?,
+                "sharding" => {
+                    cfg.sharding = match value.as_str()? {
+                        "full" | "full-shuffled" => Sharding::FullShuffled,
+                        "iid" => Sharding::Iid,
+                        s if s.starts_with("dirichlet:") => Sharding::Dirichlet {
+                            alpha: s["dirichlet:".len()..].parse()?,
+                        },
+                        other => anyhow::bail!("unknown sharding '{other}'"),
+                    }
+                }
+                other => anyhow::bail!("unknown key 'experiment.{other}'"),
+            }
+        }
+        cfg.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# an experiment
+[experiment]
+n_workers = 16
+topology = "ring"
+method = "a2cid2"
+task = "cifar-like"
+comm_rate = 2.0
+batch_size = 32
+base_lr = 0.1
+steps_per_worker = 100
+sharding = "dirichlet:0.5"
+seed = 7
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.n_workers, 16);
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.method, Method::Acid);
+        assert_eq!(cfg.comm_rate, 2.0);
+        assert_eq!(cfg.sharding, Sharding::Dirichlet { alpha: 0.5 });
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let text = "[experiment]\nn_wrokers = 4\n";
+        assert!(ExperimentConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(ExperimentConfig::from_toml("[experiment]\nn_workers = 1\n").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nbase_lr = 0.0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nmomentum = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn method_task_parse() {
+        assert_eq!(Method::parse("ar").unwrap(), Method::AllReduce);
+        assert_eq!(Method::parse("adpsgd").unwrap(), Method::AsyncBaseline);
+        assert_eq!(Method::parse("a2cid2").unwrap(), Method::Acid);
+        assert!(Method::parse("sync").is_err());
+        assert_eq!(Task::parse("gm100").unwrap(), Task::ImagenetLike);
+    }
+}

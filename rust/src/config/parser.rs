@@ -1,0 +1,252 @@
+//! Minimal TOML-subset parser (tables, scalars, homogeneous arrays,
+//! comments). Errors carry line numbers.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> crate::Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> crate::Result<i64> {
+        match self {
+            TomlValue::Int(v) => Ok(*v),
+            other => anyhow::bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    /// Accepts both ints and floats (TOML writers often drop the `.0`).
+    pub fn as_float(&self) -> crate::Result<f64> {
+        match self {
+            TomlValue::Float(v) => Ok(*v),
+            TomlValue::Int(v) => Ok(*v as f64),
+            other => anyhow::bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> crate::Result<bool> {
+        match self {
+            TomlValue::Bool(v) => Ok(*v),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed document: `tables["name"]["key"] = value`. Top-level keys live
+/// in the table named `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, Vec<(String, TomlValue)>>,
+}
+
+impl TomlDoc {
+    /// Iterate the `(key, value)` pairs of one table (empty if missing).
+    pub fn iter_table<'a>(
+        &'a self,
+        name: &str,
+    ) -> impl Iterator<Item = &'a (String, TomlValue)> {
+        self.tables.get(name).into_iter().flatten()
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables
+            .get(table)?
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> crate::Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            anyhow::ensure!(
+                line.ends_with(']') && line.len() > 2,
+                "line {}: malformed table header '{line}'",
+                lineno + 1
+            );
+            current = line[1..line.len() - 1].trim().to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let table = doc.tables.get_mut(&current).unwrap();
+        anyhow::ensure!(
+            !table.iter().any(|(k, _)| k == key),
+            "line {}: duplicate key '{key}'",
+            lineno + 1
+        );
+        table.push((key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting string quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> crate::Result<TomlValue> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if s.starts_with('"') {
+        anyhow::ensure!(
+            s.len() >= 2 && s.ends_with('"'),
+            "unterminated string {s}"
+        );
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        anyhow::ensure!(s.ends_with(']'), "unterminated array {s}");
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<crate::Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // Int before float: "5" parses as both.
+    if let Ok(v) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+/// Split an array body on commas not nested inside strings or brackets.
+fn split_top_level(s: &str) -> crate::Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                anyhow::ensure!(depth > 0, "unbalanced brackets");
+                depth -= 1;
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse_toml(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -3\nf = 1e-4\ng = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("", "e"), Some(&TomlValue::Int(-3)));
+        assert_eq!(doc.get("", "f"), Some(&TomlValue::Float(1e-4)));
+        assert_eq!(doc.get("", "g"), Some(&TomlValue::Int(1000)));
+    }
+
+    #[test]
+    fn parses_tables_and_comments() {
+        let doc = parse_toml(
+            "# header\n[one]\nx = 1 # trailing\n[two]\nx = 2\ny = \"a # not comment\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("one", "x"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("two", "x"), Some(&TomlValue::Int(2)));
+        assert_eq!(
+            doc.get("two", "y"),
+            Some(&TomlValue::Str("a # not comment".into()))
+        );
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse_toml("a = [1, 2, 3]\nb = [\"x\", \"y\"]\nc = []\n").unwrap();
+        assert_eq!(
+            doc.get("", "a"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        match doc.get("", "b") {
+            Some(TomlValue::Array(items)) => assert_eq!(items.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Array(vec![])));
+    }
+
+    #[test]
+    fn error_reporting() {
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("[broken\n").is_err());
+        assert!(parse_toml("a = \n").is_err());
+        assert!(parse_toml("a = 1\na = 2\n").is_err(), "duplicate key");
+        let err = parse_toml("x = 1\ny = ???\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(TomlValue::Int(3).as_float().unwrap(), 3.0);
+        assert!(TomlValue::Str("x".into()).as_int().is_err());
+        assert!(TomlValue::Bool(true).as_bool().unwrap());
+    }
+}

@@ -1,0 +1,492 @@
+//! Synthetic datasets standing in for CIFAR-10 / ImageNet / the LM corpus.
+//!
+//! The paper's evaluation studies *how the decentralized-vs-All-Reduce gap
+//! scales with n, topology, and communication rate* — a property of the
+//! optimization dynamics, not of natural images. We therefore substitute
+//! (per DESIGN.md §3) controllable synthetic tasks:
+//!
+//! * [`GaussianMixture`] — k-class classification with tunable margin and
+//!   dimension. `cifar_like()` (10 easy classes) and `imagenet_like()`
+//!   (100 classes, tighter margin, more data) mirror the paper's two
+//!   difficulty levels.
+//! * [`LinearRegression`] — a strongly-convex quadratic used for the
+//!   rate-scaling experiments (Tab. 1), where the theory is sharp.
+//! * [`MarkovCorpus`] — a synthetic token stream with learnable bigram
+//!   structure for the end-to-end transformer-LM driver.
+//! * [`Sharding`] — IID or Dirichlet-heterogeneous assignment of data to
+//!   workers (the paper gives every worker the full dataset with a
+//!   different shuffling seed; heterogeneous splits support the
+//!   federated-learning extension flagged in its conclusion).
+
+use crate::rng::{standard_normal, Xoshiro256};
+
+/// A dense supervised dataset: row-major features + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub n_classes: usize,
+    /// `features[i*dim .. (i+1)*dim]` is example `i`.
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn example(&self, i: usize) -> (&[f32], u32) {
+        (&self.features[i * self.dim..(i + 1) * self.dim], self.labels[i])
+    }
+
+    /// Gather a batch by indices into contiguous buffers.
+    pub fn gather(&self, idx: &[usize], xs: &mut Vec<f32>, ys: &mut Vec<u32>) {
+        xs.clear();
+        ys.clear();
+        for &i in idx {
+            let (x, y) = self.example(i);
+            xs.extend_from_slice(x);
+            ys.push(y);
+        }
+    }
+}
+
+/// Gaussian-mixture classification: class `c` is `N(μ_c, σ²·I)` with the
+/// `μ_c` sampled on a sphere of radius `margin`.
+#[derive(Clone, Debug)]
+pub struct GaussianMixture {
+    pub dim: usize,
+    pub n_classes: usize,
+    /// Separation of class means (larger = easier).
+    pub margin: f64,
+    /// Within-class noise.
+    pub sigma: f64,
+}
+
+impl GaussianMixture {
+    /// 10 well-separated classes in 32-D — the "CIFAR-like" easy regime.
+    pub fn cifar_like() -> Self {
+        Self { dim: 32, n_classes: 10, margin: 3.0, sigma: 1.0 }
+    }
+
+    /// 100 classes in 64-D with tighter margin — the "ImageNet-like"
+    /// harder regime where consensus drift visibly hurts.
+    pub fn imagenet_like() -> Self {
+        Self { dim: 64, n_classes: 100, margin: 2.0, sigma: 1.0 }
+    }
+
+    /// Sample a dataset of `n` examples.
+    pub fn sample(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // Class means: random Gaussian directions scaled to `margin`.
+        let mut means = vec![0.0f64; self.n_classes * self.dim];
+        for c in 0..self.n_classes {
+            let row = &mut means[c * self.dim..(c + 1) * self.dim];
+            let mut norm = 0.0;
+            for v in row.iter_mut() {
+                *v = standard_normal(&mut rng);
+                norm += *v * *v;
+            }
+            let norm = norm.sqrt().max(1e-12);
+            for v in row.iter_mut() {
+                *v *= self.margin / norm;
+            }
+        }
+        let mut features = Vec::with_capacity(n * self.dim);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.gen_range(self.n_classes);
+            let mu = &means[c * self.dim..(c + 1) * self.dim];
+            for d in 0..self.dim {
+                features.push((mu[d] + self.sigma * standard_normal(&mut rng)) as f32);
+            }
+            labels.push(c as u32);
+        }
+        Dataset { dim: self.dim, n_classes: self.n_classes, features, labels }
+    }
+}
+
+/// Linear regression `y = ⟨w*, x⟩ + noise`: the strongly-convex quadratic
+/// objective used for Tab. 1 (rate-vs-χ scaling).
+#[derive(Clone, Debug)]
+pub struct LinearRegression {
+    pub dim: usize,
+    pub noise: f64,
+}
+
+/// A regression dataset (features + float targets).
+#[derive(Clone, Debug)]
+pub struct RegressionData {
+    pub dim: usize,
+    pub features: Vec<f32>,
+    pub targets: Vec<f32>,
+    /// The generating weights (for excess-risk evaluation).
+    pub w_star: Vec<f32>,
+}
+
+impl LinearRegression {
+    pub fn sample(&self, n: usize, seed: u64) -> RegressionData {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let w_star: Vec<f32> = (0..self.dim)
+            .map(|_| standard_normal(&mut rng) as f32)
+            .collect();
+        let mut features = Vec::with_capacity(n * self.dim);
+        let mut targets = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut y = 0.0f64;
+            for &w in &w_star {
+                let x = standard_normal(&mut rng);
+                features.push(x as f32);
+                y += w as f64 * x;
+            }
+            targets.push((y + self.noise * standard_normal(&mut rng)) as f32);
+        }
+        RegressionData { dim: self.dim, features, targets, w_star }
+    }
+}
+
+impl RegressionData {
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn example(&self, i: usize) -> (&[f32], f32) {
+        (&self.features[i * self.dim..(i + 1) * self.dim], self.targets[i])
+    }
+}
+
+/// Synthetic token corpus with first-order (bigram) Markov structure —
+/// gives a transformer LM a learnable signal with a known entropy floor.
+#[derive(Clone, Debug)]
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<u32>,
+}
+
+impl MarkovCorpus {
+    /// Generate `len` tokens over `vocab` symbols. Each symbol transitions
+    /// to a small random subset of successors (sparsity `branch`), making
+    /// next-token prediction learnable well below `log(vocab)` nats.
+    pub fn generate(vocab: usize, branch: usize, len: usize, seed: u64) -> Self {
+        assert!(vocab >= 2 && branch >= 1 && branch <= vocab);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // successors[v] = allowed next tokens for v.
+        let successors: Vec<Vec<u32>> = (0..vocab)
+            .map(|_| {
+                rng.sample_indices(vocab, branch)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect()
+            })
+            .collect();
+        let mut tokens = Vec::with_capacity(len);
+        let mut cur = rng.gen_range(vocab) as u32;
+        for _ in 0..len {
+            tokens.push(cur);
+            let succ = &successors[cur as usize];
+            cur = succ[rng.gen_range(succ.len())];
+        }
+        Self { vocab, tokens }
+    }
+
+    /// The entropy floor of the generating process (nats/token): uniform
+    /// over `branch` successors.
+    pub fn entropy_floor(branch: usize) -> f64 {
+        (branch as f64).ln()
+    }
+
+    /// Sample a batch of (input, target) windows of length `seq`.
+    pub fn sample_batch(
+        &self,
+        batch: usize,
+        seq: usize,
+        rng: &mut Xoshiro256,
+        inputs: &mut Vec<u32>,
+        targets: &mut Vec<u32>,
+    ) {
+        assert!(self.tokens.len() > seq + 1, "corpus too short");
+        inputs.clear();
+        targets.clear();
+        for _ in 0..batch {
+            let start = rng.gen_range(self.tokens.len() - seq - 1);
+            inputs.extend_from_slice(&self.tokens[start..start + seq]);
+            targets.extend_from_slice(&self.tokens[start + 1..start + seq + 1]);
+        }
+    }
+}
+
+/// How data is assigned to workers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sharding {
+    /// The paper's protocol: every worker sees the full dataset, shuffled
+    /// with its own seed.
+    FullShuffled,
+    /// Disjoint IID shards.
+    Iid,
+    /// Label-skewed shards via a Dirichlet(α) draw per class (smaller α =
+    /// more heterogeneous), the standard FL heterogeneity model.
+    Dirichlet { alpha: f64 },
+}
+
+/// Per-worker index streams into a shared dataset.
+#[derive(Clone, Debug)]
+pub struct ShardedIndices {
+    pub per_worker: Vec<Vec<usize>>,
+}
+
+impl Sharding {
+    /// Assign `dataset` indices to `n_workers` workers.
+    pub fn assign(&self, dataset: &Dataset, n_workers: usize, seed: u64) -> ShardedIndices {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n = dataset.len();
+        let per_worker = match self {
+            Sharding::FullShuffled => (0..n_workers)
+                .map(|w| {
+                    let mut idx: Vec<usize> = (0..n).collect();
+                    let mut r = rng.split(w as u64);
+                    r.shuffle(&mut idx);
+                    idx
+                })
+                .collect(),
+            Sharding::Iid => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut idx);
+                let mut shards = vec![Vec::new(); n_workers];
+                for (k, i) in idx.into_iter().enumerate() {
+                    shards[k % n_workers].push(i);
+                }
+                shards
+            }
+            Sharding::Dirichlet { alpha } => {
+                // For each class, split its examples across workers with
+                // Dirichlet(α) proportions (sampled via Gamma(α,1) draws).
+                let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); dataset.n_classes];
+                for i in 0..n {
+                    by_class[dataset.labels[i] as usize].push(i);
+                }
+                let mut shards = vec![Vec::new(); n_workers];
+                for class_idx in by_class {
+                    let props = dirichlet(*alpha, n_workers, &mut rng);
+                    let mut cuts = Vec::with_capacity(n_workers);
+                    let mut acc = 0.0;
+                    for p in &props {
+                        acc += p;
+                        cuts.push((acc * class_idx.len() as f64).round() as usize);
+                    }
+                    let mut start = 0usize;
+                    for (w, &cut) in cuts.iter().enumerate() {
+                        let end = cut.min(class_idx.len());
+                        shards[w].extend_from_slice(&class_idx[start..end]);
+                        start = end;
+                    }
+                }
+                for (w, shard) in shards.iter_mut().enumerate() {
+                    let mut r = rng.split(1000 + w as u64);
+                    r.shuffle(shard);
+                    // Never leave a worker with an empty shard.
+                    if shard.is_empty() {
+                        shard.push(rng.gen_range(n));
+                    }
+                }
+                shards
+            }
+        };
+        ShardedIndices { per_worker }
+    }
+}
+
+/// Dirichlet(α,…,α) sample via normalized Gamma(α, 1) draws
+/// (Marsaglia–Tsang for α ≥ 1, boost trick below 1).
+fn dirichlet(alpha: f64, k: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..k).map(|_| gamma_sample(alpha, rng)).collect();
+    let sum: f64 = g.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / k as f64; k];
+    }
+    for v in &mut g {
+        *v /= sum;
+    }
+    g
+}
+
+fn gamma_sample(alpha: f64, rng: &mut Xoshiro256) -> f64 {
+    if alpha < 1.0 {
+        // Boost: Gamma(α) = Gamma(α+1) · U^{1/α}.
+        let u = rng.next_f64().max(1e-300);
+        return gamma_sample(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    // Marsaglia–Tsang squeeze.
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = standard_normal(rng);
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64();
+        if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gm_dataset_shapes_and_labels() {
+        let ds = GaussianMixture::cifar_like().sample(500, 1);
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.features.len(), 500 * 32);
+        assert!(ds.labels.iter().all(|&l| (l as usize) < 10));
+        // All classes appear.
+        let classes: std::collections::HashSet<_> = ds.labels.iter().collect();
+        assert_eq!(classes.len(), 10);
+    }
+
+    #[test]
+    fn gm_is_separable_by_margin() {
+        // With margin ≫ σ, nearest-class-mean classifies well above chance.
+        let gen = GaussianMixture { dim: 16, n_classes: 4, margin: 6.0, sigma: 1.0 };
+        let ds = gen.sample(400, 7);
+        // Estimate class means from the data itself.
+        let mut means = vec![0.0f64; 4 * 16];
+        let mut counts = [0usize; 4];
+        for i in 0..ds.len() {
+            let (x, y) = ds.example(i);
+            counts[y as usize] += 1;
+            for d in 0..16 {
+                means[y as usize * 16 + d] += x[d] as f64;
+            }
+        }
+        for c in 0..4 {
+            for d in 0..16 {
+                means[c * 16 + d] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let (x, y) = ds.example(i);
+            let best = (0..4)
+                .min_by(|&a, &b| {
+                    let da: f64 = (0..16)
+                        .map(|d| (x[d] as f64 - means[a * 16 + d]).powi(2))
+                        .sum();
+                    let db: f64 = (0..16)
+                        .map(|d| (x[d] as f64 - means[b * 16 + d]).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as u32 == y {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / ds.len() as f64 > 0.95);
+    }
+
+    #[test]
+    fn regression_targets_follow_w_star() {
+        let gen = LinearRegression { dim: 8, noise: 0.0 };
+        let data = gen.sample(50, 3);
+        for i in 0..data.len() {
+            let (x, y) = data.example(i);
+            let pred: f64 = x
+                .iter()
+                .zip(&data.w_star)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!((pred - y as f64).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn markov_corpus_respects_vocab() {
+        let c = MarkovCorpus::generate(50, 4, 10_000, 9);
+        assert_eq!(c.tokens.len(), 10_000);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < 50));
+        // Bigram structure: number of distinct successors per symbol ≤ branch.
+        let mut succ: Vec<std::collections::HashSet<u32>> = vec![Default::default(); 50];
+        for w in c.tokens.windows(2) {
+            succ[w[0] as usize].insert(w[1]);
+        }
+        assert!(succ.iter().all(|s| s.len() <= 4));
+    }
+
+    #[test]
+    fn batch_sampling_aligns_inputs_targets() {
+        let c = MarkovCorpus::generate(20, 3, 5_000, 11);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        c.sample_batch(4, 16, &mut rng, &mut xs, &mut ys);
+        assert_eq!(xs.len(), 64);
+        assert_eq!(ys.len(), 64);
+        // target[t] is input[t+1] within each window.
+        for b in 0..4 {
+            for t in 0..15 {
+                assert_eq!(ys[b * 16 + t], xs[b * 16 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_iid_partitions() {
+        let ds = GaussianMixture::cifar_like().sample(100, 2);
+        let sh = Sharding::Iid.assign(&ds, 4, 0);
+        let total: usize = sh.per_worker.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 100);
+        let all: std::collections::HashSet<_> =
+            sh.per_worker.iter().flatten().collect();
+        assert_eq!(all.len(), 100, "disjoint cover");
+    }
+
+    #[test]
+    fn sharding_full_shuffled_gives_everyone_everything() {
+        let ds = GaussianMixture::cifar_like().sample(60, 2);
+        let sh = Sharding::FullShuffled.assign(&ds, 3, 0);
+        for w in 0..3 {
+            assert_eq!(sh.per_worker[w].len(), 60);
+            let mut sorted = sh.per_worker[w].clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..60).collect::<Vec<_>>());
+        }
+        assert_ne!(sh.per_worker[0], sh.per_worker[1], "different shuffles");
+    }
+
+    #[test]
+    fn sharding_dirichlet_skews_labels() {
+        let ds = GaussianMixture { dim: 4, n_classes: 4, margin: 2.0, sigma: 1.0 }
+            .sample(2000, 5);
+        let skewed = Sharding::Dirichlet { alpha: 0.1 }.assign(&ds, 4, 1);
+        let uniform = Sharding::Iid.assign(&ds, 4, 1);
+        // Measure max class fraction on worker 0: skewed ≫ uniform.
+        let frac = |idx: &[usize]| -> f64 {
+            let mut counts = [0usize; 4];
+            for &i in idx {
+                counts[ds.labels[i] as usize] += 1;
+            }
+            *counts.iter().max().unwrap() as f64 / idx.len().max(1) as f64
+        };
+        let s = frac(&skewed.per_worker[0]);
+        let u = frac(&uniform.per_worker[0]);
+        assert!(s > u, "dirichlet skew {s} should exceed iid {u}");
+        // Every worker still has data.
+        assert!(skewed.per_worker.iter().all(|w| !w.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let p = dirichlet(alpha, 8, &mut rng);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&v| v >= 0.0));
+        }
+    }
+}

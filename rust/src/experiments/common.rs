@@ -1,0 +1,246 @@
+//! Shared experiment harness: build the task, run the configured method,
+//! evaluate on held-out data.
+
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, Method, Task};
+use crate::data::{Dataset, GaussianMixture, Sharding};
+use crate::metrics::Series;
+use crate::model::{Mlp, Model};
+use crate::simulator::{run_allreduce, run_simulation, ArTimingConfig};
+
+/// Experiment scale: quick for `cargo bench` smoke runs, full for the
+/// paper-sized grids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    /// Read `A2CID2_BENCH_FULL` from the environment.
+    pub fn from_env() -> Scale {
+        if std::env::var("A2CID2_BENCH_FULL").map(|v| v == "1").unwrap_or(false) {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+
+    /// Worker-count grid used by most sweeps.
+    pub fn n_grid(&self) -> Vec<usize> {
+        match self {
+            Scale::Quick if cfg!(debug_assertions) => vec![4, 8],
+            Scale::Quick => vec![4, 8, 16],
+            Scale::Full => vec![4, 8, 16, 32, 64],
+        }
+    }
+
+    /// Largest worker count (the paper's headline n = 64).
+    pub fn n_max(&self) -> usize {
+        match self {
+            Scale::Quick if cfg!(debug_assertions) => 8,
+            Scale::Quick => 16,
+            Scale::Full => 64,
+        }
+    }
+
+    /// Per-worker local step budget (configs not using the fixed total).
+    pub fn steps(&self) -> u64 {
+        match self {
+            Scale::Quick if cfg!(debug_assertions) => 80,
+            Scale::Quick => 300,
+            Scale::Full => 800,
+        }
+    }
+
+    /// Total gradient budget across all workers — the paper's protocol:
+    /// "all methods access the same total amount of data samples", so
+    /// per-worker steps shrink as n grows. (Unoptimized `cargo test`
+    /// builds shrink the budgets so the experiment unit tests stay fast;
+    /// benches always run optimized.)
+    pub fn total_steps(&self) -> u64 {
+        match self {
+            Scale::Quick if cfg!(debug_assertions) => 960,
+            Scale::Quick => 4_800,
+            Scale::Full => 25_600,
+        }
+    }
+
+    /// Seeds per configuration (the paper reports ±std over 3 runs).
+    pub fn seeds(&self) -> Vec<u64> {
+        match self {
+            Scale::Quick => vec![0],
+            Scale::Full => vec![0, 1, 2],
+        }
+    }
+}
+
+/// Everything a table/figure needs from one training run.
+pub struct TrainOutcome {
+    pub loss: Series,
+    pub consensus: Option<Series>,
+    pub final_loss: f64,
+    /// Held-out accuracy of the averaged model (classification tasks).
+    pub accuracy: Option<f64>,
+    /// Virtual wall time of the run.
+    pub t_end: f64,
+    pub grads_per_worker: Vec<u64>,
+    pub n_comms: u64,
+    /// (χ₁, χ₂) of the run's Laplacian, if asynchronous.
+    pub chis: Option<(f64, f64)>,
+}
+
+/// Build the train/test datasets for a task. Returns
+/// `(train, test, model)` with the model evaluating on `train`.
+/// Train and test are split from ONE sample so they share the same class
+/// means (sampling twice would draw a fresh mixture — a different task).
+pub fn build_task(task: Task, dataset_size: usize, seed: u64) -> (Arc<Dataset>, Arc<Dataset>, Arc<dyn Model>) {
+    let (gen, hidden) = match task {
+        Task::CifarLike => (GaussianMixture::cifar_like(), 32),
+        Task::ImagenetLike => (GaussianMixture::imagenet_like(), 64),
+        Task::Quadratic => panic!("use tab1's quadratic path"),
+    };
+    let test_size = (dataset_size / 4).max(1);
+    let full = gen.sample(dataset_size + test_size, seed);
+    let split = |lo: usize, hi: usize| Dataset {
+        dim: full.dim,
+        n_classes: full.n_classes,
+        features: full.features[lo * full.dim..hi * full.dim].to_vec(),
+        labels: full.labels[lo..hi].to_vec(),
+    };
+    let train = Arc::new(split(0, dataset_size));
+    let test = Arc::new(split(dataset_size, dataset_size + test_size));
+    let model: Arc<dyn Model> = Arc::new(Mlp::new(train.clone(), hidden, 5e-4));
+    (train, test, model)
+}
+
+/// Run one configuration (any method) and evaluate.
+pub fn train_once(cfg: &ExperimentConfig) -> crate::Result<TrainOutcome> {
+    let (train, test, model) = build_task(cfg.task, cfg.dataset_size, cfg.seed ^ 0xBEEF);
+    let shards = cfg.sharding.assign(&train, cfg.n_workers, cfg.seed);
+    let test_idx: Vec<usize> = (0..test.len()).collect();
+    // Accuracy is evaluated on held-out data via a model bound to `test`.
+    let hidden = match cfg.task {
+        Task::CifarLike => 32,
+        Task::ImagenetLike => 64,
+        Task::Quadratic => unreachable!(),
+    };
+    let eval_model = Mlp::new(test.clone(), hidden, 0.0);
+
+    match cfg.method {
+        Method::AllReduce => {
+            let res = run_allreduce(cfg, model, &shards, &ArTimingConfig::default())?;
+            let accuracy = eval_model.accuracy(&res.params, &test_idx);
+            Ok(TrainOutcome {
+                final_loss: res.final_loss(),
+                loss: res.recorder.get("train_loss").cloned().unwrap_or_default(),
+                consensus: None,
+                accuracy,
+                t_end: res.t_end,
+                grads_per_worker: vec![res.grads_per_worker; cfg.n_workers],
+                n_comms: 0,
+                chis: None,
+            })
+        }
+        _ => {
+            let res = run_simulation(cfg, model, &shards)?;
+            let accuracy = eval_model.accuracy(&res.avg_params, &test_idx);
+            Ok(TrainOutcome {
+                final_loss: res.final_loss(),
+                loss: res.recorder.get("train_loss").cloned().unwrap_or_default(),
+                consensus: res.recorder.get("consensus").cloned(),
+                accuracy,
+                t_end: res.t_end,
+                grads_per_worker: res.grads_per_worker,
+                n_comms: res.n_comms,
+                chis: Some((res.spectrum.chi1, res.spectrum.chi2)),
+            })
+        }
+    }
+}
+
+/// Set the worker count under the paper's fixed-total-sample protocol:
+/// `steps_per_worker = total_steps / n`.
+pub fn set_workers(cfg: &mut ExperimentConfig, n: usize, scale: Scale) {
+    cfg.n_workers = n;
+    cfg.steps_per_worker = (scale.total_steps() / n as u64).max(20);
+}
+
+/// Mean ± std of a closure over the scale's seeds.
+pub fn over_seeds(
+    scale: Scale,
+    base: &ExperimentConfig,
+    f: impl Fn(&TrainOutcome) -> f64,
+) -> crate::Result<crate::metrics::Stats> {
+    let mut vals = Vec::new();
+    for seed in scale.seeds() {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        let out = train_once(&cfg)?;
+        vals.push(f(&out));
+    }
+    Ok(crate::metrics::Stats::of(&vals))
+}
+
+/// Standard config for the sweeps.
+pub fn base_config(scale: Scale) -> ExperimentConfig {
+    ExperimentConfig {
+        n_workers: 8,
+        topology: crate::graph::Topology::Ring,
+        method: Method::AsyncBaseline,
+        task: Task::CifarLike,
+        comm_rate: 1.0,
+        batch_size: 16,
+        base_lr: 0.1,
+        momentum: 0.9,
+        weight_decay: 5e-4,
+        steps_per_worker: scale.steps(),
+        sharding: Sharding::FullShuffled,
+        dataset_size: 4096,
+        seed: 0,
+        compute_jitter: 0.1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_from_env_defaults_quick() {
+        std::env::remove_var("A2CID2_BENCH_FULL");
+        assert_eq!(Scale::from_env(), Scale::Quick);
+    }
+
+    #[test]
+    fn train_once_all_methods() {
+        let mut cfg = base_config(Scale::Quick);
+        cfg.n_workers = 4;
+        cfg.steps_per_worker = 60;
+        cfg.dataset_size = 512;
+        for method in [Method::AllReduce, Method::AsyncBaseline, Method::Acid] {
+            cfg.method = method;
+            let out = train_once(&cfg).unwrap();
+            assert!(out.final_loss.is_finite(), "{method:?}");
+            let acc = out.accuracy.unwrap();
+            assert!(acc > 0.15, "{method:?}: acc={acc}");
+            if method == Method::AllReduce {
+                assert!(out.consensus.is_none());
+            } else {
+                assert!(out.chis.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn over_seeds_aggregates() {
+        let mut cfg = base_config(Scale::Quick);
+        cfg.n_workers = 4;
+        cfg.steps_per_worker = 40;
+        cfg.dataset_size = 256;
+        let stats = over_seeds(Scale::Quick, &cfg, |o| o.final_loss).unwrap();
+        assert_eq!(stats.n, 1);
+        assert!(stats.mean.is_finite());
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig. 1 — "Adding A²CiD² has the same effect as doubling the
+//! communication rate" (ring graph, large n).
+//!
+//! Three runs on the ring at the scale's largest n:
+//! baseline @ rate 1, baseline @ rate 2, A²CiD² @ rate 1. The paper's
+//! claim is that the A²CiD²@1 loss curve tracks the baseline@2 curve, both
+//! well below baseline@1.
+
+use crate::config::{Method, Task};
+use crate::graph::Topology;
+use crate::metrics::Table;
+
+use super::common::{base_config, train_once, Scale, TrainOutcome};
+
+pub struct Fig1 {
+    pub baseline_1x: TrainOutcome,
+    pub baseline_2x: TrainOutcome,
+    pub acid_1x: TrainOutcome,
+}
+
+pub fn run(scale: Scale) -> crate::Result<(Fig1, Vec<Table>)> {
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Ring;
+    cfg.task = Task::ImagenetLike;
+    super::common::set_workers(&mut cfg, scale.n_max(), scale);
+
+    let mut variant = |method: Method, rate: f64| -> crate::Result<TrainOutcome> {
+        cfg.method = method;
+        cfg.comm_rate = rate;
+        train_once(&cfg)
+    };
+    let baseline_1x = variant(Method::AsyncBaseline, 1.0)?;
+    let baseline_2x = variant(Method::AsyncBaseline, 2.0)?;
+    let acid_1x = variant(Method::Acid, 1.0)?;
+
+    let mut table = Table::new(
+        format!(
+            "Fig.1 — ring n={}, train loss (paper: A2CiD2@1 tracks baseline@2)",
+            cfg.n_workers
+        ),
+        &["variant", "com/grad", "final loss", "final consensus"],
+    );
+    for (name, out) in [
+        ("async baseline", &baseline_1x),
+        ("async baseline", &baseline_2x),
+        ("A2CiD2", &acid_1x),
+    ] {
+        let rate = if std::ptr::eq(out, &baseline_2x) { 2.0 } else { 1.0 };
+        let cons = out
+            .consensus
+            .as_ref()
+            .and_then(|s| s.last())
+            .map(|(_, v)| v)
+            .unwrap_or(f64::NAN);
+        table.row(&[
+            name.into(),
+            format!("{rate}"),
+            format!("{:.4}", out.final_loss),
+            format!("{cons:.4}"),
+        ]);
+    }
+    // Dump the three loss/consensus curves for plotting the actual figure.
+    let mut rec = crate::metrics::Recorder::new();
+    for (label, out) in [
+        ("baseline_1x", &baseline_1x),
+        ("baseline_2x", &baseline_2x),
+        ("acid_1x", &acid_1x),
+    ] {
+        let mut s = out.loss.clone();
+        s.name = format!("loss/{label}");
+        rec.series.push(s);
+        if let Some(c) = &out.consensus {
+            let mut c = c.clone();
+            c.name = format!("consensus/{label}");
+            rec.series.push(c);
+        }
+    }
+    let csv = std::path::Path::new("results/fig1_curves.csv");
+    if rec.write_csv(csv, 1000).is_ok() {
+        println!("(fig1 curves -> {})", csv.display());
+    }
+    Ok((Fig1 { baseline_1x, baseline_2x, acid_1x }, vec![table]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acid_matches_doubled_rate_ordering() {
+        let (fig, tables) = run(Scale::Quick).unwrap();
+        assert_eq!(tables.len(), 1);
+        // The acceleration claim, in ordering form: A2CiD2@1 and
+        // baseline@2 both beat baseline@1 on the ring.
+        assert!(
+            fig.acid_1x.final_loss < fig.baseline_1x.final_loss * 1.05,
+            "acid {} vs baseline {}",
+            fig.acid_1x.final_loss,
+            fig.baseline_1x.final_loss
+        );
+        assert!(fig.baseline_2x.final_loss < fig.baseline_1x.final_loss * 1.05);
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig. 3 — complete graph: (a) the async baseline's training loss
+//! degrades as n grows; (b) at the largest n, increasing the
+//! communication rate closes the gap to All-Reduce.
+
+use crate::config::{Method, Task};
+use crate::graph::Topology;
+use crate::metrics::Table;
+
+use super::common::{base_config, train_once, Scale};
+
+pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Complete;
+    cfg.task = Task::CifarLike;
+
+    // (a) loss vs n at 1 com/grad.
+    let mut ta = Table::new(
+        "Fig.3a — complete graph, async baseline (paper: loss degrades with n)",
+        &["n", "final loss", "consensus"],
+    );
+    for n in scale.n_grid() {
+        super::common::set_workers(&mut cfg, n, scale);
+        cfg.method = Method::AsyncBaseline;
+        cfg.comm_rate = 1.0;
+        let out = train_once(&cfg)?;
+        let cons = out
+            .consensus
+            .as_ref()
+            .and_then(|s| s.last())
+            .map(|(_, v)| v)
+            .unwrap_or(f64::NAN);
+        ta.row(&[n.to_string(), format!("{:.4}", out.final_loss), format!("{cons:.4}")]);
+    }
+
+    // (b) n = max: rate sweep + AR reference.
+    super::common::set_workers(&mut cfg, scale.n_max(), scale);
+    let mut tb = Table::new(
+        format!(
+            "Fig.3b — complete graph n={}, rate sweep (paper: more com/grad -> AR gap closes)",
+            cfg.n_workers
+        ),
+        &["variant", "com/grad", "final loss"],
+    );
+    cfg.method = Method::AllReduce;
+    let ar = train_once(&cfg)?;
+    tb.row(&["AR-SGD".into(), "-".into(), format!("{:.4}", ar.final_loss)]);
+    for rate in [1.0, 2.0, 4.0] {
+        cfg.method = Method::AsyncBaseline;
+        cfg.comm_rate = rate;
+        let out = train_once(&cfg)?;
+        tb.row(&[
+            "async baseline".into(),
+            format!("{rate}"),
+            format!("{:.4}", out.final_loss),
+        ]);
+    }
+    Ok(vec![ta, tb])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_both_panels() {
+        let tables = run(Scale::Quick).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert!(tables[0].rows.len() >= 2);
+        assert_eq!(tables[1].rows.len(), 4);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 4 — ring graph: training loss w/ and w/o A²CiD² as n grows.
+//! The paper: the gap opens with n (χ₁ = Θ(n²) on the ring) and the
+//! momentum recovers most of it.
+
+use crate::config::{Method, Task};
+use crate::graph::Topology;
+use crate::metrics::Table;
+
+use super::common::{base_config, train_once, Scale};
+
+pub struct Fig4Row {
+    pub n: usize,
+    pub baseline_loss: f64,
+    pub acid_loss: f64,
+}
+
+pub fn run(scale: Scale) -> crate::Result<(Vec<Fig4Row>, Vec<Table>)> {
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Ring;
+    cfg.task = Task::CifarLike;
+    cfg.comm_rate = 1.0;
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig.4 — ring graph, w/ vs w/o A2CiD2 (paper: momentum recovers the large-n gap)",
+        &["n", "baseline loss", "A2CiD2 loss", "chi1", "sqrt(chi1*chi2)"],
+    );
+    for n in scale.n_grid() {
+        super::common::set_workers(&mut cfg, n, scale);
+        cfg.method = Method::AsyncBaseline;
+        let base = train_once(&cfg)?;
+        cfg.method = Method::Acid;
+        let acid = train_once(&cfg)?;
+        let (chi1, chi2) = acid.chis.unwrap();
+        table.row(&[
+            n.to_string(),
+            format!("{:.4}", base.final_loss),
+            format!("{:.4}", acid.final_loss),
+            format!("{chi1:.1}"),
+            format!("{:.1}", (chi1 * chi2).sqrt()),
+        ]);
+        rows.push(Fig4Row { n, baseline_loss: base.final_loss, acid_loss: acid.final_loss });
+    }
+    Ok((rows, vec![table]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acid_at_least_matches_baseline_at_large_n() {
+        let (rows, _) = run(Scale::Quick).unwrap();
+        let last = rows.last().unwrap();
+        assert!(
+            last.acid_loss <= last.baseline_loss * 1.1,
+            "n={}: acid {} vs baseline {}",
+            last.n,
+            last.acid_loss,
+            last.baseline_loss
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Experiment drivers — one module per table/figure of the paper.
+//!
+//! Every module exposes `run(scale) -> Vec<Table>`: it executes the
+//! workload, prints the regenerated rows next to the paper's reference
+//! numbers, and returns the tables so benches, the CLI, and the tests
+//! share one code path. `Scale::Quick` (the `cargo bench` default) shrinks
+//! worker counts and step budgets to finish in seconds; `Scale::Full`
+//! (`A2CID2_BENCH_FULL=1`) runs the paper-sized grids.
+//!
+//! | Module | Paper item | What it shows |
+//! |---|---|---|
+//! | [`fig1`]  | Fig. 1  | A²CiD² ≈ doubling the comm rate (ring, large n) |
+//! | [`fig2`]  | Fig. 2  | sync vs async worker timelines / idle time |
+//! | [`fig3`]  | Fig. 3  | complete graph: loss degrades with n; rate closes the gap |
+//! | [`fig4`]  | Fig. 4  | ring: w/ vs w/o A²CiD² across n |
+//! | [`fig5`]  | Fig. 5  | harder task: loss + consensus, A²CiD² vs 2× rate |
+//! | [`fig6`]  | Fig. 6  | topologies and their (χ₁, χ₂) |
+//! | [`fig7`]  | Fig. 7  | pairing heat-map ≈ uniform neighbor selection |
+//! | [`tab1`]  | Tab. 1  | time-to-ε scaling: χ₁ (baseline) vs √(χ₁χ₂) (A²CiD²) |
+//! | [`tab2`]  | Tab. 2  | #comms per unit time: star/ring/complete |
+//! | [`tab3`]  | Tab. 3  | training times vs n, ours vs AR-SGD |
+//! | [`tab4`]  | Tab. 4  | CIFAR-like accuracy across 3 graphs × n |
+//! | [`tab5`]  | Tab. 5  | ImageNet-like accuracy on the ring, rates 1 & 2 |
+//! | [`tab6`]  | Tab. 6  | wall time + #∇ slowest/fastest worker |
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod tab1;
+pub mod tab2;
+pub mod tab3;
+pub mod tab4;
+pub mod tab5;
+pub mod tab6;
+
+pub use common::{train_once, Scale, TrainOutcome};

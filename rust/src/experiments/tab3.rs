@@ -1,0 +1,87 @@
+//! Tab. 3 — training times on the CIFAR-like task as n grows, ours
+//! (asynchronous) vs AR-SGD. Paper (minutes): 20.9/10.5/5.2/2.7/1.5 vs
+//! 21.9/11.1/6.6/3.2/1.8 for n = 4..64 — async is consistently faster
+//! because nobody waits for stragglers, and both scale ~1/n at a fixed
+//! total sample budget.
+
+use crate::config::{Method, Task};
+use crate::graph::Topology;
+use crate::metrics::Table;
+
+use super::common::{base_config, train_once, Scale};
+
+pub struct Tab3Row {
+    pub n: usize,
+    pub async_time: f64,
+    pub ar_time: f64,
+}
+
+pub fn run(scale: Scale) -> crate::Result<(Vec<Tab3Row>, Vec<Table>)> {
+    let mut cfg = base_config(scale);
+    cfg.topology = Topology::Exponential;
+    cfg.task = Task::CifarLike;
+    cfg.compute_jitter = 0.1;
+    // Fixed total sample budget: per-worker steps shrink with n.
+    let total_steps: u64 = match scale {
+        Scale::Quick => 2_400,
+        Scale::Full => 12_800,
+    };
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Tab.3 — training time (virtual units) vs n, fixed total samples (paper: ours < AR, both ~1/n)",
+        &["n", "ours t", "AR t", "speedup", "paper ours (min)", "paper AR (min)"],
+    );
+    let paper = [(4usize, 20.9, 21.9), (8, 10.5, 11.1), (16, 5.2, 6.6), (32, 2.7, 3.2), (64, 1.5, 1.8)];
+    for n in scale.n_grid() {
+        cfg.n_workers = n;
+        cfg.steps_per_worker = (total_steps / n as u64).max(10);
+        cfg.method = Method::AsyncBaseline;
+        let ours = train_once(&cfg)?;
+        cfg.method = Method::AllReduce;
+        let ar = train_once(&cfg)?;
+        let (po, pa) = paper
+            .iter()
+            .find(|(pn, _, _)| *pn == n)
+            .map(|(_, o, a)| (format!("{o}"), format!("{a}")))
+            .unwrap_or(("-".into(), "-".into()));
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", ours.t_end),
+            format!("{:.1}", ar.t_end),
+            format!("{:.2}x", ar.t_end / ours.t_end),
+            po,
+            pa,
+        ]);
+        rows.push(Tab3Row { n, async_time: ours.t_end, ar_time: ar.t_end });
+    }
+    Ok((rows, vec![table]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_faster_and_scales_down() {
+        let (rows, _) = run(Scale::Quick).unwrap();
+        for r in &rows {
+            assert!(
+                r.async_time < r.ar_time,
+                "n={}: async {} vs AR {}",
+                r.n,
+                r.async_time,
+                r.ar_time
+            );
+        }
+        // Doubling n roughly halves time at fixed total samples.
+        let first = &rows[0];
+        let last = rows.last().unwrap();
+        let expect = first.n as f64 / last.n as f64;
+        let got = last.async_time / first.async_time;
+        assert!(
+            (got / expect - 1.0).abs() < 0.5,
+            "scaling {got} vs expected {expect}"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Consensus-distance tracking (Fig. 5b / Kong et al.'s consensus control).
+//!
+//! The consensus distance is `‖πx‖²_F = Σᵢ ‖xᵢ − x̄‖²` where
+//! `x̄ = (1/n)Σᵢ xᵢ`. The paper uses it to show that A²CiD² halves the
+//! effective consensus error on the ring — equivalent to doubling the
+//! communication rate.
+
+use super::dynamics::WorkerState;
+
+/// `Σᵢ ‖xᵢ − x̄‖²` over the workers' parameter rows.
+pub fn consensus_distance_sq(workers: &[WorkerState]) -> f64 {
+    consensus_of(workers.iter().map(|w| w.x.as_slice()))
+}
+
+/// Root-mean-square consensus distance `√(‖πx‖²_F / n)` — the per-worker
+/// deviation scale reported in the figures.
+pub fn consensus_distance(workers: &[WorkerState]) -> f64 {
+    (consensus_distance_sq(workers) / workers.len() as f64).sqrt()
+}
+
+/// Consensus of arbitrary parameter rows (also used by the runtime, where
+/// rows live behind locks and are snapshotted first).
+pub fn consensus_of<'a>(rows: impl Iterator<Item = &'a [f32]> + Clone) -> f64 {
+    let n = rows.clone().count();
+    if n == 0 {
+        return 0.0;
+    }
+    let dim = rows.clone().next().unwrap().len();
+    let mut mean = vec![0.0f64; dim];
+    for row in rows.clone() {
+        assert_eq!(row.len(), dim, "ragged parameter rows");
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut acc = 0.0f64;
+    for row in rows {
+        for (&m, &v) in mean.iter().zip(row) {
+            let d = v as f64 - m;
+            acc += d * d;
+        }
+    }
+    acc
+}
+
+/// Average of all workers' parameters (the `x̄` a final All-Reduce would
+/// produce; the paper averages once before testing).
+pub fn average_params(workers: &[WorkerState]) -> Vec<f32> {
+    assert!(!workers.is_empty());
+    let dim = workers[0].dim();
+    let mut mean = vec![0.0f64; dim];
+    for w in workers {
+        for (m, &v) in mean.iter_mut().zip(&w.x) {
+            *m += v as f64;
+        }
+    }
+    let n = workers.len() as f64;
+    mean.iter().map(|&m| (m / n) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_when_identical() {
+        let ws = vec![
+            WorkerState::new(vec![1.0, 2.0]),
+            WorkerState::new(vec![1.0, 2.0]),
+        ];
+        assert_eq!(consensus_distance_sq(&ws), 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // x₁=(0,0), x₂=(2,2) ⇒ x̄=(1,1), Σ‖xᵢ−x̄‖² = 2 + 2 = 4.
+        let ws = vec![
+            WorkerState::new(vec![0.0, 0.0]),
+            WorkerState::new(vec![2.0, 2.0]),
+        ];
+        assert!((consensus_distance_sq(&ws) - 4.0).abs() < 1e-9);
+        assert!((consensus_distance(&ws) - (2.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invariant_under_common_shift() {
+        let mut ws = vec![
+            WorkerState::new(vec![0.5, -1.0]),
+            WorkerState::new(vec![1.5, 3.0]),
+            WorkerState::new(vec![-2.0, 0.0]),
+        ];
+        let before = consensus_distance_sq(&ws);
+        for w in &mut ws {
+            for v in &mut w.x {
+                *v += 10.0;
+            }
+        }
+        let after = consensus_distance_sq(&ws);
+        assert!((before - after).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_params_is_mean() {
+        let ws = vec![
+            WorkerState::new(vec![0.0, 4.0]),
+            WorkerState::new(vec![2.0, 0.0]),
+        ];
+        assert_eq!(average_params(&ws), vec![1.0, 2.0]);
+    }
+}

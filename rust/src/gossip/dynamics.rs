@@ -1,0 +1,272 @@
+//! Per-worker state and the two event types of the SDE (Eq. 4).
+//!
+//! A worker carries its model parameters `x`, the A²CiD² momentum buffer
+//! `x̃`, and the timestamp of its last event. Every event first applies the
+//! lazy momentum flow ([`super::mixing`]) for the elapsed time, then the
+//! event's own update:
+//!
+//! * **gradient spike** (`dN_t^i`): `x ← x − γ·g`, `x̃ ← x̃ − γ·g`
+//!   (the SDE applies the gradient term to both rows);
+//! * **communication spike** (`dM_t^ij`): with `m = x^i − x^j` *after*
+//!   both endpoints mixed to the event time,
+//!   `x^i ← x^i − α·m`, `x̃^i ← x̃^i − α̃·m` (and symmetrically, `+` on j).
+//!
+//! With the baseline parameters (η = 0, α = α̃ = ½) and `x̃₀ = x₀` the two
+//! buffers stay identical and the dynamic reduces to AD-PSGD-style pairwise
+//! averaging + local SGD (Eq. 6) — asserted in the tests below.
+
+use super::mixing::Mixer;
+use super::params::AcidParams;
+use super::vecops;
+
+/// One worker's replica state.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    /// Model parameters `x^i`.
+    pub x: Vec<f32>,
+    /// Momentum buffer `x̃^i` (equal to `x` at init).
+    pub xt: Vec<f32>,
+    /// Time of this worker's last event (for lazy mixing).
+    pub t_last: f64,
+    /// Number of gradient events applied.
+    pub n_grads: u64,
+    /// Number of communication events applied.
+    pub n_comms: u64,
+}
+
+impl WorkerState {
+    /// Initialize with `x̃ = x` (the paper's init; guarantees
+    /// `mean(x̃₀) = mean(x₀)`, the tracker property of Eq. 5).
+    pub fn new(x: Vec<f32>) -> Self {
+        let xt = x.clone();
+        Self { x, xt, t_last: 0.0, n_grads: 0, n_comms: 0 }
+    }
+
+    /// Parameter dimension.
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Bring the pair up to time `t` by applying the momentum flow.
+    pub fn mix_to(&mut self, t: f64, mixer: &Mixer) {
+        let dt = t - self.t_last;
+        if dt > 0.0 && mixer.eta != 0.0 {
+            let w = mixer.weights(dt);
+            vecops::mix_pair(w.wa, w.wb, &mut self.x, &mut self.xt);
+        }
+        if dt > 0.0 {
+            self.t_last = t;
+        }
+    }
+
+    /// Apply a gradient event at time `t`: mix, then step both rows.
+    pub fn apply_grad(&mut self, t: f64, gamma: f32, g: &[f32], mixer: &Mixer) {
+        let dt = t - self.t_last;
+        if dt > 0.0 && mixer.eta != 0.0 {
+            let w = mixer.weights(dt);
+            vecops::mix_grad(w.wa, w.wb, gamma, g, &mut self.x, &mut self.xt);
+        } else {
+            vecops::axpy(-gamma, g, &mut self.x);
+            vecops::axpy(-gamma, g, &mut self.xt);
+        }
+        if dt > 0.0 {
+            self.t_last = t;
+        }
+        self.n_grads += 1;
+    }
+
+    /// Apply this endpoint's half of a communication event, given the
+    /// peer's *already-mixed* parameters `xj`. Both endpoints must be mixed
+    /// to the same event time before either side computes its update; the
+    /// engines guarantee this by mixing `i` and `j` first, then exchanging.
+    pub fn apply_comm(&mut self, params: &AcidParams, xj: &[f32]) {
+        vecops::mix_comm(
+            1.0,
+            0.0,
+            params.alpha as f32,
+            params.alpha_tilde as f32,
+            xj,
+            &mut self.x,
+            &mut self.xt,
+        );
+        self.n_comms += 1;
+    }
+}
+
+/// Apply one full pairwise communication event between workers `a` and `b`
+/// at time `t` (the engine-side helper both execution engines use).
+///
+/// Fully fused (§Perf): each side's pending momentum flow and the
+/// antisymmetric `(α, α̃)` update run in one pass over the four buffers —
+/// 4R + 4W per element, no allocation — instead of mixing each side,
+/// snapshotting one, and applying two `mix_comm` passes (≈ 11R + 9W).
+pub fn comm_event(
+    a: &mut WorkerState,
+    b: &mut WorkerState,
+    t: f64,
+    params: &AcidParams,
+    mixer: &Mixer,
+) {
+    let wa = mixer.weights(t - a.t_last);
+    let wb = mixer.weights(t - b.t_last);
+    vecops::comm_pair_fused(
+        wa.wa,
+        wa.wb,
+        wb.wa,
+        wb.wb,
+        params.alpha as f32,
+        params.alpha_tilde as f32,
+        &mut a.x,
+        &mut a.xt,
+        &mut b.x,
+        &mut b.xt,
+    );
+    if t > a.t_last {
+        a.t_last = t;
+    }
+    if t > b.t_last {
+        b.t_last = t;
+    }
+    a.n_comms += 1;
+    b.n_comms += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(x: &[f32]) -> WorkerState {
+        WorkerState::new(x.to_vec())
+    }
+
+    #[test]
+    fn baseline_keeps_buffers_glued() {
+        // η = 0, α = α̃ = ½, x̃₀ = x₀ ⇒ x ≡ x̃ forever (Eq. 6 reduction).
+        let p = AcidParams::baseline();
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[1.0, 2.0]);
+        let mut b = mk(&[3.0, -2.0]);
+        a.apply_grad(0.3, 0.1, &[1.0, -1.0], &mixer);
+        comm_event(&mut a, &mut b, 0.7, &p, &mixer);
+        b.apply_grad(0.9, 0.1, &[0.5, 0.5], &mixer);
+        assert_eq!(a.x, a.xt);
+        assert_eq!(b.x, b.xt);
+    }
+
+    #[test]
+    fn baseline_comm_is_exact_averaging() {
+        let p = AcidParams::baseline();
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[0.0, 4.0]);
+        let mut b = mk(&[2.0, 0.0]);
+        comm_event(&mut a, &mut b, 1.0, &p, &mixer);
+        assert_eq!(a.x, vec![1.0, 2.0]);
+        assert_eq!(b.x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn comm_preserves_global_mean_of_x() {
+        // The α-update is antisymmetric in (i, j): Σᵢ xᵢ is conserved.
+        let p = AcidParams::accelerated(10.0, 1.0);
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[1.0, -3.0, 2.0]);
+        let mut b = mk(&[5.0, 0.5, -1.0]);
+        // Desynchronize the pairs so mixing actually does something.
+        a.apply_grad(0.2, 0.05, &[1.0, 1.0, 1.0], &mixer);
+        let total_before: f64 = a
+            .x
+            .iter()
+            .chain(&b.x)
+            .map(|&v| v as f64)
+            .sum::<f64>();
+        comm_event(&mut a, &mut b, 0.8, &p, &mixer);
+        let total_after: f64 = a
+            .x
+            .iter()
+            .chain(&b.x)
+            .map(|&v| v as f64)
+            .sum::<f64>();
+        assert!((total_before - total_after).abs() < 1e-4);
+    }
+
+    #[test]
+    fn comm_preserves_global_mean_of_xt() {
+        let p = AcidParams::accelerated(10.0, 1.0);
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[1.0, -3.0]);
+        let mut b = mk(&[5.0, 0.5]);
+        let before: f64 = a.xt.iter().chain(&b.xt).map(|&v| v as f64).sum();
+        comm_event(&mut a, &mut b, 0.5, &p, &mixer);
+        let after: f64 = a.xt.iter().chain(&b.xt).map(|&v| v as f64).sum();
+        assert!((before - after).abs() < 1e-4);
+    }
+
+    #[test]
+    fn tracker_property_mean_x_equals_mean_xt() {
+        // Eq. 5 / Sec. 3.2: with mean(x₀) = mean(x̃₀), the global means of
+        // x and x̃ coincide *at any common evaluation time*: gradient spikes
+        // hit both rows equally, comm spikes shift the per-worker
+        // difference u_i = x_i − x̃_i antisymmetrically across the pair
+        // (Σu conserved), and the mixing ODE decays every u_i at the same
+        // rate 2η, so Σu(t) = Σu(0)·e^{−2ηt} = 0. The lazy per-worker
+        // mixing makes this exact only after syncing all workers to a
+        // common time, which is what the engines do before evaluation.
+        let p = AcidParams::accelerated(8.0, 2.0);
+        let mixer = Mixer::new(p.eta);
+        let mut ws = vec![mk(&[1.0, 0.0]), mk(&[0.0, 2.0]), mk(&[3.0, -1.0])];
+        let mean = |ws: &[WorkerState], f: fn(&WorkerState) -> &Vec<f32>| -> f64 {
+            ws.iter()
+                .flat_map(|w| f(w).iter())
+                .map(|&v| v as f64)
+                .sum::<f64>()
+                / (ws.len() * 2) as f64
+        };
+        // Interleave events.
+        ws[0].apply_grad(0.1, 0.02, &[1.0, -2.0], &mixer);
+        {
+            let (l, r) = ws.split_at_mut(1);
+            comm_event(&mut l[0], &mut r[0], 0.4, &p, &mixer);
+        }
+        ws[2].apply_grad(0.5, 0.02, &[0.3, 0.3], &mixer);
+        {
+            let (l, r) = ws.split_at_mut(2);
+            comm_event(&mut l[1], &mut r[0], 0.9, &p, &mixer);
+        }
+        // Sync everyone to a common time, then the means must agree.
+        for w in &mut ws {
+            w.mix_to(1.5, &mixer);
+        }
+        let mx = mean(&ws, |w| &w.x);
+        let mt = mean(&ws, |w| &w.xt);
+        assert!((mx - mt).abs() < 1e-5, "mean x={mx} vs mean x̃={mt}");
+    }
+
+    #[test]
+    fn grad_event_counts() {
+        let p = AcidParams::baseline();
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[0.0]);
+        a.apply_grad(0.1, 1.0, &[1.0], &mixer);
+        a.apply_grad(0.2, 1.0, &[1.0], &mixer);
+        assert_eq!(a.n_grads, 2);
+        assert_eq!(a.x, vec![-2.0]);
+    }
+
+    #[test]
+    fn gossip_only_contracts_pair_difference() {
+        // Repeated comm events shrink ‖x_a − x_b‖ for both dynamics.
+        for p in [AcidParams::baseline(), AcidParams::accelerated(13.0, 1.0)] {
+            let mixer = Mixer::new(p.eta);
+            let mut a = mk(&[10.0, -4.0]);
+            let mut b = mk(&[-10.0, 4.0]);
+            let d0 = vecops::sq_dist(&a.x, &b.x);
+            let mut t = 0.0;
+            for _ in 0..20 {
+                t += 0.1;
+                comm_event(&mut a, &mut b, t, &p, &mixer);
+            }
+            let d1 = vecops::sq_dist(&a.x, &b.x);
+            assert!(d1 < d0 * 1e-3, "{}: {d0} -> {d1}", p.label());
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! The continuous momentum operator of A²CiD².
+//!
+//! Between any two events a worker's `(x, x̃)` pair evolves by the linear
+//! ODE `d(x,x̃)/dt = A·(x,x̃)` with `A = [[−η, η], [η, −η]]` (the "mixing
+//! ODE" of Sec. 3.2). Its flow has the closed form
+//!
+//! ```text
+//! exp(Δt·A) = [[ (1+c)/2, (1−c)/2 ],
+//!              [ (1−c)/2, (1+c)/2 ]],   c = exp(−2·η·Δt),
+//! ```
+//!
+//! a doubly-stochastic 2×2 matrix: mass `x + x̃` is conserved and the pair
+//! relaxes toward its own average at rate 2η. Algorithm 1 applies this
+//! flow lazily — right before every gradient or communication update —
+//! which is what [`Mixer::weights`] computes.
+
+/// Precomputed mixing coefficients for one worker.
+#[derive(Clone, Copy, Debug)]
+pub struct Mixer {
+    /// Momentum rate η (0 disables mixing entirely).
+    pub eta: f64,
+}
+
+/// The pair of mixing weights `(wa, wb)`; `x' = wa·x + wb·x̃`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixWeights {
+    pub wa: f32,
+    pub wb: f32,
+}
+
+impl Mixer {
+    pub fn new(eta: f64) -> Self {
+        assert!(eta >= 0.0, "eta must be non-negative, got {eta}");
+        Self { eta }
+    }
+
+    /// Mixing weights for an elapsed time `dt` since the worker's last
+    /// event. `eta = 0` or `dt = 0` yields the identity `(1, 0)`.
+    #[inline]
+    pub fn weights(&self, dt: f64) -> MixWeights {
+        debug_assert!(dt >= -1e-9, "negative elapsed time {dt}");
+        if self.eta == 0.0 || dt <= 0.0 {
+            return MixWeights { wa: 1.0, wb: 0.0 };
+        }
+        let c = (-2.0 * self.eta * dt).exp();
+        MixWeights { wa: (0.5 * (1.0 + c)) as f32, wb: (0.5 * (1.0 - c)) as f32 }
+    }
+
+    /// Apply the flow for `dt` to a single scalar pair (used in tests and
+    /// the 2-worker analytical checks).
+    pub fn apply_scalar(&self, dt: f64, x: f64, xt: f64) -> (f64, f64) {
+        let w = self.weights(dt);
+        (
+            w.wa as f64 * x + w.wb as f64 * xt,
+            w.wb as f64 * x + w.wa as f64 * xt,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at_zero_dt_or_zero_eta() {
+        assert_eq!(Mixer::new(0.0).weights(5.0), MixWeights { wa: 1.0, wb: 0.0 });
+        assert_eq!(Mixer::new(3.0).weights(0.0), MixWeights { wa: 1.0, wb: 0.0 });
+    }
+
+    #[test]
+    fn weights_are_doubly_stochastic() {
+        let m = Mixer::new(0.7);
+        for &dt in &[0.01, 0.1, 1.0, 10.0, 1000.0] {
+            let w = m.weights(dt);
+            assert!((w.wa + w.wb - 1.0).abs() < 1e-6);
+            assert!(w.wa >= 0.0 && w.wb >= 0.0);
+            assert!(w.wa >= 0.5 - 1e-6, "wa >= 1/2 always");
+        }
+    }
+
+    #[test]
+    fn long_time_limit_is_average() {
+        // As Δt → ∞, both components converge to (x + x̃)/2.
+        let m = Mixer::new(1.0);
+        let (x, xt) = m.apply_scalar(100.0, 2.0, 4.0);
+        assert!((x - 3.0).abs() < 1e-6);
+        assert!((xt - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn semigroup_property() {
+        // exp((s+t)A) = exp(sA)·exp(tA): applying the flow in two steps
+        // must equal one step of the total time.
+        let m = Mixer::new(0.37);
+        let (x0, t0) = (1.5, -2.5);
+        let (x1, t1) = m.apply_scalar(0.4, x0, t0);
+        let (x2, t2) = m.apply_scalar(0.9, x1, t1);
+        // Weights are f32 (the production precision), so compare at 1e-6.
+        let (xd, td) = m.apply_scalar(1.3, x0, t0);
+        assert!((x2 - xd).abs() < 1e-6, "{x2} vs {xd}");
+        assert!((t2 - td).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mass_conserved() {
+        let m = Mixer::new(2.0);
+        let (x, xt) = m.apply_scalar(0.123, 7.0, -3.0);
+        assert!((x + xt - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relaxation_rate_matches_2eta() {
+        // x − x̃ decays exactly like exp(−2ηΔt).
+        let eta = 0.8;
+        let m = Mixer::new(eta);
+        let dt = 0.65;
+        let (x, xt) = m.apply_scalar(dt, 1.0, 0.0);
+        let expect = (-2.0 * eta * dt).exp();
+        assert!(((x - xt) - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,29 @@
+//! The paper's algorithm: continuized-momentum asynchronous gossip.
+//!
+//! This module is engine-agnostic — the exact same event-application code
+//! is driven by the virtual-time [`crate::simulator`] and by the
+//! real-thread [`crate::runtime`], so what we test in fast simulation is
+//! what runs on the request path.
+//!
+//! Contents:
+//! * [`mixing`] — the continuous momentum operator
+//!   `exp(Δt·[[−η,η],[η,−η]])` in closed form (Algorithm 1, lines 9/17);
+//! * [`params`] — the theory-given hyper-parameters (Prop. 3.6):
+//!   baseline `η=0, α=α̃=½` vs A²CiD²
+//!   `η=1/(2√(χ₁χ₂)), α=½, α̃=½·√(χ₁/χ₂)`;
+//! * [`dynamics`] — per-worker state `{x, x̃, t_last}` and the two event
+//!   types of the SDE (Eq. 4): local gradient spikes and p2p averagings;
+//! * [`consensus`] — the consensus distance `‖πx‖_F` tracked in Fig. 5b;
+//! * [`vecops`] — the fused vector kernels backing the hot path (the Rust
+//!   mirror of the L1 Pallas kernel, used when PJRT is not in the loop).
+
+pub mod consensus;
+pub mod dynamics;
+pub mod mixing;
+pub mod params;
+pub mod vecops;
+
+pub use consensus::{consensus_distance, consensus_distance_sq, consensus_of};
+pub use dynamics::WorkerState;
+pub use mixing::Mixer;
+pub use params::AcidParams;

@@ -1,0 +1,103 @@
+//! Theory-given hyper-parameters of the dynamic (Prop. 3.6).
+
+use crate::graph::Spectrum;
+
+/// The scalar hyper-parameters (η, α, α̃) of the SDE (Eq. 4).
+///
+/// * Baseline (≈ AD-PSGD): `η = 0`, `α = α̃ = ½` — the momentum buffer
+///   stays glued to the parameters and the dynamic reduces to Eq. 6
+///   (pairwise averaging + local SGD).
+/// * A²CiD²: `η = 1/(2√(χ₁χ₂))`, `α = ½`, `α̃ = ½·√(χ₁/χ₂)` — the values
+///   for which Prop. 3.6 proves the accelerated `√(χ₁χ₂)` dependence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AcidParams {
+    /// Continuous mixing rate of the (x, x̃) coupling.
+    pub eta: f64,
+    /// Communication step size on the parameters x.
+    pub alpha: f64,
+    /// Communication step size on the momentum buffer x̃.
+    pub alpha_tilde: f64,
+}
+
+impl AcidParams {
+    /// Non-accelerated baseline (η = 0, α = α̃ = ½).
+    pub fn baseline() -> Self {
+        AcidParams { eta: 0.0, alpha: 0.5, alpha_tilde: 0.5 }
+    }
+
+    /// Accelerated parameters from raw (χ₁, χ₂).
+    pub fn accelerated(chi1: f64, chi2: f64) -> Self {
+        assert!(chi1 > 0.0 && chi2 > 0.0, "chi must be positive: {chi1}, {chi2}");
+        assert!(
+            chi2 <= chi1 * (1.0 + 1e-6),
+            "chi2={chi2} must not exceed chi1={chi1}"
+        );
+        AcidParams {
+            eta: 1.0 / (2.0 * (chi1 * chi2).sqrt()),
+            alpha: 0.5,
+            alpha_tilde: 0.5 * (chi1 / chi2).sqrt(),
+        }
+    }
+
+    /// Accelerated parameters from a computed graph spectrum.
+    pub fn from_spectrum(s: &Spectrum) -> Self {
+        Self::accelerated(s.chi1, s.chi2)
+    }
+
+    /// Whether the momentum is active.
+    pub fn is_accelerated(&self) -> bool {
+        self.eta != 0.0
+    }
+
+    /// Human-readable label for experiment reports.
+    pub fn label(&self) -> &'static str {
+        if self.is_accelerated() {
+            "A2CiD2"
+        } else {
+            "async-baseline"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Topology};
+
+    #[test]
+    fn baseline_is_identity_momentum() {
+        let p = AcidParams::baseline();
+        assert_eq!(p.eta, 0.0);
+        assert_eq!(p.alpha, 0.5);
+        assert_eq!(p.alpha_tilde, 0.5);
+        assert!(!p.is_accelerated());
+    }
+
+    #[test]
+    fn accelerated_on_complete_graph_is_mild() {
+        // χ₁ = χ₂ on the complete graph ⇒ α̃ = ½ (same as baseline) and
+        // η = 1/(2χ₁): the momentum degenerates gracefully.
+        let g = Graph::build(&Topology::Complete, 16).unwrap();
+        let s = g.spectrum(1.0);
+        let p = AcidParams::from_spectrum(&s);
+        assert!((p.alpha_tilde - 0.5).abs() < 1e-6);
+        assert!((p.eta - 1.0 / (2.0 * s.chi1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accelerated_on_ring_boosts_alpha_tilde() {
+        // Ring: χ₁ ≈ n²/(2π²) ≫ χ₂ ≈ 1 ⇒ α̃ ≫ ½ and η small.
+        let g = Graph::build(&Topology::Ring, 32).unwrap();
+        let s = g.spectrum(1.0);
+        let p = AcidParams::from_spectrum(&s);
+        assert!(p.alpha_tilde > 2.0, "alpha_tilde={}", p.alpha_tilde);
+        assert!(p.eta < 0.1, "eta={}", p.eta);
+        assert!(p.is_accelerated());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_chi2_above_chi1() {
+        AcidParams::accelerated(1.0, 2.0);
+    }
+}

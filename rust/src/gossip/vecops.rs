@@ -1,0 +1,270 @@
+//! Fused vector kernels for the gossip hot path.
+//!
+//! These are the Rust mirrors of the L1 Pallas kernel
+//! (`python/compile/kernels/acid_mix.py`): one pass over the parameter
+//! vectors per event instead of a chain of BLAS-1 calls. All loops are
+//! written over plain slices with exact-size iterators so LLVM
+//! auto-vectorizes them; the `perf` bench measures achieved bandwidth
+//! against the memcpy roofline.
+
+/// `y ← y + a·x` (axpy).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// Fused momentum mixing: given mixing weights `(wa, wb)` with
+/// `wa + wb = 1`, overwrite `(x, xt)` with
+/// `x' = wa·x + wb·xt`, `xt' = wb·x + wa·xt` — a single pass, two reads +
+/// two writes per element.
+#[inline]
+pub fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    for (xi, ti) in x.iter_mut().zip(xt.iter_mut()) {
+        let a = *xi;
+        let b = *ti;
+        *xi = wa * a + wb * b;
+        *ti = wb * a + wa * b;
+    }
+}
+
+/// Fused mixing + gradient step (Algorithm 1, lines 9–11, per the SDE the
+/// gradient hits both rows): `x' = mix(x,xt) − γ·g`, `xt' = mix(xt,x) − γ·g`.
+#[inline]
+pub fn mix_grad(wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), g.len());
+    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
+        let a = *xi;
+        let b = *ti;
+        let step = gamma * *gi;
+        *xi = wa * a + wb * b - step;
+        *ti = wb * a + wa * b - step;
+    }
+}
+
+/// Fused mixing + communication step (Algorithm 1, lines 16–19): with
+/// `m = x_self_mixed − x_peer` unavailable until after mixing, this variant
+/// takes the *already mixed* peer vector `xj` and applies
+/// `x' = mix − α·(mix − xj)`, `xt' = mixt − α̃·(mix − xj)` in one pass.
+#[inline]
+pub fn mix_comm(
+    wa: f32,
+    wb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xj: &[f32],
+    x: &mut [f32],
+    xt: &mut [f32],
+) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), xj.len());
+    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
+        let a = *xi;
+        let b = *ti;
+        let mixed_x = wa * a + wb * b;
+        let mixed_t = wb * a + wa * b;
+        let m = mixed_x - *pj;
+        *xi = mixed_x - alpha * m;
+        *ti = mixed_t - alpha_tilde * m;
+    }
+}
+
+/// Fully-fused pairwise communication event over BOTH endpoints: applies
+/// each side's pending momentum mixing (weights `(waa, wba)` for worker a,
+/// `(wab, wbb)` for worker b — they differ because the workers' last event
+/// times differ) and the antisymmetric `(α, α̃)` averaging update, in ONE
+/// pass: 4 reads + 4 writes per element, no scratch allocation. This is
+/// the simulator's hot path; `comm_event` composes it from
+/// mix→snapshot→mix_comm on each side (≈ 11R + 9W) when buffers alias.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn comm_pair_fused(
+    waa: f32,
+    wba: f32,
+    wab: f32,
+    wbb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xa: &mut [f32],
+    xta: &mut [f32],
+    xb: &mut [f32],
+    xtb: &mut [f32],
+) {
+    assert_eq!(xa.len(), xta.len());
+    assert_eq!(xa.len(), xb.len());
+    assert_eq!(xa.len(), xtb.len());
+    for (((a, ta), b), tb) in xa
+        .iter_mut()
+        .zip(xta.iter_mut())
+        .zip(xb.iter_mut())
+        .zip(xtb.iter_mut())
+    {
+        // Mix each endpoint to the event time.
+        let (va, vta) = (*a, *ta);
+        let (vb, vtb) = (*b, *tb);
+        let ma = waa * va + wba * vta;
+        let mta = wba * va + waa * vta;
+        let mb = wab * vb + wbb * vtb;
+        let mtb = wbb * vb + wab * vtb;
+        // Antisymmetric averaging update: m = x_a − x_b.
+        let m = ma - mb;
+        *a = ma - alpha * m;
+        *ta = mta - alpha_tilde * m;
+        *b = mb + alpha * m;
+        *tb = mtb + alpha_tilde * m;
+    }
+}
+
+/// Sum of squared differences `‖x − y‖²` (consensus bookkeeping).
+#[inline]
+pub fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = (*a - *b) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// In-place average of two vectors into both: `x, y ← (x+y)/2`.
+#[inline]
+pub fn average_pair(x: &mut [f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let m = 0.5 * (*a + *b);
+        *a = m;
+        *b = m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn mix_pair_preserves_sum() {
+        let mut x = vec![1.0f32, -2.0, 5.0];
+        let mut xt = vec![3.0f32, 4.0, -1.0];
+        let sums: Vec<f32> = x.iter().zip(&xt).map(|(a, b)| a + b).collect();
+        mix_pair(0.7, 0.3, &mut x, &mut xt);
+        for (i, s) in sums.iter().enumerate() {
+            assert!((x[i] + xt[i] - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mix_pair_identity_when_wa_one() {
+        let mut x = vec![1.0f32, 2.0];
+        let mut xt = vec![3.0f32, 4.0];
+        mix_pair(1.0, 0.0, &mut x, &mut xt);
+        assert_eq!(x, vec![1.0, 2.0]);
+        assert_eq!(xt, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn mix_grad_matches_composition() {
+        let g = vec![0.5f32, -1.0, 2.0];
+        let mut x1 = vec![1.0f32, 2.0, 3.0];
+        let mut t1 = vec![-1.0f32, 0.5, 1.5];
+        let mut x2 = x1.clone();
+        let mut t2 = t1.clone();
+        // Fused
+        mix_grad(0.8, 0.2, 0.1, &g, &mut x1, &mut t1);
+        // Composition
+        mix_pair(0.8, 0.2, &mut x2, &mut t2);
+        axpy(-0.1, &g, &mut x2);
+        axpy(-0.1, &g, &mut t2);
+        for i in 0..3 {
+            assert!((x1[i] - x2[i]).abs() < 1e-6);
+            assert!((t1[i] - t2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mix_comm_matches_composition() {
+        let xj = vec![0.0f32, 1.0, -1.0];
+        let mut x1 = vec![1.0f32, 2.0, 3.0];
+        let mut t1 = vec![-1.0f32, 0.5, 1.5];
+        let mut x2 = x1.clone();
+        let mut t2 = t1.clone();
+        mix_comm(0.9, 0.1, 0.5, 1.7, &xj, &mut x1, &mut t1);
+        mix_pair(0.9, 0.1, &mut x2, &mut t2);
+        let m: Vec<f32> = x2.iter().zip(&xj).map(|(a, b)| a - b).collect();
+        axpy(-0.5, &m, &mut x2);
+        axpy(-1.7, &m, &mut t2);
+        for i in 0..3 {
+            assert!((x1[i] - x2[i]).abs() < 1e-6);
+            assert!((t1[i] - t2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mix_comm_alpha_half_averages() {
+        // With α = ½ and no mixing, x lands exactly on the pair average.
+        let xj = vec![2.0f32, 4.0];
+        let mut x = vec![0.0f32, 0.0];
+        let mut xt = x.clone();
+        mix_comm(1.0, 0.0, 0.5, 0.5, &xj, &mut x, &mut xt);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn comm_pair_fused_matches_composed_path() {
+        // Fused two-endpoint event == mix a; mix b; m = x_a − x_b;
+        // apply ∓(α, α̃)m.
+        let (waa, wba) = (0.85f32, 0.15f32);
+        let (wab, wbb) = (0.6f32, 0.4f32);
+        let (alpha, alpha_tilde) = (0.5f32, 1.9f32);
+        let xa0 = vec![1.0f32, -2.0, 0.5];
+        let ta0 = vec![0.2f32, 0.7, -1.0];
+        let xb0 = vec![-1.0f32, 3.0, 2.0];
+        let tb0 = vec![0.0f32, -0.5, 1.0];
+
+        let (mut xa, mut ta) = (xa0.clone(), ta0.clone());
+        let (mut xb, mut tb) = (xb0.clone(), tb0.clone());
+        comm_pair_fused(
+            waa, wba, wab, wbb, alpha, alpha_tilde, &mut xa, &mut ta, &mut xb, &mut tb,
+        );
+
+        // Composed reference.
+        let (mut rxa, mut rta) = (xa0, ta0);
+        let (mut rxb, mut rtb) = (xb0, tb0);
+        mix_pair(waa, wba, &mut rxa, &mut rta);
+        mix_pair(wab, wbb, &mut rxb, &mut rtb);
+        let m: Vec<f32> = rxa.iter().zip(&rxb).map(|(a, b)| a - b).collect();
+        axpy(-alpha, &m, &mut rxa);
+        axpy(-alpha_tilde, &m, &mut rta);
+        axpy(alpha, &m, &mut rxb);
+        axpy(alpha_tilde, &m, &mut rtb);
+        for i in 0..3 {
+            assert!((xa[i] - rxa[i]).abs() < 1e-6);
+            assert!((ta[i] - rta[i]).abs() < 1e-6);
+            assert!((xb[i] - rxb[i]).abs() < 1e-6);
+            assert!((tb[i] - rtb[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn average_pair_and_sq_dist() {
+        let mut a = vec![0.0f32, 2.0];
+        let mut b = vec![2.0f32, 0.0];
+        assert_eq!(sq_dist(&a, &b), 8.0);
+        average_pair(&mut a, &mut b);
+        assert_eq!(a, vec![1.0, 1.0]);
+        assert_eq!(b, vec![1.0, 1.0]);
+        assert_eq!(sq_dist(&a, &b), 0.0);
+    }
+}

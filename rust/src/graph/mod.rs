@@ -1,0 +1,486 @@
+//! Communication-network topologies and the paper's graph functionals.
+//!
+//! The paper models the network as a set of edges `ℰ` with per-edge Poisson
+//! communication rates `λ^ij`, summarized by the *instantaneous expected
+//! Laplacian* `Λ = Σ_(i,j)∈ℰ λ^ij (e_i−e_j)(e_i−e_j)ᵀ` (Definition 3.1).
+//! Two functionals of Λ drive everything:
+//!
+//! * `χ₁ = 1 / λ₂(Λ)` — inverse algebraic connectivity (Eq. 2);
+//! * `χ₂ = ½·max_(i,j)∈ℰ (e_i−e_j)ᵀ Λ⁺ (e_i−e_j)` — maximal effective
+//!   resistance (Eq. 3), with `χ₂ ≤ χ₁`.
+//!
+//! A²CiD²'s momentum parameters (η, α̃) are functions of (χ₁, χ₂); the
+//! acceleration claim is that convergence degrades with `√(χ₁χ₂)` instead
+//! of `χ₁` (e.g. ring: `Θ(n^{3/2})` instead of `Θ(n²)`).
+
+use crate::linalg::{sym_eig, sym_pinv, Matrix};
+
+/// The topologies used in the paper (complete / exponential / ring, App. E.1)
+/// plus extras useful for ablations.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// All pairs connected.
+    Complete,
+    /// Cycle graph (the paper's hardest case: χ₁ = Θ(n²)).
+    Ring,
+    /// Undirected exponential graph of Assran et al. / AD-PSGD:
+    /// node `i` is adjacent to `i ± 2^k mod n` for `2^k < n`.
+    Exponential,
+    /// One hub connected to all leaves.
+    Star,
+    /// Path graph (ring cut open).
+    Path,
+    /// 2-D torus `rows × cols` (requires `rows*cols == n`).
+    Torus { rows: usize, cols: usize },
+    /// Hypercube (requires `n` to be a power of two).
+    Hypercube,
+    /// Erdős–Rényi `G(n, p)`, resampled until connected.
+    ErdosRenyi { p: f64, seed: u64 },
+}
+
+impl Topology {
+    /// Parse from a CLI/config string like `"ring"`, `"torus:4x8"`,
+    /// `"erdos:0.3:42"`.
+    pub fn parse(s: &str) -> crate::Result<Topology> {
+        let parts: Vec<&str> = s.split(':').collect();
+        Ok(match parts[0] {
+            "complete" => Topology::Complete,
+            "ring" | "cycle" => Topology::Ring,
+            "exponential" | "exp" => Topology::Exponential,
+            "star" => Topology::Star,
+            "path" => Topology::Path,
+            "hypercube" => Topology::Hypercube,
+            "torus" => {
+                let dims: Vec<&str> = parts
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("torus needs dims, e.g. torus:4x8"))?
+                    .split('x')
+                    .collect();
+                anyhow::ensure!(dims.len() == 2, "torus dims must be RxC");
+                Topology::Torus { rows: dims[0].parse()?, cols: dims[1].parse()? }
+            }
+            "erdos" => {
+                let p: f64 = parts
+                    .get(1)
+                    .ok_or_else(|| anyhow::anyhow!("erdos needs p, e.g. erdos:0.3"))?
+                    .parse()?;
+                let seed: u64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(0);
+                Topology::ErdosRenyi { p, seed }
+            }
+            other => anyhow::bail!("unknown topology '{other}'"),
+        })
+    }
+
+    /// Short name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Complete => "complete",
+            Topology::Ring => "ring",
+            Topology::Exponential => "exponential",
+            Topology::Star => "star",
+            Topology::Path => "path",
+            Topology::Torus { .. } => "torus",
+            Topology::Hypercube => "hypercube",
+            Topology::ErdosRenyi { .. } => "erdos-renyi",
+        }
+    }
+}
+
+/// An undirected communication graph over `n` workers.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// Canonical edge list with `i < j`, sorted.
+    pub edges: Vec<(usize, usize)>,
+    /// `neighbors[i]` = sorted adjacency list of worker `i`.
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Build a topology over `n` workers.
+    pub fn build(topology: &Topology, n: usize) -> crate::Result<Graph> {
+        anyhow::ensure!(n >= 2, "need at least 2 workers, got {n}");
+        let mut set = std::collections::BTreeSet::new();
+        let mut add = |i: usize, j: usize| {
+            if i != j {
+                set.insert((i.min(j), i.max(j)));
+            }
+        };
+        match topology {
+            Topology::Complete => {
+                for i in 0..n {
+                    for j in i + 1..n {
+                        add(i, j);
+                    }
+                }
+            }
+            Topology::Ring => {
+                for i in 0..n {
+                    add(i, (i + 1) % n);
+                }
+            }
+            Topology::Path => {
+                for i in 0..n - 1 {
+                    add(i, i + 1);
+                }
+            }
+            Topology::Exponential => {
+                let mut k = 1usize;
+                while k < n {
+                    for i in 0..n {
+                        add(i, (i + k) % n);
+                    }
+                    k *= 2;
+                }
+            }
+            Topology::Star => {
+                for i in 1..n {
+                    add(0, i);
+                }
+            }
+            Topology::Torus { rows, cols } => {
+                anyhow::ensure!(
+                    rows * cols == n,
+                    "torus {rows}x{cols} != n={n}"
+                );
+                for r in 0..*rows {
+                    for c in 0..*cols {
+                        let id = r * cols + c;
+                        if *cols > 1 {
+                            add(id, r * cols + (c + 1) % cols);
+                        }
+                        if *rows > 1 {
+                            add(id, ((r + 1) % rows) * cols + c);
+                        }
+                    }
+                }
+            }
+            Topology::Hypercube => {
+                anyhow::ensure!(n.is_power_of_two(), "hypercube needs power-of-two n, got {n}");
+                let bits = n.trailing_zeros() as usize;
+                for i in 0..n {
+                    for b in 0..bits {
+                        add(i, i ^ (1 << b));
+                    }
+                }
+            }
+            Topology::ErdosRenyi { p, seed } => {
+                anyhow::ensure!((0.0..=1.0).contains(p), "erdos p out of range");
+                let mut rng = crate::rng::Xoshiro256::seed_from_u64(*seed);
+                for attempt in 0..1000 {
+                    set.clear();
+                    for i in 0..n {
+                        for j in i + 1..n {
+                            if rng.gen_bool(*p) {
+                                set.insert((i, j));
+                            }
+                        }
+                    }
+                    let g = Graph::from_edge_set(n, &set);
+                    if g.is_connected() {
+                        return Ok(g);
+                    }
+                    anyhow::ensure!(attempt < 999, "could not sample connected G({n},{p})");
+                }
+            }
+        }
+        let g = Graph::from_edge_set(n, &set);
+        anyhow::ensure!(g.is_connected(), "{} graph on n={n} is disconnected", topology.name());
+        Ok(g)
+    }
+
+    fn from_edge_set(n: usize, set: &std::collections::BTreeSet<(usize, usize)>) -> Graph {
+        let edges: Vec<(usize, usize)> = set.iter().copied().collect();
+        let mut neighbors = vec![Vec::new(); n];
+        for &(i, j) in &edges {
+            neighbors[i].push(j);
+            neighbors[j].push(i);
+        }
+        for adj in &mut neighbors {
+            adj.sort_unstable();
+        }
+        Graph { n, edges, neighbors }
+    }
+
+    /// Degree of worker `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// Whether `(i, j)` is an edge.
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.neighbors[i].binary_search(&j).is_ok()
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.neighbors[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Per-edge Poisson rates under the paper's protocol: each worker
+    /// participates in p2p averagings at total rate `rate_per_worker`
+    /// (communications per gradient step in expectation), choosing peers
+    /// uniformly among its neighbors. The symmetric per-edge rate is then
+    /// `λ^ij = rate/2 · (1/deg(i) + 1/deg(j))`, which for regular graphs
+    /// reduces to `rate / deg` and satisfies `Σ_j λ^ij = rate`.
+    pub fn edge_rates(&self, rate_per_worker: f64) -> Vec<f64> {
+        self.edges
+            .iter()
+            .map(|&(i, j)| {
+                0.5 * rate_per_worker
+                    * (1.0 / self.degree(i) as f64 + 1.0 / self.degree(j) as f64)
+            })
+            .collect()
+    }
+
+    /// The instantaneous expected Laplacian Λ (Definition 3.1) for the
+    /// given per-edge rates (aligned with `self.edges`).
+    pub fn laplacian(&self, rates: &[f64]) -> Matrix {
+        assert_eq!(rates.len(), self.edges.len());
+        let mut lap = Matrix::zeros(self.n);
+        for (&(i, j), &w) in self.edges.iter().zip(rates) {
+            lap[(i, i)] += w;
+            lap[(j, j)] += w;
+            lap[(i, j)] -= w;
+            lap[(j, i)] -= w;
+        }
+        lap
+    }
+
+    /// Compute (χ₁, χ₂) and related spectral quantities for per-worker
+    /// communication rate `rate_per_worker`.
+    pub fn spectrum(&self, rate_per_worker: f64) -> Spectrum {
+        let rates = self.edge_rates(rate_per_worker);
+        self.spectrum_with_rates(&rates)
+    }
+
+    /// Same as [`Graph::spectrum`] but with explicit per-edge rates.
+    pub fn spectrum_with_rates(&self, rates: &[f64]) -> Spectrum {
+        let lap = self.laplacian(rates);
+        let eig = sym_eig(&lap);
+        // λ₁ ≈ 0 (connected ⇒ simple kernel); algebraic connectivity is λ₂.
+        let lambda2 = eig.values[1];
+        let lambda_max = *eig.values.last().unwrap();
+        let chi1 = 1.0 / lambda2;
+        let pinv = sym_pinv(&lap, 1e-10);
+        let mut max_resist = 0.0f64;
+        for &(i, j) in &self.edges {
+            // (e_i - e_j)ᵀ Λ⁺ (e_i - e_j)
+            let r = pinv[(i, i)] + pinv[(j, j)] - 2.0 * pinv[(i, j)];
+            max_resist = max_resist.max(r);
+        }
+        let chi2 = 0.5 * max_resist;
+        let trace: f64 = (0..self.n).map(|i| lap[(i, i)]).sum();
+        Spectrum { chi1, chi2, lambda2, lambda_max, trace }
+    }
+}
+
+/// Spectral summary of a rate-weighted Laplacian.
+#[derive(Clone, Copy, Debug)]
+pub struct Spectrum {
+    /// Inverse algebraic connectivity (Eq. 2).
+    pub chi1: f64,
+    /// Maximal effective resistance (Eq. 3).
+    pub chi2: f64,
+    /// Algebraic connectivity λ₂(Λ).
+    pub lambda2: f64,
+    /// Largest eigenvalue λ_max(Λ).
+    pub lambda_max: f64,
+    /// Tr(Λ); the expected number of communications per unit time is
+    /// Tr(Λ)/2 (Prop. 3.6).
+    pub trace: f64,
+}
+
+impl Spectrum {
+    /// The accelerated connectivity factor `√(χ₁ χ₂)` appearing in the
+    /// A²CiD² rates.
+    pub fn chi_acc(&self) -> f64 {
+        (self.chi1 * self.chi2).sqrt()
+    }
+
+    /// Expected communications per time unit across the network, Tr(Λ)/2.
+    pub fn comms_per_unit_time(&self) -> f64 {
+        0.5 * self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, rel: f64) -> bool {
+        (a - b).abs() <= rel * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn complete_graph_counts() {
+        let g = Graph::build(&Topology::Complete, 8).unwrap();
+        assert_eq!(g.edges.len(), 28);
+        assert!(g.is_connected());
+        assert!((0..8).all(|i| g.degree(i) == 7));
+    }
+
+    #[test]
+    fn ring_graph_counts() {
+        let g = Graph::build(&Topology::Ring, 16).unwrap();
+        assert_eq!(g.edges.len(), 16);
+        assert!((0..16).all(|i| g.degree(i) == 2));
+        assert!(g.has_edge(0, 15));
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn exponential_graph_structure() {
+        // n=16: neighbors of 0 are ±1, ±2, ±4, 8 → degree 7.
+        let g = Graph::build(&Topology::Exponential, 16).unwrap();
+        assert_eq!(g.degree(0), 7);
+        assert!(g.has_edge(0, 8));
+        assert!(g.has_edge(0, 4));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn star_path_torus_hypercube() {
+        let s = Graph::build(&Topology::Star, 9).unwrap();
+        assert_eq!(s.degree(0), 8);
+        assert!((1..9).all(|i| s.degree(i) == 1));
+
+        let p = Graph::build(&Topology::Path, 5).unwrap();
+        assert_eq!(p.edges.len(), 4);
+
+        let t = Graph::build(&Topology::Torus { rows: 4, cols: 4 }, 16).unwrap();
+        assert!((0..16).all(|i| t.degree(i) == 4));
+
+        let h = Graph::build(&Topology::Hypercube, 16).unwrap();
+        assert!((0..16).all(|i| h.degree(i) == 4));
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let g = Graph::build(&Topology::ErdosRenyi { p: 0.3, seed: 5 }, 20).unwrap();
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn laplacian_row_sums_zero_and_psd() {
+        for topo in [Topology::Ring, Topology::Complete, Topology::Exponential] {
+            let g = Graph::build(&topo, 12).unwrap();
+            let lap = g.laplacian(&g.edge_rates(1.0));
+            for i in 0..12 {
+                let row_sum: f64 = (0..12).map(|j| lap[(i, j)]).sum();
+                assert!(row_sum.abs() < 1e-12);
+            }
+            let eig = sym_eig(&lap);
+            assert!(eig.values[0].abs() < 1e-9, "kernel eigenvalue");
+            assert!(eig.values.iter().all(|&w| w > -1e-9), "PSD");
+        }
+    }
+
+    #[test]
+    fn ring_chi1_closed_form() {
+        // Ring with per-worker rate 1 ⇒ per-edge weight 1/2;
+        // λ₂ = 2·(1/2)·(1 − cos(2π/n)) ⇒ χ₁ = 1/(1 − cos(2π/n)).
+        for n in [8usize, 16, 32] {
+            let g = Graph::build(&Topology::Ring, n).unwrap();
+            let s = g.spectrum(1.0);
+            let expect = 1.0 / (1.0 - (2.0 * std::f64::consts::PI / n as f64).cos());
+            assert!(approx(s.chi1, expect, 1e-6), "n={n}: {} vs {expect}", s.chi1);
+        }
+    }
+
+    #[test]
+    fn ring_chi2_closed_form() {
+        // Adjacent-node effective resistance on a weighted cycle
+        // (conductance w per edge): (1/w)·(n−1)/n; χ₂ is half that.
+        let n = 16;
+        let g = Graph::build(&Topology::Ring, n).unwrap();
+        let s = g.spectrum(1.0);
+        let w = 0.5;
+        let expect = 0.5 * (1.0 / w) * (n as f64 - 1.0) / n as f64;
+        assert!(approx(s.chi2, expect, 1e-6), "{} vs {expect}", s.chi2);
+    }
+
+    #[test]
+    fn complete_chi1_equals_chi2() {
+        // Paper Sec. 4.2: χ₁ = χ₂ for the complete graph.
+        let g = Graph::build(&Topology::Complete, 16).unwrap();
+        let s = g.spectrum(1.0);
+        assert!(approx(s.chi1, s.chi2, 1e-6), "{} vs {}", s.chi1, s.chi2);
+        // Fig. 6: (χ₁, χ₂) ≈ (1, 1) at rate 1.
+        assert!(approx(s.chi1, 15.0 / 16.0, 1e-6));
+    }
+
+    #[test]
+    fn fig6_paper_values_n16() {
+        // Fig. 6 reports approximate (χ₁, χ₂) at 1 comm/grad:
+        // complete (1,1), exponential (2,1), ring (13,1).
+        let c = Graph::build(&Topology::Complete, 16).unwrap().spectrum(1.0);
+        let e = Graph::build(&Topology::Exponential, 16).unwrap().spectrum(1.0);
+        let r = Graph::build(&Topology::Ring, 16).unwrap().spectrum(1.0);
+        assert!(c.chi1.round() == 1.0 && c.chi2.round() == 1.0, "complete {c:?}");
+        assert!(e.chi1.round() <= 3.0 && e.chi2.round() == 1.0, "exp {e:?}");
+        assert!((r.chi1 - 13.0).abs() < 1.0, "ring chi1 {}", r.chi1);
+        assert!(r.chi2.round() == 1.0, "ring chi2 {}", r.chi2);
+    }
+
+    #[test]
+    fn chi2_le_chi1_across_topologies() {
+        for topo in [
+            Topology::Ring,
+            Topology::Complete,
+            Topology::Exponential,
+            Topology::Star,
+            Topology::Path,
+            Topology::Hypercube,
+        ] {
+            let g = Graph::build(&topo, 16).unwrap();
+            let s = g.spectrum(1.0);
+            assert!(
+                s.chi2 <= s.chi1 * (1.0 + 1e-9),
+                "{}: chi2={} > chi1={}",
+                topo.name(),
+                s.chi2,
+                s.chi1
+            );
+        }
+    }
+
+    #[test]
+    fn trace_matches_total_rate() {
+        // Σ_j λ^ij = rate for regular graphs ⇒ Tr(Λ) = n·rate.
+        let g = Graph::build(&Topology::Ring, 10).unwrap();
+        let s = g.spectrum(2.0);
+        assert!(approx(s.trace, 20.0, 1e-9));
+        assert!(approx(s.comms_per_unit_time(), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn topology_parse_round_trip() {
+        assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse("complete").unwrap(), Topology::Complete);
+        assert_eq!(Topology::parse("exp").unwrap(), Topology::Exponential);
+        assert_eq!(
+            Topology::parse("torus:4x8").unwrap(),
+            Topology::Torus { rows: 4, cols: 8 }
+        );
+        assert!(Topology::parse("nope").is_err());
+        assert!(Topology::parse("torus:4").is_err());
+    }
+}

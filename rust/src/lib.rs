@@ -1,0 +1,41 @@
+//! # A²CiD² — Accelerating Asynchronous Communication in Decentralized Deep Learning
+//!
+//! A from-scratch reproduction of the paper's full system as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the decentralized asynchronous training
+//!   runtime: per-worker gradient & communication threads (the paper's
+//!   Algorithm 1), a FIFO availability-queue pairing coordinator, the
+//!   continuous-momentum gossip dynamics, and a virtual-time discrete-event
+//!   simulator that runs the same dynamics at large worker counts.
+//! * **Layer 2** — JAX training-step graphs (MLP classifier, transformer LM)
+//!   over flattened parameter vectors, AOT-lowered to HLO text in
+//!   `python/compile/model.py` and executed here through PJRT
+//!   ([`runtime::pjrt`]).
+//! * **Layer 1** — the fused A²CiD² mixing/update Pallas kernel
+//!   (`python/compile/kernels/acid_mix.py`), lowered into the same HLO.
+//!
+//! The public surface is organized bottom-up: substrates ([`rng`],
+//! [`linalg`], [`graph`], [`data`], [`model`], [`optim`], [`metrics`],
+//! [`config`]), the paper's algorithm ([`gossip`]), and two execution
+//! engines ([`simulator`] for virtual time, [`runtime`] for real threads +
+//! PJRT). [`experiments`] maps every table and figure of the paper to a
+//! runnable driver.
+
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod gossip;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod testing;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

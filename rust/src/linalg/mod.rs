@@ -1,0 +1,342 @@
+//! Minimal dense linear algebra substrate: symmetric eigendecomposition
+//! (cyclic Jacobi) and Moore–Penrose pseudoinverse, used to compute the
+//! paper's graph functionals χ₁ (inverse algebraic connectivity, Eq. 2)
+//! and χ₂ (maximal effective resistance, Eq. 3) from the rate-weighted
+//! Laplacian Λ.
+//!
+//! No external linear-algebra crates are reachable offline, so this is a
+//! self-contained implementation sized for `n ≤ ~2048` workers (Jacobi is
+//! O(n³) per sweep and unconditionally stable for symmetric matrices).
+
+/// A dense row-major `n × n` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// The `n × n` zero matrix.
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    /// The `n × n` identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(n: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    /// Matrix-matrix product `self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.n, |i, j| self[(j, i)])
+    }
+
+    /// Maximum absolute off-diagonal entry (Jacobi convergence criterion).
+    pub fn max_offdiag(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    m = m.max(self[(i, j)].abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Check symmetry up to `tol`.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            for j in i + 1..self.n {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n + j]
+    }
+}
+
+/// Result of a symmetric eigendecomposition `A = V diag(w) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// `values[k]`'s eigenvector is column `k` of `vectors` (row-major).
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi eigensolver for symmetric matrices.
+///
+/// Sweeps all off-diagonal pairs with Givens rotations until the largest
+/// off-diagonal entry falls below `1e-12 * max|A|`, then sorts eigenpairs
+/// ascending. Panics if `a` is not symmetric.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert!(a.is_symmetric(1e-9), "sym_eig on non-symmetric matrix");
+    let n = a.n;
+    let mut m = a.clone();
+    let mut v = Matrix::identity(n);
+    let scale: f64 = m
+        .data
+        .iter()
+        .fold(0.0f64, |acc, &x| acc.max(x.abs()))
+        .max(1e-300);
+    let tol = 1e-13 * scale;
+    const MAX_SWEEPS: usize = 100;
+
+    for _sweep in 0..MAX_SWEEPS {
+        if m.max_offdiag() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Rotation angle: tan(2θ) = 2 a_pq / (a_pp - a_qq)
+                let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
+                let (s, c) = theta.sin_cos();
+                // Apply rotation G(p,q,θ)ᵀ M G(p,q,θ) in place.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp + s * mkq;
+                    m[(k, q)] = -s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk + s * mqk;
+                    m[(q, k)] = -s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp + s * vkq;
+                    v[(k, q)] = -s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(w, _)| w).collect();
+    let mut vectors = Matrix::zeros(n);
+    for (newcol, &(_, oldcol)) in pairs.iter().enumerate() {
+        for k in 0..n {
+            vectors[(k, newcol)] = v[(k, oldcol)];
+        }
+    }
+    SymEig { values, vectors }
+}
+
+/// Moore–Penrose pseudoinverse of a symmetric PSD matrix via its
+/// eigendecomposition: eigenvalues below `rcond * λ_max` are treated as
+/// zero (the Laplacian of a connected graph has exactly one).
+pub fn sym_pinv(a: &Matrix, rcond: f64) -> Matrix {
+    let eig = sym_eig(a);
+    let n = a.n;
+    let wmax = eig
+        .values
+        .iter()
+        .fold(0.0f64, |acc, &w| acc.max(w.abs()));
+    let cut = rcond * wmax.max(1e-300);
+    let mut out = Matrix::zeros(n);
+    for k in 0..n {
+        let w = eig.values[k];
+        if w.abs() <= cut {
+            continue;
+        }
+        let inv = 1.0 / w;
+        for i in 0..n {
+            let vik = eig.vectors[(i, k)];
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += inv * vik * eig.vectors[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let mut m = Matrix::zeros(3);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = 1.0;
+        m[(2, 2)] = 2.0;
+        let e = sym_eig(&m);
+        assert!(approx(e.values[0], 1.0, 1e-10));
+        assert!(approx(e.values[1], 2.0, 1e-10));
+        assert!(approx(e.values[2], 3.0, 1e-10));
+    }
+
+    #[test]
+    fn eig_2x2_known() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3.
+        let m = Matrix::from_fn(2, |i, j| if i == j { 2.0 } else { 1.0 });
+        let e = sym_eig(&m);
+        assert!(approx(e.values[0], 1.0, 1e-10));
+        assert!(approx(e.values[1], 3.0, 1e-10));
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        // Random-ish symmetric matrix; check A = V W Vᵀ and VᵀV = I.
+        let n = 6;
+        let seed = std::cell::Cell::new(123u64);
+        let base = Matrix::from_fn(n, |_, _| {
+            let mut s = seed.get();
+            let v = crate::rng::splitmix64(&mut s);
+            seed.set(s);
+            (v % 1000) as f64 / 500.0 - 1.0
+        });
+        let a = Matrix::from_fn(n, |i, j| 0.5 * (base[(i, j)] + base[(j, i)]));
+        let e = sym_eig(&a);
+        // Orthonormality
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(approx(vtv[(i, j)], want, 1e-9), "VtV[{i},{j}]={}", vtv[(i, j)]);
+            }
+        }
+        // Reconstruction
+        let mut w = Matrix::zeros(n);
+        for k in 0..n {
+            w[(k, k)] = e.values[k];
+        }
+        let rec = e.vectors.matmul(&w).matmul(&e.vectors.transpose());
+        for i in 0..n {
+            for j in 0..n {
+                assert!(approx(rec[(i, j)], a[(i, j)], 1e-8));
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_of_laplacian_like() {
+        // Path graph P3 Laplacian; pinv must satisfy A A⁺ A = A and
+        // A⁺ 1 = 0 (kernel preserved).
+        let mut a = Matrix::zeros(3);
+        let edges = [(0usize, 1usize), (1, 2)];
+        for &(i, j) in &edges {
+            a[(i, i)] += 1.0;
+            a[(j, j)] += 1.0;
+            a[(i, j)] -= 1.0;
+            a[(j, i)] -= 1.0;
+        }
+        let p = sym_pinv(&a, 1e-10);
+        let apa = a.matmul(&p).matmul(&a);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(approx(apa[(i, j)], a[(i, j)], 1e-8));
+            }
+        }
+        let ones = vec![1.0; 3];
+        let y = p.matvec(&ones);
+        assert!(norm2(&y) < 1e-8, "pinv must kill the all-ones kernel");
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = Matrix::identity(4);
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    #[should_panic]
+    fn eig_rejects_asymmetric() {
+        let mut m = Matrix::zeros(2);
+        m[(0, 1)] = 1.0;
+        sym_eig(&m);
+    }
+}

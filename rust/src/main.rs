@@ -1,0 +1,190 @@
+//! `a2cid2` — the launcher.
+//!
+//! ```text
+//! a2cid2 train       [--config cfg.toml] [--workers N] [--topology T] ...
+//! a2cid2 spectrum    --topology ring --workers 64 [--rate 1.0]
+//! a2cid2 experiment  <fig1..fig7|tab1..tab6|all>
+//! a2cid2 timeline    [--workers 8] [--rounds 20]
+//! ```
+
+use a2cid2::cli::Cli;
+use a2cid2::config::{ExperimentConfig, Method, Task};
+use a2cid2::experiments::{self, Scale};
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::metrics::Table;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new("a2cid2", "asynchronous decentralized training with A2CiD2 momentum")
+        .opt("config", "TOML experiment config file", None)
+        .opt("workers", "number of workers", Some("8"))
+        .opt("topology", "complete|ring|exponential|star|path|hypercube|torus:RxC|erdos:p", Some("ring"))
+        .opt("method", "allreduce|baseline|a2cid2", Some("a2cid2"))
+        .opt("task", "cifar-like|imagenet-like", Some("cifar-like"))
+        .opt("rate", "p2p communications per gradient step", Some("1.0"))
+        .opt("steps", "gradient steps per worker", Some("500"))
+        .opt("lr", "base learning rate", Some("0.03"))
+        .opt("seed", "random seed", Some("0"))
+        .opt("rounds", "timeline rounds", Some("20"))
+        .opt("out", "CSV output path for curves", None)
+        .flag("full", "run experiments at paper scale (same as A2CID2_BENCH_FULL=1)")
+}
+
+fn real_main() -> a2cid2::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = cli();
+    if argv.is_empty() {
+        println!("{}", spec.usage());
+        println!("Subcommands: train | spectrum | experiment <id|all> | timeline");
+        return Ok(());
+    }
+    let args = spec.parse(&argv)?;
+    let scale = if args.has_flag("full") { Scale::Full } else { Scale::from_env() };
+
+    match args.command.as_deref() {
+        Some("train") => {
+            let cfg = build_config(&args)?;
+            println!(
+                "training: n={} topology={} method={} task={:?} rate={} steps={}",
+                cfg.n_workers,
+                cfg.topology.name(),
+                cfg.method.name(),
+                cfg.task,
+                cfg.comm_rate,
+                cfg.steps_per_worker
+            );
+            let out = experiments::train_once(&cfg)?;
+            let mut table = Table::new("result", &["metric", "value"]);
+            table.row(&["final train loss".into(), format!("{:.4}", out.final_loss)]);
+            if let Some(acc) = out.accuracy {
+                table.row(&["held-out accuracy".into(), format!("{:.2}%", 100.0 * acc)]);
+            }
+            table.row(&["virtual time".into(), format!("{:.1}", out.t_end)]);
+            table.row(&["total comms".into(), out.n_comms.to_string()]);
+            if let Some((c1, c2)) = out.chis {
+                table.row(&["chi1 / chi2".into(), format!("{c1:.2} / {c2:.2}")]);
+            }
+            table.print();
+            if let Some(path) = args.get("out") {
+                let mut rec = a2cid2::metrics::Recorder::new();
+                rec.series.push(out.loss.clone());
+                if let Some(c) = &out.consensus {
+                    rec.series.push(c.clone());
+                }
+                rec.write_csv(std::path::Path::new(path), 2000)?;
+                println!("curves written to {path}");
+            }
+        }
+        Some("spectrum") => {
+            let n: usize = args.get_parse("workers")?;
+            let topo = Topology::parse(args.get("topology").unwrap())?;
+            let rate: f64 = args.get_parse("rate")?;
+            let g = Graph::build(&topo, n)?;
+            let s = g.spectrum(rate);
+            let p = a2cid2::gossip::AcidParams::from_spectrum(&s);
+            let mut table = Table::new(
+                format!("{} graph, n={n}, rate={rate}", topo.name()),
+                &["quantity", "value"],
+            );
+            table.row(&["edges".into(), g.edges.len().to_string()]);
+            table.row(&["chi1 (Eq.2)".into(), format!("{:.3}", s.chi1)]);
+            table.row(&["chi2 (Eq.3)".into(), format!("{:.3}", s.chi2)]);
+            table.row(&["sqrt(chi1*chi2)".into(), format!("{:.3}", s.chi_acc())]);
+            table.row(&[
+                "comms per unit time Tr/2".into(),
+                format!("{:.1}", s.comms_per_unit_time()),
+            ]);
+            table.row(&["A2CiD2 eta".into(), format!("{:.4}", p.eta)]);
+            table.row(&["A2CiD2 alpha~".into(), format!("{:.4}", p.alpha_tilde)]);
+            table.print();
+        }
+        Some("experiment") => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("experiment needs an id (fig1..fig7, tab1..tab6, all)")
+                })?;
+            run_experiments(id, scale)?;
+        }
+        Some("timeline") => {
+            let n: usize = args.get_parse("workers")?;
+            let rounds: usize = args.get_parse("rounds")?;
+            for (name, is_async) in [("synchronous", false), ("asynchronous", true)] {
+                let s = a2cid2::simulator::simulate_timeline(n, rounds, 0.3, 0.15, is_async, 0);
+                println!(
+                    "{name}: utilization {:.1}%, idle {:.1}, wall {:.1}",
+                    100.0 * s.utilization,
+                    s.total_idle,
+                    s.t_end
+                );
+                print!("{}", a2cid2::simulator::trace::render_ascii(&s, 72));
+            }
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'\n\n{}", spec.usage()),
+        None => println!("{}", spec.usage()),
+    }
+    Ok(())
+}
+
+fn build_config(args: &a2cid2::cli::Args) -> a2cid2::Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_toml(&std::fs::read_to_string(path)?)?
+    } else {
+        ExperimentConfig::default()
+    };
+    // CLI overrides.
+    cfg.n_workers = args.get_parse("workers")?;
+    cfg.topology = Topology::parse(args.get("topology").unwrap())?;
+    cfg.method = Method::parse(args.get("method").unwrap())?;
+    cfg.task = Task::parse(args.get("task").unwrap())?;
+    cfg.comm_rate = args.get_parse("rate")?;
+    cfg.steps_per_worker = args.get_parse("steps")?;
+    cfg.base_lr = args.get_parse("lr")?;
+    cfg.seed = args.get_parse("seed")?;
+    cfg.validate()
+}
+
+fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
+    let print_all = |tables: Vec<Table>| {
+        for t in tables {
+            t.print();
+        }
+    };
+    let ids: Vec<&str> = if id == "all" {
+        vec![
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "tab3",
+            "tab4", "tab5", "tab6", "ablation",
+        ]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("=== {id} ===");
+        match id {
+            "fig1" => print_all(experiments::fig1::run(scale)?.1),
+            "fig2" => print_all(experiments::fig2::run(scale)?),
+            "fig3" => print_all(experiments::fig3::run(scale)?),
+            "fig4" => print_all(experiments::fig4::run(scale)?.1),
+            "fig5" => print_all(experiments::fig5::run(scale)?.1),
+            "fig6" => print_all(experiments::fig6::run(scale)?),
+            "fig7" => print_all(experiments::fig7::run(scale)?),
+            "tab1" => print_all(experiments::tab1::run(scale)?.1),
+            "tab2" => print_all(experiments::tab2::run(scale)?.1),
+            "tab3" => print_all(experiments::tab3::run(scale)?.1),
+            "tab4" => print_all(experiments::tab4::run(scale)?),
+            "tab5" => print_all(experiments::tab5::run(scale)?),
+            "tab6" => print_all(experiments::tab6::run(scale)?.1),
+            "ablation" => print_all(experiments::ablation::run(scale)?.1),
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+    }
+    Ok(())
+}

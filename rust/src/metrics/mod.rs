@@ -1,0 +1,290 @@
+//! Metrics recording: time-series, summary statistics, CSV output.
+//!
+//! No serde offline, so serialization is plain hand-rolled CSV — which is
+//! also what the paper-figure regeneration scripts consume.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A named time-series of `(t, value)` points.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Mean of the values in the final `frac` fraction of the time axis
+    /// (used to report "final loss" robustly against event noise).
+    pub fn tail_mean(&self, frac: f64) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let t_end = self.points.last().unwrap().0;
+        let t_cut = t_end * (1.0 - frac);
+        let tail: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|(t, _)| *t >= t_cut)
+            .map(|(_, v)| *v)
+            .collect();
+        if tail.is_empty() {
+            return self.points.last().unwrap().1;
+        }
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// First time the series drops (and stays, for one sample) below `thr`;
+    /// None if it never does. Used for time-to-ε measurements (Tab. 1).
+    pub fn first_time_below(&self, thr: f64) -> Option<f64> {
+        self.points.iter().find(|(_, v)| *v < thr).map(|(t, _)| *t)
+    }
+
+    /// Down-sample to at most `max_points` by uniform stride (for CSV dumps).
+    pub fn downsample(&self, max_points: usize) -> Series {
+        if self.points.len() <= max_points || max_points == 0 {
+            return self.clone();
+        }
+        let stride = self.points.len().div_ceil(max_points);
+        Series {
+            name: self.name.clone(),
+            points: self.points.iter().step_by(stride).copied().collect(),
+        }
+    }
+}
+
+/// A recorder holding many series keyed by name.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub series: Vec<Series>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a series by name.
+    pub fn series_mut(&mut self, name: &str) -> &mut Series {
+        if let Some(pos) = self.series.iter().position(|s| s.name == name) {
+            return &mut self.series[pos];
+        }
+        self.series.push(Series::new(name));
+        self.series.last_mut().unwrap()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    pub fn record(&mut self, name: &str, t: f64, v: f64) {
+        self.series_mut(name).push(t, v);
+    }
+
+    /// Write all series as long-format CSV: `series,t,value`.
+    pub fn write_csv(&self, path: &Path, max_points_per_series: usize) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "series,t,value")?;
+        for s in &self.series {
+            for (t, v) in s.downsample(max_points_per_series).points {
+                writeln!(f, "{},{t},{v}", s.name)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn of(values: &[f64]) -> Stats {
+        if values.is_empty() {
+            return Stats::default();
+        }
+        let n = values.len();
+        let mean = values.iter().sum::<f64>() / n as f64;
+        let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: values.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: values.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Format as `mean ± std` with the given precision, like the paper's
+    /// tables.
+    pub fn pm(&self, digits: usize) -> String {
+        format!("{:.d$}±{:.d$}", self.mean, self.std, d = digits)
+    }
+}
+
+/// Quantile of a sample (linear interpolation, `q` in [0,1]).
+pub fn quantile(values: &[f64], q: f64) -> f64 {
+    assert!(!values.is_empty());
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Simple fixed-width table printer used by every bench to mirror the
+/// paper's tables.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                widths[c] = widths[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for c in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[c], w = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_tail_mean_and_threshold() {
+        let mut s = Series::new("loss");
+        for i in 0..100 {
+            s.push(i as f64, 100.0 - i as f64);
+        }
+        assert!(s.tail_mean(0.1) < 10.0);
+        assert_eq!(s.first_time_below(50.0), Some(51.0));
+        assert_eq!(s.first_time_below(-1.0), None);
+    }
+
+    #[test]
+    fn downsample_bounds() {
+        let mut s = Series::new("x");
+        for i in 0..1000 {
+            s.push(i as f64, 0.0);
+        }
+        let d = s.downsample(100);
+        assert!(d.points.len() <= 100);
+        assert_eq!(d.points[0].0, 0.0);
+    }
+
+    #[test]
+    fn stats_known_values() {
+        let st = Stats::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(st.n, 4);
+        assert!((st.mean - 2.5).abs() < 1e-12);
+        assert!((st.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 4.0);
+        assert_eq!(st.pm(1), "2.5±1.3");
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 5.0);
+        assert_eq!(quantile(&v, 0.5), 3.0);
+        assert_eq!(quantile(&v, 0.25), 2.0);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut r = Recorder::new();
+        r.record("a", 0.0, 1.0);
+        r.record("a", 1.0, 2.0);
+        r.record("b", 0.5, -1.0);
+        let path = std::env::temp_dir().join("a2cid2_test_metrics.csv");
+        r.write_csv(&path, 1000).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,t,value\n"));
+        assert!(text.contains("a,0,1"));
+        assert!(text.contains("b,0.5,-1"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["col", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| long-name |"));
+    }
+}

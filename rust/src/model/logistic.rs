@@ -1,0 +1,176 @@
+//! Multinomial logistic regression (softmax + cross-entropy) over the
+//! Gaussian-mixture tasks — the convex classification workhorse of the
+//! mid-scale sweeps.
+
+use std::sync::Arc;
+
+use super::Model;
+use crate::data::Dataset;
+use crate::rng::Xoshiro256;
+
+/// Softmax regression: parameters are a row-major `n_classes × (dim + 1)`
+/// matrix (weights + bias column), flattened.
+#[derive(Clone)]
+pub struct Logistic {
+    pub data: Arc<Dataset>,
+    pub weight_decay: f32,
+}
+
+impl Logistic {
+    pub fn new(data: Arc<Dataset>, weight_decay: f32) -> Self {
+        Self { data, weight_decay }
+    }
+
+    fn n_classes(&self) -> usize {
+        self.data.n_classes
+    }
+
+    fn row(&self) -> usize {
+        self.data.dim + 1
+    }
+
+    /// Class logits for one example into `logits`.
+    fn logits(&self, params: &[f32], x: &[f32], logits: &mut [f32]) {
+        let row = self.row();
+        for (c, l) in logits.iter_mut().enumerate() {
+            let w = &params[c * row..(c + 1) * row];
+            let mut acc = w[self.data.dim]; // bias
+            for (wi, xi) in w[..self.data.dim].iter().zip(x) {
+                acc += wi * xi;
+            }
+            *l = acc;
+        }
+    }
+}
+
+/// Numerically-stable log-softmax in place; returns logsumexp.
+pub(crate) fn log_softmax(logits: &mut [f32]) -> f32 {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = max
+        + logits
+            .iter()
+            .map(|&l| (l - max).exp())
+            .sum::<f32>()
+            .ln();
+    for l in logits.iter_mut() {
+        *l -= lse;
+    }
+    lse
+}
+
+impl Model for Logistic {
+    fn dim(&self) -> usize {
+        self.n_classes() * self.row()
+    }
+
+    fn init_params(&self, _rng: &mut Xoshiro256) -> Vec<f32> {
+        vec![0.0; self.dim()]
+    }
+
+    fn loss_grad(&self, params: &[f32], idx: &[usize], grad: &mut [f32]) -> f32 {
+        let row = self.row();
+        let k = self.n_classes();
+        grad.fill(0.0);
+        let inv_b = 1.0 / idx.len().max(1) as f32;
+        let mut loss = 0.0f64;
+        let mut logits = vec![0.0f32; k];
+        for &i in idx {
+            let (x, y) = self.data.example(i);
+            self.logits(params, x, &mut logits);
+            log_softmax(&mut logits);
+            loss -= logits[y as usize] as f64;
+            for c in 0..k {
+                // dL/dlogit_c = p_c − 1{c == y}
+                let p = logits[c].exp() - if c as u32 == y { 1.0 } else { 0.0 };
+                let coeff = p * inv_b;
+                let g = &mut grad[c * row..(c + 1) * row];
+                for (gi, &xi) in g[..self.data.dim].iter_mut().zip(x) {
+                    *gi += coeff * xi;
+                }
+                g[self.data.dim] += coeff;
+            }
+        }
+        if self.weight_decay > 0.0 {
+            for (g, &w) in grad.iter_mut().zip(params) {
+                *g += self.weight_decay * w;
+            }
+        }
+        (loss * inv_b as f64) as f32
+    }
+
+    fn accuracy(&self, params: &[f32], idx: &[usize]) -> Option<f64> {
+        let k = self.n_classes();
+        let mut logits = vec![0.0f32; k];
+        let mut correct = 0usize;
+        for &i in idx {
+            let (x, y) = self.data.example(i);
+            self.logits(params, x, &mut logits);
+            let best = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if best as u32 == y {
+                correct += 1;
+            }
+        }
+        Some(correct as f64 / idx.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GaussianMixture;
+
+    fn setup() -> Logistic {
+        let ds = GaussianMixture { dim: 8, n_classes: 4, margin: 4.0, sigma: 1.0 }
+            .sample(300, 1);
+        Logistic::new(Arc::new(ds), 1e-4)
+    }
+
+    #[test]
+    fn initial_loss_is_log_k() {
+        let m = setup();
+        let idx: Vec<usize> = (0..300).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let p = m.init_params(&mut rng);
+        let l = m.eval_loss(&p, &idx);
+        assert!((l - (4.0f32).ln()).abs() < 1e-4, "loss={l}");
+    }
+
+    #[test]
+    fn gradient_finite_diff() {
+        let m = setup();
+        let idx: Vec<usize> = (0..64).collect();
+        super::super::finite_diff_check(&m, &idx, 5, 2e-2);
+    }
+
+    #[test]
+    fn sgd_reaches_high_accuracy() {
+        let m = setup();
+        let idx: Vec<usize> = (0..300).collect();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut w = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        for step in 0..400 {
+            let batch: Vec<usize> = (0..32).map(|_| rng.gen_range(300)).collect();
+            m.loss_grad(&w, &batch, &mut g);
+            let lr = 0.5 / (1.0 + step as f32 / 100.0);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= lr * gi;
+            }
+        }
+        let acc = m.accuracy(&w, &idx).unwrap();
+        assert!(acc > 0.9, "accuracy={acc}");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut l = vec![1.0f32, 2.0, 3.0];
+        log_softmax(&mut l);
+        let total: f32 = l.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,247 @@
+//! Two-layer MLP with manual backprop — the non-convex workhorse for the
+//! paper's ResNet experiments at simulator scale (DESIGN.md §3: the
+//! object of study is the decentralization gap, not the vision backbone).
+
+use std::sync::Arc;
+
+use super::logistic::log_softmax;
+use super::Model;
+use crate::data::Dataset;
+use crate::rng::{standard_normal, Xoshiro256};
+
+/// `dim → hidden (ReLU) → n_classes` classifier with softmax
+/// cross-entropy. Parameter layout (flat):
+/// `[W1 (hidden×dim), b1 (hidden), W2 (classes×hidden), b2 (classes)]`.
+#[derive(Clone)]
+pub struct Mlp {
+    pub data: Arc<Dataset>,
+    pub hidden: usize,
+    pub weight_decay: f32,
+}
+
+impl Mlp {
+    pub fn new(data: Arc<Dataset>, hidden: usize, weight_decay: f32) -> Self {
+        Self { data, hidden, weight_decay }
+    }
+
+    fn sizes(&self) -> (usize, usize, usize, usize) {
+        let d = self.data.dim;
+        let h = self.hidden;
+        let k = self.data.n_classes;
+        (h * d, h, k * h, k)
+    }
+
+    /// Forward pass for one example; fills `hid` (post-ReLU) and `logits`.
+    fn forward(&self, params: &[f32], x: &[f32], hid: &mut [f32], logits: &mut [f32]) {
+        let d = self.data.dim;
+        let h = self.hidden;
+        let k = self.data.n_classes;
+        let (s1, s2, s3, _) = self.sizes();
+        let w1 = &params[..s1];
+        let b1 = &params[s1..s1 + s2];
+        let w2 = &params[s1 + s2..s1 + s2 + s3];
+        let b2 = &params[s1 + s2 + s3..];
+        for j in 0..h {
+            let row = &w1[j * d..(j + 1) * d];
+            let mut acc = b1[j];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            hid[j] = acc.max(0.0);
+        }
+        for c in 0..k {
+            let row = &w2[c * h..(c + 1) * h];
+            let mut acc = b2[c];
+            for (wi, hi) in row.iter().zip(hid.iter()) {
+                acc += wi * hi;
+            }
+            logits[c] = acc;
+        }
+    }
+}
+
+impl Model for Mlp {
+    fn dim(&self) -> usize {
+        let (s1, s2, s3, s4) = self.sizes();
+        s1 + s2 + s3 + s4
+    }
+
+    fn init_params(&self, rng: &mut Xoshiro256) -> Vec<f32> {
+        // He init for the ReLU layer, Xavier-ish for the head, zero biases.
+        let d = self.data.dim;
+        let h = self.hidden;
+        let (s1, s2, s3, s4) = self.sizes();
+        let mut p = vec![0.0f32; s1 + s2 + s3 + s4];
+        let std1 = (2.0 / d as f64).sqrt();
+        for v in &mut p[..s1] {
+            *v = (standard_normal(rng) * std1) as f32;
+        }
+        let std2 = (1.0 / h as f64).sqrt();
+        for v in &mut p[s1 + s2..s1 + s2 + s3] {
+            *v = (standard_normal(rng) * std2) as f32;
+        }
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], idx: &[usize], grad: &mut [f32]) -> f32 {
+        let d = self.data.dim;
+        let h = self.hidden;
+        let k = self.data.n_classes;
+        let (s1, s2, s3, _) = self.sizes();
+        grad.fill(0.0);
+        let inv_b = 1.0 / idx.len().max(1) as f32;
+        let mut loss = 0.0f64;
+        let mut hid = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; k];
+        let mut dhid = vec![0.0f32; h];
+        let w2 = &params[s1 + s2..s1 + s2 + s3];
+        for &i in idx {
+            let (x, y) = self.data.example(i);
+            self.forward(params, x, &mut hid, &mut logits);
+            log_softmax(&mut logits);
+            loss -= logits[y as usize] as f64;
+            // Backprop.
+            dhid.fill(0.0);
+            {
+                let (gw2, rest) = grad[s1 + s2..].split_at_mut(s3);
+                let gb2 = rest;
+                for c in 0..k {
+                    let dl = (logits[c].exp() - if c as u32 == y { 1.0 } else { 0.0 }) * inv_b;
+                    gb2[c] += dl;
+                    let grow = &mut gw2[c * h..(c + 1) * h];
+                    let wrow = &w2[c * h..(c + 1) * h];
+                    for j in 0..h {
+                        grow[j] += dl * hid[j];
+                        dhid[j] += dl * wrow[j];
+                    }
+                }
+            }
+            {
+                let (gw1, rest) = grad[..s1 + s2].split_at_mut(s1);
+                let gb1 = rest;
+                for j in 0..h {
+                    if hid[j] <= 0.0 {
+                        continue; // ReLU gate
+                    }
+                    let dj = dhid[j];
+                    gb1[j] += dj;
+                    let grow = &mut gw1[j * d..(j + 1) * d];
+                    for (gi, &xi) in grow.iter_mut().zip(x) {
+                        *gi += dj * xi;
+                    }
+                }
+            }
+        }
+        if self.weight_decay > 0.0 {
+            // The paper (following Goyal et al.) skips weight decay on the
+            // batch-norm scale parameters; the analogue here is skipping
+            // the biases.
+            let (s1, s2, s3, _) = self.sizes();
+            for (pos, (g, &w)) in grad.iter_mut().zip(params).enumerate() {
+                let is_bias = (s1..s1 + s2).contains(&pos) || pos >= s1 + s2 + s3;
+                if !is_bias {
+                    *g += self.weight_decay * w;
+                }
+            }
+        }
+        (loss * inv_b as f64) as f32
+    }
+
+    fn accuracy(&self, params: &[f32], idx: &[usize]) -> Option<f64> {
+        let h = self.hidden;
+        let k = self.data.n_classes;
+        let mut hid = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; k];
+        let mut correct = 0usize;
+        for &i in idx {
+            let (x, y) = self.data.example(i);
+            self.forward(params, x, &mut hid, &mut logits);
+            let best = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if best as u32 == y {
+                correct += 1;
+            }
+        }
+        Some(correct as f64 / idx.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GaussianMixture;
+
+    fn setup() -> Mlp {
+        let ds = GaussianMixture { dim: 8, n_classes: 4, margin: 3.5, sigma: 1.0 }
+            .sample(400, 1);
+        Mlp::new(Arc::new(ds), 16, 0.0)
+    }
+
+    #[test]
+    fn dim_layout() {
+        let m = setup();
+        assert_eq!(m.dim(), 16 * 8 + 16 + 4 * 16 + 4);
+    }
+
+    #[test]
+    fn gradient_finite_diff() {
+        let m = setup();
+        let idx: Vec<usize> = (0..16).collect();
+        super::super::finite_diff_check(&m, &idx, 7, 5e-2);
+    }
+
+    #[test]
+    fn weight_decay_adds_to_weights_not_biases() {
+        // Weight decay follows PyTorch semantics: it enters the gradient,
+        // not the reported loss, so verify it algebraically:
+        // grad_wd − grad_plain == wd·w on weight coords and 0 on biases.
+        let ds = GaussianMixture { dim: 6, n_classes: 3, margin: 2.0, sigma: 1.0 }
+            .sample(100, 2);
+        let data = Arc::new(ds);
+        let wd = 1e-2f32;
+        let plain = Mlp::new(data.clone(), 8, 0.0);
+        let decayed = Mlp::new(data, 8, wd);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let params = plain.init_params(&mut rng);
+        let idx: Vec<usize> = (0..16).collect();
+        let mut g0 = vec![0.0f32; plain.dim()];
+        let mut g1 = vec![0.0f32; plain.dim()];
+        plain.loss_grad(&params, &idx, &mut g0);
+        decayed.loss_grad(&params, &idx, &mut g1);
+        let (s1, s2, s3, _) = decayed.sizes();
+        for c in 0..plain.dim() {
+            let is_bias = (s1..s1 + s2).contains(&c) || c >= s1 + s2 + s3;
+            let want = if is_bias { 0.0 } else { wd * params[c] };
+            assert!(
+                (g1[c] - g0[c] - want).abs() < 1e-6,
+                "coord {c}: delta {} vs {want}",
+                g1[c] - g0[c]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_the_mixture() {
+        let m = setup();
+        let all: Vec<usize> = (0..400).collect();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut w = m.init_params(&mut rng);
+        let mut g = vec![0.0f32; m.dim()];
+        let l0 = m.eval_loss(&w, &all);
+        for _ in 0..600 {
+            let batch: Vec<usize> = (0..32).map(|_| rng.gen_range(400)).collect();
+            m.loss_grad(&w, &batch, &mut g);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.1 * gi;
+            }
+        }
+        let l1 = m.eval_loss(&w, &all);
+        let acc = m.accuracy(&w, &all).unwrap();
+        assert!(l1 < 0.5 * l0, "{l0} -> {l1}");
+        assert!(acc > 0.85, "accuracy={acc}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Pure-Rust reference models for the simulator and benches.
+//!
+//! The L2 JAX models (MLP / transformer, `python/compile/model.py`) are the
+//! real request-path compute, executed through PJRT. The experiment
+//! harness, however, sweeps hundreds of (n, topology, rate, seed)
+//! configurations; for those we use equivalent pure-Rust models over the
+//! same flat-parameter convention so a sweep finishes in seconds. The
+//! integration tests pin the two implementations against each other
+//! through the shared [`Model`] interface (loss decreases, gradients pass
+//! finite-difference checks).
+
+mod logistic;
+mod mlp;
+mod quadratic;
+
+pub use logistic::Logistic;
+pub use mlp::Mlp;
+pub use quadratic::Quadratic;
+
+use crate::rng::Xoshiro256;
+
+/// A differentiable training objective over a flat `f32` parameter vector —
+/// the exact contract the AOT'd HLO training step exposes to Layer 3.
+pub trait Model: Send + Sync {
+    /// Number of parameters.
+    fn dim(&self) -> usize;
+
+    /// Initialize a parameter vector.
+    fn init_params(&self, rng: &mut Xoshiro256) -> Vec<f32>;
+
+    /// Mini-batch loss and gradient at `params` on dataset rows `idx`.
+    /// Writes the gradient into `grad` (len == dim) and returns the loss.
+    fn loss_grad(&self, params: &[f32], idx: &[usize], grad: &mut [f32]) -> f32;
+
+    /// Loss only (defaults to a gradient computation with a scratch buffer).
+    fn eval_loss(&self, params: &[f32], idx: &[usize]) -> f32 {
+        let mut scratch = vec![0.0f32; self.dim()];
+        self.loss_grad(params, idx, &mut scratch)
+    }
+
+    /// Classification accuracy on rows `idx` (None for regression tasks).
+    fn accuracy(&self, _params: &[f32], _idx: &[usize]) -> Option<f64> {
+        None
+    }
+}
+
+/// Central finite-difference gradient check used by each model's tests:
+/// compares `loss_grad` against `(f(x+εe) − f(x−εe)) / 2ε` on several
+/// random coordinates. Piecewise-linear activations (ReLU) make the loss
+/// non-smooth on a measure-zero set that finite differences can still
+/// straddle, so up to one of the sampled coordinates may exceed the
+/// tolerance; a systematic gradient bug fails many.
+#[cfg(test)]
+pub(crate) fn finite_diff_check(model: &dyn Model, idx: &[usize], seed: u64, tol: f64) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let params = model.init_params(&mut rng);
+    let mut grad = vec![0.0f32; model.dim()];
+    model.loss_grad(&params, idx, &mut grad);
+    let eps = 1e-3f32;
+    let coords: Vec<usize> = (0..12.min(model.dim()))
+        .map(|_| rng.gen_range(model.dim()))
+        .collect();
+    let mut failures = Vec::new();
+    for &c in &coords {
+        let mut plus = params.clone();
+        plus[c] += eps;
+        let mut minus = params.clone();
+        minus[c] -= eps;
+        let fd = (model.eval_loss(&plus, idx) as f64 - model.eval_loss(&minus, idx) as f64)
+            / (2.0 * eps as f64);
+        let an = grad[c] as f64;
+        let denom = an.abs().max(fd.abs()).max(1e-3);
+        if (fd - an).abs() / denom >= tol {
+            failures.push(format!("coord {c}: finite-diff {fd} vs analytic {an}"));
+        }
+    }
+    assert!(
+        failures.len() <= 1,
+        "{} of {} coords failed:\n{}",
+        failures.len(),
+        coords.len(),
+        failures.join("\n")
+    );
+}

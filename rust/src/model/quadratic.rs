@@ -1,0 +1,122 @@
+//! Strongly-convex quadratic objective (least squares), the setting where
+//! Prop. 3.6's strongly-convex rates — and therefore the χ₁ vs √(χ₁χ₂)
+//! scaling of Tab. 1 — are sharp.
+
+use std::sync::Arc;
+
+use super::Model;
+use crate::data::RegressionData;
+use crate::rng::Xoshiro256;
+
+/// Mini-batch least squares `f(w) = 1/(2|B|) Σ_{i∈B} (⟨w, x_i⟩ − y_i)²`
+/// plus an optional ridge term `λ/2·‖w‖²` that pins the strong-convexity
+/// constant μ ≥ λ.
+#[derive(Clone)]
+pub struct Quadratic {
+    pub data: Arc<RegressionData>,
+    pub ridge: f32,
+}
+
+impl Quadratic {
+    pub fn new(data: Arc<RegressionData>, ridge: f32) -> Self {
+        Self { data, ridge }
+    }
+
+    /// Excess distance to the generating weights, `‖w − w*‖²` (the paper's
+    /// `‖x̄_T − x*‖²` convergence measure).
+    pub fn dist_to_opt_sq(&self, params: &[f32]) -> f64 {
+        params
+            .iter()
+            .zip(&self.data.w_star)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum()
+    }
+}
+
+impl Model for Quadratic {
+    fn dim(&self) -> usize {
+        self.data.dim
+    }
+
+    fn init_params(&self, _rng: &mut Xoshiro256) -> Vec<f32> {
+        // Start at zero: identical on every worker, consistent with the
+        // paper's consensus-at-init All-Reduce.
+        vec![0.0; self.data.dim]
+    }
+
+    fn loss_grad(&self, params: &[f32], idx: &[usize], grad: &mut [f32]) -> f32 {
+        assert_eq!(grad.len(), self.data.dim);
+        grad.fill(0.0);
+        let inv_b = 1.0 / idx.len().max(1) as f32;
+        let mut loss = 0.0f64;
+        for &i in idx {
+            let (x, y) = self.data.example(i);
+            let pred: f32 = x.iter().zip(params).map(|(&a, &w)| a * w).sum();
+            let resid = pred - y;
+            loss += 0.5 * (resid as f64) * (resid as f64);
+            let coeff = resid * inv_b;
+            for (g, &xv) in grad.iter_mut().zip(x) {
+                *g += coeff * xv;
+            }
+        }
+        if self.ridge > 0.0 {
+            for (g, &w) in grad.iter_mut().zip(params) {
+                *g += self.ridge * w;
+            }
+            loss += 0.5
+                * self.ridge as f64
+                * params.iter().map(|&w| (w as f64) * (w as f64)).sum::<f64>();
+        }
+        (loss * inv_b as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LinearRegression;
+
+    fn setup() -> Quadratic {
+        let data = LinearRegression { dim: 8, noise: 0.1 }.sample(200, 1);
+        Quadratic::new(Arc::new(data), 1e-3)
+    }
+
+    #[test]
+    fn gradient_finite_diff() {
+        let q = setup();
+        let idx: Vec<usize> = (0..32).collect();
+        super::super::finite_diff_check(&q, &idx, 3, 2e-2);
+    }
+
+    #[test]
+    fn zero_loss_at_w_star_noiseless() {
+        let data = LinearRegression { dim: 4, noise: 0.0 }.sample(64, 2);
+        let w_star = data.w_star.clone();
+        let q = Quadratic::new(Arc::new(data), 0.0);
+        let idx: Vec<usize> = (0..64).collect();
+        assert!(q.eval_loss(&w_star, &idx) < 1e-6);
+        assert!(q.dist_to_opt_sq(&w_star) < 1e-12);
+    }
+
+    #[test]
+    fn gd_converges() {
+        let q = setup();
+        let idx: Vec<usize> = (0..200).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut w = q.init_params(&mut rng);
+        let mut g = vec![0.0f32; q.dim()];
+        let l0 = q.eval_loss(&w, &idx);
+        for _ in 0..200 {
+            q.loss_grad(&w, &idx, &mut g);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.1 * gi;
+            }
+        }
+        let l1 = q.eval_loss(&w, &idx);
+        assert!(l1 < 0.05 * l0, "{l0} -> {l1}");
+        assert!(q.dist_to_opt_sq(&w) < 0.1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Samplers over [`Xoshiro256`]: Normal (Box–Muller), Exponential
+//! (inverse CDF), Poisson (Knuth for small mean, PTRS transformed
+//! rejection for large mean).
+
+use super::Xoshiro256;
+
+/// Normal distribution `N(mean, std²)` sampled via Box–Muller (the spare
+/// variate is cached so consecutive draws cost one transcendental pair per
+/// two samples).
+#[derive(Clone, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "negative std");
+        Self { mean, std, spare: None }
+    }
+
+    /// Draw one sample.
+    pub fn sample(&mut self, rng: &mut Xoshiro256) -> f64 {
+        let z = if let Some(z) = self.spare.take() {
+            z
+        } else {
+            // Box–Muller: u1 in (0,1] to avoid ln(0).
+            let u1 = 1.0 - rng.next_f64();
+            let u2 = rng.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            r * theta.cos()
+        };
+        self.mean + self.std * z
+    }
+}
+
+/// Standard normal draw without carrying sampler state.
+pub fn standard_normal(rng: &mut Xoshiro256) -> f64 {
+    let u1 = 1.0 - rng.next_f64();
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Exponential distribution with rate `lambda` (mean `1/lambda`), the
+/// inter-arrival law of the paper's Poisson point processes
+/// (Assumption 3.2).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "exponential rate must be positive, got {rate}");
+        Self { rate }
+    }
+
+    /// Draw one inter-arrival time.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        // Inverse CDF; 1-u in (0,1] avoids ln(0).
+        -(1.0 - rng.next_f64()).ln() / self.rate
+    }
+}
+
+/// Poisson distribution with mean `lambda`. Used by the runtime to draw
+/// "number of p2p averagings between two gradient steps" exactly as the
+/// paper's implementation does (Sec. 4.1).
+#[derive(Clone, Copy, Debug)]
+pub struct Poisson {
+    pub lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda >= 0.0, "poisson mean must be non-negative, got {lambda}");
+        Self { lambda }
+    }
+
+    /// Draw one count.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        if self.lambda == 0.0 {
+            return 0;
+        }
+        if self.lambda < 30.0 {
+            self.sample_knuth(rng)
+        } else {
+            self.sample_ptrs(rng)
+        }
+    }
+
+    /// Knuth's product-of-uniforms method, O(lambda).
+    fn sample_knuth(&self, rng: &mut Xoshiro256) -> u64 {
+        let l = (-self.lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Hörmann's PTRS transformed-rejection sampler, O(1) for large mean.
+    fn sample_ptrs(&self, rng: &mut Xoshiro256) -> u64 {
+        let lam = self.lambda;
+        let log_lam = lam.ln();
+        let b = 0.931 + 2.53 * lam.sqrt();
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = rng.next_f64() - 0.5;
+            let v = rng.next_f64();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lam + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            if (v * inv_alpha / (a / (us * us) + b)).ln()
+                <= k * log_lam - lam - ln_factorial(k as u64)
+            {
+                return k as u64;
+            }
+        }
+    }
+}
+
+/// `ln(k!)` via Stirling's series for large k, exact table for small k.
+fn ln_factorial(k: u64) -> f64 {
+    const TABLE: [f64; 10] = [
+        0.0,
+        0.0,
+        0.693147180559945,
+        1.791759469228055,
+        3.178053830347946,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.604602902745251,
+        12.801827480081469,
+    ];
+    if (k as usize) < TABLE.len() {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    // Stirling series for ln Gamma(x).
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut d = Normal::new(2.0, 3.0);
+        let samples: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, var) = moments(&samples);
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let d = Exponential::new(4.0);
+        let samples: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng)).collect();
+        let (mean, var) = moments(&samples);
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+        assert!((var - 0.0625).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn exponential_positive() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let d = Exponential::new(0.1);
+        for _ in 0..1000 {
+            assert!(d.sample(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_small_mean_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let d = Poisson::new(1.5);
+        let samples: Vec<f64> = (0..200_000).map(|_| d.sample(&mut rng) as f64).collect();
+        let (mean, var) = moments(&samples);
+        assert!((mean - 1.5).abs() < 0.03, "mean={mean}");
+        assert!((var - 1.5).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_large_mean_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let d = Poisson::new(100.0);
+        let samples: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng) as f64).collect();
+        let (mean, var) = moments(&samples);
+        assert!((mean - 100.0).abs() < 0.5, "mean={mean}");
+        assert!((var - 100.0).abs() < 3.0, "var={var}");
+    }
+
+    #[test]
+    fn poisson_zero_mean() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let d = Poisson::new(0.0);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let mut acc = 0.0f64;
+        for k in 1..30u64 {
+            acc += (k as f64).ln();
+            assert!((ln_factorial(k) - acc).abs() < 1e-7, "k={k}");
+        }
+    }
+}

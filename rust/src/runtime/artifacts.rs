@@ -1,0 +1,187 @@
+//! Artifact manifest: discovery and metadata for the AOT-compiled HLO
+//! modules produced by `python/compile/aot.py`.
+//!
+//! Format (one artifact per line, `#` comments):
+//! `name key=value key=value ...` — hand-rolled because serde is not
+//! reachable offline, and deliberately trivial to parse from any language.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata of one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// File name inside the artifact directory.
+    pub file: String,
+    /// `train_step`, `grad`, `eval`, `comm_step`, `init`, `kernel_*`.
+    pub kind: String,
+    pub fields: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Typed accessor for an integer field.
+    pub fn int(&self, key: &str) -> crate::Result<i64> {
+        self.fields
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{}' missing field '{key}'", self.name))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("artifact '{}' field '{key}': {e}", self.name))
+    }
+
+    /// Parameter dimension (present on all model/kernel artifacts).
+    pub fn param_dim(&self) -> crate::Result<usize> {
+        Ok(self.int("param_dim")? as usize)
+    }
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> crate::Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+                .to_string();
+            let mut fields = BTreeMap::new();
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("line {}: expected key=value, got '{kv}'", lineno + 1)
+                })?;
+                fields.insert(k.to_string(), v.to_string());
+            }
+            let file = fields
+                .get("file")
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' missing file="))?
+                .clone();
+            let kind = fields.get("kind").cloned().unwrap_or_default();
+            artifacts.push(ArtifactMeta { name, file, kind, fields });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest is empty");
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of an artifact's file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Load a `<model>_init.bin` raw f32 parameter vector.
+    pub fn load_init(&self, model: &str) -> crate::Result<Vec<f32>> {
+        let meta = self.get(&format!("{model}_init"))?;
+        let bytes = std::fs::read(self.path_of(meta))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "init file not a multiple of 4 bytes");
+        let params: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expected = meta.param_dim()?;
+        anyhow::ensure!(
+            params.len() == expected,
+            "init has {} params, manifest says {expected}",
+            params.len()
+        );
+        Ok(params)
+    }
+}
+
+/// Locate the artifact directory: `$A2CID2_ARTIFACTS` or `./artifacts`
+/// relative to the crate root / current dir.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("A2CID2_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+mlp_train_step file=mlp_train_step.hlo.txt kind=train_step model=mlp param_dim=2762 batch=16
+mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("mlp_train_step").unwrap();
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.param_dim().unwrap(), 2762);
+        assert_eq!(a.int("batch").unwrap(), 16);
+        assert!(a.int("missing").is_err());
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("x novalue\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("# only comments\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("x kind=grad\n", PathBuf::new()).is_err(), "missing file=");
+    }
+
+    #[test]
+    fn init_round_trip() {
+        let dir = std::env::temp_dir().join("a2cid2_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let values = [1.0f32, -2.5, 3.25, 0.0];
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("mlp_init.bin"), bytes).unwrap();
+        let m = Manifest::parse(SAMPLE, dir.clone()).unwrap();
+        let params = m.load_init("mlp").unwrap();
+        assert_eq!(params, values);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

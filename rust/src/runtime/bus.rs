@@ -1,0 +1,102 @@
+//! In-process p2p message bus — the stand-in for the paper's NCCL/Gloo
+//! point-to-point sends over Omni-Path (DESIGN.md §3).
+//!
+//! Each worker owns one inbox; a pairing exchanges exactly one parameter
+//! snapshot in each direction. An optional injected per-link delay models
+//! constrained bandwidth so topology effects stay observable in wall
+//! time.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// One half of a pairwise exchange.
+pub struct PairMsg {
+    pub from: usize,
+    /// The sender's parameters, already mixed to the event time.
+    pub data: Vec<f32>,
+}
+
+/// Sender side of the bus (cloneable, one per worker thread).
+#[derive(Clone)]
+pub struct BusHandle {
+    senders: Vec<mpsc::Sender<PairMsg>>,
+    /// Simulated link transfer delay applied before each send.
+    pub link_delay: Option<Duration>,
+}
+
+impl BusHandle {
+    /// Send `data` to worker `to`. Blocks for the injected link delay
+    /// (models transfer time on the sender's comm thread, which is
+    /// exactly where the paper's implementation pays it).
+    pub fn send(&self, to: usize, msg: PairMsg) -> crate::Result<()> {
+        if let Some(d) = self.link_delay {
+            std::thread::sleep(d);
+        }
+        self.senders[to]
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("worker {to} inbox closed"))
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+/// Build the bus: a cloneable handle plus one inbox receiver per worker.
+pub fn build_bus(
+    n: usize,
+    link_delay: Option<Duration>,
+) -> (BusHandle, Vec<mpsc::Receiver<PairMsg>>) {
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    (BusHandle { senders, link_delay }, receivers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let (bus, rxs) = build_bus(3, None);
+        bus.send(2, PairMsg { from: 0, data: vec![1.0, 2.0] }).unwrap();
+        bus.send(2, PairMsg { from: 1, data: vec![3.0] }).unwrap();
+        let m1 = rxs[2].recv().unwrap();
+        let m2 = rxs[2].recv().unwrap();
+        assert_eq!(m1.from, 0);
+        assert_eq!(m1.data, vec![1.0, 2.0]);
+        assert_eq!(m2.from, 1);
+        assert!(rxs[0].try_recv().is_err(), "no cross-talk");
+    }
+
+    #[test]
+    fn cross_thread_exchange() {
+        let (bus, mut rxs) = build_bus(2, None);
+        let rx1 = rxs.pop().unwrap();
+        let rx0 = rxs.pop().unwrap();
+        let bus2 = bus.clone();
+        let h = std::thread::spawn(move || {
+            bus2.send(0, PairMsg { from: 1, data: vec![7.0] }).unwrap();
+            rx1.recv().unwrap().data
+        });
+        bus.send(1, PairMsg { from: 0, data: vec![9.0] }).unwrap();
+        let got0 = rx0.recv().unwrap().data;
+        let got1 = h.join().unwrap();
+        assert_eq!(got0, vec![7.0]);
+        assert_eq!(got1, vec![9.0]);
+    }
+
+    #[test]
+    fn link_delay_is_applied() {
+        let (bus, rxs) = build_bus(2, Some(Duration::from_millis(20)));
+        let t0 = std::time::Instant::now();
+        bus.send(1, PairMsg { from: 0, data: vec![] }).unwrap();
+        rxs[1].recv().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+}

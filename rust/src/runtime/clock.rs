@@ -1,0 +1,94 @@
+//! Time normalization: wall clock → the paper's unit of "one gradient
+//! computation".
+//!
+//! The theoretical analysis normalizes time so each worker computes one
+//! mini-batch per unit time (Assumption 3.2); the implementation applies
+//! the A²CiD² mixing with *real* elapsed time, so the paper "maintains a
+//! running average measure of the duration of the previous gradient steps
+//! to normalize time" (Sec. 4.1). This is that running average.
+
+use std::time::Instant;
+
+/// Exponential running average of gradient durations, converting wall
+/// seconds into gradient-time units.
+#[derive(Debug)]
+pub struct TimeNormalizer {
+    start: Instant,
+    /// EMA of gradient duration in seconds.
+    avg_grad_secs: f64,
+    /// EMA smoothing (per sample).
+    beta: f64,
+    initialized: bool,
+}
+
+impl TimeNormalizer {
+    /// `initial_guess_secs` seeds the average before the first gradient
+    /// completes (any positive value; it washes out quickly).
+    pub fn new(initial_guess_secs: f64) -> Self {
+        Self {
+            start: Instant::now(),
+            avg_grad_secs: initial_guess_secs.max(1e-9),
+            beta: 0.9,
+            initialized: false,
+        }
+    }
+
+    /// Record one observed gradient duration.
+    pub fn record_grad(&mut self, secs: f64) {
+        let secs = secs.max(1e-9);
+        if self.initialized {
+            self.avg_grad_secs = self.beta * self.avg_grad_secs + (1.0 - self.beta) * secs;
+        } else {
+            self.avg_grad_secs = secs;
+            self.initialized = true;
+        }
+    }
+
+    /// Current time in gradient units.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() / self.avg_grad_secs
+    }
+
+    /// Convert a wall duration to gradient units.
+    pub fn to_units(&self, secs: f64) -> f64 {
+        secs / self.avg_grad_secs
+    }
+
+    /// The current average gradient duration estimate (seconds).
+    pub fn avg_grad_secs(&self) -> f64 {
+        self.avg_grad_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_replaces_guess() {
+        let mut tn = TimeNormalizer::new(100.0);
+        tn.record_grad(0.1);
+        assert!((tn.avg_grad_secs() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_tracks_changes() {
+        let mut tn = TimeNormalizer::new(1.0);
+        for _ in 0..100 {
+            tn.record_grad(0.2);
+        }
+        assert!((tn.avg_grad_secs() - 0.2).abs() < 1e-6);
+        for _ in 0..100 {
+            tn.record_grad(0.4);
+        }
+        assert!((tn.avg_grad_secs() - 0.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn units_conversion() {
+        let mut tn = TimeNormalizer::new(1.0);
+        tn.record_grad(0.5);
+        assert!((tn.to_units(1.0) - 2.0).abs() < 1e-9);
+        assert!(tn.now() >= 0.0);
+    }
+}

@@ -1,0 +1,301 @@
+//! The pairing coordinator — the paper's deadlock-free replacement for
+//! AD-PSGD's pseudo-random bipartite schedule (Sec. 2, Sec. 4.1).
+//!
+//! Workers that are ready to communicate (finished their previous
+//! averaging, still have budget before the next gradient step) declare
+//! themselves *available*; the coordinator keeps a FIFO availability
+//! queue and pairs an arriving worker with the **first** queued worker
+//! adjacent to it in the communication graph. Only worker *indices* flow
+//! through the coordinator — parameter payloads go peer-to-peer over the
+//! [`super::bus`] — which is the paper's "the coordinator only exchanges
+//! integers with the workers" lightweightness.
+//!
+//! Liveness argument (no deadlock, unlike AD-PSGD's locks): the queue
+//! never holds two adjacent workers (they would have been paired on
+//! arrival), so every queued worker's neighbors are each either (a)
+//! active — and will eventually arrive and pair with it, or (b)
+//! permanently departed — and on every departure the coordinator
+//! re-checks all waiters and releases those whose entire neighborhood has
+//! left. Queued waiters therefore always make progress.
+
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::graph::Graph;
+
+/// Messages from workers to the coordinator.
+pub enum CoordMsg {
+    /// Worker is ready for one pairwise averaging; the coordinator replies
+    /// on `reply` with `Some(peer)` or `None` (no possible partner ever
+    /// again — stop communicating).
+    Available { worker: usize, reply: mpsc::Sender<Option<usize>> },
+    /// Worker permanently leaves (its training and budget are exhausted).
+    Leave { worker: usize },
+}
+
+/// Pairing history: `counts[i][j]` = number of averagings between i and j
+/// (symmetric). Rendered as the Fig. 7 heat-map.
+#[derive(Clone, Debug)]
+pub struct PairingStats {
+    pub counts: Vec<Vec<u64>>,
+    pub total: u64,
+}
+
+impl PairingStats {
+    pub fn new(n: usize) -> Self {
+        Self { counts: vec![vec![0; n]; n], total: 0 }
+    }
+
+    fn record(&mut self, i: usize, j: usize) {
+        self.counts[i][j] += 1;
+        self.counts[j][i] += 1;
+        self.total += 1;
+    }
+
+    /// Per-worker totals.
+    pub fn per_worker(&self) -> Vec<u64> {
+        self.counts.iter().map(|row| row.iter().sum()).collect()
+    }
+
+    /// Coefficient of variation of the *edge* usage counts — the paper's
+    /// uniform-neighbor-selection check (Fig. 7): small means pairing is
+    /// close to uniform over the graph's edges.
+    pub fn edge_uniformity_cv(&self, graph: &Graph) -> f64 {
+        let counts: Vec<f64> = graph
+            .edges
+            .iter()
+            .map(|&(i, j)| self.counts[i][j] as f64)
+            .collect();
+        if counts.is_empty() {
+            return 0.0;
+        }
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var =
+            counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / counts.len() as f64;
+        var.sqrt() / mean
+    }
+
+    /// Render an ASCII heat-map (Fig. 7).
+    pub fn render_heatmap(&self) -> String {
+        let n = self.counts.len();
+        let max = self
+            .counts
+            .iter()
+            .flatten()
+            .cloned()
+            .max()
+            .unwrap_or(0)
+            .max(1) as f64;
+        const SHADES: [char; 5] = [' ', '.', ':', '*', '#'];
+        let mut out = String::new();
+        for i in 0..n {
+            for j in 0..n {
+                let frac = self.counts[i][j] as f64 / max;
+                let idx = ((frac * (SHADES.len() - 1) as f64).round() as usize)
+                    .min(SHADES.len() - 1);
+                out.push(SHADES[idx]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Spawn the coordinator thread. It exits (returning the pairing stats)
+/// once every worker has sent [`CoordMsg::Leave`].
+pub fn spawn_coordinator(
+    graph: std::sync::Arc<Graph>,
+) -> (mpsc::Sender<CoordMsg>, JoinHandle<PairingStats>) {
+    let (tx, rx) = mpsc::channel::<CoordMsg>();
+    let handle = std::thread::Builder::new()
+        .name("a2cid2-coordinator".into())
+        .spawn(move || coordinator_loop(&graph, rx))
+        .expect("spawn coordinator");
+    (tx, handle)
+}
+
+fn coordinator_loop(graph: &Graph, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
+    let n = graph.n;
+    let mut stats = PairingStats::new(n);
+    // FIFO availability queue: (worker, reply channel).
+    let mut queue: Vec<(usize, mpsc::Sender<Option<usize>>)> = Vec::new();
+    let mut left: HashSet<usize> = HashSet::new();
+
+    while left.len() < n {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // all worker handles dropped
+        };
+        match msg {
+            CoordMsg::Available { worker, reply } => {
+                debug_assert!(!left.contains(&worker), "available after leave");
+                // FIFO scan: pair with the first queued neighbor.
+                if let Some(pos) =
+                    queue.iter().position(|(q, _)| graph.has_edge(*q, worker))
+                {
+                    let (peer, peer_reply) = queue.remove(pos);
+                    stats.record(worker, peer);
+                    // Replies may fail if a worker died; ignore — the
+                    // partner's bus send will surface the error.
+                    let _ = peer_reply.send(Some(worker));
+                    let _ = reply.send(Some(peer));
+                } else if graph.neighbors[worker].iter().all(|nb| left.contains(nb)) {
+                    // No partner can ever arrive.
+                    let _ = reply.send(None);
+                } else {
+                    queue.push((worker, reply));
+                }
+            }
+            CoordMsg::Leave { worker } => {
+                if !left.insert(worker) {
+                    continue; // idempotent
+                }
+                queue.retain(|(q, _)| *q != worker);
+                // Release waiters whose whole neighborhood has departed.
+                let mut released = Vec::new();
+                queue.retain(|(q, reply)| {
+                    if graph.neighbors[*q].iter().all(|nb| left.contains(nb)) {
+                        released.push(reply.clone());
+                        false
+                    } else {
+                        true
+                    }
+                });
+                for r in released {
+                    let _ = r.send(None);
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use std::sync::Arc;
+
+    fn ring(n: usize) -> Arc<Graph> {
+        Arc::new(Graph::build(&Topology::Ring, n).unwrap())
+    }
+
+    fn available(
+        tx: &mpsc::Sender<CoordMsg>,
+        worker: usize,
+    ) -> mpsc::Receiver<Option<usize>> {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(CoordMsg::Available { worker, reply: rtx }).unwrap();
+        rrx
+    }
+
+    #[test]
+    fn adjacent_workers_get_paired_fifo() {
+        let (tx, handle) = spawn_coordinator(ring(4));
+        let r0 = available(&tx, 0);
+        // 2 is not adjacent to 0 on the 4-ring? ring(4): 0-1,1-2,2-3,0-3.
+        let r2 = available(&tx, 2);
+        // 1 is adjacent to both 0 and 2; FIFO pairs it with 0 (first).
+        let r1 = available(&tx, 1);
+        assert_eq!(r0.recv().unwrap(), Some(1));
+        assert_eq!(r1.recv().unwrap(), Some(0));
+        // 3 arrives, pairs with the waiting 2.
+        let r3 = available(&tx, 3);
+        assert_eq!(r2.recv().unwrap(), Some(3));
+        assert_eq!(r3.recv().unwrap(), Some(2));
+        for w in 0..4 {
+            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.total, 2);
+        assert_eq!(stats.counts[0][1], 1);
+        assert_eq!(stats.counts[2][3], 1);
+    }
+
+    #[test]
+    fn never_pairs_non_neighbors() {
+        let (tx, handle) = spawn_coordinator(ring(6));
+        // 0 and 3 are not adjacent on the 6-ring: both must wait.
+        let r0 = available(&tx, 0);
+        let r3 = available(&tx, 3);
+        assert!(r0.try_recv().is_err());
+        assert!(r3.try_recv().is_err());
+        // 1 pairs with 0 (not with 3).
+        let r1 = available(&tx, 1);
+        assert_eq!(r0.recv().unwrap(), Some(1));
+        assert_eq!(r1.recv().unwrap(), Some(0));
+        // 4 pairs with 3.
+        let r4 = available(&tx, 4);
+        assert_eq!(r3.recv().unwrap(), Some(4));
+        assert_eq!(r4.recv().unwrap(), Some(3));
+        for w in 0..6 {
+            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.counts[0][3], 0);
+    }
+
+    #[test]
+    fn waiter_released_when_neighborhood_leaves() {
+        let (tx, handle) = spawn_coordinator(ring(4));
+        let r0 = available(&tx, 0);
+        // 0's neighbors are 1 and 3; both leave → 0 gets None.
+        tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
+        tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
+        assert_eq!(r0.recv().unwrap(), None);
+        tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
+        tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn available_with_all_neighbors_gone_returns_none_immediately() {
+        let (tx, handle) = spawn_coordinator(ring(4));
+        tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
+        tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
+        let r0 = available(&tx, 0);
+        assert_eq!(r0.recv().unwrap(), None);
+        tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
+        tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn leave_is_idempotent_and_terminates() {
+        let (tx, handle) = spawn_coordinator(ring(3));
+        for _ in 0..3 {
+            for w in 0..3 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.total, 0);
+    }
+
+    #[test]
+    fn heatmap_and_uniformity() {
+        let g = ring(4);
+        let mut stats = PairingStats::new(4);
+        for _ in 0..10 {
+            stats.record(0, 1);
+            stats.record(1, 2);
+            stats.record(2, 3);
+            stats.record(0, 3);
+        }
+        assert_eq!(stats.total, 40);
+        assert!(stats.edge_uniformity_cv(&g) < 1e-9, "perfectly uniform");
+        let art = stats.render_heatmap();
+        assert_eq!(art.lines().count(), 4);
+        assert!(art.contains('#'));
+        // Skewed usage has larger CV.
+        stats.record(0, 1);
+        stats.record(0, 1);
+        assert!(stats.edge_uniformity_cv(&g) > 0.0);
+        // Row 0: 12 pairings with 1 + 10 with 3.
+        assert_eq!(stats.per_worker()[0], 22);
+    }
+}

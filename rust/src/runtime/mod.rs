@@ -1,0 +1,34 @@
+//! Real-thread asynchronous runtime — the paper's Algorithm 1 in Rust.
+//!
+//! Each of the `n` simulated cluster workers is a cell of two OS threads
+//! sharing a locked `{x, x̃, t_last}` state, exactly as the paper stores
+//! both buffers in shared memory so either process can update them at any
+//! time:
+//!
+//! * the **gradient thread** computes mini-batch gradients back-to-back
+//!   (through an AOT-compiled HLO executable via PJRT, or a pure-Rust
+//!   model) and applies the fused mixing + SGD update;
+//! * the **communication thread** draws its p2p budget from a Poisson law
+//!   (mean = the configured com/∇ rate, the paper's emulation of the
+//!   `M_t^ij` clocks), declares itself available to the
+//!   [`coordinator`], and performs pairwise averagings in parallel with
+//!   the gradient thread.
+//!
+//! The [`coordinator`] reproduces the paper's deadlock-free matching: a
+//! FIFO availability queue pairing the first two mutually-adjacent
+//! available workers (Sec. 4.1), with the pairing histogram of Fig. 7
+//! recorded on the side. Time is wall-clock normalized by a running
+//! average of gradient durations, as in the paper's implementation.
+
+pub mod artifacts;
+pub mod bus;
+pub mod clock;
+pub mod coordinator;
+pub mod pjrt;
+pub mod pjrt_grad;
+pub mod worker;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use clock::TimeNormalizer;
+pub use coordinator::PairingStats;
+pub use worker::{run_async, GradSource, RustGradSource, RuntimeOptions, RuntimeResult};

@@ -1,0 +1,145 @@
+//! PJRT wrapper: load AOT HLO-text artifacts and execute them from the
+//! Rust request path.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The artifacts are lowered with
+//! `return_tuple=True`, so results untuple into their output list.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::artifacts::Manifest;
+
+/// A PJRT client handle shared by all executables.
+///
+/// Thread-safety: the underlying XLA CPU PJRT client is documented
+/// thread-safe for compilation and execution; the raw-pointer Rust
+/// wrapper just doesn't carry the marker, so we assert it here and share
+/// one client across worker threads behind `Arc`.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: xla::PjRtClient wraps a C++ PjRtClient, which is thread-safe
+// for Compile/Execute/BufferFromHost per the PJRT API contract. We only
+// expose &self methods.
+unsafe impl Send for PjrtContext {}
+unsafe impl Sync for PjrtContext {}
+
+impl PjrtContext {
+    /// Create the CPU client.
+    pub fn cpu() -> crate::Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Arc::new(Self { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact file.
+    pub fn load_hlo_text(self: &Arc<Self>, path: &Path) -> crate::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            _ctx: Arc::clone(self),
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+
+    /// Load an artifact by manifest name.
+    pub fn load_artifact(self: &Arc<Self>, manifest: &Manifest, name: &str) -> crate::Result<Executable> {
+        let meta = manifest.get(name)?;
+        self.load_hlo_text(&manifest.path_of(meta))
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    _ctx: Arc<PjrtContext>,
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: see PjrtContext — PJRT loaded executables are thread-safe for
+// Execute; each worker thread owns its own Executable anyway.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow::anyhow!("{}: empty result", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        out.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 vector literal of shape `[len]`.
+pub fn lit_f32(values: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+/// f32 scalar literal (shape `[]`).
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// i32 matrix literal of shape `[rows, cols]`.
+pub fn lit_i32_matrix(values: &[i32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(values.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(values)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// f32 matrix literal of shape `[rows, cols]`.
+pub fn lit_f32_matrix(values: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(values.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(values)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Extract the single f32 of a scalar literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> crate::Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar f32: {e:?}"))
+}
+
+/// Copy a literal's f32 payload into an existing buffer (no allocation).
+pub fn copy_to_f32(lit: &xla::Literal, dst: &mut [f32]) -> crate::Result<()> {
+    lit.copy_raw_to(dst)
+        .map_err(|e| anyhow::anyhow!("copy_raw_to: {e:?}"))
+}

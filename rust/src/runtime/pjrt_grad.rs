@@ -1,0 +1,136 @@
+//! PJRT-backed gradient sources: the request-path compute runs through
+//! the AOT-compiled HLO artifacts (L2 model + L1 kernel), Python-free.
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, MarkovCorpus};
+use crate::rng::Xoshiro256;
+use crate::runtime::pjrt::{
+    copy_to_f32, lit_f32, lit_f32_matrix, lit_i32_matrix, to_scalar_f32, Executable,
+};
+use crate::runtime::worker::GradSource;
+
+/// Gradient source over the `mlp_grad` artifact:
+/// `(x, batch_x f32[B,D], batch_y i32[B]) -> (loss, grad)`.
+/// (`batch_y` is lowered as a `[B]` vector; reshape handles it.)
+pub struct MlpPjrtGradSource {
+    exe: Executable,
+    dataset: Arc<Dataset>,
+    shard: Vec<usize>,
+    batch: usize,
+    dim: usize,
+    cursor: usize,
+    rng: Xoshiro256,
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+}
+
+impl MlpPjrtGradSource {
+    pub fn new(
+        exe: Executable,
+        dataset: Arc<Dataset>,
+        shard: Vec<usize>,
+        batch: usize,
+        param_dim: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!shard.is_empty());
+        Self {
+            exe,
+            dataset,
+            shard,
+            batch,
+            dim: param_dim,
+            cursor: 0,
+            rng: Xoshiro256::seed_from_u64(seed),
+            xs: Vec::new(),
+            ys: Vec::new(),
+        }
+    }
+}
+
+impl GradSource for MlpPjrtGradSource {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> crate::Result<f32> {
+        self.xs.clear();
+        self.ys.clear();
+        for _ in 0..self.batch {
+            let jump = self.rng.gen_range(3);
+            self.cursor = (self.cursor + 1 + jump) % self.shard.len();
+            let (feat, label) = self.dataset.example(self.shard[self.cursor]);
+            self.xs.extend_from_slice(feat);
+            self.ys.push(label as i32);
+        }
+        let lx = lit_f32(x);
+        let lb = lit_f32_matrix(&self.xs, self.batch, self.dataset.dim)?;
+        let ly = xla::Literal::vec1(&self.ys);
+        let outs = self.exe.run(&[lx, lb, ly])?;
+        anyhow::ensure!(outs.len() == 2, "mlp_grad returns (loss, grad)");
+        let loss = to_scalar_f32(&outs[0])?;
+        copy_to_f32(&outs[1], out)?;
+        Ok(loss)
+    }
+}
+
+/// Gradient source over the `transformer_grad` artifact:
+/// `(x, tokens i32[B,S], targets i32[B,S]) -> (loss, grad)`.
+pub struct LmPjrtGradSource {
+    exe: Executable,
+    corpus: Arc<MarkovCorpus>,
+    batch: usize,
+    seq: usize,
+    dim: usize,
+    rng: Xoshiro256,
+    toks: Vec<u32>,
+    tgts: Vec<u32>,
+}
+
+impl LmPjrtGradSource {
+    pub fn new(
+        exe: Executable,
+        corpus: Arc<MarkovCorpus>,
+        batch: usize,
+        seq: usize,
+        param_dim: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            exe,
+            corpus,
+            batch,
+            seq,
+            dim: param_dim,
+            rng: Xoshiro256::seed_from_u64(seed),
+            toks: Vec::new(),
+            tgts: Vec::new(),
+        }
+    }
+}
+
+impl GradSource for LmPjrtGradSource {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> crate::Result<f32> {
+        self.corpus.sample_batch(
+            self.batch,
+            self.seq,
+            &mut self.rng,
+            &mut self.toks,
+            &mut self.tgts,
+        );
+        let to_i32 = |v: &[u32]| -> Vec<i32> { v.iter().map(|&t| t as i32).collect() };
+        let lx = lit_f32(x);
+        let lt = lit_i32_matrix(&to_i32(&self.toks), self.batch, self.seq)?;
+        let lg = lit_i32_matrix(&to_i32(&self.tgts), self.batch, self.seq)?;
+        let outs = self.exe.run(&[lx, lt, lg])?;
+        anyhow::ensure!(outs.len() == 2, "transformer_grad returns (loss, grad)");
+        let loss = to_scalar_f32(&outs[0])?;
+        copy_to_f32(&outs[1], out)?;
+        Ok(loss)
+    }
+}

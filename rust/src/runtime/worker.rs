@@ -1,0 +1,581 @@
+//! Worker cells and the runtime driver — Algorithm 1 of the paper.
+//!
+//! One cell per worker, two threads per cell (gradient + communication)
+//! over a shared, locked `{x, x̃, t_last}` state. Gradients are computed
+//! on a snapshot *outside* the lock so the communication thread averages
+//! in parallel — the decoupling that removes the paper's idle time. The
+//! update application itself holds the lock for one fused vector pass.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Method;
+use crate::gossip::dynamics::WorkerState;
+use crate::gossip::{consensus_of, AcidParams, Mixer};
+use crate::graph::Graph;
+use crate::metrics::Recorder;
+use crate::model::Model;
+use crate::optim::{LrSchedule, Sgd};
+use crate::rng::{Poisson, Xoshiro256};
+use crate::runtime::bus::{build_bus, BusHandle, PairMsg};
+use crate::runtime::coordinator::{spawn_coordinator, CoordMsg, PairingStats};
+
+/// A mini-batch gradient oracle. The runtime is agnostic to whether the
+/// compute runs through PJRT (the AOT HLO artifacts) or a pure-Rust model
+/// — both implement this.
+pub trait GradSource: Send {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+    /// Compute the next mini-batch loss and gradient at `x` into `out`.
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> crate::Result<f32>;
+}
+
+/// [`GradSource`] over a pure-Rust [`Model`] and a shard of example
+/// indices (used by tests and the mid-scale runtime experiments).
+pub struct RustGradSource {
+    pub model: Arc<dyn Model>,
+    pub shard: Vec<usize>,
+    pub batch_size: usize,
+    cursor: usize,
+    rng: Xoshiro256,
+    batch: Vec<usize>,
+    /// Optional artificial compute slowdown (straggler injection).
+    pub extra_delay: Option<Duration>,
+}
+
+impl RustGradSource {
+    pub fn new(model: Arc<dyn Model>, shard: Vec<usize>, batch_size: usize, seed: u64) -> Self {
+        assert!(!shard.is_empty(), "empty shard");
+        Self {
+            model,
+            shard,
+            batch_size,
+            cursor: 0,
+            rng: Xoshiro256::seed_from_u64(seed),
+            batch: Vec::new(),
+            extra_delay: None,
+        }
+    }
+}
+
+impl GradSource for RustGradSource {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> crate::Result<f32> {
+        if let Some(d) = self.extra_delay {
+            std::thread::sleep(d);
+        }
+        self.batch.clear();
+        for _ in 0..self.batch_size {
+            let jump = self.rng.gen_range(3);
+            self.cursor = (self.cursor + 1 + jump) % self.shard.len();
+            self.batch.push(self.shard[self.cursor]);
+        }
+        Ok(self.model.loss_grad(x, &self.batch, out))
+    }
+}
+
+/// Options for a runtime run.
+#[derive(Clone)]
+pub struct RuntimeOptions {
+    /// Expected p2p averagings per gradient step per worker.
+    pub comm_rate: f64,
+    /// Baseline vs A²CiD² (AllReduce is rejected here).
+    pub method: Method,
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    pub steps_per_worker: u64,
+    pub seed: u64,
+    /// Monitor sampling period for consensus/loss curves.
+    pub monitor_interval: Duration,
+    /// Injected per-link transfer delay.
+    pub link_delay: Option<Duration>,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        Self {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.05 },
+            momentum: 0.9,
+            steps_per_worker: 100,
+            seed: 0,
+            monitor_interval: Duration::from_millis(20),
+            link_delay: None,
+        }
+    }
+}
+
+/// Outcome of a runtime run.
+pub struct RuntimeResult {
+    /// `train_loss` (EMA across workers) and `consensus` vs wall seconds.
+    pub recorder: Recorder,
+    pub pairing: PairingStats,
+    pub grads_per_worker: Vec<u64>,
+    pub comms_per_worker: Vec<u64>,
+    pub wall_secs: f64,
+    /// Final states (mixed to their last event times).
+    pub workers: Vec<WorkerState>,
+    /// Network average of the final parameters.
+    pub avg_params: Vec<f32>,
+    /// The (η, α, α̃) applied.
+    pub acid: AcidParams,
+}
+
+/// Shared per-worker cell.
+struct Cell {
+    state: Mutex<WorkerState>,
+    /// Remaining p2p averagings before the next budget refill.
+    comm_budget: AtomicI64,
+    grads_done: AtomicU64,
+    comms_done: AtomicU64,
+    /// Gradient thread finished (no more budget will be added).
+    grad_done: AtomicBool,
+    /// Communication thread exited (budget drained or no partners left —
+    /// a worker released with leftover budget still counts as done).
+    comm_done: AtomicBool,
+    /// EMA of this worker's train loss (f64 bits).
+    loss_ema: AtomicU64,
+    /// EMA of gradient duration in nanoseconds (time normalization).
+    avg_grad_nanos: AtomicU64,
+}
+
+impl Cell {
+    fn store_loss(&self, v: f64) {
+        self.loss_ema.store(v.to_bits(), Ordering::Relaxed);
+    }
+    fn load_loss(&self) -> f64 {
+        f64::from_bits(self.loss_ema.load(Ordering::Relaxed))
+    }
+    /// Normalized time: wall seconds since `start` over the average
+    /// gradient duration (the paper's Sec. 4.1 normalization).
+    fn now(&self, start: Instant) -> f64 {
+        let avg = self.avg_grad_nanos.load(Ordering::Relaxed).max(1) as f64;
+        start.elapsed().as_nanos() as f64 / avg
+    }
+}
+
+/// Run the asynchronous runtime: `n = grad_sources.len()` workers over
+/// `graph`, starting from the shared `init` parameters.
+pub fn run_async(
+    graph: Arc<Graph>,
+    mut grad_sources: Vec<Box<dyn GradSource>>,
+    init: Vec<f32>,
+    opts: RuntimeOptions,
+) -> crate::Result<RuntimeResult> {
+    let n = graph.n;
+    anyhow::ensure!(grad_sources.len() == n, "need one grad source per worker");
+    anyhow::ensure!(opts.method != Method::AllReduce, "run_async is for async methods");
+    for s in &grad_sources {
+        anyhow::ensure!(s.dim() == init.len(), "grad source dim mismatch");
+    }
+
+    let spectrum = graph.spectrum(opts.comm_rate.max(1e-6));
+    let acid = match opts.method {
+        Method::Acid => AcidParams::from_spectrum(&spectrum),
+        _ => AcidParams::baseline(),
+    };
+    let mixer = Mixer::new(acid.eta);
+
+    let cells: Vec<Arc<Cell>> = (0..n)
+        .map(|_| {
+            Arc::new(Cell {
+                state: Mutex::new(WorkerState::new(init.clone())),
+                comm_budget: AtomicI64::new(0),
+                grads_done: AtomicU64::new(0),
+                comms_done: AtomicU64::new(0),
+                grad_done: AtomicBool::new(false),
+                comm_done: AtomicBool::new(false),
+                loss_ema: AtomicU64::new(f64::NAN.to_bits()),
+                // Seed the normalizer with 1ms; replaced by the first
+                // measured gradient.
+                avg_grad_nanos: AtomicU64::new(1_000_000),
+            })
+        })
+        .collect();
+
+    let (bus, mut inboxes) = build_bus(n, opts.link_delay);
+    let (coord_tx, coord_handle) = spawn_coordinator(graph.clone());
+    let start = Instant::now();
+
+    let mut grad_handles = Vec::new();
+    let mut comm_handles = Vec::new();
+    for w in (0..n).rev() {
+        let inbox = inboxes.pop().unwrap();
+        let src = grad_sources.pop().unwrap();
+        grad_handles.push(spawn_grad_thread(
+            w,
+            src,
+            cells[w].clone(),
+            mixer,
+            opts.clone(),
+            start,
+        ));
+        comm_handles.push(spawn_comm_thread(
+            w,
+            cells[w].clone(),
+            inbox,
+            bus.clone(),
+            coord_tx.clone(),
+            acid,
+            mixer,
+            start,
+        ));
+    }
+    drop(coord_tx);
+
+    // Monitor: sample consensus + mean loss until all gradient threads
+    // finish and all comm budgets drain.
+    let mut recorder = Recorder::new();
+    loop {
+        std::thread::sleep(opts.monitor_interval);
+        let t = start.elapsed().as_secs_f64();
+        let snapshots: Vec<Vec<f32>> =
+            cells.iter().map(|c| c.state.lock().unwrap().x.clone()).collect();
+        let consensus =
+            (consensus_of(snapshots.iter().map(|s| s.as_slice())) / n as f64).sqrt();
+        recorder.record("consensus", t, consensus);
+        let losses: Vec<f64> =
+            cells.iter().map(|c| c.load_loss()).filter(|v| v.is_finite()).collect();
+        if !losses.is_empty() {
+            recorder.record("train_loss", t, losses.iter().sum::<f64>() / losses.len() as f64);
+        }
+        let all_done = cells.iter().all(|c| {
+            c.grad_done.load(Ordering::Acquire) && c.comm_done.load(Ordering::Acquire)
+        });
+        if all_done {
+            break;
+        }
+    }
+
+    for h in grad_handles {
+        h.join().map_err(|_| anyhow::anyhow!("grad thread panicked"))??;
+    }
+    for h in comm_handles {
+        h.join().map_err(|_| anyhow::anyhow!("comm thread panicked"))??;
+    }
+    let pairing = coord_handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("coordinator panicked"))?;
+
+    // Sync all workers to a common final time and average (the paper's
+    // closing All-Reduce before evaluation).
+    let t_final = cells
+        .iter()
+        .map(|c| c.now(start))
+        .fold(0.0f64, f64::max);
+    let mut workers = Vec::with_capacity(n);
+    for c in &cells {
+        let mut st = c.state.lock().unwrap().clone();
+        st.mix_to(t_final, &mixer);
+        workers.push(st);
+    }
+    let avg_params = crate::gossip::consensus::average_params(&workers);
+    let wall_secs = start.elapsed().as_secs_f64();
+    recorder.record(
+        "consensus",
+        wall_secs,
+        crate::gossip::consensus_distance(&workers),
+    );
+
+    Ok(RuntimeResult {
+        recorder,
+        pairing,
+        grads_per_worker: cells.iter().map(|c| c.grads_done.load(Ordering::Relaxed)).collect(),
+        comms_per_worker: cells.iter().map(|c| c.comms_done.load(Ordering::Relaxed)).collect(),
+        wall_secs,
+        workers,
+        avg_params,
+        acid,
+    })
+}
+
+fn spawn_grad_thread(
+    w: usize,
+    mut src: Box<dyn GradSource>,
+    cell: Arc<Cell>,
+    mixer: Mixer,
+    opts: RuntimeOptions,
+    start: Instant,
+) -> std::thread::JoinHandle<crate::Result<()>> {
+    std::thread::Builder::new()
+        .name(format!("a2cid2-grad-{w}"))
+        .spawn(move || {
+            // The completion flag must be set on EVERY exit path (incl.
+            // gradient-source failures) or the monitor loop spins forever.
+            let result = grad_loop(w, &mut src, &cell, &mixer, &opts, start);
+            cell.grad_done.store(true, Ordering::Release);
+            result
+        })
+        .expect("spawn grad thread")
+}
+
+fn grad_loop(
+    w: usize,
+    src: &mut Box<dyn GradSource>,
+    cell: &Cell,
+    mixer: &Mixer,
+    opts: &RuntimeOptions,
+    start: Instant,
+) -> crate::Result<()> {
+    {
+            let mut opt = Sgd::new(opts.momentum);
+            let poisson = Poisson::new(opts.comm_rate);
+            let mut rng = Xoshiro256::seed_from_u64(opts.seed ^ (w as u64) << 20);
+            let dim = src.dim();
+            let mut gradbuf = vec![0.0f32; dim];
+            let mut snapshot = vec![0.0f32; dim];
+            for step in 0..opts.steps_per_worker {
+                let t0 = Instant::now();
+                // Gradient at a snapshot, outside the lock: the comm
+                // thread keeps averaging concurrently (the paper's
+                // decoupling; the resulting staleness is part of the
+                // modeled dynamic).
+                {
+                    let st = cell.state.lock().unwrap();
+                    snapshot.copy_from_slice(&st.x);
+                }
+                let loss = src.grad(&snapshot, &mut gradbuf)? as f64;
+                // Update the time normalization with this duration.
+                let dur = t0.elapsed().as_nanos() as u64;
+                let prev = cell.avg_grad_nanos.load(Ordering::Relaxed);
+                let ema = if step == 0 { dur.max(1) } else { (prev * 9 + dur) / 10 };
+                cell.avg_grad_nanos.store(ema.max(1), Ordering::Relaxed);
+
+                let lr = opts.lr.at(step) as f32;
+                let dir = opt.direction(&gradbuf);
+                {
+                    let mut st = cell.state.lock().unwrap();
+                    let t = cell.now(start);
+                    st.apply_grad(t, lr, dir, &mixer);
+                }
+                let prev_loss = cell.load_loss();
+                cell.store_loss(if prev_loss.is_finite() {
+                    0.95 * prev_loss + 0.05 * loss
+                } else {
+                    loss
+                });
+                cell.grads_done.fetch_add(1, Ordering::Relaxed);
+                // Refill the communication budget: Poisson(#com/#grad),
+                // exactly the paper's emulation of the M^ij clocks.
+                let quota = poisson.sample(&mut rng) as i64;
+                if quota > 0 {
+                    cell.comm_budget.fetch_add(quota, Ordering::Release);
+                }
+            }
+            Ok(())
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_comm_thread(
+    w: usize,
+    cell: Arc<Cell>,
+    inbox: mpsc::Receiver<PairMsg>,
+    bus: BusHandle,
+    coord: mpsc::Sender<CoordMsg>,
+    acid: AcidParams,
+    mixer: Mixer,
+    start: Instant,
+) -> std::thread::JoinHandle<crate::Result<()>> {
+    std::thread::Builder::new()
+        .name(format!("a2cid2-comm-{w}"))
+        .spawn(move || {
+            // Leave + the completion flag must fire on EVERY exit path
+            // (incl. bus errors), or the coordinator and monitor wait
+            // forever on this worker.
+            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &acid, &mixer, start);
+            let _ = coord.send(CoordMsg::Leave { worker: w });
+            cell.comm_done.store(true, Ordering::Release);
+            result
+        })
+        .expect("spawn comm thread")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn comm_loop(
+    w: usize,
+    cell: &Cell,
+    inbox: &mpsc::Receiver<PairMsg>,
+    bus: &BusHandle,
+    coord: &mpsc::Sender<CoordMsg>,
+    acid: &AcidParams,
+    mixer: &Mixer,
+    start: Instant,
+) -> crate::Result<()> {
+    {
+            // §Perf: the buffer received from each pairing is recycled as
+            // the next pairing's send buffer — zero steady-state
+            // allocation on the communication hot path.
+            let mut recycled: Option<Vec<f32>> = None;
+            loop {
+                if cell.comm_budget.load(Ordering::Acquire) <= 0 {
+                    if cell.grad_done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                }
+                // Declare availability and block for a partner.
+                let (reply_tx, reply_rx) = mpsc::channel();
+                if coord
+                    .send(CoordMsg::Available { worker: w, reply: reply_tx })
+                    .is_err()
+                {
+                    break; // coordinator gone (shutdown)
+                }
+                let peer = match reply_rx.recv() {
+                    Ok(Some(p)) => p,
+                    Ok(None) => break, // no partner can ever arrive
+                    Err(_) => break,
+                };
+                // Mix to the event time and snapshot under the lock, then
+                // exchange outside it (matches the paper's lock-per-buffer
+                // granularity).
+                let snapshot = {
+                    let mut st = cell.state.lock().unwrap();
+                    let t = cell.now(start);
+                    st.mix_to(t, &mixer);
+                    match recycled.take() {
+                        Some(mut buf) if buf.len() == st.x.len() => {
+                            buf.copy_from_slice(&st.x);
+                            buf
+                        }
+                        _ => st.x.clone(),
+                    }
+                };
+                bus.send(peer, PairMsg { from: w, data: snapshot })?;
+                let msg = inbox
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("worker {w}: inbox closed mid-pairing"))?;
+                anyhow::ensure!(
+                    msg.from == peer,
+                    "worker {w}: expected msg from {peer}, got {}",
+                    msg.from
+                );
+                {
+                    let mut st = cell.state.lock().unwrap();
+                    st.apply_comm(acid, &msg.data);
+                }
+                recycled = Some(msg.data);
+                cell.comms_done.fetch_add(1, Ordering::Relaxed);
+                cell.comm_budget.fetch_sub(1, Ordering::Release);
+            }
+            Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{GaussianMixture, Sharding};
+    use crate::graph::Topology;
+    use crate::model::Logistic;
+
+    fn sources(
+        n: usize,
+        model: &Arc<Logistic>,
+        shards: &crate::data::ShardedIndices,
+    ) -> Vec<Box<dyn GradSource>> {
+        (0..n)
+            .map(|w| {
+                Box::new(RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                )) as Box<dyn GradSource>
+            })
+            .collect()
+    }
+
+    fn run(n: usize, method: Method, steps: u64) -> (RuntimeResult, Arc<Logistic>) {
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }.sample(512, 2),
+        );
+        let shards = Sharding::FullShuffled.assign(&ds, n, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method,
+            lr: LrSchedule::Constant { lr: 0.05 },
+            momentum: 0.0,
+            steps_per_worker: steps,
+            seed: 0,
+            monitor_interval: Duration::from_millis(5),
+            link_delay: None,
+        };
+        let res = run_async(graph, sources(n, &model, &shards), init, opts).unwrap();
+        (res, model)
+    }
+
+    #[test]
+    fn trains_and_terminates() {
+        let (res, model) = run(4, Method::AsyncBaseline, 120);
+        assert_eq!(res.grads_per_worker, vec![120; 4]);
+        let idx: Vec<usize> = (0..512).collect();
+        let acc = model.accuracy(&res.avg_params, &idx).unwrap();
+        assert!(acc > 0.6, "acc={acc}");
+        // Communications happened and respected the topology.
+        assert!(res.pairing.total > 50, "total={}", res.pairing.total);
+        assert_eq!(res.pairing.counts[0][2], 0, "0-2 not adjacent on ring(4)");
+    }
+
+    #[test]
+    fn acid_method_runs() {
+        let (res, _) = run(4, Method::Acid, 60);
+        assert!(res.acid.is_accelerated());
+        assert!(res.comms_per_worker.iter().sum::<u64>() > 0);
+        let c = res.recorder.get("consensus").unwrap();
+        assert!(c.points.iter().all(|(_, v)| v.is_finite()));
+    }
+
+    #[test]
+    fn comm_counts_match_budgets() {
+        let (res, _) = run(3, Method::AsyncBaseline, 100);
+        // Each comm increments both endpoints' counters; the pairing total
+        // counts each pairing once.
+        let total: u64 = res.comms_per_worker.iter().sum();
+        assert_eq!(total, 2 * res.pairing.total);
+        // Poisson(1) per grad step: expect roughly one comm per grad.
+        let grads: u64 = res.grads_per_worker.iter().sum();
+        let ratio = total as f64 / grads as f64;
+        assert!((0.4..1.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn zero_comm_rate_still_terminates() {
+        let graph = Arc::new(Graph::build(&Topology::Ring, 3).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 1));
+        let shards = Sharding::FullShuffled.assign(&ds, 3, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 0.0,
+            method: Method::AsyncBaseline,
+            steps_per_worker: 30,
+            momentum: 0.0,
+            ..Default::default()
+        };
+        let srcs: Vec<Box<dyn GradSource>> = (0..3)
+            .map(|w| {
+                Box::new(RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                )) as Box<dyn GradSource>
+            })
+            .collect();
+        let res = run_async(graph, srcs, init, opts).unwrap();
+        assert_eq!(res.pairing.total, 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Synchronous All-Reduce SGD baseline (the paper's AR-SGD).
+//!
+//! Two aspects are modeled:
+//!
+//! 1. **Optimization**: classic synchronous data parallelism — every round
+//!    each worker computes one mini-batch gradient, gradients are averaged
+//!    exactly, everyone applies the same update. Effective batch = n·b
+//!    with the Goyal et al. scaled/warmed-up LR, matching the paper.
+//! 2. **Time**: a round costs `max_i(compute_i) + allreduce(n, bytes)` —
+//!    the barrier makes every round as slow as the slowest worker
+//!    (the Straggler Problem the async methods dodge, Tab. 3/6).
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::ShardedIndices;
+use crate::metrics::Recorder;
+use crate::model::Model;
+use crate::optim::{LrSchedule, Sgd};
+use crate::rng::{Normal, Xoshiro256};
+
+/// Cost model for one All-Reduce of the parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct ArTimingConfig {
+    /// Per-message latency (time units; 1.0 = one gradient computation).
+    pub latency: f64,
+    /// Transfer time for the full parameter vector between two nodes.
+    pub transfer: f64,
+}
+
+impl Default for ArTimingConfig {
+    fn default() -> Self {
+        // Cluster-like (100 Gb/s Omni-Path in the paper): one All-Reduce
+        // costs a small fraction of one gradient computation at moderate
+        // n; the barrier — not the transfer — dominates the AR penalty.
+        Self { latency: 0.002, transfer: 0.02 }
+    }
+}
+
+/// Ring All-Reduce round time: `2(n−1)` pipeline stages of latency plus
+/// `2(n−1)/n` of the full-vector transfer (the standard ring cost).
+pub fn allreduce_round_time(n: usize, timing: &ArTimingConfig) -> f64 {
+    let n = n as f64;
+    2.0 * (n - 1.0) * timing.latency + 2.0 * (n - 1.0) / n * timing.transfer
+}
+
+/// Result of a synchronous AR-SGD run.
+pub struct ArResult {
+    pub recorder: Recorder,
+    pub params: Vec<f32>,
+    /// Simulated wall time (straggler barrier + all-reduce per round).
+    pub t_end: f64,
+    pub rounds: u64,
+    /// Every worker performs exactly `rounds` gradient steps.
+    pub grads_per_worker: u64,
+}
+
+impl ArResult {
+    pub fn final_loss(&self) -> f64 {
+        self.recorder.get("train_loss").map(|s| s.tail_mean(0.1)).unwrap_or(f64::NAN)
+    }
+}
+
+/// Run synchronous AR-SGD with the same total sample budget as the
+/// asynchronous runs (`steps_per_worker` rounds, each consuming n batches).
+pub fn run_allreduce(
+    cfg: &ExperimentConfig,
+    model: Arc<dyn Model>,
+    shards: &ShardedIndices,
+    timing: &ArTimingConfig,
+) -> crate::Result<ArResult> {
+    let n = cfg.n_workers;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let mut params = model.init_params(&mut rng);
+    let mut opt = Sgd::new(cfg.momentum as f32);
+    let schedule = LrSchedule::paper_cifar_sqrt(cfg.base_lr, n, cfg.steps_per_worker);
+
+    // Fixed per-worker speeds, same straggler model as the async engine.
+    let mut speed_dist = Normal::new(1.0, cfg.compute_jitter);
+    let speeds: Vec<f64> = (0..n).map(|_| speed_dist.sample(&mut rng).max(0.2)).collect();
+    let mut round_noise = Normal::new(0.0, cfg.compute_jitter * 0.3);
+
+    let ar_time = allreduce_round_time(n, timing);
+    let mut recorder = Recorder::new();
+    let mut t = 0.0f64;
+    let mut cursors = vec![0usize; n];
+    let mut grad = vec![0.0f32; model.dim()];
+    let mut acc_grad = vec![0.0f32; model.dim()];
+    let mut batch = Vec::with_capacity(cfg.batch_size);
+    let mut loss_ema = f64::NAN;
+    let record_every = (cfg.steps_per_worker / 500).max(1);
+
+    for round in 0..cfg.steps_per_worker {
+        // --- gradient phase: average the n worker gradients exactly.
+        acc_grad.fill(0.0);
+        let mut round_loss = 0.0f64;
+        let mut slowest = 0.0f64;
+        for w in 0..n {
+            let shard = &shards.per_worker[w];
+            batch.clear();
+            for _ in 0..cfg.batch_size {
+                cursors[w] = (cursors[w] + 1) % shard.len();
+                batch.push(shard[cursors[w]]);
+            }
+            round_loss += model.loss_grad(&params, &batch, &mut grad) as f64;
+            for (a, &g) in acc_grad.iter_mut().zip(&grad) {
+                *a += g;
+            }
+            // Round duration for worker w: 1/speed + noise, barrier = max.
+            let dur = (1.0 / speeds[w] + round_noise.sample(&mut rng)).max(0.05);
+            slowest = slowest.max(dur);
+        }
+        let inv_n = 1.0 / n as f32;
+        for a in acc_grad.iter_mut() {
+            *a *= inv_n;
+        }
+        round_loss /= n as f64;
+
+        // --- update phase (identical on all replicas).
+        let lr = schedule.at(round) as f32;
+        let dir = opt.direction(&acc_grad);
+        for (p, &d) in params.iter_mut().zip(dir) {
+            *p -= lr * d;
+        }
+
+        t += slowest + ar_time;
+        loss_ema = if loss_ema.is_nan() {
+            round_loss
+        } else {
+            0.95 * loss_ema + 0.05 * round_loss
+        };
+        if round % record_every == 0 {
+            recorder.record("train_loss", t, loss_ema);
+            recorder.record("lr", t, lr as f64);
+        }
+    }
+
+    Ok(ArResult {
+        recorder,
+        params,
+        t_end: t,
+        rounds: cfg.steps_per_worker,
+        grads_per_worker: cfg.steps_per_worker,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Method, Task};
+    use crate::data::{GaussianMixture, Sharding};
+    use crate::graph::Topology;
+    use crate::model::Logistic;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            n_workers: 4,
+            topology: Topology::Complete,
+            method: Method::AllReduce,
+            task: Task::CifarLike,
+            comm_rate: 1.0,
+            batch_size: 8,
+            base_lr: 0.02,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            steps_per_worker: 120,
+            sharding: Sharding::FullShuffled,
+            dataset_size: 256,
+            seed: 4,
+            compute_jitter: 0.2,
+        }
+    }
+
+    #[test]
+    fn ar_converges() {
+        let c = cfg();
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }.sample(256, 2),
+        );
+        let shards = c.sharding.assign(&ds, c.n_workers, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let res = run_allreduce(&c, model.clone(), &shards, &ArTimingConfig::default()).unwrap();
+        let s = res.recorder.get("train_loss").unwrap();
+        let first = s.points.first().unwrap().1;
+        assert!(res.final_loss() < 0.6 * first);
+        let idx: Vec<usize> = (0..256).collect();
+        assert!(model.accuracy(&res.params, &idx).unwrap() > 0.7);
+    }
+
+    #[test]
+    fn round_time_scales_with_n() {
+        let t = ArTimingConfig::default();
+        assert!(allreduce_round_time(64, &t) > allreduce_round_time(8, &t));
+        assert!(allreduce_round_time(2, &t) > 0.0);
+    }
+
+    #[test]
+    fn wall_time_hurts_with_stragglers() {
+        // Same run, higher jitter ⇒ strictly larger simulated wall time.
+        let mut fast = cfg();
+        fast.compute_jitter = 0.0;
+        let mut slow = cfg();
+        slow.compute_jitter = 0.6;
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }.sample(256, 2),
+        );
+        let shards = fast.sharding.assign(&ds, fast.n_workers, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let t_fast = run_allreduce(&fast, model.clone(), &shards, &ArTimingConfig::default())
+            .unwrap()
+            .t_end;
+        let t_slow =
+            run_allreduce(&slow, model, &shards, &ArTimingConfig::default()).unwrap().t_end;
+        assert!(t_slow > t_fast, "{t_slow} vs {t_fast}");
+    }
+}

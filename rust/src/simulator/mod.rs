@@ -1,0 +1,21 @@
+//! Virtual-time discrete-event simulator.
+//!
+//! The paper's experiments sweep (n, topology, communication rate, method,
+//! seed) over dozens of configurations × up to 64 workers. Running every
+//! point through the real-thread runtime would be wall-clock-bound, so the
+//! experiment harness drives this engine instead: an *exact* simulation of
+//! the paper's event model (Assumption 3.2 — unit-rate Poisson gradient
+//! clocks per worker, rate-λ^ij Poisson clocks per edge) applying the very
+//! same [`crate::gossip::dynamics`] code the runtime uses. The real-thread
+//! runtime ([`crate::runtime`]) then validates the same dynamics under true
+//! asynchrony on a smaller grid.
+
+mod allreduce;
+pub mod engine;
+pub mod events;
+pub mod trace;
+
+pub use allreduce::{allreduce_round_time, run_allreduce, ArResult, ArTimingConfig};
+pub use engine::{run_simulation, SimResult};
+pub use events::{Event, EventKind, EventQueue};
+pub use trace::{simulate_timeline, TimelineStats};

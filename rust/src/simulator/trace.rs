@@ -1,0 +1,196 @@
+//! Worker-timeline traces and idle-time accounting (Fig. 2).
+//!
+//! The paper's Fig. 2 contrasts synchronous and asynchronous schedules:
+//! synchronous workers idle at every barrier waiting for the slowest peer
+//! and must serialize communication after computation, while asynchronous
+//! workers compute back-to-back and communicate *in parallel* (one p2p
+//! averaging per computation in expectation). This module regenerates that
+//! picture quantitatively: per-worker busy/idle segments and aggregate
+//! utilization for both schedules under the same speed heterogeneity.
+
+use crate::rng::{Normal, Poisson, Xoshiro256};
+
+/// One worker's timeline segments.
+#[derive(Clone, Debug)]
+pub struct WorkerTimeline {
+    /// `(start, end)` of gradient computations.
+    pub compute: Vec<(f64, f64)>,
+    /// `(start, end)` of idle (barrier) waits.
+    pub idle: Vec<(f64, f64)>,
+    /// `(start, end)` of communications that block compute (sync only).
+    pub blocking_comm: Vec<(f64, f64)>,
+}
+
+/// Aggregate utilization statistics.
+#[derive(Clone, Debug)]
+pub struct TimelineStats {
+    pub timelines: Vec<WorkerTimeline>,
+    /// Fraction of wall time spent computing, averaged over workers.
+    pub utilization: f64,
+    /// Total idle time across workers.
+    pub total_idle: f64,
+    /// Wall time of the traced window.
+    pub t_end: f64,
+    /// Gradient computations completed in the window.
+    pub n_grads: u64,
+    /// Pairwise communications in the window (async: in parallel).
+    pub n_comms: u64,
+}
+
+/// Simulate `rounds` of the synchronous schedule: compute → barrier →
+/// blocking All-Reduce, for `n` workers with speed jitter.
+pub fn simulate_timeline(
+    n: usize,
+    rounds: usize,
+    jitter: f64,
+    comm_time: f64,
+    asynchronous: bool,
+    seed: u64,
+) -> TimelineStats {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut speed = Normal::new(1.0, jitter);
+    let durations: Vec<f64> = (0..n).map(|_| speed.sample(&mut rng).max(0.2)).collect();
+    let mut timelines: Vec<WorkerTimeline> = (0..n)
+        .map(|_| WorkerTimeline {
+            compute: Vec::new(),
+            idle: Vec::new(),
+            blocking_comm: Vec::new(),
+        })
+        .collect();
+    let mut noise = Normal::new(0.0, jitter * 0.3);
+    let mut n_grads = 0u64;
+    let mut n_comms = 0u64;
+
+    let t_end = if asynchronous {
+        // Each worker computes back-to-back until a common horizon (the
+        // paper's fixed total sample budget: fast workers do more steps);
+        // the comm thread overlaps, so no idle is charged to the compute
+        // lane. Communications are drawn per gradient (Poisson, mean 1)
+        // as in the paper's implementation.
+        let horizon = rounds as f64; // ~rounds gradients at unit speed
+        let comms_per_grad = Poisson::new(1.0);
+        for (w, tl) in timelines.iter_mut().enumerate() {
+            let mut t = 0.0;
+            while t < horizon {
+                let d = (1.0 / durations[w] + noise.sample(&mut rng)).max(0.05);
+                let end = (t + d).min(horizon);
+                tl.compute.push((t, end));
+                t += d;
+                n_grads += 1;
+                n_comms += comms_per_grad.sample(&mut rng);
+            }
+        }
+        // Pairwise comms involve 2 workers each.
+        n_comms /= 2;
+        horizon
+    } else {
+        // Synchronous: per round, everyone waits for the slowest, then a
+        // blocking All-Reduce of length `comm_time`.
+        let mut t = 0.0f64;
+        for _ in 0..rounds {
+            let durs: Vec<f64> = (0..n)
+                .map(|w| (1.0 / durations[w] + noise.sample(&mut rng)).max(0.05))
+                .collect();
+            let slowest = durs.iter().cloned().fold(0.0, f64::max);
+            for (w, tl) in timelines.iter_mut().enumerate() {
+                tl.compute.push((t, t + durs[w]));
+                if durs[w] < slowest {
+                    tl.idle.push((t + durs[w], t + slowest));
+                }
+                tl.blocking_comm.push((t + slowest, t + slowest + comm_time));
+                n_grads += 1;
+            }
+            n_comms += n as u64; // ring all-reduce ≈ n messages per round
+            t += slowest + comm_time;
+        }
+        t
+    };
+
+    let busy: f64 = timelines
+        .iter()
+        .map(|tl| tl.compute.iter().map(|(s, e)| e - s).sum::<f64>())
+        .sum();
+    let total_idle: f64 = timelines
+        .iter()
+        .map(|tl| {
+            tl.idle.iter().map(|(s, e)| e - s).sum::<f64>()
+                + tl.blocking_comm.iter().map(|(s, e)| e - s).sum::<f64>()
+        })
+        .sum();
+    let utilization = if t_end > 0.0 { busy / (n as f64 * t_end) } else { 0.0 };
+
+    TimelineStats { timelines, utilization, total_idle, t_end, n_grads, n_comms }
+}
+
+/// Render a compact ASCII timeline (one row per worker, '#' compute,
+/// '.' idle, '~' blocking comm) — the textual Fig. 2.
+pub fn render_ascii(stats: &TimelineStats, width: usize) -> String {
+    let scale = width as f64 / stats.t_end.max(1e-9);
+    let mut out = String::new();
+    for (w, tl) in stats.timelines.iter().enumerate() {
+        let mut row = vec![' '; width];
+        let mut paint = |segs: &[(f64, f64)], c: char| {
+            for &(s, e) in segs {
+                let a = ((s * scale) as usize).min(width.saturating_sub(1));
+                let b = ((e * scale) as usize).min(width);
+                for cell in row[a..b].iter_mut() {
+                    *cell = c;
+                }
+            }
+        };
+        paint(&tl.compute, '#');
+        paint(&tl.idle, '.');
+        paint(&tl.blocking_comm, '~');
+        out.push_str(&format!("w{w:02} |{}|\n", row.into_iter().collect::<String>()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_has_higher_utilization_than_sync() {
+        let sync = simulate_timeline(8, 20, 0.3, 0.1, false, 1);
+        let asyn = simulate_timeline(8, 20, 0.3, 0.1, true, 1);
+        assert!(
+            asyn.utilization > sync.utilization,
+            "async {} vs sync {}",
+            asyn.utilization,
+            sync.utilization
+        );
+        // Async charges no idle to the compute lane at all.
+        assert_eq!(asyn.total_idle, 0.0);
+        assert!(sync.total_idle > 0.0);
+    }
+
+    #[test]
+    fn sync_rounds_have_barriers() {
+        let s = simulate_timeline(4, 5, 0.5, 0.05, false, 2);
+        // With jitter, at least one worker idles almost every round.
+        let idles: usize = s.timelines.iter().map(|t| t.idle.len()).sum();
+        assert!(idles >= 4, "idles={idles}");
+        assert_eq!(s.n_grads, 20);
+    }
+
+    #[test]
+    fn ascii_render_shapes() {
+        let s = simulate_timeline(3, 4, 0.2, 0.1, false, 3);
+        let art = render_ascii(&s, 40);
+        assert_eq!(art.lines().count(), 3);
+        assert!(art.contains('#'));
+        assert!(art.contains('~'));
+    }
+
+    #[test]
+    fn counts_scale_with_rounds() {
+        // Async runs to a common horizon of `rounds` time units; at unit
+        // mean speed each worker lands near `rounds` gradients.
+        let a = simulate_timeline(4, 10, 0.2, 0.1, true, 4);
+        assert!((25..=60).contains(&a.n_grads), "n_grads={}", a.n_grads);
+        // ~1 comm per grad in expectation, halved for pairing.
+        assert!(a.n_comms > 5 && a.n_comms < 60, "{}", a.n_comms);
+        assert!((a.t_end - 10.0).abs() < 1e-9);
+    }
+}

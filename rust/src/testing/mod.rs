@@ -1,0 +1,103 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` is not reachable offline (DESIGN.md §3), so this module
+//! provides the slice of it the test suite needs: run a property over many
+//! seeded random cases and report the failing seed so a failure is
+//! reproducible with `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::rng::Xoshiro256;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `property` over `cases` RNG-seeded inputs. The closure receives a
+/// fresh RNG per case and must panic on violation; the harness wraps the
+/// panic with the case seed.
+pub fn check(name: &str, cases: usize, property: impl Fn(&mut Xoshiro256)) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA2C1D2);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with PROP_SEED={base} (case offset {case})"
+            );
+        }
+    }
+}
+
+/// Uniform float in `[lo, hi)`.
+pub fn f64_in(rng: &mut Xoshiro256, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.next_f64()
+}
+
+/// Uniform usize in `[lo, hi)`.
+pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.gen_range(hi - lo)
+}
+
+/// A random f32 vector with entries in `[-scale, scale]`.
+pub fn vec_f32(rng: &mut Xoshiro256, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        check("trivial", 10, |_| {
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_| panic!("boom"));
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("seed"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..100 {
+            let f = f64_in(&mut rng, -2.0, 3.0);
+            assert!((-2.0..3.0).contains(&f));
+            let u = usize_in(&mut rng, 5, 10);
+            assert!((5..10).contains(&u));
+        }
+        let v = vec_f32(&mut rng, 32, 2.0);
+        assert_eq!(v.len(), 32);
+        assert!(v.iter().all(|&x| (-2.0..=2.0).contains(&x)));
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration: the AOT artifact contract — manifest, init blobs, and the
+//! numeric equivalence of the PJRT-executed L1 kernel with the Rust
+//! vecops mirror (the cross-language correctness pin).
+//!
+//! All tests skip gracefully when `artifacts/` is absent.
+
+use a2cid2::gossip::vecops;
+use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
+use a2cid2::runtime::pjrt::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, PjrtContext};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(default_artifact_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_request_path_artifacts() {
+    let Some(m) = manifest_or_skip() else { return };
+    for name in [
+        "mlp_train_step",
+        "mlp_grad",
+        "mlp_eval",
+        "mlp_comm_step",
+        "mlp_init",
+        "transformer_train_step",
+        "transformer_grad",
+        "transformer_eval",
+        "transformer_comm_step",
+        "transformer_init",
+        "acid_mix_grad_4096",
+        "acid_mix_comm_4096",
+    ] {
+        let meta = m.get(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            m.path_of(meta).exists(),
+            "{name}: file {} missing",
+            meta.file
+        );
+        assert!(meta.param_dim().unwrap() > 0);
+    }
+}
+
+#[test]
+fn init_blobs_match_param_dims() {
+    let Some(m) = manifest_or_skip() else { return };
+    for model in ["mlp", "transformer"] {
+        let init = m.load_init(model).unwrap();
+        let dim = m.get(&format!("{model}_grad")).unwrap().param_dim().unwrap();
+        assert_eq!(init.len(), dim, "{model} init length");
+        assert!(init.iter().all(|v| v.is_finite()));
+        // Not all-zero (He/normal init on the weights).
+        assert!(init.iter().any(|&v| v != 0.0));
+    }
+}
+
+#[test]
+fn pjrt_mix_grad_kernel_matches_rust_vecops() {
+    let Some(m) = manifest_or_skip() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let exe = ctx.load_artifact(&m, "acid_mix_grad_4096").unwrap();
+    let n = 4096;
+    let mut rng = a2cid2::rng::Xoshiro256::seed_from_u64(1);
+    let x: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let xt: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let (eta, dt, gamma) = (0.3f32, 0.7f32, 0.05f32);
+
+    let outs = exe
+        .run(&[
+            lit_f32(&x),
+            lit_f32(&xt),
+            lit_f32(&g),
+            lit_scalar(eta),
+            lit_scalar(dt),
+            lit_scalar(gamma),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let got_x = to_vec_f32(&outs[0]).unwrap();
+    let got_xt = to_vec_f32(&outs[1]).unwrap();
+
+    // Rust mirror.
+    let w = a2cid2::gossip::Mixer::new(eta as f64).weights(dt as f64);
+    let mut want_x = x.clone();
+    let mut want_xt = xt.clone();
+    vecops::mix_grad(w.wa, w.wb, gamma, &g, &mut want_x, &mut want_xt);
+    for i in 0..n {
+        assert!(
+            (got_x[i] - want_x[i]).abs() < 1e-5,
+            "x[{i}]: pjrt {} vs rust {}",
+            got_x[i],
+            want_x[i]
+        );
+        assert!((got_xt[i] - want_xt[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn pjrt_mix_comm_kernel_matches_rust_vecops() {
+    let Some(m) = manifest_or_skip() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let exe = ctx.load_artifact(&m, "acid_mix_comm_4096").unwrap();
+    let n = 4096;
+    let mut rng = a2cid2::rng::Xoshiro256::seed_from_u64(2);
+    let x: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let xt: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let xp: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let (eta, dt, alpha, alpha_tilde) = (0.2f32, 0.4f32, 0.5f32, 1.8f32);
+
+    let outs = exe
+        .run(&[
+            lit_f32(&x),
+            lit_f32(&xt),
+            lit_f32(&xp),
+            lit_scalar(eta),
+            lit_scalar(dt),
+            lit_scalar(alpha),
+            lit_scalar(alpha_tilde),
+        ])
+        .unwrap();
+    let got_x = to_vec_f32(&outs[0]).unwrap();
+    let got_xt = to_vec_f32(&outs[1]).unwrap();
+
+    let w = a2cid2::gossip::Mixer::new(eta as f64).weights(dt as f64);
+    let mut want_x = x.clone();
+    let mut want_xt = xt.clone();
+    vecops::mix_comm(w.wa, w.wb, alpha, alpha_tilde, &xp, &mut want_x, &mut want_xt);
+    for i in 0..n {
+        assert!((got_x[i] - want_x[i]).abs() < 1e-5);
+        assert!((got_xt[i] - want_xt[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn mlp_eval_artifact_returns_finite_loss() {
+    let Some(m) = manifest_or_skip() else { return };
+    let ctx = PjrtContext::cpu().unwrap();
+    let meta = m.get("mlp_eval").unwrap();
+    let dim = meta.param_dim().unwrap();
+    let feat = meta.int("feat_dim").unwrap() as usize;
+    let batch = meta.int("batch").unwrap() as usize;
+    let exe = ctx.load_artifact(&m, "mlp_eval").unwrap();
+    let params = m.load_init("mlp").unwrap();
+    assert_eq!(params.len(), dim);
+    let xb = vec![0.1f32; batch * feat];
+    let yb: Vec<i32> = (0..batch as i32).map(|i| i % 10).collect();
+    let outs = exe
+        .run(&[
+            lit_f32(&params),
+            a2cid2::runtime::pjrt::lit_f32_matrix(&xb, batch, feat).unwrap(),
+            xla::Literal::vec1(&yb),
+        ])
+        .unwrap();
+    let loss = to_scalar_f32(&outs[0]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+}

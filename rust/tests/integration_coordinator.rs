@@ -1,0 +1,150 @@
+//! Integration: the pairing coordinator under forced contention — the
+//! liveness and safety properties the paper claims over AD-PSGD
+//! (deadlock-freedom, availability-based matching).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::runtime::coordinator::{spawn_coordinator, CoordMsg};
+
+fn graph(topo: Topology, n: usize) -> Arc<Graph> {
+    Arc::new(Graph::build(&topo, n).unwrap())
+}
+
+/// Hammer the coordinator with many threads doing rapid
+/// available→pair→repeat cycles; every request must complete (no
+/// deadlock) and every pairing must respect the topology.
+fn hammer(topo: Topology, n: usize, rounds: usize) {
+    let g = graph(topo, n);
+    let (tx, handle) = spawn_coordinator(g.clone());
+    let mut joins = Vec::new();
+    for w in 0..n {
+        let tx = tx.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut paired = 0usize;
+            for _ in 0..rounds {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
+                match rrx.recv_timeout(Duration::from_secs(20)) {
+                    Ok(Some(_)) => paired += 1,
+                    Ok(None) => break,
+                    Err(e) => panic!("worker {w} starved: {e}"),
+                }
+            }
+            let _ = tx.send(CoordMsg::Leave { worker: w });
+            paired
+        }));
+    }
+    drop(tx);
+    let mut total = 0usize;
+    for j in joins {
+        total += j.join().unwrap();
+    }
+    let stats = handle.join().unwrap();
+    // Each pairing involves two workers.
+    assert_eq!(total, 2 * stats.total as usize);
+    for i in 0..n {
+        for j in 0..n {
+            if stats.counts[i][j] > 0 {
+                assert!(g.has_edge(i, j), "paired non-neighbors {i},{j}");
+            }
+        }
+    }
+    assert!(stats.total > 0);
+}
+
+#[test]
+fn hammer_ring() {
+    hammer(Topology::Ring, 8, 200);
+}
+
+#[test]
+fn hammer_complete() {
+    hammer(Topology::Complete, 8, 200);
+}
+
+#[test]
+fn hammer_star() {
+    // Star is the worst case for FIFO matching: only the hub can pair, so
+    // the leaves serialize through it. Liveness must still hold.
+    hammer(Topology::Star, 6, 50);
+}
+
+#[test]
+fn hammer_exponential_many_workers() {
+    hammer(Topology::Exponential, 16, 100);
+}
+
+#[test]
+fn staggered_departures_release_everyone() {
+    // Workers leave at staggered times while others still request
+    // pairings; stragglers whose neighborhood empties must get None.
+    let n = 6;
+    let g = graph(Topology::Ring, n);
+    let (tx, handle) = spawn_coordinator(g);
+    let mut joins = Vec::new();
+    for w in 0..n {
+        let tx = tx.clone();
+        joins.push(std::thread::spawn(move || {
+            // Workers with small ids leave almost immediately.
+            let my_rounds = 3 * (w + 1);
+            for _ in 0..my_rounds {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
+                match rrx.recv_timeout(Duration::from_secs(20)) {
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(e) => panic!("worker {w} starved after departures: {e}"),
+                }
+            }
+            let _ = tx.send(CoordMsg::Leave { worker: w });
+        }));
+    }
+    drop(tx);
+    for j in joins {
+        j.join().unwrap();
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn pairing_histogram_roughly_uniform_on_complete() {
+    // On the complete graph with symmetric load, FIFO matching should use
+    // partners near-uniformly (Fig. 7's claim). Tolerate wide CV — this
+    // is a stochastic schedule, not an exact shuffle.
+    let n = 8;
+    let g = graph(Topology::Complete, n);
+    let (tx, handle) = spawn_coordinator(g.clone());
+    let mut joins = Vec::new();
+    for w in 0..n {
+        let tx = tx.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..300 {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
+                if rrx.recv_timeout(Duration::from_secs(20)).unwrap().is_none() {
+                    break;
+                }
+                // Small jitter to shuffle arrival order.
+                if i % (w + 2) == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            let _ = tx.send(CoordMsg::Leave { worker: w });
+        }));
+    }
+    drop(tx);
+    for j in joins {
+        j.join().unwrap();
+    }
+    let stats = handle.join().unwrap();
+    let cv = stats.edge_uniformity_cv(&g);
+    assert!(cv < 1.5, "edge-usage CV too high: {cv}");
+    // Every worker paired with several distinct partners.
+    for i in 0..n {
+        let partners = (0..n).filter(|&j| stats.counts[i][j] > 0).count();
+        assert!(partners >= 3, "worker {i} only saw {partners} partners");
+    }
+}

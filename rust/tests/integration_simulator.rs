@@ -1,0 +1,114 @@
+//! Integration: the virtual-time engine end-to-end — convergence,
+//! topology effects, and the acceleration ordering on the ring.
+
+use std::sync::Arc;
+
+use a2cid2::config::{ExperimentConfig, Method, Task};
+use a2cid2::data::{GaussianMixture, Sharding};
+use a2cid2::graph::Topology;
+use a2cid2::model::{Mlp, Model};
+use a2cid2::simulator::{run_allreduce, run_simulation, ArTimingConfig};
+
+fn cfg(n: usize, topo: Topology, method: Method, steps: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        n_workers: n,
+        topology: topo,
+        method,
+        task: Task::CifarLike,
+        comm_rate: 1.0,
+        batch_size: 16,
+        base_lr: 0.1,
+        momentum: 0.9,
+        weight_decay: 5e-4,
+        steps_per_worker: steps,
+        sharding: Sharding::FullShuffled,
+        dataset_size: 2048,
+        seed: 0,
+        compute_jitter: 0.1,
+    }
+}
+
+fn setup(c: &ExperimentConfig) -> (Arc<Mlp>, a2cid2::data::ShardedIndices) {
+    let ds = Arc::new(GaussianMixture::cifar_like().sample(c.dataset_size, 7));
+    let shards = c.sharding.assign(&ds, c.n_workers, c.seed);
+    (Arc::new(Mlp::new(ds, 32, 5e-4)), shards)
+}
+
+#[test]
+fn mlp_converges_on_all_topologies() {
+    for topo in [Topology::Ring, Topology::Complete, Topology::Exponential] {
+        let c = cfg(8, topo.clone(), Method::AsyncBaseline, 250);
+        let (model, shards) = setup(&c);
+        let res = run_simulation(&c, model.clone(), &shards).unwrap();
+        let idx: Vec<usize> = (0..2048).collect();
+        let acc = model.accuracy(&res.avg_params, &idx).unwrap();
+        assert!(acc > 0.7, "{}: acc={acc}", topo.name());
+    }
+}
+
+#[test]
+fn acid_beats_baseline_on_large_ring() {
+    // The paper's headline ordering at the consensus-limited scale.
+    let steps = 200;
+    let c_base = cfg(32, Topology::Ring, Method::AsyncBaseline, steps);
+    let (model, shards) = setup(&c_base);
+    let base = run_simulation(&c_base, model.clone(), &shards).unwrap();
+    let c_acid = cfg(32, Topology::Ring, Method::Acid, steps);
+    let acid = run_simulation(&c_acid, model, &shards).unwrap();
+    // A²CiD² must reduce the consensus error materially at equal budget.
+    let cb = base.final_consensus();
+    let ca = acid.final_consensus();
+    assert!(
+        ca < cb,
+        "consensus: acid {ca} should be below baseline {cb}"
+    );
+    // ...and not hurt the loss.
+    assert!(
+        acid.final_loss() < base.final_loss() * 1.1,
+        "loss: acid {} vs baseline {}",
+        acid.final_loss(),
+        base.final_loss()
+    );
+}
+
+#[test]
+fn comm_rate_improves_consensus() {
+    let mut c = cfg(16, Topology::Ring, Method::AsyncBaseline, 150);
+    let (model, shards) = setup(&c);
+    let r1 = run_simulation(&c, model.clone(), &shards).unwrap();
+    c.comm_rate = 4.0;
+    let r4 = run_simulation(&c, model, &shards).unwrap();
+    assert!(
+        r4.final_consensus() < r1.final_consensus(),
+        "rate 4 consensus {} should beat rate 1 {}",
+        r4.final_consensus(),
+        r1.final_consensus()
+    );
+    // Comm event count scales with the rate.
+    assert!(r4.n_comms > 3 * r1.n_comms);
+}
+
+#[test]
+fn allreduce_matches_async_sample_budget() {
+    let c = cfg(8, Topology::Complete, Method::AllReduce, 150);
+    let (model, shards) = setup(&c);
+    let ar = run_allreduce(&c, model.clone(), &shards, &ArTimingConfig::default()).unwrap();
+    assert_eq!(ar.rounds, 150);
+    let c2 = cfg(8, Topology::Complete, Method::AsyncBaseline, 150);
+    let asy = run_simulation(&c2, model, &shards).unwrap();
+    // Same total gradient count (the paper's equal-sample protocol).
+    assert_eq!(
+        asy.grads_per_worker.iter().sum::<u64>(),
+        ar.grads_per_worker * 8
+    );
+}
+
+#[test]
+fn spectrum_wired_into_results() {
+    let c = cfg(16, Topology::Ring, Method::Acid, 20);
+    let (model, shards) = setup(&c);
+    let res = run_simulation(&c, model, &shards).unwrap();
+    assert!((res.spectrum.chi1 - 13.14).abs() < 0.5, "ring-16 chi1");
+    assert!(res.acid.is_accelerated());
+    assert!((res.acid.eta - 1.0 / (2.0 * res.spectrum.chi_acc())).abs() < 1e-9);
+}

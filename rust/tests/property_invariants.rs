@@ -1,0 +1,223 @@
+//! Property-based invariants of the paper's algorithm and its substrates,
+//! via the in-tree mini property harness (`a2cid2::testing`; proptest is
+//! unreachable offline — see DESIGN.md §3).
+
+use a2cid2::gossip::dynamics::{comm_event, WorkerState};
+use a2cid2::gossip::{consensus_distance_sq, vecops, AcidParams, Mixer};
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::testing::{check, default_cases, f64_in, usize_in, vec_f32};
+
+/// The mixing flow is doubly stochastic and conserves x + x̃ for any
+/// (η, Δt).
+#[test]
+fn prop_mixing_conserves_mass() {
+    check("mixing-mass", default_cases(), |rng| {
+        let eta = f64_in(rng, 0.0, 5.0);
+        let dt = f64_in(rng, 0.0, 10.0);
+        let dim = usize_in(rng, 1, 64);
+        let mut x = vec_f32(rng, dim, 3.0);
+        let mut xt = vec_f32(rng, dim, 3.0);
+        let sums: Vec<f32> = x.iter().zip(&xt).map(|(a, b)| a + b).collect();
+        let w = Mixer::new(eta).weights(dt);
+        assert!((w.wa + w.wb - 1.0).abs() < 1e-6);
+        vecops::mix_pair(w.wa, w.wb, &mut x, &mut xt);
+        for (i, s) in sums.iter().enumerate() {
+            assert!(
+                (x[i] + xt[i] - s).abs() < 1e-4,
+                "mass violated at {i}: {} vs {s}",
+                x[i] + xt[i]
+            );
+        }
+    });
+}
+
+/// A communication event conserves the global sums Σ(x + x̃) for ANY
+/// (α, α̃) — the antisymmetry of the pairwise update.
+#[test]
+fn prop_comm_event_conserves_global_sums() {
+    check("comm-conserves-sums", default_cases(), |rng| {
+        let chi1 = f64_in(rng, 1.0, 100.0);
+        let chi2 = f64_in(rng, 0.5, chi1);
+        let p = AcidParams::accelerated(chi1, chi2);
+        let mixer = Mixer::new(p.eta);
+        let dim = usize_in(rng, 1, 32);
+        let mut a = WorkerState::new(vec_f32(rng, dim, 2.0));
+        let mut b = WorkerState::new(vec_f32(rng, dim, 2.0));
+        // Desynchronize.
+        a.apply_grad(f64_in(rng, 0.0, 0.5), 0.01, &vec_f32(rng, dim, 1.0), &mixer);
+        let sum = |w: &WorkerState| -> f64 {
+            w.x.iter().chain(&w.xt).map(|&v| v as f64).sum()
+        };
+        let before = sum(&a) + sum(&b);
+        comm_event(&mut a, &mut b, f64_in(rng, 0.5, 2.0), &p, &mixer);
+        let after = sum(&a) + sum(&b);
+        assert!(
+            (before - after).abs() < 1e-3 * before.abs().max(1.0),
+            "{before} -> {after}"
+        );
+    });
+}
+
+/// Gossip-only dynamics contract consensus on any connected topology, for
+/// both the baseline and the accelerated parameters.
+#[test]
+fn prop_gossip_contracts_consensus() {
+    check("gossip-contracts", 24, |rng| {
+        let n = usize_in(rng, 3, 10);
+        let topo = match usize_in(rng, 0, 4) {
+            0 => Topology::Ring,
+            1 => Topology::Complete,
+            2 => Topology::Path,
+            _ => Topology::Star,
+        };
+        let graph = Graph::build(&topo, n).unwrap();
+        let s = graph.spectrum(1.0);
+        let accelerated = usize_in(rng, 0, 2) == 1;
+        let p = if accelerated {
+            AcidParams::from_spectrum(&s)
+        } else {
+            AcidParams::baseline()
+        };
+        let mixer = Mixer::new(p.eta);
+        let dim = usize_in(rng, 1, 16);
+        let mut workers: Vec<WorkerState> =
+            (0..n).map(|_| WorkerState::new(vec_f32(rng, dim, 5.0))).collect();
+        let d0 = consensus_distance_sq(&workers);
+        // Many rounds of uniformly random edge activations.
+        let mut t = 0.0;
+        for _ in 0..60 * n {
+            t += 0.05;
+            let &(i, j) = &graph.edges[usize_in(rng, 0, graph.edges.len())];
+            let (l, r) = workers.split_at_mut(j);
+            comm_event(&mut l[i], &mut r[0], t, &p, &mixer);
+        }
+        for w in &mut workers {
+            w.mix_to(t, &mixer);
+        }
+        let d1 = consensus_distance_sq(&workers);
+        assert!(
+            d1 < 0.5 * d0 + 1e-9,
+            "{} n={n} acc={accelerated}: consensus {d0} -> {d1}",
+            topo.name()
+        );
+    });
+}
+
+/// χ₂ ≤ χ₁ on random connected Erdős–Rényi graphs at random rates
+/// (Eq. 3's inequality) and the spectral gap is positive when connected.
+#[test]
+fn prop_chi2_le_chi1_random_graphs() {
+    check("chi2-le-chi1", 24, |rng| {
+        let n = usize_in(rng, 4, 14);
+        let p = f64_in(rng, 0.3, 0.9);
+        let seed = rng.next_u64();
+        let graph = Graph::build(&Topology::ErdosRenyi { p, seed }, n).unwrap();
+        let rate = f64_in(rng, 0.1, 4.0);
+        let s = graph.spectrum(rate);
+        assert!(s.chi1 > 0.0 && s.chi2 > 0.0);
+        assert!(
+            s.chi2 <= s.chi1 * (1.0 + 1e-6),
+            "chi2={} chi1={}",
+            s.chi2,
+            s.chi1
+        );
+        assert!(s.lambda2 > 0.0, "connected ⇒ positive spectral gap");
+    });
+}
+
+/// The simulator is a pure function of its seed: identical seeds replay
+/// identical trajectories (routing/batching/state determinism).
+#[test]
+fn prop_simulator_deterministic_replay() {
+    use a2cid2::config::{Method, Task};
+    use a2cid2::data::{GaussianMixture, Sharding};
+    use a2cid2::model::Logistic;
+    use std::sync::Arc;
+    check("sim-replay", 6, |rng| {
+        let seed = rng.next_u64() % 1000;
+        let cfg = a2cid2::config::ExperimentConfig {
+            n_workers: 4,
+            topology: Topology::Ring,
+            method: if seed % 2 == 0 { Method::Acid } else { Method::AsyncBaseline },
+            task: Task::CifarLike,
+            comm_rate: 1.0,
+            batch_size: 4,
+            base_lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            steps_per_worker: 30,
+            sharding: Sharding::FullShuffled,
+            dataset_size: 128,
+            seed,
+            compute_jitter: 0.2,
+        };
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 1));
+        let shards = cfg.sharding.assign(&ds, 4, seed);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let a = a2cid2::simulator::run_simulation(&cfg, model.clone(), &shards).unwrap();
+        let b = a2cid2::simulator::run_simulation(&cfg, model, &shards).unwrap();
+        assert_eq!(a.avg_params, b.avg_params);
+        assert_eq!(a.n_comms, b.n_comms);
+        assert_eq!(a.grads_per_worker, b.grads_per_worker);
+    });
+}
+
+/// Fused vecops match their unfused compositions for random inputs
+/// (the L3 mirror of the L1 kernel-vs-ref pytest).
+#[test]
+fn prop_fused_ops_match_composition() {
+    check("fused-vs-composed", default_cases(), |rng| {
+        let dim = usize_in(rng, 1, 128);
+        let wa = (0.5 + 0.5 * rng.next_f64()) as f32;
+        let wb = 1.0 - wa;
+        let gamma = rng.next_f32() * 0.5;
+        let alpha = rng.next_f32();
+        let alpha_tilde = rng.next_f32() * 4.0;
+        let g = vec_f32(rng, dim, 1.0);
+        let xj = vec_f32(rng, dim, 1.0);
+        let x0 = vec_f32(rng, dim, 2.0);
+        let t0 = vec_f32(rng, dim, 2.0);
+
+        // mix_grad
+        let (mut x1, mut t1) = (x0.clone(), t0.clone());
+        vecops::mix_grad(wa, wb, gamma, &g, &mut x1, &mut t1);
+        let (mut x2, mut t2) = (x0.clone(), t0.clone());
+        vecops::mix_pair(wa, wb, &mut x2, &mut t2);
+        vecops::axpy(-gamma, &g, &mut x2);
+        vecops::axpy(-gamma, &g, &mut t2);
+        for i in 0..dim {
+            assert!((x1[i] - x2[i]).abs() < 1e-4);
+            assert!((t1[i] - t2[i]).abs() < 1e-4);
+        }
+
+        // mix_comm
+        let (mut x1, mut t1) = (x0.clone(), t0.clone());
+        vecops::mix_comm(wa, wb, alpha, alpha_tilde, &xj, &mut x1, &mut t1);
+        let (mut x2, mut t2) = (x0, t0);
+        vecops::mix_pair(wa, wb, &mut x2, &mut t2);
+        let m: Vec<f32> = x2.iter().zip(&xj).map(|(a, b)| a - b).collect();
+        vecops::axpy(-alpha, &m, &mut x2);
+        vecops::axpy(-alpha_tilde, &m, &mut t2);
+        for i in 0..dim {
+            assert!((x1[i] - x2[i]).abs() < 1e-4);
+            assert!((t1[i] - t2[i]).abs() < 1e-4);
+        }
+    });
+}
+
+/// Poisson sampling matches its rate in expectation for any rate (the
+/// runtime's comm-budget emulation is unbiased).
+#[test]
+fn prop_poisson_budget_matches_rate() {
+    check("poisson-budget", 12, |rng| {
+        let rate = f64_in(rng, 0.1, 6.0);
+        let d = a2cid2::rng::Poisson::new(rate);
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| d.sample(rng)).sum();
+        let mean = total as f64 / n as f64;
+        assert!(
+            (mean - rate).abs() < 0.15 * rate + 0.05,
+            "rate {rate}: mean {mean}"
+        );
+    });
+}
