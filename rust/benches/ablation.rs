@@ -1,11 +1,3 @@
 //! Bench: ablation of the theory-given momentum rate η* (DESIGN.md's
-//! called-out design choice). A2CID2_BENCH_FULL=1 runs at n=64.
-fn main() {
-    let scale = a2cid2::experiments::Scale::from_env();
-    let t0 = std::time::Instant::now();
-    let (_rows, tables) = a2cid2::experiments::ablation::run(scale).expect("ablation");
-    for t in tables {
-        t.print();
-    }
-    println!("[ablation] completed in {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
-}
+//! called-out design choice). `A2CID2_BENCH_FULL=1` runs at n=64.
+a2cid2::bench_main!(ablation);

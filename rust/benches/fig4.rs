@@ -1,11 +1,3 @@
-//! Bench: regenerate the paper's fig4 (see experiments::fig4).
-//! Quick scale by default; A2CID2_BENCH_FULL=1 for the paper-sized grid.
-fn main() {
-    let scale = a2cid2::experiments::Scale::from_env();
-    let t0 = std::time::Instant::now();
-    let (_data, tables) = a2cid2::experiments::fig4::run(scale).expect("fig4");
-    for t in tables {
-        t.print();
-    }
-    println!("[fig4] completed in {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
-}
+//! Bench: regenerate the paper's Fig. 4 (see `experiments::fig4`).
+//! Quick scale by default; `A2CID2_BENCH_FULL=1` for the paper-sized grid.
+a2cid2::bench_main!(fig4);

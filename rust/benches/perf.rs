@@ -132,7 +132,75 @@ fn main() {
         ]);
     }
 
+    // Event-loop throughput: raw scheduler pops with no dynamics. This is
+    // the §Perf guard for the DynamicsCore/Scheduler refactor — the
+    // static-ring case must stay within ±10% of the pre-refactor loop.
+    {
+        use a2cid2::graph::{Graph, Topology};
+        use a2cid2::simulator::{EventKind, EventQueue};
+        let graph = Graph::build(&Topology::Ring, 64).unwrap();
+        let rates = graph.edge_rates(1.0);
+        let horizon = if full { 20_000.0 } else { 5_000.0 };
+
+        // Static ring: the historical hot path.
+        let mut queue = EventQueue::new(&vec![1.0; 64], &rates, 1);
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        while queue.next(horizon).is_some() {
+            events += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "event loop (static ring)".into(),
+            "n=64".into(),
+            format!("{:.0} ns/event", secs / events as f64 * 1e9),
+            format!("{:.2} Mev/s", events as f64 / secs / 1e6),
+            format!("{events} events"),
+        ]);
+
+        // Same workload under scenario churn: periodic rate retuning
+        // (the set_rate path) must not sink the loop.
+        let mut queue = EventQueue::new(&vec![1.0; 64], &rates, 1);
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        let mut updates = 0u64;
+        let mut next_update = 10.0;
+        loop {
+            match queue.next(next_update.min(horizon)) {
+                Some(ev) => {
+                    if let EventKind::Comm { .. } = ev.kind {
+                        // touch the event so the optimizer keeps it
+                        std::hint::black_box(ev.t);
+                    }
+                    events += 1;
+                }
+                None => {
+                    if next_update >= horizon {
+                        break;
+                    }
+                    // Mirror VirtualTimeScheduler::apply — retunes are
+                    // sampled from the update's own timestamp.
+                    queue.advance_to(next_update);
+                    for (e, &r) in rates.iter().enumerate() {
+                        queue.set_comm_rate(e, if updates % 2 == 0 { r * 0.5 } else { r });
+                    }
+                    updates += 1;
+                    next_update += 10.0;
+                }
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        table.row(&[
+            "event loop (rate churn)".into(),
+            format!("{updates} retunes"),
+            format!("{:.0} ns/event", secs / events as f64 * 1e9),
+            format!("{:.2} Mev/s", events as f64 / secs / 1e6),
+            format!("{events} events"),
+        ]);
+    }
+
     // PJRT kernel dispatch (the L1 artifact), if artifacts are built.
+    #[cfg(feature = "pjrt")]
     match pjrt_kernel_bench(if full { 200 } else { 50 }) {
         Ok(rows) => {
             for r in rows {
@@ -145,6 +213,7 @@ fn main() {
     table.print();
 }
 
+#[cfg(feature = "pjrt")]
 fn pjrt_kernel_bench(iters: usize) -> a2cid2::Result<Vec<Vec<String>>> {
     use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
     use a2cid2::runtime::pjrt::{lit_f32, lit_scalar, PjrtContext};

@@ -1,0 +1,3 @@
+//! Bench: A²CiD² vs the async baseline across a mid-run ring→exponential
+//! switch with 20% link dropout (see `experiments::scenario`).
+a2cid2::bench_main!(scenario);

@@ -1,11 +1,3 @@
-//! Bench: regenerate the paper's tab2 (see experiments::tab2).
-//! Quick scale by default; A2CID2_BENCH_FULL=1 for the paper-sized grid.
-fn main() {
-    let scale = a2cid2::experiments::Scale::from_env();
-    let t0 = std::time::Instant::now();
-    let (_data, tables) = a2cid2::experiments::tab2::run(scale).expect("tab2");
-    for t in tables {
-        t.print();
-    }
-    println!("[tab2] completed in {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
-}
+//! Bench: regenerate the paper's Tab. 2 (see `experiments::tab2`).
+//! Quick scale by default; `A2CID2_BENCH_FULL=1` for the paper-sized grid.
+a2cid2::bench_main!(tab2);

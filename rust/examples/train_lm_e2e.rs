@@ -111,6 +111,7 @@ fn main() -> a2cid2::Result<()> {
             seed: 0,
             monitor_interval: std::time::Duration::from_millis(200),
             link_delay: None,
+            scenario: None,
         };
         let t0 = std::time::Instant::now();
         let res = run_async(graph.clone(), sources, init.clone(), opts)?;

@@ -7,8 +7,10 @@
 //! and fully tested.
 
 mod parser;
+pub mod scenario;
 
 pub use parser::{parse_toml, TomlValue};
+pub use scenario::{NetUpdate, NetworkPlan, Scenario};
 
 use crate::data::Sharding;
 use crate::graph::Topology;
@@ -88,6 +90,10 @@ pub struct ExperimentConfig {
     /// Compute-time jitter: each gradient duration is
     /// `max(0, N(1, jitter))` time units (stragglers).
     pub compute_jitter: f64,
+    /// Optional time-varying network scenario (phased topology switches,
+    /// link dropout, heterogeneous rates, speed drift). When set it
+    /// supersedes `topology`; see [`Scenario`] for the string syntax.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for ExperimentConfig {
@@ -107,6 +113,7 @@ impl Default for ExperimentConfig {
             dataset_size: 4096,
             seed: 0,
             compute_jitter: 0.1,
+            scenario: None,
         }
     }
 }
@@ -122,6 +129,19 @@ impl ExperimentConfig {
         anyhow::ensure!(self.steps_per_worker >= 1, "need >= 1 step");
         anyhow::ensure!(self.dataset_size >= self.batch_size, "dataset < batch");
         anyhow::ensure!(self.compute_jitter >= 0.0, "negative jitter");
+        if let Some(sc) = &self.scenario {
+            // A scenario only shapes the gossip network; the synchronous
+            // All-Reduce baseline would silently ignore it — reject
+            // rather than hand back numbers the scenario never touched.
+            anyhow::ensure!(
+                self.method != Method::AllReduce,
+                "scenario requires an asynchronous method; allreduce ignores the gossip network"
+            );
+            // Surface bad phase/worker-count combinations (e.g. torus
+            // dims) at config time; the engines compile the full plan
+            // (incl. the spectrum eigensolve) once, at run start.
+            sc.validate_for(self.n_workers)?;
+        }
         Ok(self)
     }
 
@@ -144,6 +164,7 @@ impl ExperimentConfig {
                 "dataset_size" => cfg.dataset_size = value.as_int()? as usize,
                 "seed" => cfg.seed = value.as_int()? as u64,
                 "compute_jitter" => cfg.compute_jitter = value.as_float()?,
+                "scenario" => cfg.scenario = Some(Scenario::parse(value.as_str()?)?),
                 "sharding" => {
                     cfg.sharding = match value.as_str()? {
                         "full" | "full-shuffled" => Sharding::FullShuffled,
@@ -206,6 +227,23 @@ seed = 7
         assert!(ExperimentConfig::from_toml("[experiment]\nn_workers = 1\n").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nbase_lr = 0.0\n").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nmomentum = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn parse_scenario_key() {
+        let text = "[experiment]\nscenario = \"ring@0,exponential@0.5;drop=0.2\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let sc = cfg.scenario.unwrap();
+        assert_eq!(sc.phases.len(), 2);
+        assert!(sc.dropout.is_some());
+        // Bad scenario strings are config errors.
+        assert!(ExperimentConfig::from_toml("[experiment]\nscenario = \"wat@0\"\n").is_err());
+        // Valid string but incompatible with n (torus dims) fails validate.
+        let bad = "[experiment]\nn_workers = 8\nscenario = \"torus:3x3@0\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // AllReduce would silently ignore the scenario — rejected.
+        let ar = "[experiment]\nmethod = \"allreduce\"\nscenario = \"ring@0,exp@0.5\"\n";
+        assert!(ExperimentConfig::from_toml(ar).is_err());
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! Time-varying network scenarios.
+//!
+//! The paper's experiments (and the seed reproduction) only exercise
+//! *static* topologies with *fixed* Poisson rates. Real decentralized
+//! deployments are the opposite: links fail and recover, the overlay is
+//! re-wired mid-run, and worker speeds drift. A [`Scenario`] describes
+//! such a network as data, and compiles — deterministically under a seed
+//! — to a [`NetworkPlan`]: the *union graph* over every phase plus a
+//! sorted list of timed rate updates. Both execution engines replay the
+//! same plan: the virtual-time simulator applies updates exactly between
+//! events ([`crate::engine::VirtualTimeScheduler`]), the threaded runtime
+//! applies them from its monitor loop ([`crate::engine::WallClock`]).
+//!
+//! ## Scenario string syntax
+//!
+//! ```text
+//! phases[;option]*
+//!
+//! phases := topo[@frac](,topo@frac)*     e.g.  ring@0,exponential@0.5
+//! drop   := drop=FRAC[:FROM[:TO[:SEED]]] e.g.  drop=0.2:0.25:0.75
+//! het    := het=SIGMA[:SEED]             log-normal per-edge rate spread
+//! drift  := drift=AMP[:STEPS[:SEED]]     linear per-worker speed drift
+//! ```
+//!
+//! All times are *fractions of the run horizon* in `[0, 1)`; the horizon
+//! is the expected virtual run length (`steps_per_worker` at unit
+//! gradient rate, and the same in normalized wall-clock time). Example:
+//! `"ring@0,exponential@0.5;drop=0.2:0.25:0.75;drift=0.3"` starts on the
+//! ring, drops 20% of links over the middle half of the run, switches to
+//! the exponential graph at half-time, and drifts worker speeds by ±30%.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, Spectrum, Topology};
+use crate::rng::{standard_normal, Xoshiro256};
+
+/// One topology phase, active from fraction `at` until the next phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Phase {
+    /// Start time as a fraction of the run horizon, in `[0, 1)`.
+    pub at: f64,
+    pub topology: Topology,
+}
+
+/// Random link failures: `frac` of the union edges go silent during
+/// `[from, to)` (fractions of the horizon), then recover.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dropout {
+    pub frac: f64,
+    pub from: f64,
+    pub to: f64,
+    pub seed: u64,
+}
+
+/// Heterogeneous links: each union edge's rate is multiplied by an
+/// i.i.d. log-normal factor `exp(σ·z − σ²/2)` (unit mean).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateSpread {
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+/// Drifting compute speeds: worker `w`'s gradient rate ramps linearly to
+/// `base·(1 ± amp)` over the run (per-worker direction drawn from `seed`),
+/// applied as `steps` piecewise-constant rate updates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeedDrift {
+    pub amp: f64,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// A declarative time-varying network: topology phases plus optional
+/// dropout, per-edge rate spread, and per-worker speed drift.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub phases: Vec<Phase>,
+    pub dropout: Option<Dropout>,
+    pub het: Option<RateSpread>,
+    pub drift: Option<SpeedDrift>,
+}
+
+/// One timed network update of a compiled plan. `None` fields are
+/// unchanged from the previous state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetUpdate {
+    /// Absolute time (virtual-time units / normalized wall-clock units).
+    pub t: f64,
+    /// New per-edge rates over the union edge list (0 = link inactive).
+    pub edge_rates: Option<Vec<f64>>,
+    /// New per-worker gradient rates.
+    pub grad_rates: Option<Vec<f64>>,
+}
+
+/// A compiled scenario: union graph, initial rates, and sorted updates.
+/// The edge indexing of every rate vector follows `union.edges`.
+pub struct NetworkPlan {
+    pub union: Graph,
+    pub horizon: f64,
+    pub initial_edge_rates: Vec<f64>,
+    pub initial_grad_rates: Vec<f64>,
+    pub updates: Vec<NetUpdate>,
+    /// Spectrum of the phase-0 rate-weighted Laplacian (with the rate
+    /// spread applied, dropout ignored) — the (χ₁, χ₂) the A²CiD²
+    /// parameters are derived from. η is held fixed through the run.
+    pub spectrum: Spectrum,
+}
+
+impl NetworkPlan {
+    /// Trivial plan for a static graph (no scenario): one phase, no
+    /// updates. `comm_rate` may be 0 (no communication); the spectrum is
+    /// computed at a floored rate so (χ₁, χ₂) stay finite.
+    pub fn static_plan(graph: Graph, comm_rate: f64, base_grad_rates: &[f64]) -> NetworkPlan {
+        assert_eq!(base_grad_rates.len(), graph.n, "one gradient rate per worker");
+        let initial_edge_rates = graph.edge_rates(comm_rate);
+        let spectrum = graph.spectrum_with_rates(&graph.edge_rates(comm_rate.max(1e-6)));
+        NetworkPlan {
+            union: graph,
+            horizon: f64::INFINITY,
+            initial_edge_rates,
+            initial_grad_rates: base_grad_rates.to_vec(),
+            updates: Vec::new(),
+            spectrum,
+        }
+    }
+
+}
+
+impl Scenario {
+    /// A single static phase — what a plain `topology` config denotes.
+    pub fn static_topology(topology: Topology) -> Scenario {
+        Scenario {
+            phases: vec![Phase { at: 0.0, topology }],
+            dropout: None,
+            het: None,
+            drift: None,
+        }
+    }
+
+    /// Parse the scenario string syntax (see module docs).
+    pub fn parse(s: &str) -> crate::Result<Scenario> {
+        let mut parts = s.split(';');
+        let phase_str = parts.next().unwrap_or("").trim();
+        anyhow::ensure!(!phase_str.is_empty(), "scenario needs at least one phase");
+        let mut phases = Vec::new();
+        for (idx, item) in phase_str.split(',').enumerate() {
+            let item = item.trim();
+            let (topo_str, at) = match item.rsplit_once('@') {
+                Some((t, f)) => {
+                    let at: f64 = f
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("phase '{item}': bad time '{f}': {e}"))?;
+                    (t, at)
+                }
+                None => {
+                    anyhow::ensure!(
+                        idx == 0,
+                        "phase '{item}': only the first phase may omit '@time'"
+                    );
+                    (item, 0.0)
+                }
+            };
+            anyhow::ensure!(
+                (0.0..1.0).contains(&at),
+                "phase '{item}': time {at} outside [0, 1)"
+            );
+            phases.push(Phase { at, topology: Topology::parse(topo_str)? });
+        }
+        anyhow::ensure!(
+            phases[0].at == 0.0,
+            "first phase must start at 0, got {}",
+            phases[0].at
+        );
+        for w in phases.windows(2) {
+            anyhow::ensure!(
+                w[0].at < w[1].at,
+                "phase times must be strictly increasing ({} then {})",
+                w[0].at,
+                w[1].at
+            );
+        }
+
+        let mut scenario = Scenario { phases, dropout: None, het: None, drift: None };
+        for opt in parts {
+            let opt = opt.trim();
+            if opt.is_empty() {
+                continue;
+            }
+            let (key, val) = opt
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("scenario option '{opt}' is not key=value"))?;
+            let fields: Vec<&str> = val.split(':').collect();
+            let f64_at = |i: usize, default: f64| -> crate::Result<f64> {
+                match fields.get(i) {
+                    Some(s) => s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("{key}: bad number '{s}': {e}")),
+                    None => Ok(default),
+                }
+            };
+            let u64_at = |i: usize, default: u64| -> crate::Result<u64> {
+                match fields.get(i) {
+                    Some(s) => s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("{key}: bad integer '{s}': {e}")),
+                    None => Ok(default),
+                }
+            };
+            match key {
+                "drop" => {
+                    let d = Dropout {
+                        frac: f64_at(0, f64::NAN)?,
+                        from: f64_at(1, 0.0)?,
+                        to: f64_at(2, 1.0)?,
+                        seed: u64_at(3, 0)?,
+                    };
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&d.frac),
+                        "drop fraction {} outside [0, 1]",
+                        d.frac
+                    );
+                    anyhow::ensure!(
+                        0.0 <= d.from && d.from < d.to && d.to <= 1.0,
+                        "drop window [{}, {}) invalid",
+                        d.from,
+                        d.to
+                    );
+                    scenario.dropout = Some(d);
+                }
+                "het" => {
+                    let h = RateSpread { sigma: f64_at(0, f64::NAN)?, seed: u64_at(1, 0)? };
+                    anyhow::ensure!(h.sigma >= 0.0, "het sigma must be >= 0, got {}", h.sigma);
+                    scenario.het = Some(h);
+                }
+                "drift" => {
+                    let d = SpeedDrift {
+                        amp: f64_at(0, f64::NAN)?,
+                        steps: u64_at(1, 8)? as usize,
+                        seed: u64_at(2, 0)?,
+                    };
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(&d.amp),
+                        "drift amplitude {} outside [0, 1)",
+                        d.amp
+                    );
+                    anyhow::ensure!(d.steps >= 1, "drift needs >= 1 steps");
+                    scenario.drift = Some(d);
+                }
+                other => anyhow::bail!("unknown scenario option '{other}'"),
+            }
+        }
+        Ok(scenario)
+    }
+
+    /// Cheap config-time validation: every phase topology must build
+    /// (and be connected) for `n` workers — the only way a *parsed*
+    /// scenario can still fail. Full compilation (union graph, RNG
+    /// draws, the O(n³) spectrum eigensolve) is deferred to run start
+    /// so config validation doesn't pay it twice.
+    pub fn validate_for(&self, n: usize) -> crate::Result<()> {
+        for phase in &self.phases {
+            Graph::build(&phase.topology, n)?;
+        }
+        Ok(())
+    }
+
+    /// Compile to a [`NetworkPlan`] for `n` workers. `comm_rate` is the
+    /// per-worker expected communications per unit time, `horizon` the
+    /// expected run length in the engine's time units, `base_grad_rates`
+    /// the per-worker gradient rates before drift (one per worker).
+    /// Deterministic: identical inputs yield an identical plan.
+    pub fn compile(
+        &self,
+        n: usize,
+        comm_rate: f64,
+        horizon: f64,
+        base_grad_rates: &[f64],
+    ) -> crate::Result<NetworkPlan> {
+        anyhow::ensure!(n >= 2, "need >= 2 workers");
+        anyhow::ensure!(
+            base_grad_rates.len() == n,
+            "need one gradient rate per worker ({} != {n})",
+            base_grad_rates.len()
+        );
+        anyhow::ensure!(
+            horizon.is_finite() && horizon > 0.0,
+            "scenario needs a finite positive horizon, got {horizon}"
+        );
+
+        // Per-phase graphs (each validated connected by Graph::build) and
+        // their degree-based per-edge rates, keyed by endpoint pair.
+        let mut phase_graphs = Vec::with_capacity(self.phases.len());
+        let mut phase_rates: Vec<HashMap<(usize, usize), f64>> =
+            Vec::with_capacity(self.phases.len());
+        for phase in &self.phases {
+            let g = Graph::build(&phase.topology, n)?;
+            let rates = g.edge_rates(comm_rate);
+            let map = g.edges.iter().copied().zip(rates).collect();
+            phase_graphs.push(g);
+            phase_rates.push(map);
+        }
+
+        // Union graph over all phases: the stable edge indexing every
+        // rate vector uses.
+        let union = Graph::from_edges(
+            n,
+            phase_graphs.iter().flat_map(|g| g.edges.iter().copied()),
+        );
+
+        // Per-edge heterogeneity multipliers (unit-mean log-normal).
+        let het_mult: Vec<f64> = match &self.het {
+            Some(h) => {
+                let mut rng = Xoshiro256::seed_from_u64(h.seed ^ 0x4E37);
+                union
+                    .edges
+                    .iter()
+                    .map(|_| (h.sigma * standard_normal(&mut rng) - 0.5 * h.sigma * h.sigma).exp())
+                    .collect()
+            }
+            None => vec![1.0; union.edges.len()],
+        };
+
+        // Dropped-link set, sampled once over the union edges.
+        let dropped: Vec<bool> = match &self.dropout {
+            Some(d) => {
+                let mut rng = Xoshiro256::seed_from_u64(d.seed ^ 0xD201);
+                let k = (d.frac * union.edges.len() as f64).round() as usize;
+                let k = k.min(union.edges.len());
+                let mut mask = vec![false; union.edges.len()];
+                for e in rng.sample_indices(union.edges.len(), k) {
+                    mask[e] = true;
+                }
+                mask
+            }
+            None => vec![false; union.edges.len()],
+        };
+
+        // Per-worker drift slopes in [-amp, +amp].
+        let drift_slopes: Vec<f64> = match &self.drift {
+            Some(d) => {
+                let mut rng = Xoshiro256::seed_from_u64(d.seed ^ 0xD81F);
+                (0..n).map(|_| d.amp * (2.0 * rng.next_f64() - 1.0)).collect()
+            }
+            None => vec![0.0; n],
+        };
+
+        // All change points as horizon fractions, deduplicated and sorted.
+        let mut fracs: Vec<f64> = self.phases.iter().map(|p| p.at).collect();
+        if let Some(d) = &self.dropout {
+            fracs.push(d.from);
+            fracs.push(d.to);
+        }
+        if let Some(d) = &self.drift {
+            for k in 1..=d.steps {
+                fracs.push(k as f64 / (d.steps + 1) as f64);
+            }
+        }
+        fracs.retain(|f| (0.0..1.0).contains(f));
+        fracs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        fracs.dedup();
+
+        let edge_rates_at = |f: f64| -> Vec<f64> {
+            let phase_idx = self
+                .phases
+                .iter()
+                .rposition(|p| p.at <= f)
+                .expect("first phase starts at 0");
+            let in_drop_window = self
+                .dropout
+                .as_ref()
+                .is_some_and(|d| f >= d.from && f < d.to);
+            union
+                .edges
+                .iter()
+                .enumerate()
+                .map(|(e, ij)| {
+                    if in_drop_window && dropped[e] {
+                        return 0.0;
+                    }
+                    phase_rates[phase_idx].get(ij).copied().unwrap_or(0.0) * het_mult[e]
+                })
+                .collect()
+        };
+        let grad_rates_at = |f: f64| -> Vec<f64> {
+            base_grad_rates
+                .iter()
+                .zip(&drift_slopes)
+                .map(|(&base, &s)| (base * (1.0 + s * f)).max(0.05))
+                .collect()
+        };
+
+        let initial_edge_rates = edge_rates_at(0.0);
+        let initial_grad_rates = grad_rates_at(0.0);
+        let mut updates = Vec::new();
+        let mut prev_edges = initial_edge_rates.clone();
+        let mut prev_grads = initial_grad_rates.clone();
+        for &f in fracs.iter().filter(|&&f| f > 0.0) {
+            let edges = edge_rates_at(f);
+            let grads = grad_rates_at(f);
+            let edge_rates = (edges != prev_edges).then(|| edges.clone());
+            let grad_rates = (grads != prev_grads).then(|| grads.clone());
+            prev_edges = edges;
+            prev_grads = grads;
+            if edge_rates.is_some() || grad_rates.is_some() {
+                updates.push(NetUpdate { t: f * horizon, edge_rates, grad_rates });
+            }
+        }
+
+        // (χ₁, χ₂) of the phase-0 network, dropout ignored (a dropout
+        // window may disconnect the graph; η is derived from the clean
+        // phase-0 spectrum and held fixed, as documented).
+        let spectrum_rates: Vec<f64> = union
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(e, ij)| {
+                phase_rates[0].get(ij).copied().unwrap_or(0.0).max(0.0) * het_mult[e]
+            })
+            .collect();
+        let floored: Vec<f64> = if comm_rate > 0.0 {
+            spectrum_rates
+        } else {
+            union.edge_rates(1e-6)
+        };
+        let spectrum = union.spectrum_with_rates(&floored);
+
+        Ok(NetworkPlan {
+            union,
+            horizon,
+            initial_edge_rates,
+            initial_grad_rates,
+            updates,
+            spectrum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_phases_and_options() {
+        let s = Scenario::parse("ring@0,exponential@0.5;drop=0.2:0.25:0.75:7;het=0.5;drift=0.3:4:1")
+            .unwrap();
+        assert_eq!(s.phases.len(), 2);
+        assert_eq!(s.phases[0], Phase { at: 0.0, topology: Topology::Ring });
+        assert_eq!(s.phases[1], Phase { at: 0.5, topology: Topology::Exponential });
+        assert_eq!(
+            s.dropout,
+            Some(Dropout { frac: 0.2, from: 0.25, to: 0.75, seed: 7 })
+        );
+        assert_eq!(s.het, Some(RateSpread { sigma: 0.5, seed: 0 }));
+        assert_eq!(s.drift, Some(SpeedDrift { amp: 0.3, steps: 4, seed: 1 }));
+    }
+
+    #[test]
+    fn parses_bare_single_phase() {
+        let s = Scenario::parse("ring").unwrap();
+        assert_eq!(s.phases, vec![Phase { at: 0.0, topology: Topology::Ring }]);
+        s.validate_for(6).unwrap();
+        // Topology sub-syntax passes through (torus:RxC contains ':').
+        let t = Scenario::parse("torus:2x4@0").unwrap();
+        assert_eq!(t.phases[0].topology, Topology::Torus { rows: 2, cols: 4 });
+    }
+
+    #[test]
+    fn parse_error_paths() {
+        for bad in [
+            "",
+            "nope@0",
+            "ring@0.5",              // first phase must start at 0
+            "ring@0,exp",            // later phase without @time
+            "ring@0,exp@0.5,complete@0.5", // non-increasing
+            "ring@0;drop=1.5",       // frac out of range
+            "ring@0;drop=0.2:0.9:0.1", // inverted window
+            "ring@0;drift=2.0",      // amp out of range
+            "ring@0;drift=0.3:0",    // zero steps
+            "ring@0;het=-1",         // negative sigma
+            "ring@0;wat=1",          // unknown option
+            "ring@0;drop",           // not key=value
+            "ring@1.2",              // time out of range
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let sc = Scenario::parse("ring@0,exponential@0.5;drop=0.2:0.25:0.75:3;het=0.4:5;drift=0.3:4:2")
+            .unwrap();
+        let base = vec![1.0; 8];
+        let a = sc.compile(8, 1.0, 100.0, &base).unwrap();
+        let b = sc.compile(8, 1.0, 100.0, &base).unwrap();
+        assert_eq!(a.initial_edge_rates, b.initial_edge_rates);
+        assert_eq!(a.initial_grad_rates, b.initial_grad_rates);
+        assert_eq!(a.updates, b.updates);
+        assert!(!a.updates.is_empty());
+    }
+
+    #[test]
+    fn union_covers_both_phases_and_switch_moves_rates() {
+        let sc = Scenario::parse("ring@0,complete@0.5").unwrap();
+        let plan = sc.compile(6, 1.0, 10.0, &[1.0; 6]).unwrap();
+        // Union of ring(6) and complete(6) is the complete graph.
+        assert_eq!(plan.union.edges.len(), 15);
+        // At t=0 only the 6 ring edges are live.
+        let live0 = plan.initial_edge_rates.iter().filter(|&&r| r > 0.0).count();
+        assert_eq!(live0, 6);
+        // Exactly one update (the switch), at half the horizon, making
+        // every union edge live.
+        assert_eq!(plan.updates.len(), 1);
+        assert!((plan.updates[0].t - 5.0).abs() < 1e-12);
+        let after = plan.updates[0].edge_rates.as_ref().unwrap();
+        assert!(after.iter().all(|&r| r > 0.0));
+        assert!(plan.updates[0].grad_rates.is_none());
+    }
+
+    #[test]
+    fn dropout_window_silences_and_recovers() {
+        let sc = Scenario::parse("ring@0;drop=0.5:0.25:0.75:1").unwrap();
+        let plan = sc.compile(8, 1.0, 100.0, &[1.0; 8]).unwrap();
+        assert_eq!(plan.updates.len(), 2, "drop + recover");
+        let at_drop = plan.updates[0].edge_rates.as_ref().unwrap();
+        let at_recover = plan.updates[1].edge_rates.as_ref().unwrap();
+        let silenced = at_drop.iter().filter(|&&r| r == 0.0).count();
+        assert_eq!(silenced, 4, "50% of 8 ring edges");
+        assert_eq!(at_recover, &plan.initial_edge_rates);
+        // Spectrum ignores the dropout window (stays the clean ring).
+        assert!(plan.spectrum.chi1.is_finite() && plan.spectrum.chi1 > 1.0);
+    }
+
+    #[test]
+    fn drift_emits_grad_rate_ramps() {
+        let sc = Scenario::parse("ring@0;drift=0.5:4:9").unwrap();
+        let plan = sc.compile(4, 1.0, 40.0, &[1.0; 4]).unwrap();
+        let grad_updates: Vec<&NetUpdate> =
+            plan.updates.iter().filter(|u| u.grad_rates.is_some()).collect();
+        assert_eq!(grad_updates.len(), 4);
+        // Rates stay positive and move monotonically per worker.
+        let first = grad_updates[0].grad_rates.as_ref().unwrap();
+        let last = grad_updates[3].grad_rates.as_ref().unwrap();
+        for w in 0..4 {
+            assert!(first[w] > 0.0 && last[w] > 0.0);
+            let d0 = first[w] - plan.initial_grad_rates[w];
+            let d1 = last[w] - plan.initial_grad_rates[w];
+            assert!(d0.abs() <= d1.abs() + 1e-12, "worker {w} drifts outward");
+        }
+    }
+
+    #[test]
+    fn static_plan_matches_graph_rates() {
+        let g = Graph::build(&Topology::Ring, 6).unwrap();
+        let base = vec![1.0; 6];
+        let plan = NetworkPlan::static_plan(g.clone(), 2.0, &base);
+        assert_eq!(plan.initial_edge_rates, g.edge_rates(2.0));
+        assert!(plan.updates.is_empty());
+        assert_eq!(plan.initial_grad_rates, base);
+    }
+
+    #[test]
+    fn compile_rejects_bad_sizes() {
+        let sc = Scenario::parse("ring").unwrap();
+        assert!(sc.compile(1, 1.0, 10.0, &[1.0]).is_err());
+        assert!(sc.compile(4, 1.0, 10.0, &[1.0; 3]).is_err());
+        assert!(sc.compile(4, 1.0, f64::INFINITY, &[1.0; 4]).is_err());
+        // Torus dims must match n at compile time.
+        let t = Scenario::parse("torus:3x3@0").unwrap();
+        assert!(t.compile(8, 1.0, 10.0, &[1.0; 8]).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! [`DynamicsCore`]: the per-event update logic of Eq. 4, shared by both
+//! execution engines.
+//!
+//! The core owns the *what* of every event — hyper-parameters (η, α, α̃),
+//! the continuous-momentum mixer, and the learning-rate schedule — and
+//! exposes one method per event type. The engines own the *when*: the
+//! simulator pops events from a [`crate::engine::VirtualTimeScheduler`],
+//! the runtime's threads fire them at wall-clock Poisson times. Either
+//! way, the same code path applies the update, so a scenario validated in
+//! fast simulation runs unchanged under true asynchrony.
+
+use crate::config::Method;
+use crate::gossip::dynamics::{comm_event, WorkerState};
+use crate::gossip::{AcidParams, Mixer};
+use crate::graph::Spectrum;
+use crate::optim::{LrSchedule, Sgd};
+
+/// Engine-agnostic event application for the Eq. 4 dynamic.
+#[derive(Clone, Debug)]
+pub struct DynamicsCore {
+    /// The (η, α, α̃) actually applied.
+    pub acid: AcidParams,
+    /// The continuous momentum flow `exp(Δt·[[−η,η],[η,−η]])`.
+    pub mixer: Mixer,
+    /// Per-worker learning-rate schedule, indexed by local step count.
+    pub lr: LrSchedule,
+}
+
+impl DynamicsCore {
+    /// Build from explicit parameters.
+    pub fn with_params(acid: AcidParams, lr: LrSchedule) -> Self {
+        Self { acid, mixer: Mixer::new(acid.eta), lr }
+    }
+
+    /// Build for a method over a network spectrum: [`Method::Acid`] takes
+    /// the Prop. 3.6 parameters, the async baseline η = 0.
+    /// [`Method::AllReduce`] has no gossip dynamic and is rejected.
+    pub fn for_method(method: Method, spectrum: &Spectrum, lr: LrSchedule) -> crate::Result<Self> {
+        anyhow::ensure!(
+            method != Method::AllReduce,
+            "the gossip dynamics core is for the asynchronous methods"
+        );
+        let acid = match method {
+            Method::Acid => AcidParams::from_spectrum(spectrum),
+            _ => AcidParams::baseline(),
+        };
+        Ok(Self::with_params(acid, lr))
+    }
+
+    /// Apply one gradient event at time `t`: momentum-mix the pair for
+    /// the elapsed time, fold the raw gradient through the optimizer, and
+    /// step both rows. The learning rate comes from the worker's own
+    /// event count (both engines agree on this indexing). Returns the
+    /// learning rate applied.
+    pub fn grad_event(
+        &self,
+        st: &mut WorkerState,
+        t: f64,
+        optim: &mut Sgd,
+        grad: &[f32],
+    ) -> f32 {
+        let lr = self.lr.at(st.n_grads) as f32;
+        let dir = optim.direction(grad);
+        st.apply_grad(t, lr, dir, &self.mixer);
+        lr
+    }
+
+    /// Apply one full pairwise communication event at time `t` with both
+    /// endpoints in hand (the virtual-time engine's path; fused).
+    pub fn comm_event(&self, a: &mut WorkerState, b: &mut WorkerState, t: f64) {
+        comm_event(a, b, t, &self.acid, &self.mixer);
+    }
+
+    /// Bring a worker's pair up to time `t` (lazy momentum flow). The
+    /// runtime calls this right before snapshotting parameters for a
+    /// pairwise exchange.
+    pub fn mix_to(&self, st: &mut WorkerState, t: f64) {
+        st.mix_to(t, &self.mixer);
+    }
+
+    /// Apply this endpoint's half of a communication event given the
+    /// peer's *already-mixed* parameters (the runtime's path: each side
+    /// mixes under its own lock, exchanges over the bus, then applies).
+    pub fn comm_half(&self, st: &mut WorkerState, peer_x: &[f32]) {
+        st.apply_comm(&self.acid, peer_x);
+    }
+
+    /// Sync every worker to a common evaluation time (completes the lazy
+    /// mixing; both engines do this before the closing All-Reduce).
+    pub fn sync_all(&self, workers: &mut [WorkerState], t: f64) {
+        for w in workers {
+            w.mix_to(t, &self.mixer);
+        }
+    }
+}
+
+/// Shared exponential-moving-average fold for train-loss reporting, NaN
+/// seeded (the first sample replaces it).
+#[derive(Clone, Copy, Debug)]
+pub struct LossEma;
+
+impl LossEma {
+    /// `beta·prev + (1−beta)·value`, or `value` when `prev` is NaN/∞.
+    #[inline]
+    pub fn fold(prev: f64, value: f64, beta: f64) -> f64 {
+        if prev.is_finite() {
+            beta * prev + (1.0 - beta) * value
+        } else {
+            value
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Topology};
+
+    fn spectrum() -> Spectrum {
+        Graph::build(&Topology::Ring, 8).unwrap().spectrum(1.0)
+    }
+
+    #[test]
+    fn for_method_selects_parameters() {
+        let lr = LrSchedule::Constant { lr: 0.1 };
+        let base = DynamicsCore::for_method(Method::AsyncBaseline, &spectrum(), lr.clone())
+            .unwrap();
+        assert!(!base.acid.is_accelerated());
+        let acid = DynamicsCore::for_method(Method::Acid, &spectrum(), lr.clone()).unwrap();
+        assert!(acid.acid.is_accelerated());
+        assert_eq!(acid.mixer.eta, acid.acid.eta);
+        assert!(DynamicsCore::for_method(Method::AllReduce, &spectrum(), lr).is_err());
+    }
+
+    #[test]
+    fn grad_event_applies_schedule_by_worker_step() {
+        // A schedule that changes per step must be indexed by the
+        // worker's own count, not any global counter.
+        let lr = LrSchedule::WarmupStep {
+            base_lr: 0.1,
+            scale: 1.0,
+            warmup_steps: 1,
+            milestones: vec![1],
+        };
+        let core = DynamicsCore::with_params(AcidParams::baseline(), lr);
+        let mut st = WorkerState::new(vec![0.0]);
+        let mut opt = Sgd::new(0.0);
+        let lr0 = core.grad_event(&mut st, 0.1, &mut opt, &[1.0]);
+        let lr1 = core.grad_event(&mut st, 0.2, &mut opt, &[1.0]);
+        assert!((lr0 - 0.1).abs() < 1e-6, "warmup step: {lr0}");
+        assert!((lr1 - 0.01).abs() < 1e-6, "post-milestone: {lr1}");
+        assert_eq!(st.n_grads, 2);
+        assert!((st.x[0] - (-0.11)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comm_paths_agree_between_engines() {
+        // The simulator's fused pair update and the runtime's
+        // mix-exchange-apply split must produce identical states.
+        let p = AcidParams::accelerated(10.0, 1.0);
+        let core = DynamicsCore::with_params(p, LrSchedule::Constant { lr: 0.1 });
+        let mk = |v: &[f32]| WorkerState::new(v.to_vec());
+
+        let mut a1 = mk(&[1.0, -2.0]);
+        let mut b1 = mk(&[3.0, 0.5]);
+        let mut opt = Sgd::new(0.0);
+        core.grad_event(&mut a1, 0.2, &mut opt, &[1.0, 1.0]);
+        let mut a2 = a1.clone();
+        let mut b2 = b1.clone();
+
+        // Engine 1: fused.
+        core.comm_event(&mut a1, &mut b1, 0.7);
+
+        // Engine 2: mix both, swap snapshots, apply halves.
+        core.mix_to(&mut a2, 0.7);
+        core.mix_to(&mut b2, 0.7);
+        let xa = a2.x.clone();
+        let xb = b2.x.clone();
+        core.comm_half(&mut a2, &xb);
+        core.comm_half(&mut b2, &xa);
+
+        for (u, v) in a1.x.iter().zip(&a2.x) {
+            assert!((u - v).abs() < 1e-5, "a.x: {u} vs {v}");
+        }
+        for (u, v) in b1.xt.iter().zip(&b2.xt) {
+            assert!((u - v).abs() < 1e-5, "b.xt: {u} vs {v}");
+        }
+        assert_eq!(a1.n_comms, a2.n_comms);
+    }
+
+    #[test]
+    fn sync_all_equalizes_event_times() {
+        let core =
+            DynamicsCore::with_params(AcidParams::accelerated(5.0, 1.0), LrSchedule::Constant {
+                lr: 0.1,
+            });
+        let mut ws = vec![WorkerState::new(vec![1.0]), WorkerState::new(vec![-1.0])];
+        let mut opt = Sgd::new(0.0);
+        core.grad_event(&mut ws[0], 0.3, &mut opt, &[0.5]);
+        core.sync_all(&mut ws, 2.0);
+        assert!(ws.iter().all(|w| w.t_last == 2.0));
+    }
+
+    #[test]
+    fn loss_ema_folds_and_seeds() {
+        assert_eq!(LossEma::fold(f64::NAN, 2.0, 0.9), 2.0);
+        let v = LossEma::fold(1.0, 2.0, 0.9);
+        assert!((v - 1.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! The shared execution core both engines drive.
+//!
+//! The repo used to implement Eq. 4 twice: once in the virtual-time
+//! simulator's event loop and once in the threaded runtime's worker
+//! cells — every new behavior (and every bug fix) had to land in both.
+//! This module factors the per-event update logic into one
+//! [`DynamicsCore`] and abstracts *when events happen* behind the
+//! [`Scheduler`] trait with two implementations:
+//!
+//! * [`VirtualTimeScheduler`] — the exact superposed-Poisson
+//!   [`crate::simulator::EventQueue`], interleaved with a compiled
+//!   scenario's timed rate updates; fully deterministic under a seed.
+//! * [`WallClock`] — the thread-shared network state the real-thread
+//!   runtime polls: per-worker Poisson communication rates, per-worker
+//!   speed factors, and the currently-active adjacency. Scenario updates
+//!   are applied by the runtime's monitor loop.
+//!
+//! [`BatchSampler`] is the shared mini-batch index stream (cursor +
+//! seeded random jump) that both the simulator and
+//! [`crate::runtime::RustGradSource`] draw from.
+
+pub mod core;
+pub mod sampler;
+pub mod scheduler;
+
+pub use self::core::{DynamicsCore, LossEma};
+pub use sampler::BatchSampler;
+pub use scheduler::{Scheduler, Tick, VirtualTimeScheduler, WallClock};

@@ -1,0 +1,97 @@
+//! Shared mini-batch index stream.
+//!
+//! Both engines used to carry their own copy of the same sampling loop: a
+//! shard cursor advanced by one plus a small seeded random jump, wrapping
+//! modulo the shard length. The jump breaks the pathological periodicity
+//! of workers sharing a shard while keeping the pass shard-ordered in
+//! expectation (the paper's "full dataset, different shuffle" setup
+//! degenerates to random cursor restarts here).
+
+use crate::rng::Xoshiro256;
+
+/// Cursor-plus-random-jump sampler over a shard of example indices.
+pub struct BatchSampler {
+    shard: Vec<usize>,
+    cursor: usize,
+    rng: Xoshiro256,
+    batch: Vec<usize>,
+}
+
+impl BatchSampler {
+    /// `shard` must be non-empty; `rng` is this worker's private stream.
+    pub fn new(shard: Vec<usize>, rng: Xoshiro256) -> Self {
+        assert!(!shard.is_empty(), "empty shard");
+        Self { shard, cursor: 0, rng, batch: Vec::new() }
+    }
+
+    /// Convenience constructor from a worker-indexed seed.
+    pub fn from_seed(shard: Vec<usize>, seed: u64) -> Self {
+        Self::new(shard, Xoshiro256::seed_from_u64(seed))
+    }
+
+    /// Number of examples in the shard.
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Draw the next mini-batch of `batch_size` example indices. The
+    /// returned slice is valid until the next call.
+    pub fn next_batch(&mut self, batch_size: usize) -> &[usize] {
+        self.batch.clear();
+        for _ in 0..batch_size {
+            let jump = self.rng.gen_range(3);
+            self.cursor = (self.cursor + 1 + jump) % self.shard.len();
+            self.batch.push(self.shard[self.cursor]);
+        }
+        &self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_stay_in_shard_and_are_deterministic() {
+        let shard: Vec<usize> = (100..150).collect();
+        let mut a = BatchSampler::from_seed(shard.clone(), 7);
+        let mut b = BatchSampler::from_seed(shard.clone(), 7);
+        for _ in 0..20 {
+            let ba = a.next_batch(8).to_vec();
+            let bb = b.next_batch(8).to_vec();
+            assert_eq!(ba, bb);
+            assert!(ba.iter().all(|i| shard.contains(i)));
+        }
+        assert_eq!(a.shard_len(), 50);
+    }
+
+    #[test]
+    fn different_seeds_decorrelate() {
+        let shard: Vec<usize> = (0..64).collect();
+        let mut a = BatchSampler::from_seed(shard.clone(), 1);
+        let mut b = BatchSampler::from_seed(shard, 2);
+        let same = (0..50)
+            .filter(|_| a.next_batch(4).to_vec() == b.next_batch(4).to_vec())
+            .count();
+        assert!(same < 5, "seeds should decorrelate, {same} equal batches");
+    }
+
+    #[test]
+    fn covers_the_shard_over_time() {
+        let shard: Vec<usize> = (0..32).collect();
+        let mut s = BatchSampler::from_seed(shard, 3);
+        let mut seen = [false; 32];
+        for _ in 0..100 {
+            for &i in s.next_batch(8) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "cursor pass covers the shard");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_shard() {
+        BatchSampler::from_seed(Vec::new(), 0);
+    }
+}

@@ -1,0 +1,375 @@
+//! Event scheduling: *when* the dynamics fire.
+//!
+//! Two [`Scheduler`] implementations replay the same compiled
+//! [`NetworkPlan`]:
+//!
+//! * [`VirtualTimeScheduler`] — wraps the exact superposed-Poisson
+//!   [`EventQueue`] and interleaves the plan's timed updates between
+//!   events, so a scenario replays bit-identically under a seed.
+//! * [`WallClock`] — the lock-light shared state real threads poll:
+//!   per-worker communication rates (the Poisson budget draw), per-worker
+//!   speed factors, and the active adjacency the pairing coordinator
+//!   consults. The runtime's monitor loop pushes plan updates into it as
+//!   normalized wall-clock time crosses each update's timestamp.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::scenario::{NetUpdate, NetworkPlan};
+use crate::graph::Graph;
+use crate::simulator::events::{EventKind, EventQueue};
+
+/// One dynamics event, with the union-edge endpoints already resolved.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Tick {
+    /// Worker `worker` finishes a mini-batch gradient at time `t`.
+    Grad { worker: usize, t: f64 },
+    /// Workers `i` and `j` perform a pairwise averaging at time `t`.
+    Comm { i: usize, j: usize, t: f64 },
+}
+
+/// The engine-facing slice both schedulers share: scenario updates are
+/// pushed through `apply`, whatever the engine's notion of time is.
+pub trait Scheduler {
+    /// Retune the live rate/adjacency state to a compiled update.
+    fn apply(&mut self, upd: &NetUpdate);
+    /// Number of updates applied so far.
+    fn updates_applied(&self) -> u64;
+}
+
+/// Exact virtual-time scheduler: the superposed Poisson clock plus the
+/// plan's pending updates, applied *between* events in timestamp order.
+pub struct VirtualTimeScheduler {
+    queue: EventQueue,
+    edges: Vec<(usize, usize)>,
+    pending: std::collections::VecDeque<NetUpdate>,
+    applied: u64,
+}
+
+impl VirtualTimeScheduler {
+    /// Build from a compiled plan. `seed` drives the Poisson clock.
+    pub fn new(plan: &NetworkPlan, seed: u64) -> Self {
+        Self {
+            queue: EventQueue::new(&plan.initial_grad_rates, &plan.initial_edge_rates, seed),
+            edges: plan.union.edges.clone(),
+            pending: plan.updates.iter().cloned().collect(),
+            applied: 0,
+        }
+    }
+
+    /// Current virtual time (the last popped event's timestamp).
+    pub fn now(&self) -> f64 {
+        self.queue.now
+    }
+
+    pub fn n_grad_events(&self) -> u64 {
+        self.queue.n_grad_events
+    }
+
+    pub fn n_comm_events(&self) -> u64 {
+        self.queue.n_comm_events
+    }
+
+    /// Pop the next dynamics event, applying every plan update whose time
+    /// has come first. `None` only if every process is silenced and no
+    /// update remains.
+    pub fn next(&mut self) -> Option<Tick> {
+        loop {
+            let horizon = self.pending.front().map_or(f64::INFINITY, |u| u.t);
+            if let Some(ev) = self.queue.next(horizon) {
+                return Some(match ev.kind {
+                    EventKind::Grad { worker } => Tick::Grad { worker, t: ev.t },
+                    EventKind::Comm { edge } => {
+                        let (i, j) = self.edges[edge];
+                        Tick::Comm { i, j, t: ev.t }
+                    }
+                });
+            }
+            let upd = self.pending.pop_front()?;
+            Scheduler::apply(self, &upd);
+        }
+    }
+}
+
+impl Scheduler for VirtualTimeScheduler {
+    fn apply(&mut self, upd: &NetUpdate) {
+        // Retunes resample from the queue's clock; move it to the
+        // update's own timestamp so the new rates govern [upd.t, ∞), not
+        // the gap back to the last popped event.
+        self.queue.advance_to(upd.t);
+        if let Some(rates) = &upd.edge_rates {
+            for (e, &r) in rates.iter().enumerate() {
+                self.queue.set_comm_rate(e, r);
+            }
+        }
+        if let Some(rates) = &upd.grad_rates {
+            for (w, &r) in rates.iter().enumerate() {
+                self.queue.set_grad_rate(w, r);
+            }
+        }
+        self.applied += 1;
+    }
+
+    fn updates_applied(&self) -> u64 {
+        self.applied
+    }
+}
+
+/// Thread-shared network state for the wall-clock engine.
+///
+/// Readers (one gradient + one communication thread per worker, plus the
+/// pairing coordinator) see: the worker's total communication rate
+/// `Σ_j λ^ij` over *active* incident links (the Poisson budget mean per
+/// gradient step), the worker's relative speed factor, and the active
+/// adjacency. Writers (the monitor loop replaying a scenario) swap whole
+/// rate tables; rates and speeds are lock-free atomics, adjacency is
+/// behind a seldom-written `RwLock`.
+pub struct WallClock {
+    n: usize,
+    edges: Vec<(usize, usize)>,
+    union_neighbors: Vec<Vec<usize>>,
+    /// Per-worker Σ of active incident edge rates, as f64 bits.
+    comm_rates: Vec<AtomicU64>,
+    /// Per-worker relative compute speed (1.0 = nominal), as f64 bits.
+    speeds: Vec<AtomicU64>,
+    /// Max over `speeds` (f64 bits) — real threads cannot run FASTER
+    /// than the hardware, so the runtime normalizes to the fastest
+    /// worker and stretches everyone else relative to it, preserving
+    /// the compiled speed *ratios*.
+    max_speed: AtomicU64,
+    /// Active adjacency lists (sorted), rebuilt on edge-rate updates.
+    active: RwLock<Vec<Vec<usize>>>,
+    /// Bumped on every applied update (cheap change detection).
+    version: AtomicU64,
+    applied: AtomicU64,
+}
+
+impl WallClock {
+    /// Build from a compiled plan's initial state.
+    pub fn new(plan: &NetworkPlan) -> Self {
+        let n = plan.union.n;
+        let wc = Self {
+            n,
+            edges: plan.union.edges.clone(),
+            union_neighbors: plan.union.neighbors.clone(),
+            comm_rates: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            speeds: (0..n).map(|_| AtomicU64::new(1f64.to_bits())).collect(),
+            max_speed: AtomicU64::new(1f64.to_bits()),
+            active: RwLock::new(vec![Vec::new(); n]),
+            version: AtomicU64::new(0),
+            applied: AtomicU64::new(0),
+        };
+        wc.set_edge_rates(&plan.initial_edge_rates);
+        wc.set_speeds(&plan.initial_grad_rates);
+        wc
+    }
+
+    /// Static-network helper (tests, plain runs): every edge live at the
+    /// graph's degree-based rates.
+    pub fn from_graph(graph: &Graph, comm_rate: f64) -> Self {
+        let base = vec![1.0; graph.n];
+        Self::new(&NetworkPlan::static_plan(graph.clone(), comm_rate, &base))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The union edge list all rate vectors index into.
+    pub fn union_edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Neighbors in the union graph (the set of workers that could EVER
+    /// pair with `w` under some phase — liveness checks use this).
+    pub fn union_neighbors(&self, w: usize) -> &[usize] {
+        &self.union_neighbors[w]
+    }
+
+    /// Worker `w`'s current total communication rate.
+    pub fn comm_rate(&self, w: usize) -> f64 {
+        f64::from_bits(self.comm_rates[w].load(Ordering::Relaxed))
+    }
+
+    /// Worker `w`'s current relative compute speed.
+    pub fn speed(&self, w: usize) -> f64 {
+        f64::from_bits(self.speeds[w].load(Ordering::Relaxed))
+    }
+
+    /// The fastest worker's current speed (the runtime's pace anchor).
+    pub fn max_speed(&self) -> f64 {
+        f64::from_bits(self.max_speed.load(Ordering::Relaxed))
+    }
+
+    /// How much worker `w` must stretch its compute time relative to the
+    /// fastest worker (≥ 1). The wall-clock engine sleeps the excess so
+    /// the compiled speed ratios are reproduced even when the scenario
+    /// assigns speeds above nominal.
+    pub fn stretch(&self, w: usize) -> f64 {
+        (self.max_speed() / self.speed(w).max(0.05)).max(1.0)
+    }
+
+    /// Whether the link `(i, j)` is currently active (rate > 0).
+    pub fn has_active_edge(&self, i: usize, j: usize) -> bool {
+        self.active.read().unwrap()[i].binary_search(&j).is_ok()
+    }
+
+    /// Monotonic change counter (readers cache derived state against it).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    fn set_edge_rates(&self, rates: &[f64]) {
+        assert_eq!(rates.len(), self.edges.len(), "one rate per union edge");
+        let mut totals = vec![0.0f64; self.n];
+        let mut adj = vec![Vec::new(); self.n];
+        for (&(i, j), &r) in self.edges.iter().zip(rates) {
+            if r > 0.0 {
+                totals[i] += r;
+                totals[j] += r;
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+        for list in &mut adj {
+            list.sort_unstable();
+        }
+        *self.active.write().unwrap() = adj;
+        for (slot, &t) in self.comm_rates.iter().zip(&totals) {
+            slot.store(t.to_bits(), Ordering::Release);
+        }
+    }
+
+    fn set_speeds(&self, rates: &[f64]) {
+        assert_eq!(rates.len(), self.n, "one speed per worker");
+        let mut max = f64::MIN;
+        for (slot, &r) in self.speeds.iter().zip(rates) {
+            slot.store(r.to_bits(), Ordering::Release);
+            max = max.max(r);
+        }
+        self.max_speed.store(max.max(0.05).to_bits(), Ordering::Release);
+    }
+
+    /// Apply a plan update through a shared reference (the trait's `&mut`
+    /// surface is implemented on `Arc<WallClock>`).
+    pub fn apply_shared(&self, upd: &NetUpdate) {
+        if let Some(rates) = &upd.edge_rates {
+            self.set_edge_rates(rates);
+        }
+        if let Some(rates) = &upd.grad_rates {
+            self.set_speeds(rates);
+        }
+        self.version.fetch_add(1, Ordering::AcqRel);
+        self.applied.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+impl Scheduler for Arc<WallClock> {
+    fn apply(&mut self, upd: &NetUpdate) {
+        self.apply_shared(upd);
+    }
+
+    fn updates_applied(&self) -> u64 {
+        self.applied.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::graph::Topology;
+
+    fn plan(s: &str, n: usize, horizon: f64) -> NetworkPlan {
+        Scenario::parse(s).unwrap().compile(n, 1.0, horizon, &vec![1.0; n]).unwrap()
+    }
+
+    #[test]
+    fn virtual_scheduler_replays_deterministically() {
+        let run = |seed: u64| {
+            let plan = plan("ring@0,complete@0.5;drop=0.3:0.2:0.8:3", 6, 50.0);
+            let mut sched = VirtualTimeScheduler::new(&plan, seed);
+            let mut ticks = Vec::new();
+            for _ in 0..2000 {
+                ticks.push(sched.next().unwrap());
+            }
+            (ticks, sched.updates_applied())
+        };
+        let (a, ua) = run(9);
+        let (b, ub) = run(9);
+        assert_eq!(a, b);
+        assert_eq!(ua, ub);
+        let (c, _) = run(10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn virtual_scheduler_applies_updates_in_time_order() {
+        let plan = plan("ring@0,complete@0.5", 6, 50.0);
+        let mut sched = VirtualTimeScheduler::new(&plan, 1);
+        let mut saw_non_ring_before_switch = false;
+        let mut saw_non_ring_after_switch = false;
+        let ring = Graph::build(&Topology::Ring, 6).unwrap();
+        for _ in 0..4000 {
+            let Some(tick) = sched.next() else { break };
+            if let Tick::Comm { i, j, t } = tick {
+                if !ring.has_edge(i, j) {
+                    if t < 25.0 {
+                        saw_non_ring_before_switch = true;
+                    } else {
+                        saw_non_ring_after_switch = true;
+                    }
+                }
+            }
+        }
+        assert!(!saw_non_ring_before_switch, "chord fired before the switch");
+        assert!(saw_non_ring_after_switch, "chords never fired after the switch");
+        assert_eq!(sched.updates_applied(), 1);
+    }
+
+    #[test]
+    fn wall_clock_tracks_rates_and_adjacency() {
+        let plan = plan("ring@0,complete@0.5", 4, 10.0);
+        let wc = WallClock::new(&plan);
+        assert_eq!(wc.n(), 4);
+        // Ring phase: each worker's total rate ≈ 1, chords inactive.
+        assert!((wc.comm_rate(0) - 1.0).abs() < 1e-9);
+        assert!(wc.has_active_edge(0, 1));
+        assert!(!wc.has_active_edge(0, 2));
+        assert_eq!(wc.speed(2), 1.0);
+        let v0 = wc.version();
+        // Apply the switch: chords activate.
+        let mut shared = Arc::new(wc);
+        let upd = plan.updates[0].clone();
+        Scheduler::apply(&mut shared, &upd);
+        assert!(shared.has_active_edge(0, 2));
+        assert!(shared.version() > v0);
+        assert_eq!(Scheduler::updates_applied(&shared), 1);
+        // Union adjacency is phase-independent.
+        assert_eq!(shared.union_neighbors(0).len(), 3);
+    }
+
+    #[test]
+    fn wall_clock_speed_updates() {
+        let plan = plan("ring@0;drift=0.5:2:4", 4, 20.0);
+        let wc = WallClock::new(&plan);
+        let before: Vec<f64> = (0..4).map(|w| wc.speed(w)).collect();
+        for upd in &plan.updates {
+            wc.apply_shared(upd);
+        }
+        let after: Vec<f64> = (0..4).map(|w| wc.speed(w)).collect();
+        assert_ne!(before, after);
+        assert!(after.iter().all(|&s| s > 0.0));
+        // Stretch anchors on the fastest worker: the max-speed worker
+        // runs nominal (stretch 1), everyone else stretches by the
+        // compiled speed ratio — speeds ABOVE 1.0 are honored too.
+        let max = after.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((wc.max_speed() - max).abs() < 1e-12);
+        for w in 0..4 {
+            let expect = (max / after[w].max(0.05)).max(1.0);
+            assert!((wc.stretch(w) - expect).abs() < 1e-9, "worker {w}");
+        }
+        let fastest = after.iter().position(|&s| s == max).unwrap();
+        assert!((wc.stretch(fastest) - 1.0).abs() < 1e-12);
+    }
+}

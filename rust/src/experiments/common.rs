@@ -200,6 +200,26 @@ pub fn base_config(scale: Scale) -> ExperimentConfig {
         dataset_size: 4096,
         seed: 0,
         compute_jitter: 0.1,
+        scenario: None,
+    }
+}
+
+/// Uniform "what a bench prints" view over the two experiment return
+/// shapes (`Vec<Table>` or `(rows, Vec<Table>)`) — the `bench_main!`
+/// macro renders any experiment through this.
+pub trait IntoTables {
+    fn into_tables(self) -> Vec<crate::metrics::Table>;
+}
+
+impl IntoTables for Vec<crate::metrics::Table> {
+    fn into_tables(self) -> Vec<crate::metrics::Table> {
+        self
+    }
+}
+
+impl<T> IntoTables for (T, Vec<crate::metrics::Table>) {
+    fn into_tables(self) -> Vec<crate::metrics::Table> {
+        self.1
     }
 }
 

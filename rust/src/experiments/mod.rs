@@ -22,6 +22,11 @@
 //! | [`tab4`]  | Tab. 4  | CIFAR-like accuracy across 3 graphs × n |
 //! | [`tab5`]  | Tab. 5  | ImageNet-like accuracy on the ring, rates 1 & 2 |
 //! | [`tab6`]  | Tab. 6  | wall time + #∇ slowest/fastest worker |
+//!
+//! Beyond the paper: [`scenario`] stresses A²CiD² on *time-varying*
+//! networks (mid-run topology switch + link dropout) — conditions the
+//! paper's "poorly connected networks" claim is about but its experiments
+//! never exercise.
 
 pub mod ablation;
 pub mod common;
@@ -32,6 +37,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod scenario;
 pub mod tab1;
 pub mod tab2;
 pub mod tab3;
@@ -39,4 +45,30 @@ pub mod tab4;
 pub mod tab5;
 pub mod tab6;
 
-pub use common::{train_once, Scale, TrainOutcome};
+pub use common::{train_once, IntoTables, Scale, TrainOutcome};
+
+/// Generate a bench `main` for one experiment module: run it at the
+/// env-selected scale, print its tables, report the elapsed time. Every
+/// `rust/benches/<exp>.rs` target is exactly one invocation of this (they
+/// used to be 14 copies of the same 11-line stub).
+#[macro_export]
+macro_rules! bench_main {
+    ($exp:ident) => {
+        fn main() {
+            use $crate::experiments::IntoTables;
+            let scale = $crate::experiments::Scale::from_env();
+            let t0 = std::time::Instant::now();
+            let tables = $crate::experiments::$exp::run(scale)
+                .expect(stringify!($exp))
+                .into_tables();
+            for t in tables {
+                t.print();
+            }
+            println!(
+                "[{}] completed in {:.1}s at {scale:?} scale",
+                stringify!($exp),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    };
+}

@@ -189,6 +189,19 @@ impl Graph {
         Ok(g)
     }
 
+    /// Build a graph from an explicit edge list (loops dropped, duplicates
+    /// merged, endpoints canonicalized to `i < j`). Used by the scenario
+    /// layer to form the *union graph* over all phases of a time-varying
+    /// network; connectivity is NOT enforced here.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Graph {
+        let set: std::collections::BTreeSet<(usize, usize)> = edges
+            .into_iter()
+            .filter(|&(i, j)| i != j)
+            .map(|(i, j)| (i.min(j), i.max(j)))
+            .collect();
+        Graph::from_edge_set(n, &set)
+    }
+
     fn from_edge_set(n: usize, set: &std::collections::BTreeSet<(usize, usize)>) -> Graph {
         let edges: Vec<(usize, usize)> = set.iter().copied().collect();
         let mut neighbors = vec![Vec::new(); n];
@@ -482,5 +495,38 @@ mod tests {
         );
         assert!(Topology::parse("nope").is_err());
         assert!(Topology::parse("torus:4").is_err());
+    }
+
+    #[test]
+    fn topology_parse_error_paths() {
+        // Torus: missing dims, non-numeric dims, wrong arity.
+        for bad in ["torus", "torus:4", "torus:axb", "torus:4x", "torus:4x8x2"] {
+            assert!(Topology::parse(bad).is_err(), "should reject '{bad}'");
+        }
+        // Erdős–Rényi: missing or malformed p / seed.
+        for bad in ["erdos", "erdos:nan-ish", "erdos:0.3:xyz"] {
+            assert!(Topology::parse(bad).is_err(), "should reject '{bad}'");
+        }
+        // Unknown names (including near-misses) fail loudly.
+        for bad in ["", "rings", "complete-graph", "hyper", "expo "] {
+            assert!(Topology::parse(bad).is_err(), "should reject '{bad}'");
+        }
+        // Out-of-range erdos p parses the float but fails build.
+        let p2 = Topology::parse("erdos:1.5").unwrap();
+        assert!(Graph::build(&p2, 8).is_err());
+        // Erdos seed defaults to 0 when omitted.
+        assert_eq!(
+            Topology::parse("erdos:0.5").unwrap(),
+            Topology::ErdosRenyi { p: 0.5, seed: 0 }
+        );
+    }
+
+    #[test]
+    fn from_edges_canonicalizes() {
+        // Duplicates, reversed pairs and self-loops collapse away.
+        let g = Graph::from_edges(4, vec![(1, 0), (0, 1), (2, 2), (3, 2), (0, 3)]);
+        assert_eq!(g.edges, vec![(0, 1), (0, 3), (2, 3)]);
+        assert_eq!(g.degree(0), 2);
+        assert!(!g.is_connected(), "2 is only reachable via 3");
     }
 }

@@ -17,14 +17,18 @@
 //!
 //! The public surface is organized bottom-up: substrates ([`rng`],
 //! [`linalg`], [`graph`], [`data`], [`model`], [`optim`], [`metrics`],
-//! [`config`]), the paper's algorithm ([`gossip`]), and two execution
-//! engines ([`simulator`] for virtual time, [`runtime`] for real threads +
-//! PJRT). [`experiments`] maps every table and figure of the paper to a
-//! runnable driver.
+//! [`config`]), the paper's algorithm ([`gossip`]), the shared execution
+//! core ([`engine`]: the per-event [`engine::DynamicsCore`] plus the
+//! [`engine::Scheduler`] implementations both engines drive), and two
+//! execution engines ([`simulator`] for virtual time, [`runtime`] for
+//! real threads + PJRT) that replay the same time-varying network
+//! [`config::Scenario`]s. [`experiments`] maps every table and figure of
+//! the paper to a runnable driver.
 
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod gossip;
 pub mod graph;

@@ -8,7 +8,7 @@
 //! ```
 
 use a2cid2::cli::Cli;
-use a2cid2::config::{ExperimentConfig, Method, Task};
+use a2cid2::config::{ExperimentConfig, Method, Scenario, Task};
 use a2cid2::experiments::{self, Scale};
 use a2cid2::graph::{Graph, Topology};
 use a2cid2::metrics::Table;
@@ -25,6 +25,11 @@ fn cli() -> Cli {
         .opt("config", "TOML experiment config file", None)
         .opt("workers", "number of workers", Some("8"))
         .opt("topology", "complete|ring|exponential|star|path|hypercube|torus:RxC|erdos:p", Some("ring"))
+        .opt(
+            "scenario",
+            "time-varying network, e.g. 'ring@0,exp@0.5;drop=0.2:0.25:0.75;het=0.5;drift=0.3' (supersedes --topology)",
+            None,
+        )
         .opt("method", "allreduce|baseline|a2cid2", Some("a2cid2"))
         .opt("task", "cifar-like|imagenet-like", Some("cifar-like"))
         .opt("rate", "p2p communications per gradient step", Some("1.0"))
@@ -110,7 +115,9 @@ fn real_main() -> a2cid2::Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
-                    anyhow::anyhow!("experiment needs an id (fig1..fig7, tab1..tab6, all)")
+                    anyhow::anyhow!(
+                        "experiment needs an id (fig1..fig7, tab1..tab6, ablation, scenario, all)"
+                    )
                 })?;
             run_experiments(id, scale)?;
         }
@@ -149,6 +156,9 @@ fn build_config(args: &a2cid2::cli::Args) -> a2cid2::Result<ExperimentConfig> {
     cfg.steps_per_worker = args.get_parse("steps")?;
     cfg.base_lr = args.get_parse("lr")?;
     cfg.seed = args.get_parse("seed")?;
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = Some(Scenario::parse(s)?);
+    }
     cfg.validate()
 }
 
@@ -161,7 +171,7 @@ fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
     let ids: Vec<&str> = if id == "all" {
         vec![
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "tab3",
-            "tab4", "tab5", "tab6", "ablation",
+            "tab4", "tab5", "tab6", "ablation", "scenario",
         ]
     } else {
         vec![id]
@@ -183,6 +193,7 @@ fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
             "tab5" => print_all(experiments::tab5::run(scale)?),
             "tab6" => print_all(experiments::tab6::run(scale)?.1),
             "ablation" => print_all(experiments::ablation::run(scale)?.1),
+            "scenario" => print_all(experiments::scenario::run(scale)?.1),
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
     }

@@ -5,33 +5,58 @@
 //! averaging, still have budget before the next gradient step) declare
 //! themselves *available*; the coordinator keeps a FIFO availability
 //! queue and pairs an arriving worker with the **first** queued worker
-//! adjacent to it in the communication graph. Only worker *indices* flow
-//! through the coordinator — parameter payloads go peer-to-peer over the
-//! [`super::bus`] — which is the paper's "the coordinator only exchanges
-//! integers with the workers" lightweightness.
+//! adjacent to it in the *currently active* communication graph (the
+//! [`WallClock`] view — a scenario may switch topologies or drop links
+//! mid-run). Only worker *indices* flow through the coordinator —
+//! parameter payloads go peer-to-peer over the [`super::bus`] — which is
+//! the paper's "the coordinator only exchanges integers with the workers"
+//! lightweightness.
 //!
-//! Liveness argument (no deadlock, unlike AD-PSGD's locks): the queue
-//! never holds two adjacent workers (they would have been paired on
-//! arrival), so every queued worker's neighbors are each either (a)
-//! active — and will eventually arrive and pair with it, or (b)
-//! permanently departed — and on every departure the coordinator
-//! re-checks all waiters and releases those whose entire neighborhood has
-//! left. Queued waiters therefore always make progress.
+//! Liveness under a time-varying graph: a queued worker may transiently
+//! have no active neighbor, so release-on-`None` can no longer be decided
+//! from adjacency alone. Three mechanisms keep everyone live:
+//!
+//! * a worker whose entire *union-graph* neighborhood has permanently
+//!   departed is released with [`PairReply::NoPartnerEver`] (no phase can
+//!   ever supply it a partner again);
+//! * a waiting worker may time out and send [`CoordMsg::Cancel`]; the
+//!   coordinator acknowledges with [`PairReply::Cancelled`] if the worker
+//!   was still queued — or the worker finds the pairing that raced ahead
+//!   of its cancel in its reply mailbox and honors it;
+//! * on [`CoordMsg::Reconfigure`] (a scenario update landed) the queue is
+//!   re-scanned and waiters that just became adjacent are paired.
 
 use std::collections::HashSet;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::engine::WallClock;
 use crate::graph::Graph;
 
-/// Messages from workers to the coordinator.
+/// Messages from workers (and the monitor) to the coordinator.
 pub enum CoordMsg {
     /// Worker is ready for one pairwise averaging; the coordinator replies
-    /// on `reply` with `Some(peer)` or `None` (no possible partner ever
-    /// again — stop communicating).
-    Available { worker: usize, reply: mpsc::Sender<Option<usize>> },
+    /// on `reply` with a [`PairReply`].
+    Available { worker: usize, reply: mpsc::Sender<PairReply> },
+    /// Worker gave up waiting (budget re-check); acknowledged with
+    /// [`PairReply::Cancelled`] unless a pairing raced ahead.
+    Cancel { worker: usize },
     /// Worker permanently leaves (its training and budget are exhausted).
     Leave { worker: usize },
+    /// The active network changed (scenario update): re-scan the queue.
+    Reconfigure,
+}
+
+/// Coordinator's answer to an [`CoordMsg::Available`] declaration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairReply {
+    /// Averaging partner assigned.
+    Peer(usize),
+    /// No partner can ever arrive again — stop communicating.
+    NoPartnerEver,
+    /// The pending availability was cancelled at the worker's request.
+    Cancelled,
 }
 
 /// Pairing history: `counts[i][j]` = number of averagings between i and j
@@ -105,24 +130,25 @@ impl PairingStats {
     }
 }
 
-/// Spawn the coordinator thread. It exits (returning the pairing stats)
-/// once every worker has sent [`CoordMsg::Leave`].
+/// Spawn the coordinator thread over the shared network view. It exits
+/// (returning the pairing stats) once every worker has sent
+/// [`CoordMsg::Leave`].
 pub fn spawn_coordinator(
-    graph: std::sync::Arc<Graph>,
+    net: Arc<WallClock>,
 ) -> (mpsc::Sender<CoordMsg>, JoinHandle<PairingStats>) {
     let (tx, rx) = mpsc::channel::<CoordMsg>();
     let handle = std::thread::Builder::new()
         .name("a2cid2-coordinator".into())
-        .spawn(move || coordinator_loop(&graph, rx))
+        .spawn(move || coordinator_loop(&net, rx))
         .expect("spawn coordinator");
     (tx, handle)
 }
 
-fn coordinator_loop(graph: &Graph, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
-    let n = graph.n;
+fn coordinator_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
+    let n = net.n();
     let mut stats = PairingStats::new(n);
     // FIFO availability queue: (worker, reply channel).
-    let mut queue: Vec<(usize, mpsc::Sender<Option<usize>>)> = Vec::new();
+    let mut queue: Vec<(usize, mpsc::Sender<PairReply>)> = Vec::new();
     let mut left: HashSet<usize> = HashSet::new();
 
     while left.len() < n {
@@ -133,32 +159,40 @@ fn coordinator_loop(graph: &Graph, rx: mpsc::Receiver<CoordMsg>) -> PairingStats
         match msg {
             CoordMsg::Available { worker, reply } => {
                 debug_assert!(!left.contains(&worker), "available after leave");
-                // FIFO scan: pair with the first queued neighbor.
+                // FIFO scan: pair with the first queued active neighbor.
                 if let Some(pos) =
-                    queue.iter().position(|(q, _)| graph.has_edge(*q, worker))
+                    queue.iter().position(|(q, _)| net.has_active_edge(*q, worker))
                 {
                     let (peer, peer_reply) = queue.remove(pos);
                     stats.record(worker, peer);
                     // Replies may fail if a worker died; ignore — the
                     // partner's bus send will surface the error.
-                    let _ = peer_reply.send(Some(worker));
-                    let _ = reply.send(Some(peer));
-                } else if graph.neighbors[worker].iter().all(|nb| left.contains(nb)) {
-                    // No partner can ever arrive.
-                    let _ = reply.send(None);
+                    let _ = peer_reply.send(PairReply::Peer(worker));
+                    let _ = reply.send(PairReply::Peer(peer));
+                } else if net.union_neighbors(worker).iter().all(|nb| left.contains(nb)) {
+                    // No phase of the scenario can ever supply a partner.
+                    let _ = reply.send(PairReply::NoPartnerEver);
                 } else {
                     queue.push((worker, reply));
                 }
+            }
+            CoordMsg::Cancel { worker } => {
+                if let Some(pos) = queue.iter().position(|(q, _)| *q == worker) {
+                    let (_, reply) = queue.remove(pos);
+                    let _ = reply.send(PairReply::Cancelled);
+                }
+                // Not queued: a pairing raced ahead of the cancel; the
+                // worker will find PairReply::Peer in its mailbox.
             }
             CoordMsg::Leave { worker } => {
                 if !left.insert(worker) {
                     continue; // idempotent
                 }
                 queue.retain(|(q, _)| *q != worker);
-                // Release waiters whose whole neighborhood has departed.
+                // Release waiters whose whole union neighborhood departed.
                 let mut released = Vec::new();
                 queue.retain(|(q, reply)| {
-                    if graph.neighbors[*q].iter().all(|nb| left.contains(nb)) {
+                    if net.union_neighbors(*q).iter().all(|nb| left.contains(nb)) {
                         released.push(reply.clone());
                         false
                     } else {
@@ -166,7 +200,26 @@ fn coordinator_loop(graph: &Graph, rx: mpsc::Receiver<CoordMsg>) -> PairingStats
                     }
                 });
                 for r in released {
-                    let _ = r.send(None);
+                    let _ = r.send(PairReply::NoPartnerEver);
+                }
+            }
+            CoordMsg::Reconfigure => {
+                // The active graph changed: greedily pair now-adjacent
+                // waiters, FIFO order.
+                let mut i = 0;
+                while i < queue.len() {
+                    let partner = (i + 1..queue.len())
+                        .find(|&j| net.has_active_edge(queue[i].0, queue[j].0));
+                    match partner {
+                        Some(j) => {
+                            let (b, b_reply) = queue.remove(j);
+                            let (a, a_reply) = queue.remove(i);
+                            stats.record(a, b);
+                            let _ = a_reply.send(PairReply::Peer(b));
+                            let _ = b_reply.send(PairReply::Peer(a));
+                        }
+                        None => i += 1,
+                    }
                 }
             }
         }
@@ -178,16 +231,18 @@ fn coordinator_loop(graph: &Graph, rx: mpsc::Receiver<CoordMsg>) -> PairingStats
 mod tests {
     use super::*;
     use crate::graph::Topology;
-    use std::sync::Arc;
 
-    fn ring(n: usize) -> Arc<Graph> {
-        Arc::new(Graph::build(&Topology::Ring, n).unwrap())
+    fn ring(n: usize) -> Arc<WallClock> {
+        Arc::new(WallClock::from_graph(
+            &Graph::build(&Topology::Ring, n).unwrap(),
+            1.0,
+        ))
     }
 
     fn available(
         tx: &mpsc::Sender<CoordMsg>,
         worker: usize,
-    ) -> mpsc::Receiver<Option<usize>> {
+    ) -> mpsc::Receiver<PairReply> {
         let (rtx, rrx) = mpsc::channel();
         tx.send(CoordMsg::Available { worker, reply: rtx }).unwrap();
         rrx
@@ -197,16 +252,16 @@ mod tests {
     fn adjacent_workers_get_paired_fifo() {
         let (tx, handle) = spawn_coordinator(ring(4));
         let r0 = available(&tx, 0);
-        // 2 is not adjacent to 0 on the 4-ring? ring(4): 0-1,1-2,2-3,0-3.
+        // 2 is not adjacent to 0 on the 4-ring: ring(4) = 0-1,1-2,2-3,0-3.
         let r2 = available(&tx, 2);
         // 1 is adjacent to both 0 and 2; FIFO pairs it with 0 (first).
         let r1 = available(&tx, 1);
-        assert_eq!(r0.recv().unwrap(), Some(1));
-        assert_eq!(r1.recv().unwrap(), Some(0));
+        assert_eq!(r0.recv().unwrap(), PairReply::Peer(1));
+        assert_eq!(r1.recv().unwrap(), PairReply::Peer(0));
         // 3 arrives, pairs with the waiting 2.
         let r3 = available(&tx, 3);
-        assert_eq!(r2.recv().unwrap(), Some(3));
-        assert_eq!(r3.recv().unwrap(), Some(2));
+        assert_eq!(r2.recv().unwrap(), PairReply::Peer(3));
+        assert_eq!(r3.recv().unwrap(), PairReply::Peer(2));
         for w in 0..4 {
             tx.send(CoordMsg::Leave { worker: w }).unwrap();
         }
@@ -226,12 +281,12 @@ mod tests {
         assert!(r3.try_recv().is_err());
         // 1 pairs with 0 (not with 3).
         let r1 = available(&tx, 1);
-        assert_eq!(r0.recv().unwrap(), Some(1));
-        assert_eq!(r1.recv().unwrap(), Some(0));
+        assert_eq!(r0.recv().unwrap(), PairReply::Peer(1));
+        assert_eq!(r1.recv().unwrap(), PairReply::Peer(0));
         // 4 pairs with 3.
         let r4 = available(&tx, 4);
-        assert_eq!(r3.recv().unwrap(), Some(4));
-        assert_eq!(r4.recv().unwrap(), Some(3));
+        assert_eq!(r3.recv().unwrap(), PairReply::Peer(4));
+        assert_eq!(r4.recv().unwrap(), PairReply::Peer(3));
         for w in 0..6 {
             tx.send(CoordMsg::Leave { worker: w }).unwrap();
         }
@@ -243,10 +298,10 @@ mod tests {
     fn waiter_released_when_neighborhood_leaves() {
         let (tx, handle) = spawn_coordinator(ring(4));
         let r0 = available(&tx, 0);
-        // 0's neighbors are 1 and 3; both leave → 0 gets None.
+        // 0's neighbors are 1 and 3; both leave → 0 gets NoPartnerEver.
         tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
         tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
-        assert_eq!(r0.recv().unwrap(), None);
+        assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver);
         tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
         tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
         handle.join().unwrap();
@@ -258,7 +313,7 @@ mod tests {
         tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
         tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
         let r0 = available(&tx, 0);
-        assert_eq!(r0.recv().unwrap(), None);
+        assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver);
         tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
         tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
         handle.join().unwrap();
@@ -277,8 +332,53 @@ mod tests {
     }
 
     #[test]
+    fn cancel_removes_a_waiter() {
+        let (tx, handle) = spawn_coordinator(ring(6));
+        let r0 = available(&tx, 0);
+        tx.send(CoordMsg::Cancel { worker: 0 }).unwrap();
+        assert_eq!(r0.recv().unwrap(), PairReply::Cancelled);
+        // 1 arrives later: 0 is no longer queued, so 1 must wait.
+        let r1 = available(&tx, 1);
+        assert!(r1.try_recv().is_err());
+        // Cancel for a non-queued worker is a no-op.
+        tx.send(CoordMsg::Cancel { worker: 5 }).unwrap();
+        for w in 0..6 {
+            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.total, 0);
+    }
+
+    #[test]
+    fn reconfigure_pairs_newly_adjacent_waiters() {
+        // Scenario: ring(6) phase-0, complete graph after the switch. 0
+        // and 3 wait (not ring-adjacent); the switch makes them adjacent
+        // and Reconfigure pairs them.
+        let plan = crate::config::Scenario::parse("ring@0,complete@0.5")
+            .unwrap()
+            .compile(6, 1.0, 10.0, &[1.0; 6])
+            .unwrap();
+        let net = Arc::new(WallClock::new(&plan));
+        let (tx, handle) = spawn_coordinator(net.clone());
+        let r0 = available(&tx, 0);
+        let r3 = available(&tx, 3);
+        assert!(r0.try_recv().is_err());
+        tx.send(CoordMsg::Reconfigure).unwrap(); // no change yet
+        assert!(r0.try_recv().is_err());
+        net.apply_shared(&plan.updates[0]);
+        tx.send(CoordMsg::Reconfigure).unwrap();
+        assert_eq!(r0.recv().unwrap(), PairReply::Peer(3));
+        assert_eq!(r3.recv().unwrap(), PairReply::Peer(0));
+        for w in 0..6 {
+            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.counts[0][3], 1);
+    }
+
+    #[test]
     fn heatmap_and_uniformity() {
-        let g = ring(4);
+        let g = Graph::build(&Topology::Ring, 4).unwrap();
         let mut stats = PairingStats::new(4);
         for _ in 0..10 {
             stats.record(0, 1);

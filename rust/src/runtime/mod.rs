@@ -24,11 +24,16 @@ pub mod artifacts;
 pub mod bus;
 pub mod clock;
 pub mod coordinator;
+// The PJRT execution path needs the external `xla` wrapper crate, which
+// is not available in the offline build image — gated behind the `pjrt`
+// feature (see rust/Cargo.toml).
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_grad;
 pub mod worker;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use clock::TimeNormalizer;
-pub use coordinator::PairingStats;
+pub use coordinator::{CoordMsg, PairReply, PairingStats};
 pub use worker::{run_async, GradSource, RustGradSource, RuntimeOptions, RuntimeResult};

@@ -4,22 +4,35 @@
 //! over a shared, locked `{x, x̃, t_last}` state. Gradients are computed
 //! on a snapshot *outside* the lock so the communication thread averages
 //! in parallel — the decoupling that removes the paper's idle time. The
-//! update application itself holds the lock for one fused vector pass.
+//! update application itself goes through the shared
+//! [`DynamicsCore`] — the exact code the virtual-time simulator drives —
+//! and holds the lock for one fused vector pass.
+//!
+//! Time-varying networks: a [`crate::config::Scenario`] compiles to a
+//! [`NetworkPlan`] whose updates the monitor loop pushes into the shared
+//! [`WallClock`] as normalized wall-clock time crosses each timestamp —
+//! comm threads see new Poisson rates, the coordinator sees the new
+//! active adjacency, gradient threads see drifted speed factors.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::config::Method;
+use crate::config::{Method, NetworkPlan, Scenario};
+use crate::engine::{BatchSampler, DynamicsCore, LossEma, Scheduler, WallClock};
 use crate::gossip::dynamics::WorkerState;
-use crate::gossip::{consensus_of, AcidParams, Mixer};
+use crate::gossip::{consensus_of, AcidParams};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::model::Model;
 use crate::optim::{LrSchedule, Sgd};
 use crate::rng::{Poisson, Xoshiro256};
 use crate::runtime::bus::{build_bus, BusHandle, PairMsg};
-use crate::runtime::coordinator::{spawn_coordinator, CoordMsg, PairingStats};
+use crate::runtime::coordinator::{spawn_coordinator, CoordMsg, PairReply, PairingStats};
+
+/// How long a comm thread waits for a partner before re-checking its
+/// budget/liveness via a cancel round-trip.
+const PAIR_WAIT: Duration = Duration::from_millis(100);
 
 /// A mini-batch gradient oracle. The runtime is agnostic to whether the
 /// compute runs through PJRT (the AOT HLO artifacts) or a pure-Rust model
@@ -32,28 +45,22 @@ pub trait GradSource: Send {
 }
 
 /// [`GradSource`] over a pure-Rust [`Model`] and a shard of example
-/// indices (used by tests and the mid-scale runtime experiments).
+/// indices (used by tests and the mid-scale runtime experiments). Batches
+/// come from the same [`BatchSampler`] the virtual-time engine uses.
 pub struct RustGradSource {
     pub model: Arc<dyn Model>,
-    pub shard: Vec<usize>,
+    sampler: BatchSampler,
     pub batch_size: usize,
-    cursor: usize,
-    rng: Xoshiro256,
-    batch: Vec<usize>,
     /// Optional artificial compute slowdown (straggler injection).
     pub extra_delay: Option<Duration>,
 }
 
 impl RustGradSource {
     pub fn new(model: Arc<dyn Model>, shard: Vec<usize>, batch_size: usize, seed: u64) -> Self {
-        assert!(!shard.is_empty(), "empty shard");
         Self {
             model,
-            shard,
+            sampler: BatchSampler::from_seed(shard, seed),
             batch_size,
-            cursor: 0,
-            rng: Xoshiro256::seed_from_u64(seed),
-            batch: Vec::new(),
             extra_delay: None,
         }
     }
@@ -68,13 +75,8 @@ impl GradSource for RustGradSource {
         if let Some(d) = self.extra_delay {
             std::thread::sleep(d);
         }
-        self.batch.clear();
-        for _ in 0..self.batch_size {
-            let jump = self.rng.gen_range(3);
-            self.cursor = (self.cursor + 1 + jump) % self.shard.len();
-            self.batch.push(self.shard[self.cursor]);
-        }
-        Ok(self.model.loss_grad(x, &self.batch, out))
+        let batch = self.sampler.next_batch(self.batch_size);
+        Ok(self.model.loss_grad(x, batch, out))
     }
 }
 
@@ -93,6 +95,10 @@ pub struct RuntimeOptions {
     pub monitor_interval: Duration,
     /// Injected per-link transfer delay.
     pub link_delay: Option<Duration>,
+    /// Optional time-varying network scenario. When set it supersedes the
+    /// `graph` argument's topology (the worker count must match); the
+    /// scenario's horizon is `steps_per_worker` normalized time units.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for RuntimeOptions {
@@ -106,6 +112,7 @@ impl Default for RuntimeOptions {
             seed: 0,
             monitor_interval: Duration::from_millis(20),
             link_delay: None,
+            scenario: None,
         }
     }
 }
@@ -124,6 +131,8 @@ pub struct RuntimeResult {
     pub avg_params: Vec<f32>,
     /// The (η, α, α̃) applied.
     pub acid: AcidParams,
+    /// Scenario network updates applied during the run.
+    pub net_updates: u64,
 }
 
 /// Shared per-worker cell.
@@ -174,12 +183,15 @@ pub fn run_async(
         anyhow::ensure!(s.dim() == init.len(), "grad source dim mismatch");
     }
 
-    let spectrum = graph.spectrum(opts.comm_rate.max(1e-6));
-    let acid = match opts.method {
-        Method::Acid => AcidParams::from_spectrum(&spectrum),
-        _ => AcidParams::baseline(),
+    // Compile the network plan: scenario phases over the run horizon, or
+    // the static graph. Normalized wall-clock time ≈ gradient steps per
+    // worker, so the horizon matches the virtual-time engine's.
+    let plan = match &opts.scenario {
+        Some(sc) => sc.compile(n, opts.comm_rate, opts.steps_per_worker as f64, &vec![1.0; n])?,
+        None => NetworkPlan::static_plan((*graph).clone(), opts.comm_rate, &vec![1.0; n]),
     };
-    let mixer = Mixer::new(acid.eta);
+    let core = Arc::new(DynamicsCore::for_method(opts.method, &plan.spectrum, opts.lr.clone())?);
+    let mut wall = Arc::new(WallClock::new(&plan));
 
     let cells: Vec<Arc<Cell>> = (0..n)
         .map(|_| {
@@ -199,7 +211,7 @@ pub fn run_async(
         .collect();
 
     let (bus, mut inboxes) = build_bus(n, opts.link_delay);
-    let (coord_tx, coord_handle) = spawn_coordinator(graph.clone());
+    let (coord_tx, coord_handle) = spawn_coordinator(wall.clone());
     let start = Instant::now();
 
     let mut grad_handles = Vec::new();
@@ -211,7 +223,8 @@ pub fn run_async(
             w,
             src,
             cells[w].clone(),
-            mixer,
+            core.clone(),
+            wall.clone(),
             opts.clone(),
             start,
         ));
@@ -221,18 +234,40 @@ pub fn run_async(
             inbox,
             bus.clone(),
             coord_tx.clone(),
-            acid,
-            mixer,
+            core.clone(),
             start,
         ));
     }
-    drop(coord_tx);
 
-    // Monitor: sample consensus + mean loss until all gradient threads
-    // finish and all comm budgets drain.
+    // Monitor: sample consensus + mean loss, replay the scenario's
+    // network updates, until all gradient threads finish and all comm
+    // budgets drain.
     let mut recorder = Recorder::new();
+    let mut pending = plan.updates.iter();
+    let mut next_update = pending.next();
     loop {
         std::thread::sleep(opts.monitor_interval);
+        // Scenario replay: the plan's horizon is denominated in gradient
+        // steps per worker, so the replay clock is the mean completed
+        // step count — exact from the first step, unlike Cell::now(),
+        // whose 1ms-seeded normalizer is garbage until the first real
+        // gradient duration lands (a ~1s/step grad source would
+        // otherwise see every update fire at the start of the run).
+        if next_update.is_some() {
+            let t_norm = cells
+                .iter()
+                .map(|c| c.grads_done.load(Ordering::Relaxed) as f64)
+                .sum::<f64>()
+                / n as f64;
+            while let Some(upd) = next_update {
+                if upd.t > t_norm {
+                    break;
+                }
+                Scheduler::apply(&mut wall, upd);
+                let _ = coord_tx.send(CoordMsg::Reconfigure);
+                next_update = pending.next();
+            }
+        }
         let t = start.elapsed().as_secs_f64();
         let snapshots: Vec<Vec<f32>> =
             cells.iter().map(|c| c.state.lock().unwrap().x.clone()).collect();
@@ -251,6 +286,7 @@ pub fn run_async(
             break;
         }
     }
+    drop(coord_tx);
 
     for h in grad_handles {
         h.join().map_err(|_| anyhow::anyhow!("grad thread panicked"))??;
@@ -271,7 +307,7 @@ pub fn run_async(
     let mut workers = Vec::with_capacity(n);
     for c in &cells {
         let mut st = c.state.lock().unwrap().clone();
-        st.mix_to(t_final, &mixer);
+        core.mix_to(&mut st, t_final);
         workers.push(st);
     }
     let avg_params = crate::gossip::consensus::average_params(&workers);
@@ -290,7 +326,8 @@ pub fn run_async(
         wall_secs,
         workers,
         avg_params,
-        acid,
+        acid: core.acid,
+        net_updates: Scheduler::updates_applied(&wall),
     })
 }
 
@@ -298,7 +335,8 @@ fn spawn_grad_thread(
     w: usize,
     mut src: Box<dyn GradSource>,
     cell: Arc<Cell>,
-    mixer: Mixer,
+    core: Arc<DynamicsCore>,
+    wall: Arc<WallClock>,
     opts: RuntimeOptions,
     start: Instant,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
@@ -307,7 +345,7 @@ fn spawn_grad_thread(
         .spawn(move || {
             // The completion flag must be set on EVERY exit path (incl.
             // gradient-source failures) or the monitor loop spins forever.
-            let result = grad_loop(w, &mut src, &cell, &mixer, &opts, start);
+            let result = grad_loop(w, &mut src, &cell, &core, &wall, &opts, start);
             cell.grad_done.store(true, Ordering::Release);
             result
         })
@@ -318,68 +356,67 @@ fn grad_loop(
     w: usize,
     src: &mut Box<dyn GradSource>,
     cell: &Cell,
-    mixer: &Mixer,
+    core: &DynamicsCore,
+    wall: &WallClock,
     opts: &RuntimeOptions,
     start: Instant,
 ) -> crate::Result<()> {
-    {
-            let mut opt = Sgd::new(opts.momentum);
-            let poisson = Poisson::new(opts.comm_rate);
-            let mut rng = Xoshiro256::seed_from_u64(opts.seed ^ (w as u64) << 20);
-            let dim = src.dim();
-            let mut gradbuf = vec![0.0f32; dim];
-            let mut snapshot = vec![0.0f32; dim];
-            for step in 0..opts.steps_per_worker {
-                let t0 = Instant::now();
-                // Gradient at a snapshot, outside the lock: the comm
-                // thread keeps averaging concurrently (the paper's
-                // decoupling; the resulting staleness is part of the
-                // modeled dynamic).
-                {
-                    let st = cell.state.lock().unwrap();
-                    snapshot.copy_from_slice(&st.x);
-                }
-                let loss = src.grad(&snapshot, &mut gradbuf)? as f64;
-                // Update the time normalization with this duration.
-                let dur = t0.elapsed().as_nanos() as u64;
-                let prev = cell.avg_grad_nanos.load(Ordering::Relaxed);
-                let ema = if step == 0 { dur.max(1) } else { (prev * 9 + dur) / 10 };
-                cell.avg_grad_nanos.store(ema.max(1), Ordering::Relaxed);
+    let mut opt = Sgd::new(opts.momentum);
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed ^ (w as u64) << 20);
+    let dim = src.dim();
+    let mut gradbuf = vec![0.0f32; dim];
+    let mut snapshot = vec![0.0f32; dim];
+    for step in 0..opts.steps_per_worker {
+        let t0 = Instant::now();
+        // Gradient at a snapshot, outside the lock: the comm thread keeps
+        // averaging concurrently (the paper's decoupling; the resulting
+        // staleness is part of the modeled dynamic).
+        {
+            let st = cell.state.lock().unwrap();
+            snapshot.copy_from_slice(&st.x);
+        }
+        let loss = src.grad(&snapshot, &mut gradbuf)? as f64;
+        // Scenario speed drift: real threads cannot run faster than the
+        // hardware, so the runtime anchors on the currently-fastest
+        // worker and stretches everyone else's compute time relative to
+        // it — the same speed *ratios* the virtual engine replays via
+        // gradient-rate updates, including speeds above nominal.
+        let stretch = wall.stretch(w);
+        if stretch > 1.001 {
+            std::thread::sleep(t0.elapsed().mul_f64((stretch - 1.0).min(20.0)));
+        }
+        // Update the time normalization with this (stretched) duration.
+        let dur = t0.elapsed().as_nanos() as u64;
+        let prev = cell.avg_grad_nanos.load(Ordering::Relaxed);
+        let ema = if step == 0 { dur.max(1) } else { (prev * 9 + dur) / 10 };
+        cell.avg_grad_nanos.store(ema.max(1), Ordering::Relaxed);
 
-                let lr = opts.lr.at(step) as f32;
-                let dir = opt.direction(&gradbuf);
-                {
-                    let mut st = cell.state.lock().unwrap();
-                    let t = cell.now(start);
-                    st.apply_grad(t, lr, dir, &mixer);
-                }
-                let prev_loss = cell.load_loss();
-                cell.store_loss(if prev_loss.is_finite() {
-                    0.95 * prev_loss + 0.05 * loss
-                } else {
-                    loss
-                });
-                cell.grads_done.fetch_add(1, Ordering::Relaxed);
-                // Refill the communication budget: Poisson(#com/#grad),
-                // exactly the paper's emulation of the M^ij clocks.
-                let quota = poisson.sample(&mut rng) as i64;
-                if quota > 0 {
-                    cell.comm_budget.fetch_add(quota, Ordering::Release);
-                }
-            }
-            Ok(())
+        {
+            let mut st = cell.state.lock().unwrap();
+            let t = cell.now(start);
+            core.grad_event(&mut st, t, &mut opt, &gradbuf);
+        }
+        cell.store_loss(LossEma::fold(cell.load_loss(), loss, 0.95));
+        cell.grads_done.fetch_add(1, Ordering::Relaxed);
+        // Refill the communication budget: Poisson(#com/#grad) at the
+        // worker's CURRENT total link rate Σ_j λ^ij — exactly the
+        // paper's emulation of the M^ij clocks, tracking scenario
+        // updates as they land.
+        let quota = Poisson::new(wall.comm_rate(w)).sample(&mut rng) as i64;
+        if quota > 0 {
+            cell.comm_budget.fetch_add(quota, Ordering::Release);
+        }
     }
+    Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
 fn spawn_comm_thread(
     w: usize,
     cell: Arc<Cell>,
     inbox: mpsc::Receiver<PairMsg>,
     bus: BusHandle,
     coord: mpsc::Sender<CoordMsg>,
-    acid: AcidParams,
-    mixer: Mixer,
+    core: Arc<DynamicsCore>,
     start: Instant,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
@@ -388,7 +425,7 @@ fn spawn_comm_thread(
             // Leave + the completion flag must fire on EVERY exit path
             // (incl. bus errors), or the coordinator and monitor wait
             // forever on this worker.
-            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &acid, &mixer, start);
+            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &core, start);
             let _ = coord.send(CoordMsg::Leave { worker: w });
             cell.comm_done.store(true, Ordering::Release);
             result
@@ -396,77 +433,113 @@ fn spawn_comm_thread(
         .expect("spawn comm thread")
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Outcome of one availability declaration.
+enum Pairing {
+    Partner(usize),
+    /// Cancelled by our own timeout: re-check budget/liveness and maybe
+    /// re-announce.
+    Retry,
+    /// No partner can ever arrive (or the coordinator is gone).
+    Stop,
+}
+
+/// Declare availability and wait for a partner, with a cancel round-trip
+/// every [`PAIR_WAIT`] so a worker waiting on a link the scenario dropped
+/// (or a finished neighborhood) never blocks forever.
+fn wait_for_partner(w: usize, coord: &mpsc::Sender<CoordMsg>) -> Pairing {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    if coord.send(CoordMsg::Available { worker: w, reply: reply_tx }).is_err() {
+        return Pairing::Stop; // coordinator gone (shutdown)
+    }
+    loop {
+        match reply_rx.recv_timeout(PAIR_WAIT) {
+            Ok(PairReply::Peer(p)) => return Pairing::Partner(p),
+            Ok(PairReply::NoPartnerEver) => return Pairing::Stop,
+            Ok(PairReply::Cancelled) => return Pairing::Retry,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if coord.send(CoordMsg::Cancel { worker: w }).is_err() {
+                    return Pairing::Stop;
+                }
+                // After the cancel is processed a definitive reply is
+                // guaranteed: either Cancelled, or the pairing that raced
+                // ahead of it.
+                match reply_rx.recv() {
+                    Ok(PairReply::Peer(p)) => return Pairing::Partner(p),
+                    Ok(PairReply::Cancelled) => return Pairing::Retry,
+                    _ => return Pairing::Stop,
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Pairing::Stop,
+        }
+    }
+}
+
 fn comm_loop(
     w: usize,
     cell: &Cell,
     inbox: &mpsc::Receiver<PairMsg>,
     bus: &BusHandle,
     coord: &mpsc::Sender<CoordMsg>,
-    acid: &AcidParams,
-    mixer: &Mixer,
+    core: &DynamicsCore,
     start: Instant,
 ) -> crate::Result<()> {
-    {
-            // §Perf: the buffer received from each pairing is recycled as
-            // the next pairing's send buffer — zero steady-state
-            // allocation on the communication hot path.
-            let mut recycled: Option<Vec<f32>> = None;
-            loop {
-                if cell.comm_budget.load(Ordering::Acquire) <= 0 {
-                    if cell.grad_done.load(Ordering::Acquire) {
-                        break;
-                    }
-                    std::thread::sleep(Duration::from_micros(200));
-                    continue;
-                }
-                // Declare availability and block for a partner.
-                let (reply_tx, reply_rx) = mpsc::channel();
-                if coord
-                    .send(CoordMsg::Available { worker: w, reply: reply_tx })
-                    .is_err()
-                {
-                    break; // coordinator gone (shutdown)
-                }
-                let peer = match reply_rx.recv() {
-                    Ok(Some(p)) => p,
-                    Ok(None) => break, // no partner can ever arrive
-                    Err(_) => break,
-                };
-                // Mix to the event time and snapshot under the lock, then
-                // exchange outside it (matches the paper's lock-per-buffer
-                // granularity).
-                let snapshot = {
-                    let mut st = cell.state.lock().unwrap();
-                    let t = cell.now(start);
-                    st.mix_to(t, &mixer);
-                    match recycled.take() {
-                        Some(mut buf) if buf.len() == st.x.len() => {
-                            buf.copy_from_slice(&st.x);
-                            buf
-                        }
-                        _ => st.x.clone(),
-                    }
-                };
-                bus.send(peer, PairMsg { from: w, data: snapshot })?;
-                let msg = inbox
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("worker {w}: inbox closed mid-pairing"))?;
-                anyhow::ensure!(
-                    msg.from == peer,
-                    "worker {w}: expected msg from {peer}, got {}",
-                    msg.from
-                );
-                {
-                    let mut st = cell.state.lock().unwrap();
-                    st.apply_comm(acid, &msg.data);
-                }
-                recycled = Some(msg.data);
-                cell.comms_done.fetch_add(1, Ordering::Relaxed);
-                cell.comm_budget.fetch_sub(1, Ordering::Release);
+    // §Perf: the buffer received from each pairing is recycled as the
+    // next pairing's send buffer — zero steady-state allocation on the
+    // communication hot path.
+    let mut recycled: Option<Vec<f32>> = None;
+    loop {
+        if cell.comm_budget.load(Ordering::Acquire) <= 0 {
+            if cell.grad_done.load(Ordering::Acquire) {
+                break;
             }
-            Ok(())
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        let peer = match wait_for_partner(w, coord) {
+            Pairing::Partner(p) => p,
+            Pairing::Retry => {
+                // Training over and still no partner (e.g. the scenario
+                // dropped our links): leftover budget is best-effort.
+                if cell.grad_done.load(Ordering::Acquire) {
+                    break;
+                }
+                continue;
+            }
+            Pairing::Stop => break,
+        };
+        // Mix to the event time and snapshot under the lock, then
+        // exchange outside it (matches the paper's lock-per-buffer
+        // granularity).
+        let snapshot = {
+            let mut st = cell.state.lock().unwrap();
+            let t = cell.now(start);
+            core.mix_to(&mut st, t);
+            match recycled.take() {
+                Some(mut buf) if buf.len() == st.x.len() => {
+                    buf.copy_from_slice(&st.x);
+                    buf
+                }
+                _ => st.x.clone(),
+            }
+        };
+        bus.send(peer, PairMsg { from: w, data: snapshot })?;
+        let msg = inbox
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker {w}: inbox closed mid-pairing"))?;
+        anyhow::ensure!(
+            msg.from == peer,
+            "worker {w}: expected msg from {peer}, got {}",
+            msg.from
+        );
+        {
+            let mut st = cell.state.lock().unwrap();
+            core.comm_half(&mut st, &msg.data);
+        }
+        recycled = Some(msg.data);
+        cell.comms_done.fetch_add(1, Ordering::Relaxed);
+        cell.comm_budget.fetch_sub(1, Ordering::Release);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -511,6 +584,7 @@ mod tests {
             seed: 0,
             monitor_interval: Duration::from_millis(5),
             link_delay: None,
+            scenario: None,
         };
         let res = run_async(graph, sources(n, &model, &shards), init, opts).unwrap();
         (res, model)
@@ -526,6 +600,7 @@ mod tests {
         // Communications happened and respected the topology.
         assert!(res.pairing.total > 50, "total={}", res.pairing.total);
         assert_eq!(res.pairing.counts[0][2], 0, "0-2 not adjacent on ring(4)");
+        assert_eq!(res.net_updates, 0);
     }
 
     #[test]
@@ -577,5 +652,94 @@ mod tests {
             .collect();
         let res = run_async(graph, srcs, init, opts).unwrap();
         assert_eq!(res.pairing.total, 0);
+    }
+
+    #[test]
+    fn scenario_switch_runs_and_respects_the_union() {
+        // ring(6) → complete(6) at half-time: pairings before the switch
+        // stay on the ring; over the whole run they stay in the union
+        // (which is every pair here), and the switch must actually land.
+        let n = 6;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(256, 8));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let init = model.init_params(&mut rng);
+        let srcs: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| {
+                let mut s = RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                );
+                // Pace the run so the monitor's scenario replay lands
+                // mid-training, not after it.
+                s.extra_delay = Some(Duration::from_micros(300));
+                Box::new(s) as Box<dyn GradSource>
+            })
+            .collect();
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 150,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: Some(Scenario::parse("ring@0,complete@0.5").unwrap()),
+        };
+        let res = run_async(graph, srcs, init, opts).unwrap();
+        assert_eq!(res.grads_per_worker, vec![150; n]);
+        assert_eq!(res.net_updates, 1, "the topology switch landed");
+        // Chord pairings (non-ring edges) only exist thanks to the switch.
+        let ring = Graph::build(&Topology::Ring, n).unwrap();
+        let chord_pairings: u64 = (0..n)
+            .flat_map(|i| (i + 1..n).map(move |j| (i, j)))
+            .filter(|&(i, j)| !ring.has_edge(i, j))
+            .map(|(i, j)| res.pairing.counts[i][j])
+            .sum();
+        assert!(chord_pairings > 0, "switch should open the chords");
+    }
+
+    #[test]
+    fn scenario_dropout_does_not_hang() {
+        // Drop ALL links for the middle half of the run: comm threads
+        // must ride through the outage (cancel/retry) and terminate.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 3));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let init = model.init_params(&mut rng);
+        let srcs: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| {
+                let mut s = RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                );
+                s.extra_delay = Some(Duration::from_micros(300));
+                Box::new(s) as Box<dyn GradSource>
+            })
+            .collect();
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::AsyncBaseline,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 80,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: Some(Scenario::parse("ring@0;drop=1.0:0.25:0.75:5").unwrap()),
+        };
+        let res = run_async(graph, srcs, init, opts).unwrap();
+        assert_eq!(res.grads_per_worker, vec![80; n]);
+        assert!(res.net_updates >= 1, "dropout window landed");
     }
 }

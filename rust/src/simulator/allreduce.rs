@@ -168,6 +168,7 @@ mod tests {
             dataset_size: 256,
             seed: 4,
             compute_jitter: 0.2,
+            scenario: None,
         }
     }
 

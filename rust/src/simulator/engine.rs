@@ -1,17 +1,24 @@
 //! The asynchronous decentralized training loop in virtual time.
+//!
+//! The loop is a thin driver now: the [`VirtualTimeScheduler`] decides
+//! *when* (exact superposed Poisson clocks, interleaved with a scenario's
+//! network updates) and the shared [`DynamicsCore`] decides *what* (the
+//! Eq. 4 per-event updates) — the very same core the real-thread runtime
+//! drives, so nothing is implemented twice.
 
 use std::sync::Arc;
 
-use crate::config::{ExperimentConfig, Method};
+use crate::config::{ExperimentConfig, Method, NetworkPlan};
 use crate::data::ShardedIndices;
-use crate::gossip::dynamics::{comm_event, WorkerState};
-use crate::gossip::{consensus_distance, AcidParams, Mixer};
+use crate::engine::{BatchSampler, DynamicsCore, LossEma, Tick, VirtualTimeScheduler};
+use crate::gossip::consensus_distance;
+use crate::gossip::dynamics::WorkerState;
+use crate::gossip::AcidParams;
 use crate::graph::{Graph, Spectrum};
 use crate::metrics::Recorder;
 use crate::model::Model;
 use crate::optim::{LrSchedule, Sgd};
 use crate::rng::{Normal, Xoshiro256};
-use crate::simulator::events::{EventKind, EventQueue};
 
 /// Outcome of one simulated run.
 pub struct SimResult {
@@ -28,6 +35,8 @@ pub struct SimResult {
     /// Total gradient / communication event counts.
     pub n_grads: u64,
     pub n_comms: u64,
+    /// Scenario network updates applied during the run.
+    pub net_updates: u64,
     /// Virtual time at the end of the run.
     pub t_end: f64,
     /// Per-worker gradient-step counts (straggler statistics, Tab. 6).
@@ -54,6 +63,8 @@ impl SimResult {
 ///
 /// * `cfg.method` picks baseline (η = 0) vs A²CiD² (Prop. 3.6 parameters);
 ///   [`Method::AllReduce`] is rejected — use [`super::run_allreduce`].
+/// * `cfg.scenario` (if set) supersedes `cfg.topology` with a compiled
+///   time-varying network plan, replayed deterministically under the seed.
 /// * Terminates when the total number of gradient events reaches
 ///   `n_workers × steps_per_worker` (the paper fixes the total sample
 ///   budget, not the per-worker step count).
@@ -66,22 +77,33 @@ pub fn run_simulation(
         cfg.method != Method::AllReduce,
         "run_simulation is for the asynchronous methods; use run_allreduce"
     );
-    let graph = Graph::build(&cfg.topology, cfg.n_workers)?;
-    let edge_rates = graph.edge_rates(cfg.comm_rate);
-    let spectrum = graph.spectrum_with_rates(&edge_rates);
-    let acid = match cfg.method {
-        Method::Acid => AcidParams::from_spectrum(&spectrum),
-        _ => AcidParams::baseline(),
-    };
-    let mixer = Mixer::new(acid.eta);
-
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     // Straggler model: per-worker compute speed ~ N(1, jitter), floored.
     let mut speed_dist = Normal::new(1.0, cfg.compute_jitter);
     let grad_rates: Vec<f64> = (0..cfg.n_workers)
         .map(|_| speed_dist.sample(&mut rng).max(0.2))
         .collect();
-    let mut queue = EventQueue::new(&grad_rates, &edge_rates, cfg.seed ^ 0x5EED);
+
+    // The network plan: either the static topology or a compiled
+    // scenario (horizon = expected per-worker steps at unit rate).
+    let plan = match &cfg.scenario {
+        Some(sc) => sc.compile(
+            cfg.n_workers,
+            cfg.comm_rate,
+            cfg.steps_per_worker as f64,
+            &grad_rates,
+        )?,
+        None => NetworkPlan::static_plan(
+            Graph::build(&cfg.topology, cfg.n_workers)?,
+            cfg.comm_rate,
+            &grad_rates,
+        ),
+    };
+    let spectrum = plan.spectrum;
+    let schedule =
+        LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
+    let core = DynamicsCore::for_method(cfg.method, &spectrum, schedule)?;
+    let mut sched = VirtualTimeScheduler::new(&plan, cfg.seed ^ 0x5EED);
 
     // Worker states: identical init (the paper's initial All-Reduce).
     let init = model.init_params(&mut rng);
@@ -90,75 +112,48 @@ pub fn run_simulation(
     let mut optims: Vec<Sgd> = (0..cfg.n_workers)
         .map(|_| Sgd::new(cfg.momentum as f32))
         .collect();
-    let mut cursors = vec![0usize; cfg.n_workers];
-    let mut batch_rngs: Vec<Xoshiro256> =
-        (0..cfg.n_workers).map(|w| rng.split(w as u64)).collect();
+    let mut samplers: Vec<BatchSampler> = (0..cfg.n_workers)
+        .map(|w| BatchSampler::new(shards.per_worker[w].clone(), rng.split(w as u64)))
+        .collect();
 
-    let schedule =
-        LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
     let total_grads = cfg.steps_per_worker * cfg.n_workers as u64;
-
     let mut recorder = Recorder::new();
     let mut grad = vec![0.0f32; model.dim()];
-    let mut batch = Vec::with_capacity(cfg.batch_size);
     let mut loss_ema = f64::NAN;
     let mut grads_done = 0u64;
     // Record ~500 points per series regardless of run length.
     let record_every = (total_grads / 500).max(1);
 
     while grads_done < total_grads {
-        let ev = queue
-            .next(f64::INFINITY)
+        let tick = sched
+            .next()
             .ok_or_else(|| anyhow::anyhow!("event queue drained unexpectedly"))?;
-        match ev.kind {
-            EventKind::Grad { worker } => {
-                let shard = &shards.per_worker[worker];
-                batch.clear();
-                for _ in 0..cfg.batch_size {
-                    // Shard-ordered pass with per-worker reshuffle seed —
-                    // the paper's "full dataset, different shuffle" setup
-                    // degenerates to random cursor restarts here.
-                    if cursors[worker] >= shard.len() {
-                        cursors[worker] = 0;
-                    }
-                    // Draw with a touch of randomness to avoid pathological
-                    // periodicity between workers sharing a shard.
-                    let jump = batch_rngs[worker].gen_range(3);
-                    cursors[worker] = (cursors[worker] + 1 + jump) % shard.len().max(1);
-                    batch.push(shard[cursors[worker]]);
-                }
-                let loss = model.loss_grad(&workers[worker].x, &batch, &mut grad) as f64;
-                let lr = schedule.at(workers[worker].n_grads) as f32;
-                let dir = optims[worker].direction(&grad);
-                workers[worker].apply_grad(ev.t, lr, dir, &mixer);
-                loss_ema = if loss_ema.is_nan() {
-                    loss
-                } else {
-                    0.98 * loss_ema + 0.02 * loss
-                };
+        match tick {
+            Tick::Grad { worker, t } => {
+                let batch = samplers[worker].next_batch(cfg.batch_size);
+                let loss = model.loss_grad(&workers[worker].x, batch, &mut grad) as f64;
+                let lr = core.grad_event(&mut workers[worker], t, &mut optims[worker], &grad);
+                loss_ema = LossEma::fold(loss_ema, loss, 0.98);
                 grads_done += 1;
                 if grads_done % record_every == 0 {
-                    recorder.record("train_loss", ev.t, loss_ema);
-                    recorder.record("lr", ev.t, lr as f64);
+                    recorder.record("train_loss", t, loss_ema);
+                    recorder.record("lr", t, lr as f64);
                 }
                 if grads_done % (record_every * 10) == 0 {
-                    recorder.record("consensus", ev.t, consensus_distance(&workers));
+                    recorder.record("consensus", t, consensus_distance(&workers));
                 }
             }
-            EventKind::Comm { edge } => {
-                let (i, j) = graph.edges[edge];
+            Tick::Comm { i, j, t } => {
                 let (a, b) = two_mut(&mut workers, i, j);
-                comm_event(a, b, ev.t, &acid, &mixer);
+                core.comm_event(a, b, t);
             }
         }
     }
 
     // Sync all workers to the final time (completes the lazy mixing), then
     // take the final consensus + average (the paper's closing All-Reduce).
-    let t_end = queue.now;
-    for w in &mut workers {
-        w.mix_to(t_end, &mixer);
-    }
+    let t_end = sched.now();
+    core.sync_all(&mut workers, t_end);
     recorder.record("consensus", t_end, consensus_distance(&workers));
     let avg_params = crate::gossip::consensus::average_params(&workers);
     let grads_per_worker: Vec<u64> = workers.iter().map(|w| w.n_grads).collect();
@@ -167,9 +162,10 @@ pub fn run_simulation(
         recorder,
         avg_params,
         spectrum,
-        acid,
-        n_grads: queue.n_grad_events,
-        n_comms: queue.n_comm_events,
+        acid: core.acid,
+        n_grads: sched.n_grad_events(),
+        n_comms: sched.n_comm_events(),
+        net_updates: crate::engine::Scheduler::updates_applied(&sched),
         t_end,
         grads_per_worker,
         workers,
@@ -191,7 +187,7 @@ fn two_mut<T>(slice: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Task;
+    use crate::config::{Scenario, Task};
     use crate::data::{GaussianMixture, Sharding};
     use crate::graph::Topology;
     use crate::model::Logistic;
@@ -212,19 +208,23 @@ mod tests {
             dataset_size: 256,
             seed: 1,
             compute_jitter: 0.1,
+            scenario: None,
         }
     }
 
-    fn run(method: Method) -> (SimResult, Arc<Logistic>) {
-        let cfg = small_cfg(method);
+    fn run_cfg(cfg: &ExperimentConfig) -> (SimResult, Arc<Logistic>) {
         let ds = Arc::new(
             GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }
                 .sample(cfg.dataset_size, 2),
         );
         let shards = cfg.sharding.assign(&ds, cfg.n_workers, 3);
         let model = Arc::new(Logistic::new(ds, 0.0));
-        let res = run_simulation(&cfg, model.clone(), &shards).unwrap();
+        let res = run_simulation(cfg, model.clone(), &shards).unwrap();
         (res, model)
+    }
+
+    fn run(method: Method) -> (SimResult, Arc<Logistic>) {
+        run_cfg(&small_cfg(method))
     }
 
     #[test]
@@ -249,6 +249,7 @@ mod tests {
         let expected = 0.5 * 4.0 * res.t_end;
         let ratio = res.n_comms as f64 / expected;
         assert!((0.6..1.4).contains(&ratio), "comms={} expected≈{expected}", res.n_comms);
+        assert_eq!(res.net_updates, 0, "static run has no network updates");
     }
 
     #[test]
@@ -295,5 +296,34 @@ mod tests {
         let shards = cfg.sharding.assign(&ds, cfg.n_workers, 3);
         let model = Arc::new(Logistic::new(ds, 0.0));
         assert!(run_simulation(&cfg, model, &shards).is_err());
+    }
+
+    #[test]
+    fn scenario_run_applies_updates_and_still_trains() {
+        let mut cfg = small_cfg(Method::Acid);
+        cfg.n_workers = 8;
+        cfg.scenario = Some(
+            Scenario::parse("ring@0,exponential@0.5;drop=0.2:0.25:0.75:7").unwrap(),
+        );
+        let (res, model) = run_cfg(&cfg);
+        assert!(res.net_updates >= 3, "switch + drop + recover: {}", res.net_updates);
+        let s = res.recorder.get("train_loss").unwrap();
+        let first = s.points.first().unwrap().1;
+        assert!(res.final_loss() < 0.8 * first, "still trains through the switch");
+        let idx: Vec<usize> = (0..256).collect();
+        assert!(model.accuracy(&res.avg_params, &idx).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn scenario_run_is_deterministic() {
+        let mut cfg = small_cfg(Method::AsyncBaseline);
+        cfg.scenario =
+            Some(Scenario::parse("ring@0,complete@0.5;drop=0.25:0.2:0.8:3;drift=0.3:4:1").unwrap());
+        let (a, _) = run_cfg(&cfg);
+        let (b, _) = run_cfg(&cfg);
+        assert_eq!(a.avg_params, b.avg_params);
+        assert_eq!(a.n_comms, b.n_comms);
+        assert_eq!(a.net_updates, b.net_updates);
+        assert!(a.net_updates > 0);
     }
 }

@@ -7,6 +7,14 @@
 //! one next-arrival entry per process in a binary heap and resamples the
 //! fired process's next inter-arrival — an exact simulation of the
 //! superposed process.
+//!
+//! Rates are *piecewise-constant in time*: [`EventQueue::set_grad_rate`] /
+//! [`EventQueue::set_comm_rate`] retune a process mid-run (the `Scenario`
+//! layer's topology switches, link failures and speed drifts). Because
+//! Poisson processes are memoryless, resampling the remaining wait at the
+//! change time with the new rate is an exact simulation of the
+//! inhomogeneous process. Stale heap entries are invalidated lazily via a
+//! per-process epoch counter, so a rate update is O(log n).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -23,6 +31,17 @@ pub enum EventKind {
     Comm { edge: usize },
 }
 
+impl EventKind {
+    /// Total-order key used for deterministic tie-breaks at equal times:
+    /// gradient events before communication events, then by index.
+    fn rank(&self) -> (u8, usize) {
+        match self {
+            EventKind::Grad { worker } => (0, *worker),
+            EventKind::Comm { edge } => (1, *edge),
+        }
+    }
+}
+
 /// A scheduled event.
 #[derive(Clone, Copy, Debug)]
 pub struct Event {
@@ -30,10 +49,14 @@ pub struct Event {
     pub kind: EventKind,
 }
 
-// Min-heap ordering on time (BinaryHeap is a max-heap, so invert).
+// Min-heap ordering on (time, kind): `BinaryHeap` is a max-heap, so both
+// components are inverted. `eq` and `cmp` derive from the SAME `(t, kind)`
+// key — `a == b ⇔ a.cmp(&b) == Equal` — which the `Ord` contract requires
+// (a previous revision compared only `t` in `eq` while `cmp` tie-broke on
+// the kind, so equal-by-eq events compared as unequal-by-cmp).
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t
+        self.t == other.t && self.kind == other.kind
     }
 }
 impl Eq for Event {}
@@ -48,28 +71,58 @@ impl Ord for Event {
             .t
             .partial_cmp(&self.t)
             .unwrap_or(Ordering::Equal)
-            .then_with(|| match (&self.kind, &other.kind) {
-                // Deterministic tie-break for reproducibility.
-                (EventKind::Grad { worker: a }, EventKind::Grad { worker: b }) => b.cmp(a),
-                (EventKind::Comm { edge: a }, EventKind::Comm { edge: b }) => b.cmp(a),
-                (EventKind::Grad { .. }, EventKind::Comm { .. }) => Ordering::Greater,
-                (EventKind::Comm { .. }, EventKind::Grad { .. }) => Ordering::Less,
-            })
+            .then_with(|| other.kind.rank().cmp(&self.kind.rank()))
+    }
+}
+
+/// Heap slot: an event plus the epoch of its process at scheduling time.
+/// Entries whose process has since been retuned are skipped on pop. All
+/// comparisons (Eq AND Ord) go through the event alone, keeping the two
+/// consistent; the epoch is bookkeeping, not identity.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    ev: Event,
+    epoch: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.ev == other.ev
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.ev.cmp(&other.ev)
     }
 }
 
 /// The superposed Poisson clock over all workers and edges.
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    heap: BinaryHeap<Entry>,
     /// Per-worker gradient-rate samplers (rate 1 by default, scaled by
     /// compute speed for straggler modeling).
     grad_exp: Vec<Exponential>,
     /// Per-edge communication samplers.
     comm_exp: Vec<Exponential>,
+    /// Current rates (0 = process disabled).
+    grad_rates: Vec<f64>,
+    comm_rates: Vec<f64>,
+    /// Per-process epochs, bumped by every rate update.
+    grad_epoch: Vec<u32>,
+    comm_epoch: Vec<u32>,
     rng: Xoshiro256,
     pub now: f64,
     pub n_grad_events: u64,
     pub n_comm_events: u64,
+    /// Total rate updates applied (scenario bookkeeping).
+    pub n_rate_updates: u64,
 }
 
 impl EventQueue {
@@ -88,44 +141,131 @@ impl EventQueue {
             .collect();
         let mut heap = BinaryHeap::with_capacity(grad_exp.len() + comm_exp.len());
         for (i, exp) in grad_exp.iter().enumerate() {
-            heap.push(Event { t: exp.sample(&mut rng), kind: EventKind::Grad { worker: i } });
+            heap.push(Entry {
+                ev: Event { t: exp.sample(&mut rng), kind: EventKind::Grad { worker: i } },
+                epoch: 0,
+            });
         }
         for (e, (exp, &rate)) in comm_exp.iter().zip(comm_rates).enumerate() {
             if rate > 0.0 {
-                heap.push(Event { t: exp.sample(&mut rng), kind: EventKind::Comm { edge: e } });
+                heap.push(Entry {
+                    ev: Event { t: exp.sample(&mut rng), kind: EventKind::Comm { edge: e } },
+                    epoch: 0,
+                });
             }
         }
         Self {
             heap,
+            grad_epoch: vec![0; grad_exp.len()],
+            comm_epoch: vec![0; comm_exp.len()],
+            grad_rates: grad_rates.to_vec(),
+            comm_rates: comm_rates.to_vec(),
             grad_exp,
             comm_exp,
             rng,
             now: 0.0,
             n_grad_events: 0,
             n_comm_events: 0,
+            n_rate_updates: 0,
+        }
+    }
+
+    /// Retune worker `i`'s gradient rate from `now` on. The pending
+    /// arrival is discarded and resampled at the new rate (exact, by
+    /// memorylessness). A rate of 0 silences the process until retuned.
+    pub fn set_grad_rate(&mut self, worker: usize, rate: f64) {
+        if self.grad_rates[worker] == rate {
+            return;
+        }
+        self.grad_rates[worker] = rate;
+        self.grad_exp[worker] = Exponential::new(rate.max(1e-12));
+        self.grad_epoch[worker] = self.grad_epoch[worker].wrapping_add(1);
+        self.n_rate_updates += 1;
+        if rate > 0.0 {
+            let t = self.now + self.grad_exp[worker].sample(&mut self.rng);
+            self.heap.push(Entry {
+                ev: Event { t, kind: EventKind::Grad { worker } },
+                epoch: self.grad_epoch[worker],
+            });
+        }
+    }
+
+    /// Retune edge `e`'s communication rate from `now` on (see
+    /// [`EventQueue::set_grad_rate`]).
+    pub fn set_comm_rate(&mut self, edge: usize, rate: f64) {
+        if self.comm_rates[edge] == rate {
+            return;
+        }
+        self.comm_rates[edge] = rate;
+        self.comm_exp[edge] = Exponential::new(rate.max(1e-300));
+        self.comm_epoch[edge] = self.comm_epoch[edge].wrapping_add(1);
+        self.n_rate_updates += 1;
+        if rate > 0.0 {
+            let t = self.now + self.comm_exp[edge].sample(&mut self.rng);
+            self.heap.push(Entry {
+                ev: Event { t, kind: EventKind::Comm { edge } },
+                epoch: self.comm_epoch[edge],
+            });
+        }
+    }
+
+    /// Advance the clock to `t` without popping (never moves backwards).
+    /// Rate retunes resample from `now`, so a scheduled update must move
+    /// the clock to its own timestamp first — otherwise the new rate
+    /// would wrongly govern the gap back to the last popped event (and a
+    /// freshly activated process could fire *before* the update time).
+    /// Safe whenever every live pending event is at or past `t`, which
+    /// holds after `next(t)` has returned `None`.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Current rate of edge `e`.
+    pub fn comm_rate(&self, edge: usize) -> f64 {
+        self.comm_rates[edge]
+    }
+
+    /// Current gradient rate of worker `i`.
+    pub fn grad_rate(&self, worker: usize) -> f64 {
+        self.grad_rates[worker]
+    }
+
+    fn is_live(&self, entry: &Entry) -> bool {
+        match entry.ev.kind {
+            EventKind::Grad { worker } => self.grad_epoch[worker] == entry.epoch,
+            EventKind::Comm { edge } => self.comm_epoch[edge] == entry.epoch,
         }
     }
 
     /// Pop the next event before `horizon`; reschedules the fired process.
     pub fn next(&mut self, horizon: f64) -> Option<Event> {
-        let ev = *self.heap.peek()?;
-        if ev.t > horizon {
-            return None;
+        loop {
+            let entry = *self.heap.peek()?;
+            if !self.is_live(&entry) {
+                self.heap.pop();
+                continue;
+            }
+            let ev = entry.ev;
+            if ev.t > horizon {
+                return None;
+            }
+            self.heap.pop();
+            self.now = ev.t;
+            let next_t = match ev.kind {
+                EventKind::Grad { worker } => {
+                    self.n_grad_events += 1;
+                    ev.t + self.grad_exp[worker].sample(&mut self.rng)
+                }
+                EventKind::Comm { edge } => {
+                    self.n_comm_events += 1;
+                    ev.t + self.comm_exp[edge].sample(&mut self.rng)
+                }
+            };
+            self.heap.push(Entry { ev: Event { t: next_t, kind: ev.kind }, epoch: entry.epoch });
+            return Some(ev);
         }
-        self.heap.pop();
-        self.now = ev.t;
-        let next_t = match ev.kind {
-            EventKind::Grad { worker } => {
-                self.n_grad_events += 1;
-                ev.t + self.grad_exp[worker].sample(&mut self.rng)
-            }
-            EventKind::Comm { edge } => {
-                self.n_comm_events += 1;
-                ev.t + self.comm_exp[edge].sample(&mut self.rng)
-            }
-        };
-        self.heap.push(Event { t: next_t, kind: ev.kind });
-        Some(ev)
     }
 }
 
@@ -203,5 +343,121 @@ mod tests {
         }
         let ratio = counts[1] as f64 / counts[0] as f64;
         assert!((ratio - 0.5).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn ord_and_eq_agree_on_the_same_key() {
+        // The Ord contract: a == b ⇔ cmp(a, b) == Equal. Same time,
+        // different kind must be unequal under BOTH.
+        let a = Event { t: 1.0, kind: EventKind::Grad { worker: 0 } };
+        let b = Event { t: 1.0, kind: EventKind::Comm { edge: 0 } };
+        let c = Event { t: 1.0, kind: EventKind::Grad { worker: 0 } };
+        assert_ne!(a, b);
+        assert_ne!(a.cmp(&b), Ordering::Equal);
+        assert_eq!(a, c);
+        assert_eq!(a.cmp(&c), Ordering::Equal);
+        // Deterministic tie-break: at equal t, grads pop before comms
+        // (max-heap ⇒ "greater" pops first).
+        assert!(a > b);
+        // Earlier time still dominates the kind tie-break.
+        let later = Event { t: 2.0, kind: EventKind::Grad { worker: 0 } };
+        assert!(a > later);
+    }
+
+    #[test]
+    fn rate_update_silences_and_revives_a_process() {
+        let mut q = EventQueue::new(&[1.0], &[2.0], 6);
+        // Drain a while with the edge live.
+        let mut comms_before = 0;
+        while let Some(ev) = q.next(50.0) {
+            if matches!(ev.kind, EventKind::Comm { .. }) {
+                comms_before += 1;
+            }
+        }
+        assert!(comms_before > 50, "edge fired at rate 2: {comms_before}");
+        // Silence the edge: no comm events in the next window.
+        q.set_comm_rate(0, 0.0);
+        while let Some(ev) = q.next(100.0) {
+            assert!(
+                !matches!(ev.kind, EventKind::Comm { .. }),
+                "silenced edge fired at t={}",
+                ev.t
+            );
+        }
+        // Revive at a higher rate: comms come back, roughly 4/unit time.
+        q.set_comm_rate(0, 4.0);
+        let mut comms_after = 0;
+        while let Some(ev) = q.next(200.0) {
+            if matches!(ev.kind, EventKind::Comm { .. }) {
+                comms_after += 1;
+            }
+        }
+        let per_unit = comms_after as f64 / 100.0;
+        assert!((per_unit - 4.0).abs() < 0.8, "revived rate ≈ 4, got {per_unit}");
+        assert_eq!(q.n_rate_updates, 2);
+    }
+
+    #[test]
+    fn grad_rate_update_shifts_counts() {
+        let mut q = EventQueue::new(&[1.0, 1.0], &[], 8);
+        while q.next(100.0).is_some() {}
+        let g0 = q.n_grad_events;
+        // Triple worker 0, halve worker 1: total rate 1+1 → 3+0.5.
+        q.set_grad_rate(0, 3.0);
+        q.set_grad_rate(1, 0.5);
+        let mut counts = [0u64; 2];
+        while let Some(ev) = q.next(600.0) {
+            if let EventKind::Grad { worker } = ev.kind {
+                counts[worker] += 1;
+            }
+        }
+        assert!(q.n_grad_events > g0);
+        let ratio = counts[0] as f64 / counts[1] as f64;
+        assert!((ratio - 6.0).abs() < 1.0, "rate ratio 6, got {ratio}");
+    }
+
+    #[test]
+    fn rate_updates_replay_deterministically() {
+        let run = |seed: u64| {
+            let mut q = EventQueue::new(&[1.0, 1.0], &[1.0, 1.0], seed);
+            let mut out = Vec::new();
+            while let Some(ev) = q.next(10.0) {
+                out.push((ev.t, ev.kind));
+            }
+            q.set_comm_rate(0, 0.0);
+            q.set_comm_rate(1, 3.0);
+            q.set_grad_rate(0, 2.0);
+            while let Some(ev) = q.next(20.0) {
+                out.push((ev.t, ev.kind));
+            }
+            out
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn advanced_clock_gates_retuned_processes() {
+        // A scheduled update must not let the new rate govern the gap
+        // back to the last popped event: after advance_to(T), a revived
+        // process's first arrival is at or after T — for EVERY seed.
+        for seed in 0..50 {
+            let mut q = EventQueue::new(&[1.0], &[0.0], seed);
+            while q.next(25.0).is_some() {}
+            q.advance_to(25.0);
+            q.set_comm_rate(0, 100.0); // high rate → early fire if buggy
+            let first_comm = std::iter::from_fn(|| q.next(30.0))
+                .find(|ev| matches!(ev.kind, EventKind::Comm { .. }))
+                .expect("rate-100 edge fires fast");
+            assert!(first_comm.t >= 25.0, "seed {seed}: fired at {}", first_comm.t);
+        }
+    }
+
+    #[test]
+    fn noop_rate_update_is_free() {
+        let mut q = EventQueue::new(&[1.0], &[2.0], 9);
+        q.set_comm_rate(0, 2.0);
+        q.set_grad_rate(0, 1.0);
+        assert_eq!(q.n_rate_updates, 0);
     }
 }

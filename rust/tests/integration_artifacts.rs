@@ -2,7 +2,9 @@
 //! numeric equivalence of the PJRT-executed L1 kernel with the Rust
 //! vecops mirror (the cross-language correctness pin).
 //!
-//! All tests skip gracefully when `artifacts/` is absent.
+//! All tests skip gracefully when `artifacts/` is absent. The whole file
+//! requires the `pjrt` feature (the offline image has no `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use a2cid2::gossip::vecops;
 use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};

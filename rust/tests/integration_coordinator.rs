@@ -6,11 +6,16 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
+use a2cid2::engine::WallClock;
 use a2cid2::graph::{Graph, Topology};
-use a2cid2::runtime::coordinator::{spawn_coordinator, CoordMsg};
+use a2cid2::runtime::coordinator::{spawn_coordinator, CoordMsg, PairReply};
 
 fn graph(topo: Topology, n: usize) -> Arc<Graph> {
     Arc::new(Graph::build(&topo, n).unwrap())
+}
+
+fn net(g: &Graph) -> Arc<WallClock> {
+    Arc::new(WallClock::from_graph(g, 1.0))
 }
 
 /// Hammer the coordinator with many threads doing rapid
@@ -18,7 +23,7 @@ fn graph(topo: Topology, n: usize) -> Arc<Graph> {
 /// deadlock) and every pairing must respect the topology.
 fn hammer(topo: Topology, n: usize, rounds: usize) {
     let g = graph(topo, n);
-    let (tx, handle) = spawn_coordinator(g.clone());
+    let (tx, handle) = spawn_coordinator(net(&g));
     let mut joins = Vec::new();
     for w in 0..n {
         let tx = tx.clone();
@@ -28,8 +33,8 @@ fn hammer(topo: Topology, n: usize, rounds: usize) {
                 let (rtx, rrx) = mpsc::channel();
                 tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
                 match rrx.recv_timeout(Duration::from_secs(20)) {
-                    Ok(Some(_)) => paired += 1,
-                    Ok(None) => break,
+                    Ok(PairReply::Peer(_)) => paired += 1,
+                    Ok(_) => break,
                     Err(e) => panic!("worker {w} starved: {e}"),
                 }
             }
@@ -83,7 +88,7 @@ fn staggered_departures_release_everyone() {
     // pairings; stragglers whose neighborhood empties must get None.
     let n = 6;
     let g = graph(Topology::Ring, n);
-    let (tx, handle) = spawn_coordinator(g);
+    let (tx, handle) = spawn_coordinator(net(&g));
     let mut joins = Vec::new();
     for w in 0..n {
         let tx = tx.clone();
@@ -94,8 +99,8 @@ fn staggered_departures_release_everyone() {
                 let (rtx, rrx) = mpsc::channel();
                 tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
                 match rrx.recv_timeout(Duration::from_secs(20)) {
-                    Ok(Some(_)) => {}
-                    Ok(None) => break,
+                    Ok(PairReply::Peer(_)) => {}
+                    Ok(_) => break,
                     Err(e) => panic!("worker {w} starved after departures: {e}"),
                 }
             }
@@ -116,7 +121,7 @@ fn pairing_histogram_roughly_uniform_on_complete() {
     // is a stochastic schedule, not an exact shuffle.
     let n = 8;
     let g = graph(Topology::Complete, n);
-    let (tx, handle) = spawn_coordinator(g.clone());
+    let (tx, handle) = spawn_coordinator(net(&g));
     let mut joins = Vec::new();
     for w in 0..n {
         let tx = tx.clone();
@@ -124,7 +129,10 @@ fn pairing_histogram_roughly_uniform_on_complete() {
             for i in 0..300 {
                 let (rtx, rrx) = mpsc::channel();
                 tx.send(CoordMsg::Available { worker: w, reply: rtx }).unwrap();
-                if rrx.recv_timeout(Duration::from_secs(20)).unwrap().is_none() {
+                if !matches!(
+                    rrx.recv_timeout(Duration::from_secs(20)).unwrap(),
+                    PairReply::Peer(_)
+                ) {
                     break;
                 }
                 // Small jitter to shuffle arrival order.

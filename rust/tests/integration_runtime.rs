@@ -12,11 +12,15 @@ use a2cid2::data::{GaussianMixture, Sharding};
 use a2cid2::graph::{Graph, Topology};
 use a2cid2::model::{Logistic, Model};
 use a2cid2::optim::LrSchedule;
+#[cfg(feature = "pjrt")]
 use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
+#[cfg(feature = "pjrt")]
 use a2cid2::runtime::pjrt::PjrtContext;
+#[cfg(feature = "pjrt")]
 use a2cid2::runtime::pjrt_grad::MlpPjrtGradSource;
 use a2cid2::runtime::worker::{run_async, GradSource, RuntimeOptions, RustGradSource};
 
+#[cfg(feature = "pjrt")]
 fn manifest_or_skip() -> Option<Manifest> {
     match Manifest::load(default_artifact_dir()) {
         Ok(m) => Some(m),
@@ -27,6 +31,7 @@ fn manifest_or_skip() -> Option<Manifest> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_mlp_grad_matches_manifest_shapes() {
     let Some(manifest) = manifest_or_skip() else { return };
@@ -58,6 +63,7 @@ fn pjrt_mlp_grad_matches_manifest_shapes() {
     assert!(norm > 1e-3, "gradient should be non-zero, norm={norm}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_training_descends_loss() {
     let Some(manifest) = manifest_or_skip() else { return };
@@ -123,6 +129,7 @@ fn runtime_with_injected_stragglers_spreads_wall_time() {
         seed: 0,
         monitor_interval: Duration::from_millis(5),
         link_delay: None,
+        scenario: None,
     };
     let res = run_async(graph.clone(), sources, init, opts).unwrap();
     assert_eq!(res.grads_per_worker, vec![80; n]);
@@ -168,6 +175,7 @@ fn runtime_with_link_delay_still_terminates() {
         seed: 0,
         monitor_interval: Duration::from_millis(5),
         link_delay: Some(Duration::from_micros(300)),
+        scenario: None,
     };
     let res = run_async(graph, sources, init, opts).unwrap();
     assert_eq!(res.grads_per_worker, vec![40; n]);
@@ -204,6 +212,7 @@ fn simulator_and_runtime_agree_on_convergence() {
         dataset_size: 1024,
         seed: 0,
         compute_jitter: 0.1,
+        scenario: None,
     };
     let sim = a2cid2::simulator::run_simulation(&cfg, model.clone(), &shards).unwrap();
     let sim_acc = model.accuracy(&sim.avg_params, &test).unwrap();
@@ -232,6 +241,7 @@ fn simulator_and_runtime_agree_on_convergence() {
         seed: 0,
         monitor_interval: Duration::from_millis(5),
         link_delay: None,
+        scenario: None,
     };
     let run = run_async(graph, sources, init, opts).unwrap();
     let run_acc = model.accuracy(&run.avg_params, &test).unwrap();
@@ -295,6 +305,7 @@ fn failing_grad_source_does_not_hang() {
         seed: 0,
         monitor_interval: Duration::from_millis(5),
         link_delay: None,
+        scenario: None,
     };
     // Must terminate (test harness timeout would catch a hang) and
     // surface the injected error.

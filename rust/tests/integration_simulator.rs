@@ -25,6 +25,7 @@ fn cfg(n: usize, topo: Topology, method: Method, steps: u64) -> ExperimentConfig
         dataset_size: 2048,
         seed: 0,
         compute_jitter: 0.1,
+        scenario: None,
     }
 }
 

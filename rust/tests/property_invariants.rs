@@ -150,6 +150,7 @@ fn prop_simulator_deterministic_replay() {
             dataset_size: 128,
             seed,
             compute_jitter: 0.2,
+            scenario: None,
         };
         let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 1));
         let shards = cfg.sharding.assign(&ds, 4, seed);

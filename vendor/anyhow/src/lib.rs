@@ -1,0 +1,174 @@
+//! Vendored offline subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so this crate provides the
+//! slice of `anyhow` the workspace actually uses: [`Error`], [`Result`],
+//! and the [`anyhow!`], [`bail!`], [`ensure!`] macros. Error values carry
+//! a message string plus an optional boxed source; `{}` and `{:#}`
+//! formatting both render the full message chain.
+//!
+//! Deliberately *not* implemented (unused here): `Context`, downcasting,
+//! backtraces.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value, optionally wrapping a source error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Build an error wrapping a concrete source error.
+    pub fn new<E>(source: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: source.to_string(), source: Some(Box::new(source)) }
+    }
+
+    /// The root message (without the source chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the `std::error::Error` source chain, if any.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> + '_ {
+        let mut next = self
+            .source
+            .as_deref()
+            .and_then(|e| e.source());
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Matches anyhow's unwrap-friendly Debug: the message, then causes.
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> = self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`.
+// That keeps this blanket conversion coherent (no overlap with the
+// reflexive `From<T> for T`), exactly as the real anyhow does.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(source: E) -> Self {
+        Error::new(source)
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // std error converts via `?`
+        ensure!(v > 0, "expected positive, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("3").unwrap(), 3);
+        let err = parse_num("abc").unwrap_err();
+        assert!(err.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        let err = parse_num("-2").unwrap_err();
+        assert_eq!(err.to_string(), "expected positive, got -2");
+        fn f() -> Result<()> {
+            bail!("plain {}", "args");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "plain args");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let x = 7;
+        assert_eq!(anyhow!("inline {x}").to_string(), "inline 7");
+        assert_eq!(anyhow!("a {} b", 1).to_string(), "a 1 b");
+        let src = "q".parse::<i32>().unwrap_err();
+        assert!(anyhow!(src).to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn display_alternate_is_stable() {
+        let e = Error::msg("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top");
+    }
+}
