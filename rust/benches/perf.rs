@@ -1,17 +1,34 @@
 //! Perf bench — the §Perf deliverable's measurement harness.
 //!
 //! Measures the L3 hot paths against their practical rooflines:
-//!   * fused gossip kernels (mix_grad / mix_comm) vs memcpy bandwidth;
+//!   * fused gossip kernels (mix_grad / comm_apply_fused / mix_into) vs
+//!     memcpy bandwidth;
+//!   * the runtime pairing path: old mix→copy→apply composition vs the
+//!     fused mix_into→comm_apply path, uncontended and under a gradient
+//!     thread's contention;
+//!   * chunk-pool scaling of the large-`dim` kernels vs single thread;
+//!   * snapshot-read latency: published seqlock cell vs mutex lock+copy;
 //!   * simulator event throughput (events/s);
 //!   * PJRT dispatch overhead for the standalone L1 kernel artifacts
-//!     (needs `make artifacts`; skipped gracefully if missing);
+//!     (needs `make artifacts`; skipped gracefully if missing).
 //!
-//! `A2CID2_BENCH_FULL=1` raises iteration counts.
+//! Alongside the printed table, every row is emitted machine-readable to
+//! `BENCH_perf.json` (kernel, elements, ns/iter, GB/s) so future PRs have
+//! a perf trajectory to diff against.
+//!
+//! `A2CID2_BENCH_FULL=1` raises iteration counts;
+//! `A2CID2_BENCH_SMOKE=1` shrinks sizes and counts to a CI-sized smoke
+//! run (seconds, not minutes) that still exercises every code path.
 
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use a2cid2::gossip::vecops;
+use a2cid2::gossip::{pool, vecops, Mixer};
 use a2cid2::metrics::Table;
+use a2cid2::runtime::SnapshotCell;
+use a2cid2::util::two_mut;
 
 /// Time `f` over `iters` iterations after `warmup`, returning seconds/iter.
 fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
@@ -29,15 +46,102 @@ fn gb_per_s(bytes_per_iter: usize, secs: f64) -> f64 {
     bytes_per_iter as f64 / secs / 1e9
 }
 
+/// Collects rows for the printed table AND the machine-readable JSON.
+/// JSON rows carry a `kind` tag so trajectory tooling never mistakes a
+/// derived ratio for a kernel timing: `kind: "kernel"` rows have
+/// `ns_per_iter`/`gb_per_s`; `kind: "derived"` rows have `value` (the
+/// ratio or rate shown in the table).
+struct Bench {
+    table: Table,
+    json: Vec<String>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Self {
+            table: Table::new(
+                "Perf — L3 hot paths (R/W per element in 'notes')",
+                &["kernel", "elements", "time/iter", "effective GB/s", "notes"],
+            ),
+            json: Vec::new(),
+        }
+    }
+
+    /// One measured kernel: `secs` per iteration moving `bytes` per
+    /// iteration.
+    fn row(&mut self, kernel: &str, elements: usize, secs: f64, bytes: usize, notes: &str) {
+        let gbs = gb_per_s(bytes, secs);
+        let time = if secs >= 1e-4 {
+            format!("{:.2} ms", secs * 1e3)
+        } else {
+            format!("{:.2} us", secs * 1e6)
+        };
+        self.table.row(&[
+            kernel.into(),
+            elements.to_string(),
+            time,
+            format!("{gbs:.1}"),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"elements\": {elements}, \"kind\": \"kernel\", \
+             \"ns_per_iter\": {:.1}, \"gb_per_s\": {gbs:.3}}}",
+            secs * 1e9
+        ));
+    }
+
+    /// A derived / informational row: `secs` is the representative time
+    /// shown in the table, `display` the table's value column, and
+    /// `value` the numeric form recorded in the JSON.
+    fn note_row(
+        &mut self,
+        kernel: &str,
+        elements: usize,
+        secs: f64,
+        display: &str,
+        value: f64,
+        notes: &str,
+    ) {
+        self.table.row(&[
+            kernel.into(),
+            elements.to_string(),
+            format!("{:.0} ns", secs * 1e9),
+            display.into(),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"elements\": {elements}, \"kind\": \"derived\", \
+             \"value\": {value:.4}}}"
+        ));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "[")?;
+        for (i, row) in self.json.iter().enumerate() {
+            let comma = if i + 1 == self.json.len() { "" } else { "," };
+            writeln!(f, "  {row}{comma}")?;
+        }
+        writeln!(f, "]")?;
+        Ok(())
+    }
+}
+
 fn main() {
     let full = std::env::var("A2CID2_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
-    let iters = if full { 400 } else { 100 };
-    let n: usize = 4 * 1024 * 1024; // 16 MiB per f32 buffer
+    let smoke = std::env::var("A2CID2_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let iters = if smoke {
+        5
+    } else if full {
+        400
+    } else {
+        100
+    };
+    // 16 MiB per f32 buffer at the full 4M; the smoke size still crosses
+    // the pool threshold so the sharded path is exercised.
+    let n: usize = if smoke { 4 * pool::CHUNK } else { 4 * 1024 * 1024 };
 
-    let mut table = Table::new(
-        "Perf — L3 hot paths (bytes/element per column 'notes')",
-        &["kernel", "elements", "time/iter", "effective GB/s", "notes"],
-    );
+    let mut bench = Bench::new();
 
     // Roofline reference: memcpy.
     let src = vec![1.0f32; n];
@@ -46,13 +150,7 @@ fn main() {
         dst.copy_from_slice(&src);
         std::hint::black_box(&dst);
     });
-    table.row(&[
-        "memcpy (roofline)".into(),
-        n.to_string(),
-        format!("{:.2} ms", t * 1e3),
-        format!("{:.1}", gb_per_s(8 * n, t)),
-        "1R + 1W".into(),
-    ]);
+    bench.row("memcpy (roofline)", n, t, 8 * n, "1R + 1W");
 
     // Fused mixing + gradient step: 3R + 2W per element.
     let g = vec![0.5f32; n];
@@ -62,27 +160,23 @@ fn main() {
         vecops::mix_grad(0.9, 0.1, 0.01, &g, &mut x, &mut xt);
         std::hint::black_box(&x);
     });
-    table.row(&[
-        "mix_grad (fused)".into(),
-        n.to_string(),
-        format!("{:.2} ms", t * 1e3),
-        format!("{:.1}", gb_per_s(20 * n, t)),
-        "3R + 2W".into(),
-    ]);
+    bench.row("mix_grad (fused)", n, t, 20 * n, "3R + 2W");
 
     // Fused mixing + comm step: 3R + 2W per element.
     let xp = vec![0.25f32; n];
     let t = time_it(3, iters, || {
-        vecops::mix_comm(0.9, 0.1, 0.5, 1.5, &xp, &mut x, &mut xt);
+        vecops::comm_apply_fused(0.9, 0.1, 0.5, 1.5, &xp, &mut x, &mut xt);
         std::hint::black_box(&x);
     });
-    table.row(&[
-        "mix_comm (fused)".into(),
-        n.to_string(),
-        format!("{:.2} ms", t * 1e3),
-        format!("{:.1}", gb_per_s(20 * n, t)),
-        "3R + 2W".into(),
-    ]);
+    bench.row("comm_apply_fused", n, t, 20 * n, "3R + 2W");
+
+    // Read-only send-buffer build: 2R + 1W.
+    let mut out = vec![0.0f32; n];
+    let t = time_it(3, iters, || {
+        vecops::mix_into(0.9, 0.1, &x, &xt, &mut out);
+        std::hint::black_box(&out);
+    });
+    bench.row("mix_into (read-only)", n, t, 12 * n, "2R + 1W");
 
     // Unfused composition for comparison (what fusing saves).
     let t = time_it(3, iters, || {
@@ -91,45 +185,318 @@ fn main() {
         vecops::axpy(-0.01, &g, &mut xt);
         std::hint::black_box(&x);
     });
-    table.row(&[
-        "mix+2*axpy (unfused)".into(),
-        n.to_string(),
-        format!("{:.2} ms", t * 1e3),
-        format!("{:.1}", gb_per_s(32 * n, t)),
-        "(2R+2W) + 2*(2R+1W)".into(),
-    ]);
+    bench.row("mix+2*axpy (unfused)", n, t, 32 * n, "(2R+2W) + 2*(2R+1W)");
 
-    // Simulator event throughput on a pure-gossip workload.
+    // ---- Runtime pairing: old composition vs the fused path ----------
+    // Old (two lock holds): mix in place (2R+2W), copy the snapshot out
+    // (1R+1W), apply the degenerate comm pass on receive (3R+2W) = 44B/el.
+    let peer = vec![0.25f32; n];
+    let mut sendbuf = vec![0.0f32; n];
+    let t_old = time_it(3, iters, || {
+        vecops::mix_pair(0.9, 0.1, &mut x, &mut xt);
+        sendbuf.copy_from_slice(&x);
+        vecops::comm_apply_fused(1.0, 0.0, 0.5, 1.5, &peer, &mut x, &mut xt);
+        std::hint::black_box(&sendbuf);
+    });
+    bench.row("pairing OLD mix→copy→apply", n, t_old, 44 * n, "6R + 5W, 2 locked passes");
+
+    // New, fusion only (single thread, incl. the seqlock publish copy
+    // the real receive path performs): isolates the 6R+5W → 6R+4W pass
+    // reduction from pool parallelism, so an un-fusing regression can't
+    // hide behind thread scaling.
+    let mut pubbuf = vec![0.0f32; n];
+    let t_new_1t = time_it(3, iters, || {
+        vecops::mix_into(0.9, 0.1, &x, &xt, &mut sendbuf);
+        vecops::comm_apply_fused(0.9, 0.1, 0.5, 1.5, &peer, &mut x, &mut xt);
+        pubbuf.copy_from_slice(&x); // the publish copy, serial
+        std::hint::black_box(&sendbuf);
+    });
+    bench.row("pairing NEW fused (1 thread)", n, t_new_1t, 40 * n, "6R + 4W incl. publish");
+    bench.note_row(
+        "pairing fusion-only speedup",
+        n,
+        t_new_1t,
+        &format!("{:.2}x", t_old / t_new_1t),
+        t_old / t_new_1t,
+        "pass reduction alone, no pool",
+    );
+
+    // New, end to end (one locked RMW): read-only mix_into (2R+1W) +
+    // fused comm_apply (3R+2W) + publish (1R+1W) = 40B/el, sharded
+    // across the chunk pool at this size — exactly what the runtime's
+    // comm thread executes per pairing.
+    let init = vec![0.0f32; n];
+    let published = SnapshotCell::new(&init);
+    drop(init);
+    let t_new = time_it(3, iters, || {
+        pool::mix_into(0.9, 0.1, &x, &xt, &mut sendbuf);
+        pool::comm_apply_fused(0.9, 0.1, 0.5, 1.5, &peer, &mut x, &mut xt);
+        published.publish(&x);
+        std::hint::black_box(&sendbuf);
+    });
+    bench.row("pairing NEW mix_into→comm_apply", n, t_new, 40 * n, "6R + 4W, 1 locked pass");
+    bench.note_row(
+        "pairing speedup NEW vs OLD",
+        n,
+        t_new,
+        &format!("{:.2}x", t_old / t_new),
+        t_old / t_new,
+        "fusion + pool; target >= 1.5x at 4M",
+    );
+
+    // ---- Chunk-pool scaling -----------------------------------------
+    {
+        let lanes = pool::ChunkPool::global().lanes();
+        let (mut xa, mut ta) = (vec![1.0f32; n], vec![0.5f32; n]);
+        let (mut xb, mut tb) = (vec![-1.0f32; n], vec![0.25f32; n]);
+        let t1 = time_it(2, iters, || {
+            vecops::comm_pair_fused(
+                0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut xa, &mut ta, &mut xb, &mut tb,
+            );
+            std::hint::black_box(&xa);
+        });
+        bench.row("comm_pair_fused 1 thread", n, t1, 32 * n, "4R + 4W");
+        let tp = time_it(2, iters, || {
+            pool::comm_pair_fused(
+                0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut xa, &mut ta, &mut xb, &mut tb,
+            );
+            std::hint::black_box(&xa);
+        });
+        bench.row("comm_pair_fused pooled", n, tp, 32 * n, "4R + 4W");
+        bench.note_row(
+            "chunk-pool speedup (comm_pair)",
+            n,
+            tp,
+            &format!("{:.2}x", t1 / tp),
+            t1 / tp,
+            &format!("{lanes} lanes; target >= 2x on >= 4 cores"),
+        );
+
+        let tg1 = time_it(2, iters, || {
+            vecops::mix_grad(0.9, 0.1, 0.01, &g, &mut x, &mut xt);
+            std::hint::black_box(&x);
+        });
+        let tgp = time_it(2, iters, || {
+            pool::mix_grad(0.9, 0.1, 0.01, &g, &mut x, &mut xt);
+            std::hint::black_box(&x);
+        });
+        bench.note_row(
+            "chunk-pool speedup (mix_grad)",
+            n,
+            tgp,
+            &format!("{:.2}x", tg1 / tgp),
+            tg1 / tgp,
+            &format!("{lanes} lanes"),
+        );
+    }
+
+    // ---- Snapshot-read latency: seqlock cell vs mutex lock+copy ------
+    {
+        let dim = 64 * 1024;
+        let reads = if smoke { 500 } else { 20_000 };
+
+        // Mutex baseline under writer churn.
+        let state = Arc::new(Mutex::new(vec![0.0f32; dim]));
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut v = 0.0f32;
+                while !stop.load(Ordering::Relaxed) {
+                    let mut g = state.lock().unwrap();
+                    v += 1.0;
+                    g.fill(v);
+                }
+            })
+        };
+        let mut local = vec![0.0f32; dim];
+        let t_mutex = time_it(10, reads, || {
+            let g = state.lock().unwrap();
+            local.copy_from_slice(&g);
+            std::hint::black_box(&local);
+        });
+        stop.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        bench.row("snapshot read: mutex+copy", dim, t_mutex, 8 * dim, "contended lock");
+
+        // Published seqlock cell under publish churn.
+        let init = vec![0.0f32; dim];
+        let cell = Arc::new(SnapshotCell::new(&init));
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut buf = vec![0.0f32; dim];
+                let mut v = 0.0f32;
+                while !stop.load(Ordering::Relaxed) {
+                    v += 1.0;
+                    buf.fill(v);
+                    cell.publish(&buf);
+                }
+            })
+        };
+        let mut scratch = Vec::new();
+        let t_cell = time_it(10, reads, || {
+            cell.read_into(&mut scratch);
+            std::hint::black_box(&scratch);
+        });
+        stop.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        bench.row("snapshot read: seqlock cell", dim, t_cell, 8 * dim, "lock-free");
+        bench.note_row(
+            "snapshot read speedup",
+            dim,
+            t_cell,
+            &format!("{:.2}x", t_mutex / t_cell),
+            t_mutex / t_cell,
+            "reader under writer churn",
+        );
+    }
+
+    // ---- Contended pairing throughput --------------------------------
+    // One worker cell, a gradient thread hammering its side of the
+    // protocol, while we time pairings. OLD: grad snapshots under the
+    // state lock, pairing mixes+copies under the lock. NEW: grad reads
+    // the published cell, pairing is mix_into + one fused RMW.
+    {
+        let dim = if smoke { 256 * 1024 } else { 1024 * 1024 };
+        let pairings = if smoke { 10 } else { 60 };
+        let mixer = Mixer::new(8.0);
+        let w = mixer.weights(0.05);
+
+        // OLD scheme.
+        let state = Arc::new(Mutex::new((vec![1.0f32; dim], vec![0.5f32; dim])));
+        let stop = Arc::new(AtomicBool::new(false));
+        let contender = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let g = vec![0.1f32; dim];
+                let mut snap = vec![0.0f32; dim];
+                while !stop.load(Ordering::Relaxed) {
+                    {
+                        let st = state.lock().unwrap();
+                        snap.copy_from_slice(&st.0);
+                    }
+                    std::hint::black_box(&snap);
+                    let mut st = state.lock().unwrap();
+                    let inner = &mut *st;
+                    vecops::mix_grad(w.wa, w.wb, 0.001, &g, &mut inner.0, &mut inner.1);
+                }
+            })
+        };
+        let peer = vec![0.25f32; dim];
+        let mut sendbuf = vec![0.0f32; dim];
+        let t_old = time_it(2, pairings, || {
+            {
+                let mut st = state.lock().unwrap();
+                let inner = &mut *st;
+                vecops::mix_pair(w.wa, w.wb, &mut inner.0, &mut inner.1);
+                sendbuf.copy_from_slice(&inner.0);
+            }
+            std::hint::black_box(&sendbuf);
+            let mut st = state.lock().unwrap();
+            let inner = &mut *st;
+            vecops::comm_apply_fused(1.0, 0.0, 0.5, 1.5, &peer, &mut inner.0, &mut inner.1);
+        });
+        stop.store(true, Ordering::Relaxed);
+        contender.join().unwrap();
+        bench.note_row(
+            "contended pairing OLD",
+            dim,
+            t_old,
+            &format!("{:.1}/s", 1.0 / t_old),
+            1.0 / t_old,
+            "grad thread locks for snapshots",
+        );
+
+        // NEW scheme.
+        let state = Arc::new(Mutex::new((vec![1.0f32; dim], vec![0.5f32; dim])));
+        let init = vec![1.0f32; dim];
+        let cell = Arc::new(SnapshotCell::new(&init));
+        let stop = Arc::new(AtomicBool::new(false));
+        let contender = {
+            let state = state.clone();
+            let cell = cell.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let g = vec![0.1f32; dim];
+                let mut snap = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    cell.read_into(&mut snap);
+                    std::hint::black_box(&snap);
+                    let mut st = state.lock().unwrap();
+                    let inner = &mut *st;
+                    pool::mix_grad(w.wa, w.wb, 0.001, &g, &mut inner.0, &mut inner.1);
+                    cell.publish(&inner.0);
+                }
+            })
+        };
+        let t_new = time_it(2, pairings, || {
+            {
+                let st = state.lock().unwrap();
+                pool::mix_into(w.wa, w.wb, &st.0, &st.1, &mut sendbuf);
+            }
+            std::hint::black_box(&sendbuf);
+            let mut st = state.lock().unwrap();
+            let inner = &mut *st;
+            pool::comm_apply_fused(w.wa, w.wb, 0.5, 1.5, &peer, &mut inner.0, &mut inner.1);
+            cell.publish(&inner.0);
+        });
+        stop.store(true, Ordering::Relaxed);
+        contender.join().unwrap();
+        bench.note_row(
+            "contended pairing NEW",
+            dim,
+            t_new,
+            &format!("{:.1}/s", 1.0 / t_new),
+            1.0 / t_new,
+            "published reads, 1 locked RMW",
+        );
+        bench.note_row(
+            "contended pairing speedup",
+            dim,
+            t_new,
+            &format!("{:.2}x", t_old / t_new),
+            t_old / t_new,
+            "NEW vs OLD under grad contention",
+        );
+    }
+
+    // ---- Simulator event throughput ----------------------------------
     {
         use a2cid2::graph::{Graph, Topology};
         let graph = Graph::build(&Topology::Ring, 64).unwrap();
         let rates = graph.edge_rates(1.0);
         let dim = 1024;
+        let horizon = if smoke { 50.0 } else { 500.0 };
         let acid = a2cid2::gossip::AcidParams::accelerated(200.0, 1.0);
         let mixer = a2cid2::gossip::Mixer::new(acid.eta);
         let mut workers: Vec<a2cid2::gossip::WorkerState> = (0..64)
             .map(|i| a2cid2::gossip::WorkerState::new(vec![i as f32; dim]))
             .collect();
         // Gradient clocks at ~zero rate: comm-only stream.
-        let mut queue = a2cid2::simulator::EventQueue::new(&vec![1e-9; 64], &rates, 1);
+        let mut queue = a2cid2::simulator::EventQueue::new(&[1e-9; 64], &rates, 1);
         let t0 = Instant::now();
         let mut events = 0u64;
-        while let Some(ev) = queue.next(500.0) {
+        while let Some(ev) = queue.next(horizon) {
             if let a2cid2::simulator::EventKind::Comm { edge } = ev.kind {
                 let (i, j) = graph.edges[edge];
-                let (l, r) = workers.split_at_mut(j);
-                a2cid2::gossip::dynamics::comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+                let (a, b) = two_mut(&mut workers, i, j);
+                a2cid2::gossip::dynamics::comm_event(a, b, ev.t, &acid, &mixer);
                 events += 1;
             }
         }
         let secs = t0.elapsed().as_secs_f64();
-        table.row(&[
-            "simulator comm events".into(),
-            format!("dim={dim}"),
-            format!("{:.2} us/event", secs / events as f64 * 1e6),
-            format!("{:.1}", gb_per_s(events as usize * dim * 24, secs)),
-            format!("{events} events"),
-        ]);
+        bench.row(
+            "simulator comm events",
+            dim,
+            secs / events as f64,
+            dim * 24,
+            &format!("{events} events"),
+        );
     }
 
     // Event-loop throughput: raw scheduler pops with no dynamics. This is
@@ -140,27 +507,34 @@ fn main() {
         use a2cid2::simulator::{EventKind, EventQueue};
         let graph = Graph::build(&Topology::Ring, 64).unwrap();
         let rates = graph.edge_rates(1.0);
-        let horizon = if full { 20_000.0 } else { 5_000.0 };
+        let horizon = if smoke {
+            500.0
+        } else if full {
+            20_000.0
+        } else {
+            5_000.0
+        };
 
         // Static ring: the historical hot path.
-        let mut queue = EventQueue::new(&vec![1.0; 64], &rates, 1);
+        let mut queue = EventQueue::new(&[1.0; 64], &rates, 1);
         let t0 = Instant::now();
         let mut events = 0u64;
         while queue.next(horizon).is_some() {
             events += 1;
         }
         let secs = t0.elapsed().as_secs_f64();
-        table.row(&[
-            "event loop (static ring)".into(),
-            "n=64".into(),
-            format!("{:.0} ns/event", secs / events as f64 * 1e9),
-            format!("{:.2} Mev/s", events as f64 / secs / 1e6),
-            format!("{events} events"),
-        ]);
+        bench.note_row(
+            "event loop (static ring)",
+            64,
+            secs / events as f64,
+            &format!("{:.2} Mev/s", events as f64 / secs / 1e6),
+            events as f64 / secs,
+            &format!("{events} events"),
+        );
 
         // Same workload under scenario churn: periodic rate retuning
         // (the set_rate path) must not sink the loop.
-        let mut queue = EventQueue::new(&vec![1.0; 64], &rates, 1);
+        let mut queue = EventQueue::new(&[1.0; 64], &rates, 1);
         let t0 = Instant::now();
         let mut events = 0u64;
         let mut updates = 0u64;
@@ -190,31 +564,36 @@ fn main() {
             }
         }
         let secs = t0.elapsed().as_secs_f64();
-        table.row(&[
-            "event loop (rate churn)".into(),
-            format!("{updates} retunes"),
-            format!("{:.0} ns/event", secs / events as f64 * 1e9),
-            format!("{:.2} Mev/s", events as f64 / secs / 1e6),
-            format!("{events} events"),
-        ]);
+        bench.note_row(
+            "event loop (rate churn)",
+            64,
+            secs / events as f64,
+            &format!("{:.2} Mev/s", events as f64 / secs / 1e6),
+            events as f64 / secs,
+            &format!("{events} events, {updates} retunes"),
+        );
     }
 
     // PJRT kernel dispatch (the L1 artifact), if artifacts are built.
     #[cfg(feature = "pjrt")]
     match pjrt_kernel_bench(if full { 200 } else { 50 }) {
         Ok(rows) => {
-            for r in rows {
-                table.row(&r);
+            for (name, size, secs, bytes) in rows {
+                bench.row(&name, size, secs, bytes, "incl. literal copies");
             }
         }
         Err(e) => println!("(skipping PJRT kernel bench: {e})"),
     }
 
-    table.print();
+    bench.table.print();
+    match bench.write_json("BENCH_perf.json") {
+        Ok(()) => println!("wrote BENCH_perf.json ({} rows)", bench.json.len()),
+        Err(e) => println!("(failed to write BENCH_perf.json: {e})"),
+    }
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_kernel_bench(iters: usize) -> a2cid2::Result<Vec<Vec<String>>> {
+fn pjrt_kernel_bench(iters: usize) -> a2cid2::Result<Vec<(String, usize, f64, usize)>> {
     use a2cid2::runtime::artifacts::{default_artifact_dir, Manifest};
     use a2cid2::runtime::pjrt::{lit_f32, lit_scalar, PjrtContext};
     let manifest = Manifest::load(default_artifact_dir())?;
@@ -237,13 +616,7 @@ fn pjrt_kernel_bench(iters: usize) -> a2cid2::Result<Vec<Vec<String>>> {
                 .expect("kernel run");
             std::hint::black_box(outs);
         });
-        out.push(vec![
-            format!("PJRT {name}"),
-            size.to_string(),
-            format!("{:.1} us/call", t * 1e6),
-            format!("{:.2}", size as f64 * 20.0 / t / 1e9),
-            "incl. literal copies".into(),
-        ]);
+        out.push((format!("PJRT {name}"), size, t, size * 20));
     }
     Ok(out)
 }

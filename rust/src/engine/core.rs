@@ -71,18 +71,37 @@ impl DynamicsCore {
         comm_event(a, b, t, &self.acid, &self.mixer);
     }
 
-    /// Bring a worker's pair up to time `t` (lazy momentum flow). The
-    /// runtime calls this right before snapshotting parameters for a
-    /// pairwise exchange.
+    /// Bring a worker's pair up to time `t` (lazy momentum flow). Used
+    /// when syncing workers to a common evaluation time; the runtime's
+    /// pairing hot path no longer mixes in place (see
+    /// [`DynamicsCore::mix_into`]).
     pub fn mix_to(&self, st: &mut WorkerState, t: f64) {
         st.mix_to(t, &self.mixer);
     }
 
     /// Apply this endpoint's half of a communication event given the
-    /// peer's *already-mixed* parameters (the runtime's path: each side
-    /// mixes under its own lock, exchanges over the bus, then applies).
+    /// peer's *already-mixed* parameters (the composed path: mix in
+    /// place, exchange snapshots, then apply). Kept as the reference the
+    /// fused runtime path is verified against.
     pub fn comm_half(&self, st: &mut WorkerState, peer_x: &[f32]) {
         st.apply_comm(&self.acid, peer_x);
+    }
+
+    /// Send side of a runtime pairing: compute the worker's
+    /// momentum-mixed parameters at time `t` straight into the outgoing
+    /// buffer, *without mutating state* — a read-only 2R + 1W pass, so
+    /// the old mix-in-place + snapshot-copy lock hold disappears.
+    pub fn mix_into(&self, st: &WorkerState, t: f64, out: &mut [f32]) {
+        st.mix_into(t, &self.mixer, out);
+    }
+
+    /// Receive side of a runtime pairing: ONE locked read-modify-write
+    /// pass folding the pending momentum mix (left pending by
+    /// [`DynamicsCore::mix_into`] at the same `t`) and the `(α, α̃)`
+    /// update. Together with `mix_into` this is the whole per-pairing
+    /// cost on the runtime path.
+    pub fn comm_apply(&self, st: &mut WorkerState, t: f64, peer_x: &[f32]) {
+        st.apply_comm_fused(t, &self.acid, &self.mixer, peer_x);
     }
 
     /// Sync every worker to a common evaluation time (completes the lazy
@@ -155,8 +174,13 @@ mod tests {
 
     #[test]
     fn comm_paths_agree_between_engines() {
-        // The simulator's fused pair update and the runtime's
-        // mix-exchange-apply split must produce identical states.
+        // Three implementations of one pairwise communication event must
+        // agree: the simulator's two-endpoint fused update, the old
+        // composed runtime path (mix in place → snapshot → apply half),
+        // and the new fused runtime path (read-only mix_into → one
+        // comm_apply RMW pass). The two runtime paths must agree
+        // BIT-IDENTICALLY — that is the acceptance proof that the single
+        // locked pass computes exactly what the two-lock composition did.
         let p = AcidParams::accelerated(10.0, 1.0);
         let core = DynamicsCore::with_params(p, LrSchedule::Constant { lr: 0.1 });
         let mk = |v: &[f32]| WorkerState::new(v.to_vec());
@@ -167,17 +191,31 @@ mod tests {
         core.grad_event(&mut a1, 0.2, &mut opt, &[1.0, 1.0]);
         let mut a2 = a1.clone();
         let mut b2 = b1.clone();
+        let mut a3 = a1.clone();
+        let mut b3 = b1.clone();
 
-        // Engine 1: fused.
+        // Engine 1: simulator, both endpoints fused in one pass.
         core.comm_event(&mut a1, &mut b1, 0.7);
 
-        // Engine 2: mix both, swap snapshots, apply halves.
+        // Engine 2 (old runtime path): mix both in place, swap
+        // snapshots, apply halves.
         core.mix_to(&mut a2, 0.7);
         core.mix_to(&mut b2, 0.7);
         let xa = a2.x.clone();
         let xb = b2.x.clone();
         core.comm_half(&mut a2, &xb);
         core.comm_half(&mut b2, &xa);
+
+        // Engine 3 (new runtime path): read-only send buffers, then one
+        // locked RMW pass per side.
+        let mut buf_a = vec![0.0f32; 2];
+        let mut buf_b = vec![0.0f32; 2];
+        core.mix_into(&a3, 0.7, &mut buf_a);
+        core.mix_into(&b3, 0.7, &mut buf_b);
+        assert_eq!(buf_a, xa, "mix_into == in-place mix + snapshot, bitwise");
+        assert_eq!(buf_b, xb);
+        core.comm_apply(&mut a3, 0.7, &buf_b);
+        core.comm_apply(&mut b3, 0.7, &buf_a);
 
         for (u, v) in a1.x.iter().zip(&a2.x) {
             assert!((u - v).abs() < 1e-5, "a.x: {u} vs {v}");
@@ -186,6 +224,14 @@ mod tests {
             assert!((u - v).abs() < 1e-5, "b.xt: {u} vs {v}");
         }
         assert_eq!(a1.n_comms, a2.n_comms);
+
+        // Fused runtime path == composed runtime path, bit-for-bit.
+        assert_eq!(a3.x, a2.x);
+        assert_eq!(a3.xt, a2.xt);
+        assert_eq!(b3.x, b2.x);
+        assert_eq!(b3.xt, b2.xt);
+        assert_eq!(a3.t_last, a2.t_last);
+        assert_eq!(a3.n_comms, a2.n_comms);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::graph::{Graph, Topology};
 use crate::metrics::Table;
 use crate::rng::{standard_normal, Xoshiro256};
 use crate::simulator::{EventKind, EventQueue};
+use crate::util::two_mut;
 
 use super::common::Scale;
 
@@ -44,8 +45,8 @@ fn decay_time(n: usize, eta_mult: f64, seed: u64) -> crate::Result<f64> {
     while let Some(ev) = queue.next(horizon) {
         if let EventKind::Comm { edge } = ev.kind {
             let (i, j) = graph.edges[edge];
-            let (l, r) = workers.split_at_mut(j);
-            comm_event(&mut l[i], &mut r[0], ev.t, &params, &mixer);
+            let (a, b) = two_mut(&mut workers, i, j);
+            comm_event(a, b, ev.t, &params, &mixer);
         }
         if ev.t >= check_at {
             check_at = ev.t + 0.25;

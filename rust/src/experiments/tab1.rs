@@ -23,6 +23,7 @@ use crate::metrics::Table;
 use crate::model::{Model, Quadratic};
 use crate::rng::{standard_normal, Xoshiro256};
 use crate::simulator::{EventKind, EventQueue};
+use crate::util::two_mut;
 
 use super::common::Scale;
 
@@ -68,8 +69,8 @@ fn gossip_decay_time(n: usize, accelerated: bool, target_frac: f64, seed: u64) -
     while let Some(ev) = queue.next(horizon) {
         if let EventKind::Comm { edge } = ev.kind {
             let (i, j) = graph.edges[edge];
-            let (l, r) = workers.split_at_mut(j);
-            comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+            let (a, b) = two_mut(&mut workers, i, j);
+            comm_event(a, b, ev.t, &acid, &mixer);
         }
         if ev.t >= check_at {
             check_at = ev.t + 0.25;
@@ -129,8 +130,8 @@ fn sgd_consensus_plateau(
             }
             EventKind::Comm { edge } => {
                 let (i, j) = graph.edges[edge];
-                let (l, r) = workers.split_at_mut(j);
-                comm_event(&mut l[i], &mut r[0], ev.t, &acid, &mixer);
+                let (a, b) = two_mut(&mut workers, i, j);
+                comm_event(a, b, ev.t, &acid, &mixer);
             }
         }
         if ev.t >= next_sample && ev.t > horizon * 0.6 {

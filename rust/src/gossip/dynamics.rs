@@ -17,6 +17,7 @@
 
 use super::mixing::Mixer;
 use super::params::AcidParams;
+use super::pool;
 use super::vecops;
 
 /// One worker's replica state.
@@ -64,10 +65,9 @@ impl WorkerState {
         let dt = t - self.t_last;
         if dt > 0.0 && mixer.eta != 0.0 {
             let w = mixer.weights(dt);
-            vecops::mix_grad(w.wa, w.wb, gamma, g, &mut self.x, &mut self.xt);
+            pool::mix_grad(w.wa, w.wb, gamma, g, &mut self.x, &mut self.xt);
         } else {
-            vecops::axpy(-gamma, g, &mut self.x);
-            vecops::axpy(-gamma, g, &mut self.xt);
+            pool::grad_step(gamma, g, &mut self.x, &mut self.xt);
         }
         if dt > 0.0 {
             self.t_last = t;
@@ -75,20 +75,67 @@ impl WorkerState {
         self.n_grads += 1;
     }
 
+    /// Compute this worker's momentum-mixed parameters at time `t` into
+    /// `out` *without mutating state*: the send-side half of a runtime
+    /// pairing (2R + 1W outside the state write path). The pending mix
+    /// stays pending until [`WorkerState::apply_comm_fused`] folds it in
+    /// on receive.
+    pub fn mix_into(&self, t: f64, mixer: &Mixer, out: &mut [f32]) {
+        let dt = t - self.t_last;
+        if dt > 0.0 && mixer.eta != 0.0 {
+            let w = mixer.weights(dt);
+            pool::mix_into(w.wa, w.wb, &self.x, &self.xt, out);
+        } else {
+            out.copy_from_slice(&self.x);
+        }
+    }
+
     /// Apply this endpoint's half of a communication event, given the
     /// peer's *already-mixed* parameters `xj`. Both endpoints must be mixed
     /// to the same event time before either side computes its update; the
     /// engines guarantee this by mixing `i` and `j` first, then exchanging.
     pub fn apply_comm(&mut self, params: &AcidParams, xj: &[f32]) {
-        vecops::mix_comm(
-            1.0,
-            0.0,
+        pool::comm_only(
             params.alpha as f32,
             params.alpha_tilde as f32,
             xj,
             &mut self.x,
             &mut self.xt,
         );
+        self.n_comms += 1;
+    }
+
+    /// The receive-side half of a runtime pairing: fold this worker's own
+    /// pending momentum mix (left pending by [`WorkerState::mix_into`] at
+    /// the same event time `t`) and the `(α, α̃)` update into ONE
+    /// read-modify-write pass over the state (3R + 2W). If an intervening
+    /// gradient event already advanced `t_last` past `t`, the pending mix
+    /// is gone and only the averaging update applies.
+    pub fn apply_comm_fused(&mut self, t: f64, params: &AcidParams, mixer: &Mixer, xj: &[f32]) {
+        let dt = t - self.t_last;
+        if dt > 0.0 && mixer.eta != 0.0 {
+            let w = mixer.weights(dt);
+            pool::comm_apply_fused(
+                w.wa,
+                w.wb,
+                params.alpha as f32,
+                params.alpha_tilde as f32,
+                xj,
+                &mut self.x,
+                &mut self.xt,
+            );
+        } else {
+            pool::comm_only(
+                params.alpha as f32,
+                params.alpha_tilde as f32,
+                xj,
+                &mut self.x,
+                &mut self.xt,
+            );
+        }
+        if dt > 0.0 {
+            self.t_last = t;
+        }
         self.n_comms += 1;
     }
 }
@@ -99,7 +146,8 @@ impl WorkerState {
 /// Fully fused (§Perf): each side's pending momentum flow and the
 /// antisymmetric `(α, α̃)` update run in one pass over the four buffers —
 /// 4R + 4W per element, no allocation — instead of mixing each side,
-/// snapshotting one, and applying two `mix_comm` passes (≈ 11R + 9W).
+/// snapshotting one, and applying two `comm_apply_fused` passes
+/// (≈ 11R + 9W). Large `dim` shards across the chunk pool.
 pub fn comm_event(
     a: &mut WorkerState,
     b: &mut WorkerState,
@@ -109,7 +157,7 @@ pub fn comm_event(
 ) {
     let wa = mixer.weights(t - a.t_last);
     let wb = mixer.weights(t - b.t_last);
-    vecops::comm_pair_fused(
+    pool::comm_pair_fused(
         wa.wa,
         wa.wb,
         wb.wa,
@@ -239,6 +287,66 @@ mod tests {
         let mx = mean(&ws, |w| &w.x);
         let mt = mean(&ws, |w| &w.xt);
         assert!((mx - mt).abs() < 1e-5, "mean x={mx} vs mean x̃={mt}");
+    }
+
+    #[test]
+    fn fused_pairing_protocol_bit_identical_to_composed() {
+        // The runtime's new pairing path (read-only mix_into on send, one
+        // fused RMW pass on receive) must reproduce the old composed path
+        // (mix in place under the lock, copy a snapshot, apply the comm
+        // half) bit-for-bit.
+        let p = AcidParams::accelerated(10.0, 1.0);
+        let mixer = Mixer::new(p.eta);
+        let mut a1 = mk(&[1.0, -2.0, 0.5]);
+        let mut b1 = mk(&[3.0, 0.5, -1.5]);
+        a1.apply_grad(0.2, 0.05, &[1.0, -1.0, 0.5], &mixer); // desync the pair
+        let (mut a2, mut b2) = (a1.clone(), b1.clone());
+        let t = 0.7;
+
+        // New: both send buffers built without touching state, then one
+        // locked read-modify-write pass per side.
+        let mut buf_a = vec![0.0f32; 3];
+        let mut buf_b = vec![0.0f32; 3];
+        a1.mix_into(t, &mixer, &mut buf_a);
+        b1.mix_into(t, &mixer, &mut buf_b);
+        a1.apply_comm_fused(t, &p, &mixer, &buf_b);
+        b1.apply_comm_fused(t, &p, &mixer, &buf_a);
+
+        // Old: mix in place, snapshot, apply halves.
+        a2.mix_to(t, &mixer);
+        b2.mix_to(t, &mixer);
+        let xa = a2.x.clone();
+        let xb = b2.x.clone();
+        a2.apply_comm(&p, &xb);
+        b2.apply_comm(&p, &xa);
+
+        assert_eq!(a1.x, a2.x);
+        assert_eq!(a1.xt, a2.xt);
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.xt, b2.xt);
+        assert_eq!(a1.t_last, a2.t_last);
+        assert_eq!(a1.n_comms, a2.n_comms);
+    }
+
+    #[test]
+    fn apply_comm_fused_degenerates_after_interleaved_grad() {
+        // If a gradient event already advanced t_last past the pairing
+        // time, the pending mix is gone: only the (α, α̃) update applies
+        // and t_last must not move backwards.
+        let p = AcidParams::accelerated(5.0, 1.0);
+        let mixer = Mixer::new(p.eta);
+        let mut a = mk(&[1.0, 2.0]);
+        let t_pair = 0.4;
+        let mut buf = vec![0.0f32; 2];
+        a.mix_into(t_pair, &mixer, &mut buf);
+        // A gradient lands between send and receive.
+        a.apply_grad(0.6, 0.1, &[1.0, 1.0], &mixer);
+        let mut reference = a.clone();
+        a.apply_comm_fused(t_pair, &p, &mixer, &[0.5, -0.5]);
+        reference.apply_comm(&p, &[0.5, -0.5]);
+        assert_eq!(a.x, reference.x);
+        assert_eq!(a.xt, reference.xt);
+        assert_eq!(a.t_last, 0.6, "t_last never rewinds");
     }
 
     #[test]

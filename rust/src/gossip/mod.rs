@@ -15,12 +15,16 @@
 //!   types of the SDE (Eq. 4): local gradient spikes and p2p averagings;
 //! * [`consensus`] — the consensus distance `‖πx‖_F` tracked in Fig. 5b;
 //! * [`vecops`] — the fused vector kernels backing the hot path (the Rust
-//!   mirror of the L1 Pallas kernel, used when PJRT is not in the loop).
+//!   mirror of the L1 Pallas kernel, used when PJRT is not in the loop);
+//! * [`pool`] — the deterministic chunked kernel pool that shards the
+//!   fused kernels across threads for large `dim` (fixed chunk
+//!   boundaries, so pooled results stay bit-identical to single-thread).
 
 pub mod consensus;
 pub mod dynamics;
 pub mod mixing;
 pub mod params;
+pub mod pool;
 pub mod vecops;
 
 pub use consensus::{consensus_distance, consensus_distance_sq, consensus_of};

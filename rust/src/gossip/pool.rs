@@ -1,0 +1,673 @@
+//! Deterministic chunked kernel pool for the large-`dim` hot path.
+//!
+//! The fused kernels in [`super::vecops`] are memory-bound single passes;
+//! past ~64k elements one core can no longer saturate DRAM, so the mixing
+//! kernels shard across a small persistent thread pool. Two properties
+//! the engines rely on:
+//!
+//! * **Bit-determinism.** Every kernel here is element-wise (no
+//!   cross-element reduction), and the shard boundaries are *fixed*
+//!   ([`CHUNK`]-element chunks, independent of thread count or schedule),
+//!   so the pooled result is bit-identical to the single-thread result —
+//!   `deterministic_given_seed` and the scenario replay guarantees hold
+//!   with the pool enabled.
+//! * **Zero allocation.** Jobs borrow the caller's slices; the pool hands
+//!   out chunk indices through one atomic cursor. Nothing is boxed per
+//!   call.
+//!
+//! The pool is hand-rolled on `std::thread` (nothing heavier is available
+//! offline): workers park on a condvar between jobs, and chunk claims go
+//! through an epoch-tagged compare-exchange so a straggler from a
+//! finished job can never claim (or run) a chunk of the next one.
+//!
+//! Both engines reach this module through the same call chain —
+//! [`crate::engine::DynamicsCore`] → [`super::dynamics`] → the wrappers
+//! below — so the simulator and the threaded runtime shard identically.
+//! The wrappers fall back to the plain kernels below [`POOL_MIN_DIM`]
+//! (fork/join overhead would dominate) and, via
+//! [`ChunkPool::try_run`], whenever another thread currently owns the
+//! pool — a runtime worker holding its cell's state mutex degrades to
+//! the serial kernel instead of queueing behind other workers' jobs
+//! (bit-identical either way, so the timing-dependent choice cannot
+//! break determinism; the single-threaded simulator always gets the
+//! pool). Kernels must never re-enter the pool from inside a chunk task
+//! (jobs are serialized on one slot).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use super::vecops;
+
+/// Fixed shard width in elements (256 KiB of f32): large enough that the
+/// per-chunk dispatch cost is noise, small enough that a 4M-element
+/// vector yields 64-way parallelism.
+pub const CHUNK: usize = 1 << 16;
+
+/// Below this length the wrappers run the plain single-thread kernel —
+/// with fewer than two chunks there is nothing to shard.
+pub const POOL_MIN_DIM: usize = 2 * CHUNK;
+
+const IDX_MASK: u64 = 0xFFFF_FFFF;
+
+/// Raw pointer to the caller's borrowed task closure. Deliberately NOT a
+/// reference: a slow-waking worker may still hold this value after the
+/// job completed and the caller's frame died, and materializing a
+/// dangling `&dyn Fn` (even if never called) would be UB. A reference is
+/// only reconstituted AFTER a successful epoch-tagged chunk claim, which
+/// proves the owning [`ChunkPool::run`] frame is still blocked alive.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+/// The job slot: one job at a time, published under the mutex.
+struct Job {
+    /// Bumped once per job; workers use it to detect fresh work and the
+    /// cursor tags chunk claims with it.
+    epoch: u32,
+    n_chunks: u32,
+    task: Option<TaskPtr>,
+}
+
+struct Shared {
+    job: Mutex<Job>,
+    /// Workers park here between jobs.
+    start: Condvar,
+    /// The caller parks here until `remaining` drains.
+    done: Condvar,
+    /// `(epoch << 32) | next_chunk`: claims are CAS increments, so a
+    /// claim can only succeed against the epoch it was read for.
+    cursor: AtomicU64,
+    /// Chunks claimed but not yet finished + chunks not yet claimed.
+    remaining: AtomicU64,
+    /// A chunk task panicked during the current job; the caller
+    /// re-raises after the job drains.
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Claim-and-run loop shared by workers and the calling thread.
+    ///
+    /// Panic-safe: a panicking task is caught so `remaining` always
+    /// drains (a hung caller would otherwise deadlock every future job)
+    /// and pool workers survive; the flag makes [`ChunkPool::run`]
+    /// re-raise on the calling thread once the job is fully drained —
+    /// which also guarantees no worker still touches the caller's
+    /// borrowed slices when the panic unwinds its frame.
+    fn work(&self, epoch: u32, n_chunks: u32, task: TaskPtr) {
+        loop {
+            let c = self.cursor.load(Ordering::SeqCst);
+            if (c >> 32) as u32 != epoch {
+                return; // a newer job took the slot; we never claimed
+            }
+            let idx = (c & IDX_MASK) as u32;
+            if idx >= n_chunks {
+                return; // every chunk claimed
+            }
+            if self
+                .cursor
+                .compare_exchange(c, c + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: the successful same-epoch claim above proves the
+            // owning `run` frame is still parked in its drain loop (it
+            // cannot return while this claimed chunk's `remaining`
+            // decrement is outstanding), so the pointee is alive.
+            let task: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                task(idx as usize)
+            }));
+            if ok.is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // Last chunk of the job: wake the caller. Taking the job
+                // mutex pairs with the caller's check-then-wait.
+                let _g = self.job.lock().unwrap();
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// A small persistent worker pool that fans fixed-boundary chunks of one
+/// job out across threads. See the module docs for the guarantees.
+pub struct ChunkPool {
+    shared: std::sync::Arc<Shared>,
+    /// Serializes callers: one job owns the slot at a time.
+    caller: Mutex<()>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ChunkPool {
+    /// Build a pool with `extra_threads` workers; the calling thread
+    /// always participates, so total parallelism is `extra_threads + 1`.
+    pub fn new(extra_threads: usize) -> Self {
+        let shared = std::sync::Arc::new(Shared {
+            job: Mutex::new(Job { epoch: 0, n_chunks: 0, task: None }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            cursor: AtomicU64::new(0),
+            remaining: AtomicU64::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+        let threads = (0..extra_threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("a2cid2-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, caller: Mutex::new(()), threads }
+    }
+
+    /// The process-wide pool the kernel wrappers shard across: one worker
+    /// per available core beyond the caller's, capped small (the kernels
+    /// are memory-bound; a handful of streams saturates DRAM). Threads
+    /// spawn lazily on the first large-`dim` kernel call.
+    pub fn global() -> &'static ChunkPool {
+        static GLOBAL: OnceLock<ChunkPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            ChunkPool::new(cores.saturating_sub(1).min(7))
+        })
+    }
+
+    /// Total parallel lanes (workers + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.threads.len() + 1
+    }
+
+    /// Run `task(chunk)` for every `chunk in 0..n_chunks`, returning once
+    /// all chunks completed. The caller participates; workers join in.
+    /// Blocks if another caller currently owns the job slot. `task` must
+    /// be safe to call concurrently for distinct chunks and must not
+    /// re-enter the pool.
+    pub fn run(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_chunks <= 1 || self.threads.is_empty() {
+            for c in 0..n_chunks {
+                task(c);
+            }
+            return;
+        }
+        let guard = self.caller.lock().unwrap();
+        self.run_owned(guard, n_chunks, task);
+    }
+
+    /// As [`ChunkPool::run`], but if another caller owns the job slot,
+    /// returns `false` immediately WITHOUT running anything — the caller
+    /// should fall back to its serial kernel instead of queueing. This is
+    /// what the kernel wrappers use: a runtime worker holding its cell's
+    /// state mutex must never park behind other workers' pool jobs
+    /// (element-wise kernels are bit-identical either way, so the
+    /// timing-dependent choice cannot break determinism).
+    pub fn try_run(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) -> bool {
+        if n_chunks <= 1 || self.threads.is_empty() {
+            for c in 0..n_chunks {
+                task(c);
+            }
+            return true;
+        }
+        match self.caller.try_lock() {
+            Ok(guard) => {
+                self.run_owned(guard, n_chunks, task);
+                true
+            }
+            Err(std::sync::TryLockError::WouldBlock) => false,
+            Err(std::sync::TryLockError::Poisoned(e)) => {
+                self.run_owned(e.into_inner(), n_chunks, task);
+                true
+            }
+        }
+    }
+
+    /// The job body, entered with the caller slot owned.
+    fn run_owned(
+        &self,
+        serial: std::sync::MutexGuard<'_, ()>,
+        n_chunks: usize,
+        task: &(dyn Fn(usize) + Sync),
+    ) {
+        let panicked = {
+            let _serial = serial;
+            // A raw pointer, not a lifetime-erased reference — see
+            // [`TaskPtr`]. Sound because this frame blocks until
+            // `remaining` drains, and claims against a finished job are
+            // rejected by the epoch-tagged CAS.
+            let tp = TaskPtr(task as *const (dyn Fn(usize) + Sync));
+            let (epoch, n) = {
+                let mut g = self.shared.job.lock().unwrap();
+                g.epoch = g.epoch.wrapping_add(1);
+                g.n_chunks = n_chunks as u32;
+                g.task = Some(tp);
+                self.shared.remaining.store(n_chunks as u64, Ordering::SeqCst);
+                self.shared.cursor.store((g.epoch as u64) << 32, Ordering::SeqCst);
+                self.shared.start.notify_all();
+                (g.epoch, g.n_chunks)
+            };
+            self.shared.work(epoch, n, tp);
+            {
+                let mut g = self.shared.job.lock().unwrap();
+                while self.shared.remaining.load(Ordering::SeqCst) > 0 {
+                    g = self.shared.done.wait(g).unwrap();
+                }
+                g.task = None;
+            }
+            // Re-raise OUTSIDE the caller lock's scope, or the unwind
+            // would poison it and wedge every future job.
+            self.shared.panicked.swap(false, Ordering::SeqCst)
+        };
+        if panicked {
+            panic!("a chunk-pool task panicked (re-raised on the calling thread)");
+        }
+    }
+}
+
+impl Drop for ChunkPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _g = self.shared.job.lock().unwrap();
+            self.shared.start.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ChunkPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChunkPool").field("lanes", &self.lanes()).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_epoch: u32 = 0;
+    loop {
+        let (epoch, n_chunks, task) = {
+            let mut g = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if g.epoch != seen_epoch {
+                    if let Some(t) = g.task {
+                        break (g.epoch, g.n_chunks, t);
+                    }
+                }
+                g = shared.start.wait(g).unwrap();
+            }
+        };
+        seen_epoch = epoch;
+        shared.work(epoch, n_chunks, task);
+    }
+}
+
+/// Number of fixed-width chunks covering `len` elements.
+fn n_chunks(len: usize) -> usize {
+    len.div_ceil(CHUNK)
+}
+
+/// The fixed bounds of chunk `c` — a pure function of `(len, c)`, never
+/// of the thread count, which is what makes pooled results deterministic.
+fn chunk_bounds(len: usize, c: usize) -> (usize, usize) {
+    let lo = c * CHUNK;
+    (lo, (lo + CHUNK).min(len))
+}
+
+/// A raw view of a slice that can cross the pool's thread boundary.
+/// Distinct chunks index disjoint ranges, so concurrent access from the
+/// pool is race-free; the caller's borrow outlives the job.
+#[derive(Clone, Copy)]
+struct Span {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for Span {}
+unsafe impl Sync for Span {}
+
+impl Span {
+    fn of(s: &[f32]) -> Self {
+        Span { ptr: s.as_ptr() as *mut f32, len: s.len() }
+    }
+
+    fn of_mut(s: &mut [f32]) -> Self {
+        Span { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// `lo..hi` must be in bounds and not concurrently accessed mutably
+    /// outside this chunk's task.
+    unsafe fn read(&self, lo: usize, hi: usize) -> &'static [f32] {
+        debug_assert!(hi <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
+    }
+
+    /// # Safety
+    /// As [`Span::read`], plus exclusive access to `lo..hi`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn write(&self, lo: usize, hi: usize) -> &'static mut [f32] {
+        debug_assert!(hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Pool-sharded copy `dst ← src` — the published-snapshot write uses
+/// this so even the 1R + 1W publish pass scales past one core at large
+/// `dim` (falls back to `copy_from_slice` below [`POOL_MIN_DIM`]).
+pub fn copy(src: &[f32], dst: &mut [f32]) {
+    let len = dst.len();
+    assert_eq!(src.len(), len);
+    if len < POOL_MIN_DIM {
+        dst.copy_from_slice(src);
+        return;
+    }
+    let (ss, ds) = (Span::of(src), Span::of_mut(dst));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            ds.write(lo, hi).copy_from_slice(ss.read(lo, hi));
+        }
+    });
+    if !pooled {
+        dst.copy_from_slice(src);
+    }
+}
+
+/// Pool-sharded [`vecops::mix_grad`] (falls back below [`POOL_MIN_DIM`]).
+pub fn mix_grad(wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::mix_grad(wa, wb, gamma, g, x, xt);
+    }
+    // The serial kernels assert matching lengths per call; the sharded
+    // path must too, BEFORE handing raw chunk views to the pool.
+    assert_eq!(g.len(), len);
+    assert_eq!(xt.len(), len);
+    let (gs, xs, ts) = (Span::of(g), Span::of_mut(x), Span::of_mut(xt));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::mix_grad(wa, wb, gamma, gs.read(lo, hi), xs.write(lo, hi), ts.write(lo, hi));
+        }
+    });
+    if !pooled {
+        vecops::mix_grad(wa, wb, gamma, g, x, xt);
+    }
+}
+
+/// Pool-sharded [`vecops::grad_step`] (falls back below [`POOL_MIN_DIM`]).
+pub fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::grad_step(gamma, g, x, xt);
+    }
+    assert_eq!(g.len(), len);
+    assert_eq!(xt.len(), len);
+    let (gs, xs, ts) = (Span::of(g), Span::of_mut(x), Span::of_mut(xt));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::grad_step(gamma, gs.read(lo, hi), xs.write(lo, hi), ts.write(lo, hi));
+        }
+    });
+    if !pooled {
+        vecops::grad_step(gamma, g, x, xt);
+    }
+}
+
+/// Pool-sharded [`vecops::mix_into`] (falls back below [`POOL_MIN_DIM`]).
+pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::mix_into(wa, wb, x, xt, out);
+    }
+    assert_eq!(xt.len(), len);
+    assert_eq!(out.len(), len);
+    let (xs, ts, os) = (Span::of(x), Span::of(xt), Span::of_mut(out));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::mix_into(wa, wb, xs.read(lo, hi), ts.read(lo, hi), os.write(lo, hi));
+        }
+    });
+    if !pooled {
+        vecops::mix_into(wa, wb, x, xt, out);
+    }
+}
+
+/// Pool-sharded [`vecops::comm_apply_fused`] (falls back below
+/// [`POOL_MIN_DIM`]).
+pub fn comm_apply_fused(
+    wa: f32,
+    wb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xj: &[f32],
+    x: &mut [f32],
+    xt: &mut [f32],
+) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt);
+    }
+    assert_eq!(xj.len(), len);
+    assert_eq!(xt.len(), len);
+    let (js, xs, ts) = (Span::of(xj), Span::of_mut(x), Span::of_mut(xt));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::comm_apply_fused(
+                wa,
+                wb,
+                alpha,
+                alpha_tilde,
+                js.read(lo, hi),
+                xs.write(lo, hi),
+                ts.write(lo, hi),
+            );
+        }
+    });
+    if !pooled {
+        vecops::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt);
+    }
+}
+
+/// Pool-sharded [`vecops::comm_only`] (falls back below [`POOL_MIN_DIM`]).
+pub fn comm_only(alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::comm_only(alpha, alpha_tilde, xj, x, xt);
+    }
+    assert_eq!(xj.len(), len);
+    assert_eq!(xt.len(), len);
+    let (js, xs, ts) = (Span::of(xj), Span::of_mut(x), Span::of_mut(xt));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            let (j, xc, tc) = (js.read(lo, hi), xs.write(lo, hi), ts.write(lo, hi));
+            vecops::comm_only(alpha, alpha_tilde, j, xc, tc);
+        }
+    });
+    if !pooled {
+        vecops::comm_only(alpha, alpha_tilde, xj, x, xt);
+    }
+}
+
+/// Pool-sharded [`vecops::comm_pair_fused`] over both endpoints (falls
+/// back below [`POOL_MIN_DIM`]).
+#[allow(clippy::too_many_arguments)]
+pub fn comm_pair_fused(
+    waa: f32,
+    wba: f32,
+    wab: f32,
+    wbb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xa: &mut [f32],
+    xta: &mut [f32],
+    xb: &mut [f32],
+    xtb: &mut [f32],
+) {
+    let len = xa.len();
+    if len < POOL_MIN_DIM {
+        return vecops::comm_pair_fused(
+            waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb,
+        );
+    }
+    assert_eq!(xta.len(), len);
+    assert_eq!(xb.len(), len);
+    assert_eq!(xtb.len(), len);
+    let (sa, sta) = (Span::of_mut(xa), Span::of_mut(xta));
+    let (sb, stb) = (Span::of_mut(xb), Span::of_mut(xtb));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::comm_pair_fused(
+                waa,
+                wba,
+                wab,
+                wbb,
+                alpha,
+                alpha_tilde,
+                sa.write(lo, hi),
+                sta.write(lo, hi),
+                sb.write(lo, hi),
+                stb.write(lo, hi),
+            );
+        }
+    });
+    if !pooled {
+        vecops::comm_pair_fused(
+            waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{standard_normal, Xoshiro256};
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| standard_normal(&mut rng) as f32).collect()
+    }
+
+    // Odd length: exercises the ragged final chunk.
+    const DIM: usize = 2 * CHUNK + 1234;
+
+    #[test]
+    fn pooled_comm_pair_fused_bit_identical_to_serial() {
+        let (xa0, ta0) = (randvec(DIM, 1), randvec(DIM, 2));
+        let (xb0, tb0) = (randvec(DIM, 3), randvec(DIM, 4));
+        let (mut xa, mut ta, mut xb, mut tb) =
+            (xa0.clone(), ta0.clone(), xb0.clone(), tb0.clone());
+        comm_pair_fused(
+            0.85, 0.15, 0.6, 0.4, 0.5, 1.9, &mut xa, &mut ta, &mut xb, &mut tb,
+        );
+        let (mut rxa, mut rta, mut rxb, mut rtb) = (xa0, ta0, xb0, tb0);
+        vecops::comm_pair_fused(
+            0.85, 0.15, 0.6, 0.4, 0.5, 1.9, &mut rxa, &mut rta, &mut rxb, &mut rtb,
+        );
+        assert_eq!(xa, rxa);
+        assert_eq!(ta, rta);
+        assert_eq!(xb, rxb);
+        assert_eq!(tb, rtb);
+    }
+
+    #[test]
+    fn pooled_mix_grad_and_mix_into_bit_identical_to_serial() {
+        let g = randvec(DIM, 5);
+        let (x0, t0) = (randvec(DIM, 6), randvec(DIM, 7));
+        let (mut x, mut t) = (x0.clone(), t0.clone());
+        mix_grad(0.9, 0.1, 0.02, &g, &mut x, &mut t);
+        let (mut rx, mut rt) = (x0, t0);
+        vecops::mix_grad(0.9, 0.1, 0.02, &g, &mut rx, &mut rt);
+        assert_eq!(x, rx);
+        assert_eq!(t, rt);
+
+        let mut out = vec![0.0f32; DIM];
+        let mut rout = vec![0.0f32; DIM];
+        mix_into(0.9, 0.1, &x, &t, &mut out);
+        vecops::mix_into(0.9, 0.1, &rx, &rt, &mut rout);
+        assert_eq!(out, rout);
+    }
+
+    #[test]
+    fn pooled_results_stable_across_repeated_runs() {
+        // Same inputs → same bits, run after run (fixed chunk boundaries;
+        // no schedule dependence).
+        let xj = randvec(DIM, 8);
+        let (x0, t0) = (randvec(DIM, 9), randvec(DIM, 10));
+        let mut first: Option<(Vec<f32>, Vec<f32>)> = None;
+        for _ in 0..3 {
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            comm_apply_fused(0.8, 0.2, 0.5, 1.5, &xj, &mut x, &mut t);
+            match &first {
+                None => first = Some((x, t)),
+                Some((fx, ft)) => {
+                    assert_eq!(&x, fx);
+                    assert_eq!(&t, ft);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_pool_runs_every_chunk_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let pool = ChunkPool::new(3);
+        for n in [0usize, 1, 2, 7, 64] {
+            let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool.run(n, &|c| {
+                counts[c].fetch_add(1, Ordering::SeqCst);
+            });
+            for (c, k) in counts.iter().enumerate() {
+                assert_eq!(k.load(Ordering::SeqCst), 1, "chunk {c} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_task_is_reraised_and_pool_stays_usable() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let pool = ChunkPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|c| {
+                if c == 3 {
+                    panic!("injected chunk failure");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "the chunk panic must surface to the caller");
+        // The pool must not be poisoned: the next job runs normally.
+        let hits = AtomicU32::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn local_pool_survives_many_back_to_back_jobs() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let pool = ChunkPool::new(2);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(5, &|c| {
+                total.fetch_add(c as u64 + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 200 * (1 + 2 + 3 + 4 + 5));
+    }
+}

@@ -16,6 +16,58 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Read-only momentum mixing into a separate output buffer:
+/// `out ← wa·x + wb·x̃` — the send-side half of a runtime pairing. The
+/// worker's state is *not* mutated (its pending mix stays pending, to be
+/// folded into [`comm_apply_fused`] on receive), so building the outgoing
+/// snapshot costs 2R + 1W outside the state write path instead of the old
+/// mix-in-place (2R + 2W) plus snapshot copy (1R + 1W) under the lock.
+///
+/// Bit-compatible with [`mix_pair`]'s `x` row: the same `wa·a + wb·b`
+/// expression, so a buffer built here is bit-identical to one copied out
+/// of a state that was mixed in place.
+#[inline]
+pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), out.len());
+    for ((o, xi), ti) in out.iter_mut().zip(x).zip(xt) {
+        *o = wa * *xi + wb * *ti;
+    }
+}
+
+/// Fused two-row gradient step with no pending mix:
+/// `x ← x − γ·g`, `x̃ ← x̃ − γ·g` in one pass (3R + 2W; `g` is read once),
+/// replacing the two-axpy composition (4R + 2W) on the η = 0 path.
+/// Bit-compatible with `axpy(−γ, g, ·)` applied to each row.
+#[inline]
+pub fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), g.len());
+    let a = -gamma;
+    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
+        let step = a * *gi;
+        *xi += step;
+        *ti += step;
+    }
+}
+
+/// The `(α, α̃)` averaging update alone, with no pending mix: given the
+/// peer's vector `xj`, apply `x ← x − α·(x − xj)`, `x̃ ← x̃ − α̃·(x − xj)`
+/// in one 3R + 2W pass. This is what [`super::dynamics::WorkerState::apply_comm`]
+/// uses instead of paying [`comm_apply_fused`] with degenerate
+/// `wa = 1, wb = 0` weights (which costs the same traffic but wastes two
+/// multiplies and two adds per element).
+#[inline]
+pub fn comm_only(alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), xj.len());
+    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
+        let m = *xi - *pj;
+        *xi -= alpha * m;
+        *ti -= alpha_tilde * m;
+    }
+}
+
 /// Fused momentum mixing: given mixing weights `(wa, wb)` with
 /// `wa + wb = 1`, overwrite `(x, xt)` with
 /// `x' = wa·x + wb·xt`, `xt' = wb·x + wa·xt` — a single pass, two reads +
@@ -46,12 +98,17 @@ pub fn mix_grad(wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut
     }
 }
 
-/// Fused mixing + communication step (Algorithm 1, lines 16–19): with
-/// `m = x_self_mixed − x_peer` unavailable until after mixing, this variant
-/// takes the *already mixed* peer vector `xj` and applies
-/// `x' = mix − α·(mix − xj)`, `xt' = mixt − α̃·(mix − xj)` in one pass.
+/// Fused mixing + communication step (Algorithm 1, lines 16–19): takes
+/// the *already mixed* peer vector `xj`, folds this worker's own pending
+/// momentum mix and the `(α, α̃)` update into one 3R + 2W pass:
+/// `x' = mix − α·(mix − xj)`, `xt' = mixt − α̃·(mix − xj)`.
+///
+/// This is the receive-side half of a runtime pairing (the counterpart of
+/// [`mix_into`]): the single locked read-modify-write pass over the
+/// worker's state. Bit-compatible with `mix_pair` followed by
+/// [`comm_only`] — the mixed rows are the same `wa·a + wb·b` expressions.
 #[inline]
-pub fn mix_comm(
+pub fn comm_apply_fused(
     wa: f32,
     wb: f32,
     alpha: f32,
@@ -71,6 +128,22 @@ pub fn mix_comm(
         *xi = mixed_x - alpha * m;
         *ti = mixed_t - alpha_tilde * m;
     }
+}
+
+/// Historical name for [`comm_apply_fused`], kept because it mirrors the
+/// L1 Pallas kernel (`acid_mix_comm` in `python/compile/kernels/`) and
+/// the PJRT parity tests refer to the kernels by those names.
+#[inline]
+pub fn mix_comm(
+    wa: f32,
+    wb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xj: &[f32],
+    x: &mut [f32],
+    xt: &mut [f32],
+) {
+    comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt)
 }
 
 /// Fully-fused pairwise communication event over BOTH endpoints: applies
@@ -255,6 +328,62 @@ mod tests {
             assert!((xb[i] - rxb[i]).abs() < 1e-6);
             assert!((tb[i] - rtb[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn mix_into_bit_identical_to_mix_pair_x_row() {
+        let x = vec![1.0f32, -2.0, 0.5, 3.25];
+        let xt = vec![0.2f32, 0.7, -1.0, 1.5];
+        let mut out = vec![0.0f32; 4];
+        mix_into(0.85, 0.15, &x, &xt, &mut out);
+        let mut mx = x.clone();
+        let mut mt = xt.clone();
+        mix_pair(0.85, 0.15, &mut mx, &mut mt);
+        assert_eq!(out, mx, "send buffer must match the in-place mixed x bit-for-bit");
+    }
+
+    #[test]
+    fn grad_step_bit_identical_to_two_axpys() {
+        let g = vec![0.5f32, -1.0, 2.0];
+        let mut x1 = vec![1.0f32, 2.0, 3.0];
+        let mut t1 = vec![-1.0f32, 0.5, 1.5];
+        let mut x2 = x1.clone();
+        let mut t2 = t1.clone();
+        grad_step(0.1, &g, &mut x1, &mut t1);
+        axpy(-0.1, &g, &mut x2);
+        axpy(-0.1, &g, &mut t2);
+        assert_eq!(x1, x2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn comm_only_matches_degenerate_comm_apply_fused() {
+        let xj = vec![0.0f32, 1.0, -1.0];
+        let mut x1 = vec![1.0f32, 2.0, 3.0];
+        let mut t1 = vec![-1.0f32, 0.5, 1.5];
+        let mut x2 = x1.clone();
+        let mut t2 = t1.clone();
+        comm_only(0.5, 1.7, &xj, &mut x1, &mut t1);
+        comm_apply_fused(1.0, 0.0, 0.5, 1.7, &xj, &mut x2, &mut t2);
+        for i in 0..3 {
+            assert!((x1[i] - x2[i]).abs() < 1e-7);
+            assert!((t1[i] - t2[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn comm_apply_fused_matches_mix_then_comm_only() {
+        // The fused receive pass == mix_pair + comm_only, bit-for-bit.
+        let xj = vec![0.3f32, -2.0, 5.5];
+        let mut x1 = vec![1.0f32, 2.0, 3.0];
+        let mut t1 = vec![-1.0f32, 0.5, 1.5];
+        let mut x2 = x1.clone();
+        let mut t2 = t1.clone();
+        comm_apply_fused(0.9, 0.1, 0.5, 1.7, &xj, &mut x1, &mut t1);
+        mix_pair(0.9, 0.1, &mut x2, &mut t2);
+        comm_only(0.5, 1.7, &xj, &mut x2, &mut t2);
+        assert_eq!(x1, x2);
+        assert_eq!(t1, t2);
     }
 
     #[test]

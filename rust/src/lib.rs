@@ -40,6 +40,7 @@ pub mod rng;
 pub mod runtime;
 pub mod simulator;
 pub mod testing;
+pub mod util;
 
 /// Crate-wide result type (thin alias over `anyhow`).
 pub type Result<T> = anyhow::Result<T>;

@@ -2,9 +2,20 @@
 //! point-to-point sends over Omni-Path (DESIGN.md §3).
 //!
 //! Each worker owns one inbox; a pairing exchanges exactly one parameter
-//! snapshot in each direction. An optional injected per-link delay models
+//! buffer in each direction. An optional injected per-link delay models
 //! constrained bandwidth so topology effects stay observable in wall
 //! time.
+//!
+//! Buffer life cycle (§Perf, zero steady-state allocation): the payload
+//! is produced by `mix_into` — the sender's momentum-mixed `x` computed
+//! directly into the buffer, never a copy of live state — and ownership
+//! moves through the channel; the receiver consumes it in the fused
+//! `comm_apply` pass and then reuses the very same allocation as its
+//! *next* outgoing buffer. After each side's first pairing, no
+//! parameter-sized buffer is ever allocated or copied on the
+//! communication path beyond the seqlock publish that keeps readers
+//! lock-free (the mpsc channel and the coordinator round-trip still
+//! make their own small bookkeeping allocations).
 
 use std::sync::mpsc;
 use std::time::Duration;
@@ -12,8 +23,17 @@ use std::time::Duration;
 /// One half of a pairwise exchange.
 pub struct PairMsg {
     pub from: usize,
-    /// The sender's parameters, already mixed to the event time.
+    /// The sender's parameters, momentum-mixed to the sender's event time
+    /// (built by `mix_into`; the sender's own state is untouched until
+    /// its receive-side `comm_apply` pass).
     pub data: Vec<f32>,
+}
+
+impl PairMsg {
+    /// Parameter dimension carried by this message.
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
 }
 
 /// Sender side of the bus (cloneable, one per worker thread).

@@ -31,9 +31,11 @@ pub mod coordinator;
 pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub mod pjrt_grad;
+pub mod snapshot;
 pub mod worker;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use clock::TimeNormalizer;
 pub use coordinator::{CoordMsg, PairReply, PairingStats};
+pub use snapshot::{ConsensusAccumulator, SnapshotCell};
 pub use worker::{run_async, GradSource, RustGradSource, RuntimeOptions, RuntimeResult};

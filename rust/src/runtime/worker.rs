@@ -5,8 +5,24 @@
 //! on a snapshot *outside* the lock so the communication thread averages
 //! in parallel — the decoupling that removes the paper's idle time. The
 //! update application itself goes through the shared
-//! [`DynamicsCore`] — the exact code the virtual-time simulator drives —
-//! and holds the lock for one fused vector pass.
+//! [`DynamicsCore`] — the exact code the virtual-time simulator drives.
+//!
+//! §Perf — the pairing hot path costs one locked read-modify-write pass
+//! and zero steady-state allocations (full accounting in the README):
+//!
+//! * **send**: `mix_into` computes the momentum-mixed `x` straight into
+//!   the (recycled) outgoing buffer without mutating state — a read-only
+//!   2R + 1W pass, replacing the old mix-in-place + snapshot-copy
+//!   (3R + 3W) lock hold;
+//! * **receive**: `comm_apply` folds the still-pending mix and the
+//!   `(α, α̃)` update into one 3R + 2W read-modify-write pass — the only
+//!   write lock a pairing ever takes — then publishes `x` (one 1R + 1W
+//!   copy, pool-sharded at large dim) so readers stay lock-free;
+//! * **reads**: the gradient thread and the monitor read parameters from
+//!   each cell's published [`SnapshotCell`] (a double-buffered seqlock),
+//!   never contending with the communication thread's lock. The monitor
+//!   streams its consensus measurement over the published buffers with
+//!   zero per-tick allocation.
 //!
 //! Time-varying networks: a [`crate::config::Scenario`] compiles to a
 //! [`NetworkPlan`] whose updates the monitor loop pushes into the shared
@@ -21,7 +37,7 @@ use std::time::{Duration, Instant};
 use crate::config::{Method, NetworkPlan, Scenario};
 use crate::engine::{BatchSampler, DynamicsCore, LossEma, Scheduler, WallClock};
 use crate::gossip::dynamics::WorkerState;
-use crate::gossip::{consensus_of, AcidParams};
+use crate::gossip::AcidParams;
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::model::Model;
@@ -29,6 +45,7 @@ use crate::optim::{LrSchedule, Sgd};
 use crate::rng::{Poisson, Xoshiro256};
 use crate::runtime::bus::{build_bus, BusHandle, PairMsg};
 use crate::runtime::coordinator::{spawn_coordinator, CoordMsg, PairReply, PairingStats};
+use crate::runtime::snapshot::{ConsensusAccumulator, SnapshotCell};
 
 /// How long a comm thread waits for a partner before re-checking its
 /// budget/liveness via a cancel round-trip.
@@ -138,6 +155,10 @@ pub struct RuntimeResult {
 /// Shared per-worker cell.
 struct Cell {
     state: Mutex<WorkerState>,
+    /// Published snapshot of `x` (double-buffered seqlock): the gradient
+    /// thread and the monitor read here without taking `state`. Whoever
+    /// mutates `x` under the lock publishes before releasing it.
+    published: SnapshotCell,
     /// Remaining p2p averagings before the next budget refill.
     comm_budget: AtomicI64,
     grads_done: AtomicU64,
@@ -197,6 +218,7 @@ pub fn run_async(
         .map(|_| {
             Arc::new(Cell {
                 state: Mutex::new(WorkerState::new(init.clone())),
+                published: SnapshotCell::new(&init),
                 comm_budget: AtomicI64::new(0),
                 grads_done: AtomicU64::new(0),
                 comms_done: AtomicU64::new(0),
@@ -241,8 +263,11 @@ pub fn run_async(
 
     // Monitor: sample consensus + mean loss, replay the scenario's
     // network updates, until all gradient threads finish and all comm
-    // budgets drain.
+    // budgets drain. The loop reads only published snapshots and atomics
+    // — no state locks, and (after the accumulator's first tick) no
+    // allocation.
     let mut recorder = Recorder::new();
+    let mut consensus_acc = ConsensusAccumulator::new();
     let mut pending = plan.updates.iter();
     let mut next_update = pending.next();
     loop {
@@ -269,15 +294,19 @@ pub fn run_async(
             }
         }
         let t = start.elapsed().as_secs_f64();
-        let snapshots: Vec<Vec<f32>> =
-            cells.iter().map(|c| c.state.lock().unwrap().x.clone()).collect();
-        let consensus =
-            (consensus_of(snapshots.iter().map(|s| s.as_slice())) / n as f64).sqrt();
-        recorder.record("consensus", t, consensus);
-        let losses: Vec<f64> =
-            cells.iter().map(|c| c.load_loss()).filter(|v| v.is_finite()).collect();
-        if !losses.is_empty() {
-            recorder.record("train_loss", t, losses.iter().sum::<f64>() / losses.len() as f64);
+        let consensus_sq = consensus_acc.measure(cells.iter().map(|c| &c.published));
+        recorder.record("consensus", t, (consensus_sq / n as f64).sqrt());
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for c in &cells {
+            let v = c.load_loss();
+            if v.is_finite() {
+                loss_sum += v;
+                loss_n += 1;
+            }
+        }
+        if loss_n > 0 {
+            recorder.record("train_loss", t, loss_sum / loss_n as f64);
         }
         let all_done = cells.iter().all(|c| {
             c.grad_done.load(Ordering::Acquire) && c.comm_done.load(Ordering::Acquire)
@@ -368,13 +397,11 @@ fn grad_loop(
     let mut snapshot = vec![0.0f32; dim];
     for step in 0..opts.steps_per_worker {
         let t0 = Instant::now();
-        // Gradient at a snapshot, outside the lock: the comm thread keeps
-        // averaging concurrently (the paper's decoupling; the resulting
-        // staleness is part of the modeled dynamic).
-        {
-            let st = cell.state.lock().unwrap();
-            snapshot.copy_from_slice(&st.x);
-        }
+        // Gradient at a snapshot from the published cell — no lock taken,
+        // so the comm thread keeps averaging concurrently (the paper's
+        // decoupling; the resulting staleness is part of the modeled
+        // dynamic).
+        cell.published.read_into(&mut snapshot);
         let loss = src.grad(&snapshot, &mut gradbuf)? as f64;
         // Scenario speed drift: real threads cannot run faster than the
         // hardware, so the runtime anchors on the currently-fastest
@@ -395,6 +422,7 @@ fn grad_loop(
             let mut st = cell.state.lock().unwrap();
             let t = cell.now(start);
             core.grad_event(&mut st, t, &mut opt, &gradbuf);
+            cell.published.publish(&st.x);
         }
         cell.store_loss(LossEma::fold(cell.load_loss(), loss, 0.95));
         cell.grads_done.fetch_add(1, Ordering::Relaxed);
@@ -507,22 +535,21 @@ fn comm_loop(
             }
             Pairing::Stop => break,
         };
-        // Mix to the event time and snapshot under the lock, then
-        // exchange outside it (matches the paper's lock-per-buffer
-        // granularity).
-        let snapshot = {
-            let mut st = cell.state.lock().unwrap();
+        // Send side: build the momentum-mixed snapshot straight into the
+        // outgoing buffer WITHOUT mutating state (the pending mix is
+        // folded into the receive pass below). Read-only under the lock;
+        // no copy, no allocation.
+        let (sendbuf, t_pair) = {
+            let st = cell.state.lock().unwrap();
             let t = cell.now(start);
-            core.mix_to(&mut st, t);
-            match recycled.take() {
-                Some(mut buf) if buf.len() == st.x.len() => {
-                    buf.copy_from_slice(&st.x);
-                    buf
-                }
-                _ => st.x.clone(),
-            }
+            let mut buf = match recycled.take() {
+                Some(buf) if buf.len() == st.x.len() => buf,
+                _ => vec![0.0f32; st.x.len()],
+            };
+            core.mix_into(&st, t, &mut buf);
+            (buf, t)
         };
-        bus.send(peer, PairMsg { from: w, data: snapshot })?;
+        bus.send(peer, PairMsg { from: w, data: sendbuf })?;
         let msg = inbox
             .recv()
             .map_err(|_| anyhow::anyhow!("worker {w}: inbox closed mid-pairing"))?;
@@ -531,9 +558,18 @@ fn comm_loop(
             "worker {w}: expected msg from {peer}, got {}",
             msg.from
         );
+        anyhow::ensure!(
+            msg.dim() == cell.published.dim(),
+            "worker {w}: dim mismatch from {peer}: {} vs {}",
+            msg.dim(),
+            cell.published.dim()
+        );
+        // Receive side: the pairing's single locked read-modify-write
+        // pass (pending mix + (α, α̃) update, fused).
         {
             let mut st = cell.state.lock().unwrap();
-            core.comm_half(&mut st, &msg.data);
+            core.comm_apply(&mut st, t_pair, &msg.data);
+            cell.published.publish(&st.x);
         }
         recycled = Some(msg.data);
         cell.comms_done.fetch_add(1, Ordering::Relaxed);

@@ -1,0 +1,43 @@
+//! Small shared utilities with no better home.
+
+/// Disjoint pair of mutable references into one slice — the safe way to
+/// hand both endpoints of a pairwise communication event to the fused
+/// kernels. Panics if `i == j` or either index is out of bounds.
+pub fn two_mut<T>(slice: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert!(i != j, "two_mut needs distinct indices, got {i} twice");
+    if i < j {
+        let (l, r) = slice.split_at_mut(j);
+        (&mut l[i], &mut r[0])
+    } else {
+        let (l, r) = slice.split_at_mut(i);
+        (&mut r[0], &mut l[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_both_orders() {
+        let mut v = vec![10, 20, 30, 40];
+        {
+            let (a, b) = two_mut(&mut v, 1, 3);
+            assert_eq!((*a, *b), (20, 40));
+            *a = 2;
+            *b = 4;
+        }
+        {
+            let (a, b) = two_mut(&mut v, 3, 0);
+            assert_eq!((*a, *b), (4, 10));
+        }
+        assert_eq!(v, vec![10, 2, 30, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct indices")]
+    fn rejects_equal_indices() {
+        let mut v = vec![1, 2];
+        let _ = two_mut(&mut v, 1, 1);
+    }
+}

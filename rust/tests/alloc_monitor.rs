@@ -1,0 +1,83 @@
+//! Allocation accounting for the monitor's steady-state read path.
+//!
+//! The runtime's monitor loop used to materialize a `Vec<Vec<f32>>` of
+//! every worker's parameters each tick. The published-snapshot rework
+//! replaces that with [`ConsensusAccumulator`] streaming over each cell's
+//! seqlock buffer — and this test pins the contract with a counting
+//! global allocator: after the first (warm-up) measurement, further
+//! ticks perform ZERO heap allocations.
+//!
+//! This lives in its own integration-test binary because the
+//! `#[global_allocator]` is process-wide, and everything runs in ONE
+//! `#[test]` so no concurrent test thread can pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use a2cid2::runtime::{ConsensusAccumulator, SnapshotCell};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn published_read_paths_allocate_nothing_in_steady_state() {
+    // --- Monitor consensus ticks -------------------------------------
+    let n = 8;
+    let dim = 4096;
+    let cells: Vec<SnapshotCell> = (0..n)
+        .map(|w| {
+            let row: Vec<f32> = (0..dim).map(|d| (w * dim + d) as f32 * 1e-3).collect();
+            SnapshotCell::new(&row)
+        })
+        .collect();
+
+    let mut acc = ConsensusAccumulator::new();
+    // Warm-up tick: the accumulator sizes its persistent buffers here.
+    let warm = acc.measure(cells.iter());
+    assert!(warm > 0.0, "distinct rows have positive consensus distance");
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut last = 0.0;
+    for _ in 0..100 {
+        last = acc.measure(cells.iter());
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "steady-state consensus ticks must not allocate");
+    assert!((last - warm).abs() <= 1e-9 * warm, "same snapshots, same measure");
+
+    // --- Gradient-thread snapshot reads + publishes ------------------
+    let cell = &cells[0];
+    let mut dst = Vec::new();
+    cell.read_into(&mut dst); // sizes the destination
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for k in 0..100u32 {
+        // Publishing reuses the cell's two fixed buffers; reading reuses
+        // the caller's sized destination.
+        cell.publish(&dst);
+        cell.read_into(&mut dst);
+        std::hint::black_box(k);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "publish/read cycles must not allocate");
+}
