@@ -1,0 +1,23 @@
+//! The scenario sweep as a bench target: runs the dropout × switch-time ×
+//! adaptive-vs-frozen grid at the env-selected scale, prints the table,
+//! and writes `BENCH_sweep.json` (cargo runs benches with cwd = the
+//! package root, so the file lands under `rust/`) for CI to archive.
+
+use a2cid2::experiments::{sweep, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let (points, tables) = sweep::run(scale).expect("sweep");
+    for t in tables {
+        t.print();
+    }
+    match sweep::write_json(&points, std::path::Path::new("BENCH_sweep.json")) {
+        Ok(()) => println!("wrote BENCH_sweep.json ({} rows)", points.len()),
+        Err(e) => println!("(failed to write BENCH_sweep.json: {e})"),
+    }
+    println!(
+        "[sweep] completed in {:.1}s at {scale:?} scale",
+        t0.elapsed().as_secs_f64()
+    );
+}

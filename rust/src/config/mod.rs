@@ -91,8 +91,9 @@ pub struct ExperimentConfig {
     /// `max(0, N(1, jitter))` time units (stragglers).
     pub compute_jitter: f64,
     /// Optional time-varying network scenario (phased topology switches,
-    /// link dropout, heterogeneous rates, speed drift). When set it
-    /// supersedes `topology`; see [`Scenario`] for the string syntax.
+    /// link dropout, heterogeneous rates, speed drift, worker churn,
+    /// per-phase adaptive (η, α̃)). When set it supersedes `topology`;
+    /// see [`Scenario`] for the string syntax.
     pub scenario: Option<Scenario>,
 }
 
@@ -244,6 +245,24 @@ seed = 7
         // AllReduce would silently ignore the scenario — rejected.
         let ar = "[experiment]\nmethod = \"allreduce\"\nscenario = \"ring@0,exp@0.5\"\n";
         assert!(ExperimentConfig::from_toml(ar).is_err());
+    }
+
+    #[test]
+    fn parse_churn_scenario_key() {
+        let text = "[experiment]\nn_workers = 8\n\
+                    scenario = \"ring@0;leave=0.25:0.2:3;join=0.25:0.6;adapt=0\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        let sc = cfg.scenario.unwrap();
+        assert_eq!(sc.churn.len(), 2);
+        assert!(!sc.adaptive);
+        // Churn that would empty the fleet fails at config time for this
+        // n (3 × 25% of 4 workers leaves one), never at run time.
+        let bad = "[experiment]\nn_workers = 4\n\
+                   scenario = \"ring@0;leave=0.25:0.2;leave=0.25:0.4;leave=0.25:0.6\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // Malformed churn options are config errors too.
+        let malformed = "[experiment]\nscenario = \"ring@0;leave=0.25\"\n";
+        assert!(ExperimentConfig::from_toml(malformed).is_err());
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! The paper's experiments (and the seed reproduction) only exercise
 //! *static* topologies with *fixed* Poisson rates. Real decentralized
 //! deployments are the opposite: links fail and recover, the overlay is
-//! re-wired mid-run, and worker speeds drift. A [`Scenario`] describes
-//! such a network as data, and compiles — deterministically under a seed
-//! — to a [`NetworkPlan`]: the *union graph* over every phase plus a
-//! sorted list of timed rate updates. Both execution engines replay the
-//! same plan: the virtual-time simulator applies updates exactly between
-//! events ([`crate::engine::VirtualTimeScheduler`]), the threaded runtime
+//! re-wired mid-run, worker speeds drift — and the worker *set* itself
+//! churns, with machines departing and re-joining mid-training. A
+//! [`Scenario`] describes such a network as data, and compiles —
+//! deterministically under a seed — to a [`NetworkPlan`]: the *union
+//! graph* over every phase plus a sorted list of timed updates. Both
+//! execution engines replay the same plan: the virtual-time simulator
+//! applies updates exactly between events
+//! ([`crate::engine::VirtualTimeScheduler`]), the threaded runtime
 //! applies them from its monitor loop ([`crate::engine::WallClock`]).
 //!
 //! ## Scenario string syntax
@@ -20,6 +22,9 @@
 //! drop   := drop=FRAC[:FROM[:TO[:SEED]]] e.g.  drop=0.2:0.25:0.75
 //! het    := het=SIGMA[:SEED]             log-normal per-edge rate spread
 //! drift  := drift=AMP[:STEPS[:SEED]]     linear per-worker speed drift
+//! leave  := leave=FRAC:T[:SEED]          FRAC of the fleet departs at T
+//! join   := join=FRAC:T                  departed workers re-join at T
+//! adapt  := adapt=0|1                    re-derive (η, α̃) per phase (default 1)
 //! ```
 //!
 //! All times are *fractions of the run horizon* in `[0, 1)`; the horizon
@@ -28,8 +33,33 @@
 //! `"ring@0,exponential@0.5;drop=0.2:0.25:0.75;drift=0.3"` starts on the
 //! ring, drops 20% of links over the middle half of the run, switches to
 //! the exponential graph at half-time, and drifts worker speeds by ±30%.
+//!
+//! ## Worker churn
+//!
+//! `leave=FRAC:T[:SEED]` removes `round(FRAC·n)` of the currently-active
+//! workers at horizon fraction `T` (membership drawn from `SEED`): their
+//! gradient processes are silenced and every incident link rate drops to
+//! zero. `join=FRAC:T` re-admits up to `round(FRAC·n)` departed workers
+//! (longest-departed first); a re-joining worker re-initializes from a
+//! neighbor snapshot (the engines pick the smallest-index active union
+//! neighbor as the donor). Churn that could ever leave fewer than two
+//! active workers is a *parse/compile error*, never a runtime panic.
+//!
+//! ## Adaptive (η, α̃)
+//!
+//! The A²CiD² parameters are functions of the communication graph's
+//! spectrum (χ₁, χ₂). With `adapt=1` (the default) every update that
+//! changes the topology phase or the worker set carries the spectrum of
+//! the *newly-active subgraph* ([`NetUpdate::chis`]); the engines
+//! re-derive (η, α̃) from it mid-run instead of holding phase-0's values.
+//! `adapt=0` freezes the phase-0 parameters for the whole run (the
+//! ablation arm of the sweep experiment). Dropout windows never retune —
+//! a window may disconnect the graph — and a churn event that leaves the
+//! active subgraph disconnected publishes no spectrum (the previous
+//! parameters are held).
 
 use std::collections::HashMap;
+use std::fmt;
 
 use crate::graph::{Graph, Spectrum, Topology};
 use crate::rng::{standard_normal, Xoshiro256};
@@ -70,17 +100,45 @@ pub struct SpeedDrift {
     pub seed: u64,
 }
 
+/// Which way a churn event moves the worker set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    Leave,
+    Join,
+}
+
+/// One scheduled worker-set change (`leave=` / `join=` options), kept
+/// sorted by `at` after parsing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub kind: ChurnKind,
+    /// Fraction of the *original* fleet affected, in `(0, 1)` for leave
+    /// and `(0, 1]` for join.
+    pub frac: f64,
+    /// Event time as a fraction of the horizon, in `(0, 1)`.
+    pub at: f64,
+    /// Membership seed (leave events; joins re-admit FIFO).
+    pub seed: u64,
+}
+
 /// A declarative time-varying network: topology phases plus optional
-/// dropout, per-edge rate spread, and per-worker speed drift.
+/// dropout, per-edge rate spread, per-worker speed drift, and worker
+/// churn.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Scenario {
     pub phases: Vec<Phase>,
     pub dropout: Option<Dropout>,
     pub het: Option<RateSpread>,
     pub drift: Option<SpeedDrift>,
+    /// Worker-set changes, sorted by time (strictly increasing).
+    pub churn: Vec<ChurnEvent>,
+    /// Re-derive (η, α̃) from the active subgraph's spectrum at every
+    /// phase switch / churn event (`adapt=1`, the default) instead of
+    /// holding phase-0's parameters (`adapt=0`).
+    pub adaptive: bool,
 }
 
-/// One timed network update of a compiled plan. `None` fields are
+/// One timed network update of a compiled plan. `None`/empty fields are
 /// unchanged from the previous state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetUpdate {
@@ -90,6 +148,17 @@ pub struct NetUpdate {
     pub edge_rates: Option<Vec<f64>>,
     /// New per-worker gradient rates.
     pub grad_rates: Option<Vec<f64>>,
+    /// Workers departing at this update (their rates are already zeroed
+    /// in the vectors above).
+    pub leave: Vec<usize>,
+    /// Workers re-joining at this update; each re-initializes from a
+    /// neighbor snapshot before its processes resume.
+    pub join: Vec<usize>,
+    /// (χ₁, χ₂) of the newly-active subgraph, present when the topology
+    /// phase or the worker set changed under `adapt=1` and the active
+    /// subgraph is connected. Engines running the accelerated method
+    /// re-derive (η, α̃) from it; `None` holds the previous parameters.
+    pub chis: Option<(f64, f64)>,
 }
 
 /// A compiled scenario: union graph, initial rates, and sorted updates.
@@ -101,8 +170,10 @@ pub struct NetworkPlan {
     pub initial_grad_rates: Vec<f64>,
     pub updates: Vec<NetUpdate>,
     /// Spectrum of the phase-0 rate-weighted Laplacian (with the rate
-    /// spread applied, dropout ignored) — the (χ₁, χ₂) the A²CiD²
-    /// parameters are derived from. η is held fixed through the run.
+    /// spread applied, dropout ignored) — the (χ₁, χ₂) the *initial*
+    /// A²CiD² parameters are derived from. Under `adapt=1` later phases
+    /// retune via [`NetUpdate::chis`]; under `adapt=0` these values are
+    /// held for the whole run.
     pub spectrum: Spectrum,
 }
 
@@ -123,7 +194,6 @@ impl NetworkPlan {
             spectrum,
         }
     }
-
 }
 
 impl Scenario {
@@ -134,6 +204,8 @@ impl Scenario {
             dropout: None,
             het: None,
             drift: None,
+            churn: Vec::new(),
+            adaptive: true,
         }
     }
 
@@ -180,7 +252,14 @@ impl Scenario {
             );
         }
 
-        let mut scenario = Scenario { phases, dropout: None, het: None, drift: None };
+        let mut scenario = Scenario {
+            phases,
+            dropout: None,
+            het: None,
+            drift: None,
+            churn: Vec::new(),
+            adaptive: true,
+        };
         for opt in parts {
             let opt = opt.trim();
             if opt.is_empty() {
@@ -246,22 +325,146 @@ impl Scenario {
                     anyhow::ensure!(d.steps >= 1, "drift needs >= 1 steps");
                     scenario.drift = Some(d);
                 }
+                "leave" | "join" => {
+                    let kind = if key == "leave" { ChurnKind::Leave } else { ChurnKind::Join };
+                    let ev = ChurnEvent {
+                        kind,
+                        frac: f64_at(0, f64::NAN)?,
+                        at: f64_at(1, f64::NAN)?,
+                        seed: u64_at(2, 0)?,
+                    };
+
+                    anyhow::ensure!(
+                        fields.len() >= 2,
+                        "{key} needs FRAC:TIME, got '{val}'"
+                    );
+                    match kind {
+                        ChurnKind::Leave => {
+                            anyhow::ensure!(
+                                ev.frac > 0.0 && ev.frac < 1.0,
+                                "leave fraction {} outside (0, 1)",
+                                ev.frac
+                            );
+                            anyhow::ensure!(
+                                fields.len() <= 3,
+                                "leave takes FRAC:TIME[:SEED] only, got '{val}'"
+                            );
+                        }
+                        ChurnKind::Join => {
+                            anyhow::ensure!(
+                                ev.frac > 0.0 && ev.frac <= 1.0,
+                                "join fraction {} outside (0, 1]",
+                                ev.frac
+                            );
+                            // Joins re-admit FIFO — no membership draw, so
+                            // a seed field would be silently meaningless
+                            // (and Display couldn't round-trip it).
+                            anyhow::ensure!(
+                                fields.len() <= 2,
+                                "join takes FRAC:TIME only, got '{val}'"
+                            );
+                        }
+                    }
+                    anyhow::ensure!(
+                        ev.at > 0.0 && ev.at < 1.0,
+                        "{key} time {} outside (0, 1)",
+                        ev.at
+                    );
+                    scenario.churn.push(ev);
+                }
+                "adapt" => {
+                    let v = u64_at(0, 1)?;
+                    anyhow::ensure!(v <= 1, "adapt must be 0 or 1, got {v}");
+                    scenario.adaptive = v == 1;
+                }
                 other => anyhow::bail!("unknown scenario option '{other}'"),
+            }
+        }
+
+        // Churn sanity, independent of n: sort by time (events may be
+        // written in any order), require distinct times, and walk the
+        // fraction algebra so a history that could empty the graph is a
+        // PARSE error, not a runtime panic.
+        scenario
+            .churn
+            .sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        for w in scenario.churn.windows(2) {
+            anyhow::ensure!(
+                w[0].at < w[1].at,
+                "churn events need distinct times (two at {})",
+                w[0].at
+            );
+        }
+        let mut departed_frac = 0.0f64;
+        for ev in &scenario.churn {
+            match ev.kind {
+                ChurnKind::Leave => {
+                    departed_frac += ev.frac;
+                    anyhow::ensure!(
+                        departed_frac < 1.0,
+                        "churn would empty the graph: {:.0}% departed by t={}",
+                        departed_frac * 100.0,
+                        ev.at
+                    );
+                }
+                ChurnKind::Join => {
+                    anyhow::ensure!(
+                        departed_frac > 0.0,
+                        "join at t={} but nothing has departed yet",
+                        ev.at
+                    );
+                    departed_frac = (departed_frac - ev.frac).max(0.0);
+                }
             }
         }
         Ok(scenario)
     }
 
     /// Cheap config-time validation: every phase topology must build
-    /// (and be connected) for `n` workers — the only way a *parsed*
-    /// scenario can still fail. Full compilation (union graph, RNG
-    /// draws, the O(n³) spectrum eigensolve) is deferred to run start
+    /// (and be connected) for `n` workers, and no churn event may shrink
+    /// the active fleet below two. Full compilation (union graph, RNG
+    /// draws, the O(n³) spectrum eigensolves) is deferred to run start
     /// so config validation doesn't pay it twice.
     pub fn validate_for(&self, n: usize) -> crate::Result<()> {
         for phase in &self.phases {
             Graph::build(&phase.topology, n)?;
         }
+        self.churn_counts(n)?;
         Ok(())
+    }
+
+    /// Walk the churn timeline with exact worker counts; errors if any
+    /// leave would take the active fleet below two workers.
+    fn churn_counts(&self, n: usize) -> crate::Result<Vec<usize>> {
+        let mut active = n;
+        let mut departed = 0usize;
+        let mut counts = Vec::with_capacity(self.churn.len());
+        for ev in &self.churn {
+            let k = (ev.frac * n as f64).round() as usize;
+            let k = match ev.kind {
+                ChurnKind::Leave => {
+                    anyhow::ensure!(
+                        active >= k + 2,
+                        "churn would leave fewer than 2 active workers at t={} \
+                         ({} active, {} leaving)",
+                        ev.at,
+                        active,
+                        k
+                    );
+                    active -= k;
+                    departed += k;
+                    k
+                }
+                ChurnKind::Join => {
+                    let k = k.min(departed);
+                    active += k;
+                    departed -= k;
+                    k
+                }
+            };
+            counts.push(k);
+        }
+        Ok(counts)
     }
 
     /// Compile to a [`NetworkPlan`] for `n` workers. `comm_rate` is the
@@ -344,6 +547,45 @@ impl Scenario {
             None => vec![0.0; n],
         };
 
+        // Churn membership, resolved in time order: each leave draws its
+        // departing set from the event's seed over the currently-active
+        // fleet; each join re-admits the longest-departed first.
+        let churn_ks = self.churn_counts(n)?;
+        let mut churn_deltas: Vec<(f64, Vec<usize>, Vec<usize>)> = Vec::new();
+        {
+            let mut active = vec![true; n];
+            let mut departed: Vec<usize> = Vec::new();
+            for (ev, &k) in self.churn.iter().zip(&churn_ks) {
+                if k == 0 {
+                    continue; // fraction rounds to nobody at this n
+                }
+                match ev.kind {
+                    ChurnKind::Leave => {
+                        let alive: Vec<usize> = (0..n).filter(|&w| active[w]).collect();
+                        let mut rng = Xoshiro256::seed_from_u64(ev.seed ^ 0xC4B2);
+                        let mut leavers: Vec<usize> = rng
+                            .sample_indices(alive.len(), k)
+                            .into_iter()
+                            .map(|i| alive[i])
+                            .collect();
+                        leavers.sort_unstable();
+                        for &w in &leavers {
+                            active[w] = false;
+                            departed.push(w);
+                        }
+                        churn_deltas.push((ev.at, leavers, Vec::new()));
+                    }
+                    ChurnKind::Join => {
+                        let joiners: Vec<usize> = departed.drain(..k).collect();
+                        for &w in &joiners {
+                            active[w] = true;
+                        }
+                        churn_deltas.push((ev.at, Vec::new(), joiners));
+                    }
+                }
+            }
+        }
+
         // All change points as horizon fractions, deduplicated and sorted.
         let mut fracs: Vec<f64> = self.phases.iter().map(|p| p.at).collect();
         if let Some(d) = &self.dropout {
@@ -355,16 +597,21 @@ impl Scenario {
                 fracs.push(k as f64 / (d.steps + 1) as f64);
             }
         }
+        for (at, _, _) in &churn_deltas {
+            fracs.push(*at);
+        }
         fracs.retain(|f| (0.0..1.0).contains(f));
         fracs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         fracs.dedup();
 
-        let edge_rates_at = |f: f64| -> Vec<f64> {
-            let phase_idx = self
-                .phases
+        let phase_at = |f: f64| -> usize {
+            self.phases
                 .iter()
                 .rposition(|p| p.at <= f)
-                .expect("first phase starts at 0");
+                .expect("first phase starts at 0")
+        };
+        let edge_rates_at = |f: f64, mask: &[bool]| -> Vec<f64> {
+            let phase_idx = phase_at(f);
             let in_drop_window = self
                 .dropout
                 .as_ref()
@@ -373,42 +620,123 @@ impl Scenario {
                 .edges
                 .iter()
                 .enumerate()
-                .map(|(e, ij)| {
-                    if in_drop_window && dropped[e] {
+                .map(|(e, &(i, j))| {
+                    if (in_drop_window && dropped[e]) || !(mask[i] && mask[j]) {
                         return 0.0;
                     }
-                    phase_rates[phase_idx].get(ij).copied().unwrap_or(0.0) * het_mult[e]
+                    phase_rates[phase_idx].get(&(i, j)).copied().unwrap_or(0.0) * het_mult[e]
                 })
                 .collect()
         };
-        let grad_rates_at = |f: f64| -> Vec<f64> {
+        let grad_rates_at = |f: f64, mask: &[bool]| -> Vec<f64> {
             base_grad_rates
                 .iter()
                 .zip(&drift_slopes)
-                .map(|(&base, &s)| (base * (1.0 + s * f)).max(0.05))
+                .enumerate()
+                .map(|(w, (&base, &s))| {
+                    if mask[w] {
+                        (base * (1.0 + s * f)).max(0.05)
+                    } else {
+                        0.0
+                    }
+                })
                 .collect()
         };
+        // (χ₁, χ₂) of the induced subgraph over the active workers under
+        // phase `phase_idx` (dropout ignored, as for the phase-0
+        // spectrum). `None` when the subgraph is disconnected or the
+        // spectrum is unusable — the engines then hold their previous
+        // parameters.
+        let active_chis = |phase_idx: usize, mask: &[bool]| -> Option<(f64, f64)> {
+            if comm_rate <= 0.0 {
+                return None;
+            }
+            let alive: Vec<usize> = (0..n).filter(|&w| mask[w]).collect();
+            if alive.len() < 2 {
+                return None;
+            }
+            let remap: HashMap<usize, usize> =
+                alive.iter().enumerate().map(|(new, &old)| (old, new)).collect();
+            let mut pairs = Vec::new();
+            let mut rate_of: HashMap<(usize, usize), f64> = HashMap::new();
+            for (e, &(i, j)) in union.edges.iter().enumerate() {
+                if !(mask[i] && mask[j]) {
+                    continue;
+                }
+                let r = phase_rates[phase_idx].get(&(i, j)).copied().unwrap_or(0.0) * het_mult[e];
+                if r > 0.0 {
+                    let (a, b) = (remap[&i], remap[&j]);
+                    pairs.push((a, b));
+                    rate_of.insert((a.min(b), a.max(b)), r);
+                }
+            }
+            if pairs.is_empty() {
+                return None;
+            }
+            let g = Graph::from_edges(alive.len(), pairs);
+            if !g.is_connected() {
+                return None;
+            }
+            let rates: Vec<f64> = g.edges.iter().map(|ij| rate_of[ij]).collect();
+            let s = g.spectrum_with_rates(&rates);
+            (s.chi1.is_finite() && s.chi1 > 0.0 && s.chi2.is_finite() && s.chi2 > 0.0)
+                .then(|| (s.chi1, s.chi2.min(s.chi1)))
+        };
 
-        let initial_edge_rates = edge_rates_at(0.0);
-        let initial_grad_rates = grad_rates_at(0.0);
+        let mut mask = vec![true; n];
+        let initial_edge_rates = edge_rates_at(0.0, &mask);
+        let initial_grad_rates = grad_rates_at(0.0, &mask);
         let mut updates = Vec::new();
         let mut prev_edges = initial_edge_rates.clone();
         let mut prev_grads = initial_grad_rates.clone();
+        let mut prev_phase = 0usize;
         for &f in fracs.iter().filter(|&&f| f > 0.0) {
-            let edges = edge_rates_at(f);
-            let grads = grad_rates_at(f);
+            // Apply any churn delta landing exactly at this change point
+            // (exact f64 equality: both sides are the same parsed value).
+            let delta = churn_deltas.iter().find(|(at, _, _)| *at == f);
+            let (leave, join) = match delta {
+                Some((_, l, j)) => (l.clone(), j.clone()),
+                None => (Vec::new(), Vec::new()),
+            };
+            for &w in &leave {
+                mask[w] = false;
+            }
+            for &w in &join {
+                mask[w] = true;
+            }
+            let phase_idx = phase_at(f);
+            let chis = if self.adaptive && (phase_idx != prev_phase || delta.is_some()) {
+                active_chis(phase_idx, &mask)
+            } else {
+                None
+            };
+            prev_phase = phase_idx;
+            let edges = edge_rates_at(f, &mask);
+            let grads = grad_rates_at(f, &mask);
             let edge_rates = (edges != prev_edges).then(|| edges.clone());
             let grad_rates = (grads != prev_grads).then(|| grads.clone());
             prev_edges = edges;
             prev_grads = grads;
-            if edge_rates.is_some() || grad_rates.is_some() {
-                updates.push(NetUpdate { t: f * horizon, edge_rates, grad_rates });
+            if edge_rates.is_some()
+                || grad_rates.is_some()
+                || !leave.is_empty()
+                || !join.is_empty()
+                || chis.is_some()
+            {
+                updates.push(NetUpdate {
+                    t: f * horizon,
+                    edge_rates,
+                    grad_rates,
+                    leave,
+                    join,
+                    chis,
+                });
             }
         }
 
         // (χ₁, χ₂) of the phase-0 network, dropout ignored (a dropout
-        // window may disconnect the graph; η is derived from the clean
-        // phase-0 spectrum and held fixed, as documented).
+        // window may disconnect the graph; the initial parameters come
+        // from the clean phase-0 spectrum).
         let spectrum_rates: Vec<f64> = union
             .edges
             .iter()
@@ -435,6 +763,38 @@ impl Scenario {
     }
 }
 
+impl fmt::Display for Scenario {
+    /// Render the canonical scenario string; `Scenario::parse` round-trips
+    /// it exactly (f64 `Display` is shortest-round-trip in Rust).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, p) in self.phases.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{}@{}", p.topology.spec(), p.at)?;
+        }
+        if let Some(d) = &self.dropout {
+            write!(f, ";drop={}:{}:{}:{}", d.frac, d.from, d.to, d.seed)?;
+        }
+        if let Some(h) = &self.het {
+            write!(f, ";het={}:{}", h.sigma, h.seed)?;
+        }
+        if let Some(d) = &self.drift {
+            write!(f, ";drift={}:{}:{}", d.amp, d.steps, d.seed)?;
+        }
+        for ev in &self.churn {
+            match ev.kind {
+                ChurnKind::Leave => write!(f, ";leave={}:{}:{}", ev.frac, ev.at, ev.seed)?,
+                ChurnKind::Join => write!(f, ";join={}:{}", ev.frac, ev.at)?,
+            }
+        }
+        if !self.adaptive {
+            f.write_str(";adapt=0")?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -452,6 +812,8 @@ mod tests {
         );
         assert_eq!(s.het, Some(RateSpread { sigma: 0.5, seed: 0 }));
         assert_eq!(s.drift, Some(SpeedDrift { amp: 0.3, steps: 4, seed: 1 }));
+        assert!(s.churn.is_empty());
+        assert!(s.adaptive, "adaptive is the default");
     }
 
     #[test]
@@ -462,6 +824,23 @@ mod tests {
         // Topology sub-syntax passes through (torus:RxC contains ':').
         let t = Scenario::parse("torus:2x4@0").unwrap();
         assert_eq!(t.phases[0].topology, Topology::Torus { rows: 2, cols: 4 });
+    }
+
+    #[test]
+    fn parses_churn_and_adapt() {
+        // Events sort by time regardless of written order.
+        let s = Scenario::parse("ring@0;join=0.25:0.6;leave=0.25:0.2:9;adapt=0").unwrap();
+        assert_eq!(s.churn.len(), 2);
+        assert_eq!(
+            s.churn[0],
+            ChurnEvent { kind: ChurnKind::Leave, frac: 0.25, at: 0.2, seed: 9 }
+        );
+        assert_eq!(
+            s.churn[1],
+            ChurnEvent { kind: ChurnKind::Join, frac: 0.25, at: 0.6, seed: 0 }
+        );
+        assert!(!s.adaptive);
+        s.validate_for(8).unwrap();
     }
 
     #[test]
@@ -486,9 +865,69 @@ mod tests {
     }
 
     #[test]
+    fn churn_parse_error_paths() {
+        for bad in [
+            "ring@0;leave=0.25",            // missing time
+            "ring@0;leave=x:0.5",           // malformed fraction
+            "ring@0;leave=0.25:y",          // malformed time
+            "ring@0;leave=0.25:0.5:z",      // malformed seed
+            "ring@0;leave=0:0.5",           // zero fraction
+            "ring@0;leave=1.0:0.5",         // would empty the graph outright
+            "ring@0;leave=-0.2:0.5",        // negative fraction
+            "ring@0;leave=0.25:0",          // time at 0
+            "ring@0;leave=0.25:1.0",        // time at 1
+            "ring@0;leave=0.25:1.5",        // time out of range
+            "ring@0;join=0.25:0.5",         // join before any leave
+            "ring@0;join=1.5:0.5",          // join fraction out of range
+            "ring@0;leave=0.25:0.2;join=0.25:0.5:3", // join takes no seed
+            "ring@0;leave=0.25:0.5:3:17",   // leave: trailing junk field
+            "ring@0;leave=0.6:0.2;leave=0.6:0.4", // cumulative leave empties the graph
+            "ring@0;leave=0.25:0.5;join=0.25:0.5", // duplicate churn time
+            "ring@0;adapt=2",               // adapt must be 0|1
+            "ring@0;adapt=x",               // malformed adapt
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "should reject '{bad}'");
+        }
+        // leave then full re-join then leave again is a valid cycle.
+        Scenario::parse("ring@0;leave=0.4:0.2;join=1.0:0.4;leave=0.4:0.6").unwrap();
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in [
+            "ring",
+            "ring@0,exponential@0.5",
+            "torus:2x4@0,erdos:0.4:3@0.25",
+            "ring@0,exponential@0.5;drop=0.2:0.25:0.75:7;het=0.5;drift=0.3:4:1",
+            "ring@0;leave=0.25:0.2:9;join=0.25:0.6",
+            "ring@0;leave=0.25:0.2;adapt=0",
+        ] {
+            let parsed = Scenario::parse(s).unwrap();
+            let rendered = parsed.to_string();
+            let reparsed = Scenario::parse(&rendered)
+                .unwrap_or_else(|e| panic!("'{rendered}' should re-parse: {e}"));
+            assert_eq!(parsed, reparsed, "round-trip of '{s}' via '{rendered}'");
+        }
+    }
+
+    #[test]
+    fn validate_for_catches_empty_fleet_at_n() {
+        // 25% of 4 workers is 1; three leaves take the fleet to 1 < 2.
+        let s = Scenario::parse(
+            "ring@0;leave=0.25:0.2;leave=0.25:0.4;leave=0.25:0.6",
+        )
+        .unwrap();
+        s.validate_for(8).unwrap();
+        assert!(s.validate_for(4).is_err());
+        assert!(s.compile(4, 1.0, 10.0, &[1.0; 4]).is_err());
+    }
+
+    #[test]
     fn compile_is_deterministic() {
-        let sc = Scenario::parse("ring@0,exponential@0.5;drop=0.2:0.25:0.75:3;het=0.4:5;drift=0.3:4:2")
-            .unwrap();
+        let sc = Scenario::parse(
+            "ring@0,exponential@0.5;drop=0.2:0.25:0.75:3;het=0.4:5;drift=0.3:4:2;leave=0.25:0.3:1;join=0.25:0.7",
+        )
+        .unwrap();
         let base = vec![1.0; 8];
         let a = sc.compile(8, 1.0, 100.0, &base).unwrap();
         let b = sc.compile(8, 1.0, 100.0, &base).unwrap();
@@ -514,6 +953,18 @@ mod tests {
         let after = plan.updates[0].edge_rates.as_ref().unwrap();
         assert!(after.iter().all(|&r| r > 0.0));
         assert!(plan.updates[0].grad_rates.is_none());
+        // Adaptive default: the switch carries the complete graph's
+        // spectrum (χ₁ = χ₂ there).
+        let (c1, c2) = plan.updates[0].chis.expect("switch retunes");
+        assert!((c1 - c2).abs() < 1e-6, "complete graph: chi1 == chi2");
+    }
+
+    #[test]
+    fn frozen_params_suppress_chis() {
+        let sc = Scenario::parse("ring@0,complete@0.5;adapt=0").unwrap();
+        let plan = sc.compile(6, 1.0, 10.0, &[1.0; 6]).unwrap();
+        assert_eq!(plan.updates.len(), 1);
+        assert!(plan.updates[0].chis.is_none(), "adapt=0 never retunes");
     }
 
     #[test]
@@ -526,6 +977,8 @@ mod tests {
         let silenced = at_drop.iter().filter(|&&r| r == 0.0).count();
         assert_eq!(silenced, 4, "50% of 8 ring edges");
         assert_eq!(at_recover, &plan.initial_edge_rates);
+        // Dropout boundaries never retune (the window may disconnect).
+        assert!(plan.updates.iter().all(|u| u.chis.is_none()));
         // Spectrum ignores the dropout window (stays the clean ring).
         assert!(plan.spectrum.chi1.is_finite() && plan.spectrum.chi1 > 1.0);
     }
@@ -545,6 +998,61 @@ mod tests {
             let d0 = first[w] - plan.initial_grad_rates[w];
             let d1 = last[w] - plan.initial_grad_rates[w];
             assert!(d0.abs() <= d1.abs() + 1e-12, "worker {w} drifts outward");
+        }
+    }
+
+    #[test]
+    fn churn_compiles_to_leave_and_join_updates() {
+        let sc = Scenario::parse("ring@0;leave=0.25:0.25:3;join=0.25:0.75").unwrap();
+        let plan = sc.compile(8, 1.0, 100.0, &[1.0; 8]).unwrap();
+        assert_eq!(plan.updates.len(), 2);
+        let (l, j) = (&plan.updates[0], &plan.updates[1]);
+        assert!((l.t - 25.0).abs() < 1e-12 && (j.t - 75.0).abs() < 1e-12);
+        assert_eq!(l.leave.len(), 2, "25% of 8");
+        assert!(l.join.is_empty());
+        assert_eq!(j.join, l.leave, "FIFO re-admission");
+        // The departing workers' gradient processes are silenced exactly,
+        // no floor.
+        let grads = l.grad_rates.as_ref().unwrap();
+        for &w in &l.leave {
+            assert_eq!(grads[w], 0.0);
+        }
+        // Every edge incident to a departed worker goes silent.
+        let edges = l.edge_rates.as_ref().unwrap();
+        for (e, &(a, b)) in plan.union.edges.iter().enumerate() {
+            if l.leave.contains(&a) || l.leave.contains(&b) {
+                assert_eq!(edges[e], 0.0, "edge {a}-{b} must be silent");
+            }
+        }
+        // Re-join restores the initial state.
+        assert_eq!(j.edge_rates.as_ref().unwrap(), &plan.initial_edge_rates);
+        assert_eq!(j.grad_rates.as_ref().unwrap(), &plan.initial_grad_rates);
+    }
+
+    #[test]
+    fn churn_chis_present_only_when_subgraph_connected() {
+        // Removing 2 of 8 ring workers disconnects the remainder (two
+        // paths) unless the leavers happen to be adjacent. Seed 1 on the
+        // ring: whatever the draw, a connected induced subgraph yields
+        // chis and a disconnected one yields None — assert consistency
+        // with an explicit connectivity check.
+        let sc = Scenario::parse("ring@0;leave=0.25:0.5:1").unwrap();
+        let plan = sc.compile(8, 1.0, 100.0, &[1.0; 8]).unwrap();
+        let upd = &plan.updates[0];
+        let alive: Vec<usize> = (0..8).filter(|w| !upd.leave.contains(w)).collect();
+        let remap: std::collections::HashMap<usize, usize> =
+            alive.iter().enumerate().map(|(new, &old)| (old, new)).collect();
+        let ring = Graph::build(&Topology::Ring, 8).unwrap();
+        let sub = Graph::from_edges(
+            alive.len(),
+            ring.edges
+                .iter()
+                .filter(|(a, b)| remap.contains_key(a) && remap.contains_key(b))
+                .map(|(a, b)| (remap[a], remap[b])),
+        );
+        assert_eq!(upd.chis.is_some(), sub.is_connected());
+        if let Some((c1, c2)) = upd.chis {
+            assert!(c1 >= c2 && c2 > 0.0);
         }
     }
 

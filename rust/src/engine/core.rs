@@ -47,6 +47,36 @@ impl DynamicsCore {
         Ok(Self::with_params(acid, lr))
     }
 
+    /// Swap in new (η, α, α̃) mid-run (the adaptive per-phase path). The
+    /// mixer is rebuilt so the momentum flow uses the new η from the next
+    /// event on; elapsed-but-unmixed time is charged at the new rate
+    /// (piecewise-constant η, consistent between engines because both
+    /// apply the change between events).
+    pub fn set_params(&mut self, acid: AcidParams) {
+        self.acid = acid;
+        self.mixer = Mixer::new(acid.eta);
+    }
+
+    /// Re-derive the parameters from a new active-subgraph spectrum
+    /// (χ₁, χ₂), preserving the method: accelerated cores retune, the
+    /// η = 0 baseline ignores the spectrum entirely. Unusable spectra
+    /// (see [`AcidParams::from_chis_clamped`]) keep the current values.
+    pub fn retune(&mut self, chi1: f64, chi2: f64) {
+        if !self.acid.is_accelerated() {
+            return;
+        }
+        if let Some(p) = AcidParams::from_chis_clamped(chi1, chi2) {
+            self.set_params(p);
+        }
+    }
+
+    /// Churn re-join: reset `st` from a donor neighbor's parameters at
+    /// time `t` (both engines route re-joins through this one method so
+    /// the replay stays bit-identical between them).
+    pub fn rejoin_from(&self, st: &mut WorkerState, donor_x: &[f32], t: f64) {
+        st.reinit_from(donor_x, t);
+    }
+
     /// Apply one gradient event at time `t`: momentum-mix the pair for
     /// the elapsed time, fold the raw gradient through the optimizer, and
     /// step both rows. The learning rate comes from the worker's own
@@ -102,6 +132,23 @@ impl DynamicsCore {
     /// cost on the runtime path.
     pub fn comm_apply(&self, st: &mut WorkerState, t: f64, peer_x: &[f32]) {
         st.apply_comm_fused(t, &self.acid, &self.mixer, peer_x);
+    }
+
+    /// [`DynamicsCore::comm_apply`] with an explicitly *agreed* (α, α̃):
+    /// both endpoints of one pairing must average with the same step
+    /// sizes or the pair mean drifts, so when an adaptive retune lands
+    /// mid-match the two sides apply the older of their two snapshots
+    /// (smaller publish epoch — both compute the same choice). The
+    /// pending-mix η stays this worker's own: it must match the mix its
+    /// outgoing buffer was built with.
+    pub fn comm_apply_agreed(
+        &self,
+        st: &mut WorkerState,
+        t: f64,
+        peer_x: &[f32],
+        agreed: AcidParams,
+    ) {
+        st.apply_comm_fused(t, &agreed, &self.mixer, peer_x);
     }
 
     /// Sync every worker to a common evaluation time (completes the lazy
@@ -232,6 +279,100 @@ mod tests {
         assert_eq!(b3.xt, b2.xt);
         assert_eq!(a3.t_last, a2.t_last);
         assert_eq!(a3.n_comms, a2.n_comms);
+    }
+
+    #[test]
+    fn split_pairing_with_agreed_params_conserves_pair_mean() {
+        // A retune lands between the two endpoints' refreshes: worker a
+        // still runs the old core, worker b the new one. Averaging with
+        // each side's OWN α̃ would drift the pair's x̃ mean; averaging
+        // with the agreed (older) snapshot on both sides conserves it.
+        let old_p = AcidParams::accelerated(10.0, 1.0);
+        let new_p = AcidParams::accelerated(2.0, 1.0);
+        let lr = LrSchedule::Constant { lr: 0.1 };
+        let core_a = DynamicsCore::with_params(old_p, lr.clone()); // not yet refreshed
+        let core_b = DynamicsCore::with_params(new_p, lr); // already refreshed
+        let mut a = WorkerState::new(vec![1.0, -2.0]);
+        let mut b = WorkerState::new(vec![3.0, 0.5]);
+        let mut opt = Sgd::new(0.0);
+        core_a.grad_event(&mut a, 0.2, &mut opt, &[1.0, -1.0]);
+        core_b.grad_event(&mut b, 0.3, &mut opt, &[0.5, 0.5]);
+        let t = 0.7;
+        let mut buf_a = vec![0.0f32; 2];
+        let mut buf_b = vec![0.0f32; 2];
+        core_a.mix_into(&a, t, &mut buf_a);
+        core_b.mix_into(&b, t, &mut buf_b);
+        // Total pair mass Σ(x + x̃): conserved by the mixing flow and by
+        // a comm event iff both endpoints share (α, α̃).
+        let mass = |u: &WorkerState, v: &WorkerState| -> f32 {
+            u.x.iter().chain(&u.xt).chain(&v.x).chain(&v.xt).sum()
+        };
+        // Failure mode this guards: each side applying its OWN snapshot
+        // (α̃ = 1.58 vs 0.71 here) leaks mass through the x̃ row.
+        let (mut a_own, mut b_own) = (a.clone(), b.clone());
+        let mass_before = mass(&a_own, &b_own);
+        core_a.comm_apply(&mut a_own, t, &buf_b);
+        core_b.comm_apply(&mut b_own, t, &buf_a);
+        assert!(
+            (mass(&a_own, &b_own) - mass_before).abs() > 1e-3,
+            "own-snapshot split pairing must visibly leak (else this test is vacuous)"
+        );
+        // Agreed path: both sides use the older snapshot — mass conserved.
+        core_a.comm_apply_agreed(&mut a, t, &buf_b, old_p);
+        core_b.comm_apply_agreed(&mut b, t, &buf_a, old_p);
+        let mass_after = mass(&a, &b);
+        assert!(
+            (mass_before - mass_after).abs() < 1e-4,
+            "pair mass conserved under agreed params: {mass_before} vs {mass_after}"
+        );
+        assert_eq!(a.n_comms, 1);
+        assert_eq!(b.n_comms, 1);
+        // With the agreed params equal to the core's own, the path is
+        // exactly comm_apply.
+        let mut c = WorkerState::new(vec![1.0, 2.0]);
+        let mut d = c.clone();
+        core_b.comm_apply(&mut c, 0.1, &[0.5, 0.5]);
+        core_b.comm_apply_agreed(&mut d, 0.1, &[0.5, 0.5], core_b.acid);
+        assert_eq!(c.x, d.x);
+        assert_eq!(c.xt, d.xt);
+    }
+
+    #[test]
+    fn retune_swaps_params_only_for_accelerated_cores() {
+        let lr = LrSchedule::Constant { lr: 0.1 };
+        let mut acid = DynamicsCore::for_method(Method::Acid, &spectrum(), lr.clone()).unwrap();
+        let before = acid.acid;
+        acid.retune(2.0, 1.0);
+        assert_ne!(acid.acid, before, "accelerated core retunes");
+        assert_eq!(acid.acid, AcidParams::accelerated(2.0, 1.0));
+        assert_eq!(acid.mixer.eta, acid.acid.eta, "mixer follows eta");
+        // A degenerate spectrum holds the current parameters.
+        let held = acid.acid;
+        acid.retune(f64::NAN, 1.0);
+        assert_eq!(acid.acid, held);
+        // The baseline never grows a momentum, whatever the spectrum.
+        let mut base =
+            DynamicsCore::for_method(Method::AsyncBaseline, &spectrum(), lr).unwrap();
+        base.retune(10.0, 1.0);
+        assert!(!base.acid.is_accelerated());
+        assert_eq!(base.mixer.eta, 0.0);
+    }
+
+    #[test]
+    fn rejoin_resets_state_from_donor() {
+        let core = DynamicsCore::with_params(
+            AcidParams::accelerated(5.0, 1.0),
+            LrSchedule::Constant { lr: 0.1 },
+        );
+        let mut st = WorkerState::new(vec![1.0, 2.0]);
+        let mut opt = Sgd::new(0.0);
+        core.grad_event(&mut st, 0.4, &mut opt, &[1.0, -1.0]);
+        let grads_before = st.n_grads;
+        core.rejoin_from(&mut st, &[7.0, -7.0], 2.5);
+        assert_eq!(st.x, vec![7.0, -7.0]);
+        assert_eq!(st.xt, st.x, "tracker restarts glued to x");
+        assert_eq!(st.t_last, 2.5);
+        assert_eq!(st.n_grads, grads_before, "step count survives the re-join");
     }
 
     #[test]

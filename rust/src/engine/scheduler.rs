@@ -12,10 +12,11 @@
 //!   consults. The runtime's monitor loop pushes plan updates into it as
 //!   normalized wall-clock time crosses each update's timestamp.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::scenario::{NetUpdate, NetworkPlan};
+use crate::gossip::AcidParams;
 use crate::graph::Graph;
 use crate::simulator::events::{EventKind, EventQueue};
 
@@ -37,6 +38,22 @@ pub trait Scheduler {
     fn updates_applied(&self) -> u64;
 }
 
+/// A worker-set or parameter change applied by a scheduler. Rate tables
+/// live inside the scheduler, but churn re-inits and (η, α̃) retunes act
+/// on state the *engine* owns (worker replicas, the dynamics core), so
+/// the scheduler records them here for the engine loop to drain — in
+/// application order, before the next popped event is processed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetChange {
+    pub t: f64,
+    /// Workers that departed at this update.
+    pub left: Vec<usize>,
+    /// Workers that re-joined (each needs a neighbor-snapshot re-init).
+    pub joined: Vec<usize>,
+    /// New active-subgraph spectrum to retune (η, α̃) from, if any.
+    pub chis: Option<(f64, f64)>,
+}
+
 /// Exact virtual-time scheduler: the superposed Poisson clock plus the
 /// plan's pending updates, applied *between* events in timestamp order.
 pub struct VirtualTimeScheduler {
@@ -44,6 +61,7 @@ pub struct VirtualTimeScheduler {
     edges: Vec<(usize, usize)>,
     pending: std::collections::VecDeque<NetUpdate>,
     applied: u64,
+    changes: Vec<NetChange>,
 }
 
 impl VirtualTimeScheduler {
@@ -54,7 +72,17 @@ impl VirtualTimeScheduler {
             edges: plan.union.edges.clone(),
             pending: plan.updates.iter().cloned().collect(),
             applied: 0,
+            changes: Vec::new(),
         }
+    }
+
+    /// Churn/retune changes applied since the last drain, in application
+    /// order. The engine loop drains this after every
+    /// [`VirtualTimeScheduler::next`] and processes the changes *before*
+    /// the returned tick — every recorded change has `t` at or before the
+    /// tick's time, so this keeps the replay event-ordered.
+    pub fn drain_changes(&mut self) -> Vec<NetChange> {
+        std::mem::take(&mut self.changes)
     }
 
     /// Current virtual time (the last popped event's timestamp).
@@ -107,6 +135,14 @@ impl Scheduler for VirtualTimeScheduler {
                 self.queue.set_grad_rate(w, r);
             }
         }
+        if !upd.leave.is_empty() || !upd.join.is_empty() || upd.chis.is_some() {
+            self.changes.push(NetChange {
+                t: upd.t,
+                left: upd.leave.clone(),
+                joined: upd.join.clone(),
+                chis: upd.chis,
+            });
+        }
         self.applied += 1;
     }
 
@@ -139,6 +175,21 @@ pub struct WallClock {
     max_speed: AtomicU64,
     /// Active adjacency lists (sorted), rebuilt on edge-rate updates.
     active: RwLock<Vec<Vec<usize>>>,
+    /// Per-worker churn membership: false while a scenario has the
+    /// worker departed. Gradient/comm threads park while inactive.
+    worker_active: Vec<AtomicBool>,
+    /// Set once the scenario has no remaining updates: a still-inactive
+    /// worker can never be re-joined, so its threads may exit.
+    updates_exhausted: AtomicBool,
+    /// The (publish epoch, (η, α, α̃)) currently published to the worker
+    /// threads — kept as ONE mutex-guarded pair so a reader can never
+    /// observe a new params value tagged with a stale epoch (the pairing
+    /// protocol's older-snapshot tie-break relies on "equal epoch ⇒
+    /// identical params"). Written at phase switches only; readers poll
+    /// the `acid_epoch` mirror and take the lock only on a change, so
+    /// the hot path pays one atomic load.
+    acid: Mutex<(u64, AcidParams)>,
+    acid_epoch: AtomicU64,
     /// Bumped on every applied update (cheap change detection).
     version: AtomicU64,
     applied: AtomicU64,
@@ -156,6 +207,10 @@ impl WallClock {
             speeds: (0..n).map(|_| AtomicU64::new(1f64.to_bits())).collect(),
             max_speed: AtomicU64::new(1f64.to_bits()),
             active: RwLock::new(vec![Vec::new(); n]),
+            worker_active: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            updates_exhausted: AtomicBool::new(false),
+            acid: Mutex::new((0, AcidParams::baseline())),
+            acid_epoch: AtomicU64::new(0),
             version: AtomicU64::new(0),
             applied: AtomicU64::new(0),
         };
@@ -214,6 +269,56 @@ impl WallClock {
         self.active.read().unwrap()[i].binary_search(&j).is_ok()
     }
 
+    /// Whether worker `w` is currently part of the fleet (churn).
+    pub fn is_active(&self, w: usize) -> bool {
+        self.worker_active[w].load(Ordering::Acquire)
+    }
+
+    /// Mark the scenario replay finished: no update remains, so inactive
+    /// workers are departed for good. Idempotent.
+    pub fn finalize_updates(&self) {
+        self.updates_exhausted.store(true, Ordering::Release);
+    }
+
+    /// Whether worker `w` is departed with no remaining update that could
+    /// ever re-join it — its threads may exit instead of parking.
+    pub fn departed_for_good(&self, w: usize) -> bool {
+        self.updates_exhausted.load(Ordering::Acquire) && !self.is_active(w)
+    }
+
+    /// Publish new (η, α, α̃) to the worker threads (the adaptive
+    /// per-phase path). Threads refresh *between* pairings/steps; a
+    /// pairing split by a publish is reconciled on the bus (both
+    /// endpoints average with the older snapshot — see the runtime's
+    /// `comm_loop`). The epoch bump and the value swap happen under one
+    /// lock, and the polling mirror is updated before release.
+    pub fn publish_acid(&self, p: AcidParams) {
+        let mut guard = self.acid.lock().unwrap();
+        guard.0 += 1;
+        guard.1 = p;
+        self.acid_epoch.store(guard.0, Ordering::Release);
+    }
+
+    /// The currently published (epoch, (η, α, α̃)) as one consistent
+    /// pair — refresh `acid_seen` from THIS, never from the separate
+    /// [`WallClock::acid_epoch`] poll, or a concurrent publish could tag
+    /// new params with a stale epoch.
+    pub fn acid_snapshot(&self) -> (u64, AcidParams) {
+        *self.acid.lock().unwrap()
+    }
+
+    /// The currently published (η, α, α̃).
+    pub fn acid(&self) -> AcidParams {
+        self.acid.lock().unwrap().1
+    }
+
+    /// Monotonic mirror of the publish epoch — a cheap "did anything
+    /// change" poll; read the authoritative pair via
+    /// [`WallClock::acid_snapshot`].
+    pub fn acid_epoch(&self) -> u64 {
+        self.acid_epoch.load(Ordering::Acquire)
+    }
+
     /// Monotonic change counter (readers cache derived state against it).
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
@@ -251,8 +356,16 @@ impl WallClock {
     }
 
     /// Apply a plan update through a shared reference (the trait's `&mut`
-    /// surface is implemented on `Arc<WallClock>`).
+    /// surface is implemented on `Arc<WallClock>`). Churn membership
+    /// flips before the rate tables swap so a newly-joined worker never
+    /// observes live incident edges while still marked departed.
     pub fn apply_shared(&self, upd: &NetUpdate) {
+        for &w in &upd.join {
+            self.worker_active[w].store(true, Ordering::Release);
+        }
+        for &w in &upd.leave {
+            self.worker_active[w].store(false, Ordering::Release);
+        }
         if let Some(rates) = &upd.edge_rates {
             self.set_edge_rates(rates);
         }
@@ -347,6 +460,63 @@ mod tests {
         assert_eq!(Scheduler::updates_applied(&shared), 1);
         // Union adjacency is phase-independent.
         assert_eq!(shared.union_neighbors(0).len(), 3);
+    }
+
+    #[test]
+    fn virtual_scheduler_records_churn_changes() {
+        let plan = plan("ring@0;leave=0.25:0.25:3;join=0.25:0.75", 8, 100.0);
+        let mut sched = VirtualTimeScheduler::new(&plan, 4);
+        let mut changes = Vec::new();
+        let mut grads_for_left_during_gap = 0u64;
+        let left_set = plan.updates[0].leave.clone();
+        for _ in 0..4000 {
+            let Some(tick) = sched.next() else { break };
+            let drained = sched.drain_changes();
+            changes.extend(drained);
+            if let Tick::Grad { worker, t } = tick {
+                if (25.0..75.0).contains(&t) && left_set.contains(&worker) {
+                    grads_for_left_during_gap += 1;
+                }
+            }
+        }
+        changes.extend(sched.drain_changes());
+        assert_eq!(changes.len(), 2, "leave + join recorded");
+        assert_eq!(changes[0].left, left_set);
+        assert!(changes[0].joined.is_empty());
+        assert_eq!(changes[1].joined, left_set);
+        assert!((changes[0].t - 25.0).abs() < 1e-12);
+        assert_eq!(
+            grads_for_left_during_gap, 0,
+            "departed workers fire no gradient events"
+        );
+    }
+
+    #[test]
+    fn wall_clock_churn_membership_and_acid_publish() {
+        let plan = plan("ring@0;leave=0.25:0.25:3;join=0.25:0.75", 8, 100.0);
+        let wc = WallClock::new(&plan);
+        assert!((0..8).all(|w| wc.is_active(w)));
+        assert!(!wc.departed_for_good(0));
+        let leavers = plan.updates[0].leave.clone();
+        wc.apply_shared(&plan.updates[0]);
+        for &w in &leavers {
+            assert!(!wc.is_active(w));
+            assert_eq!(wc.comm_rate(w), 0.0, "departed worker has no link budget");
+            assert!(!wc.departed_for_good(w), "a re-join is still pending");
+        }
+        wc.apply_shared(&plan.updates[1]);
+        assert!((0..8).all(|w| wc.is_active(w)));
+        wc.finalize_updates();
+        assert!(!wc.departed_for_good(leavers[0]), "re-joined before the end");
+
+        // Param publishing: epoch-gated, last write wins, and the
+        // (epoch, params) snapshot is one consistent pair.
+        let e0 = wc.acid_epoch();
+        let p = AcidParams::accelerated(3.0, 1.0);
+        wc.publish_acid(p);
+        assert_eq!(wc.acid_epoch(), e0 + 1);
+        assert_eq!(wc.acid(), p);
+        assert_eq!(wc.acid_snapshot(), (e0 + 1, p));
     }
 
     #[test]

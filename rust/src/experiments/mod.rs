@@ -26,7 +26,9 @@
 //! Beyond the paper: [`scenario`] stresses A²CiD² on *time-varying*
 //! networks (mid-run topology switch + link dropout) — conditions the
 //! paper's "poorly connected networks" claim is about but its experiments
-//! never exercise.
+//! never exercise — and [`sweep`] charts the dropout × switch-time grid
+//! comparing per-phase adaptive (η, α̃) against frozen phase-0 parameters
+//! (emitting the machine-readable `BENCH_sweep.json`).
 
 pub mod ablation;
 pub mod common;
@@ -38,6 +40,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod scenario;
+pub mod sweep;
 pub mod tab1;
 pub mod tab2;
 pub mod tab3;

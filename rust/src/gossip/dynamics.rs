@@ -90,6 +90,18 @@ impl WorkerState {
         }
     }
 
+    /// Re-initialize from a neighbor snapshot at time `t`: a worker
+    /// re-joining after a churn departure adopts the donor's parameters
+    /// (`x̃ = x`, the same coupling as a fresh init, so the pair tracker
+    /// restarts clean) and resumes its lazy-mixing clock at `t`. Event
+    /// counts are kept — it is the same worker resuming, and the
+    /// learning-rate schedule indexes its local step count.
+    pub fn reinit_from(&mut self, donor_x: &[f32], t: f64) {
+        self.x.copy_from_slice(donor_x);
+        self.xt.copy_from_slice(donor_x);
+        self.t_last = t;
+    }
+
     /// Apply this endpoint's half of a communication event, given the
     /// peer's *already-mixed* parameters `xj`. Both endpoints must be mixed
     /// to the same event time before either side computes its update; the

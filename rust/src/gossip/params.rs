@@ -44,6 +44,19 @@ impl AcidParams {
         Self::accelerated(s.chi1, s.chi2)
     }
 
+    /// Accelerated parameters from a *measured* (χ₁, χ₂) — the adaptive
+    /// per-phase path, which feeds eigensolver output straight in.
+    /// Clamps χ₂ into `(0, χ₁]` instead of asserting, and returns `None`
+    /// when the spectrum is unusable (non-finite or non-positive), so a
+    /// degenerate active subgraph can never panic mid-run — the caller
+    /// holds its previous parameters instead.
+    pub fn from_chis_clamped(chi1: f64, chi2: f64) -> Option<Self> {
+        if !(chi1.is_finite() && chi1 > 0.0 && chi2.is_finite() && chi2 > 0.0) {
+            return None;
+        }
+        Some(Self::accelerated(chi1, chi2.min(chi1)))
+    }
+
     /// Whether the momentum is active.
     pub fn is_accelerated(&self) -> bool {
         self.eta != 0.0
@@ -99,5 +112,29 @@ mod tests {
     #[should_panic]
     fn rejects_chi2_above_chi1() {
         AcidParams::accelerated(1.0, 2.0);
+    }
+
+    #[test]
+    fn from_chis_clamped_never_panics() {
+        // chi2 > chi1 (eigensolver slop) clamps instead of asserting.
+        let p = AcidParams::from_chis_clamped(1.0, 2.0).unwrap();
+        assert!((p.alpha_tilde - 0.5).abs() < 1e-12, "clamped to chi2 == chi1");
+        assert!((p.eta - 0.5).abs() < 1e-12);
+        // Degenerate spectra yield None, not a panic.
+        for (c1, c2) in [
+            (0.0, 1.0),
+            (1.0, 0.0),
+            (-1.0, 1.0),
+            (f64::NAN, 1.0),
+            (f64::INFINITY, 1.0),
+            (1.0, f64::NAN),
+        ] {
+            assert!(AcidParams::from_chis_clamped(c1, c2).is_none(), "({c1}, {c2})");
+        }
+        // A clean spectrum matches the asserting constructor.
+        assert_eq!(
+            AcidParams::from_chis_clamped(10.0, 1.0).unwrap(),
+            AcidParams::accelerated(10.0, 1.0)
+        );
     }
 }

@@ -175,8 +175,23 @@ impl ChunkPool {
     pub fn global() -> &'static ChunkPool {
         static GLOBAL: OnceLock<ChunkPool> = OnceLock::new();
         GLOBAL.get_or_init(|| {
-            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            ChunkPool::new(cores.saturating_sub(1).min(7))
+            // A2CID2_POOL_THREADS pins the total lane count (1 = fully
+            // serial kernels). CI's determinism job runs the same seeded
+            // scenario at two widths and diffs the traces — the fixed
+            // chunk boundaries must make the width unobservable.
+            let lanes = std::env::var("A2CID2_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1);
+            let extra = match lanes {
+                Some(n) => (n - 1).min(7),
+                None => {
+                    let cores =
+                        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                    cores.saturating_sub(1).min(7)
+                }
+            };
+            ChunkPool::new(extra)
         })
     }
 

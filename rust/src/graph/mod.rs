@@ -71,6 +71,17 @@ impl Topology {
         })
     }
 
+    /// Full parseable spec string: the inverse of [`Topology::parse`]
+    /// (unlike [`Topology::name`], parameterized topologies keep their
+    /// parameters). Used by the `Scenario` string renderer.
+    pub fn spec(&self) -> String {
+        match self {
+            Topology::Torus { rows, cols } => format!("torus:{rows}x{cols}"),
+            Topology::ErdosRenyi { p, seed } => format!("erdos:{p}:{seed}"),
+            other => other.name().to_string(),
+        }
+    }
+
     /// Short name used in reports.
     pub fn name(&self) -> &'static str {
         match self {
@@ -495,6 +506,12 @@ mod tests {
         );
         assert!(Topology::parse("nope").is_err());
         assert!(Topology::parse("torus:4").is_err());
+        // spec() is the inverse of parse() for every variant.
+        for s in ["ring", "complete", "exponential", "star", "path", "hypercube",
+                  "torus:4x8", "erdos:0.3:42"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(Topology::parse(&t.spec()).unwrap(), t, "spec round-trip of '{s}'");
+        }
     }
 
     #[test]

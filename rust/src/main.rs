@@ -5,6 +5,7 @@
 //! a2cid2 spectrum    --topology ring --workers 64 [--rate 1.0]
 //! a2cid2 experiment  <fig1..fig7|tab1..tab6|all>
 //! a2cid2 timeline    [--workers 8] [--rounds 20]
+//! a2cid2 replay      [--scenario S] [--dim D] [--out trace.csv]   # determinism probe
 //! ```
 
 use a2cid2::cli::Cli;
@@ -27,7 +28,7 @@ fn cli() -> Cli {
         .opt("topology", "complete|ring|exponential|star|path|hypercube|torus:RxC|erdos:p", Some("ring"))
         .opt(
             "scenario",
-            "time-varying network, e.g. 'ring@0,exp@0.5;drop=0.2:0.25:0.75;het=0.5;drift=0.3' (supersedes --topology)",
+            "time-varying network, e.g. 'ring@0,exp@0.5;drop=0.2:0.25:0.75;leave=0.25:0.3;join=0.25:0.7;adapt=1' (supersedes --topology)",
             None,
         )
         .opt("method", "allreduce|baseline|a2cid2", Some("a2cid2"))
@@ -37,6 +38,7 @@ fn cli() -> Cli {
         .opt("lr", "base learning rate", Some("0.03"))
         .opt("seed", "random seed", Some("0"))
         .opt("rounds", "timeline rounds", Some("20"))
+        .opt("dim", "replay: feature dimension of the synthetic model", Some("16"))
         .opt("out", "CSV output path for curves", None)
         .flag("full", "run experiments at paper scale (same as A2CID2_BENCH_FULL=1)")
 }
@@ -116,10 +118,56 @@ fn real_main() -> a2cid2::Result<()> {
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
                     anyhow::anyhow!(
-                        "experiment needs an id (fig1..fig7, tab1..tab6, ablation, scenario, all)"
+                        "experiment needs an id (fig1..fig7, tab1..tab6, ablation, scenario, sweep, all)"
                     )
                 })?;
             run_experiments(id, scale)?;
+        }
+        Some("replay") => {
+            // Determinism probe: run a seeded scenario on a synthetic
+            // Logistic model whose dimension is a CLI knob, so CI can
+            // push it past the chunk-pool threshold (dim features D
+            // gives 2·(D+1) parameters; D = 65536 engages the pool) and
+            // diff traces + checksums across A2CID2_POOL_THREADS widths.
+            // Everything printed is deterministic under --seed.
+            let mut cfg = build_config(&args)?;
+            cfg.batch_size = 4;
+            cfg.dataset_size = 64;
+            let dim: usize = args.get_parse("dim")?;
+            let ds = std::sync::Arc::new(
+                a2cid2::data::GaussianMixture { dim, n_classes: 2, margin: 3.0, sigma: 1.0 }
+                    .sample(cfg.dataset_size, cfg.seed ^ 0xD5),
+            );
+            let shards = cfg.sharding.assign(&ds, cfg.n_workers, cfg.seed);
+            let model = std::sync::Arc::new(a2cid2::model::Logistic::new(ds, 0.0));
+            use a2cid2::model::Model;
+            println!(
+                "replay: n={} dim={} (model dim {}, pool {}) steps={} seed={} scenario={}",
+                cfg.n_workers,
+                dim,
+                model.dim(),
+                if model.dim() > a2cid2::gossip::pool::POOL_MIN_DIM { "ON" } else { "off" },
+                cfg.steps_per_worker,
+                cfg.seed,
+                cfg.scenario.as_ref().map_or("-".to_string(), |s| s.to_string()),
+            );
+            let res = a2cid2::simulator::run_simulation(&cfg, model, &shards)?;
+            // FNV-1a over the averaged parameters' exact bit patterns:
+            // any single-ULP divergence across runs/pool widths flips it.
+            let mut h: u64 = 0xcbf29ce484222325;
+            for v in &res.avg_params {
+                for b in v.to_bits().to_le_bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            println!(
+                "replay: grads={} comms={} net_updates={} checksum={h:016x}",
+                res.n_grads, res.n_comms, res.net_updates
+            );
+            if let Some(path) = args.get("out") {
+                res.recorder.write_csv(std::path::Path::new(path), 2000)?;
+                println!("trace written to {path}");
+            }
         }
         Some("timeline") => {
             let n: usize = args.get_parse("workers")?;
@@ -171,7 +219,7 @@ fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
     let ids: Vec<&str> = if id == "all" {
         vec![
             "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "tab3",
-            "tab4", "tab5", "tab6", "ablation", "scenario",
+            "tab4", "tab5", "tab6", "ablation", "scenario", "sweep",
         ]
     } else {
         vec![id]
@@ -194,6 +242,13 @@ fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
             "tab6" => print_all(experiments::tab6::run(scale)?.1),
             "ablation" => print_all(experiments::ablation::run(scale)?.1),
             "scenario" => print_all(experiments::scenario::run(scale)?.1),
+            "sweep" => {
+                let (points, tables) = experiments::sweep::run(scale)?;
+                print_all(tables);
+                let path = std::path::Path::new("BENCH_sweep.json");
+                experiments::sweep::write_json(&points, path)?;
+                println!("wrote {} ({} rows)", path.display(), points.len());
+            }
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
     }

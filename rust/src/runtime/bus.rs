@@ -20,6 +20,8 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
+use crate::gossip::AcidParams;
+
 /// One half of a pairwise exchange.
 pub struct PairMsg {
     pub from: usize,
@@ -27,6 +29,13 @@ pub struct PairMsg {
     /// (built by `mix_into`; the sender's own state is untouched until
     /// its receive-side `comm_apply` pass).
     pub data: Vec<f32>,
+    /// The sender's (η, α, α̃) snapshot and its publish epoch. Both
+    /// endpoints of one pairing must average with the SAME (α, α̃) or
+    /// the pair mean drifts; when an adaptive retune lands mid-match the
+    /// two sides deterministically agree on the *older* snapshot (the
+    /// smaller epoch — see `comm_loop`).
+    pub acid: AcidParams,
+    pub acid_epoch: u64,
 }
 
 impl PairMsg {
@@ -84,8 +93,8 @@ mod tests {
     #[test]
     fn point_to_point_delivery() {
         let (bus, rxs) = build_bus(3, None);
-        bus.send(2, PairMsg { from: 0, data: vec![1.0, 2.0] }).unwrap();
-        bus.send(2, PairMsg { from: 1, data: vec![3.0] }).unwrap();
+        bus.send(2, PairMsg { from: 0, data: vec![1.0, 2.0], acid: AcidParams::baseline(), acid_epoch: 0 }).unwrap();
+        bus.send(2, PairMsg { from: 1, data: vec![3.0], acid: AcidParams::baseline(), acid_epoch: 0 }).unwrap();
         let m1 = rxs[2].recv().unwrap();
         let m2 = rxs[2].recv().unwrap();
         assert_eq!(m1.from, 0);
@@ -101,10 +110,10 @@ mod tests {
         let rx0 = rxs.pop().unwrap();
         let bus2 = bus.clone();
         let h = std::thread::spawn(move || {
-            bus2.send(0, PairMsg { from: 1, data: vec![7.0] }).unwrap();
+            bus2.send(0, PairMsg { from: 1, data: vec![7.0], acid: AcidParams::baseline(), acid_epoch: 0 }).unwrap();
             rx1.recv().unwrap().data
         });
-        bus.send(1, PairMsg { from: 0, data: vec![9.0] }).unwrap();
+        bus.send(1, PairMsg { from: 0, data: vec![9.0], acid: AcidParams::baseline(), acid_epoch: 0 }).unwrap();
         let got0 = rx0.recv().unwrap().data;
         let got1 = h.join().unwrap();
         assert_eq!(got0, vec![7.0]);
@@ -115,7 +124,7 @@ mod tests {
     fn link_delay_is_applied() {
         let (bus, rxs) = build_bus(2, Some(Duration::from_millis(20)));
         let t0 = std::time::Instant::now();
-        bus.send(1, PairMsg { from: 0, data: vec![] }).unwrap();
+        bus.send(1, PairMsg { from: 0, data: vec![], acid: AcidParams::baseline(), acid_epoch: 0 }).unwrap();
         rxs[1].recv().unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(18));
     }

@@ -204,6 +204,22 @@ fn coordinator_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingSta
                 }
             }
             CoordMsg::Reconfigure => {
+                // Worker churn: a scenario leave can land after a worker
+                // announced availability. Release such waiters with
+                // Cancelled — their comm thread re-checks membership and
+                // parks — so a departed worker can never be paired.
+                let mut churned = Vec::new();
+                queue.retain(|(q, reply)| {
+                    if net.is_active(*q) {
+                        true
+                    } else {
+                        churned.push(reply.clone());
+                        false
+                    }
+                });
+                for r in churned {
+                    let _ = r.send(PairReply::Cancelled);
+                }
                 // The active graph changed: greedily pair now-adjacent
                 // waiters, FIFO order.
                 let mut i = 0;
@@ -374,6 +390,34 @@ mod tests {
         }
         let stats = handle.join().unwrap();
         assert_eq!(stats.counts[0][3], 1);
+    }
+
+    #[test]
+    fn reconfigure_releases_churn_departed_waiters() {
+        // Worker 0 queues, then a scenario leave removes it; the next
+        // Reconfigure must hand it Cancelled (never a peer), and its
+        // now-silent links must not pair it with arriving neighbors.
+        let plan = crate::config::Scenario::parse("ring@0;leave=0.25:0.5:1")
+            .unwrap()
+            .compile(4, 1.0, 10.0, &[1.0; 4])
+            .unwrap();
+        let net = Arc::new(WallClock::new(&plan));
+        let leaver = plan.updates[0].leave[0];
+        let (tx, handle) = spawn_coordinator(net.clone());
+        let r = available(&tx, leaver);
+        net.apply_shared(&plan.updates[0]);
+        tx.send(CoordMsg::Reconfigure).unwrap();
+        assert_eq!(r.recv().unwrap(), PairReply::Cancelled);
+        // A neighbor arriving now cannot be paired with the departed
+        // worker (no active edge) — it waits instead.
+        let nb = (0..4).find(|&w| w != leaver && net.is_active(w)).unwrap();
+        let rn = available(&tx, nb);
+        assert!(rn.try_recv().is_err());
+        for w in 0..4 {
+            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.per_worker()[leaver], 0);
     }
 
     #[test]

@@ -29,11 +29,28 @@
 //! [`WallClock`] as normalized wall-clock time crosses each timestamp —
 //! comm threads see new Poisson rates, the coordinator sees the new
 //! active adjacency, gradient threads see drifted speed factors.
+//!
+//! Worker churn (`leave=`/`join=` phases): a departed worker's threads
+//! *park* — the gradient thread stops stepping, the comm thread stops
+//! announcing availability, and the coordinator's Reconfigure scan
+//! releases it if it was already queued — until the scenario re-joins it,
+//! at which point the monitor re-initializes its replica from an active
+//! neighbor's published snapshot before re-admitting it. Once the plan
+//! has no update left, still-departed workers are final and their
+//! threads exit. Adaptive (η, α̃): updates that change the phase or the
+//! worker set carry the active subgraph's (χ₁, χ₂); the monitor derives
+//! the new parameters and publishes them through the [`WallClock`]'s
+//! epoch-gated cell. Threads refresh *between* events, and each pairing
+//! carries the sender's snapshot + epoch on the bus: if a retune splits
+//! a match, both endpoints deterministically average with the OLDER
+//! snapshot, so the pairwise update stays symmetric and the pair mean is
+//! conserved.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::config::scenario::NetUpdate;
 use crate::config::{Method, NetworkPlan, Scenario};
 use crate::engine::{BatchSampler, DynamicsCore, LossEma, Scheduler, WallClock};
 use crate::gossip::dynamics::WorkerState;
@@ -212,7 +229,11 @@ pub fn run_async(
         None => NetworkPlan::static_plan((*graph).clone(), opts.comm_rate, &vec![1.0; n]),
     };
     let core = Arc::new(DynamicsCore::for_method(opts.method, &plan.spectrum, opts.lr.clone())?);
-    let mut wall = Arc::new(WallClock::new(&plan));
+    let wall = Arc::new(WallClock::new(&plan));
+    // Seed the published (η, α, α̃) with the phase-0 values; worker
+    // threads track this cell so adaptive retunes reach them mid-run.
+    wall.publish_acid(core.acid);
+    let adaptive = opts.scenario.as_ref().is_none_or(|s| s.adaptive);
 
     let cells: Vec<Arc<Cell>> = (0..n)
         .map(|_| {
@@ -257,9 +278,43 @@ pub fn run_async(
             bus.clone(),
             coord_tx.clone(),
             core.clone(),
+            wall.clone(),
             start,
         ));
     }
+
+    // Applies one plan update: re-join churned workers from a neighbor
+    // snapshot FIRST (donors are the pre-update active set, and the
+    // joiner's threads are still parked while we reset its replica),
+    // then swap the rate tables/membership, then publish retuned
+    // (η, α̃) when the update carries a usable spectrum.
+    let mut snapbuf: Vec<f32> = Vec::new();
+    let apply_update = |upd: &NetUpdate, snapbuf: &mut Vec<f32>| {
+        for &j in &upd.join {
+            let donor = wall
+                .union_neighbors(j)
+                .iter()
+                .copied()
+                .find(|&d| wall.is_active(d));
+            if let Some(d) = donor {
+                snapbuf.resize(cells[d].published.dim(), 0.0);
+                cells[d].published.read_into(snapbuf);
+                let mut st = cells[j].state.lock().unwrap();
+                let t = cells[j].now(start);
+                core.rejoin_from(&mut st, snapbuf, t);
+                cells[j].published.publish(&st.x);
+            }
+        }
+        wall.apply_shared(upd);
+        if adaptive && core.acid.is_accelerated() {
+            if let Some((c1, c2)) = upd.chis {
+                if let Some(p) = AcidParams::from_chis_clamped(c1, c2) {
+                    wall.publish_acid(p);
+                }
+            }
+        }
+        let _ = coord_tx.send(CoordMsg::Reconfigure);
+    };
 
     // Monitor: sample consensus + mean loss, replay the scenario's
     // network updates, until all gradient threads finish and all comm
@@ -288,10 +343,30 @@ pub fn run_async(
                 if upd.t > t_norm {
                     break;
                 }
-                Scheduler::apply(&mut wall, upd);
-                let _ = coord_tx.send(CoordMsg::Reconfigure);
+                apply_update(upd, &mut snapbuf);
                 next_update = pending.next();
             }
+        }
+        // Churn can stall the mean-step clock below a late update's
+        // timestamp (departed workers stop stepping). Once every ACTIVE
+        // worker has finished training, flush whatever remains of the
+        // plan so parked joiners are released to finish their steps —
+        // or, if nothing re-joins them, are marked departed for good.
+        if next_update.is_some() {
+            let active_done = cells.iter().enumerate().all(|(w, c)| {
+                c.grad_done.load(Ordering::Acquire) || !wall.is_active(w)
+            });
+            if active_done {
+                while let Some(upd) = next_update {
+                    apply_update(upd, &mut snapbuf);
+                    next_update = pending.next();
+                }
+            }
+        }
+        if next_update.is_none() {
+            // No update left: still-departed workers can never return;
+            // their parked threads exit on this flag.
+            wall.finalize_updates();
         }
         let t = start.elapsed().as_secs_f64();
         let consensus_sq = consensus_acc.measure(cells.iter().map(|c| &c.published));
@@ -328,7 +403,14 @@ pub fn run_async(
         .map_err(|_| anyhow::anyhow!("coordinator panicked"))?;
 
     // Sync all workers to a common final time and average (the paper's
-    // closing All-Reduce before evaluation).
+    // closing All-Reduce before evaluation). The closing mix runs under
+    // the FINAL published (η, α̃) — the parameters the last phase's
+    // events were applied with — not phase-0's.
+    let final_core = {
+        let mut c = (*core).clone();
+        c.set_params(wall.acid());
+        c
+    };
     let t_final = cells
         .iter()
         .map(|c| c.now(start))
@@ -336,7 +418,7 @@ pub fn run_async(
     let mut workers = Vec::with_capacity(n);
     for c in &cells {
         let mut st = c.state.lock().unwrap().clone();
-        core.mix_to(&mut st, t_final);
+        final_core.mix_to(&mut st, t_final);
         workers.push(st);
     }
     let avg_params = crate::gossip::consensus::average_params(&workers);
@@ -355,7 +437,7 @@ pub fn run_async(
         wall_secs,
         workers,
         avg_params,
-        acid: core.acid,
+        acid: wall.acid(),
         net_updates: Scheduler::updates_applied(&wall),
     })
 }
@@ -395,7 +477,26 @@ fn grad_loop(
     let dim = src.dim();
     let mut gradbuf = vec![0.0f32; dim];
     let mut snapshot = vec![0.0f32; dim];
+    // Local copy of the dynamics core: adaptive (η, α̃) retunes are
+    // pulled from the WallClock's epoch-gated cell between steps.
+    let mut core = core.clone();
+    let (mut acid_seen, p0) = wall.acid_snapshot();
+    core.set_params(p0);
     for step in 0..opts.steps_per_worker {
+        // Churn: a departed worker parks (no steps, no budget refills)
+        // until the scenario re-joins it — or exits once no remaining
+        // update can.
+        while !wall.is_active(w) {
+            if wall.departed_for_good(w) {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if wall.acid_epoch() != acid_seen {
+            let (epoch, p) = wall.acid_snapshot();
+            acid_seen = epoch;
+            core.set_params(p);
+        }
         let t0 = Instant::now();
         // Gradient at a snapshot from the published cell — no lock taken,
         // so the comm thread keeps averaging concurrently (the paper's
@@ -438,6 +539,7 @@ fn grad_loop(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_comm_thread(
     w: usize,
     cell: Arc<Cell>,
@@ -445,6 +547,7 @@ fn spawn_comm_thread(
     bus: BusHandle,
     coord: mpsc::Sender<CoordMsg>,
     core: Arc<DynamicsCore>,
+    wall: Arc<WallClock>,
     start: Instant,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
@@ -453,7 +556,7 @@ fn spawn_comm_thread(
             // Leave + the completion flag must fire on EVERY exit path
             // (incl. bus errors), or the coordinator and monitor wait
             // forever on this worker.
-            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &core, start);
+            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &core, &wall, start);
             let _ = coord.send(CoordMsg::Leave { worker: w });
             cell.comm_done.store(true, Ordering::Release);
             result
@@ -502,6 +605,7 @@ fn wait_for_partner(w: usize, coord: &mpsc::Sender<CoordMsg>) -> Pairing {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn comm_loop(
     w: usize,
     cell: &Cell,
@@ -509,13 +613,37 @@ fn comm_loop(
     bus: &BusHandle,
     coord: &mpsc::Sender<CoordMsg>,
     core: &DynamicsCore,
+    wall: &WallClock,
     start: Instant,
 ) -> crate::Result<()> {
     // §Perf: the buffer received from each pairing is recycled as the
     // next pairing's send buffer — zero steady-state allocation on the
     // communication hot path.
     let mut recycled: Option<Vec<f32>> = None;
+    // Params refresh only here, at the top of a pairing: once matched,
+    // the pairing runs to completion under the snapshot it started with.
+    // (epoch, params) are read as one consistent pair — the pairing
+    // protocol's tie-break needs "equal epoch ⇒ identical params".
+    let mut core = core.clone();
+    let (mut acid_seen, p0) = wall.acid_snapshot();
+    core.set_params(p0);
     loop {
+        // Churn: a departed worker stops announcing availability. Its
+        // leftover budget is best-effort — once training is over (the
+        // grad thread exited, possibly because the departure is final)
+        // the thread winds down like any budget-exhausted worker.
+        if !wall.is_active(w) {
+            if cell.grad_done.load(Ordering::Acquire) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        if wall.acid_epoch() != acid_seen {
+            let (epoch, p) = wall.acid_snapshot();
+            acid_seen = epoch;
+            core.set_params(p);
+        }
         if cell.comm_budget.load(Ordering::Acquire) <= 0 {
             if cell.grad_done.load(Ordering::Acquire) {
                 break;
@@ -549,7 +677,10 @@ fn comm_loop(
             core.mix_into(&st, t, &mut buf);
             (buf, t)
         };
-        bus.send(peer, PairMsg { from: w, data: sendbuf })?;
+        bus.send(
+            peer,
+            PairMsg { from: w, data: sendbuf, acid: core.acid, acid_epoch: acid_seen },
+        )?;
         let msg = inbox
             .recv()
             .map_err(|_| anyhow::anyhow!("worker {w}: inbox closed mid-pairing"))?;
@@ -565,10 +696,14 @@ fn comm_loop(
             cell.published.dim()
         );
         // Receive side: the pairing's single locked read-modify-write
-        // pass (pending mix + (α, α̃) update, fused).
+        // pass (pending mix + (α, α̃) update, fused). If an adaptive
+        // retune split this pairing — the peer refreshed before the
+        // publish, we after (or vice versa) — both sides deterministically
+        // average with the OLDER snapshot, so the pair mean is conserved.
+        let agreed = if msg.acid_epoch < acid_seen { msg.acid } else { core.acid };
         {
             let mut st = cell.state.lock().unwrap();
-            core.comm_apply(&mut st, t_pair, &msg.data);
+            core.comm_apply_agreed(&mut st, t_pair, &msg.data, agreed);
             cell.published.publish(&st.x);
         }
         recycled = Some(msg.data);
@@ -738,6 +873,114 @@ mod tests {
             .map(|(i, j)| res.pairing.counts[i][j])
             .sum();
         assert!(chord_pairings > 0, "switch should open the chords");
+    }
+
+    fn paced_sources(
+        n: usize,
+        model: &Arc<Logistic>,
+        shards: &crate::data::ShardedIndices,
+        delay: Duration,
+    ) -> Vec<Box<dyn GradSource>> {
+        (0..n)
+            .map(|w| {
+                let mut s = RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                );
+                s.extra_delay = Some(delay);
+                Box::new(s) as Box<dyn GradSource>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn churn_leave_without_rejoin_terminates_with_partial_steps() {
+        // One worker departs at 30% and never returns: the run must still
+        // terminate, with the departed worker short of its step budget
+        // and everyone else completing theirs.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 3));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let init = model.init_params(&mut rng);
+        let scenario = Scenario::parse("ring@0;leave=0.25:0.3:1").unwrap();
+        let leaver = scenario
+            .compile(n, 1.0, 80.0, &[1.0; n])
+            .unwrap()
+            .updates[0]
+            .leave[0];
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 80,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: Some(scenario),
+        };
+        let srcs = paced_sources(n, &model, &shards, Duration::from_micros(300));
+        let res = run_async(graph, srcs, init, opts).unwrap();
+        assert!(res.net_updates >= 1, "the leave landed");
+        assert!(
+            res.grads_per_worker[leaver] < 80,
+            "departed worker stopped early: {:?}",
+            res.grads_per_worker
+        );
+        for w in 0..n {
+            if w != leaver {
+                assert_eq!(res.grads_per_worker[w], 80, "worker {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_rejoin_completes_all_steps_with_adaptive_params() {
+        // Leave 25% at 20%, re-join at 60%: parked workers resume (after
+        // a neighbor-snapshot re-init) and finish their budget. The
+        // ring→complete switch carries a spectrum, so the published
+        // (η, α̃) must have moved off the phase-0 ring values.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 4));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 100,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: Some(
+                Scenario::parse("ring@0,complete@0.5;leave=0.25:0.2:1;join=0.25:0.6").unwrap(),
+            ),
+        };
+        let srcs = paced_sources(n, &model, &shards, Duration::from_micros(300));
+        let res = run_async(graph.clone(), srcs, init, opts).unwrap();
+        assert_eq!(res.grads_per_worker, vec![100; n], "re-joined worker caught up");
+        assert!(res.net_updates >= 3, "leave + switch + join: {}", res.net_updates);
+        // Adaptive default: the final published params are the complete
+        // graph's, not the ring's.
+        let ring_params =
+            crate::gossip::AcidParams::from_spectrum(&graph.spectrum(1.0));
+        assert!(res.acid.is_accelerated());
+        assert!(
+            (res.acid.eta - ring_params.eta).abs() > 1e-9,
+            "params were retuned off phase-0: {:?}",
+            res.acid
+        );
+        let c = res.recorder.get("consensus").unwrap();
+        assert!(c.points.iter().all(|(_, v)| v.is_finite()));
     }
 
     #[test]

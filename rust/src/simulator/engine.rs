@@ -103,7 +103,11 @@ pub fn run_simulation(
     let spectrum = plan.spectrum;
     let schedule =
         LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
-    let core = DynamicsCore::for_method(cfg.method, &spectrum, schedule)?;
+    let mut core = DynamicsCore::for_method(cfg.method, &spectrum, schedule)?;
+    // Adaptive (η, α̃): scenario updates that change the phase or the
+    // worker set carry the active subgraph's (χ₁, χ₂) unless the
+    // scenario was compiled with `adapt=0`.
+    let adaptive = cfg.scenario.as_ref().is_some_and(|s| s.adaptive);
     let mut sched = VirtualTimeScheduler::new(&plan, cfg.seed ^ 0x5EED);
 
     // Worker states: identical init (the paper's initial All-Reduce).
@@ -125,10 +129,37 @@ pub fn run_simulation(
     // Record ~500 points per series regardless of run length.
     let record_every = (total_grads / 500).max(1);
 
+    // Churn bookkeeping: which workers are currently in the fleet (the
+    // donor for a re-join is the smallest-index active union neighbor —
+    // the same rule the runtime's monitor applies).
+    let mut in_fleet = vec![true; cfg.n_workers];
     while grads_done < total_grads {
         let tick = sched
             .next()
             .ok_or_else(|| anyhow::anyhow!("event queue drained unexpectedly"))?;
+        // Process scheduler-recorded changes BEFORE the popped tick:
+        // every change has a timestamp at or before the tick's, so churn
+        // re-inits and retunes stay event-ordered.
+        for ch in sched.drain_changes() {
+            for &w in &ch.left {
+                in_fleet[w] = false;
+            }
+            for &j in &ch.joined {
+                let donor = plan.union.neighbors[j].iter().copied().find(|&d| in_fleet[d]);
+                if let Some(d) = donor {
+                    let donor_x = workers[d].x.clone();
+                    core.rejoin_from(&mut workers[j], &donor_x, ch.t);
+                }
+            }
+            for &j in &ch.joined {
+                in_fleet[j] = true;
+            }
+            if adaptive {
+                if let Some((c1, c2)) = ch.chis {
+                    core.retune(c1, c2);
+                }
+            }
+        }
         match tick {
             Tick::Grad { worker, t } => {
                 let batch = samplers[worker].next_batch(cfg.batch_size);
@@ -139,6 +170,10 @@ pub fn run_simulation(
                 if grads_done % record_every == 0 {
                     recorder.record("train_loss", t, loss_ema);
                     recorder.record("lr", t, lr as f64);
+                    // Communication cost so far, aligned with the loss
+                    // samples — the sweep reads "comm events to target
+                    // loss" off these two series.
+                    recorder.record("comms", t, sched.n_comm_events() as f64);
                 }
                 if grads_done % (record_every * 10) == 0 {
                     recorder.record("consensus", t, consensus_distance(&workers));
@@ -328,6 +363,98 @@ mod tests {
         assert!(res.final_loss() < 0.8 * first, "still trains through the switch");
         let idx: Vec<usize> = (0..256).collect();
         assert!(model.accuracy(&res.avg_params, &idx).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn churn_scenario_trains_and_skews_step_counts() {
+        let mut cfg = small_cfg(Method::Acid);
+        cfg.n_workers = 8;
+        cfg.compute_jitter = 0.0;
+        cfg.scenario =
+            Some(Scenario::parse("ring@0;leave=0.25:0.25:3;join=0.25:0.75").unwrap());
+        let (res, _) = run_cfg(&cfg);
+        assert!(res.net_updates >= 2, "leave + join: {}", res.net_updates);
+        // Identify the churned workers from the compiled plan and check
+        // they did measurably fewer local steps than the always-on fleet
+        // (they were silenced for half the run).
+        let plan = cfg
+            .scenario
+            .as_ref()
+            .unwrap()
+            .compile(8, 1.0, cfg.steps_per_worker as f64, &[1.0; 8])
+            .unwrap();
+        let churned = &plan.updates[0].leave;
+        assert_eq!(churned.len(), 2);
+        let avg_stay: f64 = (0..8)
+            .filter(|w| !churned.contains(w))
+            .map(|w| res.grads_per_worker[w] as f64)
+            .sum::<f64>()
+            / 6.0;
+        for &w in churned {
+            assert!(
+                (res.grads_per_worker[w] as f64) < 0.8 * avg_stay,
+                "churned worker {w} did {} steps vs {avg_stay:.0} average",
+                res.grads_per_worker[w]
+            );
+        }
+        // Training survives the churn.
+        let s = res.recorder.get("train_loss").unwrap();
+        let first = s.points.first().unwrap().1;
+        assert!(res.final_loss() < 0.8 * first);
+        // The comms series is recorded and monotone.
+        let comms = res.recorder.get("comms").unwrap();
+        assert!(comms.points.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn churn_scenario_is_bit_deterministic() {
+        let mut cfg = small_cfg(Method::Acid);
+        cfg.n_workers = 8;
+        cfg.scenario = Some(
+            Scenario::parse(
+                "ring@0,exponential@0.5;leave=0.25:0.2:5;join=0.25:0.7;drop=0.2:0.3:0.6:7",
+            )
+            .unwrap(),
+        );
+        let (a, _) = run_cfg(&cfg);
+        let (b, _) = run_cfg(&cfg);
+        assert_eq!(a.avg_params, b.avg_params, "bit-identical churn replay");
+        assert_eq!(a.n_comms, b.n_comms);
+        assert_eq!(a.net_updates, b.net_updates);
+        assert_eq!(a.acid, b.acid, "adaptive retunes replay identically");
+    }
+
+    #[test]
+    fn adaptive_params_retune_and_frozen_hold() {
+        let mut cfg = small_cfg(Method::Acid);
+        cfg.n_workers = 8;
+        cfg.scenario = Some(Scenario::parse("ring@0,complete@0.5").unwrap());
+        let (res, _) = run_cfg(&cfg);
+        // On the complete graph χ₁ = χ₂ ⇒ α̃ = ½ exactly.
+        assert!(res.acid.is_accelerated());
+        assert!(
+            (res.acid.alpha_tilde - 0.5).abs() < 1e-5,
+            "final params follow the active phase: {:?}",
+            res.acid
+        );
+        // adapt=0 pins the ring-derived values for the whole run, and the
+        // trajectories genuinely differ.
+        let mut frozen_cfg = cfg.clone();
+        frozen_cfg.scenario =
+            Some(Scenario::parse("ring@0,complete@0.5;adapt=0").unwrap());
+        let (frozen, _) = run_cfg(&frozen_cfg);
+        assert!(res.spectrum.chi1 > res.spectrum.chi2 + 1e-6, "ring: chi1 > chi2");
+        assert!(
+            frozen.acid.alpha_tilde > 0.5 + 1e-6,
+            "frozen keeps phase-0 ring params: {:?}",
+            frozen.acid
+        );
+        assert_ne!(res.avg_params, frozen.avg_params);
+        // The baseline ignores spectra entirely, adaptive or not.
+        let mut base_cfg = cfg.clone();
+        base_cfg.method = Method::AsyncBaseline;
+        let (base, _) = run_cfg(&base_cfg);
+        assert!(!base.acid.is_accelerated());
     }
 
     #[test]

@@ -454,6 +454,63 @@ mod tests {
     }
 
     #[test]
+    fn rate_update_at_switch_timestamp_lands_in_new_phase() {
+        // PR 1's ordering contract: a scheduled update advances the clock
+        // to its own timestamp and THEN retunes, so the new rate governs
+        // [t_switch, ∞). Regression: an update whose timestamp coincides
+        // exactly with the window boundary the queue just drained to must
+        // be applied to the NEW phase — epoch-bumped, resampled from
+        // exactly t_switch — not dropped and not back-dated. Checked for
+        // both the comm and the grad paths, across seeds.
+        for seed in 0..20 {
+            let mut q = EventQueue::new(&[1.0], &[0.5], seed);
+            while q.next(40.0).is_some() {}
+            q.advance_to(40.0); // now == t_switch exactly
+            q.set_comm_rate(0, 8.0);
+            q.set_grad_rate(0, 4.0);
+            assert_eq!(q.n_rate_updates, 2, "boundary updates must not be dropped");
+            let (mut comms, mut grads) = (0u64, 0u64);
+            while let Some(ev) = q.next(90.0) {
+                assert!(ev.t >= 40.0, "seed {seed}: event back-dated to {}", ev.t);
+                match ev.kind {
+                    EventKind::Comm { .. } => comms += 1,
+                    EventKind::Grad { .. } => grads += 1,
+                }
+            }
+            // 50 time units at the NEW rates: ≈ 400 comms / 200 grads.
+            // The old rates (0.5 / 1) would give ≈ 25 / 50 — far outside
+            // the windows below.
+            assert!((300..520).contains(&comms), "seed {seed}: comms={comms}");
+            assert!((140..270).contains(&grads), "seed {seed}: grads={grads}");
+        }
+    }
+
+    #[test]
+    fn coinciding_updates_at_one_timestamp_last_write_wins() {
+        // A phase switch and a dropout boundary can land on the same
+        // change point; the compiler merges them, but the queue must also
+        // be safe under two retunes of one process at the same clock
+        // reading: the first retune's pending entry is epoch-invalidated
+        // by the second, so no event from the intermediate rate leaks.
+        for seed in 0..20 {
+            let mut q = EventQueue::new(&[], &[1.0], seed);
+            while q.next(10.0).is_some() {}
+            q.advance_to(10.0);
+            q.set_comm_rate(0, 500.0); // intermediate (would flood)
+            q.set_comm_rate(0, 0.5); // final
+            let mut comms = 0u64;
+            while let Some(ev) = q.next(110.0) {
+                assert!(ev.t >= 10.0, "seed {seed}");
+                comms += 1;
+            }
+            // 100 units at rate 0.5 ⇒ ≈ 50 events; a surviving rate-500
+            // entry would add a burst and an immediate resample cascade.
+            assert!((20..100).contains(&comms), "seed {seed}: comms={comms}");
+            assert_eq!(q.n_rate_updates, 2);
+        }
+    }
+
+    #[test]
     fn noop_rate_update_is_free() {
         let mut q = EventQueue::new(&[1.0], &[2.0], 9);
         q.set_comm_rate(0, 2.0);

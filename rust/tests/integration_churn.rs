@@ -1,0 +1,233 @@
+//! Integration: worker churn + per-phase adaptive (η, α̃), end to end.
+//!
+//! The acceptance bar for churn is *bit-identical replay across both
+//! engines*: the virtual-time simulator and the real-thread runtime
+//! share one `DynamicsCore`, so one seeded event sequence — gradients,
+//! pairings, leaves, neighbor-snapshot re-joins, and adaptive retunes —
+//! must produce the same consensus trajectory at event granularity
+//! whichever engine's code path applies it. The first test replays a
+//! compiled churn scenario's exact tick stream through the simulator's
+//! fused two-endpoint path AND the runtime's mix_into/comm_apply
+//! pairing path side by side. The rest pin seed-determinism and
+//! liveness of full runs on each engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use a2cid2::config::{ExperimentConfig, Method, Scenario, Task};
+use a2cid2::data::{GaussianMixture, Sharding};
+use a2cid2::engine::{DynamicsCore, Tick, VirtualTimeScheduler};
+use a2cid2::gossip::consensus_distance;
+use a2cid2::gossip::dynamics::WorkerState;
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::model::{Logistic, Model};
+use a2cid2::optim::{LrSchedule, Sgd};
+use a2cid2::runtime::{run_async, GradSource, RustGradSource, RuntimeOptions};
+use a2cid2::simulator::run_simulation;
+
+const CHURN_SCENARIO: &str =
+    "ring@0,exponential@0.5;leave=0.25:0.2:3;join=0.25:0.7;drop=0.2:0.3:0.6:7";
+
+#[test]
+fn churn_replay_agrees_across_engine_paths_at_event_granularity() {
+    let n = 8;
+    let dim = 16;
+    let scenario = Scenario::parse(CHURN_SCENARIO).unwrap();
+    let plan = scenario.compile(n, 1.0, 60.0, &vec![1.0; n]).unwrap();
+    let mut sched = VirtualTimeScheduler::new(&plan, 42);
+
+    // Two replicas of the fleet, one per engine code path, plus one
+    // dynamics core each (retuned independently from the same changes).
+    let lr = LrSchedule::Constant { lr: 0.05 };
+    let mut core_sim = DynamicsCore::for_method(Method::Acid, &plan.spectrum, lr.clone()).unwrap();
+    let mut core_rt = core_sim.clone();
+    let init: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut sim: Vec<WorkerState> = (0..n).map(|_| WorkerState::new(init.clone())).collect();
+    let mut rt: Vec<WorkerState> = (0..n).map(|_| WorkerState::new(init.clone())).collect();
+    let mut opt_sim: Vec<Sgd> = (0..n).map(|_| Sgd::new(0.0)).collect();
+    let mut opt_rt: Vec<Sgd> = (0..n).map(|_| Sgd::new(0.0)).collect();
+    let mut in_fleet = vec![true; n];
+    // Deterministic pseudo-gradient keyed by (worker, step) so the two
+    // replicas consume identical gradients without a dataset.
+    let grad_of = |w: usize, k: u64| -> Vec<f32> {
+        (0..dim)
+            .map(|i| ((w * 31 + i) as f32 * 0.11 + k as f32 * 0.01).cos())
+            .collect()
+    };
+
+    let mut n_comms = 0u64;
+    let mut n_changes = 0usize;
+    let mut buf_a = vec![0.0f32; dim];
+    let mut buf_b = vec![0.0f32; dim];
+    for _ in 0..3000 {
+        let tick = sched.next().expect("events keep flowing");
+        for ch in sched.drain_changes() {
+            n_changes += 1;
+            for &w in &ch.left {
+                in_fleet[w] = false;
+            }
+            for &j in &ch.joined {
+                let donor = plan.union.neighbors[j].iter().copied().find(|&d| in_fleet[d]);
+                if let Some(d) = donor {
+                    // Simulator path and runtime path use the SAME donor
+                    // rule (smallest active union neighbor) and the same
+                    // re-init primitive.
+                    let donor_sim = sim[d].x.clone();
+                    core_sim.rejoin_from(&mut sim[j], &donor_sim, ch.t);
+                    let donor_rt = rt[d].x.clone();
+                    core_rt.rejoin_from(&mut rt[j], &donor_rt, ch.t);
+                }
+            }
+            for &j in &ch.joined {
+                in_fleet[j] = true;
+            }
+            if let Some((c1, c2)) = ch.chis {
+                core_sim.retune(c1, c2);
+                core_rt.retune(c1, c2);
+            }
+        }
+        match tick {
+            Tick::Grad { worker, t } => {
+                let g = grad_of(worker, sim[worker].n_grads);
+                core_sim.grad_event(&mut sim[worker], t, &mut opt_sim[worker], &g);
+                core_rt.grad_event(&mut rt[worker], t, &mut opt_rt[worker], &g);
+            }
+            Tick::Comm { i, j, t } => {
+                n_comms += 1;
+                // Simulator: both endpoints fused in one pass.
+                let (a, b) = if i < j {
+                    let (lo, hi) = sim.split_at_mut(j);
+                    (&mut lo[i], &mut hi[0])
+                } else {
+                    let (lo, hi) = sim.split_at_mut(i);
+                    (&mut hi[0], &mut lo[j])
+                };
+                core_sim.comm_event(a, b, t);
+                // Runtime: read-only send buffers, one locked RMW each.
+                core_rt.mix_into(&rt[i], t, &mut buf_a);
+                core_rt.mix_into(&rt[j], t, &mut buf_b);
+                core_rt.comm_apply(&mut rt[i], t, &buf_b);
+                core_rt.comm_apply(&mut rt[j], t, &buf_a);
+            }
+        }
+        // Consensus trajectories agree at EVERY event (f32-exact on the
+        // runtime path vs itself; the fused simulator pass is compared
+        // through the same tolerance the core's unit test uses).
+        if n_comms % 64 == 0 {
+            let (ca, cb) = (consensus_distance(&sim), consensus_distance(&rt));
+            assert!(
+                (ca - cb).abs() <= 1e-4 * (1.0 + ca.abs()),
+                "consensus diverged at comm {n_comms}: {ca} vs {cb}"
+            );
+        }
+    }
+    assert!(n_comms > 100, "pairings actually happened: {n_comms}");
+    // Dropout boundaries carry no churn and no spectrum, so exactly the
+    // leave, the switch, and the join surface as changes.
+    assert!(n_changes >= 3, "leave/switch/join all landed: {n_changes}");
+    assert_eq!(core_sim.acid, core_rt.acid, "both cores retuned identically");
+    assert!(
+        core_sim.acid != a2cid2::gossip::AcidParams::from_spectrum(&plan.spectrum),
+        "adaptive retune moved off the phase-0 parameters"
+    );
+    for w in 0..n {
+        for (u, v) in sim[w].x.iter().zip(&rt[w].x) {
+            assert!(
+                (u - v).abs() <= 1e-4 * (1.0 + u.abs()),
+                "worker {w} diverged between engine paths: {u} vs {v}"
+            );
+        }
+        assert_eq!(sim[w].n_comms, rt[w].n_comms);
+        assert_eq!(sim[w].n_grads, rt[w].n_grads);
+    }
+}
+
+#[test]
+fn simulator_churn_scenario_is_seed_deterministic() {
+    let cfg = ExperimentConfig {
+        n_workers: 8,
+        topology: Topology::Ring,
+        method: Method::Acid,
+        task: Task::CifarLike,
+        comm_rate: 1.0,
+        batch_size: 8,
+        base_lr: 0.02,
+        momentum: 0.0,
+        weight_decay: 0.0,
+        steps_per_worker: 120,
+        sharding: Sharding::FullShuffled,
+        dataset_size: 256,
+        seed: 11,
+        compute_jitter: 0.1,
+        scenario: Some(Scenario::parse(CHURN_SCENARIO).unwrap()),
+    };
+    let ds = Arc::new(GaussianMixture::cifar_like().sample(cfg.dataset_size, 5));
+    let shards = cfg.sharding.assign(&ds, cfg.n_workers, cfg.seed);
+    let model = Arc::new(Logistic::new(ds, 0.0));
+    let a = run_simulation(&cfg, model.clone(), &shards).unwrap();
+    let b = run_simulation(&cfg, model.clone(), &shards).unwrap();
+    assert_eq!(a.avg_params, b.avg_params, "bit-identical churn replay");
+    assert_eq!(a.n_comms, b.n_comms);
+    assert_eq!(a.net_updates, b.net_updates);
+    assert!(a.net_updates >= 4, "leave + drop + recover + switch + join");
+    assert_eq!(a.acid, b.acid);
+
+    let mut c2 = cfg.clone();
+    c2.seed = 12;
+    let d = run_simulation(&c2, model, &shards).unwrap();
+    assert_ne!(a.avg_params, d.avg_params, "the seed genuinely matters");
+}
+
+#[test]
+fn runtime_churn_scenario_stays_live_and_respects_membership() {
+    let n = 8;
+    let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+    let ds = Arc::new(GaussianMixture::cifar_like().sample(256, 6));
+    let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+    let model = Arc::new(Logistic::new(ds, 0.0));
+    let mut rng = a2cid2::rng::Xoshiro256::seed_from_u64(0);
+    let init = model.init_params(&mut rng);
+    let sources: Vec<Box<dyn GradSource>> = (0..n)
+        .map(|w| {
+            let mut s = RustGradSource::new(
+                model.clone() as Arc<dyn Model>,
+                shards.per_worker[w].clone(),
+                8,
+                w as u64,
+            );
+            s.extra_delay = Some(Duration::from_micros(300));
+            Box::new(s) as Box<dyn GradSource>
+        })
+        .collect();
+    let opts = RuntimeOptions {
+        comm_rate: 1.0,
+        method: Method::Acid,
+        lr: LrSchedule::Constant { lr: 0.02 },
+        momentum: 0.0,
+        steps_per_worker: 100,
+        seed: 0,
+        monitor_interval: Duration::from_millis(2),
+        link_delay: None,
+        scenario: Some(Scenario::parse(CHURN_SCENARIO).unwrap()),
+    };
+    let res = run_async(graph, sources, init, opts).unwrap();
+    // Everyone re-joined, so everyone finishes its budget; the scenario's
+    // full update list landed (possibly flushed at the end).
+    assert_eq!(res.grads_per_worker, vec![100; n]);
+    assert!(res.net_updates >= 4, "updates landed: {}", res.net_updates);
+    // Pairings stay inside the ring ∪ exponential union.
+    let union = {
+        let ring = Graph::build(&Topology::Ring, n).unwrap();
+        let exp = Graph::build(&Topology::Exponential, n).unwrap();
+        Graph::from_edges(n, ring.edges.iter().chain(exp.edges.iter()).copied())
+    };
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && !union.has_edge(i, j) {
+                assert_eq!(res.pairing.counts[i][j], 0, "pairing outside the union {i}-{j}");
+            }
+        }
+    }
+    let c = res.recorder.get("consensus").unwrap();
+    assert!(c.points.iter().all(|(_, v)| v.is_finite()));
+}
