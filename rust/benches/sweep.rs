@@ -1,23 +1,6 @@
-//! The scenario sweep as a bench target: runs the dropout × switch-time ×
-//! adaptive-vs-frozen grid at the env-selected scale, prints the table,
-//! and writes `BENCH_sweep.json` (cargo runs benches with cwd = the
+//! The scenario sweep as a bench target: the dropout × switch-time ×
+//! churn × adaptive-vs-frozen grid at the env-selected scale. Resolved
+//! through the experiment registry, which prints the table and maintains
+//! the `BENCH_sweep.json` artifact (cargo runs benches with cwd = the
 //! package root, so the file lands under `rust/`) for CI to archive.
-
-use a2cid2::experiments::{sweep, Scale};
-
-fn main() {
-    let scale = Scale::from_env();
-    let t0 = std::time::Instant::now();
-    let (points, tables) = sweep::run(scale).expect("sweep");
-    for t in tables {
-        t.print();
-    }
-    match sweep::write_json(&points, std::path::Path::new("BENCH_sweep.json")) {
-        Ok(()) => println!("wrote BENCH_sweep.json ({} rows)", points.len()),
-        Err(e) => println!("(failed to write BENCH_sweep.json: {e})"),
-    }
-    println!(
-        "[sweep] completed in {:.1}s at {scale:?} scale",
-        t0.elapsed().as_secs_f64()
-    );
-}
+a2cid2::bench_main!(sweep);

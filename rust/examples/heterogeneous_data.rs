@@ -14,12 +14,13 @@
 
 use a2cid2::config::Method;
 use a2cid2::data::Sharding;
-use a2cid2::experiments::common::{base_config, set_workers, train_once, Scale};
+use a2cid2::experiments::common::{base_config, set_workers, train_once};
+use a2cid2::experiments::registry;
 use a2cid2::graph::Topology;
 use a2cid2::metrics::Table;
 
 fn main() -> a2cid2::Result<()> {
-    let scale = Scale::from_env();
+    let scale = registry::scale();
     let mut cfg = base_config(scale);
     cfg.topology = Topology::Ring;
     cfg.task = a2cid2::config::Task::CifarLike;

@@ -7,7 +7,8 @@
 //! ```
 
 use a2cid2::config::Method;
-use a2cid2::experiments::common::{base_config, set_workers, train_once, Scale};
+use a2cid2::experiments::common::{base_config, set_workers, train_once};
+use a2cid2::experiments::registry;
 use a2cid2::graph::Topology;
 use a2cid2::metrics::{Recorder, Table};
 
@@ -16,7 +17,7 @@ fn main() -> a2cid2::Result<()> {
     let n_max: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(16);
     let csv = args.get(1).cloned().unwrap_or_else(|| "results/ring_acceleration.csv".into());
 
-    let scale = Scale::from_env();
+    let scale = registry::scale();
     let mut cfg = base_config(scale);
     cfg.topology = Topology::Ring;
     cfg.task = a2cid2::config::Task::ImagenetLike;

@@ -8,58 +8,32 @@
 //! against the p2p step: too small degenerates to the baseline, too large
 //! over-mixes x toward a stale x̃.
 
-use crate::gossip::dynamics::comm_event;
-use crate::gossip::{consensus_distance_sq, AcidParams, Mixer, WorkerState};
+use crate::gossip::AcidParams;
 use crate::graph::{Graph, Topology};
-use crate::metrics::Table;
-use crate::rng::{standard_normal, Xoshiro256};
-use crate::simulator::{EventKind, EventQueue};
-use crate::util::two_mut;
+use crate::metrics::{Record, Table};
 
-use super::common::Scale;
+use super::common::{self, GridRunner, Scale};
+use super::{Report, Summary};
 
 /// Time for ‖πx‖² to contract 100× under gossip with momentum rate
-/// `eta_mult × η*`.
+/// `eta_mult × η*` (the shared [`common::gossip_decay_time`] probe with
+/// a scaled prescription).
+///
+/// NOTE: unifying on the shared probe changed this measurement's event
+/// stream (queue seed) and raised the cap horizon from 50n to 200n, so
+/// absolute decay times — in particular the η = 0 arm, which used to hit
+/// the old cap — are not comparable with pre-registry runs; the basin
+/// shape around η* is what the table (and its test) pin.
 fn decay_time(n: usize, eta_mult: f64, seed: u64) -> crate::Result<f64> {
-    let dim = 32;
     let graph = Graph::build(&Topology::Ring, n)?;
-    let rates = graph.edge_rates(1.0);
-    let spectrum = graph.spectrum_with_rates(&rates);
+    let spectrum = graph.spectrum_with_rates(&graph.edge_rates(1.0));
     let theory = AcidParams::from_spectrum(&spectrum);
     let params = AcidParams {
         eta: theory.eta * eta_mult,
         alpha: theory.alpha,
         alpha_tilde: theory.alpha_tilde,
     };
-    let mixer = Mixer::new(params.eta);
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut workers: Vec<WorkerState> = (0..n)
-        .map(|_| {
-            WorkerState::new((0..dim).map(|_| standard_normal(&mut rng) as f32).collect())
-        })
-        .collect();
-    let target = consensus_distance_sq(&workers) * 1e-2;
-    let mut queue = EventQueue::new(&vec![1e-12; n], &rates, seed ^ 0xAB1A);
-    let horizon = 400.0 * n as f64 / 8.0;
-    let mut check_at = 0.25f64;
-    while let Some(ev) = queue.next(horizon) {
-        if let EventKind::Comm { edge } = ev.kind {
-            let (i, j) = graph.edges[edge];
-            let (a, b) = two_mut(&mut workers, i, j);
-            comm_event(a, b, ev.t, &params, &mixer);
-        }
-        if ev.t >= check_at {
-            check_at = ev.t + 0.25;
-            let mut snap = workers.clone();
-            for w in &mut snap {
-                w.mix_to(ev.t, &mixer);
-            }
-            if consensus_distance_sq(&snap) < target {
-                return Ok(ev.t);
-            }
-        }
-    }
-    Ok(horizon)
+    common::gossip_decay_time(n, &params, 1e-2, seed)
 }
 
 pub struct AblationRow {
@@ -72,22 +46,37 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<AblationRow>, Vec<Table>)> {
         Scale::Quick => 16,
         Scale::Full => 64,
     };
+    let mults = [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let rows: Vec<AblationRow> = GridRunner::from_env()
+        .run(&mults, |&eta_mult| {
+            Ok(AblationRow { eta_mult, decay_t: decay_time(n, eta_mult, 5)? })
+        })?;
+    let star = rows
+        .iter()
+        .find(|r| r.eta_mult == 1.0)
+        .expect("η* is in the grid")
+        .decay_t;
     let mut table = Table::new(
         format!("Ablation — momentum rate η on the ring n={n} (η* = 1/(2·sqrt(chi1·chi2)))"),
         &["eta / eta*", "100x consensus decay time", "vs eta*"],
     );
-    let mut rows = Vec::new();
-    let star = decay_time(n, 1.0, 5)?;
-    for mult in [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
-        let t = if mult == 1.0 { star } else { decay_time(n, mult, 5)? };
+    for row in &rows {
         table.row(&[
-            format!("{mult}"),
-            format!("{t:.1}"),
-            format!("{:+.0}%", 100.0 * (t / star - 1.0)),
+            row.eta_mult.to_string(),
+            format!("{:.1}", row.decay_t),
+            format!("{:+.0}%", 100.0 * (row.decay_t / star - 1.0)),
         ]);
-        rows.push(AblationRow { eta_mult: mult, decay_t: t });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| Record::new().f64("eta_mult", r.eta_mult).f64("decay_t", r.decay_t))
+        .collect();
+    Ok(Report { tables, records, summary: Summary::default() })
 }
 
 #[cfg(test)]

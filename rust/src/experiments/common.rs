@@ -1,13 +1,20 @@
 //! Shared experiment harness: build the task, run the configured method,
-//! evaluate on held-out data.
+//! evaluate on held-out data — plus the [`GridRunner`] that fans every
+//! module's declared grid across a fixed-width thread pool.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::{ExperimentConfig, Method, Task};
 use crate::data::{Dataset, GaussianMixture, Sharding};
-use crate::metrics::Series;
+use crate::gossip::dynamics::comm_event;
+use crate::gossip::{consensus_distance_sq, AcidParams, Mixer, WorkerState};
+use crate::graph::{Graph, Topology};
+use crate::metrics::{Series, Stats};
 use crate::model::{Mlp, Model};
-use crate::simulator::{run_allreduce, run_simulation, ArTimingConfig};
+use crate::rng::{standard_normal, Xoshiro256};
+use crate::simulator::{run_allreduce, run_simulation, ArTimingConfig, EventKind, EventQueue};
+use crate::util::two_mut;
 
 /// Experiment scale: quick for `cargo bench` smoke runs, full for the
 /// paper-sized grids.
@@ -91,6 +98,141 @@ pub struct TrainOutcome {
     pub chis: Option<(f64, f64)>,
 }
 
+impl TrainOutcome {
+    /// Last recorded consensus distance, if the run tracked one.
+    pub fn final_consensus(&self) -> Option<f64> {
+        self.consensus.as_ref().and_then(|s| s.last()).map(|(_, v)| v)
+    }
+}
+
+/// One point of an experiment's declared grid: a full configuration plus
+/// the seed that pins the run (it overwrites `cfg.seed` at execution).
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub cfg: ExperimentConfig,
+    pub seed: u64,
+}
+
+impl GridPoint {
+    pub fn new(cfg: ExperimentConfig, seed: u64) -> GridPoint {
+        GridPoint { cfg, seed }
+    }
+}
+
+/// Deterministic parallel map over a declared grid.
+///
+/// Workers claim points from an atomic cursor and write results into the
+/// slot matching the point's declaration index, so the returned `Vec` is
+/// in declaration order regardless of pool width or scheduling — parallel
+/// output is **bit-identical** to serial execution (pinned by
+/// `grid_parallel_output_bit_identical_to_serial`), the same discipline
+/// as `gossip::pool`'s fixed chunk boundaries. Errors are reported in
+/// declaration order too (the first failing point wins).
+pub struct GridRunner {
+    width: usize,
+}
+
+impl GridRunner {
+    /// Pool width from the environment: an explicit `A2CID2_POOL_THREADS`
+    /// pins it exactly (the same override CI's determinism job uses for
+    /// the kernel pool, so one knob governs every parallel surface;
+    /// `1` = fully serial); otherwise one lane per available core,
+    /// capped at 8 (each point is itself a full training run — a handful
+    /// of lanes saturates the memory bus).
+    pub fn from_env() -> GridRunner {
+        let width = std::env::var("A2CID2_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+            });
+        GridRunner::with_width(width)
+    }
+
+    /// Explicit width (tests pin 1 vs k to prove bit-identity).
+    pub fn with_width(width: usize) -> GridRunner {
+        GridRunner { width: width.max(1) }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Map `f` over `points`, collecting into declaration order. After a
+    /// point fails, lanes stop claiming new points (matching the serial
+    /// path's short-circuit instead of burning the rest of the grid) and
+    /// the earliest-declared failure among the executed points is
+    /// reported.
+    pub fn run<P: Sync, R: Send>(
+        &self,
+        points: &[P],
+        f: impl Fn(&P) -> crate::Result<R> + Sync,
+    ) -> crate::Result<Vec<R>> {
+        if self.width == 1 || points.len() <= 1 {
+            return points.iter().map(&f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<crate::Result<R>>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..self.width.min(points.len()) {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() || failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let result = f(&points[i]);
+                    if result.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        let mut results = Vec::with_capacity(points.len());
+        let mut first_err = None;
+        for slot in slots {
+            // A `None` slot (skipped after a failure elsewhere) is only
+            // reachable when some executed slot holds the error.
+            match slot.into_inner().expect("grid slot lock poisoned") {
+                Some(Ok(r)) if first_err.is_none() => results.push(r),
+                Some(Err(e)) if first_err.is_none() => first_err = Some(e),
+                _ => {}
+            }
+        }
+        match first_err {
+            None => Ok(results),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+/// Run every grid point through [`train_once`] across the grid-runner
+/// pool (the standard path for training-based experiments).
+pub fn run_grid(points: &[GridPoint]) -> crate::Result<Vec<TrainOutcome>> {
+    GridRunner::from_env().run(points, |p| {
+        let mut cfg = p.cfg.clone();
+        cfg.seed = p.seed;
+        train_once(&cfg)
+    })
+}
+
+/// Mean ± std of a per-seed measurement — the paper's "± over 3 runs"
+/// discipline in one place (tab1/fig4/tab4/tab5 used to hand-roll the
+/// loop). Deliberately serial: every caller already sits inside an outer
+/// [`GridRunner`] lane (a nested pool here would multiply concurrency
+/// past the width cap and thrash the memory bus), and the seed count is
+/// at most three.
+pub fn aggregate_seeds(
+    seeds: &[u64],
+    run: impl Fn(u64) -> crate::Result<f64> + Sync,
+) -> crate::Result<Stats> {
+    let vals: Vec<f64> = seeds.iter().map(|&seed| run(seed)).collect::<crate::Result<_>>()?;
+    Ok(Stats::of(&vals))
+}
+
 /// Build the train/test datasets for a task. Returns
 /// `(train, test, model)` with the model evaluating on `train`.
 /// Train and test are split from ONE sample so they share the same class
@@ -167,20 +309,87 @@ pub fn set_workers(cfg: &mut ExperimentConfig, n: usize, scale: Scale) {
     cfg.steps_per_worker = (scale.total_steps() / n as u64).max(20);
 }
 
-/// Mean ± std of a closure over the scale's seeds.
-pub fn over_seeds(
-    scale: Scale,
+/// [`aggregate_seeds`] over one training configuration: run it once per
+/// seed (serially — see [`aggregate_seeds`]) and aggregate `metric` of
+/// the outcome.
+pub fn aggregate_config_seeds(
+    seeds: &[u64],
     base: &ExperimentConfig,
-    f: impl Fn(&TrainOutcome) -> f64,
-) -> crate::Result<crate::metrics::Stats> {
-    let mut vals = Vec::new();
-    for seed in scale.seeds() {
+    metric: impl Fn(&TrainOutcome) -> f64 + Sync,
+) -> crate::Result<Stats> {
+    aggregate_seeds(seeds, |seed| {
         let mut cfg = base.clone();
         cfg.seed = seed;
-        let out = train_once(&cfg)?;
-        vals.push(f(&out));
+        Ok(metric(&train_once(&cfg)?))
+    })
+}
+
+/// Fan a (variant × n) accuracy-style grid across the runner pool:
+/// `mk(variant, n)` builds each cell's config and every cell aggregates
+/// `metric` over `seeds` (tab4/tab5 share this scaffolding). Cells come
+/// back variant-major in declaration order — chunk by `grid.len()` to
+/// regroup per variant.
+pub fn variant_grid_cells<V: Sync>(
+    variants: &[V],
+    grid: &[usize],
+    seeds: &[u64],
+    mk: impl Fn(&V, usize) -> ExperimentConfig + Sync,
+    metric: impl Fn(&TrainOutcome) -> f64 + Sync,
+) -> crate::Result<Vec<Stats>> {
+    let mut points = Vec::with_capacity(variants.len() * grid.len());
+    for vi in 0..variants.len() {
+        for &n in grid {
+            points.push((vi, n));
+        }
     }
-    Ok(crate::metrics::Stats::of(&vals))
+    GridRunner::from_env()
+        .run(&points, |&(vi, n)| aggregate_config_seeds(seeds, &mk(&variants[vi], n), &metric))
+}
+
+/// Gossip-only consensus decay probe shared by `tab1` and `ablation`:
+/// random initial `x` on the ring, communications at rate 1 per worker,
+/// no gradients. Returns the first time ‖πx‖² drops below `target_frac`
+/// of its initial value (capped at a generous horizon). `params` selects
+/// the dynamic — `AcidParams::baseline()`, the theory's prescription, or
+/// any scaled η the ablation wants to probe.
+pub fn gossip_decay_time(
+    n: usize,
+    params: &AcidParams,
+    target_frac: f64,
+    seed: u64,
+) -> crate::Result<f64> {
+    let dim = 32;
+    let graph = Graph::build(&Topology::Ring, n)?;
+    let rates = graph.edge_rates(1.0);
+    let mixer = Mixer::new(params.eta);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut workers: Vec<WorkerState> = (0..n)
+        .map(|_| WorkerState::new((0..dim).map(|_| standard_normal(&mut rng) as f32).collect()))
+        .collect();
+    let target = consensus_distance_sq(&workers) * target_frac;
+    // No gradient events: near-zero worker rates.
+    let mut queue = EventQueue::new(&vec![1e-12; n], &rates, seed ^ 0xFEED);
+    let horizon = 200.0 * n as f64; // generous upper bound
+    let mut check_at = 0.25f64;
+    while let Some(ev) = queue.next(horizon) {
+        if let EventKind::Comm { edge } = ev.kind {
+            let (i, j) = graph.edges[edge];
+            let (a, b) = two_mut(&mut workers, i, j);
+            comm_event(a, b, ev.t, params, &mixer);
+        }
+        if ev.t >= check_at {
+            check_at = ev.t + 0.25;
+            // Sync to a common time before measuring (lazy mixing).
+            let mut snap = workers.clone();
+            for w in &mut snap {
+                w.mix_to(ev.t, &mixer);
+            }
+            if consensus_distance_sq(&snap) < target {
+                return Ok(ev.t);
+            }
+        }
+    }
+    Ok(horizon)
 }
 
 /// Standard config for the sweeps.
@@ -201,25 +410,6 @@ pub fn base_config(scale: Scale) -> ExperimentConfig {
         seed: 0,
         compute_jitter: 0.1,
         scenario: None,
-    }
-}
-
-/// Uniform "what a bench prints" view over the two experiment return
-/// shapes (`Vec<Table>` or `(rows, Vec<Table>)`) — the `bench_main!`
-/// macro renders any experiment through this.
-pub trait IntoTables {
-    fn into_tables(self) -> Vec<crate::metrics::Table>;
-}
-
-impl IntoTables for Vec<crate::metrics::Table> {
-    fn into_tables(self) -> Vec<crate::metrics::Table> {
-        self
-    }
-}
-
-impl<T> IntoTables for (T, Vec<crate::metrics::Table>) {
-    fn into_tables(self) -> Vec<crate::metrics::Table> {
-        self.1
     }
 }
 
@@ -254,13 +444,85 @@ mod tests {
     }
 
     #[test]
-    fn over_seeds_aggregates() {
+    fn aggregate_config_seeds_aggregates() {
         let mut cfg = base_config(Scale::Quick);
         cfg.n_workers = 4;
         cfg.steps_per_worker = 40;
         cfg.dataset_size = 256;
-        let stats = over_seeds(Scale::Quick, &cfg, |o| o.final_loss).unwrap();
+        let stats =
+            aggregate_config_seeds(&Scale::Quick.seeds(), &cfg, |o| o.final_loss).unwrap();
         assert_eq!(stats.n, 1);
         assert!(stats.mean.is_finite());
+        let multi = aggregate_seeds(&[0, 1, 2], |seed| Ok(seed as f64)).unwrap();
+        assert_eq!(multi.n, 3);
+        assert!((multi.mean - 1.0).abs() < 1e-12);
+    }
+
+    /// Tiny 2-experiment smoke grid (two distinct methods/seeds): the
+    /// parallel runner's output must be BIT-identical to serial
+    /// execution — same final losses, same loss trajectories, in
+    /// declaration order. This is the determinism contract `experiment
+    /// all` and the benches rely on.
+    #[test]
+    fn grid_parallel_output_bit_identical_to_serial() {
+        let mut cfg = base_config(Scale::Quick);
+        cfg.n_workers = 4;
+        cfg.steps_per_worker = 40;
+        cfg.dataset_size = 256;
+        let mut acid = cfg.clone();
+        acid.method = Method::Acid;
+        let points =
+            vec![GridPoint::new(cfg, 3), GridPoint::new(acid, 4)];
+        let run_at = |width: usize| {
+            GridRunner::with_width(width)
+                .run(&points, |p| {
+                    let mut c = p.cfg.clone();
+                    c.seed = p.seed;
+                    train_once(&c)
+                })
+                .unwrap()
+        };
+        let serial = run_at(1);
+        let parallel = run_at(4);
+        assert_eq!(serial.len(), 2);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.final_loss.to_bits(), p.final_loss.to_bits());
+            assert_eq!(s.t_end.to_bits(), p.t_end.to_bits());
+            assert_eq!(s.n_comms, p.n_comms);
+            assert_eq!(s.loss.points.len(), p.loss.points.len());
+            for ((ts, vs), (tp, vp)) in s.loss.points.iter().zip(&p.loss.points) {
+                assert_eq!(ts.to_bits(), tp.to_bits());
+                assert_eq!(vs.to_bits(), vp.to_bits());
+            }
+        }
+        // The two points really are different workloads.
+        assert_ne!(serial[0].final_loss.to_bits(), serial[1].final_loss.to_bits());
+    }
+
+    #[test]
+    fn grid_runner_reports_the_failing_point() {
+        // One failing point keeps the reported error deterministic even
+        // with the early-stop (lanes stop claiming once a point fails).
+        let points = vec![1u64, 2, 3, 4];
+        let probe = |&p: &u64| -> crate::Result<u64> {
+            if p == 2 {
+                anyhow::bail!("point {p} failed")
+            }
+            Ok(p)
+        };
+        for width in [1, 4] {
+            let err = GridRunner::with_width(width).run(&points, probe).unwrap_err();
+            assert_eq!(err.to_string(), "point 2 failed", "width {width}");
+        }
+    }
+
+    #[test]
+    fn gossip_decay_accelerated_beats_baseline() {
+        let graph = Graph::build(&Topology::Ring, 16).unwrap();
+        let spectrum = graph.spectrum_with_rates(&graph.edge_rates(1.0));
+        let base = gossip_decay_time(16, &AcidParams::baseline(), 1e-2, 3).unwrap();
+        let acid =
+            gossip_decay_time(16, &AcidParams::from_spectrum(&spectrum), 1e-2, 3).unwrap();
+        assert!(acid < base, "acid {acid} vs baseline {base} on ring-16");
     }
 }

@@ -8,9 +8,10 @@
 
 use crate::config::{Method, Task};
 use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::metrics::{Record, Table};
 
-use super::common::{base_config, train_once, Scale, TrainOutcome};
+use super::common::{base_config, run_grid, GridPoint, Scale, TrainOutcome};
+use super::{Report, Summary};
 
 pub struct Fig1 {
     pub baseline_1x: TrainOutcome,
@@ -18,20 +19,34 @@ pub struct Fig1 {
     pub acid_1x: TrainOutcome,
 }
 
+/// The three variants as (label, method, rate) in declaration order.
+const VARIANTS: [(&str, Method, f64); 3] = [
+    ("async baseline", Method::AsyncBaseline, 1.0),
+    ("async baseline", Method::AsyncBaseline, 2.0),
+    ("A2CiD2", Method::Acid, 1.0),
+];
+
 pub fn run(scale: Scale) -> crate::Result<(Fig1, Vec<Table>)> {
     let mut cfg = base_config(scale);
     cfg.topology = Topology::Ring;
     cfg.task = Task::ImagenetLike;
     super::common::set_workers(&mut cfg, scale.n_max(), scale);
 
-    let mut variant = |method: Method, rate: f64| -> crate::Result<TrainOutcome> {
-        cfg.method = method;
-        cfg.comm_rate = rate;
-        train_once(&cfg)
-    };
-    let baseline_1x = variant(Method::AsyncBaseline, 1.0)?;
-    let baseline_2x = variant(Method::AsyncBaseline, 2.0)?;
-    let acid_1x = variant(Method::Acid, 1.0)?;
+    let points: Vec<GridPoint> = VARIANTS
+        .iter()
+        .map(|&(_, method, rate)| {
+            let mut c = cfg.clone();
+            c.method = method;
+            c.comm_rate = rate;
+            GridPoint::new(c, cfg.seed)
+        })
+        .collect();
+    let mut outs = run_grid(&points)?.into_iter();
+    let (baseline_1x, baseline_2x, acid_1x) = (
+        outs.next().expect("baseline@1"),
+        outs.next().expect("baseline@2"),
+        outs.next().expect("acid@1"),
+    );
 
     let mut table = Table::new(
         format!(
@@ -40,20 +55,12 @@ pub fn run(scale: Scale) -> crate::Result<(Fig1, Vec<Table>)> {
         ),
         &["variant", "com/grad", "final loss", "final consensus"],
     );
-    for (name, out) in [
-        ("async baseline", &baseline_1x),
-        ("async baseline", &baseline_2x),
-        ("A2CiD2", &acid_1x),
-    ] {
-        let rate = if std::ptr::eq(out, &baseline_2x) { 2.0 } else { 1.0 };
-        let cons = out
-            .consensus
-            .as_ref()
-            .and_then(|s| s.last())
-            .map(|(_, v)| v)
-            .unwrap_or(f64::NAN);
+    for ((name, _, rate), out) in
+        VARIANTS.iter().zip([&baseline_1x, &baseline_2x, &acid_1x])
+    {
+        let cons = out.final_consensus().unwrap_or(f64::NAN);
         table.row(&[
-            name.into(),
+            (*name).into(),
             format!("{rate}"),
             format!("{:.4}", out.final_loss),
             format!("{cons:.4}"),
@@ -80,6 +87,28 @@ pub fn run(scale: Scale) -> crate::Result<(Fig1, Vec<Table>)> {
         println!("(fig1 curves -> {})", csv.display());
     }
     Ok((Fig1 { baseline_1x, baseline_2x, acid_1x }, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (fig, tables) = run(scale)?;
+    let records = VARIANTS
+        .iter()
+        .zip([&fig.baseline_1x, &fig.baseline_2x, &fig.acid_1x])
+        .map(|((name, _, rate), out)| {
+            Record::new()
+                .str("variant", *name)
+                .f64("comm_rate", *rate)
+                .f64("final_loss", out.final_loss)
+                .opt_f64("final_consensus", out.final_consensus())
+                .opt_f64("accuracy", out.accuracy)
+        })
+        .collect();
+    let summary = Summary {
+        final_loss: Some(fig.acid_1x.final_loss),
+        final_consensus: fig.acid_1x.final_consensus(),
+        accuracy: fig.acid_1x.accuracy,
+    };
+    Ok(Report { tables, records, summary })
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@ use crate::metrics::Table;
 use crate::simulator::trace::{render_ascii, simulate_timeline};
 
 use super::common::Scale;
+use super::Report;
 
 pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
     let (n, rounds) = match scale {
@@ -40,6 +41,10 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         ]);
     }
     Ok(vec![table])
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    Ok(Report::from_tables(run(scale)?))
 }
 
 #[cfg(test)]

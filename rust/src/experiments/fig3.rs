@@ -6,34 +6,53 @@ use crate::config::{Method, Task};
 use crate::graph::Topology;
 use crate::metrics::Table;
 
-use super::common::{base_config, train_once, Scale};
+use super::common::{base_config, run_grid, GridPoint, Scale};
+use super::{Report, Summary};
 
-pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
+/// Returns the headline scalar (panel (b)'s highest-rate async final
+/// loss) alongside the two tables, so the JSON summary doesn't have to
+/// re-parse a formatted table cell.
+pub fn run(scale: Scale) -> crate::Result<(f64, Vec<Table>)> {
     let mut cfg = base_config(scale);
     cfg.topology = Topology::Complete;
     cfg.task = Task::CifarLike;
 
-    // (a) loss vs n at 1 com/grad.
+    // (a) loss vs n at 1 com/grad — one grid point per n.
+    let grid = scale.n_grid();
+    let points: Vec<GridPoint> = grid
+        .iter()
+        .map(|&n| {
+            let mut c = cfg.clone();
+            super::common::set_workers(&mut c, n, scale);
+            c.method = Method::AsyncBaseline;
+            c.comm_rate = 1.0;
+            GridPoint::new(c, cfg.seed)
+        })
+        .collect();
     let mut ta = Table::new(
         "Fig.3a — complete graph, async baseline (paper: loss degrades with n)",
         &["n", "final loss", "consensus"],
     );
-    for n in scale.n_grid() {
-        super::common::set_workers(&mut cfg, n, scale);
-        cfg.method = Method::AsyncBaseline;
-        cfg.comm_rate = 1.0;
-        let out = train_once(&cfg)?;
-        let cons = out
-            .consensus
-            .as_ref()
-            .and_then(|s| s.last())
-            .map(|(_, v)| v)
-            .unwrap_or(f64::NAN);
+    for (&n, out) in grid.iter().zip(run_grid(&points)?) {
+        let cons = out.final_consensus().unwrap_or(f64::NAN);
         ta.row(&[n.to_string(), format!("{:.4}", out.final_loss), format!("{cons:.4}")]);
     }
 
-    // (b) n = max: rate sweep + AR reference.
+    // (b) n = max: AR reference + rate sweep, again one declared grid.
     super::common::set_workers(&mut cfg, scale.n_max(), scale);
+    let rates = [1.0, 2.0, 4.0];
+    let mut points = vec![{
+        let mut c = cfg.clone();
+        c.method = Method::AllReduce;
+        GridPoint::new(c, cfg.seed)
+    }];
+    points.extend(rates.iter().map(|&rate| {
+        let mut c = cfg.clone();
+        c.method = Method::AsyncBaseline;
+        c.comm_rate = rate;
+        GridPoint::new(c, cfg.seed)
+    }));
+    let outs = run_grid(&points)?;
     let mut tb = Table::new(
         format!(
             "Fig.3b — complete graph n={}, rate sweep (paper: more com/grad -> AR gap closes)",
@@ -41,20 +60,22 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         ),
         &["variant", "com/grad", "final loss"],
     );
-    cfg.method = Method::AllReduce;
-    let ar = train_once(&cfg)?;
-    tb.row(&["AR-SGD".into(), "-".into(), format!("{:.4}", ar.final_loss)]);
-    for rate in [1.0, 2.0, 4.0] {
-        cfg.method = Method::AsyncBaseline;
-        cfg.comm_rate = rate;
-        let out = train_once(&cfg)?;
+    tb.row(&["AR-SGD".into(), "-".into(), format!("{:.4}", outs[0].final_loss)]);
+    for (&rate, out) in rates.iter().zip(&outs[1..]) {
         tb.row(&[
             "async baseline".into(),
             format!("{rate}"),
             format!("{:.4}", out.final_loss),
         ]);
     }
-    Ok(vec![ta, tb])
+    let headline = outs.last().expect("rate sweep is non-empty").final_loss;
+    Ok((headline, vec![ta, tb]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (final_loss, tables) = run(scale)?;
+    let summary = Summary { final_loss: Some(final_loss), ..Summary::default() };
+    Ok(Report::from_tables(tables).with_summary(summary))
 }
 
 #[cfg(test)]
@@ -63,7 +84,8 @@ mod tests {
 
     #[test]
     fn produces_both_panels() {
-        let tables = run(Scale::Quick).unwrap();
+        let (headline, tables) = run(Scale::Quick).unwrap();
+        assert!(headline.is_finite());
         assert_eq!(tables.len(), 2);
         assert!(tables[0].rows.len() >= 2);
         assert_eq!(tables[1].rows.len(), 4);

@@ -3,15 +3,19 @@
 //! momentum recovers most of it.
 
 use crate::config::{Method, Task};
-use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::graph::{Graph, Topology};
+use crate::metrics::{Record, Stats, Table};
 
-use super::common::{base_config, train_once, Scale};
+use super::common::{aggregate_config_seeds, base_config, GridRunner, Scale};
+use super::{Report, Summary};
 
 pub struct Fig4Row {
     pub n: usize,
-    pub baseline_loss: f64,
-    pub acid_loss: f64,
+    pub chi1: f64,
+    pub chi_acc: f64,
+    /// Final loss, mean ± std over the scale's seeds.
+    pub baseline_loss: Stats,
+    pub acid_loss: Stats,
 }
 
 pub fn run(scale: Scale) -> crate::Result<(Vec<Fig4Row>, Vec<Table>)> {
@@ -20,28 +24,58 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Fig4Row>, Vec<Table>)> {
     cfg.task = Task::CifarLike;
     cfg.comm_rate = 1.0;
 
-    let mut rows = Vec::new();
+    let grid = scale.n_grid();
+    let seeds = scale.seeds();
+    let rows = GridRunner::from_env().run(&grid, |&n| {
+        let mut cfg = cfg.clone();
+        super::common::set_workers(&mut cfg, n, scale);
+        let loss_over_seeds = |method: Method| {
+            let mut c = cfg.clone();
+            c.method = method;
+            aggregate_config_seeds(&seeds, &c, |o| o.final_loss)
+        };
+        let baseline_loss = loss_over_seeds(Method::AsyncBaseline)?;
+        let acid_loss = loss_over_seeds(Method::Acid)?;
+        let s = Graph::build(&Topology::Ring, n)?.spectrum(cfg.comm_rate);
+        Ok(Fig4Row { n, chi1: s.chi1, chi_acc: s.chi_acc(), baseline_loss, acid_loss })
+    })?;
+
     let mut table = Table::new(
         "Fig.4 — ring graph, w/ vs w/o A2CiD2 (paper: momentum recovers the large-n gap)",
         &["n", "baseline loss", "A2CiD2 loss", "chi1", "sqrt(chi1*chi2)"],
     );
-    for n in scale.n_grid() {
-        super::common::set_workers(&mut cfg, n, scale);
-        cfg.method = Method::AsyncBaseline;
-        let base = train_once(&cfg)?;
-        cfg.method = Method::Acid;
-        let acid = train_once(&cfg)?;
-        let (chi1, chi2) = acid.chis.unwrap();
+    for row in &rows {
         table.row(&[
-            n.to_string(),
-            format!("{:.4}", base.final_loss),
-            format!("{:.4}", acid.final_loss),
-            format!("{chi1:.1}"),
-            format!("{:.1}", (chi1 * chi2).sqrt()),
+            row.n.to_string(),
+            row.baseline_loss.pm(4),
+            row.acid_loss.pm(4),
+            format!("{:.1}", row.chi1),
+            format!("{:.1}", row.chi_acc),
         ]);
-        rows.push(Fig4Row { n, baseline_loss: base.final_loss, acid_loss: acid.final_loss });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .u64("n", r.n as u64)
+                .f64("chi1", r.chi1)
+                .f64("chi_acc", r.chi_acc)
+                .f64("baseline_loss", r.baseline_loss.mean)
+                .f64("baseline_loss_std", r.baseline_loss.std)
+                .f64("acid_loss", r.acid_loss.mean)
+                .f64("acid_loss_std", r.acid_loss.std)
+        })
+        .collect();
+    let summary = Summary {
+        final_loss: rows.last().map(|r| r.acid_loss.mean),
+        ..Summary::default()
+    };
+    Ok(Report { tables, records, summary })
 }
 
 #[cfg(test)]
@@ -53,11 +87,14 @@ mod tests {
         let (rows, _) = run(Scale::Quick).unwrap();
         let last = rows.last().unwrap();
         assert!(
-            last.acid_loss <= last.baseline_loss * 1.1,
+            last.acid_loss.mean <= last.baseline_loss.mean * 1.1,
             "n={}: acid {} vs baseline {}",
             last.n,
-            last.acid_loss,
-            last.baseline_loss
+            last.acid_loss.mean,
+            last.baseline_loss.mean
         );
+        // The chi columns come straight from the spectrum now; the ring's
+        // accelerated factor must sit strictly below chi1 at the tail.
+        assert!(last.chi_acc < last.chi1);
     }
 }

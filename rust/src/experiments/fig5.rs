@@ -7,7 +7,8 @@ use crate::config::{Method, Task};
 use crate::graph::Topology;
 use crate::metrics::{Series, Table};
 
-use super::common::{base_config, train_once, Scale};
+use super::common::{base_config, run_grid, GridPoint, Scale};
+use super::{Report, Summary};
 
 pub struct Fig5b {
     pub baseline_1x: Series,
@@ -21,34 +22,54 @@ pub fn run(scale: Scale) -> crate::Result<(Fig5b, Vec<Table>)> {
     cfg.task = Task::ImagenetLike;
     cfg.comm_rate = 1.0;
 
-    // (a) loss across n with A²CiD².
+    // (a) loss across n, A²CiD² and baseline — one flat declared grid.
+    let grid = scale.n_grid();
+    let mut points = Vec::with_capacity(grid.len() * 2);
+    for &n in &grid {
+        for method in [Method::Acid, Method::AsyncBaseline] {
+            let mut c = cfg.clone();
+            super::common::set_workers(&mut c, n, scale);
+            c.method = method;
+            points.push(GridPoint::new(c, cfg.seed));
+        }
+    }
+    let outs = run_grid(&points)?;
     let mut ta = Table::new(
         "Fig.5a — ImageNet-like ring, A2CiD2 (paper: loss vs n)",
         &["n", "A2CiD2 loss", "baseline loss"],
     );
-    for n in scale.n_grid() {
-        super::common::set_workers(&mut cfg, n, scale);
-        cfg.method = Method::Acid;
-        let acid = train_once(&cfg)?;
-        cfg.method = Method::AsyncBaseline;
-        let base = train_once(&cfg)?;
+    for (&n, pair) in grid.iter().zip(outs.chunks(2)) {
         ta.row(&[
             n.to_string(),
-            format!("{:.4}", acid.final_loss),
-            format!("{:.4}", base.final_loss),
+            format!("{:.4}", pair[0].final_loss),
+            format!("{:.4}", pair[1].final_loss),
         ]);
     }
 
     // (b) consensus traces at the largest n.
     super::common::set_workers(&mut cfg, scale.n_max(), scale);
-    let grab = |method: Method, rate: f64, cfg: &mut crate::config::ExperimentConfig| {
-        cfg.method = method;
-        cfg.comm_rate = rate;
-        train_once(cfg).map(|o| o.consensus.unwrap_or_default())
-    };
-    let baseline_1x = grab(Method::AsyncBaseline, 1.0, &mut cfg)?;
-    let baseline_2x = grab(Method::AsyncBaseline, 2.0, &mut cfg)?;
-    let acid_1x = grab(Method::Acid, 1.0, &mut cfg)?;
+    let variants = [
+        (Method::AsyncBaseline, 1.0),
+        (Method::AsyncBaseline, 2.0),
+        (Method::Acid, 1.0),
+    ];
+    let points: Vec<GridPoint> = variants
+        .iter()
+        .map(|&(method, rate)| {
+            let mut c = cfg.clone();
+            c.method = method;
+            c.comm_rate = rate;
+            GridPoint::new(c, cfg.seed)
+        })
+        .collect();
+    let mut traces = run_grid(&points)?
+        .into_iter()
+        .map(|o| o.consensus.unwrap_or_default());
+    let (baseline_1x, baseline_2x, acid_1x) = (
+        traces.next().expect("baseline@1"),
+        traces.next().expect("baseline@2"),
+        traces.next().expect("acid@1"),
+    );
 
     let mut tb = Table::new(
         format!(
@@ -80,6 +101,15 @@ pub fn run(scale: Scale) -> crate::Result<(Fig5b, Vec<Table>)> {
         println!("(fig5b curves -> {})", csv.display());
     }
     Ok((Fig5b { baseline_1x, baseline_2x, acid_1x }, vec![ta, tb]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (fig, tables) = run(scale)?;
+    let summary = Summary {
+        final_consensus: Some(fig.acid_1x.tail_mean(0.5)),
+        ..Summary::default()
+    };
+    Ok(Report::from_tables(tables).with_summary(summary))
 }
 
 #[cfg(test)]

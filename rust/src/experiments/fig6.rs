@@ -6,6 +6,7 @@ use crate::graph::{Graph, Topology};
 use crate::metrics::Table;
 
 use super::common::Scale;
+use super::Report;
 
 pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
     let n = 16; // Fig. 6 is drawn at n = 16 regardless of scale.
@@ -58,6 +59,10 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         ]);
     }
     Ok(vec![table, t2])
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    Ok(Report::from_tables(run(scale)?))
 }
 
 #[cfg(test)]

@@ -13,7 +13,11 @@ use crate::optim::LrSchedule;
 use crate::runtime::worker::{run_async, GradSource, RustGradSource, RuntimeOptions};
 
 use super::common::Scale;
+use super::Report;
 
+/// Deliberately NOT grid-parallel: each topology run spawns the full
+/// real-thread runtime (2 threads per worker + coordinator); nesting
+/// that under the grid pool would oversubscribe the machine.
 pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
     let (n, steps) = match scale {
         Scale::Quick => (8, 60),
@@ -80,6 +84,10 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         ]);
     }
     Ok(vec![table])
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    Ok(Report::from_tables(run(scale)?))
 }
 
 #[cfg(test)]

@@ -1,34 +1,47 @@
 //! Experiment drivers — one module per table/figure of the paper.
 //!
-//! Every module exposes `run(scale) -> Vec<Table>`: it executes the
-//! workload, prints the regenerated rows next to the paper's reference
-//! numbers, and returns the tables so benches, the CLI, and the tests
-//! share one code path. `Scale::Quick` (the `cargo bench` default) shrinks
-//! worker counts and step budgets to finish in seconds; `Scale::Full`
-//! (`A2CID2_BENCH_FULL=1`) runs the paper-sized grids.
+//! Every module exposes `run(scale)` (its typed rows + tables) and a
+//! `report(scale) -> Report` wrapper the [`registry`] resolves by id:
+//! the CLI (`a2cid2 experiment all [--filter SUBSTR] [--json PATH]`),
+//! every `rust/benches/*.rs` target, and the tests all launch
+//! experiments through the same registry entry. Grids fan out across
+//! the deterministic [`common::GridRunner`] pool (declaration-order
+//! collection ⇒ parallel output bit-identical to serial), and every run
+//! leaves machine-readable [`crate::metrics::Record`]s behind —
+//! consolidated into `BENCH_experiments.json` by `experiment all
+//! --json`. `Scale::Quick` (the `cargo bench` default) shrinks worker
+//! counts and step budgets to finish in seconds; `Scale::Full`
+//! (`A2CID2_BENCH_FULL=1`, resolved once per process by
+//! [`registry::scale`]) runs the paper-sized grids.
+//!
+//! The table below is regenerated from the registry
+//! (`doc_table_matches_registry` fails on drift):
 //!
 //! | Module | Paper item | What it shows |
 //! |---|---|---|
-//! | [`fig1`]  | Fig. 1  | A²CiD² ≈ doubling the comm rate (ring, large n) |
-//! | [`fig2`]  | Fig. 2  | sync vs async worker timelines / idle time |
-//! | [`fig3`]  | Fig. 3  | complete graph: loss degrades with n; rate closes the gap |
-//! | [`fig4`]  | Fig. 4  | ring: w/ vs w/o A²CiD² across n |
-//! | [`fig5`]  | Fig. 5  | harder task: loss + consensus, A²CiD² vs 2× rate |
-//! | [`fig6`]  | Fig. 6  | topologies and their (χ₁, χ₂) |
-//! | [`fig7`]  | Fig. 7  | pairing heat-map ≈ uniform neighbor selection |
-//! | [`tab1`]  | Tab. 1  | time-to-ε scaling: χ₁ (baseline) vs √(χ₁χ₂) (A²CiD²) |
-//! | [`tab2`]  | Tab. 2  | #comms per unit time: star/ring/complete |
-//! | [`tab3`]  | Tab. 3  | training times vs n, ours vs AR-SGD |
-//! | [`tab4`]  | Tab. 4  | CIFAR-like accuracy across 3 graphs × n |
-//! | [`tab5`]  | Tab. 5  | ImageNet-like accuracy on the ring, rates 1 & 2 |
-//! | [`tab6`]  | Tab. 6  | wall time + #∇ slowest/fastest worker |
+//! | [`fig1`]     | Fig. 1 | A²CiD² ≈ doubling the comm rate (ring, large n) |
+//! | [`fig2`]     | Fig. 2 | sync vs async worker timelines / idle time |
+//! | [`fig3`]     | Fig. 3 | complete graph: loss degrades with n; rate closes the gap |
+//! | [`fig4`]     | Fig. 4 | ring: w/ vs w/o A²CiD² across n |
+//! | [`fig5`]     | Fig. 5 | harder task: loss + consensus, A²CiD² vs 2× rate |
+//! | [`fig6`]     | Fig. 6 | topologies and their (χ₁, χ₂) |
+//! | [`fig7`]     | Fig. 7 | pairing heat-map ≈ uniform neighbor selection |
+//! | [`tab1`]     | Tab. 1 | time-to-ε scaling: χ₁ (baseline) vs √(χ₁χ₂) (A²CiD²) |
+//! | [`tab2`]     | Tab. 2 | #comms per unit time: star/ring/complete |
+//! | [`tab3`]     | Tab. 3 | training times vs n, ours vs AR-SGD |
+//! | [`tab4`]     | Tab. 4 | CIFAR-like accuracy across 3 graphs × n |
+//! | [`tab5`]     | Tab. 5 | ImageNet-like accuracy on the ring, rates 1 & 2 |
+//! | [`tab6`]     | Tab. 6 | wall time + #∇ slowest/fastest worker |
+//! | [`ablation`] | beyond | momentum-rate η sweep around the theory's η* |
+//! | [`scenario`] | beyond | A²CiD² across a mid-run topology switch + dropout |
+//! | [`sweep`]    | beyond | dropout × switch × churn × adaptive grid |
 //!
-//! Beyond the paper: [`scenario`] stresses A²CiD² on *time-varying*
-//! networks (mid-run topology switch + link dropout) — conditions the
-//! paper's "poorly connected networks" claim is about but its experiments
-//! never exercise — and [`sweep`] charts the dropout × switch-time grid
-//! comparing per-phase adaptive (η, α̃) against frozen phase-0 parameters
-//! (emitting the machine-readable `BENCH_sweep.json`).
+//! The beyond-paper drivers stress what the paper's experiments never
+//! exercise: [`scenario`] runs A²CiD² on *time-varying* networks,
+//! [`ablation`] probes the (η, α̃) prescription, and [`sweep`] charts the
+//! dropout × switch-time × churn grid comparing per-phase adaptive
+//! parameters against frozen phase-0 values (maintaining the
+//! machine-readable `BENCH_sweep.json`).
 
 pub mod ablation;
 pub mod common;
@@ -39,6 +52,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod registry;
 pub mod scenario;
 pub mod sweep;
 pub mod tab1;
@@ -48,30 +62,21 @@ pub mod tab4;
 pub mod tab5;
 pub mod tab6;
 
-pub use common::{train_once, IntoTables, Scale, TrainOutcome};
+pub use common::{
+    aggregate_seeds, run_grid, train_once, GridPoint, GridRunner, Scale, TrainOutcome,
+};
+pub use registry::{Experiment, Report, Summary};
 
-/// Generate a bench `main` for one experiment module: run it at the
-/// env-selected scale, print its tables, report the elapsed time. Every
-/// `rust/benches/<exp>.rs` target is exactly one invocation of this (they
-/// used to be 14 copies of the same 11-line stub).
+/// Generate a bench `main` for one experiment module: resolve the module
+/// through [`crate::experiments::registry`] (same entry the CLI uses),
+/// run it at the process-wide scale, print its tables, maintain its
+/// artifact, report the elapsed time. Every `rust/benches/<exp>.rs`
+/// target is exactly one invocation of this.
 #[macro_export]
 macro_rules! bench_main {
     ($exp:ident) => {
         fn main() {
-            use $crate::experiments::IntoTables;
-            let scale = $crate::experiments::Scale::from_env();
-            let t0 = std::time::Instant::now();
-            let tables = $crate::experiments::$exp::run(scale)
-                .expect(stringify!($exp))
-                .into_tables();
-            for t in tables {
-                t.print();
-            }
-            println!(
-                "[{}] completed in {:.1}s at {scale:?} scale",
-                stringify!($exp),
-                t0.elapsed().as_secs_f64()
-            );
+            $crate::experiments::registry::bench_entry(stringify!($exp));
         }
     };
 }

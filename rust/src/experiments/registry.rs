@@ -1,0 +1,364 @@
+//! The experiment registry: one declarative entry per paper table/figure,
+//! resolved by id everywhere an experiment can be launched.
+//!
+//! Every module in `experiments/` registers exactly once (pinned by a
+//! test against the module list); the CLI (`a2cid2 experiment all
+//! [--filter SUBSTR] [--json PATH]`), the `bench_main!` targets, and the
+//! tests all resolve through [`find`]/[`all`] instead of hand-written
+//! match arms. A run returns a [`Report`] — the human tables plus a
+//! typed, serde-free JSON [`Record`] set — and `experiment all --json`
+//! consolidates one row per experiment (id, scale, wall ms, final
+//! loss/consensus/accuracy where applicable, and the full row set) into
+//! `BENCH_experiments.json` via atomic writes.
+
+use std::path::Path;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::metrics::{render_records, Record, Table};
+use crate::runtime::artifacts::write_atomic;
+
+use super::common::Scale;
+
+/// What one experiment run hands back: the printable tables plus the
+/// machine-readable record set (and the headline scalars, where the
+/// workload has them).
+pub struct Report {
+    pub tables: Vec<Table>,
+    /// Typed rows for the JSON artifacts. Experiments with natural row
+    /// structs emit them directly; the rest bridge from their tables.
+    pub records: Vec<Record>,
+    pub summary: Summary,
+}
+
+/// Headline scalars of a run, `None` where the workload has no such
+/// quantity (e.g. spectra-only experiments have no loss).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub final_loss: Option<f64>,
+    pub final_consensus: Option<f64>,
+    pub accuracy: Option<f64>,
+}
+
+impl Report {
+    /// Build a report whose records are bridged from the tables (the
+    /// default for experiments without hand-written row types).
+    pub fn from_tables(tables: Vec<Table>) -> Report {
+        let records = tables.iter().flat_map(Table::to_records).collect();
+        Report { tables, records, summary: Summary::default() }
+    }
+
+    pub fn with_summary(mut self, summary: Summary) -> Report {
+        self.summary = summary;
+        self
+    }
+}
+
+/// One registered experiment. Implementations are the unit structs the
+/// `register!` macro generates — `id()` always equals the module name,
+/// so the registry, the CLI, and `bench_main!` share one namespace.
+pub trait Experiment: Sync {
+    fn id(&self) -> &'static str;
+    /// Which paper item this reproduces (`Fig. 1` … `Tab. 6`), or
+    /// `beyond` for the drivers that go past the paper's grid.
+    fn paper_item(&self) -> &'static str;
+    /// One-line description, mirrored verbatim in the `experiments`
+    /// module doc table (pinned by `doc_table_matches_registry`).
+    fn what(&self) -> &'static str;
+    /// Standalone machine-readable artifact this experiment maintains
+    /// (written next to the consolidated one on every registry run).
+    fn artifact(&self) -> Option<&'static str> {
+        None
+    }
+    fn run(&self, scale: Scale) -> crate::Result<Report>;
+}
+
+macro_rules! register {
+    ($ty:ident, $module:ident, $paper:literal, $what:literal
+     $(, artifact = $art:literal)?) => {
+        struct $ty;
+        impl Experiment for $ty {
+            fn id(&self) -> &'static str {
+                stringify!($module)
+            }
+            fn paper_item(&self) -> &'static str {
+                $paper
+            }
+            fn what(&self) -> &'static str {
+                $what
+            }
+            $(fn artifact(&self) -> Option<&'static str> {
+                Some($art)
+            })?
+            fn run(&self, scale: Scale) -> crate::Result<Report> {
+                super::$module::report(scale)
+            }
+        }
+    };
+}
+
+register!(Fig1, fig1, "Fig. 1", "A²CiD² ≈ doubling the comm rate (ring, large n)");
+register!(Fig2, fig2, "Fig. 2", "sync vs async worker timelines / idle time");
+register!(Fig3, fig3, "Fig. 3", "complete graph: loss degrades with n; rate closes the gap");
+register!(Fig4, fig4, "Fig. 4", "ring: w/ vs w/o A²CiD² across n");
+register!(Fig5, fig5, "Fig. 5", "harder task: loss + consensus, A²CiD² vs 2× rate");
+register!(Fig6, fig6, "Fig. 6", "topologies and their (χ₁, χ₂)");
+register!(Fig7, fig7, "Fig. 7", "pairing heat-map ≈ uniform neighbor selection");
+register!(Tab1, tab1, "Tab. 1", "time-to-ε scaling: χ₁ (baseline) vs √(χ₁χ₂) (A²CiD²)");
+register!(Tab2, tab2, "Tab. 2", "#comms per unit time: star/ring/complete");
+register!(Tab3, tab3, "Tab. 3", "training times vs n, ours vs AR-SGD");
+register!(Tab4, tab4, "Tab. 4", "CIFAR-like accuracy across 3 graphs × n");
+register!(Tab5, tab5, "Tab. 5", "ImageNet-like accuracy on the ring, rates 1 & 2");
+register!(Tab6, tab6, "Tab. 6", "wall time + #∇ slowest/fastest worker");
+register!(Ablation, ablation, "beyond", "momentum-rate η sweep around the theory's η*");
+register!(ScenarioExp, scenario, "beyond", "A²CiD² across a mid-run topology switch + dropout");
+register!(
+    Sweep,
+    sweep,
+    "beyond",
+    "dropout × switch × churn × adaptive grid",
+    artifact = "BENCH_sweep.json"
+);
+
+/// Every registered experiment, in `experiment all` execution order.
+pub fn all() -> &'static [&'static dyn Experiment] {
+    static REGISTRY: &[&dyn Experiment] = &[
+        &Fig1, &Fig2, &Fig3, &Fig4, &Fig5, &Fig6, &Fig7, &Tab1, &Tab2, &Tab3, &Tab4, &Tab5,
+        &Tab6, &Ablation, &ScenarioExp, &Sweep,
+    ];
+    REGISTRY
+}
+
+/// Resolve an experiment by id (the CLI resolver).
+pub fn find(id: &str) -> Option<&'static dyn Experiment> {
+    all().iter().copied().find(|e| e.id() == id)
+}
+
+static SCALE: OnceLock<Scale> = OnceLock::new();
+
+/// Pin the process-wide scale before anything resolves it (the CLI's
+/// `--full` flag). Fails if [`scale`] already ran.
+pub fn force_scale(s: Scale) -> Result<(), Scale> {
+    SCALE.set(s)
+}
+
+/// THE `Scale::from_env` call site. Every entry point — the CLI and each
+/// `bench_main!` target — resolves through this once-per-process cell,
+/// so `A2CID2_BENCH_FULL` is consulted exactly once and cannot
+/// half-apply when one experiment invokes another mid-run (as `sweep`
+/// does through its per-point runs).
+pub fn scale() -> Scale {
+    *SCALE.get_or_init(Scale::from_env)
+}
+
+fn scale_name(scale: Scale) -> &'static str {
+    match scale {
+        Scale::Quick => "quick",
+        Scale::Full => "full",
+    }
+}
+
+/// Run one experiment, print its tables, maintain its standalone
+/// artifact, and return its consolidated-artifact row.
+fn run_one(exp: &dyn Experiment, scale: Scale) -> crate::Result<Record> {
+    let t0 = Instant::now();
+    let report = exp.run(scale)?;
+    let wall_ms = t0.elapsed().as_millis() as u64;
+    for table in &report.tables {
+        table.print();
+    }
+    if let Some(artifact) = exp.artifact() {
+        let path = Path::new(artifact);
+        write_atomic(path, render_records(&report.records).as_bytes())?;
+        println!("wrote {} ({} rows)", path.display(), report.records.len());
+    }
+    Ok(Record::new()
+        .str("id", exp.id())
+        .str("paper_item", exp.paper_item())
+        .str("scale", scale_name(scale))
+        .u64("wall_ms", wall_ms)
+        .opt_f64("final_loss", report.summary.final_loss)
+        .opt_f64("final_consensus", report.summary.final_consensus)
+        .opt_f64("accuracy", report.summary.accuracy)
+        .u64("n_rows", report.records.len() as u64)
+        .records("rows", report.records))
+}
+
+/// The `a2cid2 experiment` subcommand: resolve `id` (or `all`, optionally
+/// narrowed by `--filter SUBSTR`) through the registry, run each
+/// experiment at `scale`, and — with `--json PATH` — write the
+/// consolidated artifact (one row per experiment) atomically.
+pub fn run_cli(
+    id: &str,
+    filter: Option<&str>,
+    json: Option<&Path>,
+    scale: Scale,
+) -> crate::Result<()> {
+    let selected: Vec<&dyn Experiment> = if id == "all" {
+        all()
+            .iter()
+            .copied()
+            .filter(|e| filter.is_none_or(|f| e.id().contains(f)))
+            .collect()
+    } else {
+        anyhow::ensure!(
+            filter.is_none(),
+            "--filter only applies to 'experiment all'"
+        );
+        vec![find(id).ok_or_else(|| {
+            anyhow::anyhow!("unknown experiment '{id}' (have: {}, all)", known_ids())
+        })?]
+    };
+    anyhow::ensure!(
+        !selected.is_empty(),
+        "--filter '{}' matches no experiment (have: {})",
+        filter.unwrap_or_default(),
+        known_ids()
+    );
+    let mut rows = Vec::with_capacity(selected.len());
+    let mut outcome = Ok(());
+    for exp in selected {
+        println!("=== {} ===", exp.id());
+        match run_one(exp, scale) {
+            Ok(row) => rows.push(row),
+            Err(e) => {
+                // Flush the completed rows below before surfacing the
+                // failure — hours of finished experiments should not
+                // vanish because a later one broke.
+                outcome = Err(anyhow::anyhow!("experiment '{}': {e:#}", exp.id()));
+                break;
+            }
+        }
+    }
+    if let Some(path) = json {
+        write_atomic(path, render_records(&rows).as_bytes())?;
+        println!(
+            "wrote {} ({} experiment rows{})",
+            path.display(),
+            rows.len(),
+            if outcome.is_err() { ", PARTIAL — a later experiment failed" } else { "" }
+        );
+    }
+    outcome
+}
+
+fn known_ids() -> String {
+    all().iter().map(|e| e.id()).collect::<Vec<_>>().join(", ")
+}
+
+/// Body of every `bench_main!` target: resolve the experiment through
+/// the registry, run it at the process-wide scale, print, and time it.
+pub fn bench_entry(id: &str) {
+    let exp = find(id).unwrap_or_else(|| {
+        panic!("'{id}' is not a registered experiment (have: {})", known_ids())
+    });
+    let scale = scale();
+    let t0 = Instant::now();
+    run_one(exp, scale).unwrap_or_else(|e| panic!("[{id}] failed: {e:#}"));
+    println!("[{id}] completed in {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn normalize(s: &str) -> String {
+        s.split_whitespace().collect::<Vec<_>>().join(" ")
+    }
+
+    /// Every `pub mod` in `experiments/` (besides the infrastructure
+    /// modules) is registered exactly once, under its module name.
+    #[test]
+    fn every_experiment_module_registered_exactly_once() {
+        let src = include_str!("mod.rs");
+        let mut modules: Vec<&str> = src
+            .lines()
+            .filter_map(|l| l.trim().strip_prefix("pub mod ")?.strip_suffix(';'))
+            .filter(|m| *m != "common" && *m != "registry")
+            .collect();
+        modules.sort_unstable();
+        let mut ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
+        let unique: BTreeSet<&str> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), ids.len(), "duplicate registry ids");
+        ids.sort_unstable();
+        assert_eq!(
+            modules, ids,
+            "experiments/ modules and registry ids must match 1:1"
+        );
+    }
+
+    /// The module doc table is regenerated from the registry: a newly
+    /// registered experiment without its doc row fails this test.
+    #[test]
+    fn doc_table_matches_registry() {
+        let src = include_str!("mod.rs");
+        let rows: Vec<String> = src
+            .lines()
+            .filter(|l| l.starts_with("//! | [`"))
+            .map(normalize)
+            .collect();
+        for exp in all() {
+            let expected = normalize(&format!(
+                "//! | [`{}`] | {} | {} |",
+                exp.id(),
+                exp.paper_item(),
+                exp.what()
+            ));
+            assert!(
+                rows.contains(&expected),
+                "experiments/mod.rs doc table is missing or stale for '{}';\n\
+                 expected (whitespace-normalized): {expected}",
+                exp.id()
+            );
+        }
+        assert_eq!(rows.len(), all().len(), "doc table has extra/stale rows");
+    }
+
+    /// Every registered id round-trips through the CLI resolver.
+    #[test]
+    fn ids_round_trip_through_resolver() {
+        for exp in all() {
+            let found = find(exp.id()).expect(exp.id());
+            assert_eq!(found.id(), exp.id());
+            assert!(!exp.paper_item().is_empty());
+            assert!(!exp.what().contains('|'), "what() would break the doc table");
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn scale_resolves_once_and_stays_pinned() {
+        let first = scale();
+        assert_eq!(first, scale());
+        // Once resolved, nothing can flip it mid-process.
+        assert!(force_scale(Scale::Full).is_err() || scale() == Scale::Full);
+        assert_eq!(first, scale());
+    }
+
+    #[test]
+    fn run_cli_writes_consolidated_json_for_a_cheap_experiment() {
+        let dir = std::env::temp_dir().join("a2cid2_registry_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_experiments.json");
+        run_cli("fig6", None, Some(&path), Scale::Quick).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.contains("\"id\": \"fig6\""));
+        assert!(text.contains("\"scale\": \"quick\""));
+        assert!(text.contains("\"wall_ms\""));
+        assert!(text.contains("\"rows\": ["));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn run_cli_rejects_unknown_and_unmatched() {
+        let err = run_cli("fig99", None, None, Scale::Quick).unwrap_err().to_string();
+        assert!(err.contains("unknown experiment"), "{err}");
+        assert!(err.contains("fig1"), "{err}");
+        let err = run_cli("all", Some("zzz"), None, Scale::Quick)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("matches no experiment"), "{err}");
+    }
+}

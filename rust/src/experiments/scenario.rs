@@ -8,9 +8,10 @@
 //! a config string — any other history is a one-line change.
 
 use crate::config::{Method, Scenario, Task};
-use crate::metrics::Table;
+use crate::metrics::{Record, Table};
 
-use super::common::{base_config, set_workers, train_once, Scale};
+use super::common::{base_config, run_grid, set_workers, GridPoint, Scale};
+use super::{Report, Summary};
 
 /// The demo scenario: ring phase, 20% links down over the middle half,
 /// exponential graph from half-time on.
@@ -30,6 +31,17 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<ScenarioRow>, Vec<Table>)> {
     set_workers(&mut cfg, scale.n_max().min(16), scale);
     cfg.scenario = Some(Scenario::parse(DEMO_SCENARIO)?);
 
+    let methods = [Method::AsyncBaseline, Method::Acid];
+    let points: Vec<GridPoint> = methods
+        .iter()
+        .map(|&method| {
+            let mut c = cfg.clone();
+            c.method = method;
+            GridPoint::new(c, cfg.seed)
+        })
+        .collect();
+    let outs = run_grid(&points)?;
+
     let mut rows = Vec::new();
     let mut table = Table::new(
         format!(
@@ -38,15 +50,8 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<ScenarioRow>, Vec<Table>)> {
         ),
         &["method", "final loss", "final consensus", "#comms"],
     );
-    for method in [Method::AsyncBaseline, Method::Acid] {
-        cfg.method = method;
-        let out = train_once(&cfg)?;
-        let consensus = out
-            .consensus
-            .as_ref()
-            .and_then(|s| s.last())
-            .map(|(_, v)| v)
-            .unwrap_or(f64::NAN);
+    for (&method, out) in methods.iter().zip(&outs) {
+        let consensus = out.final_consensus().unwrap_or(f64::NAN);
         table.row(&[
             method.name().into(),
             format!("{:.4}", out.final_loss),
@@ -61,6 +66,27 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<ScenarioRow>, Vec<Table>)> {
         });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .str("scenario", DEMO_SCENARIO)
+                .str("method", r.method.name())
+                .f64("final_loss", r.final_loss)
+                .f64("final_consensus", r.final_consensus)
+                .u64("n_comms", r.n_comms)
+        })
+        .collect();
+    let summary = Summary {
+        final_loss: rows.last().map(|r| r.final_loss),
+        final_consensus: rows.last().map(|r| r.final_consensus),
+        ..Summary::default()
+    };
+    Ok(Report { tables, records, summary })
 }
 
 #[cfg(test)]

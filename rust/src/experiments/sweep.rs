@@ -2,32 +2,35 @@
 //! what does per-phase adaptive (η, α̃) buy — as connectivity degrades?
 //!
 //! A seed-deterministic grid over **dropout fraction × switch time ×
-//! adaptive-vs-frozen parameters**. Every grid point runs the same
-//! ring→exponential switch scenario (the dropout window covers the
-//! middle half of the run) twice with one seed: once re-deriving
-//! (η, α̃) from the active phase's spectrum at each switch (`adapt=1`,
-//! the default) and once holding phase-0's ring-derived values
-//! (`adapt=0`). Because both arms share the seed, the Poisson event
-//! sequence and mini-batch draws are identical — the comparison isolates
-//! the parameter policy.
+//! worker churn × adaptive-vs-frozen parameters**. Every grid point runs
+//! the same ring→exponential switch scenario (the dropout window covers
+//! the middle half of the run; the churn arm additionally sends a
+//! quarter of the fleet away mid-run and re-joins it near the end) twice
+//! with one seed: once re-deriving (η, α̃) from the active phase's
+//! spectrum at each switch (`adapt=1`, the default) and once holding
+//! phase-0's ring-derived values (`adapt=0`). Because both arms share
+//! the seed, the Poisson event sequence and mini-batch draws are
+//! identical — the comparison isolates the parameter policy. Grid units
+//! fan out across the deterministic [`super::common::GridRunner`] pool.
 //!
 //! Reported per row: final training loss, final consensus distance, and
 //! the number of communication events needed to first reach the target
 //! loss (a fixed fraction of the initial loss; `null` when never
-//! reached). [`write_json`] emits the machine-readable
-//! `BENCH_sweep.json` that CI archives next to `BENCH_perf.json`.
+//! reached). The registry entry declares `BENCH_sweep.json` as this
+//! experiment's artifact, so every CLI/bench run emits the
+//! machine-readable rows ([`SweepPoint::record`]) that CI archives next
+//! to `BENCH_perf.json`.
 
-use std::io::Write as _;
-use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, Method, Scenario, Task};
 use crate::data::{GaussianMixture, Sharding};
-use crate::metrics::{Recorder, Table};
+use crate::metrics::{Record, Recorder, Table};
 use crate::model::Logistic;
 use crate::simulator::{run_simulation, SimResult};
 
-use super::common::Scale;
+use super::common::{GridRunner, Scale};
+use super::{Report, Summary};
 
 /// Target loss = this fraction of the first recorded training loss.
 pub const TARGET_LOSS_FRAC: f64 = 0.6;
@@ -35,10 +38,13 @@ pub const TARGET_LOSS_FRAC: f64 = 0.6;
 /// One grid point × parameter policy.
 pub struct SweepPoint {
     /// The full scenario string this row ran (self-describing: the
-    /// frozen arm carries `;adapt=0`).
+    /// frozen arm carries `;adapt=0`, the churn arm `leave=`/`join=`).
     pub scenario: String,
     pub drop_frac: f64,
     pub switch_at: f64,
+    /// Whether this row ran the worker-churn arm (25% leave at t=0.3,
+    /// re-join at t=0.8).
+    pub churn: bool,
     pub adaptive: bool,
     pub final_loss: f64,
     pub final_consensus: f64,
@@ -51,12 +57,30 @@ pub struct SweepPoint {
     pub alpha_tilde_final: f64,
 }
 
-/// The dropout-fraction × switch-time grid for a scale.
-pub fn grid(scale: Scale) -> (Vec<f64>, Vec<f64>) {
+impl SweepPoint {
+    /// The `BENCH_sweep.json` row.
+    pub fn record(&self) -> Record {
+        Record::new()
+            .str("scenario", self.scenario.clone())
+            .f64("drop", self.drop_frac)
+            .f64("switch_at", self.switch_at)
+            .bool("churn", self.churn)
+            .bool("adaptive", self.adaptive)
+            .f64("final_loss", self.final_loss)
+            .f64("final_consensus", self.final_consensus)
+            .u64("n_comms", self.n_comms)
+            .opt_u64("comms_to_target", self.comms_to_target)
+            .f64("eta_final", self.eta_final)
+            .f64("alpha_tilde_final", self.alpha_tilde_final)
+    }
+}
+
+/// The dropout-fraction × switch-time × churn grid for a scale.
+pub fn grid(scale: Scale) -> (Vec<f64>, Vec<f64>, Vec<bool>) {
     match scale {
-        Scale::Quick if cfg!(debug_assertions) => (vec![0.0, 0.3], vec![0.5]),
-        Scale::Quick => (vec![0.0, 0.2, 0.4], vec![0.25, 0.5]),
-        Scale::Full => (vec![0.0, 0.2, 0.4, 0.6], vec![0.25, 0.5, 0.75]),
+        Scale::Quick if cfg!(debug_assertions) => (vec![0.0, 0.3], vec![0.5], vec![false, true]),
+        Scale::Quick => (vec![0.0, 0.2, 0.4], vec![0.25, 0.5], vec![false, true]),
+        Scale::Full => (vec![0.0, 0.2, 0.4, 0.6], vec![0.25, 0.5, 0.75], vec![false, true]),
     }
 }
 
@@ -85,10 +109,14 @@ fn base_cfg(scale: Scale) -> ExperimentConfig {
     }
 }
 
-/// The scenario string for one grid point; `adaptive = false` appends
-/// `;adapt=0` so every JSON row is reproducible from its string alone.
-pub fn scenario_string(drop_frac: f64, switch_at: f64, adaptive: bool) -> String {
+/// The scenario string for one grid point; `churn` adds the ROADMAP's
+/// leave/join arm and `adaptive = false` appends `;adapt=0`, so every
+/// JSON row is reproducible from its string alone.
+pub fn scenario_string(drop_frac: f64, switch_at: f64, churn: bool, adaptive: bool) -> String {
     let mut s = format!("ring@0,exponential@{switch_at};drop={drop_frac}:0.25:0.75:7");
+    if churn {
+        s.push_str(";leave=0.25:0.3:1;join=0.25:0.8");
+    }
     if !adaptive {
         s.push_str(";adapt=0");
     }
@@ -118,19 +146,85 @@ fn run_point(cfg: &ExperimentConfig, target_loss: f64) -> crate::Result<(SimResu
     Ok((res, comms))
 }
 
+/// One grid unit: both parameter-policy arms at a fixed
+/// (drop, switch, churn), frozen first (it pins the target loss), on the
+/// shared seed. Returns the two [`SweepPoint`]s in `[frozen, adaptive]`
+/// order.
+fn run_unit(
+    base: &ExperimentConfig,
+    drop_frac: f64,
+    switch_at: f64,
+    churn: bool,
+) -> crate::Result<Vec<SweepPoint>> {
+    let mut points = Vec::with_capacity(2);
+    let mut target = f64::NAN;
+    for adaptive in [false, true] {
+        let s = scenario_string(drop_frac, switch_at, churn, adaptive);
+        let mut cfg = base.clone();
+        cfg.scenario = Some(Scenario::parse(&s)?);
+        let (res, comms) = if target.is_nan() {
+            // Probe the initial loss from the first recorded point of
+            // this arm's own run (recorded before any parameter
+            // divergence can matter) to fix the shared target.
+            let (res, _) = run_point(&cfg, f64::NEG_INFINITY)?;
+            let first = res
+                .recorder
+                .get("train_loss")
+                .and_then(|ser| ser.points.first().copied())
+                .map(|(_, v)| v)
+                .unwrap_or(f64::NAN);
+            target = TARGET_LOSS_FRAC * first;
+            let comms = res
+                .recorder
+                .get("train_loss")
+                .and_then(|ser| ser.first_time_below(target))
+                .and_then(|t| comms_at(&res.recorder, t));
+            (res, comms)
+        } else {
+            run_point(&cfg, target)?
+        };
+        points.push(SweepPoint {
+            scenario: s,
+            drop_frac,
+            switch_at,
+            churn,
+            adaptive,
+            final_loss: res.final_loss(),
+            final_consensus: res.final_consensus(),
+            n_comms: res.n_comms,
+            comms_to_target: comms,
+            eta_final: res.acid.eta,
+            alpha_tilde_final: res.acid.alpha_tilde,
+        });
+    }
+    Ok(points)
+}
+
 pub fn run(scale: Scale) -> crate::Result<(Vec<SweepPoint>, Vec<Table>)> {
-    let (drops, switches) = grid(scale);
+    let (drops, switches, churns) = grid(scale);
     let base = base_cfg(scale);
-    let mut points = Vec::new();
+    let mut units = Vec::new();
+    for &drop_frac in &drops {
+        for &switch_at in &switches {
+            for &churn in &churns {
+                units.push((drop_frac, switch_at, churn));
+            }
+        }
+    }
+    let unit_points = GridRunner::from_env().run(&units, |&(drop_frac, switch_at, churn)| {
+        run_unit(&base, drop_frac, switch_at, churn)
+    })?;
+
     let mut table = Table::new(
         format!(
-            "Sweep — dropout × switch time × adaptive-vs-frozen (η, α̃), \
+            "Sweep — dropout × switch time × churn × adaptive-vs-frozen (η, α̃), \
              n={}, ring→exponential, seed {}",
             base.n_workers, base.seed
         ),
         &[
             "drop",
             "switch@",
+            "churn",
             "cons (frozen)",
             "cons (adaptive)",
             "#comm→target (frozen)",
@@ -138,104 +232,37 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<SweepPoint>, Vec<Table>)> {
             "adaptive no worse",
         ],
     );
-    for &drop_frac in &drops {
-        for &switch_at in &switches {
-            // Run the frozen arm first to fix the target loss; both arms
-            // share the seed, so their pre-switch trajectories (and the
-            // initial loss) are identical.
-            let mut per_arm: Vec<(bool, SimResult, Option<u64>, String)> = Vec::new();
-            let mut target = f64::NAN;
-            for adaptive in [false, true] {
-                let s = scenario_string(drop_frac, switch_at, adaptive);
-                let mut cfg = base.clone();
-                cfg.scenario = Some(Scenario::parse(&s)?);
-                if target.is_nan() {
-                    // Probe the initial loss from the first recorded
-                    // point of this arm's own run (recorded before any
-                    // parameter divergence can matter).
-                    let (res, _) = run_point(&cfg, f64::NEG_INFINITY)?;
-                    let first = res
-                        .recorder
-                        .get("train_loss")
-                        .and_then(|ser| ser.points.first().copied())
-                        .map(|(_, v)| v)
-                        .unwrap_or(f64::NAN);
-                    target = TARGET_LOSS_FRAC * first;
-                    let comms = res
-                        .recorder
-                        .get("train_loss")
-                        .and_then(|ser| ser.first_time_below(target))
-                        .and_then(|t| comms_at(&res.recorder, t));
-                    per_arm.push((adaptive, res, comms, s));
-                    continue;
-                }
-                let (res, comms) = run_point(&cfg, target)?;
-                per_arm.push((adaptive, res, comms, s));
-            }
-            for (adaptive, res, comms, s) in &per_arm {
-                points.push(SweepPoint {
-                    scenario: s.clone(),
-                    drop_frac,
-                    switch_at,
-                    adaptive: *adaptive,
-                    final_loss: res.final_loss(),
-                    final_consensus: res.final_consensus(),
-                    n_comms: res.n_comms,
-                    comms_to_target: *comms,
-                    eta_final: res.acid.eta,
-                    alpha_tilde_final: res.acid.alpha_tilde,
-                });
-            }
-            let frozen = &per_arm[0];
-            let adaptive = &per_arm[1];
-            let fmt_comms =
-                |c: &Option<u64>| c.map_or("never".to_string(), |v| v.to_string());
-            let no_worse = adaptive.1.final_consensus
-                <= frozen.1.final_consensus * 1.05 + 1e-3;
-            table.row(&[
-                format!("{drop_frac}"),
-                format!("{switch_at}"),
-                format!("{:.4}", frozen.1.final_consensus),
-                format!("{:.4}", adaptive.1.final_consensus),
-                fmt_comms(&frozen.2),
-                fmt_comms(&adaptive.2),
-                if no_worse { "yes".into() } else { "NO".into() },
-            ]);
-        }
+    let mut points = Vec::with_capacity(units.len() * 2);
+    for pair in unit_points {
+        let (frozen, adaptive) = (&pair[0], &pair[1]);
+        let fmt_comms =
+            |c: &Option<u64>| c.map_or("never".to_string(), |v| v.to_string());
+        let no_worse =
+            adaptive.final_consensus <= frozen.final_consensus * 1.05 + 1e-3;
+        table.row(&[
+            frozen.drop_frac.to_string(),
+            frozen.switch_at.to_string(),
+            if frozen.churn { "yes".into() } else { "no".into() },
+            format!("{:.4}", frozen.final_consensus),
+            format!("{:.4}", adaptive.final_consensus),
+            fmt_comms(&frozen.comms_to_target),
+            fmt_comms(&adaptive.comms_to_target),
+            if no_worse { "yes".into() } else { "NO".into() },
+        ]);
+        points.extend(pair);
     }
     Ok((points, vec![table]))
 }
 
-/// Write the machine-readable sweep rows (the `BENCH_sweep.json`
-/// artifact CI archives).
-pub fn write_json(points: &[SweepPoint], path: &Path) -> std::io::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "[")?;
-    for (i, p) in points.iter().enumerate() {
-        let comma = if i + 1 == points.len() { "" } else { "," };
-        let comms = p
-            .comms_to_target
-            .map_or("null".to_string(), |v| v.to_string());
-        writeln!(
-            f,
-            "  {{\"scenario\": \"{}\", \"drop\": {}, \"switch_at\": {}, \
-             \"adaptive\": {}, \"final_loss\": {:.6}, \"final_consensus\": {:.6}, \
-             \"n_comms\": {}, \"comms_to_target\": {}, \"eta_final\": {:.6}, \
-             \"alpha_tilde_final\": {:.6}}}{comma}",
-            p.scenario,
-            p.drop_frac,
-            p.switch_at,
-            p.adaptive,
-            p.final_loss,
-            p.final_consensus,
-            p.n_comms,
-            comms,
-            p.eta_final,
-            p.alpha_tilde_final,
-        )?;
-    }
-    writeln!(f, "]")?;
-    Ok(())
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (points, tables) = run(scale)?;
+    let records = points.iter().map(SweepPoint::record).collect();
+    let summary = Summary {
+        final_loss: points.last().map(|p| p.final_loss),
+        final_consensus: points.last().map(|p| p.final_consensus),
+        ..Summary::default()
+    };
+    Ok(Report { tables, records, summary })
 }
 
 #[cfg(test)]
@@ -245,13 +272,14 @@ mod tests {
     #[test]
     fn smoke_grid_adaptive_no_worse_on_every_point() {
         let (points, tables) = run(Scale::Quick).unwrap();
-        let (drops, switches) = grid(Scale::Quick);
-        assert_eq!(points.len(), 2 * drops.len() * switches.len());
+        let (drops, switches, churns) = grid(Scale::Quick);
+        assert_eq!(points.len(), 2 * drops.len() * switches.len() * churns.len());
         assert_eq!(tables.len(), 1);
         for pair in points.chunks(2) {
             let (frozen, adaptive) = (&pair[0], &pair[1]);
             assert!(!frozen.adaptive && adaptive.adaptive);
             assert_eq!(frozen.drop_frac, adaptive.drop_frac);
+            assert_eq!(frozen.churn, adaptive.churn);
             assert!(frozen.final_loss.is_finite() && adaptive.final_loss.is_finite());
             assert!(
                 frozen.final_consensus.is_finite() && adaptive.final_consensus.is_finite()
@@ -262,17 +290,19 @@ mod tests {
             // seed), so the slack only absorbs f32 accumulation noise.
             assert!(
                 adaptive.final_consensus <= frozen.final_consensus * 1.25 + 0.05,
-                "adaptive must not lose at drop={} switch={}: {} vs {}",
+                "adaptive must not lose at drop={} switch={} churn={}: {} vs {}",
                 adaptive.drop_frac,
                 adaptive.switch_at,
+                adaptive.churn,
                 adaptive.final_consensus,
                 frozen.final_consensus
             );
             assert!(
                 adaptive.final_loss <= frozen.final_loss * 1.25 + 0.05,
-                "adaptive loss regressed at drop={} switch={}",
+                "adaptive loss regressed at drop={} switch={} churn={}",
                 adaptive.drop_frac,
-                adaptive.switch_at
+                adaptive.switch_at,
+                adaptive.churn
             );
             // The frozen arm really is frozen: its final α̃ is phase-0's
             // ring-derived value (> ½); the adaptive arm ends on the
@@ -283,11 +313,26 @@ mod tests {
     }
 
     #[test]
+    fn churn_scenarios_round_trip_the_parser() {
+        for adaptive in [false, true] {
+            let s = scenario_string(0.2, 0.5, true, adaptive);
+            assert!(s.contains("leave=0.25:0.3:1"), "{s}");
+            assert!(s.contains("join=0.25:0.8"), "{s}");
+            let parsed = crate::config::Scenario::parse(&s).unwrap();
+            assert_eq!(parsed.churn.len(), 2);
+            assert_eq!(parsed.adaptive, adaptive);
+        }
+    }
+
+    #[test]
     fn json_rows_render() {
+        // The artifact path: SweepPoint::record rows rendered by the
+        // registry through metrics::render_records.
         let p = SweepPoint {
-            scenario: scenario_string(0.2, 0.5, false),
+            scenario: scenario_string(0.2, 0.5, true, false),
             drop_frac: 0.2,
             switch_at: 0.5,
+            churn: true,
             adaptive: false,
             final_loss: 1.25,
             final_consensus: 0.5,
@@ -296,12 +341,11 @@ mod tests {
             eta_final: 0.3,
             alpha_tilde_final: 0.9,
         };
-        let dir = std::env::temp_dir().join("a2cid2_sweep_test.json");
-        write_json(&[p], &dir).unwrap();
-        let text = std::fs::read_to_string(&dir).unwrap();
+        let text = crate::metrics::render_records(&[p.record()]);
         assert!(text.contains("\"comms_to_target\": null"));
+        assert!(text.contains("\"churn\": true"));
         assert!(text.contains("adapt=0"));
+        assert!(text.contains("leave=0.25"));
         assert!(text.trim_start().starts_with('['));
-        let _ = std::fs::remove_file(&dir);
     }
 }

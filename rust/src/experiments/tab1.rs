@@ -8,8 +8,9 @@
 //!    distance contracts at rate ~1/χ₁ for plain randomized gossip and
 //!    ~1/√(χ₁χ₂) with the continuous momentum ([12]'s accelerated
 //!    randomized gossip, which A²CiD² embeds). We measure the time for
-//!    ‖πx‖² to drop by 100× — the baseline/A²CiD² time ratio should grow
-//!    like √(χ₁/χ₂) ≈ Θ(√n).
+//!    ‖πx‖² to drop by 100× (the shared [`common::gossip_decay_time`]
+//!    probe, mean ± std over the scale's seeds) — the baseline/A²CiD²
+//!    time ratio should grow like √(χ₁/χ₂) ≈ Θ(√n).
 //! 2. **Heterogeneous-SGD consensus plateau** — with per-worker optima
 //!    perturbed (ζ² > 0) and a fixed step size, the stationary consensus
 //!    error grows with the same χ factors (this is the ζ²(1+χ) term in
@@ -19,72 +20,26 @@ use crate::data::LinearRegression;
 use crate::gossip::dynamics::{comm_event, WorkerState};
 use crate::gossip::{consensus_distance_sq, AcidParams, Mixer};
 use crate::graph::{Graph, Topology};
-use crate::metrics::Table;
+use crate::metrics::{Record, Stats, Table};
 use crate::model::{Model, Quadratic};
 use crate::rng::{standard_normal, Xoshiro256};
 use crate::simulator::{EventKind, EventQueue};
 use crate::util::two_mut;
 
-use super::common::Scale;
+use super::common::{self, aggregate_seeds, GridRunner, Scale};
+use super::{Report, Summary};
 
 /// One (n) measurement.
 pub struct Tab1Row {
     pub n: usize,
     pub chi1: f64,
     pub chi_acc: f64,
-    /// Time for gossip-only consensus to contract 100×.
-    pub baseline_decay_t: f64,
-    pub acid_decay_t: f64,
+    /// Time for gossip-only consensus to contract 100× (± over seeds).
+    pub baseline_decay_t: Stats,
+    pub acid_decay_t: Stats,
     /// Stationary consensus error under heterogeneous local SGD.
     pub baseline_plateau: f64,
     pub acid_plateau: f64,
-}
-
-/// Gossip-only: random initial x, communications at rate 1/worker, no
-/// gradients. Returns the time at which ‖πx‖² first drops below
-/// `target_frac` of its initial value.
-fn gossip_decay_time(n: usize, accelerated: bool, target_frac: f64, seed: u64) -> crate::Result<f64> {
-    let dim = 32;
-    let graph = Graph::build(&Topology::Ring, n)?;
-    let rates = graph.edge_rates(1.0);
-    let spectrum = graph.spectrum_with_rates(&rates);
-    let acid = if accelerated {
-        AcidParams::from_spectrum(&spectrum)
-    } else {
-        AcidParams::baseline()
-    };
-    let mixer = Mixer::new(acid.eta);
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut workers: Vec<WorkerState> = (0..n)
-        .map(|_| {
-            WorkerState::new((0..dim).map(|_| standard_normal(&mut rng) as f32).collect())
-        })
-        .collect();
-    let start = consensus_distance_sq(&workers);
-    let target = start * target_frac;
-    // No gradient events: near-zero worker rates.
-    let mut queue = EventQueue::new(&vec![1e-12; n], &rates, seed ^ 0xFEED);
-    let horizon = 200.0 * n as f64; // generous upper bound
-    let mut check_at = 0.25f64;
-    while let Some(ev) = queue.next(horizon) {
-        if let EventKind::Comm { edge } = ev.kind {
-            let (i, j) = graph.edges[edge];
-            let (a, b) = two_mut(&mut workers, i, j);
-            comm_event(a, b, ev.t, &acid, &mixer);
-        }
-        if ev.t >= check_at {
-            check_at = ev.t + 0.25;
-            // Sync to a common time before measuring (lazy mixing).
-            let mut snap = workers.clone();
-            for w in &mut snap {
-                w.mix_to(ev.t, &mixer);
-            }
-            if consensus_distance_sq(&snap) < target {
-                return Ok(ev.t);
-            }
-        }
-    }
-    Ok(horizon)
 }
 
 /// Heterogeneous-SGD consensus plateau: each worker's quadratic optimum is
@@ -198,6 +153,12 @@ fn build_local_models(n: usize, dim: usize, hetero: f64, seed: u64) -> Vec<Quadr
         .collect()
 }
 
+/// The theory-prescribed parameters on the ring at rate 1.
+fn ring_acid_params(n: usize) -> crate::Result<AcidParams> {
+    let graph = Graph::build(&Topology::Ring, n)?;
+    Ok(AcidParams::from_spectrum(&graph.spectrum_with_rates(&graph.edge_rates(1.0))))
+}
+
 pub fn run(scale: Scale) -> crate::Result<(Vec<Tab1Row>, Vec<Table>)> {
     let grid: Vec<usize> = match scale {
         Scale::Quick => vec![8, 16, 32],
@@ -208,8 +169,29 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab1Row>, Vec<Table>)> {
         Scale::Full => 400.0,
     };
     let gamma = 0.05f32;
+    let seeds = scale.seeds();
 
-    let mut rows = Vec::new();
+    let rows = GridRunner::from_env().run(&grid, |&n| {
+        let acid = ring_acid_params(n)?;
+        let baseline_decay_t = aggregate_seeds(&seeds, |s| {
+            common::gossip_decay_time(n, &AcidParams::baseline(), 1e-2, s ^ 7)
+        })?;
+        let acid_decay_t =
+            aggregate_seeds(&seeds, |s| common::gossip_decay_time(n, &acid, 1e-2, s ^ 7))?;
+        let (baseline_plateau, chi1, chi_acc) =
+            sgd_consensus_plateau(n, false, gamma, horizon, 7)?;
+        let (acid_plateau, _, _) = sgd_consensus_plateau(n, true, gamma, horizon, 7)?;
+        Ok(Tab1Row {
+            n,
+            chi1,
+            chi_acc,
+            baseline_decay_t,
+            acid_decay_t,
+            baseline_plateau,
+            acid_plateau,
+        })
+    })?;
+
     let mut table = Table::new(
         "Tab.1 — network-factor scaling on the ring (paper: chi1 vs sqrt(chi1*chi2))",
         &[
@@ -224,45 +206,66 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab1Row>, Vec<Table>)> {
             "acid",
         ],
     );
-    for &n in &grid {
-        let bd = gossip_decay_time(n, false, 1e-2, 7)?;
-        let ad = gossip_decay_time(n, true, 1e-2, 7)?;
-        let (bp, chi1, chi_acc) = sgd_consensus_plateau(n, false, gamma, horizon, 7)?;
-        let (ap, _, _) = sgd_consensus_plateau(n, true, gamma, horizon, 7)?;
-        let chi2 = chi_acc * chi_acc / chi1;
+    for row in &rows {
+        let chi2 = row.chi_acc * row.chi_acc / row.chi1;
         table.row(&[
-            n.to_string(),
-            format!("{chi1:.1}"),
-            format!("{chi_acc:.1}"),
-            format!("{bd:.1}"),
-            format!("{ad:.1}"),
-            format!("{:.2}", bd / ad),
-            format!("{:.2}", (chi1 / chi2).sqrt()),
-            format!("{bp:.4}"),
-            format!("{ap:.4}"),
+            row.n.to_string(),
+            format!("{:.1}", row.chi1),
+            format!("{:.1}", row.chi_acc),
+            row.baseline_decay_t.pm(1),
+            row.acid_decay_t.pm(1),
+            format!("{:.2}", row.baseline_decay_t.mean / row.acid_decay_t.mean),
+            format!("{:.2}", (row.chi1 / chi2).sqrt()),
+            format!("{:.4}", row.baseline_plateau),
+            format!("{:.4}", row.acid_plateau),
         ]);
-        rows.push(Tab1Row {
-            n,
-            chi1,
-            chi_acc,
-            baseline_decay_t: bd,
-            acid_decay_t: ad,
-            baseline_plateau: bp,
-            acid_plateau: ap,
-        });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .u64("n", r.n as u64)
+                .f64("chi1", r.chi1)
+                .f64("chi_acc", r.chi_acc)
+                .f64("baseline_decay_t", r.baseline_decay_t.mean)
+                .f64("baseline_decay_t_std", r.baseline_decay_t.std)
+                .f64("acid_decay_t", r.acid_decay_t.mean)
+                .f64("acid_decay_t_std", r.acid_decay_t.std)
+                .f64("decay_ratio", r.baseline_decay_t.mean / r.acid_decay_t.mean)
+                .f64("baseline_plateau", r.baseline_plateau)
+                .f64("acid_plateau", r.acid_plateau)
+        })
+        .collect();
+    let summary = Summary {
+        final_consensus: rows.last().map(|r| r.acid_plateau),
+        ..Summary::default()
+    };
+    Ok(Report { tables, records, summary })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn decay(n: usize, accelerated: bool, seed: u64) -> f64 {
+        let params = if accelerated {
+            ring_acid_params(n).unwrap()
+        } else {
+            AcidParams::baseline()
+        };
+        common::gossip_decay_time(n, &params, 1e-2, seed).unwrap()
+    }
+
     #[test]
     fn acid_gossip_decays_faster_at_scale() {
         // The core acceleration claim at the largest quick-ring.
-        let bd = gossip_decay_time(32, false, 1e-2, 3).unwrap();
-        let ad = gossip_decay_time(32, true, 1e-2, 3).unwrap();
+        let bd = decay(32, false, 3);
+        let ad = decay(32, true, 3);
         assert!(
             ad < bd,
             "acid decay {ad} should beat baseline {bd} on ring-32"
@@ -271,16 +274,8 @@ mod tests {
 
     #[test]
     fn decay_advantage_grows_with_n() {
-        let r8 = {
-            let b = gossip_decay_time(8, false, 1e-2, 5).unwrap();
-            let a = gossip_decay_time(8, true, 1e-2, 5).unwrap();
-            b / a
-        };
-        let r32 = {
-            let b = gossip_decay_time(32, false, 1e-2, 5).unwrap();
-            let a = gossip_decay_time(32, true, 1e-2, 5).unwrap();
-            b / a
-        };
+        let r8 = decay(8, false, 5) / decay(8, true, 5);
+        let r32 = decay(32, false, 5) / decay(32, true, 5);
         assert!(
             r32 > r8,
             "speedup should grow with n: ring8 {r8:.2} vs ring32 {r32:.2}"

@@ -11,9 +11,10 @@
 
 use crate::graph::{Graph, Topology};
 use crate::linalg::{sym_eig, Matrix};
-use crate::metrics::Table;
+use crate::metrics::{Record, Table};
 
-use super::common::Scale;
+use super::common::{GridRunner, Scale};
+use super::Report;
 
 /// Metropolis-weights gossip matrix (symmetric, doubly stochastic).
 fn metropolis_laplacian(g: &Graph) -> (Matrix, Vec<f64>) {
@@ -67,7 +68,15 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab2Row>, Vec<Table>)> {
         Scale::Quick => vec![16, 32],
         Scale::Full => vec![16, 32, 64, 128],
     };
-    let mut rows = Vec::new();
+    let mut points = Vec::new();
+    for topo in [Topology::Star, Topology::Ring, Topology::Complete] {
+        for &n in &grid {
+            points.push((topo.clone(), n));
+        }
+    }
+    // The eigensolves dominate (O(n³) per point at n = 128): fan the
+    // (topology × n) grid across the runner pool.
+    let rows = GridRunner::from_env().run(&points, |(topo, n)| compute_row(topo, *n))?;
     let mut table = Table::new(
         "Tab.2 — #communications per step/time-unit for connectivity-independent convergence",
         &[
@@ -79,21 +88,34 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab2Row>, Vec<Table>)> {
             "paper ours",
         ],
     );
-    for topo in [Topology::Star, Topology::Ring, Topology::Complete] {
-        for &n in &grid {
-            let row = compute_row(&topo, n)?;
-            table.row(&[
-                row.topology.into(),
-                n.to_string(),
-                format!("{:.0}", row.sync_comms),
-                format!("{:.0}", row.ours_comms),
-                row.paper_sync.into(),
-                row.paper_ours.into(),
-            ]);
-            rows.push(row);
-        }
+    for row in &rows {
+        table.row(&[
+            row.topology.into(),
+            row.n.to_string(),
+            format!("{:.0}", row.sync_comms),
+            format!("{:.0}", row.ours_comms),
+            row.paper_sync.into(),
+            row.paper_ours.into(),
+        ]);
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .str("topology", r.topology)
+                .u64("n", r.n as u64)
+                .f64("sync_comms", r.sync_comms)
+                .f64("ours_comms", r.ours_comms)
+                .str("paper_sync", r.paper_sync)
+                .str("paper_ours", r.paper_ours)
+        })
+        .collect();
+    Ok(Report { tables, records, summary: Default::default() })
 }
 
 #[cfg(test)]

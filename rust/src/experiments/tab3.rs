@@ -6,9 +6,10 @@
 
 use crate::config::{Method, Task};
 use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::metrics::{Record, Table};
 
-use super::common::{base_config, train_once, Scale};
+use super::common::{base_config, run_grid, GridPoint, Scale};
+use super::{Report, Summary};
 
 pub struct Tab3Row {
     pub n: usize,
@@ -27,19 +28,28 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab3Row>, Vec<Table>)> {
         Scale::Full => 12_800,
     };
 
+    // One flat declared grid: (n × {async, AR}) in declaration order.
+    let grid = scale.n_grid();
+    let mut points = Vec::with_capacity(grid.len() * 2);
+    for &n in &grid {
+        for method in [Method::AsyncBaseline, Method::AllReduce] {
+            let mut c = cfg.clone();
+            c.n_workers = n;
+            c.steps_per_worker = (total_steps / n as u64).max(10);
+            c.method = method;
+            points.push(GridPoint::new(c, cfg.seed));
+        }
+    }
+    let outs = run_grid(&points)?;
+
     let mut rows = Vec::new();
     let mut table = Table::new(
         "Tab.3 — training time (virtual units) vs n, fixed total samples (paper: ours < AR, both ~1/n)",
         &["n", "ours t", "AR t", "speedup", "paper ours (min)", "paper AR (min)"],
     );
     let paper = [(4usize, 20.9, 21.9), (8, 10.5, 11.1), (16, 5.2, 6.6), (32, 2.7, 3.2), (64, 1.5, 1.8)];
-    for n in scale.n_grid() {
-        cfg.n_workers = n;
-        cfg.steps_per_worker = (total_steps / n as u64).max(10);
-        cfg.method = Method::AsyncBaseline;
-        let ours = train_once(&cfg)?;
-        cfg.method = Method::AllReduce;
-        let ar = train_once(&cfg)?;
+    for (&n, pair) in grid.iter().zip(outs.chunks(2)) {
+        let (ours, ar) = (&pair[0], &pair[1]);
         let (po, pa) = paper
             .iter()
             .find(|(pn, _, _)| *pn == n)
@@ -56,6 +66,21 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab3Row>, Vec<Table>)> {
         rows.push(Tab3Row { n, async_time: ours.t_end, ar_time: ar.t_end });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .u64("n", r.n as u64)
+                .f64("async_time", r.async_time)
+                .f64("ar_time", r.ar_time)
+                .f64("speedup", r.ar_time / r.async_time)
+        })
+        .collect();
+    Ok(Report { tables, records, summary: Summary::default() })
 }
 
 #[cfg(test)]

@@ -7,16 +7,58 @@
 
 use crate::config::{Method, Task};
 use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::metrics::{Record, Stats, Table};
 
-use super::common::{base_config, over_seeds, Scale};
+use super::common::{base_config, set_workers, variant_grid_cells, Scale};
+use super::{Report, Summary};
 
-pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
-    let mut cfg = base_config(scale);
-    cfg.task = Task::CifarLike;
-    cfg.comm_rate = 1.0;
+fn variants() -> Vec<(String, Topology, Method)> {
+    vec![
+        ("AR-SGD".into(), Topology::Complete, Method::AllReduce),
+        ("complete / baseline".into(), Topology::Complete, Method::AsyncBaseline),
+        ("exponential / baseline".into(), Topology::Exponential, Method::AsyncBaseline),
+        ("exponential / A2CiD2".into(), Topology::Exponential, Method::Acid),
+        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline),
+        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid),
+    ]
+}
 
+/// Variant label → one accuracy cell per grid n.
+type AccuracyRows = Vec<(String, Vec<Stats>)>;
+
+/// Run the full (variant × n) grid; cells aggregate accuracy over the
+/// scale's seeds. Returned in declaration order, variant-major.
+fn accuracy_grid(scale: Scale) -> crate::Result<(Vec<usize>, AccuracyRows)> {
+    let cfg = {
+        let mut c = base_config(scale);
+        c.task = Task::CifarLike;
+        c.comm_rate = 1.0;
+        c
+    };
     let grid = scale.n_grid();
+    let variants = variants();
+    let cells = variant_grid_cells(
+        &variants,
+        &grid,
+        &scale.seeds(),
+        |(_, topo, method), n| {
+            let mut c = cfg.clone();
+            set_workers(&mut c, n, scale);
+            c.topology = topo.clone();
+            c.method = *method;
+            c
+        },
+        |o| 100.0 * o.accuracy.unwrap_or(f64::NAN),
+    )?;
+    let rows = variants
+        .into_iter()
+        .zip(cells.chunks(grid.len()))
+        .map(|((name, _, _), row)| (name, row.to_vec()))
+        .collect();
+    Ok((grid, rows))
+}
+
+fn tables_from(grid: &[usize], rows: &[(String, Vec<Stats>)]) -> Vec<Table> {
     let mut header: Vec<String> = vec!["variant".into()];
     header.extend(grid.iter().map(|n| format!("n={n}")));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
@@ -24,27 +66,39 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         "Tab.4 — CIFAR-like held-out accuracy (mean±std over seeds)",
         &header_refs,
     );
-
-    let variants: Vec<(String, Topology, Method)> = vec![
-        ("AR-SGD".into(), Topology::Complete, Method::AllReduce),
-        ("complete / baseline".into(), Topology::Complete, Method::AsyncBaseline),
-        ("exponential / baseline".into(), Topology::Exponential, Method::AsyncBaseline),
-        ("exponential / A2CiD2".into(), Topology::Exponential, Method::Acid),
-        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline),
-        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid),
-    ];
-    for (name, topo, method) in variants {
-        let mut cells = vec![name];
-        for &n in &grid {
-            super::common::set_workers(&mut cfg, n, scale);
-            cfg.topology = topo.clone();
-            cfg.method = method;
-            let stats = over_seeds(scale, &cfg, |o| 100.0 * o.accuracy.unwrap_or(f64::NAN))?;
-            cells.push(stats.pm(1));
-        }
-        table.row(&cells);
+    for (name, cells) in rows {
+        let mut row = vec![name.clone()];
+        row.extend(cells.iter().map(|s| s.pm(1)));
+        table.row(&row);
     }
-    Ok(vec![table])
+    vec![table]
+}
+
+pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
+    let (grid, rows) = accuracy_grid(scale)?;
+    Ok(tables_from(&grid, &rows))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (grid, rows) = accuracy_grid(scale)?;
+    let mut records = Vec::new();
+    for (name, cells) in &rows {
+        for (&n, stats) in grid.iter().zip(cells) {
+            records.push(
+                Record::new()
+                    .str("variant", name.clone())
+                    .u64("n", n as u64)
+                    .f64("accuracy", stats.mean)
+                    .f64("accuracy_std", stats.std),
+            );
+        }
+    }
+    let summary = Summary {
+        // Headline: ring / A2CiD2 at the largest n.
+        accuracy: rows.last().and_then(|(_, cells)| cells.last()).map(|s| s.mean),
+        ..Summary::default()
+    };
+    Ok(Report { tables: tables_from(&grid, &rows), records, summary })
 }
 
 #[cfg(test)]

@@ -8,19 +8,66 @@
 
 use crate::config::{Method, Task};
 use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::metrics::{Record, Stats, Table};
 
-use super::common::{base_config, over_seeds, Scale};
+use super::common::{base_config, set_workers, variant_grid_cells, Scale};
+use super::{Report, Summary};
 
-pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
-    let mut cfg = base_config(scale);
-    cfg.task = Task::ImagenetLike;
-    cfg.dataset_size = 8192;
+fn variants() -> Vec<(String, Topology, Method, f64)> {
+    vec![
+        ("AR-SGD".into(), Topology::Complete, Method::AllReduce, 0.0),
+        ("complete / baseline".into(), Topology::Complete, Method::AsyncBaseline, 1.0),
+        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline, 1.0),
+        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid, 1.0),
+        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline, 2.0),
+        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid, 2.0),
+    ]
+}
 
-    let grid: Vec<usize> = match scale {
+fn n_grid(scale: Scale) -> Vec<usize> {
+    match scale {
         Scale::Quick => vec![8, 16],
         Scale::Full => vec![16, 32, 64],
+    }
+}
+
+/// Variant label + rate → one accuracy cell per grid n.
+type AccuracyRows = Vec<(String, f64, Vec<Stats>)>;
+
+/// (variant × n) accuracy cells, aggregated over the scale's seeds, in
+/// declaration order (variant-major).
+fn accuracy_grid(scale: Scale) -> crate::Result<(Vec<usize>, AccuracyRows)> {
+    let cfg = {
+        let mut c = base_config(scale);
+        c.task = Task::ImagenetLike;
+        c.dataset_size = 8192;
+        c
     };
+    let grid = n_grid(scale);
+    let variants = variants();
+    let cells = variant_grid_cells(
+        &variants,
+        &grid,
+        &scale.seeds(),
+        |(_, topo, method, rate), n| {
+            let mut c = cfg.clone();
+            set_workers(&mut c, n, scale);
+            c.topology = topo.clone();
+            c.method = *method;
+            c.comm_rate = if *rate == 0.0 { 1.0 } else { *rate };
+            c
+        },
+        |o| 100.0 * o.accuracy.unwrap_or(f64::NAN),
+    )?;
+    let rows = variants
+        .into_iter()
+        .zip(cells.chunks(grid.len()))
+        .map(|((name, _, _, rate), row)| (name, rate, row.to_vec()))
+        .collect();
+    Ok((grid, rows))
+}
+
+fn tables_from(grid: &[usize], rows: &[(String, f64, Vec<Stats>)]) -> Vec<Table> {
     let mut header: Vec<String> = vec!["variant".into(), "com/grad".into()];
     header.extend(grid.iter().map(|n| format!("n={n}")));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
@@ -28,31 +75,43 @@ pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
         "Tab.5 — ImageNet-like held-out accuracy (paper: ring degrades; A2CiD2 + rate recover)",
         &header_refs,
     );
-
-    let variants: Vec<(String, Topology, Method, f64)> = vec![
-        ("AR-SGD".into(), Topology::Complete, Method::AllReduce, 0.0),
-        ("complete / baseline".into(), Topology::Complete, Method::AsyncBaseline, 1.0),
-        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline, 1.0),
-        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid, 1.0),
-        ("ring / baseline".into(), Topology::Ring, Method::AsyncBaseline, 2.0),
-        ("ring / A2CiD2".into(), Topology::Ring, Method::Acid, 2.0),
-    ];
-    for (name, topo, method, rate) in variants {
-        let mut cells = vec![
-            name,
-            if method == Method::AllReduce { "-".into() } else { format!("{rate}") },
+    for (name, rate, cells) in rows {
+        let mut row = vec![
+            name.clone(),
+            if *rate == 0.0 { "-".into() } else { format!("{rate}") },
         ];
-        for &n in &grid {
-            super::common::set_workers(&mut cfg, n, scale);
-            cfg.topology = topo.clone();
-            cfg.method = method;
-            cfg.comm_rate = if rate == 0.0 { 1.0 } else { rate };
-            let stats = over_seeds(scale, &cfg, |o| 100.0 * o.accuracy.unwrap_or(f64::NAN))?;
-            cells.push(stats.pm(1));
-        }
-        table.row(&cells);
+        row.extend(cells.iter().map(|s| s.pm(1)));
+        table.row(&row);
     }
-    Ok(vec![table])
+    vec![table]
+}
+
+pub fn run(scale: Scale) -> crate::Result<Vec<Table>> {
+    let (grid, rows) = accuracy_grid(scale)?;
+    Ok(tables_from(&grid, &rows))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (grid, rows) = accuracy_grid(scale)?;
+    let mut records = Vec::new();
+    for (name, rate, cells) in &rows {
+        for (&n, stats) in grid.iter().zip(cells) {
+            records.push(
+                Record::new()
+                    .str("variant", name.clone())
+                    .f64("comm_rate", if *rate == 0.0 { 1.0 } else { *rate })
+                    .u64("n", n as u64)
+                    .f64("accuracy", stats.mean)
+                    .f64("accuracy_std", stats.std),
+            );
+        }
+    }
+    let summary = Summary {
+        // Headline: ring / A2CiD2 @ rate 2 at the largest n.
+        accuracy: rows.last().and_then(|(_, _, cells)| cells.last()).map(|s| s.mean),
+        ..Summary::default()
+    };
+    Ok(Report { tables: tables_from(&grid, &rows), records, summary })
 }
 
 #[cfg(test)]

@@ -8,9 +8,10 @@
 
 use crate::config::{Method, Task};
 use crate::graph::Topology;
-use crate::metrics::Table;
+use crate::metrics::{Record, Table};
 
-use super::common::{base_config, train_once, Scale};
+use super::common::{base_config, run_grid, GridPoint, Scale};
+use super::{Report, Summary};
 
 pub struct Tab6Row {
     pub method: &'static str,
@@ -19,12 +20,28 @@ pub struct Tab6Row {
     pub grad_max: u64,
 }
 
+const VARIANTS: [(&str, Method, &str); 3] = [
+    ("AR-SGD", Method::AllReduce, "170 min / 14k,14k"),
+    ("baseline (ours)", Method::AsyncBaseline, "150 min / 13k,14k"),
+    ("A2CiD2 (ours)", Method::Acid, "150 min / 13k,14k"),
+];
+
 pub fn run(scale: Scale) -> crate::Result<(Vec<Tab6Row>, Vec<Table>)> {
     let mut cfg = base_config(scale);
     cfg.topology = Topology::Exponential;
     cfg.task = Task::CifarLike;
     super::common::set_workers(&mut cfg, scale.n_max(), scale);
     cfg.compute_jitter = 0.1;
+
+    let points: Vec<GridPoint> = VARIANTS
+        .iter()
+        .map(|&(_, method, _)| {
+            let mut c = cfg.clone();
+            c.method = method;
+            GridPoint::new(c, cfg.seed)
+        })
+        .collect();
+    let outs = run_grid(&points)?;
 
     let mut rows = Vec::new();
     let mut table = Table::new(
@@ -34,26 +51,34 @@ pub fn run(scale: Scale) -> crate::Result<(Vec<Tab6Row>, Vec<Table>)> {
         ),
         &["method", "t (virtual)", "#grad slowest", "#grad fastest", "paper t / #grads"],
     );
-    let variants: [(&'static str, Method, &str); 3] = [
-        ("AR-SGD", Method::AllReduce, "170 min / 14k,14k"),
-        ("baseline (ours)", Method::AsyncBaseline, "150 min / 13k,14k"),
-        ("A2CiD2 (ours)", Method::Acid, "150 min / 13k,14k"),
-    ];
-    for (name, method, paper) in variants {
-        cfg.method = method;
-        let out = train_once(&cfg)?;
+    for ((name, _, paper), out) in VARIANTS.iter().zip(&outs) {
         let min = *out.grads_per_worker.iter().min().unwrap();
         let max = *out.grads_per_worker.iter().max().unwrap();
         table.row(&[
-            name.into(),
+            (*name).into(),
             format!("{:.1}", out.t_end),
             min.to_string(),
             max.to_string(),
-            paper.into(),
+            (*paper).into(),
         ]);
-        rows.push(Tab6Row { method: name, t: out.t_end, grad_min: min, grad_max: max });
+        rows.push(Tab6Row { method: *name, t: out.t_end, grad_min: min, grad_max: max });
     }
     Ok((rows, vec![table]))
+}
+
+pub fn report(scale: Scale) -> crate::Result<Report> {
+    let (rows, tables) = run(scale)?;
+    let records = rows
+        .iter()
+        .map(|r| {
+            Record::new()
+                .str("method", r.method)
+                .f64("t_virtual", r.t)
+                .u64("grad_min", r.grad_min)
+                .u64("grad_max", r.grad_max)
+        })
+        .collect();
+    Ok(Report { tables, records, summary: Summary::default() })
 }
 
 #[cfg(test)]

@@ -3,14 +3,19 @@
 //! ```text
 //! a2cid2 train       [--config cfg.toml] [--workers N] [--topology T] ...
 //! a2cid2 spectrum    --topology ring --workers 64 [--rate 1.0]
-//! a2cid2 experiment  <fig1..fig7|tab1..tab6|all>
+//! a2cid2 experiment  <id|all> [--filter SUBSTR] [--json PATH]
 //! a2cid2 timeline    [--workers 8] [--rounds 20]
 //! a2cid2 replay      [--scenario S] [--dim D] [--out trace.csv]   # determinism probe
 //! ```
+//!
+//! Experiments resolve through the registry
+//! (`a2cid2::experiments::registry`): `experiment all` runs every
+//! registered id, `--filter` narrows by substring, and `--json` writes
+//! the consolidated per-experiment artifact (`BENCH_experiments.json`).
 
 use a2cid2::cli::Cli;
 use a2cid2::config::{ExperimentConfig, Method, Scenario, Task};
-use a2cid2::experiments::{self, Scale};
+use a2cid2::experiments::{registry, Scale};
 use a2cid2::graph::{Graph, Topology};
 use a2cid2::metrics::Table;
 
@@ -40,6 +45,12 @@ fn cli() -> Cli {
         .opt("rounds", "timeline rounds", Some("20"))
         .opt("dim", "replay: feature dimension of the synthetic model", Some("16"))
         .opt("out", "CSV output path for curves", None)
+        .opt("filter", "experiment all: only run ids containing SUBSTR", None)
+        .opt(
+            "json",
+            "experiment: write the consolidated per-experiment JSON artifact to PATH",
+            None,
+        )
         .flag("full", "run experiments at paper scale (same as A2CID2_BENCH_FULL=1)")
 }
 
@@ -48,11 +59,19 @@ fn real_main() -> a2cid2::Result<()> {
     let spec = cli();
     if argv.is_empty() {
         println!("{}", spec.usage());
-        println!("Subcommands: train | spectrum | experiment <id|all> | timeline");
+        println!(
+            "Subcommands: train | spectrum | \
+             experiment <id|all> [--filter SUBSTR] [--json PATH] | timeline | replay"
+        );
         return Ok(());
     }
     let args = spec.parse(&argv)?;
-    let scale = if args.has_flag("full") { Scale::Full } else { Scale::from_env() };
+    if args.has_flag("full") {
+        // Pin before anything resolves the env-selected scale; the
+        // registry's cell is THE one `Scale::from_env` call site.
+        let _ = registry::force_scale(Scale::Full);
+    }
+    let scale = registry::scale();
 
     match args.command.as_deref() {
         Some("train") => {
@@ -66,7 +85,7 @@ fn real_main() -> a2cid2::Result<()> {
                 cfg.comm_rate,
                 cfg.steps_per_worker
             );
-            let out = experiments::train_once(&cfg)?;
+            let out = a2cid2::experiments::train_once(&cfg)?;
             let mut table = Table::new("result", &["metric", "value"]);
             table.row(&["final train loss".into(), format!("{:.4}", out.final_loss)]);
             if let Some(acc) = out.accuracy {
@@ -121,7 +140,12 @@ fn real_main() -> a2cid2::Result<()> {
                         "experiment needs an id (fig1..fig7, tab1..tab6, ablation, scenario, sweep, all)"
                     )
                 })?;
-            run_experiments(id, scale)?;
+            registry::run_cli(
+                id,
+                args.get("filter"),
+                args.get("json").map(std::path::Path::new),
+                scale,
+            )?;
         }
         Some("replay") => {
             // Determinism probe: run a seeded scenario on a synthetic
@@ -210,47 +234,3 @@ fn build_config(args: &a2cid2::cli::Args) -> a2cid2::Result<ExperimentConfig> {
     cfg.validate()
 }
 
-fn run_experiments(id: &str, scale: Scale) -> a2cid2::Result<()> {
-    let print_all = |tables: Vec<Table>| {
-        for t in tables {
-            t.print();
-        }
-    };
-    let ids: Vec<&str> = if id == "all" {
-        vec![
-            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2", "tab3",
-            "tab4", "tab5", "tab6", "ablation", "scenario", "sweep",
-        ]
-    } else {
-        vec![id]
-    };
-    for id in ids {
-        println!("=== {id} ===");
-        match id {
-            "fig1" => print_all(experiments::fig1::run(scale)?.1),
-            "fig2" => print_all(experiments::fig2::run(scale)?),
-            "fig3" => print_all(experiments::fig3::run(scale)?),
-            "fig4" => print_all(experiments::fig4::run(scale)?.1),
-            "fig5" => print_all(experiments::fig5::run(scale)?.1),
-            "fig6" => print_all(experiments::fig6::run(scale)?),
-            "fig7" => print_all(experiments::fig7::run(scale)?),
-            "tab1" => print_all(experiments::tab1::run(scale)?.1),
-            "tab2" => print_all(experiments::tab2::run(scale)?.1),
-            "tab3" => print_all(experiments::tab3::run(scale)?.1),
-            "tab4" => print_all(experiments::tab4::run(scale)?),
-            "tab5" => print_all(experiments::tab5::run(scale)?),
-            "tab6" => print_all(experiments::tab6::run(scale)?.1),
-            "ablation" => print_all(experiments::ablation::run(scale)?.1),
-            "scenario" => print_all(experiments::scenario::run(scale)?.1),
-            "sweep" => {
-                let (points, tables) = experiments::sweep::run(scale)?;
-                print_all(tables);
-                let path = std::path::Path::new("BENCH_sweep.json");
-                experiments::sweep::write_json(&points, path)?;
-                println!("wrote {} ({} rows)", path.display(), points.len());
-            }
-            other => anyhow::bail!("unknown experiment '{other}'"),
-        }
-    }
-    Ok(())
-}

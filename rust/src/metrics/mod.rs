@@ -1,7 +1,10 @@
-//! Metrics recording: time-series, summary statistics, CSV output.
+//! Metrics recording: time-series, summary statistics, CSV output, and
+//! the typed JSON [`Record`]s the experiment registry emits.
 //!
-//! No serde offline, so serialization is plain hand-rolled CSV — which is
-//! also what the paper-figure regeneration scripts consume.
+//! No serde offline, so serialization is hand-rolled: long-format CSV for
+//! curves (what the paper-figure regeneration scripts consume) and a
+//! minimal JSON writer for machine-readable experiment artifacts
+//! (`BENCH_experiments.json`, `BENCH_sweep.json`).
 
 use std::io::Write;
 use std::path::Path;
@@ -215,6 +218,167 @@ impl Table {
     pub fn print(&self) {
         println!("{}", self.render());
     }
+
+    /// Bridge the human table into typed [`Record`]s: one record per row,
+    /// keyed by the column headers (plus a `table` field carrying the
+    /// title), with cells that parse as numbers emitted as numbers. This
+    /// is how experiments without a hand-written record set still produce
+    /// machine-readable rows for `BENCH_experiments.json`.
+    pub fn to_records(&self) -> Vec<Record> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut rec = Record::new().str("table", self.title.clone());
+                for (header, cell) in self.header.iter().zip(row) {
+                    let value = match cell.parse::<f64>() {
+                        Ok(v) => Value::F64(v),
+                        Err(_) => Value::Str(cell.clone()),
+                    };
+                    rec = rec.field(header.clone(), value);
+                }
+                rec
+            })
+            .collect()
+    }
+}
+
+/// A typed, serde-free JSON value. Only what the experiment artifacts
+/// need: scalars, strings, null, and nested record arrays.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    U64(u64),
+    F64(f64),
+    Str(String),
+    /// A nested array of records (e.g. the consolidated artifact's
+    /// per-experiment row sets).
+    Records(Vec<Record>),
+}
+
+impl Value {
+    fn render(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::U64(v) => out.push_str(&v.to_string()),
+            // NaN/inf are not JSON; a non-finite measurement renders null.
+            Value::F64(v) if !v.is_finite() => out.push_str("null"),
+            Value::F64(v) => out.push_str(&v.to_string()),
+            Value::Str(s) => render_json_str(s, out),
+            Value::Records(rows) => {
+                out.push('[');
+                for (i, r) in rows.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    r.render(out);
+                }
+                out.push(']');
+            }
+        }
+    }
+}
+
+fn render_json_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// One JSON object with ordered fields — the unit of every
+/// machine-readable experiment artifact. Built with the chaining setters
+/// (`.str(..)`, `.f64(..)`, …); field order is emission order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Record {
+    pub fields: Vec<(String, Value)>,
+}
+
+impl Record {
+    pub fn new() -> Record {
+        Record::default()
+    }
+
+    pub fn field(mut self, key: impl Into<String>, value: Value) -> Record {
+        self.fields.push((key.into(), value));
+        self
+    }
+
+    pub fn str(self, key: impl Into<String>, v: impl Into<String>) -> Record {
+        self.field(key, Value::Str(v.into()))
+    }
+
+    pub fn f64(self, key: impl Into<String>, v: f64) -> Record {
+        self.field(key, Value::F64(v))
+    }
+
+    pub fn u64(self, key: impl Into<String>, v: u64) -> Record {
+        self.field(key, Value::U64(v))
+    }
+
+    pub fn bool(self, key: impl Into<String>, v: bool) -> Record {
+        self.field(key, Value::Bool(v))
+    }
+
+    /// `None` renders as JSON `null`.
+    pub fn opt_f64(self, key: impl Into<String>, v: Option<f64>) -> Record {
+        self.field(key, v.map_or(Value::Null, Value::F64))
+    }
+
+    /// `None` renders as JSON `null`.
+    pub fn opt_u64(self, key: impl Into<String>, v: Option<u64>) -> Record {
+        self.field(key, v.map_or(Value::Null, Value::U64))
+    }
+
+    pub fn records(self, key: impl Into<String>, rows: Vec<Record>) -> Record {
+        self.field(key, Value::Records(rows))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    fn render(&self, out: &mut String) {
+        out.push('{');
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            render_json_str(k, out);
+            out.push_str(": ");
+            v.render(out);
+        }
+        out.push('}');
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.render(&mut out);
+        out
+    }
+}
+
+/// Render records as a JSON array, one record per line (diff-friendly and
+/// trivially `json.load`-able).
+pub fn render_records(records: &[Record]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        r.render(&mut out);
+        out.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("]\n");
+    out
 }
 
 #[cfg(test)]
@@ -286,5 +450,48 @@ mod tests {
         let r = t.render();
         assert!(r.contains("## demo"));
         assert!(r.contains("| long-name |"));
+    }
+
+    #[test]
+    fn record_json_rendering() {
+        let rec = Record::new()
+            .str("id", "fig\"1\"")
+            .f64("loss", 1.25)
+            .f64("nan", f64::NAN)
+            .u64("n", 16)
+            .bool("ok", true)
+            .opt_u64("missing", None)
+            .records("rows", vec![Record::new().f64("x", 0.5)]);
+        let json = rec.to_json();
+        assert_eq!(
+            json,
+            "{\"id\": \"fig\\\"1\\\"\", \"loss\": 1.25, \"nan\": null, \"n\": 16, \
+             \"ok\": true, \"missing\": null, \"rows\": [{\"x\": 0.5}]}"
+        );
+        assert_eq!(rec.get("n"), Some(&Value::U64(16)));
+        assert!(rec.get("nope").is_none());
+    }
+
+    #[test]
+    fn render_records_is_an_array() {
+        let rows = vec![Record::new().u64("a", 1), Record::new().u64("a", 2)];
+        let text = render_records(&rows);
+        assert!(text.starts_with("[\n"));
+        assert!(text.ends_with("]\n"));
+        assert!(text.contains("{\"a\": 1},\n"));
+        assert!(text.contains("{\"a\": 2}\n"));
+        assert_eq!(render_records(&[]), "[\n]\n");
+    }
+
+    #[test]
+    fn table_bridges_to_typed_records() {
+        let mut t = Table::new("demo", &["variant", "final loss"]);
+        t.row(&["ring / A2CiD2".into(), "1.25".into()]);
+        t.row(&["baseline".into(), "never".into()]);
+        let recs = t.to_records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("table"), Some(&Value::Str("demo".into())));
+        assert_eq!(recs[0].get("final loss"), Some(&Value::F64(1.25)));
+        assert_eq!(recs[1].get("final loss"), Some(&Value::Str("never".into())));
     }
 }

@@ -128,6 +128,25 @@ impl Manifest {
     }
 }
 
+/// Write `contents` to `path` atomically: write a `.tmp` sibling, then
+/// rename it over the destination. Readers — CI's artifact upload, a
+/// plotter watching `BENCH_*.json` — never observe a half-written file,
+/// and a crash mid-write leaves the previous artifact intact.
+pub fn write_atomic(path: &Path, contents: &[u8]) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {} over {}: {e}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
 /// Locate the artifact directory: `$A2CID2_ARTIFACTS` or `./artifacts`
 /// relative to the crate root / current dir.
 pub fn default_artifact_dir() -> PathBuf {
@@ -170,6 +189,19 @@ mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
         assert!(Manifest::parse("x novalue\n", PathBuf::new()).is_err());
         assert!(Manifest::parse("# only comments\n", PathBuf::new()).is_err());
         assert!(Manifest::parse("x kind=grad\n", PathBuf::new()).is_err(), "missing file=");
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("a2cid2_write_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!dir.join("out.json.tmp").exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
