@@ -42,6 +42,11 @@
 //! dropout × switch-time × churn grid comparing per-phase adaptive
 //! parameters against frozen phase-0 values (maintaining the
 //! machine-readable `BENCH_sweep.json`).
+//!
+//! Every registered id is under the paper-conformance contract:
+//! `a2cid2 verify <id|all>` diffs the consolidated record against the
+//! checked-in oracle (`rust/oracle/paper.toml`, see
+//! [`crate::testing::oracle`]) and emits `BENCH_conformance.json`.
 
 pub mod ablation;
 pub mod common;

@@ -159,8 +159,10 @@ fn scale_name(scale: Scale) -> &'static str {
 }
 
 /// Run one experiment, print its tables, maintain its standalone
-/// artifact, and return its consolidated-artifact row.
-fn run_one(exp: &dyn Experiment, scale: Scale) -> crate::Result<Record> {
+/// artifact, and return its consolidated-artifact row — the same row
+/// `experiment all --json` archives and `a2cid2 verify` diffs against
+/// the conformance oracle (`testing::oracle`).
+pub fn run_record(exp: &dyn Experiment, scale: Scale) -> crate::Result<Record> {
     let t0 = Instant::now();
     let report = exp.run(scale)?;
     let wall_ms = t0.elapsed().as_millis() as u64;
@@ -184,16 +186,10 @@ fn run_one(exp: &dyn Experiment, scale: Scale) -> crate::Result<Record> {
         .records("rows", report.records))
 }
 
-/// The `a2cid2 experiment` subcommand: resolve `id` (or `all`, optionally
-/// narrowed by `--filter SUBSTR`) through the registry, run each
-/// experiment at `scale`, and — with `--json PATH` — write the
-/// consolidated artifact (one row per experiment) atomically.
-pub fn run_cli(
-    id: &str,
-    filter: Option<&str>,
-    json: Option<&Path>,
-    scale: Scale,
-) -> crate::Result<()> {
+/// Resolve `id` (or `all`, optionally narrowed by `--filter SUBSTR`) to
+/// the experiments to run, in registry order — shared by `experiment`
+/// and `verify`.
+pub fn select(id: &str, filter: Option<&str>) -> crate::Result<Vec<&'static dyn Experiment>> {
     let selected: Vec<&dyn Experiment> = if id == "all" {
         all()
             .iter()
@@ -201,10 +197,7 @@ pub fn run_cli(
             .filter(|e| filter.is_none_or(|f| e.id().contains(f)))
             .collect()
     } else {
-        anyhow::ensure!(
-            filter.is_none(),
-            "--filter only applies to 'experiment all'"
-        );
+        anyhow::ensure!(filter.is_none(), "--filter only applies to the 'all' selector");
         vec![find(id).ok_or_else(|| {
             anyhow::anyhow!("unknown experiment '{id}' (have: {}, all)", known_ids())
         })?]
@@ -215,11 +208,25 @@ pub fn run_cli(
         filter.unwrap_or_default(),
         known_ids()
     );
+    Ok(selected)
+}
+
+/// The `a2cid2 experiment` subcommand: resolve `id` (or `all`, optionally
+/// narrowed by `--filter SUBSTR`) through the registry, run each
+/// experiment at `scale`, and — with `--json PATH` — write the
+/// consolidated artifact (one row per experiment) atomically.
+pub fn run_cli(
+    id: &str,
+    filter: Option<&str>,
+    json: Option<&Path>,
+    scale: Scale,
+) -> crate::Result<()> {
+    let selected = select(id, filter)?;
     let mut rows = Vec::with_capacity(selected.len());
     let mut outcome = Ok(());
     for exp in selected {
         println!("=== {} ===", exp.id());
-        match run_one(exp, scale) {
+        match run_record(exp, scale) {
             Ok(row) => rows.push(row),
             Err(e) => {
                 // Flush the completed rows below before surfacing the
@@ -254,7 +261,7 @@ pub fn bench_entry(id: &str) {
     });
     let scale = scale();
     let t0 = Instant::now();
-    run_one(exp, scale).unwrap_or_else(|e| panic!("[{id}] failed: {e:#}"));
+    run_record(exp, scale).unwrap_or_else(|e| panic!("[{id}] failed: {e:#}"));
     println!("[{id}] completed in {:.1}s at {scale:?} scale", t0.elapsed().as_secs_f64());
 }
 

@@ -23,7 +23,10 @@
 //! execution engines ([`simulator`] for virtual time, [`runtime`] for
 //! real threads + PJRT) that replay the same time-varying network
 //! [`config::Scenario`]s. [`experiments`] maps every table and figure of
-//! the paper to a runnable driver.
+//! the paper to a runnable driver, and [`testing::oracle`] holds the
+//! paper-conformance contract: checked-in reference values with
+//! tolerances (`rust/oracle/paper.toml`) that `a2cid2 verify` enforces
+//! over every registry run.
 
 pub mod cli;
 pub mod config;

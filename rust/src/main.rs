@@ -4,6 +4,7 @@
 //! a2cid2 train       [--config cfg.toml] [--workers N] [--topology T] ...
 //! a2cid2 spectrum    --topology ring --workers 64 [--rate 1.0]
 //! a2cid2 experiment  <id|all> [--filter SUBSTR] [--json PATH]
+//! a2cid2 verify      [id|all] [--filter SUBSTR] [--json PATH] [--experiments-json PATH]
 //! a2cid2 timeline    [--workers 8] [--rounds 20]
 //! a2cid2 replay      [--scenario S] [--dim D] [--out trace.csv]   # determinism probe
 //! ```
@@ -12,6 +13,10 @@
 //! (`a2cid2::experiments::registry`): `experiment all` runs every
 //! registered id, `--filter` narrows by substring, and `--json` writes
 //! the consolidated per-experiment artifact (`BENCH_experiments.json`).
+//! `verify` runs the same experiments and diffs every headline metric
+//! against the checked-in oracle (`rust/oracle/paper.toml`), writing
+//! `BENCH_conformance.json` and failing on any out-of-tolerance row
+//! (README §Verify).
 
 use a2cid2::cli::Cli;
 use a2cid2::config::{ExperimentConfig, Method, Scenario, Task};
@@ -48,7 +53,14 @@ fn cli() -> Cli {
         .opt("filter", "experiment all: only run ids containing SUBSTR", None)
         .opt(
             "json",
-            "experiment: write the consolidated per-experiment JSON artifact to PATH",
+            "experiment: write the consolidated per-experiment JSON artifact to PATH; \
+             verify: the conformance artifact (default BENCH_conformance.json)",
+            None,
+        )
+        .opt(
+            "experiments-json",
+            "verify: ALSO write the consolidated per-experiment artifact to PATH \
+             (one registry pass yields both artifacts)",
             None,
         )
         .flag("full", "run experiments at paper scale (same as A2CID2_BENCH_FULL=1)")
@@ -61,7 +73,8 @@ fn real_main() -> a2cid2::Result<()> {
         println!("{}", spec.usage());
         println!(
             "Subcommands: train | spectrum | \
-             experiment <id|all> [--filter SUBSTR] [--json PATH] | timeline | replay"
+             experiment <id|all> [--filter SUBSTR] [--json PATH] | \
+             verify [id|all] [--filter SUBSTR] [--json PATH] | timeline | replay"
         );
         return Ok(());
     }
@@ -144,6 +157,22 @@ fn real_main() -> a2cid2::Result<()> {
                 id,
                 args.get("filter"),
                 args.get("json").map(std::path::Path::new),
+                scale,
+            )?;
+        }
+        Some("verify") => {
+            // Paper-conformance gate: run the selected experiments
+            // through the registry and diff every headline metric
+            // against the checked-in oracle (rust/oracle/paper.toml).
+            // Always emits the machine-readable verdict artifact; the
+            // process exits non-zero if any check fails.
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            let json = args.get("json").unwrap_or("BENCH_conformance.json");
+            a2cid2::testing::oracle::verify_cli(
+                id,
+                args.get("filter"),
+                Some(std::path::Path::new(json)),
+                args.get("experiments-json").map(std::path::Path::new),
                 scale,
             )?;
         }

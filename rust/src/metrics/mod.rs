@@ -257,6 +257,17 @@ pub enum Value {
 }
 
 impl Value {
+    /// Numeric view: floats as-is, integers widened; everything else
+    /// (strings, bools, null, nested rows) is `None`. The conformance
+    /// oracle reads observed metrics through this.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::U64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
     fn render(&self, out: &mut String) {
         match self {
             Value::Null => out.push_str("null"),

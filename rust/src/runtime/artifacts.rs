@@ -141,9 +141,15 @@ pub fn write_atomic(path: &Path, contents: &[u8]) -> crate::Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = PathBuf::from(tmp);
-    std::fs::write(&tmp, contents)?;
-    std::fs::rename(&tmp, path)
-        .map_err(|e| anyhow::anyhow!("renaming {} over {}: {e}", tmp.display(), path.display()))?;
+    std::fs::write(&tmp, contents)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // A failed rename must not leave the half-artifact sibling
+        // behind (a watcher globbing BENCH_*.json.tmp, or a later
+        // successful write, would trip over it).
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("renaming {} over {}: {e}", tmp.display(), path.display());
+    }
     Ok(())
 }
 
@@ -201,6 +207,40 @@ mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
         write_atomic(&path, b"second").unwrap();
         assert_eq!(std::fs::read(&path).unwrap(), b"second");
         assert!(!dir.join("out.json.tmp").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_parent_is_a_file_errors_without_droppings() {
+        let dir = std::env::temp_dir().join("a2cid2_write_atomic_err_parent");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"i am a file").unwrap();
+        // The destination's parent is a regular file: create_dir_all (or
+        // the write) must fail, and the error must surface.
+        let err = write_atomic(&blocker.join("sub/out.json"), b"data").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(!msg.is_empty());
+        assert_eq!(std::fs::read(&blocker).unwrap(), b"i am a file", "blocker untouched");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_failed_rename_cleans_tmp_and_keeps_destination() {
+        let dir = std::env::temp_dir().join("a2cid2_write_atomic_err_rename");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        // Destination is a non-empty DIRECTORY: the tmp write succeeds
+        // but the file-over-directory rename cannot.
+        let dest = dir.join("out.json");
+        std::fs::create_dir_all(dest.join("occupied")).unwrap();
+        let err = write_atomic(&dest, b"data").unwrap_err();
+        assert!(format!("{err:#}").contains("renaming"), "{err:#}");
+        assert!(dest.is_dir(), "destination left intact");
+        assert!(
+            !dir.join("out.json.tmp").exists(),
+            "failed rename must not leave the .tmp sibling behind"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,0 +1,143 @@
+//! Checked-in golden values with a bless-on-first-run flow.
+//!
+//! A golden file is a flat `key = "value"` list (comments and blank
+//! lines allowed). [`check_or_bless`] compares an observed value against
+//! the checked-in one:
+//!
+//! * value is the sentinel `"pending"` (or `A2CID2_BLESS=1` is set) —
+//!   the file is rewritten in place with the observed value and the call
+//!   reports [`GoldenStatus::Blessed`]; commit the updated file to pin it;
+//! * value matches — [`GoldenStatus::Matched`];
+//! * value differs — an error carrying both values and the re-bless
+//!   instructions (a real regression, or an intentional change that must
+//!   be re-blessed explicitly).
+//!
+//! This is how the replay determinism contract lives in `cargo test`
+//! instead of only in CI: `tests/integration_replay.rs` drives the
+//! `a2cid2 replay` churn scenario at two kernel-pool widths and pins the
+//! FNV checksum of the final averaged parameters against
+//! `rust/oracle/replay_golden.toml`.
+
+use std::path::Path;
+
+use crate::runtime::artifacts::write_atomic;
+
+/// How a golden comparison resolved (mismatches are `Err`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GoldenStatus {
+    /// The checked-in value matched the observation.
+    Matched,
+    /// The file held `"pending"` (or `A2CID2_BLESS=1` forced it) and was
+    /// rewritten with the observed value.
+    Blessed,
+}
+
+/// Compare `observed` against golden `key` in `path`, blessing pending
+/// entries. See the module docs for the protocol.
+pub fn check_or_bless(path: &Path, key: &str, observed: &str) -> crate::Result<GoldenStatus> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read golden file {}: {e}", path.display()))?;
+    let current = lookup(&text, key).ok_or_else(|| {
+        anyhow::anyhow!(
+            "golden key '{key}' not declared in {} (add `{key} = \"pending\"`)",
+            path.display()
+        )
+    })?;
+    let force = std::env::var("A2CID2_BLESS").map(|v| v == "1").unwrap_or(false);
+    if current == "pending" || force {
+        let updated = rewrite(&text, key, observed)?;
+        write_atomic(path, updated.as_bytes())?;
+        return Ok(GoldenStatus::Blessed);
+    }
+    anyhow::ensure!(
+        current == observed,
+        "golden '{key}' mismatch in {}:\n  checked-in: {current}\n  observed:   {observed}\n\
+         If this change is intentional, re-bless with A2CID2_BLESS=1 (or set the entry \
+         back to \"pending\") and commit the updated file.",
+        path.display()
+    );
+    Ok(GoldenStatus::Matched)
+}
+
+/// The quoted value of `key` in the file text, if declared.
+fn lookup(text: &str, key: &str) -> Option<String> {
+    text.lines().find_map(|l| parse_line(l, key))
+}
+
+fn parse_line(line: &str, key: &str) -> Option<String> {
+    let rest = line.trim().strip_prefix(key)?.trim_start();
+    let value = rest.strip_prefix('=')?.trim();
+    Some(value.strip_prefix('"')?.strip_suffix('"')?.to_string())
+}
+
+/// The file with `key`'s line replaced, everything else (comments,
+/// ordering) preserved byte-for-byte.
+fn rewrite(text: &str, key: &str, observed: &str) -> crate::Result<String> {
+    anyhow::ensure!(
+        !observed.contains('"') && !observed.contains('\n'),
+        "golden values must be quote- and newline-free: {observed:?}"
+    );
+    let mut out = String::with_capacity(text.len());
+    let mut replaced = false;
+    for line in text.lines() {
+        if !replaced && parse_line(line, key).is_some() {
+            out.push_str(&format!("{key} = \"{observed}\""));
+            replaced = true;
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    anyhow::ensure!(replaced, "golden key '{key}' vanished mid-rewrite");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str, contents: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("a2cid2_golden_{name}.toml"));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    const FILE: &str = "# golden checksums\nreplay_w1 = \"pending\"\nreplay_w4 = \"abc123\"\n";
+
+    #[test]
+    fn pending_blesses_and_then_matches() {
+        let path = temp("bless", FILE);
+        assert_eq!(check_or_bless(&path, "replay_w1", "deadbeef").unwrap(), GoldenStatus::Blessed);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("replay_w1 = \"deadbeef\""), "{text}");
+        assert!(text.starts_with("# golden checksums\n"), "comments survive: {text}");
+        assert!(text.contains("replay_w4 = \"abc123\""), "other keys survive");
+        assert_eq!(check_or_bless(&path, "replay_w1", "deadbeef").unwrap(), GoldenStatus::Matched);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mismatch_reports_both_values() {
+        let path = temp("mismatch", FILE);
+        let err = check_or_bless(&path, "replay_w4", "ffff").unwrap_err().to_string();
+        assert!(err.contains("abc123"), "{err}");
+        assert!(err.contains("ffff"), "{err}");
+        assert!(err.contains("A2CID2_BLESS"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_key_and_missing_file_error() {
+        let path = temp("unknown", FILE);
+        let err = check_or_bless(&path, "nope", "x").unwrap_err().to_string();
+        assert!(err.contains("not declared"), "{err}");
+        std::fs::remove_file(&path).ok();
+        assert!(check_or_bless(&path, "replay_w1", "x").is_err());
+    }
+
+    #[test]
+    fn rewrite_rejects_unquotable_values() {
+        assert!(rewrite(FILE, "replay_w1", "a\"b").is_err());
+        assert!(rewrite(FILE, "replay_w1", "a\nb").is_err());
+    }
+}

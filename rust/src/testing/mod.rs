@@ -5,6 +5,9 @@
 //! seeded random cases and report the failing seed so a failure is
 //! reproducible with `PROP_SEED=<seed> cargo test <name>`.
 
+pub mod golden;
+pub mod oracle;
+
 use crate::rng::Xoshiro256;
 
 /// Number of cases per property (override with env `PROP_CASES`).
@@ -60,6 +63,167 @@ pub fn vec_f32(rng: &mut Xoshiro256, len: usize, scale: f32) -> Vec<f32> {
         .collect()
 }
 
+/// Minimal strict JSON validator (no parser crate offline): checks that
+/// `text` is exactly one well-formed JSON value, reporting the byte
+/// offset of the first violation. Used to pin the hand-rolled
+/// `metrics::render_records` writer (escaping, NaN→null) and the
+/// `BENCH_*.json` artifact schemas without a serde round-trip.
+pub fn validate_json(text: &str) -> Result<(), String> {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing content at byte {pos}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    let err = |pos: usize, what: &str| Err(format!("{what} at byte {pos}"));
+    match b.get(*pos).copied() {
+        None => err(*pos, "unexpected end of input"),
+        Some(b'{') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return err(*pos, "expected ':'");
+                }
+                *pos += 1;
+                skip_ws(b, pos);
+                value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    _ => return err(*pos, "expected ',' or '}'"),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    _ => return err(*pos, "expected ',' or ']'"),
+                }
+            }
+        }
+        Some(b'"') => string(b, pos),
+        Some(b't') => literal(b, pos, "true"),
+        Some(b'f') => literal(b, pos, "false"),
+        Some(b'n') => literal(b, pos, "null"),
+        Some(c) if c == b'-' || c.is_ascii_digit() => number(b, pos),
+        Some(c) => err(*pos, &format!("unexpected byte {c:?}")),
+    }
+}
+
+fn literal(b: &[u8], pos: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected '{lit}' at byte {pos}"))
+    }
+}
+
+fn string(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected '\"' at byte {pos}"));
+    }
+    *pos += 1;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos).copied() {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *pos += 1,
+                    Some(b'u') => {
+                        *pos += 1;
+                        for _ in 0..4 {
+                            if !b.get(*pos).is_some_and(u8::is_ascii_hexdigit) {
+                                return Err(format!("bad \\u escape at byte {pos}"));
+                            }
+                            *pos += 1;
+                        }
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+            }
+            0x00..=0x1F => return Err(format!("unescaped control byte at {pos}")),
+            _ => *pos += 1, // UTF-8 continuation bytes pass through
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn number(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let digits = |b: &[u8], pos: &mut usize| -> bool {
+        let d0 = *pos;
+        while b.get(*pos).is_some_and(u8::is_ascii_digit) {
+            *pos += 1;
+        }
+        *pos > d0
+    };
+    if !digits(b, pos) {
+        return Err(format!("bad number at byte {start}"));
+    }
+    if b.get(*pos) == Some(&b'.') {
+        *pos += 1;
+        if !digits(b, pos) {
+            return Err(format!("bad fraction at byte {start}"));
+        }
+    }
+    if matches!(b.get(*pos).copied(), Some(b'e' | b'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos).copied(), Some(b'+' | b'-')) {
+            *pos += 1;
+        }
+        if !digits(b, pos) {
+            return Err(format!("bad exponent at byte {start}"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +263,42 @@ mod tests {
         let v = vec_f32(&mut rng, 32, 2.0);
         assert_eq!(v.len(), 32);
         assert!(v.iter().all(|&x| (-2.0..=2.0).contains(&x)));
+    }
+
+    #[test]
+    fn json_validator_accepts_well_formed() {
+        for ok in [
+            "null",
+            " true ",
+            "-1.5e-3",
+            "\"a\\n\\\"b\\u00e9\"",
+            "[]",
+            "[1, [2, {\"k\": null}], \"s\"]",
+            "{\"a\": 1, \"b\": [true, false]}",
+            "{\"unicode: é🦀\": \"ok\"}",
+        ] {
+            validate_json(ok).unwrap_or_else(|e| panic!("{ok}: {e}"));
+        }
+    }
+
+    #[test]
+    fn json_validator_rejects_malformed() {
+        for bad in [
+            "",
+            "nul",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\": 1,}",
+            "\"unterminated",
+            "\"bad \\x escape\"",
+            "\"ctrl \u{0}\"",
+            "1.2.3",
+            "1 2",
+            "NaN",
+            "{'single': 1}",
+        ] {
+            assert!(validate_json(bad).is_err(), "should reject: {bad:?}");
+        }
     }
 }

@@ -1,0 +1,579 @@
+//! The paper-conformance oracle: checked-in reference values with
+//! tolerances for every registry experiment, and the `a2cid2 verify`
+//! machinery that diffs a run's [`Record`]s against them.
+//!
+//! The oracle itself is data, not code: `rust/oracle/paper.toml` holds
+//! one section per `(experiment id, metric)` pair with the expected
+//! value, an absolute/relative tolerance band, and a scale-applicability
+//! flag (`any` / `quick` / `full`). Spectra-driven experiments carry
+//! tight bands straight from the paper's Fig. 6 closed forms; training
+//! experiments carry the quantitative form of the claims their module
+//! tests already pin (so `verify all` at quick scale is a superset of
+//! the unit-test contract, now enforced end-to-end over the same
+//! consolidated rows that `BENCH_experiments.json` archives).
+//!
+//! A metric names a field of the consolidated per-experiment record
+//! (`final_loss`, `final_consensus`, `accuracy`, `n_rows`, `wall_ms`) or
+//! a dotted path into its nested row set (`rows.2.chi1` — index, then
+//! field). A check passes iff the observed value is finite and
+//! `|observed − expected| ≤ abs + rel·|expected|`; no tolerance keys
+//! means an exact match. Verdicts render to `BENCH_conformance.json`
+//! (one row per compared metric) via the same serde-free [`Record`]
+//! writer as every other artifact.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use crate::experiments::common::Scale;
+use crate::experiments::registry;
+use crate::metrics::{render_records, Record, Value};
+use crate::runtime::artifacts::write_atomic;
+
+/// Which scales a check applies to; out-of-scale checks report
+/// [`Outcome::Skip`] instead of running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppliesTo {
+    Any,
+    QuickOnly,
+    FullOnly,
+}
+
+impl AppliesTo {
+    fn parse(s: &str) -> crate::Result<AppliesTo> {
+        match s {
+            "any" => Ok(AppliesTo::Any),
+            "quick" => Ok(AppliesTo::QuickOnly),
+            "full" => Ok(AppliesTo::FullOnly),
+            other => anyhow::bail!("scales must be any|quick|full, got '{other}'"),
+        }
+    }
+
+    pub fn includes(self, scale: Scale) -> bool {
+        match self {
+            AppliesTo::Any => true,
+            AppliesTo::QuickOnly => scale == Scale::Quick,
+            AppliesTo::FullOnly => scale == Scale::Full,
+        }
+    }
+}
+
+/// One reference row: experiment id + metric path → expected value with
+/// a tolerance band.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub id: String,
+    /// Dotted path into the consolidated experiment record
+    /// (`final_loss`, `n_rows`, `rows.<idx>.<field>`, …).
+    pub metric: String,
+    pub expected: f64,
+    /// Absolute tolerance (0 = none).
+    pub abs: f64,
+    /// Relative tolerance, scaled by `|expected|` (0 = none).
+    pub rel: f64,
+    pub scales: AppliesTo,
+    /// Where the reference value comes from (paper table/figure, or the
+    /// module-test invariant it quantifies).
+    pub note: String,
+}
+
+/// How one check fared against one run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Pass,
+    Fail,
+    Skip,
+}
+
+impl Outcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Outcome::Pass => "pass",
+            Outcome::Fail => "fail",
+            Outcome::Skip => "skip",
+        }
+    }
+}
+
+/// A judged check: the `BENCH_conformance.json` row.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub check: Check,
+    pub outcome: Outcome,
+    /// The value extracted from the run (`None`: metric missing/null, or
+    /// the check was skipped without running).
+    pub observed: Option<f64>,
+}
+
+impl Check {
+    /// The half-width of the acceptance band around `expected`.
+    pub fn allowed(&self) -> f64 {
+        self.abs + self.rel * self.expected.abs()
+    }
+
+    /// Judge this check against a consolidated experiment record.
+    pub fn judge(&self, rec: &Record) -> Verdict {
+        let observed = extract(rec, &self.metric);
+        let pass = matches!(observed, Some(o)
+            if o.is_finite() && (o - self.expected).abs() <= self.allowed());
+        Verdict {
+            check: self.clone(),
+            outcome: if pass { Outcome::Pass } else { Outcome::Fail },
+            observed,
+        }
+    }
+
+    /// A skip verdict (check not applicable at the running scale).
+    pub fn skip(&self) -> Verdict {
+        Verdict { check: self.clone(), outcome: Outcome::Skip, observed: None }
+    }
+}
+
+impl Verdict {
+    /// `|observed − expected| − allowed`: negative inside the band.
+    pub fn margin(&self) -> Option<f64> {
+        self.observed.map(|o| (o - self.check.expected).abs() - self.check.allowed())
+    }
+
+    /// One line with everything a failure report needs: observed vs
+    /// expected and the tolerance that was applied. (The outcome itself
+    /// is not embedded — callers prefix it, as `verify_cli` does.)
+    pub fn message(&self) -> String {
+        let c = &self.check;
+        let obs = match self.observed {
+            Some(o) => format!("observed {o}"),
+            None => "metric missing (no such field, or null)".to_string(),
+        };
+        format!(
+            "{}/{}: {}, expected {} ± {} (abs {} + rel {}·|expected|){}",
+            c.id,
+            c.metric,
+            obs,
+            c.expected,
+            c.allowed(),
+            c.abs,
+            c.rel,
+            if c.note.is_empty() { String::new() } else { format!(" — {}", c.note) },
+        )
+    }
+
+    /// The `BENCH_conformance.json` row for this verdict.
+    pub fn record(&self) -> Record {
+        let c = &self.check;
+        Record::new()
+            .str("id", c.id.clone())
+            .str("metric", c.metric.clone())
+            .str("outcome", self.outcome.as_str())
+            .opt_f64("observed", self.observed)
+            .f64("expected", c.expected)
+            .f64("abs", c.abs)
+            .f64("rel", c.rel)
+            .f64("allowed", c.allowed())
+            .opt_f64("margin", self.margin())
+            .str(
+                "scales",
+                match c.scales {
+                    AppliesTo::Any => "any",
+                    AppliesTo::QuickOnly => "quick",
+                    AppliesTo::FullOnly => "full",
+                },
+            )
+            .str("note", c.note.clone())
+    }
+}
+
+/// Walk a dotted metric path through a record: a name segment selects a
+/// field, and a numeric segment indexes into a nested
+/// [`Value::Records`] array (so `rows.2.chi1` is row 2's `chi1`).
+/// Resolves to `None` unless every intermediate segment exists and the
+/// leaf is numeric.
+pub fn extract(rec: &Record, path: &str) -> Option<f64> {
+    enum Cursor<'a> {
+        Rec(&'a Record),
+        Val(&'a Value),
+    }
+    let mut cur = Cursor::Rec(rec);
+    for seg in path.split('.') {
+        cur = match cur {
+            Cursor::Rec(r) => Cursor::Val(r.get(seg)?),
+            Cursor::Val(Value::Records(rows)) => {
+                Cursor::Rec(rows.get(seg.parse::<usize>().ok()?)?)
+            }
+            Cursor::Val(_) => return None, // cannot path into a scalar
+        };
+    }
+    match cur {
+        Cursor::Val(v) => v.as_f64(),
+        Cursor::Rec(_) => None, // path ended on a row, not a metric
+    }
+}
+
+/// The checked-in oracle: every reference row, in file order.
+#[derive(Clone, Debug, Default)]
+pub struct Oracle {
+    pub checks: Vec<Check>,
+}
+
+impl Oracle {
+    /// Parse the `paper.toml` subset: `[<id>.<metric.path>]` sections
+    /// with `key = value` lines (`expected`, `abs`, `rel`, `scales`,
+    /// `note`), `#` comments, blank lines.
+    pub fn parse(text: &str) -> crate::Result<Oracle> {
+        let mut checks: Vec<Check> = Vec::new();
+        let mut open: Option<(Check, bool)> = None; // (check, saw_expected)
+        let close = |open: &mut Option<(Check, bool)>,
+                     checks: &mut Vec<Check>|
+         -> crate::Result<()> {
+            if let Some((check, saw_expected)) = open.take() {
+                anyhow::ensure!(
+                    saw_expected,
+                    "oracle section [{}.{}] has no `expected =` line",
+                    check.id,
+                    check.metric
+                );
+                checks.push(check);
+            }
+            Ok(())
+        };
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let err = |msg: String| anyhow::anyhow!("oracle line {}: {msg}", lineno + 1);
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                close(&mut open, &mut checks)?;
+                let (id, metric) = header
+                    .split_once('.')
+                    .ok_or_else(|| err(format!("section '[{header}]' needs <id>.<metric>")))?;
+                anyhow::ensure!(
+                    !id.is_empty() && !metric.is_empty(),
+                    err(format!("empty id or metric in '[{header}]'"))
+                );
+                open = Some((
+                    Check {
+                        id: id.to_string(),
+                        metric: metric.to_string(),
+                        expected: 0.0,
+                        abs: 0.0,
+                        rel: 0.0,
+                        scales: AppliesTo::Any,
+                        note: String::new(),
+                    },
+                    false,
+                ));
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected `key = value`, got '{line}'")))?;
+            let (key, value) = (key.trim(), value.trim());
+            let (check, saw_expected) = open
+                .as_mut()
+                .ok_or_else(|| err(format!("'{key}' outside any [id.metric] section")))?;
+            let unquote = |v: &str| -> Option<String> {
+                v.strip_prefix('"')?.strip_suffix('"').map(str::to_string)
+            };
+            let num = |v: &str| -> crate::Result<f64> {
+                v.parse::<f64>().map_err(|e| err(format!("{key} = {v}: {e}")))
+            };
+            match key {
+                "expected" => {
+                    check.expected = num(value)?;
+                    *saw_expected = true;
+                }
+                "abs" => {
+                    check.abs = num(value)?;
+                    anyhow::ensure!(check.abs >= 0.0, err("abs must be >= 0".into()));
+                }
+                "rel" => {
+                    check.rel = num(value)?;
+                    anyhow::ensure!(check.rel >= 0.0, err("rel must be >= 0".into()));
+                }
+                "scales" => {
+                    let v = unquote(value)
+                        .ok_or_else(|| err(format!("scales must be quoted: {value}")))?;
+                    check.scales = AppliesTo::parse(&v).map_err(|e| err(e.to_string()))?;
+                }
+                "note" => {
+                    check.note = unquote(value)
+                        .ok_or_else(|| err(format!("note must be quoted: {value}")))?;
+                }
+                other => anyhow::bail!(err(format!("unknown key '{other}'"))),
+            }
+        }
+        close(&mut open, &mut checks)?;
+        anyhow::ensure!(!checks.is_empty(), "oracle file declares no checks");
+        Ok(Oracle { checks })
+    }
+
+    /// The checked-in oracle (`rust/oracle/paper.toml`), parsed once per
+    /// process. A malformed checked-in file is a programmer error and
+    /// panics (`builtin_oracle_parses` pins it in CI).
+    pub fn builtin() -> &'static Oracle {
+        static ORACLE: OnceLock<Oracle> = OnceLock::new();
+        ORACLE.get_or_init(|| {
+            Oracle::parse(include_str!("../../oracle/paper.toml"))
+                .expect("rust/oracle/paper.toml must parse")
+        })
+    }
+
+    /// All checks for one experiment id, in file order.
+    pub fn checks_for(&self, id: &str) -> Vec<&Check> {
+        self.checks.iter().filter(|c| c.id == id).collect()
+    }
+
+    /// Judge every check of `id` against one consolidated experiment
+    /// record at `scale` (out-of-scale checks come back as skips).
+    pub fn judge(&self, id: &str, rec: &Record, scale: Scale) -> Vec<Verdict> {
+        self.checks_for(id)
+            .into_iter()
+            .map(|c| if c.scales.includes(scale) { c.judge(rec) } else { c.skip() })
+            .collect()
+    }
+}
+
+/// The `a2cid2 verify <id|all>` body: resolve experiments through the
+/// registry, run each one that has in-scale oracle entries, diff the
+/// consolidated record row-by-row, write `BENCH_conformance.json` (and,
+/// with `experiments_json`, the consolidated per-experiment artifact —
+/// so one registry pass yields both, instead of CI running `experiment
+/// all` and `verify all` back to back), and fail only AFTER the
+/// artifacts are flushed — a red run still archives its evidence, and a
+/// mid-run experiment error still flushes the verdicts collected so far
+/// (the same discipline as `registry::run_cli`).
+pub fn verify_cli(
+    id: &str,
+    filter: Option<&str>,
+    json: Option<&Path>,
+    experiments_json: Option<&Path>,
+    scale: Scale,
+) -> crate::Result<()> {
+    let oracle = Oracle::builtin();
+    let selected = registry::select(id, filter)?;
+    let mut rows = Vec::new();
+    let mut exp_rows = Vec::new();
+    let (mut n_pass, mut n_fail, mut n_skip) = (0usize, 0usize, 0usize);
+    let mut failures: Vec<String> = Vec::new();
+    let mut run_outcome = Ok(());
+    for exp in selected {
+        let checks = oracle.checks_for(exp.id());
+        if checks.is_empty() {
+            println!("=== verify {} === no oracle entries", exp.id());
+            continue;
+        }
+        let verdicts = if checks.iter().any(|c| c.scales.includes(scale)) {
+            println!("=== verify {} ===", exp.id());
+            match registry::run_record(exp, scale) {
+                Ok(rec) => {
+                    let verdicts = oracle.judge(exp.id(), &rec, scale);
+                    exp_rows.push(rec);
+                    verdicts
+                }
+                Err(e) => {
+                    // Flush everything collected so far below before
+                    // surfacing the failure.
+                    run_outcome = Err(anyhow::anyhow!("verify '{}': {e:#}", exp.id()));
+                    break;
+                }
+            }
+        } else {
+            println!(
+                "=== verify {} === every entry is out of scale at {scale:?}; not running",
+                exp.id()
+            );
+            checks.iter().map(|c| c.skip()).collect()
+        };
+        for v in verdicts {
+            match v.outcome {
+                Outcome::Pass => n_pass += 1,
+                Outcome::Skip => n_skip += 1,
+                Outcome::Fail => {
+                    n_fail += 1;
+                    failures.push(v.message());
+                }
+            }
+            println!("  [{}] {}", v.outcome.as_str().to_uppercase(), v.message());
+            rows.push(v.record());
+        }
+    }
+    let partial = if run_outcome.is_err() { ", PARTIAL — an experiment failed" } else { "" };
+    if let Some(path) = json {
+        write_atomic(path, render_records(&rows).as_bytes())?;
+        println!("wrote {} ({} conformance rows{partial})", path.display(), rows.len());
+    }
+    if let Some(path) = experiments_json {
+        write_atomic(path, render_records(&exp_rows).as_bytes())?;
+        println!("wrote {} ({} experiment rows{partial})", path.display(), exp_rows.len());
+    }
+    run_outcome?;
+    println!("conformance: {n_pass} pass, {n_fail} fail, {n_skip} skip");
+    anyhow::ensure!(
+        n_fail == 0,
+        "paper conformance failed ({n_fail} checks):\n  {}",
+        failures.join("\n  ")
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# reference values
+[fig9.final_loss]
+expected = 1.5
+abs = 0.25
+rel = 0.1
+note = "made up"
+
+[fig9.rows.1.chi1]
+expected = 13.14
+abs = 0.05
+scales = "quick"
+
+[tab9.n_rows]
+expected = 3
+scales = "full"
+"#;
+
+    fn rec() -> Record {
+        Record::new()
+            .str("id", "fig9")
+            .f64("final_loss", 1.6)
+            .u64("n_rows", 2)
+            .opt_f64("accuracy", None)
+            .records(
+                "rows",
+                vec![
+                    Record::new().f64("chi1", 0.94),
+                    Record::new().f64("chi1", 13.16).str("topology", "ring"),
+                ],
+            )
+    }
+
+    #[test]
+    fn parses_sections_tolerances_and_scales() {
+        let o = Oracle::parse(SAMPLE).unwrap();
+        assert_eq!(o.checks.len(), 3);
+        let c = &o.checks[0];
+        assert_eq!((c.id.as_str(), c.metric.as_str()), ("fig9", "final_loss"));
+        assert_eq!(c.expected, 1.5);
+        assert!((c.allowed() - 0.4).abs() < 1e-12, "abs 0.25 + rel 0.1*1.5");
+        assert_eq!(c.scales, AppliesTo::Any);
+        assert_eq!(c.note, "made up");
+        assert_eq!(o.checks[1].metric, "rows.1.chi1");
+        assert_eq!(o.checks[1].scales, AppliesTo::QuickOnly);
+        assert_eq!(o.checks[2].allowed(), 0.0, "no tolerance keys = exact");
+        assert_eq!(o.checks_for("fig9").len(), 2);
+        assert!(o.checks_for("nope").is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for (bad, what) in [
+            ("[final_loss]\nexpected = 1\n", "missing id.metric split"),
+            ("[fig9.x]\nabs = 0.1\n", "no expected"),
+            ("expected = 1\n", "key outside section"),
+            ("[fig9.x]\nexpected = 1\nwat = 2\n", "unknown key"),
+            ("[fig9.x]\nexpected = one\n", "non-numeric"),
+            ("[fig9.x]\nexpected = 1\nscales = \"sometimes\"\n", "bad scale"),
+            ("[fig9.x]\nexpected = 1\nabs = -1\n", "negative abs"),
+            ("# nothing\n", "no checks"),
+        ] {
+            assert!(Oracle::parse(bad).is_err(), "{what}");
+        }
+    }
+
+    #[test]
+    fn extract_walks_fields_and_nested_rows() {
+        let r = rec();
+        assert_eq!(extract(&r, "final_loss"), Some(1.6));
+        assert_eq!(extract(&r, "n_rows"), Some(2.0));
+        assert_eq!(extract(&r, "rows.0.chi1"), Some(0.94));
+        assert_eq!(extract(&r, "rows.1.chi1"), Some(13.16));
+        assert_eq!(extract(&r, "accuracy"), None, "null is not a number");
+        assert_eq!(extract(&r, "rows.1.topology"), None, "strings are not numeric");
+        assert_eq!(extract(&r, "rows.7.chi1"), None, "index out of range");
+        assert_eq!(extract(&r, "rows.chi1"), None, "rows need an index first");
+        assert_eq!(extract(&r, "nope"), None);
+        assert_eq!(extract(&r, "id.0"), None, "cannot path into a scalar");
+    }
+
+    #[test]
+    fn judge_passes_inside_band_fails_outside() {
+        let o = Oracle::parse(SAMPLE).unwrap();
+        let verdicts = o.judge("fig9", &rec(), Scale::Quick);
+        assert_eq!(verdicts.len(), 2);
+        assert_eq!(verdicts[0].outcome, Outcome::Pass, "{}", verdicts[0].message());
+        assert_eq!(verdicts[1].outcome, Outcome::Pass, "{}", verdicts[1].message());
+        // At Full scale the quick-only row skips.
+        let verdicts = o.judge("fig9", &rec(), Scale::Full);
+        assert_eq!(verdicts[1].outcome, Outcome::Skip);
+        assert!(verdicts[1].observed.is_none());
+    }
+
+    #[test]
+    fn perturbed_metric_fails_with_observed_expected_and_tolerance() {
+        let o = Oracle::parse(SAMPLE).unwrap();
+        let mut r = rec();
+        // Deliberately detune the headline metric past the band.
+        for (k, v) in &mut r.fields {
+            if k.as_str() == "final_loss" {
+                *v = Value::F64(2.5);
+            }
+        }
+        let v = &o.judge("fig9", &r, Scale::Quick)[0];
+        assert_eq!(v.outcome, Outcome::Fail);
+        assert!(v.margin().unwrap() > 0.0);
+        let msg = v.message();
+        assert!(msg.contains("observed 2.5"), "{msg}");
+        assert!(msg.contains("expected 1.5"), "{msg}");
+        assert!(msg.contains("0.4"), "tolerance band in message: {msg}");
+    }
+
+    #[test]
+    fn nan_and_missing_metrics_fail() {
+        let o = Oracle::parse("[x.loss]\nexpected = 1\nabs = 10\n").unwrap();
+        let nan = Record::new().str("id", "x").f64("loss", f64::NAN);
+        assert_eq!(o.judge("x", &nan, Scale::Quick)[0].outcome, Outcome::Fail);
+        let missing = Record::new().str("id", "x");
+        let v = &o.judge("x", &missing, Scale::Quick)[0];
+        assert_eq!(v.outcome, Outcome::Fail);
+        assert!(v.message().contains("metric missing"), "{}", v.message());
+    }
+
+    #[test]
+    fn builtin_oracle_parses_and_every_id_is_registered() {
+        let o = Oracle::builtin();
+        assert!(!o.checks.is_empty());
+        for c in &o.checks {
+            assert!(
+                registry::find(&c.id).is_some(),
+                "oracle references unknown experiment '{}'",
+                c.id
+            );
+            assert!(c.allowed().is_finite());
+        }
+        // Every registered experiment carries at least one reference row
+        // — the whole registry surface is under contract.
+        for exp in registry::all() {
+            assert!(
+                !o.checks_for(exp.id()).is_empty(),
+                "experiment '{}' has no oracle entry",
+                exp.id()
+            );
+        }
+    }
+
+    #[test]
+    fn verdict_records_render_schema() {
+        let o = Oracle::parse(SAMPLE).unwrap();
+        let v = o.judge("fig9", &rec(), Scale::Quick);
+        let text = render_records(&v.iter().map(Verdict::record).collect::<Vec<_>>());
+        crate::testing::validate_json(&text).unwrap();
+        assert!(text.contains("\"outcome\": \"pass\""));
+        assert!(text.contains("\"metric\": \"rows.1.chi1\""));
+        assert!(text.contains("\"margin\": "));
+    }
+}

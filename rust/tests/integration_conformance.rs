@@ -1,0 +1,129 @@
+//! Integration: the paper-conformance oracle end-to-end over real
+//! registry runs — the `cargo test` half of the `a2cid2 verify`
+//! contract (CI's `experiments-smoke` job runs `verify all` in
+//! release; here the cheap, spectra/timeline-driven experiments run
+//! in-process so the gate holds with no CI dependency).
+
+use a2cid2::experiments::registry;
+use a2cid2::experiments::Scale;
+use a2cid2::metrics::{render_records, Value};
+use a2cid2::testing::oracle::{extract, Oracle, Outcome, Verdict};
+use a2cid2::testing::validate_json;
+
+/// The cheap end of the registry: closed-form spectra, the timeline
+/// schematic, and the eigensolve grid. Running these through the full
+/// `run_record` path exercises the exact record shapes `verify all`
+/// diffs.
+const CHEAP_IDS: [&str; 3] = ["fig6", "fig2", "tab2"];
+
+#[test]
+fn oracle_passes_on_cheap_experiments_at_quick_scale() {
+    let oracle = Oracle::builtin();
+    for id in CHEAP_IDS {
+        let exp = registry::find(id).unwrap();
+        let rec = registry::run_record(exp, Scale::Quick).unwrap();
+        let verdicts = oracle.judge(id, &rec, Scale::Quick);
+        assert!(!verdicts.is_empty(), "{id}: no oracle entries");
+        for v in &verdicts {
+            assert_ne!(
+                v.outcome,
+                Outcome::Fail,
+                "conformance failure: {}",
+                v.message()
+            );
+        }
+        assert!(
+            verdicts.iter().any(|v| v.outcome == Outcome::Pass),
+            "{id}: every check skipped at quick scale"
+        );
+    }
+}
+
+#[test]
+fn perturbed_run_fails_with_observed_expected_and_tolerance() {
+    // Run fig6 for real, then detune the ring's chi1 row the way a
+    // mis-derived spectrum would: the oracle must catch it and the
+    // failure message must carry observed, expected, and the tolerance.
+    let exp = registry::find("fig6").unwrap();
+    let mut rec = registry::run_record(exp, Scale::Quick).unwrap();
+    let before = extract(&rec, "rows.2.chi1").expect("fig6 row 2 has chi1");
+    for (key, value) in &mut rec.fields {
+        if key.as_str() != "rows" {
+            continue;
+        }
+        if let Value::Records(rows) = value {
+            for (k, v) in &mut rows[2].fields {
+                if k.as_str() == "chi1" {
+                    *v = Value::F64(before * 2.0); // a detuned spectrum
+                }
+            }
+        }
+    }
+    let verdicts = Oracle::builtin().judge("fig6", &rec, Scale::Quick);
+    let failed: Vec<&Verdict> = verdicts
+        .iter()
+        .filter(|v| v.outcome == Outcome::Fail)
+        .collect();
+    assert_eq!(failed.len(), 1, "exactly the perturbed metric fails");
+    let v = failed[0];
+    assert_eq!(v.check.metric, "rows.2.chi1");
+    let msg = v.message();
+    assert!(msg.contains(&format!("observed {}", before * 2.0)), "{msg}");
+    assert!(msg.contains("expected 13.14"), "{msg}");
+    assert!(msg.contains("± 0.05"), "tolerance in message: {msg}");
+    assert!(v.margin().unwrap() > 0.0, "positive margin outside the band");
+}
+
+#[test]
+fn verify_cli_writes_conformance_artifact() {
+    let dir = std::env::temp_dir().join("a2cid2_verify_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_conformance.json");
+    let exp_path = dir.join("BENCH_experiments.json");
+    a2cid2::testing::oracle::verify_cli("fig6", None, Some(&path), Some(&exp_path), Scale::Quick)
+        .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    validate_json(&text).unwrap_or_else(|e| panic!("invalid conformance JSON ({e}):\n{text}"));
+    // One row per compared metric, with the full verdict schema.
+    assert_eq!(
+        text.matches("\"outcome\": ").count(),
+        Oracle::builtin().checks_for("fig6").len(),
+        "one conformance row per oracle entry"
+    );
+    assert!(text.contains("\"outcome\": \"pass\""), "{text}");
+    assert!(!text.contains("\"outcome\": \"fail\""), "{text}");
+    for field in ["\"observed\": ", "\"expected\": ", "\"allowed\": ", "\"margin\": ", "\"note\": "]
+    {
+        assert!(text.contains(field), "missing {field} in {text}");
+    }
+    // --experiments-json: the consolidated per-experiment artifact from
+    // the same pass (what CI archives instead of a second `experiment
+    // all` run).
+    let exp_text = std::fs::read_to_string(&exp_path).unwrap();
+    validate_json(&exp_text).unwrap_or_else(|e| panic!("invalid experiments JSON ({e})"));
+    assert!(exp_text.contains("\"id\": \"fig6\""), "{exp_text}");
+    assert!(exp_text.contains("\"n_rows\": 7"), "{exp_text}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn verify_cli_rejects_unknown_ids() {
+    let err = a2cid2::testing::oracle::verify_cli("fig99", None, None, None, Scale::Quick)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown experiment"), "{err}");
+}
+
+/// Verdict records survive the exact writer the CLI uses (escaping,
+/// null margins on skips).
+#[test]
+fn skip_verdicts_render_null_observed() {
+    let oracle = Oracle::parse("[x.m]\nexpected = 1\nscales = \"full\"\n").unwrap();
+    let rec = a2cid2::metrics::Record::new().str("id", "x").f64("m", 1.0);
+    let verdicts = oracle.judge("x", &rec, Scale::Quick);
+    assert_eq!(verdicts[0].outcome, Outcome::Skip);
+    let text = render_records(&[verdicts[0].record()]);
+    validate_json(&text).unwrap();
+    assert!(text.contains("\"outcome\": \"skip\""));
+    assert!(text.contains("\"observed\": null"));
+}

@@ -1,0 +1,88 @@
+//! The determinism replay, promoted from CI into `cargo test`: the
+//! seeded churn scenario (topology switch + dropout window + a
+//! leave/join cycle) must produce BIT-identical output at kernel-pool
+//! widths 1 and 4, and the FNV checksum over the final averaged
+//! parameters must reproduce the checked-in golden value
+//! (`rust/oracle/replay_golden.toml` — blessed on first run, pinned
+//! thereafter; see `testing::golden`).
+//!
+//! The pool width is latched process-wide (`gossip::pool` reads
+//! `A2CID2_POOL_THREADS` once), so each width runs the real `a2cid2`
+//! binary as a subprocess — which also makes this an end-to-end CLI
+//! test of the `replay` subcommand, exactly what CI's `determinism` job
+//! drives.
+
+use std::path::Path;
+use std::process::Command;
+
+use a2cid2::testing::golden::{check_or_bless, GoldenStatus};
+
+/// The CI determinism scenario: ring→exponential switch at t=0.5, a
+/// dropout window, 25% of the fleet leaving at t=0.3 and re-joining at
+/// t=0.7.
+const SCENARIO: &str = "ring@0,exponential@0.5;drop=0.2:0.25:0.75:7;leave=0.25:0.3:1;join=0.25:0.7";
+
+/// `--dim 65536` gives a 131074-parameter synthetic model — past
+/// `POOL_MIN_DIM` (131072), so every kernel actually shards and a chunk
+/// boundary that depended on lane count would flip the checksum.
+const ARGS: [&str; 10] = [
+    "replay", "--scenario", SCENARIO, "--workers", "8", "--steps", "40", "--seed", "7", "--dim",
+];
+
+fn replay_at_width(width: &str) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_a2cid2"))
+        .args(ARGS)
+        .arg("65536")
+        .env("A2CID2_POOL_THREADS", width)
+        .output()
+        .expect("spawn a2cid2 replay");
+    assert!(
+        out.status.success(),
+        "replay at pool width {width} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("replay output is UTF-8")
+}
+
+fn extract_checksum(stdout: &str) -> String {
+    let tail = stdout
+        .split("checksum=")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no checksum in replay output:\n{stdout}"));
+    let sum: String = tail.chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+    assert_eq!(sum.len(), 16, "FNV-1a checksum is 16 hex digits: '{sum}'");
+    sum
+}
+
+#[test]
+fn churn_replay_reproduces_golden_checksums_at_two_pool_widths() {
+    let serial = replay_at_width("1");
+    let pooled = replay_at_width("4");
+    // The probe must actually engage the pool, or the two widths test
+    // nothing.
+    assert!(serial.contains("pool ON"), "probe did not engage the pool:\n{serial}");
+    // Cross-width bit-determinism: the entire stdout — event counts,
+    // checksum, everything printed — must be identical. This is the
+    // in-process half of the contract; no CI dependency.
+    assert_eq!(
+        serial, pooled,
+        "replay output diverged between pool widths 1 and 4"
+    );
+
+    // Cross-commit bit-determinism: the checksum must match the
+    // checked-in golden value (blessed on the first run).
+    let checksum = extract_checksum(&serial);
+    let golden = Path::new(env!("CARGO_MANIFEST_DIR")).join("oracle/replay_golden.toml");
+    for key in [
+        "churn_replay_w8_s40_seed7_dim65536_pool1",
+        "churn_replay_w8_s40_seed7_dim65536_pool4",
+    ] {
+        match check_or_bless(&golden, key, &checksum).unwrap_or_else(|e| panic!("{e:#}")) {
+            GoldenStatus::Matched => {}
+            GoldenStatus::Blessed => println!(
+                "blessed {key} = {checksum} in {} — commit the file to pin it",
+                golden.display()
+            ),
+        }
+    }
+}

@@ -206,6 +206,113 @@ fn prop_fused_ops_match_composition() {
     });
 }
 
+/// A mid-retune split pairing conserves the pair mean: when an adaptive
+/// retune lands between the two endpoints' parameter refreshes — the
+/// sender still holds the old (η, α, α̃) epoch, the receiver the new one
+/// — both sides applying the *agreed* snapshot through
+/// `comm_apply_agreed` must conserve the pair's total mass Σ(x + x̃),
+/// exactly like a pairing between same-epoch workers. (Each side
+/// applying its OWN α̃ would leak mass through the x̃ row; the runtime
+/// resolves the race to the smaller publish epoch — see
+/// `WallClock::publish_acid` and `DynamicsCore::comm_apply_agreed`.)
+#[test]
+fn prop_split_pairing_agreed_params_conserve_pair_mean() {
+    use a2cid2::engine::DynamicsCore;
+    use a2cid2::optim::{LrSchedule, Sgd};
+    check("agreed-pairing-pair-mean", default_cases(), |rng| {
+        let chis = |rng: &mut a2cid2::rng::Xoshiro256| {
+            let chi1 = f64_in(rng, 1.0, 60.0);
+            let chi2 = f64_in(rng, 0.5, chi1.min(4.0));
+            (chi1, chi2)
+        };
+        let (c1, c2) = chis(rng);
+        let old_p = AcidParams::accelerated(c1, c2);
+        let (c1, c2) = chis(rng);
+        let new_p = AcidParams::accelerated(c1, c2);
+        let lr = LrSchedule::Constant { lr: 0.05 };
+        // Sender a: still on the old epoch. Receiver b: already retuned.
+        let core_a = DynamicsCore::with_params(old_p, lr.clone());
+        let mut core_b = DynamicsCore::with_params(old_p, lr);
+        core_b.set_params(new_p);
+
+        let dim = usize_in(rng, 1, 48);
+        let mut a = WorkerState::new(vec_f32(rng, dim, 2.0));
+        let mut b = WorkerState::new(vec_f32(rng, dim, 2.0));
+        // Desynchronize the lazy-mixing clocks with gradient events at
+        // different times, under each worker's own param epoch.
+        let (mut opt_a, mut opt_b) = (Sgd::new(0.0), Sgd::new(0.0));
+        core_a.grad_event(&mut a, f64_in(rng, 0.0, 0.5), &mut opt_a, &vec_f32(rng, dim, 1.0));
+        core_b.grad_event(&mut b, f64_in(rng, 0.0, 0.5), &mut opt_b, &vec_f32(rng, dim, 1.0));
+
+        let t = f64_in(rng, 0.5, 2.0);
+        let mut buf_a = vec![0.0f32; dim];
+        let mut buf_b = vec![0.0f32; dim];
+        core_a.mix_into(&a, t, &mut buf_a);
+        core_b.mix_into(&b, t, &mut buf_b);
+        let mass = |u: &WorkerState, v: &WorkerState| -> f64 {
+            u.x.iter().chain(&u.xt).chain(&v.x).chain(&v.xt).map(|&f| f as f64).sum()
+        };
+        let before = mass(&a, &b);
+        // Both endpoints agree on the OLDER epoch's snapshot.
+        core_a.comm_apply_agreed(&mut a, t, &buf_b, old_p);
+        core_b.comm_apply_agreed(&mut b, t, &buf_a, old_p);
+        let after = mass(&a, &b);
+        assert!(
+            (before - after).abs() < 2e-3 * before.abs().max(1.0),
+            "pair mass leaked across the split pairing: {before} -> {after} \
+             (old α̃ {}, new α̃ {})",
+            old_p.alpha_tilde,
+            new_p.alpha_tilde
+        );
+    });
+}
+
+/// `metrics::render_records` emits strictly valid JSON for adversarial
+/// records: control characters, quotes and backslashes in keys and
+/// strings, NaN/±inf floats (which must render as `null`), and nested
+/// row arrays — pinned by the in-tree strict validator.
+#[test]
+fn prop_render_records_always_valid_json() {
+    use a2cid2::metrics::{render_records, Record};
+    use a2cid2::testing::validate_json;
+    const NASTY: &[char] = &[
+        'a', 'Z', '9', '"', '\\', '/', '\n', '\r', '\t', '\u{1}', '\u{1f}', '\u{7f}', 'é', '🦀',
+        ' ',
+    ];
+    fn nasty_string(rng: &mut a2cid2::rng::Xoshiro256) -> String {
+        (0..usize_in(rng, 0, 12)).map(|_| NASTY[usize_in(rng, 0, NASTY.len())]).collect()
+    }
+    fn nasty_record(rng: &mut a2cid2::rng::Xoshiro256, depth: usize) -> Record {
+        let mut rec = Record::new();
+        for _ in 0..usize_in(rng, 0, 6) {
+            let key = nasty_string(rng);
+            rec = match usize_in(rng, 0, if depth > 0 { 6 } else { 5 }) {
+                // Raw bit patterns cover NaN payloads, ±inf, subnormals.
+                0 => rec.f64(key, f64::from_bits(rng.next_u64())),
+                1 => {
+                    let v = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY][usize_in(rng, 0, 3)];
+                    rec.f64(key, v)
+                }
+                2 => rec.str(key, nasty_string(rng)),
+                3 => rec.u64(key, rng.next_u64()),
+                4 => rec.opt_f64(key, None),
+                _ => rec.records(
+                    key,
+                    (0..usize_in(rng, 0, 3)).map(|_| nasty_record(rng, depth - 1)).collect(),
+                ),
+            };
+        }
+        rec
+    }
+    check("render-records-valid-json", default_cases(), |rng| {
+        let rows: Vec<Record> =
+            (0..usize_in(rng, 0, 4)).map(|_| nasty_record(rng, 2)).collect();
+        let text = render_records(&rows);
+        validate_json(&text).unwrap_or_else(|e| panic!("invalid JSON ({e}):\n{text}"));
+        assert!(!text.contains("NaN") && !text.contains("inf"), "non-finite must render null");
+    });
+}
+
 /// Poisson sampling matches its rate in expectation for any rate (the
 /// runtime's comm-budget emulation is unbiased).
 #[test]
