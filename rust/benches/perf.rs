@@ -8,6 +8,10 @@
 //!     thread's contention;
 //!   * chunk-pool scaling of the large-`dim` kernels vs single thread;
 //!   * snapshot-read latency: published seqlock cell vs mutex lock+copy;
+//!   * every hot kernel per explicit backend (scalar reference vs
+//!     runtime-dispatched SIMD) against a same-size memcpy roofline;
+//!   * coordinator matching throughput: pairings/s, rendezvous vs
+//!     batched strategy, at n = 16 / 64 / 256 workers;
 //!   * simulator event throughput (events/s);
 //!   * PJRT dispatch overhead for the standalone L1 kernel artifacts
 //!     (needs `make artifacts`; skipped gracefully if missing).
@@ -86,6 +90,39 @@ impl Bench {
         self.json.push(format!(
             "{{\"kernel\": \"{kernel}\", \"elements\": {elements}, \"kind\": \"kernel\", \
              \"ns_per_iter\": {:.1}, \"gb_per_s\": {gbs:.3}}}",
+            secs * 1e9
+        ));
+    }
+
+    /// One measured kernel pinned to an explicit [`vecops`] backend:
+    /// labeled `kernel[backend]` in the table and carrying a `backend`
+    /// field in the JSON so the CI perf gate diffs per-backend
+    /// trajectories (rows without the field read back as backend "").
+    fn backend_row(
+        &mut self,
+        kernel: &str,
+        backend: &str,
+        elements: usize,
+        secs: f64,
+        bytes: usize,
+        notes: &str,
+    ) {
+        let gbs = gb_per_s(bytes, secs);
+        let time = if secs >= 1e-4 {
+            format!("{:.2} ms", secs * 1e3)
+        } else {
+            format!("{:.2} us", secs * 1e6)
+        };
+        self.table.row(&[
+            format!("{kernel}[{backend}]"),
+            elements.to_string(),
+            time,
+            format!("{gbs:.1}"),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"backend\": \"{backend}\", \"elements\": {elements}, \
+             \"kind\": \"kernel\", \"ns_per_iter\": {:.1}, \"gb_per_s\": {gbs:.3}}}",
             secs * 1e9
         ));
     }
@@ -288,6 +325,117 @@ fn main() {
             tg1 / tgp,
             &format!("{lanes} lanes"),
         );
+    }
+
+    // ---- Kernel backends: scalar reference vs explicit SIMD ----------
+    // Every hot kernel timed once per available backend (trait methods
+    // called directly, bypassing the latched dispatch) at a size that
+    // does not collide with the rows above, plus a memcpy roofline at
+    // the same size. The simd-vs-scalar derived rows pin the §Perf
+    // acceptance target (>= 1.5x on comm_apply_fused / mix_into at 2^20).
+    {
+        let nb: usize = 1 << 20;
+        let b_iters = if smoke { 10 } else { 100 };
+        let backends = vecops::available_backends();
+
+        let srcb = vec![1.0f32; nb];
+        let mut dstb = vec![0.0f32; nb];
+        let t = time_it(3, b_iters, || {
+            dstb.copy_from_slice(&srcb);
+            std::hint::black_box(&dstb);
+        });
+        bench.row("memcpy (roofline)", nb, t, 8 * nb, "1R + 1W");
+
+        let gb = vec![0.5f32; nb];
+        let pb = vec![0.25f32; nb];
+        let mut xb = vec![1.0f32; nb];
+        let mut xtb = vec![0.5f32; nb];
+        let mut outb = vec![0.0f32; nb];
+        let (mut xb2, mut xtb2) = (vec![-1.0f32; nb], vec![0.25f32; nb]);
+
+        // (backend name, mix_into secs, comm_apply_fused secs) for the
+        // derived speedup rows; available_backends() lists scalar first.
+        let mut marks: Vec<(&'static str, f64, f64)> = Vec::new();
+        for be in &backends {
+            let name = be.name();
+            let t = time_it(3, b_iters, || {
+                be.axpy(1e-6, &gb, &mut xb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("axpy", name, nb, t, 12 * nb, "2R + 1W");
+
+            let t_mi = time_it(3, b_iters, || {
+                be.mix_into(0.9, 0.1, &xb, &xtb, &mut outb);
+                std::hint::black_box(&outb);
+            });
+            bench.backend_row("mix_into", name, nb, t_mi, 12 * nb, "2R + 1W");
+
+            let t = time_it(3, b_iters, || {
+                be.grad_step(1e-6, &gb, &mut xb, &mut xtb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("grad_step", name, nb, t, 20 * nb, "3R + 2W");
+
+            let t = time_it(3, b_iters, || {
+                be.comm_only(0.5, 1.5, &pb, &mut xb, &mut xtb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("comm_only", name, nb, t, 20 * nb, "3R + 2W");
+
+            let t = time_it(3, b_iters, || {
+                be.mix_pair(0.9, 0.1, &mut xb, &mut xtb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("mix_pair", name, nb, t, 16 * nb, "2R + 2W");
+
+            let t = time_it(3, b_iters, || {
+                be.mix_grad(0.9, 0.1, 1e-6, &gb, &mut xb, &mut xtb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("mix_grad", name, nb, t, 20 * nb, "3R + 2W");
+
+            let t_ca = time_it(3, b_iters, || {
+                be.comm_apply_fused(0.9, 0.1, 0.5, 1.5, &pb, &mut xb, &mut xtb);
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("comm_apply_fused", name, nb, t_ca, 20 * nb, "3R + 2W");
+
+            let t = time_it(3, b_iters, || {
+                be.comm_pair_fused(
+                    0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut xb, &mut xtb, &mut xb2, &mut xtb2,
+                );
+                std::hint::black_box(&xb);
+            });
+            bench.backend_row("comm_pair_fused", name, nb, t, 32 * nb, "4R + 4W");
+
+            let t = time_it(3, b_iters, || {
+                std::hint::black_box(be.sq_dist(&xb, &pb));
+            });
+            bench.backend_row("sq_dist", name, nb, t, 8 * nb, "2R, striped f64 acc");
+
+            marks.push((name, t_mi, t_ca));
+        }
+        if marks.len() > 1 {
+            let (simd_name, simd_mi, simd_ca) = marks[marks.len() - 1];
+            let (_, scalar_mi, scalar_ca) = marks[0];
+            bench.note_row(
+                "mix_into simd speedup",
+                nb,
+                simd_mi,
+                &format!("{:.2}x", scalar_mi / simd_mi),
+                scalar_mi / simd_mi,
+                &format!("{simd_name} vs scalar; target >= 1.5x"),
+            );
+            bench.note_row(
+                "comm_apply_fused simd speedup",
+                nb,
+                simd_ca,
+                &format!("{:.2}x", scalar_ca / simd_ca),
+                scalar_ca / simd_ca,
+                &format!("{simd_name} vs scalar; target >= 1.5x"),
+            );
+        }
+        println!("(kernel dispatch latched to backend: {})", vecops::backend_name());
     }
 
     // ---- Snapshot-read latency: seqlock cell vs mutex lock+copy ------
@@ -572,6 +720,97 @@ fn main() {
             events as f64 / secs,
             &format!("{events} events, {updates} retunes"),
         );
+    }
+
+    // ---- Coordinator matching throughput -----------------------------
+    // n workers hammer the pairing protocol over a ring (no payloads, no
+    // Reconfigure churn) until each completes a quota of pairings; the
+    // measured rate is pairings matched per second, rendezvous vs
+    // batched. The batched strategy must win at n = 64 (§Perf target).
+    {
+        use a2cid2::engine::WallClock;
+        use a2cid2::graph::{Graph, Topology};
+        use a2cid2::runtime::coordinator::spawn_coordinator_with;
+        use a2cid2::runtime::{CoordMsg, MatchStrategy, PairReply};
+        use std::sync::mpsc;
+        use std::time::Duration;
+
+        let per_worker = if smoke {
+            25
+        } else if full {
+            400
+        } else {
+            150
+        };
+        for n_workers in [16usize, 64, 256] {
+            let mut rates = [0.0f64; 2];
+            for (si, strategy) in
+                [MatchStrategy::Rendezvous, MatchStrategy::Batched].into_iter().enumerate()
+            {
+                let net = Arc::new(WallClock::from_graph(
+                    &Graph::build(&Topology::Ring, n_workers).unwrap(),
+                    1.0,
+                ));
+                let (tx, handle) = spawn_coordinator_with(net, strategy);
+                let t0 = Instant::now();
+                let threads: Vec<_> = (0..n_workers)
+                    .map(|w| {
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let mut done = 0usize;
+                            while done < per_worker {
+                                let (rtx, rrx) = mpsc::channel();
+                                tx.send(CoordMsg::Available { worker: w, reply: rtx })
+                                    .unwrap();
+                                match rrx.recv_timeout(Duration::from_millis(100)) {
+                                    Ok(PairReply::Peer(_)) => done += 1,
+                                    Ok(PairReply::NoPartnerEver) => break,
+                                    Ok(PairReply::Cancelled) => {}
+                                    Err(_) => {
+                                        // Timed out waiting: cancel, then
+                                        // honor whichever reply won the race.
+                                        tx.send(CoordMsg::Cancel { worker: w }).unwrap();
+                                        match rrx.recv() {
+                                            Ok(PairReply::Peer(_)) => done += 1,
+                                            Ok(PairReply::NoPartnerEver) => break,
+                                            _ => {}
+                                        }
+                                    }
+                                }
+                            }
+                            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+                        })
+                    })
+                    .collect();
+                for th in threads {
+                    th.join().unwrap();
+                }
+                let stats = handle.join().unwrap();
+                let secs = t0.elapsed().as_secs_f64();
+                let rate = stats.total as f64 / secs;
+                rates[si] = rate;
+                let label = match strategy {
+                    MatchStrategy::Rendezvous => "coordinator rendezvous",
+                    MatchStrategy::Batched => "coordinator batched",
+                };
+                bench.note_row(
+                    label,
+                    n_workers,
+                    secs / stats.total.max(1) as f64,
+                    &format!("{rate:.0}/s"),
+                    rate,
+                    &format!("{} pairings matched", stats.total),
+                );
+            }
+            bench.note_row(
+                "coordinator batched speedup",
+                n_workers,
+                1.0 / rates[1].max(1e-9),
+                &format!("{:.2}x", rates[1] / rates[0].max(1e-9)),
+                rates[1] / rates[0].max(1e-9),
+                "pairings/s vs rendezvous; target > 1x at n=64",
+            );
+        }
     }
 
     // PJRT kernel dispatch (the L1 artifact), if artifacts are built.

@@ -152,7 +152,9 @@ impl DynamicsCore {
     }
 
     /// Sync every worker to a common evaluation time (completes the lazy
-    /// mixing; both engines do this before the closing All-Reduce).
+    /// mixing; both engines do this before the closing All-Reduce). The
+    /// per-worker catch-up runs through the pooled `mix_pair` path, so at
+    /// replay-scale dims the closing sync is chunk-parallel too.
     pub fn sync_all(&self, workers: &mut [WorkerState], t: f64) {
         for w in workers {
             w.mix_to(t, &self.mixer);

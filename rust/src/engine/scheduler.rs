@@ -269,6 +269,15 @@ impl WallClock {
         self.active.read().unwrap()[i].binary_search(&j).is_ok()
     }
 
+    /// Copy worker `w`'s current active-neighbor list (sorted) into
+    /// `out`, reusing its capacity. One read-lock acquisition hands the
+    /// batched coordinator the whole candidate list, instead of one
+    /// [`WallClock::has_active_edge`] lock round per queued worker.
+    pub fn active_neighbors_into(&self, w: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(&self.active.read().unwrap()[w]);
+    }
+
     /// Whether worker `w` is currently part of the fleet (churn).
     pub fn is_active(&self, w: usize) -> bool {
         self.worker_active[w].load(Ordering::Acquire)
@@ -460,6 +469,11 @@ mod tests {
         assert_eq!(Scheduler::updates_applied(&shared), 1);
         // Union adjacency is phase-independent.
         assert_eq!(shared.union_neighbors(0).len(), 3);
+        // The batched coordinator's bulk accessor sees the same adjacency
+        // as the per-edge probe.
+        let mut nbuf = vec![99];
+        shared.active_neighbors_into(0, &mut nbuf);
+        assert_eq!(nbuf, vec![1, 2, 3]);
     }
 
     #[test]

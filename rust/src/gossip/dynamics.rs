@@ -18,7 +18,6 @@
 use super::mixing::Mixer;
 use super::params::AcidParams;
 use super::pool;
-use super::vecops;
 
 /// One worker's replica state.
 #[derive(Clone, Debug)]
@@ -49,11 +48,14 @@ impl WorkerState {
     }
 
     /// Bring the pair up to time `t` by applying the momentum flow.
+    /// Shards across the chunk pool at large `dim` (bit-identical to the
+    /// serial kernel), so `sync_all` / final synchronization scales like
+    /// the mid-run kernels.
     pub fn mix_to(&mut self, t: f64, mixer: &Mixer) {
         let dt = t - self.t_last;
         if dt > 0.0 && mixer.eta != 0.0 {
             let w = mixer.weights(dt);
-            vecops::mix_pair(w.wa, w.wb, &mut self.x, &mut self.xt);
+            pool::mix_pair(w.wa, w.wb, &mut self.x, &mut self.xt);
         }
         if dt > 0.0 {
             self.t_last = t;
@@ -194,6 +196,7 @@ pub fn comm_event(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gossip::vecops;
 
     fn mk(x: &[f32]) -> WorkerState {
         WorkerState::new(x.to_vec())

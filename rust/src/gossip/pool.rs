@@ -462,6 +462,17 @@ pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
 
 /// Pool-sharded [`vecops::comm_apply_fused`] (falls back below
 /// [`POOL_MIN_DIM`]).
+///
+/// Degenerate weights `wa = 1, wb = 0` (no pending mix) are routed to
+/// the cheaper [`comm_only`] pass, mirroring what
+/// [`super::dynamics::WorkerState::apply_comm`] does on the serial path —
+/// the fused kernel would move the same bytes but waste two multiplies
+/// and two adds per element. The two paths differ only on signed zeros
+/// (`1·a + 0·b` flushes `−0.0` to `+0.0`; `comm_only` keeps `a` as is),
+/// and [`super::mixing::Mixer::weights`] can never return exactly
+/// `(1.0, 0.0)` for a positive `(η, Δt)` — `wb` stays a tiny nonzero f32
+/// long before `wa` rounds to 1 — so the shortcut is unobservable in any
+/// replay.
 pub fn comm_apply_fused(
     wa: f32,
     wb: f32,
@@ -471,6 +482,9 @@ pub fn comm_apply_fused(
     x: &mut [f32],
     xt: &mut [f32],
 ) {
+    if wa == 1.0 && wb == 0.0 {
+        return comm_only(alpha, alpha_tilde, xj, x, xt);
+    }
     let len = x.len();
     if len < POOL_MIN_DIM {
         return vecops::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt);
@@ -568,6 +582,47 @@ pub fn comm_pair_fused(
     }
 }
 
+/// Pool-sharded [`vecops::mix_pair`] (falls back below [`POOL_MIN_DIM`]).
+/// This is what routes `sync_all` / final-evaluation mixing through the
+/// chunk pool at large `dim`, like the mid-run kernels.
+pub fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::mix_pair(wa, wb, x, xt);
+    }
+    assert_eq!(xt.len(), len);
+    let (xs, ts) = (Span::of_mut(x), Span::of_mut(xt));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::mix_pair(wa, wb, xs.write(lo, hi), ts.write(lo, hi));
+        }
+    });
+    if !pooled {
+        vecops::mix_pair(wa, wb, x, xt);
+    }
+}
+
+/// Pool-sharded [`vecops::average_pair`] (falls back below
+/// [`POOL_MIN_DIM`]) — final synchronization's `x, y ← (x+y)/2`.
+pub fn average_pair(x: &mut [f32], y: &mut [f32]) {
+    let len = x.len();
+    if len < POOL_MIN_DIM {
+        return vecops::average_pair(x, y);
+    }
+    assert_eq!(y.len(), len);
+    let (xs, ys) = (Span::of_mut(x), Span::of_mut(y));
+    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+        let (lo, hi) = chunk_bounds(len, c);
+        unsafe {
+            vecops::average_pair(xs.write(lo, hi), ys.write(lo, hi));
+        }
+    });
+    if !pooled {
+        vecops::average_pair(x, y);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -636,6 +691,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pooled_mix_pair_and_average_pair_bit_identical_to_serial() {
+        let (x0, t0) = (randvec(DIM, 11), randvec(DIM, 12));
+        let (mut x, mut t) = (x0.clone(), t0.clone());
+        mix_pair(0.85, 0.15, &mut x, &mut t);
+        let (mut rx, mut rt) = (x0.clone(), t0.clone());
+        vecops::mix_pair(0.85, 0.15, &mut rx, &mut rt);
+        assert_eq!(x, rx);
+        assert_eq!(t, rt);
+
+        let (mut a, mut b) = (x0.clone(), t0.clone());
+        average_pair(&mut a, &mut b);
+        let (mut ra, mut rb) = (x0, t0);
+        vecops::average_pair(&mut ra, &mut rb);
+        assert_eq!(a, ra);
+        assert_eq!(b, rb);
+    }
+
+    #[test]
+    fn degenerate_weights_route_to_comm_only() {
+        // wa = 1, wb = 0 (no pending mix): pool::comm_apply_fused must
+        // behave exactly like pool::comm_only, the path it routes to.
+        let xj = randvec(DIM, 13);
+        let (x0, t0) = (randvec(DIM, 14), randvec(DIM, 15));
+        let (mut x, mut t) = (x0.clone(), t0.clone());
+        comm_apply_fused(1.0, 0.0, 0.5, 1.5, &xj, &mut x, &mut t);
+        let (mut rx, mut rt) = (x0, t0);
+        comm_only(0.5, 1.5, &xj, &mut rx, &mut rt);
+        assert_eq!(x, rx);
+        assert_eq!(t, rt);
     }
 
     #[test]

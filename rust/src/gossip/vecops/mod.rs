@@ -1,19 +1,214 @@
-//! Fused vector kernels for the gossip hot path.
+//! Fused vector kernels for the gossip hot path, behind an explicit
+//! backend layer.
 //!
 //! These are the Rust mirrors of the L1 Pallas kernel
 //! (`python/compile/kernels/acid_mix.py`): one pass over the parameter
-//! vectors per event instead of a chain of BLAS-1 calls. All loops are
-//! written over plain slices with exact-size iterators so LLVM
-//! auto-vectorizes them; the `perf` bench measures achieved bandwidth
-//! against the memcpy roofline.
+//! vectors per event instead of a chain of BLAS-1 calls. Since PR 6 the
+//! kernels live behind the [`KernelBackend`] trait:
+//!
+//! * [`scalar`] — the reference implementation (plain slice loops,
+//!   LLVM-auto-vectorized). Defines the numerics every other backend
+//!   must reproduce bit-for-bit.
+//! * `simd` — explicit wide-lane `std::arch` kernels (AVX2 on x86_64,
+//!   NEON on aarch64), runtime-detected. Bit-identical to scalar by
+//!   construction: same per-element expression, separate multiply and
+//!   add (no FMA contraction), scalar tails, and a fixed
+//!   [`SQ_DIST_LANES`]-striped accumulation order for the one reduction.
+//!
+//! The backend is selected ONCE per process, on first kernel use:
+//! `A2CID2_KERNEL_BACKEND=auto` (default) picks SIMD when the CPU
+//! supports it, `scalar` forces the reference, and
+//! `simd`/`avx2`/`neon`/`avx512` force the wide path (panicking if the
+//! CPU cannot run it — `avx512` maps to the 256-bit path, see
+//! `simd.rs` for why there is no separate 512-bit code path). Because
+//! every backend is bit-identical, the replay goldens in
+//! `rust/oracle/replay_golden.toml` and both engines' determinism
+//! guarantees hold regardless of the selection; CI runs the golden
+//! replay under both `scalar` and `auto` to enforce exactly that.
+//!
+//! The free functions below keep the historical call-side API; they
+//! dispatch through [`backend`]. This trait is also the seam where the
+//! future PJRT device backend plugs in. The `perf` bench measures every
+//! backend's achieved bandwidth against the memcpy roofline.
+
+pub mod scalar;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+mod simd;
+
+use std::sync::OnceLock;
+
+pub use scalar::SQ_DIST_LANES;
+
+/// The kernel interface every compute backend implements.
+///
+/// Default method bodies delegate to the [`scalar`] reference, so a
+/// backend only overrides what it accelerates — and the reference is,
+/// by construction, the semantics. Implementations MUST be bit-identical
+/// to the defaults (see the module docs; the `backend_equivalence`
+/// integration tests enforce this property for every in-tree backend).
+#[allow(clippy::too_many_arguments)]
+pub trait KernelBackend: Send + Sync {
+    /// Short stable identifier ("scalar", "avx2", "neon") — used by the
+    /// `A2CID2_KERNEL_BACKEND` override, bench rows, and logs.
+    fn name(&self) -> &'static str;
+
+    /// `y ← y + a·x` (axpy).
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        scalar::axpy(a, x, y)
+    }
+
+    /// `out ← wa·x + wb·x̃` (read-only mix into a send buffer).
+    fn mix_into(&self, wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        scalar::mix_into(wa, wb, x, xt, out)
+    }
+
+    /// `x ← x − γ·g`, `x̃ ← x̃ − γ·g` in one pass.
+    fn grad_step(&self, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        scalar::grad_step(gamma, g, x, xt)
+    }
+
+    /// `x ← x − α·(x − xj)`, `x̃ ← x̃ − α̃·(x − xj)`.
+    fn comm_only(&self, alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        scalar::comm_only(alpha, alpha_tilde, xj, x, xt)
+    }
+
+    /// `x' = wa·x + wb·x̃`, `x̃' = wb·x + wa·x̃` in place.
+    fn mix_pair(&self, wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        scalar::mix_pair(wa, wb, x, xt)
+    }
+
+    /// `x' = mix(x, x̃) − γ·g`, `x̃' = mix(x̃, x) − γ·g`.
+    fn mix_grad(&self, wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        scalar::mix_grad(wa, wb, gamma, g, x, xt)
+    }
+
+    /// Receive-side fused pass: pending mix + `(α, α̃)` update.
+    fn comm_apply_fused(
+        &self,
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        scalar::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt)
+    }
+
+    /// Historical name for [`KernelBackend::comm_apply_fused`] (mirrors
+    /// the L1 Pallas kernel `acid_mix_comm`).
+    fn mix_comm(
+        &self,
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        self.comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt)
+    }
+
+    /// Fully-fused pairwise communication event over both endpoints.
+    fn comm_pair_fused(
+        &self,
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        scalar::comm_pair_fused(waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb)
+    }
+
+    /// `‖x − y‖²` with the fixed striped accumulation order.
+    fn sq_dist(&self, x: &[f32], y: &[f32]) -> f64 {
+        scalar::sq_dist(x, y)
+    }
+
+    /// `x, y ← (x+y)/2` into both.
+    fn average_pair(&self, x: &mut [f32], y: &mut [f32]) {
+        scalar::average_pair(x, y)
+    }
+}
+
+/// The reference backend: every method keeps its default (scalar) body.
+pub struct ScalarBackend;
+
+impl KernelBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+static SCALAR_BACKEND: ScalarBackend = ScalarBackend;
+
+/// The scalar reference backend (always available).
+pub fn scalar_backend() -> &'static dyn KernelBackend {
+    &SCALAR_BACKEND
+}
+
+fn simd_backend() -> Option<&'static dyn KernelBackend> {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        if simd::available() {
+            return Some(&simd::SIMD_BACKEND);
+        }
+    }
+    None
+}
+
+fn select_backend() -> &'static dyn KernelBackend {
+    let choice = std::env::var("A2CID2_KERNEL_BACKEND").unwrap_or_default();
+    match choice.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => simd_backend().unwrap_or_else(scalar_backend),
+        "scalar" => scalar_backend(),
+        "simd" | "wide" | "avx2" | "neon" | "avx512" => simd_backend().unwrap_or_else(|| {
+            panic!("A2CID2_KERNEL_BACKEND={choice}: no SIMD backend on this CPU/arch")
+        }),
+        other => {
+            panic!("A2CID2_KERNEL_BACKEND={other}: expected auto|scalar|simd|avx2|neon|avx512")
+        }
+    }
+}
+
+/// The process-wide kernel backend, selected once on first use from
+/// `A2CID2_KERNEL_BACKEND` (see module docs for the accepted values).
+pub fn backend() -> &'static dyn KernelBackend {
+    static BACKEND: OnceLock<&'static dyn KernelBackend> = OnceLock::new();
+    *BACKEND.get_or_init(select_backend)
+}
+
+/// Name of the selected backend ("scalar", "avx2", "neon").
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+/// Every backend usable on this machine, scalar first. This is what the
+/// backend-equivalence tests and the per-backend bench rows iterate.
+pub fn available_backends() -> Vec<&'static dyn KernelBackend> {
+    let mut v: Vec<&'static dyn KernelBackend> = vec![scalar_backend()];
+    if let Some(s) = simd_backend() {
+        v.push(s);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// Historical free-function API: dispatches through the selected backend.
+// ---------------------------------------------------------------------
 
 /// `y ← y + a·x` (axpy).
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * *xi;
-    }
+    backend().axpy(a, x, y)
 }
 
 /// Read-only momentum mixing into a separate output buffer:
@@ -28,11 +223,7 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
 /// of a state that was mixed in place.
 #[inline]
 pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
-    assert_eq!(x.len(), xt.len());
-    assert_eq!(x.len(), out.len());
-    for ((o, xi), ti) in out.iter_mut().zip(x).zip(xt) {
-        *o = wa * *xi + wb * *ti;
-    }
+    backend().mix_into(wa, wb, x, xt, out)
 }
 
 /// Fused two-row gradient step with no pending mix:
@@ -41,14 +232,7 @@ pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
 /// Bit-compatible with `axpy(−γ, g, ·)` applied to each row.
 #[inline]
 pub fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
-    assert_eq!(x.len(), xt.len());
-    assert_eq!(x.len(), g.len());
-    let a = -gamma;
-    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
-        let step = a * *gi;
-        *xi += step;
-        *ti += step;
-    }
+    backend().grad_step(gamma, g, x, xt)
 }
 
 /// The `(α, α̃)` averaging update alone, with no pending mix: given the
@@ -59,13 +243,7 @@ pub fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
 /// multiplies and two adds per element).
 #[inline]
 pub fn comm_only(alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
-    assert_eq!(x.len(), xt.len());
-    assert_eq!(x.len(), xj.len());
-    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
-        let m = *xi - *pj;
-        *xi -= alpha * m;
-        *ti -= alpha_tilde * m;
-    }
+    backend().comm_only(alpha, alpha_tilde, xj, x, xt)
 }
 
 /// Fused momentum mixing: given mixing weights `(wa, wb)` with
@@ -74,28 +252,14 @@ pub fn comm_only(alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &m
 /// two writes per element.
 #[inline]
 pub fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
-    assert_eq!(x.len(), xt.len());
-    for (xi, ti) in x.iter_mut().zip(xt.iter_mut()) {
-        let a = *xi;
-        let b = *ti;
-        *xi = wa * a + wb * b;
-        *ti = wb * a + wa * b;
-    }
+    backend().mix_pair(wa, wb, x, xt)
 }
 
 /// Fused mixing + gradient step (Algorithm 1, lines 9–11, per the SDE the
 /// gradient hits both rows): `x' = mix(x,xt) − γ·g`, `xt' = mix(xt,x) − γ·g`.
 #[inline]
 pub fn mix_grad(wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
-    assert_eq!(x.len(), xt.len());
-    assert_eq!(x.len(), g.len());
-    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
-        let a = *xi;
-        let b = *ti;
-        let step = gamma * *gi;
-        *xi = wa * a + wb * b - step;
-        *ti = wb * a + wa * b - step;
-    }
+    backend().mix_grad(wa, wb, gamma, g, x, xt)
 }
 
 /// Fused mixing + communication step (Algorithm 1, lines 16–19): takes
@@ -117,17 +281,7 @@ pub fn comm_apply_fused(
     x: &mut [f32],
     xt: &mut [f32],
 ) {
-    assert_eq!(x.len(), xt.len());
-    assert_eq!(x.len(), xj.len());
-    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
-        let a = *xi;
-        let b = *ti;
-        let mixed_x = wa * a + wb * b;
-        let mixed_t = wb * a + wa * b;
-        let m = mixed_x - *pj;
-        *xi = mixed_x - alpha * m;
-        *ti = mixed_t - alpha_tilde * m;
-    }
+    backend().comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt)
 }
 
 /// Historical name for [`comm_apply_fused`], kept because it mirrors the
@@ -143,7 +297,7 @@ pub fn mix_comm(
     x: &mut [f32],
     xt: &mut [f32],
 ) {
-    comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt)
+    backend().mix_comm(wa, wb, alpha, alpha_tilde, xj, x, xt)
 }
 
 /// Fully-fused pairwise communication event over BOTH endpoints: applies
@@ -167,52 +321,21 @@ pub fn comm_pair_fused(
     xb: &mut [f32],
     xtb: &mut [f32],
 ) {
-    assert_eq!(xa.len(), xta.len());
-    assert_eq!(xa.len(), xb.len());
-    assert_eq!(xa.len(), xtb.len());
-    for (((a, ta), b), tb) in xa
-        .iter_mut()
-        .zip(xta.iter_mut())
-        .zip(xb.iter_mut())
-        .zip(xtb.iter_mut())
-    {
-        // Mix each endpoint to the event time.
-        let (va, vta) = (*a, *ta);
-        let (vb, vtb) = (*b, *tb);
-        let ma = waa * va + wba * vta;
-        let mta = wba * va + waa * vta;
-        let mb = wab * vb + wbb * vtb;
-        let mtb = wbb * vb + wab * vtb;
-        // Antisymmetric averaging update: m = x_a − x_b.
-        let m = ma - mb;
-        *a = ma - alpha * m;
-        *ta = mta - alpha_tilde * m;
-        *b = mb + alpha * m;
-        *tb = mtb + alpha_tilde * m;
-    }
+    backend().comm_pair_fused(waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb)
 }
 
 /// Sum of squared differences `‖x − y‖²` (consensus bookkeeping).
+/// Accumulates in a fixed [`SQ_DIST_LANES`]-striped order that is the
+/// same in every backend (see [`scalar::sq_dist`]).
 #[inline]
 pub fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
-    assert_eq!(x.len(), y.len());
-    let mut acc = 0.0f64;
-    for (a, b) in x.iter().zip(y) {
-        let d = (*a - *b) as f64;
-        acc += d * d;
-    }
-    acc
+    backend().sq_dist(x, y)
 }
 
 /// In-place average of two vectors into both: `x, y ← (x+y)/2`.
 #[inline]
 pub fn average_pair(x: &mut [f32], y: &mut [f32]) {
-    assert_eq!(x.len(), y.len());
-    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
-        let m = 0.5 * (*a + *b);
-        *a = m;
-        *b = m;
-    }
+    backend().average_pair(x, y)
 }
 
 #[cfg(test)]
@@ -395,5 +518,32 @@ mod tests {
         assert_eq!(a, vec![1.0, 1.0]);
         assert_eq!(b, vec![1.0, 1.0]);
         assert_eq!(sq_dist(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn backend_dispatch_is_latched_and_known() {
+        let name = backend_name();
+        assert!(
+            matches!(name, "scalar" | "avx2" | "neon"),
+            "unexpected backend {name}"
+        );
+        // Latched: the same selection is returned on every call.
+        assert_eq!(backend().name(), name);
+        let avail = available_backends();
+        assert_eq!(avail[0].name(), "scalar");
+        assert!(
+            avail.iter().any(|b| b.name() == name),
+            "selected backend {name} must be among the available ones"
+        );
+    }
+
+    #[test]
+    fn sq_dist_striped_order_is_exact_on_integers() {
+        // 19 elements = 2 full stripes + ragged tail of 3; differences
+        // are small integers, so every partial sum is exact and the
+        // striped order must reproduce the plain sum exactly.
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..19).map(|i| (i as f32) - 2.0).collect();
+        assert_eq!(sq_dist(&x, &y), 4.0 * 19.0);
     }
 }

@@ -1,0 +1,202 @@
+//! Scalar reference implementations of the gossip kernels.
+//!
+//! These are THE definition of every kernel's numerics: any other
+//! backend (see `simd`) must produce bit-identical results, element by
+//! element, because the replay goldens in `rust/oracle/replay_golden.toml`
+//! and both engines' determinism tests were blessed against this code.
+//! The loops are written over plain slices with exact-size iterators so
+//! LLVM auto-vectorizes them; they double as the tail handler for the
+//! explicit-SIMD backend on ragged lengths.
+//!
+//! Numeric contract (shared with every backend):
+//! * elementwise kernels evaluate the exact per-element expression of the
+//!   doc comment, left to right, with separate multiply and add — no FMA
+//!   contraction (Rust never contracts `a * b + c` without fast-math, so
+//!   these loops are a stable reference);
+//! * the one reduction, [`sq_dist`], accumulates in a fixed
+//!   [`SQ_DIST_LANES`]-striped order that is independent of how a backend
+//!   vectorizes it (see its doc comment).
+
+/// Number of independent accumulator lanes in [`sq_dist`].
+///
+/// Eight f64 lanes: the widest layout any in-tree backend wants (AVX2
+/// processes 8 f32 per step and widens into two 4-lane f64 registers;
+/// NEON covers the same 8-element block with four 2-lane f64 registers).
+/// The scalar reference uses the same striping so every backend folds the
+/// same partial sums in the same order.
+pub const SQ_DIST_LANES: usize = 8;
+
+/// `y ← y + a·x` (axpy).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// `out ← wa·x + wb·x̃` (read-only momentum mix into a send buffer).
+#[inline]
+pub fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), out.len());
+    for ((o, xi), ti) in out.iter_mut().zip(x).zip(xt) {
+        *o = wa * *xi + wb * *ti;
+    }
+}
+
+/// `x ← x − γ·g`, `x̃ ← x̃ − γ·g` in one pass (`g` is read once).
+#[inline]
+pub fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), g.len());
+    let a = -gamma;
+    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
+        let step = a * *gi;
+        *xi += step;
+        *ti += step;
+    }
+}
+
+/// `x ← x − α·(x − xj)`, `x̃ ← x̃ − α̃·(x − xj)` with no pending mix.
+#[inline]
+pub fn comm_only(alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), xj.len());
+    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
+        let m = *xi - *pj;
+        *xi -= alpha * m;
+        *ti -= alpha_tilde * m;
+    }
+}
+
+/// `x' = wa·x + wb·x̃`, `x̃' = wb·x + wa·x̃` in place.
+#[inline]
+pub fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    for (xi, ti) in x.iter_mut().zip(xt.iter_mut()) {
+        let a = *xi;
+        let b = *ti;
+        *xi = wa * a + wb * b;
+        *ti = wb * a + wa * b;
+    }
+}
+
+/// `x' = mix(x, x̃) − γ·g`, `x̃' = mix(x̃, x) − γ·g` in one pass.
+#[inline]
+pub fn mix_grad(wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), g.len());
+    for ((xi, ti), gi) in x.iter_mut().zip(xt.iter_mut()).zip(g) {
+        let a = *xi;
+        let b = *ti;
+        let step = gamma * *gi;
+        *xi = wa * a + wb * b - step;
+        *ti = wb * a + wa * b - step;
+    }
+}
+
+/// `x' = mix − α·(mix − xj)`, `x̃' = mixt − α̃·(mix − xj)` where
+/// `mix/mixt` fold this worker's pending momentum mix.
+#[inline]
+pub fn comm_apply_fused(
+    wa: f32,
+    wb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xj: &[f32],
+    x: &mut [f32],
+    xt: &mut [f32],
+) {
+    assert_eq!(x.len(), xt.len());
+    assert_eq!(x.len(), xj.len());
+    for ((xi, ti), pj) in x.iter_mut().zip(xt.iter_mut()).zip(xj) {
+        let a = *xi;
+        let b = *ti;
+        let mixed_x = wa * a + wb * b;
+        let mixed_t = wb * a + wa * b;
+        let m = mixed_x - *pj;
+        *xi = mixed_x - alpha * m;
+        *ti = mixed_t - alpha_tilde * m;
+    }
+}
+
+/// Fully-fused pairwise communication event over BOTH endpoints.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn comm_pair_fused(
+    waa: f32,
+    wba: f32,
+    wab: f32,
+    wbb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xa: &mut [f32],
+    xta: &mut [f32],
+    xb: &mut [f32],
+    xtb: &mut [f32],
+) {
+    assert_eq!(xa.len(), xta.len());
+    assert_eq!(xa.len(), xb.len());
+    assert_eq!(xa.len(), xtb.len());
+    for (((a, ta), b), tb) in xa
+        .iter_mut()
+        .zip(xta.iter_mut())
+        .zip(xb.iter_mut())
+        .zip(xtb.iter_mut())
+    {
+        // Mix each endpoint to the event time.
+        let (va, vta) = (*a, *ta);
+        let (vb, vtb) = (*b, *tb);
+        let ma = waa * va + wba * vta;
+        let mta = wba * va + waa * vta;
+        let mb = wab * vb + wbb * vtb;
+        let mtb = wbb * vb + wab * vtb;
+        // Antisymmetric averaging update: m = x_a − x_b.
+        let m = ma - mb;
+        *a = ma - alpha * m;
+        *ta = mta - alpha_tilde * m;
+        *b = mb + alpha * m;
+        *tb = mtb + alpha_tilde * m;
+    }
+}
+
+/// Sum of squared differences `‖x − y‖²` (consensus bookkeeping).
+///
+/// Fixed accumulation order, identical in every backend: the vectors are
+/// walked in blocks of [`SQ_DIST_LANES`]; element `8·i + k` contributes
+/// `d²` (with `d` the f32 difference widened to f64) to lane accumulator
+/// `acc[k]`; a ragged tail of length `r` feeds lanes `0..r` in order; the
+/// eight lane sums are then folded left to right. A SIMD backend that
+/// keeps one virtual accumulator per lane reproduces this bit-for-bit, so
+/// the reduction result does not depend on the selected backend.
+#[inline]
+pub fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc = [0.0f64; SQ_DIST_LANES];
+    let mut i = 0usize;
+    while i + SQ_DIST_LANES <= n {
+        for k in 0..SQ_DIST_LANES {
+            let d = (x[i + k] - y[i + k]) as f64;
+            acc[k] += d * d;
+        }
+        i += SQ_DIST_LANES;
+    }
+    for (k, j) in (i..n).enumerate() {
+        let d = (x[j] - y[j]) as f64;
+        acc[k] += d * d;
+    }
+    acc.iter().sum()
+}
+
+/// In-place average of two vectors into both: `x, y ← (x+y)/2`.
+#[inline]
+pub fn average_pair(x: &mut [f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let m = 0.5 * (*a + *b);
+        *a = m;
+        *b = m;
+    }
+}

@@ -1,0 +1,668 @@
+//! Explicit wide-lane SIMD backend (`std::arch`): AVX2 on x86_64, NEON
+//! on aarch64.
+//!
+//! Bit-identity contract: every lane evaluates the scalar reference's
+//! per-element expression with SEPARATE multiply and add instructions —
+//! never a fused multiply-add, whose single rounding would diverge from
+//! the scalar kernels' two roundings and flip the replay FNV checksums.
+//! On x86 that means `_mm256_mul_ps` + `_mm256_add_ps` (no
+//! `_mm256_fmadd_ps`); on aarch64 `vmulq_f32` + `vaddq_f32` (never
+//! `vmlaq_f32`, which lowers to fused FMLA). Ragged tails shorter than a
+//! vector are delegated to the scalar reference on the remainder slices,
+//! which is bit-identical by construction. The [`sq_dist`] reduction
+//! keeps one virtual f64 accumulator per stripe lane, matching the
+//! scalar reference's fixed `SQ_DIST_LANES`-striped accumulation order.
+//!
+//! There is intentionally no separate AVX-512 path: these kernels are
+//! memory-bound at the dims where the backend matters (the 256-bit path
+//! already saturates DRAM), 512-bit execution downclocks several client
+//! parts, and the 512-bit intrinsics need a much newer toolchain. The
+//! `avx512` env value therefore selects this backend.
+
+use super::KernelBackend;
+
+/// The wide-lane backend. Handed out by `super::select_backend` only
+/// after [`available`] confirmed the required CPU features, which is what
+/// makes the `unsafe` kernel calls inside sound.
+pub(super) struct SimdBackend;
+
+/// Singleton instance (the dispatch layer deals in `&'static dyn`).
+pub(super) static SIMD_BACKEND: SimdBackend = SimdBackend;
+
+#[cfg(target_arch = "x86_64")]
+const NAME: &str = "avx2";
+#[cfg(target_arch = "aarch64")]
+const NAME: &str = "neon";
+
+/// Whether this backend can run on the current CPU. NEON is mandatory
+/// on aarch64; AVX2 is probed at runtime.
+pub(super) fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl KernelBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::axpy(a, x, y) }
+    }
+
+    fn mix_into(&self, wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), out.len());
+        unsafe { imp::mix_into(wa, wb, x, xt, out) }
+    }
+
+    fn grad_step(&self, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), g.len());
+        unsafe { imp::grad_step(gamma, g, x, xt) }
+    }
+
+    fn comm_only(&self, alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), xj.len());
+        unsafe { imp::comm_only(alpha, alpha_tilde, xj, x, xt) }
+    }
+
+    fn mix_pair(&self, wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        unsafe { imp::mix_pair(wa, wb, x, xt) }
+    }
+
+    fn mix_grad(&self, wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), g.len());
+        unsafe { imp::mix_grad(wa, wb, gamma, g, x, xt) }
+    }
+
+    fn comm_apply_fused(
+        &self,
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), xj.len());
+        unsafe { imp::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt) }
+    }
+
+    fn comm_pair_fused(
+        &self,
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        assert_eq!(xa.len(), xta.len());
+        assert_eq!(xa.len(), xb.len());
+        assert_eq!(xa.len(), xtb.len());
+        unsafe { imp::comm_pair_fused(waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb) }
+    }
+
+    fn sq_dist(&self, x: &[f32], y: &[f32]) -> f64 {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::sq_dist(x, y) }
+    }
+
+    fn average_pair(&self, x: &mut [f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::average_pair(x, y) }
+    }
+}
+
+/// AVX2: 8 f32 lanes per step. Safety: callers (the trait impl above)
+/// guarantee equal slice lengths and that AVX2 was detected.
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use crate::gossip::vecops::scalar;
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 8;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            // y + (a·x): separate mul and add — no FMA (bit-identity).
+            let r = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        scalar::axpy(a, &x[i..], &mut y[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let vwa = _mm256_set1_ps(wa);
+        let vwb = _mm256_set1_ps(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm256_loadu_ps(xt.as_ptr().add(i));
+            let r = _mm256_add_ps(_mm256_mul_ps(vwa, vx), _mm256_mul_ps(vwb, vt));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        scalar::mix_into(wa, wb, &x[i..], &xt[i..], &mut out[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(-gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vg = _mm256_loadu_ps(g.as_ptr().add(i));
+            let step = _mm256_mul_ps(va, vg);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm256_loadu_ps(xt.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_add_ps(vx, step));
+            _mm256_storeu_ps(xt.as_mut_ptr().add(i), _mm256_add_ps(vt, step));
+            i += LANES;
+        }
+        scalar::grad_step(gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn comm_only(
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let val = _mm256_set1_ps(alpha);
+        let vat = _mm256_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm256_loadu_ps(xt.as_ptr().add(i));
+            let vp = _mm256_loadu_ps(xj.as_ptr().add(i));
+            let m = _mm256_sub_ps(vx, vp);
+            let rx = _mm256_sub_ps(vx, _mm256_mul_ps(val, m));
+            let rt = _mm256_sub_ps(vt, _mm256_mul_ps(vat, m));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm256_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::comm_only(alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let vwa = _mm256_set1_ps(wa);
+        let vwb = _mm256_set1_ps(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = _mm256_loadu_ps(x.as_ptr().add(i));
+            let b = _mm256_loadu_ps(xt.as_ptr().add(i));
+            let rx = _mm256_add_ps(_mm256_mul_ps(vwa, a), _mm256_mul_ps(vwb, b));
+            let rt = _mm256_add_ps(_mm256_mul_ps(vwb, a), _mm256_mul_ps(vwa, b));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm256_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::mix_pair(wa, wb, &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mix_grad(
+        wa: f32,
+        wb: f32,
+        gamma: f32,
+        g: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = _mm256_set1_ps(wa);
+        let vwb = _mm256_set1_ps(wb);
+        let vgamma = _mm256_set1_ps(gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = _mm256_loadu_ps(x.as_ptr().add(i));
+            let b = _mm256_loadu_ps(xt.as_ptr().add(i));
+            let vg = _mm256_loadu_ps(g.as_ptr().add(i));
+            let step = _mm256_mul_ps(vgamma, vg);
+            let mx = _mm256_add_ps(_mm256_mul_ps(vwa, a), _mm256_mul_ps(vwb, b));
+            let mt = _mm256_add_ps(_mm256_mul_ps(vwb, a), _mm256_mul_ps(vwa, b));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_sub_ps(mx, step));
+            _mm256_storeu_ps(xt.as_mut_ptr().add(i), _mm256_sub_ps(mt, step));
+            i += LANES;
+        }
+        scalar::mix_grad(wa, wb, gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn comm_apply_fused(
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = _mm256_set1_ps(wa);
+        let vwb = _mm256_set1_ps(wb);
+        let val = _mm256_set1_ps(alpha);
+        let vat = _mm256_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = _mm256_loadu_ps(x.as_ptr().add(i));
+            let b = _mm256_loadu_ps(xt.as_ptr().add(i));
+            let vp = _mm256_loadu_ps(xj.as_ptr().add(i));
+            let mixed_x = _mm256_add_ps(_mm256_mul_ps(vwa, a), _mm256_mul_ps(vwb, b));
+            let mixed_t = _mm256_add_ps(_mm256_mul_ps(vwb, a), _mm256_mul_ps(vwa, b));
+            let m = _mm256_sub_ps(mixed_x, vp);
+            let rx = _mm256_sub_ps(mixed_x, _mm256_mul_ps(val, m));
+            let rt = _mm256_sub_ps(mixed_t, _mm256_mul_ps(vat, m));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm256_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::comm_apply_fused(wa, wb, alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn comm_pair_fused(
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        let n = xa.len();
+        let vwaa = _mm256_set1_ps(waa);
+        let vwba = _mm256_set1_ps(wba);
+        let vwab = _mm256_set1_ps(wab);
+        let vwbb = _mm256_set1_ps(wbb);
+        let val = _mm256_set1_ps(alpha);
+        let vat = _mm256_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let va = _mm256_loadu_ps(xa.as_ptr().add(i));
+            let vta = _mm256_loadu_ps(xta.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(xb.as_ptr().add(i));
+            let vtb = _mm256_loadu_ps(xtb.as_ptr().add(i));
+            let ma = _mm256_add_ps(_mm256_mul_ps(vwaa, va), _mm256_mul_ps(vwba, vta));
+            let mta = _mm256_add_ps(_mm256_mul_ps(vwba, va), _mm256_mul_ps(vwaa, vta));
+            let mb = _mm256_add_ps(_mm256_mul_ps(vwab, vb), _mm256_mul_ps(vwbb, vtb));
+            let mtb = _mm256_add_ps(_mm256_mul_ps(vwbb, vb), _mm256_mul_ps(vwab, vtb));
+            let m = _mm256_sub_ps(ma, mb);
+            _mm256_storeu_ps(xa.as_mut_ptr().add(i), _mm256_sub_ps(ma, _mm256_mul_ps(val, m)));
+            _mm256_storeu_ps(
+                xta.as_mut_ptr().add(i),
+                _mm256_sub_ps(mta, _mm256_mul_ps(vat, m)),
+            );
+            _mm256_storeu_ps(xb.as_mut_ptr().add(i), _mm256_add_ps(mb, _mm256_mul_ps(val, m)));
+            _mm256_storeu_ps(
+                xtb.as_mut_ptr().add(i),
+                _mm256_add_ps(mtb, _mm256_mul_ps(vat, m)),
+            );
+            i += LANES;
+        }
+        scalar::comm_pair_fused(
+            waa,
+            wba,
+            wab,
+            wbb,
+            alpha,
+            alpha_tilde,
+            &mut xa[i..],
+            &mut xta[i..],
+            &mut xb[i..],
+            &mut xtb[i..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len();
+        // Two 4-wide f64 accumulators = virtual stripe lanes 0–3 / 4–7,
+        // mirroring the scalar reference's SQ_DIST_LANES striping.
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let d = _mm256_sub_ps(vx, vy); // f32 difference, then widen — as scalar
+            let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(d));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(dlo, dlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(dhi, dhi));
+            i += LANES;
+        }
+        let mut acc = [0.0f64; LANES];
+        _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+        // Ragged tail feeds lanes 0..r, then fold left to right — the
+        // exact order of the scalar reference.
+        for (k, j) in (i..n).enumerate() {
+            let d = (x[j] - y[j]) as f64;
+            acc[k] += d * d;
+        }
+        acc.iter().sum()
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn average_pair(x: &mut [f32], y: &mut [f32]) {
+        let n = x.len();
+        let vhalf = _mm256_set1_ps(0.5);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = _mm256_loadu_ps(x.as_ptr().add(i));
+            let b = _mm256_loadu_ps(y.as_ptr().add(i));
+            let m = _mm256_mul_ps(vhalf, _mm256_add_ps(a, b));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), m);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), m);
+            i += LANES;
+        }
+        scalar::average_pair(&mut x[i..], &mut y[i..]);
+    }
+}
+
+/// NEON: 4 f32 lanes per step (mandatory on aarch64). Safety: callers
+/// (the trait impl above) guarantee equal slice lengths.
+#[cfg(target_arch = "aarch64")]
+mod imp {
+    use crate::gossip::vecops::scalar;
+    use core::arch::aarch64::*;
+
+    const LANES: usize = 4;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            // y + (a·x): vmulq + vaddq, never vmlaq (fused FMLA).
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+            i += LANES;
+        }
+        scalar::axpy(a, &x[i..], &mut y[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let vwa = vdupq_n_f32(wa);
+        let vwb = vdupq_n_f32(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vt = vld1q_f32(xt.as_ptr().add(i));
+            let r = vaddq_f32(vmulq_f32(vwa, vx), vmulq_f32(vwb, vt));
+            vst1q_f32(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        scalar::mix_into(wa, wb, &x[i..], &xt[i..], &mut out[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(-gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vg = vld1q_f32(g.as_ptr().add(i));
+            let step = vmulq_f32(va, vg);
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vt = vld1q_f32(xt.as_ptr().add(i));
+            vst1q_f32(x.as_mut_ptr().add(i), vaddq_f32(vx, step));
+            vst1q_f32(xt.as_mut_ptr().add(i), vaddq_f32(vt, step));
+            i += LANES;
+        }
+        scalar::grad_step(gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn comm_only(
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let val = vdupq_n_f32(alpha);
+        let vat = vdupq_n_f32(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vt = vld1q_f32(xt.as_ptr().add(i));
+            let vp = vld1q_f32(xj.as_ptr().add(i));
+            let m = vsubq_f32(vx, vp);
+            vst1q_f32(x.as_mut_ptr().add(i), vsubq_f32(vx, vmulq_f32(val, m)));
+            vst1q_f32(xt.as_mut_ptr().add(i), vsubq_f32(vt, vmulq_f32(vat, m)));
+            i += LANES;
+        }
+        scalar::comm_only(alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let vwa = vdupq_n_f32(wa);
+        let vwb = vdupq_n_f32(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = vld1q_f32(x.as_ptr().add(i));
+            let b = vld1q_f32(xt.as_ptr().add(i));
+            let rx = vaddq_f32(vmulq_f32(vwa, a), vmulq_f32(vwb, b));
+            let rt = vaddq_f32(vmulq_f32(vwb, a), vmulq_f32(vwa, b));
+            vst1q_f32(x.as_mut_ptr().add(i), rx);
+            vst1q_f32(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::mix_pair(wa, wb, &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mix_grad(
+        wa: f32,
+        wb: f32,
+        gamma: f32,
+        g: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = vdupq_n_f32(wa);
+        let vwb = vdupq_n_f32(wb);
+        let vgamma = vdupq_n_f32(gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = vld1q_f32(x.as_ptr().add(i));
+            let b = vld1q_f32(xt.as_ptr().add(i));
+            let vg = vld1q_f32(g.as_ptr().add(i));
+            let step = vmulq_f32(vgamma, vg);
+            let mx = vaddq_f32(vmulq_f32(vwa, a), vmulq_f32(vwb, b));
+            let mt = vaddq_f32(vmulq_f32(vwb, a), vmulq_f32(vwa, b));
+            vst1q_f32(x.as_mut_ptr().add(i), vsubq_f32(mx, step));
+            vst1q_f32(xt.as_mut_ptr().add(i), vsubq_f32(mt, step));
+            i += LANES;
+        }
+        scalar::mix_grad(wa, wb, gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn comm_apply_fused(
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = vdupq_n_f32(wa);
+        let vwb = vdupq_n_f32(wb);
+        let val = vdupq_n_f32(alpha);
+        let vat = vdupq_n_f32(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = vld1q_f32(x.as_ptr().add(i));
+            let b = vld1q_f32(xt.as_ptr().add(i));
+            let vp = vld1q_f32(xj.as_ptr().add(i));
+            let mixed_x = vaddq_f32(vmulq_f32(vwa, a), vmulq_f32(vwb, b));
+            let mixed_t = vaddq_f32(vmulq_f32(vwb, a), vmulq_f32(vwa, b));
+            let m = vsubq_f32(mixed_x, vp);
+            vst1q_f32(x.as_mut_ptr().add(i), vsubq_f32(mixed_x, vmulq_f32(val, m)));
+            vst1q_f32(xt.as_mut_ptr().add(i), vsubq_f32(mixed_t, vmulq_f32(vat, m)));
+            i += LANES;
+        }
+        scalar::comm_apply_fused(wa, wb, alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn comm_pair_fused(
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        let n = xa.len();
+        let vwaa = vdupq_n_f32(waa);
+        let vwba = vdupq_n_f32(wba);
+        let vwab = vdupq_n_f32(wab);
+        let vwbb = vdupq_n_f32(wbb);
+        let val = vdupq_n_f32(alpha);
+        let vat = vdupq_n_f32(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let va = vld1q_f32(xa.as_ptr().add(i));
+            let vta = vld1q_f32(xta.as_ptr().add(i));
+            let vb = vld1q_f32(xb.as_ptr().add(i));
+            let vtb = vld1q_f32(xtb.as_ptr().add(i));
+            let ma = vaddq_f32(vmulq_f32(vwaa, va), vmulq_f32(vwba, vta));
+            let mta = vaddq_f32(vmulq_f32(vwba, va), vmulq_f32(vwaa, vta));
+            let mb = vaddq_f32(vmulq_f32(vwab, vb), vmulq_f32(vwbb, vtb));
+            let mtb = vaddq_f32(vmulq_f32(vwbb, vb), vmulq_f32(vwab, vtb));
+            let m = vsubq_f32(ma, mb);
+            vst1q_f32(xa.as_mut_ptr().add(i), vsubq_f32(ma, vmulq_f32(val, m)));
+            vst1q_f32(xta.as_mut_ptr().add(i), vsubq_f32(mta, vmulq_f32(vat, m)));
+            vst1q_f32(xb.as_mut_ptr().add(i), vaddq_f32(mb, vmulq_f32(val, m)));
+            vst1q_f32(xtb.as_mut_ptr().add(i), vaddq_f32(mtb, vmulq_f32(vat, m)));
+            i += LANES;
+        }
+        scalar::comm_pair_fused(
+            waa,
+            wba,
+            wab,
+            wbb,
+            alpha,
+            alpha_tilde,
+            &mut xa[i..],
+            &mut xta[i..],
+            &mut xb[i..],
+            &mut xtb[i..],
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len();
+        // Four 2-wide f64 accumulators = virtual stripe lanes
+        // 0–1/2–3/4–5/6–7, mirroring the scalar SQ_DIST_LANES striping.
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut acc45 = vdupq_n_f64(0.0);
+        let mut acc67 = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d0 = vsubq_f32(vld1q_f32(x.as_ptr().add(i)), vld1q_f32(y.as_ptr().add(i)));
+            let d1 = vsubq_f32(
+                vld1q_f32(x.as_ptr().add(i + 4)),
+                vld1q_f32(y.as_ptr().add(i + 4)),
+            );
+            let d01 = vcvt_f64_f32(vget_low_f32(d0));
+            let d23 = vcvt_high_f64_f32(d0);
+            let d45 = vcvt_f64_f32(vget_low_f32(d1));
+            let d67 = vcvt_high_f64_f32(d1);
+            acc01 = vaddq_f64(acc01, vmulq_f64(d01, d01));
+            acc23 = vaddq_f64(acc23, vmulq_f64(d23, d23));
+            acc45 = vaddq_f64(acc45, vmulq_f64(d45, d45));
+            acc67 = vaddq_f64(acc67, vmulq_f64(d67, d67));
+            i += 8;
+        }
+        let mut acc = [0.0f64; 8];
+        vst1q_f64(acc.as_mut_ptr(), acc01);
+        vst1q_f64(acc.as_mut_ptr().add(2), acc23);
+        vst1q_f64(acc.as_mut_ptr().add(4), acc45);
+        vst1q_f64(acc.as_mut_ptr().add(6), acc67);
+        // Ragged tail feeds lanes 0..r, then fold left to right — the
+        // exact order of the scalar reference.
+        for (k, j) in (i..n).enumerate() {
+            let d = (x[j] - y[j]) as f64;
+            acc[k] += d * d;
+        }
+        acc.iter().sum()
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn average_pair(x: &mut [f32], y: &mut [f32]) {
+        let n = x.len();
+        let vhalf = vdupq_n_f32(0.5);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let a = vld1q_f32(x.as_ptr().add(i));
+            let b = vld1q_f32(y.as_ptr().add(i));
+            let m = vmulq_f32(vhalf, vaddq_f32(a, b));
+            vst1q_f32(x.as_mut_ptr().add(i), m);
+            vst1q_f32(y.as_mut_ptr().add(i), m);
+            i += LANES;
+        }
+        scalar::average_pair(&mut x[i..], &mut y[i..]);
+    }
+}

@@ -3,14 +3,34 @@
 //!
 //! Workers that are ready to communicate (finished their previous
 //! averaging, still have budget before the next gradient step) declare
-//! themselves *available*; the coordinator keeps a FIFO availability
-//! queue and pairs an arriving worker with the **first** queued worker
-//! adjacent to it in the *currently active* communication graph (the
-//! [`WallClock`] view — a scenario may switch topologies or drop links
-//! mid-run). Only worker *indices* flow through the coordinator —
-//! parameter payloads go peer-to-peer over the [`super::bus`] — which is
-//! the paper's "the coordinator only exchanges integers with the workers"
-//! lightweightness.
+//! themselves *available*; the coordinator pairs an arriving worker with
+//! the **earliest-declared** queued worker adjacent to it in the
+//! *currently active* communication graph (the [`WallClock`] view — a
+//! scenario may switch topologies or drop links mid-run). Only worker
+//! *indices* flow through the coordinator — parameter payloads go
+//! peer-to-peer over the [`super::bus`] — which is the paper's "the
+//! coordinator only exchanges integers with the workers" lightweightness.
+//!
+//! Two interchangeable matching strategies ([`MatchStrategy`]) implement
+//! that contract:
+//!
+//! * **Rendezvous** — the original protocol: one blocking channel
+//!   receive per message, and each `Available` scans the whole FIFO
+//!   queue probing `has_active_edge` (a read-lock each) per entry —
+//!   O(queue) lock rounds per pairing.
+//! * **Batched** (default) — drains every ready message per wake-up and
+//!   matches over the active-neighbor *lists*: one adjacency read-lock
+//!   per availability hands the full candidate set, and the queue is a
+//!   per-worker slot array carrying arrival tickets, so "first queued
+//!   adjacent worker" becomes "minimum ticket over `w`'s active
+//!   neighbors" — O(deg) per pairing, one channel park per batch. At
+//!   sub-ms pairing cadence this amortization is what keeps the
+//!   coordinator off the critical path past dozens of workers (the
+//!   GossipGraD / AD-PSGD lesson); the `perf` bench pins
+//!   batched > rendezvous pairings/sec.
+//!
+//! Both strategies produce the same pairings for the same message order
+//! (the tests below run every behavioral check against both).
 //!
 //! Liveness under a time-varying graph: a queued worker may transiently
 //! have no active neighbor, so release-on-`None` can no longer be decided
@@ -57,6 +77,21 @@ pub enum PairReply {
     NoPartnerEver,
     /// The pending availability was cancelled at the worker's request.
     Cancelled,
+}
+
+/// How the coordinator turns availability declarations into pairings.
+/// See the module docs; both strategies implement the same
+/// earliest-declared-adjacent-waiter contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MatchStrategy {
+    /// One message per wake-up, one full FIFO-queue scan per
+    /// `Available`. The original protocol, kept as the reference arm of
+    /// the coordinator micro-bench.
+    Rendezvous,
+    /// Drain all ready messages per wake-up, match via per-worker
+    /// ticket slots against the active-neighbor lists.
+    #[default]
+    Batched,
 }
 
 /// Pairing history: `counts[i][j]` = number of averagings between i and j
@@ -130,21 +165,35 @@ impl PairingStats {
     }
 }
 
-/// Spawn the coordinator thread over the shared network view. It exits
-/// (returning the pairing stats) once every worker has sent
-/// [`CoordMsg::Leave`].
+/// Spawn the coordinator thread over the shared network view with the
+/// default (batched) matching strategy. It exits (returning the pairing
+/// stats) once every worker has sent [`CoordMsg::Leave`].
 pub fn spawn_coordinator(
     net: Arc<WallClock>,
+) -> (mpsc::Sender<CoordMsg>, JoinHandle<PairingStats>) {
+    spawn_coordinator_with(net, MatchStrategy::default())
+}
+
+/// As [`spawn_coordinator`], with an explicit [`MatchStrategy`] (the
+/// coordinator micro-bench races the two against each other).
+pub fn spawn_coordinator_with(
+    net: Arc<WallClock>,
+    strategy: MatchStrategy,
 ) -> (mpsc::Sender<CoordMsg>, JoinHandle<PairingStats>) {
     let (tx, rx) = mpsc::channel::<CoordMsg>();
     let handle = std::thread::Builder::new()
         .name("a2cid2-coordinator".into())
-        .spawn(move || coordinator_loop(&net, rx))
+        .spawn(move || match strategy {
+            MatchStrategy::Rendezvous => rendezvous_loop(&net, rx),
+            MatchStrategy::Batched => batched_loop(&net, rx),
+        })
         .expect("spawn coordinator");
     (tx, handle)
 }
 
-fn coordinator_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
+/// The original rendezvous protocol: process one message per wake-up,
+/// scanning the FIFO queue with per-entry `has_active_edge` probes.
+fn rendezvous_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
     let n = net.n();
     let mut stats = PairingStats::new(n);
     // FIFO availability queue: (worker, reply channel).
@@ -243,10 +292,157 @@ fn coordinator_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingSta
     stats
 }
 
+/// Per-worker waiting slots for the batched strategy. A worker has at
+/// most one outstanding availability (its comm thread blocks on the
+/// reply), so a slot array replaces the FIFO `Vec`; monotone arrival
+/// tickets encode the FIFO order ("first queued adjacent worker" ≡
+/// "minimum ticket among the arriver's queued active neighbors").
+struct WaitSlots {
+    slots: Vec<Option<(u64, mpsc::Sender<PairReply>)>>,
+    next_ticket: u64,
+}
+
+impl WaitSlots {
+    fn new(n: usize) -> Self {
+        Self { slots: vec![None; n], next_ticket: 0 }
+    }
+
+    fn enqueue(&mut self, w: usize, reply: mpsc::Sender<PairReply>) {
+        debug_assert!(self.slots[w].is_none(), "duplicate availability");
+        self.slots[w] = Some((self.next_ticket, reply));
+        self.next_ticket += 1;
+    }
+
+    fn take(&mut self, w: usize) -> Option<(u64, mpsc::Sender<PairReply>)> {
+        self.slots[w].take()
+    }
+
+    fn ticket(&self, w: usize) -> Option<u64> {
+        self.slots[w].as_ref().map(|(t, _)| *t)
+    }
+}
+
+/// The batched strategy: drain every ready message per wake-up, then
+/// match each `Available` against the arriver's active-neighbor list in
+/// one pass. Produces the same pairings as [`rendezvous_loop`] for the
+/// same message order, at O(deg) instead of O(queue) per availability
+/// and one channel park per batch instead of per message.
+fn batched_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
+    let n = net.n();
+    let mut stats = PairingStats::new(n);
+    let mut waits = WaitSlots::new(n);
+    let mut left: HashSet<usize> = HashSet::new();
+    let mut batch: Vec<CoordMsg> = Vec::new();
+    // Reused active-neighbor scratch (one adjacency lock per query).
+    let mut nbuf: Vec<usize> = Vec::new();
+
+    while left.len() < n {
+        match rx.recv() {
+            Ok(m) => batch.push(m),
+            Err(_) => break, // all worker handles dropped
+        }
+        while let Ok(m) = rx.try_recv() {
+            batch.push(m);
+        }
+        for msg in batch.drain(..) {
+            match msg {
+                CoordMsg::Available { worker, reply } => {
+                    debug_assert!(!left.contains(&worker), "available after leave");
+                    net.active_neighbors_into(worker, &mut nbuf);
+                    // Earliest-ticket queued active neighbor == the
+                    // rendezvous loop's first FIFO-scan hit.
+                    let best = nbuf
+                        .iter()
+                        .filter_map(|&nb| waits.ticket(nb).map(|t| (t, nb)))
+                        .min();
+                    if let Some((_, peer)) = best {
+                        let (_, peer_reply) =
+                            waits.take(peer).expect("ticket implies queued");
+                        stats.record(worker, peer);
+                        // Replies may fail if a worker died; ignore — the
+                        // partner's bus send will surface the error.
+                        let _ = peer_reply.send(PairReply::Peer(worker));
+                        let _ = reply.send(PairReply::Peer(peer));
+                    } else if net.union_neighbors(worker).iter().all(|nb| left.contains(nb)) {
+                        // No phase of the scenario can ever supply a partner.
+                        let _ = reply.send(PairReply::NoPartnerEver);
+                    } else {
+                        waits.enqueue(worker, reply);
+                    }
+                }
+                CoordMsg::Cancel { worker } => {
+                    if let Some((_, reply)) = waits.take(worker) {
+                        let _ = reply.send(PairReply::Cancelled);
+                    }
+                    // Not queued: a pairing raced ahead of the cancel; the
+                    // worker will find PairReply::Peer in its mailbox.
+                }
+                CoordMsg::Leave { worker } => {
+                    if !left.insert(worker) {
+                        continue; // idempotent
+                    }
+                    let _ = waits.take(worker);
+                    // Release waiters whose whole union neighborhood
+                    // departed.
+                    for w in 0..n {
+                        if waits.ticket(w).is_some()
+                            && net.union_neighbors(w).iter().all(|nb| left.contains(nb))
+                        {
+                            let (_, reply) = waits.take(w).expect("checked above");
+                            let _ = reply.send(PairReply::NoPartnerEver);
+                        }
+                    }
+                }
+                CoordMsg::Reconfigure => {
+                    // Worker churn: release scenario-departed waiters with
+                    // Cancelled so they can never be paired.
+                    for w in 0..n {
+                        if waits.ticket(w).is_some() && !net.is_active(w) {
+                            let (_, reply) = waits.take(w).expect("checked above");
+                            let _ = reply.send(PairReply::Cancelled);
+                        }
+                    }
+                    // The active graph changed: greedily pair now-adjacent
+                    // waiters in arrival order (ticket ascending), each
+                    // with its earliest-ticket LATER-queued active
+                    // neighbor — exactly the rendezvous FIFO re-scan.
+                    let mut order: Vec<(u64, usize)> =
+                        (0..n).filter_map(|w| waits.ticket(w).map(|t| (t, w))).collect();
+                    order.sort_unstable();
+                    for &(t, w) in &order {
+                        if waits.ticket(w) != Some(t) {
+                            continue; // already matched earlier this pass
+                        }
+                        net.active_neighbors_into(w, &mut nbuf);
+                        let partner = nbuf
+                            .iter()
+                            .filter_map(|&nb| {
+                                waits
+                                    .ticket(nb)
+                                    .and_then(|tb| (tb > t).then_some((tb, nb)))
+                            })
+                            .min();
+                        if let Some((_, b)) = partner {
+                            let (_, a_reply) = waits.take(w).expect("iterating queued");
+                            let (_, b_reply) = waits.take(b).expect("partner queued");
+                            stats.record(w, b);
+                            let _ = a_reply.send(PairReply::Peer(b));
+                            let _ = b_reply.send(PairReply::Peer(w));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::Topology;
+
+    const BOTH: [MatchStrategy; 2] = [MatchStrategy::Rendezvous, MatchStrategy::Batched];
 
     fn ring(n: usize) -> Arc<WallClock> {
         Arc::new(WallClock::from_graph(
@@ -266,103 +462,115 @@ mod tests {
 
     #[test]
     fn adjacent_workers_get_paired_fifo() {
-        let (tx, handle) = spawn_coordinator(ring(4));
-        let r0 = available(&tx, 0);
-        // 2 is not adjacent to 0 on the 4-ring: ring(4) = 0-1,1-2,2-3,0-3.
-        let r2 = available(&tx, 2);
-        // 1 is adjacent to both 0 and 2; FIFO pairs it with 0 (first).
-        let r1 = available(&tx, 1);
-        assert_eq!(r0.recv().unwrap(), PairReply::Peer(1));
-        assert_eq!(r1.recv().unwrap(), PairReply::Peer(0));
-        // 3 arrives, pairs with the waiting 2.
-        let r3 = available(&tx, 3);
-        assert_eq!(r2.recv().unwrap(), PairReply::Peer(3));
-        assert_eq!(r3.recv().unwrap(), PairReply::Peer(2));
-        for w in 0..4 {
-            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(4), strategy);
+            let r0 = available(&tx, 0);
+            // 2 is not adjacent to 0 on the 4-ring: ring(4) = 0-1,1-2,2-3,0-3.
+            let r2 = available(&tx, 2);
+            // 1 is adjacent to both 0 and 2; FIFO pairs it with 0 (first).
+            let r1 = available(&tx, 1);
+            assert_eq!(r0.recv().unwrap(), PairReply::Peer(1), "{strategy:?}");
+            assert_eq!(r1.recv().unwrap(), PairReply::Peer(0), "{strategy:?}");
+            // 3 arrives, pairs with the waiting 2.
+            let r3 = available(&tx, 3);
+            assert_eq!(r2.recv().unwrap(), PairReply::Peer(3), "{strategy:?}");
+            assert_eq!(r3.recv().unwrap(), PairReply::Peer(2), "{strategy:?}");
+            for w in 0..4 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.total, 2);
+            assert_eq!(stats.counts[0][1], 1);
+            assert_eq!(stats.counts[2][3], 1);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.total, 2);
-        assert_eq!(stats.counts[0][1], 1);
-        assert_eq!(stats.counts[2][3], 1);
     }
 
     #[test]
     fn never_pairs_non_neighbors() {
-        let (tx, handle) = spawn_coordinator(ring(6));
-        // 0 and 3 are not adjacent on the 6-ring: both must wait.
-        let r0 = available(&tx, 0);
-        let r3 = available(&tx, 3);
-        assert!(r0.try_recv().is_err());
-        assert!(r3.try_recv().is_err());
-        // 1 pairs with 0 (not with 3).
-        let r1 = available(&tx, 1);
-        assert_eq!(r0.recv().unwrap(), PairReply::Peer(1));
-        assert_eq!(r1.recv().unwrap(), PairReply::Peer(0));
-        // 4 pairs with 3.
-        let r4 = available(&tx, 4);
-        assert_eq!(r3.recv().unwrap(), PairReply::Peer(4));
-        assert_eq!(r4.recv().unwrap(), PairReply::Peer(3));
-        for w in 0..6 {
-            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(6), strategy);
+            // 0 and 3 are not adjacent on the 6-ring: both must wait.
+            let r0 = available(&tx, 0);
+            let r3 = available(&tx, 3);
+            assert!(r0.try_recv().is_err());
+            assert!(r3.try_recv().is_err());
+            // 1 pairs with 0 (not with 3).
+            let r1 = available(&tx, 1);
+            assert_eq!(r0.recv().unwrap(), PairReply::Peer(1), "{strategy:?}");
+            assert_eq!(r1.recv().unwrap(), PairReply::Peer(0), "{strategy:?}");
+            // 4 pairs with 3.
+            let r4 = available(&tx, 4);
+            assert_eq!(r3.recv().unwrap(), PairReply::Peer(4), "{strategy:?}");
+            assert_eq!(r4.recv().unwrap(), PairReply::Peer(3), "{strategy:?}");
+            for w in 0..6 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.counts[0][3], 0);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.counts[0][3], 0);
     }
 
     #[test]
     fn waiter_released_when_neighborhood_leaves() {
-        let (tx, handle) = spawn_coordinator(ring(4));
-        let r0 = available(&tx, 0);
-        // 0's neighbors are 1 and 3; both leave → 0 gets NoPartnerEver.
-        tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
-        tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
-        assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver);
-        tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
-        tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
-        handle.join().unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(4), strategy);
+            let r0 = available(&tx, 0);
+            // 0's neighbors are 1 and 3; both leave → 0 gets NoPartnerEver.
+            tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
+            tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
+            assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver, "{strategy:?}");
+            tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
+            tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
+            handle.join().unwrap();
+        }
     }
 
     #[test]
     fn available_with_all_neighbors_gone_returns_none_immediately() {
-        let (tx, handle) = spawn_coordinator(ring(4));
-        tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
-        tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
-        let r0 = available(&tx, 0);
-        assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver);
-        tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
-        tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
-        handle.join().unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(4), strategy);
+            tx.send(CoordMsg::Leave { worker: 1 }).unwrap();
+            tx.send(CoordMsg::Leave { worker: 3 }).unwrap();
+            let r0 = available(&tx, 0);
+            assert_eq!(r0.recv().unwrap(), PairReply::NoPartnerEver, "{strategy:?}");
+            tx.send(CoordMsg::Leave { worker: 0 }).unwrap();
+            tx.send(CoordMsg::Leave { worker: 2 }).unwrap();
+            handle.join().unwrap();
+        }
     }
 
     #[test]
     fn leave_is_idempotent_and_terminates() {
-        let (tx, handle) = spawn_coordinator(ring(3));
-        for _ in 0..3 {
-            for w in 0..3 {
-                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(3), strategy);
+            for _ in 0..3 {
+                for w in 0..3 {
+                    tx.send(CoordMsg::Leave { worker: w }).unwrap();
+                }
             }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.total, 0);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.total, 0);
     }
 
     #[test]
     fn cancel_removes_a_waiter() {
-        let (tx, handle) = spawn_coordinator(ring(6));
-        let r0 = available(&tx, 0);
-        tx.send(CoordMsg::Cancel { worker: 0 }).unwrap();
-        assert_eq!(r0.recv().unwrap(), PairReply::Cancelled);
-        // 1 arrives later: 0 is no longer queued, so 1 must wait.
-        let r1 = available(&tx, 1);
-        assert!(r1.try_recv().is_err());
-        // Cancel for a non-queued worker is a no-op.
-        tx.send(CoordMsg::Cancel { worker: 5 }).unwrap();
-        for w in 0..6 {
-            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(6), strategy);
+            let r0 = available(&tx, 0);
+            tx.send(CoordMsg::Cancel { worker: 0 }).unwrap();
+            assert_eq!(r0.recv().unwrap(), PairReply::Cancelled, "{strategy:?}");
+            // 1 arrives later: 0 is no longer queued, so 1 must wait.
+            let r1 = available(&tx, 1);
+            assert!(r1.try_recv().is_err());
+            // Cancel for a non-queued worker is a no-op.
+            tx.send(CoordMsg::Cancel { worker: 5 }).unwrap();
+            for w in 0..6 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.total, 0);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.total, 0);
     }
 
     #[test]
@@ -370,26 +578,28 @@ mod tests {
         // Scenario: ring(6) phase-0, complete graph after the switch. 0
         // and 3 wait (not ring-adjacent); the switch makes them adjacent
         // and Reconfigure pairs them.
-        let plan = crate::config::Scenario::parse("ring@0,complete@0.5")
-            .unwrap()
-            .compile(6, 1.0, 10.0, &[1.0; 6])
-            .unwrap();
-        let net = Arc::new(WallClock::new(&plan));
-        let (tx, handle) = spawn_coordinator(net.clone());
-        let r0 = available(&tx, 0);
-        let r3 = available(&tx, 3);
-        assert!(r0.try_recv().is_err());
-        tx.send(CoordMsg::Reconfigure).unwrap(); // no change yet
-        assert!(r0.try_recv().is_err());
-        net.apply_shared(&plan.updates[0]);
-        tx.send(CoordMsg::Reconfigure).unwrap();
-        assert_eq!(r0.recv().unwrap(), PairReply::Peer(3));
-        assert_eq!(r3.recv().unwrap(), PairReply::Peer(0));
-        for w in 0..6 {
-            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let plan = crate::config::Scenario::parse("ring@0,complete@0.5")
+                .unwrap()
+                .compile(6, 1.0, 10.0, &[1.0; 6])
+                .unwrap();
+            let net = Arc::new(WallClock::new(&plan));
+            let (tx, handle) = spawn_coordinator_with(net.clone(), strategy);
+            let r0 = available(&tx, 0);
+            let r3 = available(&tx, 3);
+            assert!(r0.try_recv().is_err());
+            tx.send(CoordMsg::Reconfigure).unwrap(); // no change yet
+            assert!(r0.try_recv().is_err());
+            net.apply_shared(&plan.updates[0]);
+            tx.send(CoordMsg::Reconfigure).unwrap();
+            assert_eq!(r0.recv().unwrap(), PairReply::Peer(3), "{strategy:?}");
+            assert_eq!(r3.recv().unwrap(), PairReply::Peer(0), "{strategy:?}");
+            for w in 0..6 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.counts[0][3], 1);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.counts[0][3], 1);
     }
 
     #[test]
@@ -397,27 +607,67 @@ mod tests {
         // Worker 0 queues, then a scenario leave removes it; the next
         // Reconfigure must hand it Cancelled (never a peer), and its
         // now-silent links must not pair it with arriving neighbors.
-        let plan = crate::config::Scenario::parse("ring@0;leave=0.25:0.5:1")
-            .unwrap()
-            .compile(4, 1.0, 10.0, &[1.0; 4])
-            .unwrap();
-        let net = Arc::new(WallClock::new(&plan));
-        let leaver = plan.updates[0].leave[0];
-        let (tx, handle) = spawn_coordinator(net.clone());
-        let r = available(&tx, leaver);
-        net.apply_shared(&plan.updates[0]);
-        tx.send(CoordMsg::Reconfigure).unwrap();
-        assert_eq!(r.recv().unwrap(), PairReply::Cancelled);
-        // A neighbor arriving now cannot be paired with the departed
-        // worker (no active edge) — it waits instead.
-        let nb = (0..4).find(|&w| w != leaver && net.is_active(w)).unwrap();
-        let rn = available(&tx, nb);
-        assert!(rn.try_recv().is_err());
-        for w in 0..4 {
-            tx.send(CoordMsg::Leave { worker: w }).unwrap();
+        for strategy in BOTH {
+            let plan = crate::config::Scenario::parse("ring@0;leave=0.25:0.5:1")
+                .unwrap()
+                .compile(4, 1.0, 10.0, &[1.0; 4])
+                .unwrap();
+            let net = Arc::new(WallClock::new(&plan));
+            let leaver = plan.updates[0].leave[0];
+            let (tx, handle) = spawn_coordinator_with(net.clone(), strategy);
+            let r = available(&tx, leaver);
+            net.apply_shared(&plan.updates[0]);
+            tx.send(CoordMsg::Reconfigure).unwrap();
+            assert_eq!(r.recv().unwrap(), PairReply::Cancelled, "{strategy:?}");
+            // A neighbor arriving now cannot be paired with the departed
+            // worker (no active edge) — it waits instead.
+            let nb = (0..4).find(|&w| w != leaver && net.is_active(w)).unwrap();
+            let rn = available(&tx, nb);
+            assert!(rn.try_recv().is_err());
+            for w in 0..4 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.per_worker()[leaver], 0);
         }
-        let stats = handle.join().unwrap();
-        assert_eq!(stats.per_worker()[leaver], 0);
+    }
+
+    #[test]
+    fn reconfigure_rematch_respects_fifo_order_on_a_batch() {
+        // Four waiters queue before the complete-graph switch; the
+        // re-scan must pair (first, second) and (third, fourth) — FIFO,
+        // not best-degree — under BOTH strategies.
+        for strategy in BOTH {
+            let plan = crate::config::Scenario::parse("ring@0,complete@0.5")
+                .unwrap()
+                .compile(6, 1.0, 10.0, &[1.0; 6])
+                .unwrap();
+            let net = Arc::new(WallClock::new(&plan));
+            let (tx, handle) = spawn_coordinator_with(net.clone(), strategy);
+            // None of 0, 2, 4 are ring(6)-adjacent; 3 is adjacent to 2
+            // and 4 but queues AFTER them.
+            let r0 = available(&tx, 0);
+            let r2 = available(&tx, 2);
+            let r4 = available(&tx, 4);
+            assert!(r0.try_recv().is_err());
+            net.apply_shared(&plan.updates[0]);
+            tx.send(CoordMsg::Reconfigure).unwrap();
+            // FIFO re-scan on the complete graph: 0 pairs with 2 (the
+            // earliest later waiter), leaving 4 queued.
+            assert_eq!(r0.recv().unwrap(), PairReply::Peer(2), "{strategy:?}");
+            assert_eq!(r2.recv().unwrap(), PairReply::Peer(0), "{strategy:?}");
+            assert!(r4.try_recv().is_err());
+            let r5 = available(&tx, 5);
+            assert_eq!(r4.recv().unwrap(), PairReply::Peer(5), "{strategy:?}");
+            assert_eq!(r5.recv().unwrap(), PairReply::Peer(4), "{strategy:?}");
+            for w in 0..6 {
+                tx.send(CoordMsg::Leave { worker: w }).unwrap();
+            }
+            let stats = handle.join().unwrap();
+            assert_eq!(stats.total, 2);
+            assert_eq!(stats.counts[0][2], 1);
+            assert_eq!(stats.counts[4][5], 1);
+        }
     }
 
     #[test]

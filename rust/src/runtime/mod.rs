@@ -17,7 +17,10 @@
 //! The [`coordinator`] reproduces the paper's deadlock-free matching: a
 //! FIFO availability queue pairing the first two mutually-adjacent
 //! available workers (Sec. 4.1), with the pairing histogram of Fig. 7
-//! recorded on the side. Time is wall-clock normalized by a running
+//! recorded on the side. Matching runs batched by default (drain all
+//! ready declarations per wake-up, match via per-worker ticket slots);
+//! the original rendezvous-per-message protocol stays available through
+//! [`coordinator::MatchStrategy`]. Time is wall-clock normalized by a running
 //! average of gradient durations, as in the paper's implementation.
 
 pub mod artifacts;
@@ -36,6 +39,6 @@ pub mod worker;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use clock::TimeNormalizer;
-pub use coordinator::{CoordMsg, PairReply, PairingStats};
+pub use coordinator::{CoordMsg, MatchStrategy, PairReply, PairingStats};
 pub use snapshot::{ConsensusAccumulator, SnapshotCell};
 pub use worker::{run_async, GradSource, RustGradSource, RuntimeOptions, RuntimeResult};

@@ -1,0 +1,269 @@
+//! Backend-equivalence property tests — the bit-identity contract of the
+//! kernel-backend layer (`gossip::vecops`).
+//!
+//! Every kernel must produce **bit-identical** results on every available
+//! backend (the explicit SIMD path does elementwise mul+add per lane with
+//! no FMA contraction and no reassociation, so lane-parallel evaluation
+//! commutes exactly with the scalar reference). The lengths exercised
+//! include zero, lengths below one SIMD lane width, exact multiples, and
+//! ragged tails around every plausible lane width (4 / 8 / 16), so the
+//! vector-body + scalar-tail seam is crossed in both directions.
+//!
+//! `sq_dist` is a reduction: it must be bit-identical across backends
+//! *and* pool widths because its striped 8-lane f64 accumulation order is
+//! fixed by contract, independent of how the work is vectorized.
+
+use a2cid2::gossip::vecops::{self, available_backends, scalar_backend, KernelBackend};
+use a2cid2::rng::{standard_normal, Xoshiro256};
+
+/// Lengths crossing every lane-width boundary: empty, sub-lane, exact
+/// multiples of 4/8/16, off-by-one around them, and large-ish odd sizes.
+const LENS: [usize; 18] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 1000, 4097];
+
+fn rv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n).map(|_| standard_normal(&mut rng) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The non-scalar backends to compare against the scalar reference (may
+/// be empty on targets without a SIMD implementation — the test then
+/// degenerates to scalar-vs-scalar, which still pins the harness).
+fn others() -> Vec<&'static dyn KernelBackend> {
+    available_backends()
+        .into_iter()
+        .filter(|b| b.name() != scalar_backend().name())
+        .collect()
+}
+
+#[test]
+fn axpy_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let x = rv(n, 100 + i as u64);
+            let y0 = rv(n, 200 + i as u64);
+            let mut y_ref = y0.clone();
+            scalar_backend().axpy(0.37, &x, &mut y_ref);
+            let mut y = y0.clone();
+            be.axpy(0.37, &x, &mut y);
+            assert_eq!(bits(&y), bits(&y_ref), "axpy len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn mix_into_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let x = rv(n, 300 + i as u64);
+            let xt = rv(n, 400 + i as u64);
+            let mut out_ref = vec![0.0f32; n];
+            scalar_backend().mix_into(0.8, 0.2, &x, &xt, &mut out_ref);
+            let mut out = vec![f32::NAN; n]; // output-only: stale bits must not leak
+            be.mix_into(0.8, 0.2, &x, &xt, &mut out);
+            assert_eq!(bits(&out), bits(&out_ref), "mix_into len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn grad_step_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let g = rv(n, 500 + i as u64);
+            let x0 = rv(n, 600 + i as u64);
+            let t0 = rv(n, 700 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().grad_step(0.043, &g, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.grad_step(0.043, &g, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "grad_step x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "grad_step xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn comm_only_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let xj = rv(n, 800 + i as u64);
+            let x0 = rv(n, 900 + i as u64);
+            let t0 = rv(n, 1000 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().comm_only(0.5, 1.7, &xj, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.comm_only(0.5, 1.7, &xj, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "comm_only x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "comm_only xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn mix_pair_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let x0 = rv(n, 1100 + i as u64);
+            let t0 = rv(n, 1200 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().mix_pair(0.77, 0.23, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.mix_pair(0.77, 0.23, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "mix_pair x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "mix_pair xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn mix_grad_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let g = rv(n, 1300 + i as u64);
+            let x0 = rv(n, 1400 + i as u64);
+            let t0 = rv(n, 1500 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().mix_grad(0.9, 0.1, 0.021, &g, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.mix_grad(0.9, 0.1, 0.021, &g, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "mix_grad x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "mix_grad xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn comm_apply_fused_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let xj = rv(n, 1600 + i as u64);
+            let x0 = rv(n, 1700 + i as u64);
+            let t0 = rv(n, 1800 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().comm_apply_fused(0.85, 0.15, 0.5, 1.3, &xj, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.comm_apply_fused(0.85, 0.15, 0.5, 1.3, &xj, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "comm_apply x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "comm_apply xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn mix_comm_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let xj = rv(n, 1900 + i as u64);
+            let x0 = rv(n, 2000 + i as u64);
+            let t0 = rv(n, 2100 + i as u64);
+            let (mut x_ref, mut t_ref) = (x0.clone(), t0.clone());
+            scalar_backend().mix_comm(0.85, 0.15, 0.5, 1.3, &xj, &mut x_ref, &mut t_ref);
+            let (mut x, mut t) = (x0.clone(), t0.clone());
+            be.mix_comm(0.85, 0.15, 0.5, 1.3, &xj, &mut x, &mut t);
+            assert_eq!(bits(&x), bits(&x_ref), "mix_comm x len={n} backend={}", be.name());
+            assert_eq!(bits(&t), bits(&t_ref), "mix_comm xt len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn comm_pair_fused_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let a0 = rv(n, 2200 + i as u64);
+            let ta0 = rv(n, 2300 + i as u64);
+            let b0 = rv(n, 2400 + i as u64);
+            let tb0 = rv(n, 2500 + i as u64);
+            let (mut a_ref, mut ta_ref) = (a0.clone(), ta0.clone());
+            let (mut b_ref, mut tb_ref) = (b0.clone(), tb0.clone());
+            scalar_backend().comm_pair_fused(
+                0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut a_ref, &mut ta_ref, &mut b_ref, &mut tb_ref,
+            );
+            let (mut a, mut ta) = (a0.clone(), ta0.clone());
+            let (mut b, mut tb) = (b0.clone(), tb0.clone());
+            be.comm_pair_fused(0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut a, &mut ta, &mut b, &mut tb);
+            assert_eq!(bits(&a), bits(&a_ref), "comm_pair a len={n} backend={}", be.name());
+            assert_eq!(bits(&ta), bits(&ta_ref), "comm_pair ta len={n} backend={}", be.name());
+            assert_eq!(bits(&b), bits(&b_ref), "comm_pair b len={n} backend={}", be.name());
+            assert_eq!(bits(&tb), bits(&tb_ref), "comm_pair tb len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn average_pair_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let x0 = rv(n, 2600 + i as u64);
+            let y0 = rv(n, 2700 + i as u64);
+            let (mut x_ref, mut y_ref) = (x0.clone(), y0.clone());
+            scalar_backend().average_pair(&mut x_ref, &mut y_ref);
+            let (mut x, mut y) = (x0.clone(), y0.clone());
+            be.average_pair(&mut x, &mut y);
+            assert_eq!(bits(&x), bits(&x_ref), "average x len={n} backend={}", be.name());
+            assert_eq!(bits(&y), bits(&y_ref), "average y len={n} backend={}", be.name());
+        }
+    }
+}
+
+#[test]
+fn sq_dist_bit_identical_across_backends() {
+    for be in available_backends() {
+        for (i, &n) in LENS.iter().enumerate() {
+            let x = rv(n, 2800 + i as u64);
+            let y = rv(n, 2900 + i as u64);
+            let d_ref = scalar_backend().sq_dist(&x, &y);
+            let d = be.sq_dist(&x, &y);
+            assert_eq!(
+                d.to_bits(),
+                d_ref.to_bits(),
+                "sq_dist len={n} backend={}",
+                be.name()
+            );
+        }
+    }
+}
+
+/// The dispatched free functions must agree bit-for-bit with the scalar
+/// reference regardless of which backend the process latched — this is
+/// what makes the golden replay checksums backend-independent.
+#[test]
+fn dispatched_free_fns_match_scalar_reference() {
+    let n = 4097;
+    let x = rv(n, 3000);
+    let xt = rv(n, 3100);
+    let xj = rv(n, 3200);
+    let (mut x_ref, mut t_ref) = (x.clone(), xt.clone());
+    scalar_backend().comm_apply_fused(0.85, 0.15, 0.5, 1.3, &xj, &mut x_ref, &mut t_ref);
+    let (mut xd, mut td) = (x.clone(), xt.clone());
+    vecops::comm_apply_fused(0.85, 0.15, 0.5, 1.3, &xj, &mut xd, &mut td);
+    assert_eq!(bits(&xd), bits(&x_ref), "dispatched via {}", vecops::backend_name());
+    assert_eq!(bits(&td), bits(&t_ref), "dispatched via {}", vecops::backend_name());
+}
+
+/// `sq_dist` across pool widths: the pooled consensus path never calls
+/// it chunked (the striped order is a whole-slice contract), but the
+/// large-dim sizes here overlap the pool threshold region so any future
+/// chunking of the reduction would have to preserve these exact bits.
+#[test]
+fn sq_dist_bit_identical_at_pool_scale_dims() {
+    use a2cid2::gossip::pool::CHUNK;
+    for &n in &[CHUNK - 1, CHUNK, 2 * CHUNK + 3] {
+        let x = rv(n, 3300);
+        let y = rv(n, 3400);
+        let d_ref = scalar_backend().sq_dist(&x, &y);
+        for be in others() {
+            assert_eq!(
+                be.sq_dist(&x, &y).to_bits(),
+                d_ref.to_bits(),
+                "sq_dist dim={n} backend={}",
+                be.name()
+            );
+        }
+        assert_eq!(vecops::sq_dist(&x, &y).to_bits(), d_ref.to_bits(), "dispatched dim={n}");
+    }
+}

@@ -1,16 +1,20 @@
 //! The determinism replay, promoted from CI into `cargo test`: the
 //! seeded churn scenario (topology switch + dropout window + a
-//! leave/join cycle) must produce BIT-identical output at kernel-pool
-//! widths 1 and 4, and the FNV checksum over the final averaged
-//! parameters must reproduce the checked-in golden value
+//! leave/join cycle) must produce BIT-identical output across kernel-pool
+//! widths (1 and 4) AND kernel backends (scalar reference vs the
+//! auto-dispatched SIMD path), and the FNV checksum over the final
+//! averaged parameters must reproduce the checked-in golden value
 //! (`rust/oracle/replay_golden.toml` — blessed on first run, pinned
 //! thereafter; see `testing::golden`).
 //!
-//! The pool width is latched process-wide (`gossip::pool` reads
-//! `A2CID2_POOL_THREADS` once), so each width runs the real `a2cid2`
-//! binary as a subprocess — which also makes this an end-to-end CLI
-//! test of the `replay` subcommand, exactly what CI's `determinism` job
-//! drives.
+//! Both the pool width (`A2CID2_POOL_THREADS`) and the kernel backend
+//! (`A2CID2_KERNEL_BACKEND`) are latched process-wide on first use, so
+//! each cell of the matrix runs the real `a2cid2` binary as a
+//! subprocess — which also makes this an end-to-end CLI test of the
+//! `replay` subcommand, exactly what CI's `determinism` job drives.
+//! Because the SIMD backend is bit-identical to scalar by contract (no
+//! FMA, no reassociation; see `gossip::vecops`), all four cells share
+//! the same golden checksum — no backend-specific keys exist.
 
 use std::path::Path;
 use std::process::Command;
@@ -29,16 +33,17 @@ const ARGS: [&str; 10] = [
     "replay", "--scenario", SCENARIO, "--workers", "8", "--steps", "40", "--seed", "7", "--dim",
 ];
 
-fn replay_at_width(width: &str) -> String {
+fn replay_at(width: &str, backend: &str) -> String {
     let out = Command::new(env!("CARGO_BIN_EXE_a2cid2"))
         .args(ARGS)
         .arg("65536")
         .env("A2CID2_POOL_THREADS", width)
+        .env("A2CID2_KERNEL_BACKEND", backend)
         .output()
         .expect("spawn a2cid2 replay");
     assert!(
         out.status.success(),
-        "replay at pool width {width} failed:\n{}",
+        "replay at pool width {width} / backend '{backend}' failed:\n{}",
         String::from_utf8_lossy(&out.stderr)
     );
     String::from_utf8(out.stdout).expect("replay output is UTF-8")
@@ -55,23 +60,40 @@ fn extract_checksum(stdout: &str) -> String {
 }
 
 #[test]
-fn churn_replay_reproduces_golden_checksums_at_two_pool_widths() {
-    let serial = replay_at_width("1");
-    let pooled = replay_at_width("4");
-    // The probe must actually engage the pool, or the two widths test
-    // nothing.
-    assert!(serial.contains("pool ON"), "probe did not engage the pool:\n{serial}");
-    // Cross-width bit-determinism: the entire stdout — event counts,
-    // checksum, everything printed — must be identical. This is the
-    // in-process half of the contract; no CI dependency.
-    assert_eq!(
-        serial, pooled,
-        "replay output diverged between pool widths 1 and 4"
+fn churn_replay_reproduces_golden_checksums_across_widths_and_backends() {
+    // The reference cell: serial scalar.
+    let reference = replay_at("1", "scalar");
+    // The probe must actually engage the pool, or the width axis tests
+    // nothing. (Backend engagement is asserted separately below: a
+    // typo'd backend name panics the subprocess, failing replay_at.)
+    let pooled_scalar = replay_at("4", "scalar");
+    assert!(
+        pooled_scalar.contains("pool ON"),
+        "probe did not engage the pool:\n{pooled_scalar}"
     );
 
+    // Cross-width and cross-backend bit-determinism: the entire stdout —
+    // event counts, checksum, everything printed — must be identical in
+    // all four cells. This is the in-process half of the contract; no CI
+    // dependency.
+    for (width, backend) in [("4", "scalar"), ("1", "auto"), ("4", "auto")] {
+        let run = if width == "4" && backend == "scalar" {
+            pooled_scalar.clone()
+        } else {
+            replay_at(width, backend)
+        };
+        assert_eq!(
+            reference, run,
+            "replay output diverged: pool width {width}, backend '{backend}' \
+             vs serial scalar"
+        );
+    }
+
     // Cross-commit bit-determinism: the checksum must match the
-    // checked-in golden value (blessed on the first run).
-    let checksum = extract_checksum(&serial);
+    // checked-in golden value (blessed on the first run). The pool1/pool4
+    // key pair predates the backend axis; both keys pin the same value
+    // and the SIMD cells share it by the bit-identity contract.
+    let checksum = extract_checksum(&reference);
     let golden = Path::new(env!("CARGO_MANIFEST_DIR")).join("oracle/replay_golden.toml");
     for key in [
         "churn_replay_w8_s40_seed7_dim65536_pool1",
