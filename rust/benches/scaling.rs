@@ -1,0 +1,6 @@
+//! The massive-fleet scaling grid as a bench target: cluster_ring(k, m)
+//! fleets up to 10⁵ (10⁶ at full scale) virtual workers on the
+//! multiplexed engine, with Lanczos-estimated (χ₁, χ₂) against the flat
+//! ring's closed form. Resolved through the experiment registry, which
+//! prints the table and times the run.
+a2cid2::bench_main!(scaling);

@@ -148,6 +148,15 @@ pub struct NetUpdate {
     pub edge_rates: Option<Vec<f64>>,
     /// New per-worker gradient rates.
     pub grad_rates: Option<Vec<f64>>,
+    /// Sparse form of `edge_rates`: exactly the `(union edge index, new
+    /// rate)` entries that differ from the preceding state, ascending by
+    /// index. Schedulers apply THESE — O(edges changed) per update — and
+    /// only fall back to the dense vector when a hand-built update
+    /// carries no diff. Present iff `edge_rates` is.
+    pub edge_diff: Vec<(usize, f64)>,
+    /// Sparse form of `grad_rates`: the `(worker, new rate)` entries
+    /// that changed, ascending by worker. Present iff `grad_rates` is.
+    pub grad_diff: Vec<(usize, f64)>,
     /// Workers departing at this update (their rates are already zeroed
     /// in the vectors above).
     pub leave: Vec<usize>,
@@ -159,6 +168,27 @@ pub struct NetUpdate {
     /// subgraph is connected. Engines running the accelerated method
     /// re-derive (η, α̃) from it; `None` holds the previous parameters.
     pub chis: Option<(f64, f64)>,
+}
+
+impl NetUpdate {
+    /// Workers whose local view changed at this update: endpoints of
+    /// every diffed edge, every worker with a diffed gradient rate, and
+    /// the churn sets. Sorted, deduplicated. A coordinator rematch scan
+    /// only needs to look at these — O(edges changed), never O(n).
+    pub fn touched_workers(&self, union_edges: &[(usize, usize)]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(2 * self.edge_diff.len());
+        for &(e, _) in &self.edge_diff {
+            let (i, j) = union_edges[e];
+            out.push(i);
+            out.push(j);
+        }
+        out.extend(self.grad_diff.iter().map(|&(w, _)| w));
+        out.extend_from_slice(&self.leave);
+        out.extend_from_slice(&self.join);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
 }
 
 /// A compiled scenario: union graph, initial rates, and sorted updates.
@@ -184,7 +214,7 @@ impl NetworkPlan {
     pub fn static_plan(graph: Graph, comm_rate: f64, base_grad_rates: &[f64]) -> NetworkPlan {
         assert_eq!(base_grad_rates.len(), graph.n, "one gradient rate per worker");
         let initial_edge_rates = graph.edge_rates(comm_rate);
-        let spectrum = graph.spectrum_with_rates(&graph.edge_rates(comm_rate.max(1e-6)));
+        let spectrum = graph.spectrum_auto(&graph.edge_rates(comm_rate.max(1e-6)));
         NetworkPlan {
             union: graph,
             horizon: f64::INFINITY,
@@ -678,7 +708,7 @@ impl Scenario {
                 return None;
             }
             let rates: Vec<f64> = g.edges.iter().map(|ij| rate_of[ij]).collect();
-            let s = g.spectrum_with_rates(&rates);
+            let s = g.spectrum_auto(&rates);
             (s.chi1.is_finite() && s.chi1 > 0.0 && s.chi2.is_finite() && s.chi2 > 0.0)
                 .then(|| (s.chi1, s.chi2.min(s.chi1)))
         };
@@ -713,8 +743,25 @@ impl Scenario {
             prev_phase = phase_idx;
             let edges = edge_rates_at(f, &mask);
             let grads = grad_rates_at(f, &mask);
-            let edge_rates = (edges != prev_edges).then(|| edges.clone());
-            let grad_rates = (grads != prev_grads).then(|| grads.clone());
+            // Diff against the running state: the sparse lists are what
+            // schedulers apply; the dense vectors ride along for
+            // consumers that want the full post-update state.
+            let edge_diff: Vec<(usize, f64)> = edges
+                .iter()
+                .zip(&prev_edges)
+                .enumerate()
+                .filter(|(_, (new, old))| new != old)
+                .map(|(e, (&new, _))| (e, new))
+                .collect();
+            let grad_diff: Vec<(usize, f64)> = grads
+                .iter()
+                .zip(&prev_grads)
+                .enumerate()
+                .filter(|(_, (new, old))| new != old)
+                .map(|(w, (&new, _))| (w, new))
+                .collect();
+            let edge_rates = (!edge_diff.is_empty()).then(|| edges.clone());
+            let grad_rates = (!grad_diff.is_empty()).then(|| grads.clone());
             prev_edges = edges;
             prev_grads = grads;
             if edge_rates.is_some()
@@ -727,6 +774,8 @@ impl Scenario {
                     t: f * horizon,
                     edge_rates,
                     grad_rates,
+                    edge_diff,
+                    grad_diff,
                     leave,
                     join,
                     chis,
@@ -750,7 +799,7 @@ impl Scenario {
         } else {
             union.edge_rates(1e-6)
         };
-        let spectrum = union.spectrum_with_rates(&floored);
+        let spectrum = union.spectrum_auto(&floored);
 
         Ok(NetworkPlan {
             union,
@@ -1053,6 +1102,52 @@ mod tests {
         assert_eq!(upd.chis.is_some(), sub.is_connected());
         if let Some((c1, c2)) = upd.chis {
             assert!(c1 >= c2 && c2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn diff_lists_mirror_dense_vectors() {
+        // Every compiled update's sparse diffs, replayed onto the running
+        // state, must reproduce the dense vectors exactly — and list
+        // exactly the entries that changed (no padding, no omissions).
+        let sc = Scenario::parse(
+            "ring@0,exponential@0.5;drop=0.2:0.25:0.75:3;drift=0.3:4:2;leave=0.25:0.3:1;join=0.25:0.7",
+        )
+        .unwrap();
+        let plan = sc.compile(8, 1.0, 100.0, &[1.0; 8]).unwrap();
+        assert!(!plan.updates.is_empty());
+        let mut edges = plan.initial_edge_rates.clone();
+        let mut grads = plan.initial_grad_rates.clone();
+        for upd in &plan.updates {
+            assert_eq!(upd.edge_rates.is_some(), !upd.edge_diff.is_empty());
+            assert_eq!(upd.grad_rates.is_some(), !upd.grad_diff.is_empty());
+            for w in upd.edge_diff.windows(2) {
+                assert!(w[0].0 < w[1].0, "edge diff sorted & deduped");
+            }
+            for &(e, r) in &upd.edge_diff {
+                assert_ne!(edges[e], r, "diff entry must actually change the rate");
+                edges[e] = r;
+            }
+            for &(w, r) in &upd.grad_diff {
+                assert_ne!(grads[w], r);
+                grads[w] = r;
+            }
+            if let Some(dense) = &upd.edge_rates {
+                assert_eq!(&edges, dense, "diff replay == dense vector at t={}", upd.t);
+            }
+            if let Some(dense) = &upd.grad_rates {
+                assert_eq!(&grads, dense);
+            }
+            // touched_workers covers every diffed endpoint + churn.
+            let touched = upd.touched_workers(&plan.union.edges);
+            for &(e, _) in &upd.edge_diff {
+                let (i, j) = plan.union.edges[e];
+                assert!(touched.binary_search(&i).is_ok());
+                assert!(touched.binary_search(&j).is_ok());
+            }
+            for &w in upd.leave.iter().chain(&upd.join) {
+                assert!(touched.binary_search(&w).is_ok());
+            }
         }
     }
 

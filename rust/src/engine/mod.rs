@@ -20,9 +20,11 @@
 //! [`crate::runtime::RustGradSource`] draw from.
 
 pub mod core;
+pub mod multiplex;
 pub mod sampler;
 pub mod scheduler;
 
 pub use self::core::{DynamicsCore, LossEma};
+pub use multiplex::{Frame, MultiplexEngine};
 pub use sampler::BatchSampler;
 pub use scheduler::{Scheduler, Tick, VirtualTimeScheduler, WallClock};

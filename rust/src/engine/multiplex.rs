@@ -1,0 +1,458 @@
+//! Multiplexed virtual-worker execution for massive fleets.
+//!
+//! The threaded runtime spends one OS thread per worker — fine at the
+//! paper's n = 64, hopeless at the ROADMAP's 10⁵–10⁶. This module keeps
+//! the *exact* virtual-time event stream ([`VirtualTimeScheduler`], so
+//! every replay guarantee holds) but executes it cooperatively: M
+//! virtual workers multiplexed over one fixed [`ChunkPool`] whose width
+//! is pinned by the same `A2CID2_POOL_THREADS` knob as the kernel pool.
+//!
+//! ## Frames
+//!
+//! The scheduler's event stream is cut into **frames**: maximal runs of
+//! consecutive events whose worker sets are pairwise disjoint (a
+//! gradient touches one worker, a pairwise averaging touches two). Ticks
+//! within a frame commute — each handler mutates only its own workers'
+//! state — so the pool may execute them in any order, on any lanes, and
+//! the result is bit-identical to serial in-order execution. Frame
+//! boundaries are a pure function of the event stream (never of thread
+//! count or timing), so the partition itself is deterministic too: the
+//! multiplexed replay equals the serial [`VirtualTimeScheduler`] replay
+//! bit for bit at any pool width, which is what lets the golden replay
+//! checksums pin it.
+//!
+//! With n workers and rate-proportional event mixing, the birthday bound
+//! puts the expected disjoint-prefix length at Θ(√n): ~300 ticks per
+//! frame at n = 10⁵ — far more than enough to keep a laptop-class pool
+//! saturated while the per-frame bookkeeping stays O(frame).
+//!
+//! Scheduler-recorded [`NetChange`]s (churn re-inits, retunes) are
+//! barriers: a change's effect may span workers (a re-join copies a
+//! donor's state), so a frame never crosses one. The caller processes
+//! [`Frame::changes`] serially — exactly like the serial engine loop —
+//! then hands [`Frame::ticks`] to [`MultiplexEngine::execute`].
+
+use std::cell::UnsafeCell;
+
+use crate::config::scenario::{NetUpdate, NetworkPlan};
+use crate::engine::scheduler::{NetChange, Scheduler, Tick, VirtualTimeScheduler};
+use crate::gossip::pool::{self, ChunkPool};
+
+/// Hard cap on ticks per frame: bounds the caller's frame buffer and the
+/// latency between change barriers without affecting determinism (the
+/// cap cuts the same prefix regardless of pool width).
+pub const MAX_FRAME_TICKS: usize = 4096;
+
+/// Ticks per pool task: each claimed chunk runs a fixed contiguous span
+/// of the frame, amortizing the dispatch CAS over real work.
+const TICKS_PER_CHUNK: usize = 16;
+
+/// One multiplexed execution unit: changes first (serial, on the
+/// caller), then a worker-disjoint run of ticks (parallel, on the pool).
+#[derive(Debug, Default)]
+pub struct Frame {
+    /// Churn/retune changes that happened at-or-before the first tick;
+    /// process these before executing `ticks`, in order.
+    pub changes: Vec<NetChange>,
+    /// Consecutive events with pairwise-disjoint worker sets, in virtual
+    /// time order.
+    pub ticks: Vec<Tick>,
+}
+
+/// The multiplexed engine: a [`VirtualTimeScheduler`] plus frame
+/// assembly and a private pool to fan frames out on.
+///
+/// The pool is deliberately NOT [`ChunkPool::global`]: tick handlers
+/// call the gossip kernels, which shard large-`dim` buffers across the
+/// global pool — nesting one pool inside a *different* pool is safe
+/// (distinct job slots; the inner `try_run` simply falls back to serial
+/// under contention), re-entering the same pool is not.
+pub struct MultiplexEngine {
+    sched: VirtualTimeScheduler,
+    pool: ChunkPool,
+    /// Tick popped but not yet emitted: it conflicted with the frame
+    /// under assembly, or changes preceded it.
+    held: Option<Tick>,
+    /// Changes that precede `held`.
+    held_changes: Vec<NetChange>,
+    /// `stamp[w] == frame_id` ⇔ worker w already has a tick in the frame
+    /// under assembly (O(1) conflict test, no per-frame clearing).
+    stamp: Vec<u64>,
+    frame_id: u64,
+}
+
+impl MultiplexEngine {
+    /// Build from a compiled plan; pool width follows
+    /// `A2CID2_POOL_THREADS` (the caller's thread participates, so width
+    /// 1 means zero extra threads — fully serial).
+    pub fn new(plan: &NetworkPlan, seed: u64) -> Self {
+        Self::with_extra_threads(plan, seed, pool::configured_extra_threads())
+    }
+
+    /// Build with an explicit number of extra pool threads (tests pin
+    /// widths to prove bit-identity across them).
+    pub fn with_extra_threads(plan: &NetworkPlan, seed: u64, extra: usize) -> Self {
+        Self {
+            sched: VirtualTimeScheduler::new(plan, seed),
+            pool: ChunkPool::new(extra),
+            held: None,
+            held_changes: Vec::new(),
+            stamp: vec![0; plan.union.n],
+            frame_id: 0,
+        }
+    }
+
+    /// Current virtual time (the last popped event's timestamp).
+    pub fn now(&self) -> f64 {
+        self.sched.now()
+    }
+
+    pub fn n_grad_events(&self) -> u64 {
+        self.sched.n_grad_events()
+    }
+
+    pub fn n_comm_events(&self) -> u64 {
+        self.sched.n_comm_events()
+    }
+
+    /// Total parallel lanes of the private pool.
+    pub fn lanes(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    fn tick_workers(tick: Tick) -> (usize, Option<usize>) {
+        match tick {
+            Tick::Grad { worker, .. } => (worker, None),
+            Tick::Comm { i, j, .. } => (i, Some(j)),
+        }
+    }
+
+    fn conflicts(&self, tick: Tick) -> bool {
+        let (a, b) = Self::tick_workers(tick);
+        self.stamp[a] == self.frame_id || b.is_some_and(|w| self.stamp[w] == self.frame_id)
+    }
+
+    fn claim(&mut self, tick: Tick) {
+        let (a, b) = Self::tick_workers(tick);
+        self.stamp[a] = self.frame_id;
+        if let Some(w) = b {
+            self.stamp[w] = self.frame_id;
+        }
+    }
+
+    /// Assemble the next frame: the maximal disjoint prefix of the
+    /// remaining event stream (up to [`MAX_FRAME_TICKS`]), cut early at
+    /// any [`NetChange`] barrier. `None` once the stream is exhausted.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        self.frame_id += 1;
+        let mut frame =
+            Frame { changes: std::mem::take(&mut self.held_changes), ticks: Vec::new() };
+        if let Some(t) = self.held.take() {
+            self.claim(t);
+            frame.ticks.push(t);
+        }
+        while frame.ticks.len() < MAX_FRAME_TICKS {
+            let Some(tick) = self.sched.next() else { break };
+            let changes = self.sched.drain_changes();
+            if !changes.is_empty() {
+                if frame.ticks.is_empty() {
+                    // Nothing emitted yet: the changes still precede
+                    // every tick of THIS frame.
+                    frame.changes.extend(changes);
+                    self.claim(tick);
+                    frame.ticks.push(tick);
+                    continue;
+                }
+                // The changes sit between the frame's ticks and `tick`:
+                // close here, re-emit both at the next frame.
+                self.held = Some(tick);
+                self.held_changes = changes;
+                break;
+            }
+            if self.conflicts(tick) {
+                self.held = Some(tick);
+                break;
+            }
+            self.claim(tick);
+            frame.ticks.push(tick);
+        }
+        (!frame.ticks.is_empty() || !frame.changes.is_empty()).then_some(frame)
+    }
+
+    /// Execute a frame's ticks over per-worker states on the pool.
+    ///
+    /// `grad(worker, t, state)` handles a gradient spike, `comm(t, a, b)`
+    /// a pairwise averaging between the edge's endpoint states. Handlers
+    /// run concurrently for distinct ticks but — by the frame's disjoint
+    /// worker sets — never touch the same state, so any per-state
+    /// mutation is race-free and the result is order-independent.
+    /// Handlers must not mutate anything shared besides their states.
+    pub fn execute<W, G, C>(&self, states: &mut [W], ticks: &[Tick], grad: &G, comm: &C)
+    where
+        W: Send,
+        G: Fn(usize, f64, &mut W) + Sync,
+        C: Fn(f64, &mut W, &mut W) + Sync,
+    {
+        // Reinterpret the exclusive borrow as shared cells: sound
+        // because the frame invariant gives each index to at most one
+        // tick, and `UnsafeCell<W>` is layout-identical to `W`.
+        struct Cells<'a, W>(&'a [UnsafeCell<W>]);
+        unsafe impl<W: Send> Sync for Cells<'_, W> {}
+        let cells: Cells<'_, W> =
+            Cells(unsafe { &*(states as *mut [W] as *const [UnsafeCell<W>]) });
+        let run_tick = |tick: &Tick| match *tick {
+            Tick::Grad { worker, t } => {
+                // SAFETY: `worker` appears in exactly one frame tick.
+                let w = unsafe { &mut *cells.0[worker].get() };
+                grad(worker, t, w);
+            }
+            Tick::Comm { i, j, t } => {
+                debug_assert_ne!(i, j, "self-loop edge in frame");
+                // SAFETY: i ≠ j, and each appears in exactly one tick.
+                let (a, b) = unsafe { (&mut *cells.0[i].get(), &mut *cells.0[j].get()) };
+                comm(t, a, b);
+            }
+        };
+        let n_chunks = ticks.len().div_ceil(TICKS_PER_CHUNK);
+        self.pool.run(n_chunks, &|c| {
+            let lo = c * TICKS_PER_CHUNK;
+            let hi = (lo + TICKS_PER_CHUNK).min(ticks.len());
+            for tick in &ticks[lo..hi] {
+                run_tick(tick);
+            }
+        });
+    }
+}
+
+impl Scheduler for MultiplexEngine {
+    fn apply(&mut self, upd: &NetUpdate) {
+        Scheduler::apply(&mut self.sched, upd);
+    }
+
+    fn updates_applied(&self) -> u64 {
+        self.sched.updates_applied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::engine::DynamicsCore;
+    use crate::gossip::{AcidParams, WorkerState};
+    use crate::optim::{LrSchedule, Sgd};
+
+    fn plan(s: &str, n: usize, horizon: f64) -> NetworkPlan {
+        Scenario::parse(s).unwrap().compile(n, 1.0, horizon, &vec![1.0; n]).unwrap()
+    }
+
+    /// Per-virtual-worker slot: gossip pair plus its private optimizer —
+    /// the unit of state the frame invariant hands to exactly one tick.
+    struct Slot {
+        ws: WorkerState,
+        opt: Sgd,
+    }
+
+    fn init_slots(n: usize, dim: usize) -> Vec<Slot> {
+        (0..n)
+            .map(|w| Slot {
+                ws: WorkerState::new(
+                    (0..dim).map(|d| ((w * 31 + d * 7) % 13) as f32 - 6.0).collect(),
+                ),
+                opt: Sgd::new(0.9),
+            })
+            .collect()
+    }
+
+    fn test_core() -> DynamicsCore {
+        DynamicsCore::with_params(
+            AcidParams::accelerated(6.0, 1.5),
+            LrSchedule::Constant { lr: 0.05 },
+        )
+    }
+
+    fn synth_grad(worker: usize, dim: usize) -> Vec<f32> {
+        (0..dim).map(|d| ((worker + d) % 5) as f32 * 0.1).collect()
+    }
+
+    /// Serial reference: the plain VirtualTimeScheduler loop, one event
+    /// at a time, changes drained and processed before each tick.
+    fn run_serial(plan: &NetworkPlan, seed: u64, events: usize, dim: usize) -> (Vec<Slot>, u64) {
+        let core = test_core();
+        let mut sched = VirtualTimeScheduler::new(plan, seed);
+        let mut slots = init_slots(plan.union.n, dim);
+        let mut in_fleet = vec![true; plan.union.n];
+        let mut done = 0u64;
+        for _ in 0..events {
+            let Some(tick) = sched.next() else { break };
+            for ch in sched.drain_changes() {
+                apply_change(&core, &mut slots, &mut in_fleet, plan, &ch);
+            }
+            match tick {
+                Tick::Grad { worker, t } => {
+                    let g = synth_grad(worker, dim);
+                    let s = &mut slots[worker];
+                    core.grad_event(&mut s.ws, t, &mut s.opt, &g);
+                }
+                Tick::Comm { i, j, t } => {
+                    let (l, r) = slots.split_at_mut(j);
+                    core.comm_event(&mut l[i].ws, &mut r[0].ws, t);
+                }
+            }
+            done += 1;
+        }
+        (slots, done)
+    }
+
+    fn apply_change(
+        core: &DynamicsCore,
+        slots: &mut [Slot],
+        in_fleet: &mut [bool],
+        plan: &NetworkPlan,
+        ch: &NetChange,
+    ) {
+        for &w in &ch.left {
+            in_fleet[w] = false;
+        }
+        for &j in &ch.joined {
+            let donor = plan.union.neighbors(j).iter().copied().find(|&d| in_fleet[d]);
+            if let Some(d) = donor {
+                let donor_x = slots[d].ws.x.clone();
+                core.rejoin_from(&mut slots[j].ws, &donor_x, ch.t);
+            }
+        }
+        for &j in &ch.joined {
+            in_fleet[j] = true;
+        }
+    }
+
+    fn run_multiplexed(
+        plan: &NetworkPlan,
+        seed: u64,
+        events: usize,
+        dim: usize,
+        extra: usize,
+    ) -> (Vec<Slot>, u64) {
+        let core = test_core();
+        let mut eng = MultiplexEngine::with_extra_threads(plan, seed, extra);
+        let mut slots = init_slots(plan.union.n, dim);
+        let mut in_fleet = vec![true; plan.union.n];
+        let mut done = 0u64;
+        while let Some(frame) = eng.next_frame() {
+            for ch in &frame.changes {
+                apply_change(&core, &mut slots, &mut in_fleet, plan, ch);
+            }
+            let take = frame.ticks.len().min(events - done as usize);
+            let ticks = &frame.ticks[..take];
+            let core_ref = &core;
+            eng.execute(
+                &mut slots,
+                ticks,
+                &|worker, t, s: &mut Slot| {
+                    let g = synth_grad(worker, dim);
+                    core_ref.grad_event(&mut s.ws, t, &mut s.opt, &g);
+                },
+                &|t, a: &mut Slot, b: &mut Slot| {
+                    core_ref.comm_event(&mut a.ws, &mut b.ws, t);
+                },
+            );
+            done += take as u64;
+            if done as usize >= events {
+                break;
+            }
+        }
+        (slots, done)
+    }
+
+    fn assert_slots_bit_equal(a: &[Slot], b: &[Slot]) {
+        assert_eq!(a.len(), b.len());
+        for (w, (u, v)) in a.iter().zip(b).enumerate() {
+            let ub: Vec<u32> = u.ws.x.iter().map(|f| f.to_bits()).collect();
+            let vb: Vec<u32> = v.ws.x.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(ub, vb, "worker {w} x");
+            let ub: Vec<u32> = u.ws.xt.iter().map(|f| f.to_bits()).collect();
+            let vb: Vec<u32> = v.ws.xt.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(ub, vb, "worker {w} xt");
+            assert_eq!(u.ws.t_last.to_bits(), v.ws.t_last.to_bits(), "worker {w} t_last");
+            assert_eq!(u.ws.n_grads, v.ws.n_grads, "worker {w} n_grads");
+            assert_eq!(u.ws.n_comms, v.ws.n_comms, "worker {w} n_comms");
+        }
+    }
+
+    #[test]
+    fn frames_partition_the_event_stream_disjointly() {
+        let plan = plan("ring@0,complete@0.5", 10, 50.0);
+        let mut eng = MultiplexEngine::with_extra_threads(&plan, 3, 0);
+        let mut serial = VirtualTimeScheduler::new(&plan, 3);
+        let mut total = 0usize;
+        while total < 1500 {
+            let frame = eng.next_frame().expect("stream not exhausted");
+            assert!(!frame.ticks.is_empty());
+            // Disjointness within the frame.
+            let mut seen = std::collections::HashSet::new();
+            for &tick in &frame.ticks {
+                let (a, b) = match tick {
+                    Tick::Grad { worker, .. } => (worker, None),
+                    Tick::Comm { i, j, .. } => (i, Some(j)),
+                };
+                assert!(seen.insert(a), "worker {a} twice in one frame");
+                if let Some(w) = b {
+                    assert!(seen.insert(w), "worker {w} twice in one frame");
+                }
+            }
+            // Concatenation == the serial stream, in order.
+            for &tick in &frame.ticks {
+                assert_eq!(tick, serial.next().unwrap());
+                let _ = serial.drain_changes();
+            }
+            total += frame.ticks.len();
+        }
+    }
+
+    #[test]
+    fn multiplexed_replay_bit_identical_to_serial_across_widths() {
+        // Churn + a topology switch + drift: changes act as barriers and
+        // re-joins copy donor state. The multiplexed replay must equal
+        // the one-event-at-a-time serial loop bit for bit, at pool width
+        // 1 and 4 alike.
+        let plan = plan(
+            "ring@0,exponential@0.5;drift=0.3:3:1;leave=0.25:0.3:2;join=0.25:0.7",
+            12,
+            80.0,
+        );
+        let (serial, n_serial) = run_serial(&plan, 11, 2500, 6);
+        assert_eq!(n_serial, 2500);
+        for extra in [0usize, 3] {
+            let (multi, n_multi) = run_multiplexed(&plan, 11, 2500, 6, extra);
+            assert_eq!(n_multi, 2500, "extra={extra}");
+            assert_slots_bit_equal(&serial, &multi);
+        }
+    }
+
+    #[test]
+    fn frame_caps_and_scheduler_trait_surface() {
+        let plan = plan("complete@0", 6, 1e6);
+        let mut eng = MultiplexEngine::with_extra_threads(&plan, 1, 0);
+        assert_eq!(eng.lanes(), 1);
+        let before = Scheduler::updates_applied(&eng);
+        let frame = eng.next_frame().unwrap();
+        assert_eq!(Scheduler::updates_applied(&eng), before);
+        assert!(frame.ticks.len() <= MAX_FRAME_TICKS);
+        // A complete graph on 6 workers saturates fast: every frame is
+        // at most 3 comm ticks wide plus grads, i.e. ≤ 6 workers' worth.
+        let mut workers = 0;
+        for &t in &frame.ticks {
+            workers += match t {
+                Tick::Grad { .. } => 1,
+                Tick::Comm { .. } => 2,
+            };
+        }
+        assert!(workers <= 6);
+        assert!(eng.now() > 0.0);
+        // The queue counters include the conflicting tick held for the
+        // next frame (if any), hence the one-event slack.
+        let popped = eng.n_grad_events() + eng.n_comm_events();
+        assert!(popped >= frame.ticks.len() as u64);
+        assert!(popped <= frame.ticks.len() as u64 + 1);
+    }
+}

@@ -125,12 +125,24 @@ impl Scheduler for VirtualTimeScheduler {
         // update's own timestamp so the new rates govern [upd.t, ∞), not
         // the gap back to the last popped event.
         self.queue.advance_to(upd.t);
-        if let Some(rates) = &upd.edge_rates {
+        // Sparse path: only the changed indices. Bit-identical to walking
+        // the dense vector because the queue's setters no-op on an equal
+        // rate — the dense walk touches the same entries. Hand-built
+        // updates without diffs fall back to the dense vectors.
+        if !upd.edge_diff.is_empty() {
+            for &(e, r) in &upd.edge_diff {
+                self.queue.set_comm_rate(e, r);
+            }
+        } else if let Some(rates) = &upd.edge_rates {
             for (e, &r) in rates.iter().enumerate() {
                 self.queue.set_comm_rate(e, r);
             }
         }
-        if let Some(rates) = &upd.grad_rates {
+        if !upd.grad_diff.is_empty() {
+            for &(w, r) in &upd.grad_diff {
+                self.queue.set_grad_rate(w, r);
+            }
+        } else if let Some(rates) = &upd.grad_rates {
             for (w, &r) in rates.iter().enumerate() {
                 self.queue.set_grad_rate(w, r);
             }
@@ -164,6 +176,13 @@ pub struct WallClock {
     n: usize,
     edges: Vec<(usize, usize)>,
     union_neighbors: Vec<Vec<usize>>,
+    /// Union edge indices incident to each worker, aligned with
+    /// `union_neighbors` (CSR order: partners ascending). Drives the
+    /// O(edges changed) incremental update path.
+    incident_edges: Vec<Vec<usize>>,
+    /// Writer-side shadow of the current per-edge rates (monitor thread
+    /// only) — what sparse diffs are applied against.
+    cur_rates: Mutex<Vec<f64>>,
     /// Per-worker Σ of active incident edge rates, as f64 bits.
     comm_rates: Vec<AtomicU64>,
     /// Per-worker relative compute speed (1.0 = nominal), as f64 bits.
@@ -202,7 +221,9 @@ impl WallClock {
         let wc = Self {
             n,
             edges: plan.union.edges.clone(),
-            union_neighbors: plan.union.neighbors.clone(),
+            union_neighbors: (0..n).map(|i| plan.union.neighbors(i).to_vec()).collect(),
+            incident_edges: (0..n).map(|i| plan.union.neighbor_edges(i).to_vec()).collect(),
+            cur_rates: Mutex::new(vec![0.0; plan.union.edges.len()]),
             comm_rates: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
             speeds: (0..n).map(|_| AtomicU64::new(1f64.to_bits())).collect(),
             max_speed: AtomicU64::new(1f64.to_bits()),
@@ -348,10 +369,59 @@ impl WallClock {
         for list in &mut adj {
             list.sort_unstable();
         }
+        self.cur_rates.lock().unwrap().copy_from_slice(rates);
         *self.active.write().unwrap() = adj;
         for (slot, &t) in self.comm_rates.iter().zip(&totals) {
             slot.store(t.to_bits(), Ordering::Release);
         }
+    }
+
+    /// Sparse edge-rate update: rebuild only the touched workers'
+    /// adjacency lists and rate totals — O(Σ deg over touched workers),
+    /// never O(|ℰ|). Each touched worker's total is re-summed over its
+    /// incident edges in CSR (partner-ascending) order, which is exactly
+    /// the order the full rebuild accumulates in, so the stored totals
+    /// are bit-identical to a dense [`WallClock::set_edge_rates`] call.
+    fn apply_edge_diff(&self, diff: &[(usize, f64)]) {
+        let mut cur = self.cur_rates.lock().unwrap();
+        let mut touched: Vec<usize> = Vec::with_capacity(2 * diff.len());
+        for &(e, r) in diff {
+            cur[e] = r;
+            let (i, j) = self.edges[e];
+            touched.push(i);
+            touched.push(j);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        let mut active = self.active.write().unwrap();
+        for &w in &touched {
+            let mut total = 0.0f64;
+            let list = &mut active[w];
+            list.clear();
+            for &e in &self.incident_edges[w] {
+                let r = cur[e];
+                if r > 0.0 {
+                    total += r;
+                    let (i, j) = self.edges[e];
+                    list.push(if i == w { j } else { i });
+                }
+            }
+            self.comm_rates[w].store(total.to_bits(), Ordering::Release);
+        }
+    }
+
+    /// Sparse speed update: store the changed slots, then re-derive the
+    /// pace anchor (max must be rescanned — a diff may LOWER the
+    /// previously-fastest worker).
+    fn apply_speed_diff(&self, diff: &[(usize, f64)]) {
+        for &(w, r) in diff {
+            self.speeds[w].store(r.to_bits(), Ordering::Release);
+        }
+        let mut max = f64::MIN;
+        for slot in &self.speeds {
+            max = max.max(f64::from_bits(slot.load(Ordering::Relaxed)));
+        }
+        self.max_speed.store(max.max(0.05).to_bits(), Ordering::Release);
     }
 
     fn set_speeds(&self, rates: &[f64]) {
@@ -375,10 +445,14 @@ impl WallClock {
         for &w in &upd.leave {
             self.worker_active[w].store(false, Ordering::Release);
         }
-        if let Some(rates) = &upd.edge_rates {
+        if !upd.edge_diff.is_empty() {
+            self.apply_edge_diff(&upd.edge_diff);
+        } else if let Some(rates) = &upd.edge_rates {
             self.set_edge_rates(rates);
         }
-        if let Some(rates) = &upd.grad_rates {
+        if !upd.grad_diff.is_empty() {
+            self.apply_speed_diff(&upd.grad_diff);
+        } else if let Some(rates) = &upd.grad_rates {
             self.set_speeds(rates);
         }
         self.version.fetch_add(1, Ordering::AcqRel);
@@ -474,6 +548,42 @@ mod tests {
         let mut nbuf = vec![99];
         shared.active_neighbors_into(0, &mut nbuf);
         assert_eq!(nbuf, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wall_clock_sparse_diff_matches_dense_rebuild() {
+        // Replay the same compiled updates through the sparse incremental
+        // path and the dense full-rebuild path: rate totals, adjacency,
+        // and the pace anchor must match to the bit.
+        let plan = plan(
+            "ring@0,complete@0.5;drift=0.4:3:2;leave=0.25:0.2:1;join=0.25:0.8",
+            8,
+            80.0,
+        );
+        assert!(plan.updates.iter().any(|u| !u.edge_diff.is_empty()));
+        let sparse = WallClock::new(&plan);
+        let dense = WallClock::new(&plan);
+        for upd in &plan.updates {
+            sparse.apply_shared(upd);
+            let mut stripped = upd.clone();
+            stripped.edge_diff.clear();
+            stripped.grad_diff.clear();
+            dense.apply_shared(&stripped);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for w in 0..8 {
+                assert_eq!(
+                    sparse.comm_rate(w).to_bits(),
+                    dense.comm_rate(w).to_bits(),
+                    "worker {w} rate total at t={}",
+                    upd.t
+                );
+                assert_eq!(sparse.speed(w).to_bits(), dense.speed(w).to_bits());
+                sparse.active_neighbors_into(w, &mut a);
+                dense.active_neighbors_into(w, &mut b);
+                assert_eq!(a, b, "worker {w} adjacency at t={}", upd.t);
+            }
+            assert_eq!(sparse.max_speed().to_bits(), dense.max_speed().to_bits());
+        }
     }
 
     #[test]

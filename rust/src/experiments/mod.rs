@@ -33,6 +33,7 @@
 //! | [`tab5`]     | Tab. 5 | ImageNet-like accuracy on the ring, rates 1 & 2 |
 //! | [`tab6`]     | Tab. 6 | wall time + #∇ slowest/fastest worker |
 //! | [`ablation`] | beyond | momentum-rate η sweep around the theory's η* |
+//! | [`scaling`]  | beyond | massive fleets: cluster_ring(k,m) χ₁ vs flat ring, multiplexed to 10⁵+ |
 //! | [`scenario`] | beyond | A²CiD² across a mid-run topology switch + dropout |
 //! | [`sweep`]    | beyond | dropout × switch × churn × adaptive grid |
 //!
@@ -58,6 +59,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod registry;
+pub mod scaling;
 pub mod scenario;
 pub mod sweep;
 pub mod tab1;

@@ -111,6 +111,12 @@ register!(Tab4, tab4, "Tab. 4", "CIFAR-like accuracy across 3 graphs × n");
 register!(Tab5, tab5, "Tab. 5", "ImageNet-like accuracy on the ring, rates 1 & 2");
 register!(Tab6, tab6, "Tab. 6", "wall time + #∇ slowest/fastest worker");
 register!(Ablation, ablation, "beyond", "momentum-rate η sweep around the theory's η*");
+register!(
+    Scaling,
+    scaling,
+    "beyond",
+    "massive fleets: cluster_ring(k,m) χ₁ vs flat ring, multiplexed to 10⁵+"
+);
 register!(ScenarioExp, scenario, "beyond", "A²CiD² across a mid-run topology switch + dropout");
 register!(
     Sweep,
@@ -124,7 +130,7 @@ register!(
 pub fn all() -> &'static [&'static dyn Experiment] {
     static REGISTRY: &[&dyn Experiment] = &[
         &Fig1, &Fig2, &Fig3, &Fig4, &Fig5, &Fig6, &Fig7, &Tab1, &Tab2, &Tab3, &Tab4, &Tab5,
-        &Tab6, &Ablation, &ScenarioExp, &Sweep,
+        &Tab6, &Ablation, &Scaling, &ScenarioExp, &Sweep,
     ];
     REGISTRY
 }

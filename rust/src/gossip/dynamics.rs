@@ -18,14 +18,17 @@
 use super::mixing::Mixer;
 use super::params::AcidParams;
 use super::pool;
+use super::pool::AlignedVec;
 
-/// One worker's replica state.
+/// One worker's replica state. The two buffers live in page-aligned
+/// allocations ([`AlignedVec`]) so the chunk pool's fixed 64k-element
+/// shard boundaries land on page boundaries at large `dim`.
 #[derive(Clone, Debug)]
 pub struct WorkerState {
     /// Model parameters `x^i`.
-    pub x: Vec<f32>,
+    pub x: AlignedVec,
     /// Momentum buffer `x̃^i` (equal to `x` at init).
-    pub xt: Vec<f32>,
+    pub xt: AlignedVec,
     /// Time of this worker's last event (for lazy mixing).
     pub t_last: f64,
     /// Number of gradient events applied.
@@ -38,6 +41,7 @@ impl WorkerState {
     /// Initialize with `x̃ = x` (the paper's init; guarantees
     /// `mean(x̃₀) = mean(x₀)`, the tracker property of Eq. 5).
     pub fn new(x: Vec<f32>) -> Self {
+        let x = AlignedVec::from(x);
         let xt = x.clone();
         Self { x, xt, t_last: 0.0, n_grads: 0, n_comms: 0 }
     }
@@ -277,7 +281,7 @@ mod tests {
         let p = AcidParams::accelerated(8.0, 2.0);
         let mixer = Mixer::new(p.eta);
         let mut ws = vec![mk(&[1.0, 0.0]), mk(&[0.0, 2.0]), mk(&[3.0, -1.0])];
-        let mean = |ws: &[WorkerState], f: fn(&WorkerState) -> &Vec<f32>| -> f64 {
+        let mean = |ws: &[WorkerState], f: fn(&WorkerState) -> &[f32]| -> f64 {
             ws.iter()
                 .flat_map(|w| f(w).iter())
                 .map(|&v| v as f64)

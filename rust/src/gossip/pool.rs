@@ -174,25 +174,7 @@ impl ChunkPool {
     /// spawn lazily on the first large-`dim` kernel call.
     pub fn global() -> &'static ChunkPool {
         static GLOBAL: OnceLock<ChunkPool> = OnceLock::new();
-        GLOBAL.get_or_init(|| {
-            // A2CID2_POOL_THREADS pins the total lane count (1 = fully
-            // serial kernels). CI's determinism job runs the same seeded
-            // scenario at two widths and diffs the traces — the fixed
-            // chunk boundaries must make the width unobservable.
-            let lanes = std::env::var("A2CID2_POOL_THREADS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|&n| n >= 1);
-            let extra = match lanes {
-                Some(n) => (n - 1).min(7),
-                None => {
-                    let cores =
-                        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-                    cores.saturating_sub(1).min(7)
-                }
-            };
-            ChunkPool::new(extra)
-        })
+        GLOBAL.get_or_init(|| ChunkPool::new(configured_extra_threads()))
     }
 
     /// Total parallel lanes (workers + the calling thread).
@@ -285,6 +267,28 @@ impl ChunkPool {
     }
 }
 
+/// Extra worker threads the `A2CID2_POOL_THREADS` policy prescribes —
+/// the sizing [`ChunkPool::global`] uses, shared with the multiplexed
+/// virtual-worker engine so one env var pins every pool in the process.
+/// `A2CID2_POOL_THREADS=1` means fully serial (zero extra threads);
+/// unset falls back to available cores, capped small (the kernels are
+/// memory-bound; a handful of streams saturates DRAM). CI's determinism
+/// job runs the same seeded scenario at two widths and diffs the traces
+/// — the fixed chunk boundaries must make the width unobservable.
+pub fn configured_extra_threads() -> usize {
+    let lanes = std::env::var("A2CID2_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1);
+    match lanes {
+        Some(n) => (n - 1).min(7),
+        None => {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            cores.saturating_sub(1).min(7)
+        }
+    }
+}
+
 impl Drop for ChunkPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -336,6 +340,155 @@ fn n_chunks(len: usize) -> usize {
 fn chunk_bounds(len: usize, c: usize) -> (usize, usize) {
     let lo = c * CHUNK;
     (lo, (lo + CHUNK).min(len))
+}
+
+/// Host page size the chunk buffers align to.
+pub const PAGE: usize = 4096;
+
+/// A fixed-length f32 buffer whose backing allocation is page-aligned
+/// (4 KiB) once it spans at least one page. [`CHUNK`] elements are
+/// 256 KiB — a whole multiple of the page — so with an aligned base
+/// every fixed chunk boundary the pool shards on lands exactly on a page
+/// boundary: no two pool lanes ever touch the same page of a state
+/// buffer (the NUMA/false-sharing prep carried in the ROADMAP).
+/// Sub-page buffers keep f32's natural alignment — a 4 KiB floor would
+/// multiply the footprint of 10⁵-worker fleets ~100×, and nothing
+/// shards below [`POOL_MIN_DIM`] anyway.
+///
+/// Derefs to `[f32]`, so it drops into every kernel signature; contents
+/// are bit-identical to the `Vec<f32>` it replaces (alignment moves the
+/// allocation, never the values — the regression test pins this).
+pub struct AlignedVec {
+    ptr: std::ptr::NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: AlignedVec uniquely owns its allocation, exactly like Vec.
+unsafe impl Send for AlignedVec {}
+unsafe impl Sync for AlignedVec {}
+
+impl AlignedVec {
+    fn layout(len: usize) -> std::alloc::Layout {
+        let bytes = len * std::mem::size_of::<f32>();
+        let align =
+            if bytes >= PAGE { PAGE } else { std::mem::align_of::<f32>() };
+        std::alloc::Layout::from_size_align(bytes, align).expect("valid f32 buffer layout")
+    }
+
+    /// Allocate a zeroed buffer of `len` elements.
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return Self { ptr: std::ptr::NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0); all-zero bytes are
+        // a valid f32 pattern (+0.0).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f32;
+        let Some(ptr) = std::ptr::NonNull::new(raw) else {
+            std::alloc::handle_alloc_error(layout)
+        };
+        Self { ptr, len }
+    }
+
+    /// Allocate and copy `src` into an aligned buffer.
+    pub fn from_slice(src: &[f32]) -> Self {
+        let mut buf = Self::zeroed(src.len());
+        buf.as_mut_slice().copy_from_slice(src);
+        buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: ptr covers len initialized elements (or is dangling
+        // with len 0, for which from_raw_parts is defined).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus &mut self gives exclusive access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated in `zeroed` with this exact layout.
+            unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) }
+        }
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> Self {
+        Self::from_slice(self.as_slice())
+    }
+}
+
+impl std::ops::Deref for AlignedVec {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for AlignedVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl std::fmt::Debug for AlignedVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq for AlignedVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for AlignedVec {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<AlignedVec> for Vec<f32> {
+    fn eq(&self, other: &AlignedVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for AlignedVec {
+    fn from(v: Vec<f32>) -> Self {
+        Self::from_slice(&v)
+    }
+}
+
+impl<'a> IntoIterator for &'a AlignedVec {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut AlignedVec {
+    type Item = &'a mut f32;
+    type IntoIter = std::slice::IterMut<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_mut_slice().iter_mut()
+    }
 }
 
 /// A raw view of a slice that can cross the pool's thread boundary.
@@ -723,6 +876,50 @@ mod tests {
         comm_only(0.5, 1.5, &xj, &mut rx, &mut rt);
         assert_eq!(x, rx);
         assert_eq!(t, rt);
+    }
+
+    #[test]
+    fn aligned_vec_page_aligns_large_buffers() {
+        // At or past one page the base lands on a 4 KiB boundary, and —
+        // because CHUNK·4 bytes is a whole multiple of the page — so does
+        // every fixed chunk boundary the pool shards on.
+        for len in [1024usize, CHUNK, DIM, 4 * CHUNK] {
+            let buf = AlignedVec::zeroed(len);
+            let addr = buf.as_slice().as_ptr() as usize;
+            if len * 4 >= PAGE {
+                assert_eq!(addr % PAGE, 0, "len {len}: base not page-aligned");
+                for c in 0..n_chunks(len) {
+                    let (lo, _) = chunk_bounds(len, c);
+                    assert_eq!((addr + lo * 4) % PAGE, 0, "chunk {c} boundary");
+                }
+            }
+            assert_eq!(buf.len(), len);
+            assert!(buf.iter().all(|&v| v == 0.0));
+        }
+        // Sub-page buffers don't pay the page-rounding footprint.
+        let small = AlignedVec::from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(small, vec![1.0, 2.0, 3.0]);
+        let empty = AlignedVec::zeroed(0);
+        assert!(empty.is_empty());
+        let cloned = small.clone();
+        assert_eq!(cloned, small);
+    }
+
+    #[test]
+    fn aligned_buffers_bit_identical_to_vec_backed_kernels() {
+        // The alignment regression pin: running the pooled kernels over
+        // page-aligned buffers yields exactly the bits the Vec-backed
+        // buffers produce — alignment moves allocations, never values.
+        let g = randvec(DIM, 21);
+        let (x0, t0) = (randvec(DIM, 22), randvec(DIM, 23));
+        let (mut ax, mut at) = (AlignedVec::from_slice(&x0), AlignedVec::from_slice(&t0));
+        mix_grad(0.9, 0.1, 0.02, &g, &mut ax, &mut at);
+        comm_apply_fused(0.8, 0.2, 0.5, 1.5, &g, &mut ax, &mut at);
+        let (mut vx, mut vt) = (x0, t0);
+        mix_grad(0.9, 0.1, 0.02, &g, &mut vx, &mut vt);
+        comm_apply_fused(0.8, 0.2, 0.5, 1.5, &g, &mut vx, &mut vt);
+        assert_eq!(ax, vx);
+        assert_eq!(at, vt);
     }
 
     #[test]

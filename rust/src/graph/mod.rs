@@ -13,10 +13,12 @@
 //! acceleration claim is that convergence degrades with `√(χ₁χ₂)` instead
 //! of `χ₁` (e.g. ring: `Θ(n^{3/2})` instead of `Θ(n²)`).
 
+use crate::linalg::lanczos::{self, LanczosOptions};
 use crate::linalg::{sym_eig, sym_pinv, Matrix};
 
 /// The topologies used in the paper (complete / exponential / ring, App. E.1)
-/// plus extras useful for ablations.
+/// plus extras useful for ablations and the hierarchical shapes that keep
+/// χ₁ tractable at massive fleet sizes (GossipGraD/SWIFT-style clusters).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Topology {
     /// All pairs connected.
@@ -36,12 +38,31 @@ pub enum Topology {
     Hypercube,
     /// Erdős–Rényi `G(n, p)`, resampled until connected.
     ErdosRenyi { p: f64, seed: u64 },
+    /// `clusters` rings of `ring` nodes each, bridged by an exponential
+    /// graph over the cluster representatives (node `c·ring` of each
+    /// cluster). Grammar `cluster_ring:KxM`; requires `K·M == n`. χ₁
+    /// stays ~flat in the cluster count for fixed ring size — the shape
+    /// that makes n = 10⁵ fleets spectrally tractable.
+    ClusterRing { clusters: usize, ring: usize },
+    /// Same bridging, complete graphs inside each cluster. Grammar
+    /// `cluster_complete:KxM`.
+    ClusterComplete { clusters: usize, cluster: usize },
 }
 
 impl Topology {
     /// Parse from a CLI/config string like `"ring"`, `"torus:4x8"`,
-    /// `"erdos:0.3:42"`.
+    /// `"cluster_ring:100x1000"`, `"erdos:0.3:42"`.
     pub fn parse(s: &str) -> crate::Result<Topology> {
+        // `KxM`-style dimension pair shared by torus and the hierarchical
+        // grammars.
+        fn dims(parts: &[&str], what: &str, example: &str) -> crate::Result<(usize, usize)> {
+            let raw = parts
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("{what} needs dims, e.g. {example}"))?;
+            let dims: Vec<&str> = raw.split('x').collect();
+            anyhow::ensure!(dims.len() == 2, "{what} dims must be KxM, got '{raw}'");
+            Ok((dims[0].parse()?, dims[1].parse()?))
+        }
         let parts: Vec<&str> = s.split(':').collect();
         Ok(match parts[0] {
             "complete" => Topology::Complete,
@@ -51,13 +72,17 @@ impl Topology {
             "path" => Topology::Path,
             "hypercube" => Topology::Hypercube,
             "torus" => {
-                let dims: Vec<&str> = parts
-                    .get(1)
-                    .ok_or_else(|| anyhow::anyhow!("torus needs dims, e.g. torus:4x8"))?
-                    .split('x')
-                    .collect();
-                anyhow::ensure!(dims.len() == 2, "torus dims must be RxC");
-                Topology::Torus { rows: dims[0].parse()?, cols: dims[1].parse()? }
+                let (rows, cols) = dims(&parts, "torus", "torus:4x8")?;
+                Topology::Torus { rows, cols }
+            }
+            "cluster_ring" => {
+                let (clusters, ring) = dims(&parts, "cluster_ring", "cluster_ring:10x100")?;
+                Topology::ClusterRing { clusters, ring }
+            }
+            "cluster_complete" => {
+                let (clusters, cluster) =
+                    dims(&parts, "cluster_complete", "cluster_complete:10x16")?;
+                Topology::ClusterComplete { clusters, cluster }
             }
             "erdos" => {
                 let p: f64 = parts
@@ -77,6 +102,10 @@ impl Topology {
     pub fn spec(&self) -> String {
         match self {
             Topology::Torus { rows, cols } => format!("torus:{rows}x{cols}"),
+            Topology::ClusterRing { clusters, ring } => format!("cluster_ring:{clusters}x{ring}"),
+            Topology::ClusterComplete { clusters, cluster } => {
+                format!("cluster_complete:{clusters}x{cluster}")
+            }
             Topology::ErdosRenyi { p, seed } => format!("erdos:{p}:{seed}"),
             other => other.name().to_string(),
         }
@@ -93,18 +122,78 @@ impl Topology {
             Topology::Torus { .. } => "torus",
             Topology::Hypercube => "hypercube",
             Topology::ErdosRenyi { .. } => "erdos-renyi",
+            Topology::ClusterRing { .. } => "cluster-ring",
+            Topology::ClusterComplete { .. } => "cluster-complete",
+        }
+    }
+
+    /// Closed-form (χ₁, χ₂) under the per-worker-rate protocol of
+    /// [`Graph::edge_rates`], for the topologies where both functionals
+    /// have exact expressions — the zero-eigensolve fast path that keeps
+    /// `adapt=1` retuning cheap at any n. Returns `None` where no closed
+    /// form is known (the Lanczos estimator is the fallback).
+    pub fn closed_form_chis(&self, n: usize, rate_per_worker: f64) -> Option<(f64, f64)> {
+        if n < 2 || rate_per_worker <= 0.0 {
+            return None;
+        }
+        let nf = n as f64;
+        let r = rate_per_worker;
+        match self {
+            // Uniform edge weight w = r/2: λ₂ = 2w(1 − cos(2π/n)) and the
+            // adjacent-node resistance is (1/w)·(n−1)/n.
+            Topology::Ring if n >= 3 => {
+                let lambda2 = r * (1.0 - (2.0 * std::f64::consts::PI / nf).cos());
+                Some((1.0 / lambda2, (nf - 1.0) / (r * nf)))
+            }
+            // Uniform weight w = r/(n−1): λ = n·w with multiplicity n−1,
+            // and χ₁ = χ₂ (paper Sec. 4.2).
+            Topology::Complete => {
+                let chi = (nf - 1.0) / (r * nf);
+                Some((chi, chi))
+            }
+            // Uniform weight w = r/2·(1/(n−1) + 1): spectrum {0, w, n·w},
+            // hub–leaf resistance exactly 1/w.
+            Topology::Star if n >= 3 => {
+                let w = 0.5 * r * (1.0 / (nf - 1.0) + 1.0);
+                Some((1.0 / w, 0.5 / w))
+            }
+            _ => None,
         }
     }
 }
 
+/// Exponential-graph bridges over the cluster representatives (node
+/// `c·size` of each cluster): rep(c) — rep((c + 2^j) mod clusters) for
+/// every power of two below the cluster count.
+fn add_exponential_bridges(add: &mut impl FnMut(usize, usize), clusters: usize, size: usize) {
+    let mut step = 1usize;
+    while step < clusters {
+        for c in 0..clusters {
+            add(c * size, ((c + step) % clusters) * size);
+        }
+        step *= 2;
+    }
+}
+
 /// An undirected communication graph over `n` workers.
+///
+/// Adjacency is stored in CSR form — one flat `usize` array sliced by a
+/// per-node offset table — instead of n separate `Vec`s, so a 10⁵-node
+/// fleet is two contiguous allocations and a degree/neighbor query never
+/// chases a heap pointer per node. Each adjacency entry also carries the
+/// index of its edge in `edges`, which is what makes per-edge rate lookups
+/// along a node's neighborhood O(deg) (`neighbor_edges`/`edge_index`).
 #[derive(Clone, Debug)]
 pub struct Graph {
     pub n: usize,
     /// Canonical edge list with `i < j`, sorted.
     pub edges: Vec<(usize, usize)>,
-    /// `neighbors[i]` = sorted adjacency list of worker `i`.
-    pub neighbors: Vec<Vec<usize>>,
+    /// CSR offsets: node `i`'s adjacency is `adj_offsets[i]..adj_offsets[i+1]`.
+    adj_offsets: Vec<usize>,
+    /// Flat neighbor array, sorted within each node's slice.
+    adj_nodes: Vec<usize>,
+    /// `adj_edges[k]` is the `edges` index of the edge behind `adj_nodes[k]`.
+    adj_edges: Vec<usize>,
 }
 
 impl Graph {
@@ -175,6 +264,39 @@ impl Graph {
                     }
                 }
             }
+            Topology::ClusterRing { clusters, ring } => {
+                anyhow::ensure!(
+                    clusters * ring == n,
+                    "cluster_ring {clusters}x{ring} != n={n}"
+                );
+                anyhow::ensure!(*clusters >= 1 && *ring >= 1, "cluster_ring dims must be ≥ 1");
+                for c in 0..*clusters {
+                    let base = c * ring;
+                    for i in 0..*ring {
+                        add(base + i, base + (i + 1) % ring);
+                    }
+                }
+                add_exponential_bridges(&mut add, *clusters, *ring);
+            }
+            Topology::ClusterComplete { clusters, cluster } => {
+                anyhow::ensure!(
+                    clusters * cluster == n,
+                    "cluster_complete {clusters}x{cluster} != n={n}"
+                );
+                anyhow::ensure!(
+                    *clusters >= 1 && *cluster >= 1,
+                    "cluster_complete dims must be ≥ 1"
+                );
+                for c in 0..*clusters {
+                    let base = c * cluster;
+                    for i in 0..*cluster {
+                        for j in i + 1..*cluster {
+                            add(base + i, base + j);
+                        }
+                    }
+                }
+                add_exponential_bridges(&mut add, *clusters, *cluster);
+            }
             Topology::ErdosRenyi { p, seed } => {
                 anyhow::ensure!((0.0..=1.0).contains(p), "erdos p out of range");
                 let mut rng = crate::rng::Xoshiro256::seed_from_u64(*seed);
@@ -215,25 +337,57 @@ impl Graph {
 
     fn from_edge_set(n: usize, set: &std::collections::BTreeSet<(usize, usize)>) -> Graph {
         let edges: Vec<(usize, usize)> = set.iter().copied().collect();
-        let mut neighbors = vec![Vec::new(); n];
+        // CSR fill. Walking the lexicographically sorted edge list keeps
+        // each node's slice sorted for free: for node `i`, every lower
+        // partner (h, i) precedes every higher partner (i, j) in the edge
+        // order, and both runs arrive ascending.
+        let mut adj_offsets = vec![0usize; n + 1];
         for &(i, j) in &edges {
-            neighbors[i].push(j);
-            neighbors[j].push(i);
+            adj_offsets[i + 1] += 1;
+            adj_offsets[j + 1] += 1;
         }
-        for adj in &mut neighbors {
-            adj.sort_unstable();
+        for i in 0..n {
+            adj_offsets[i + 1] += adj_offsets[i];
         }
-        Graph { n, edges, neighbors }
+        let mut cursor = adj_offsets[..n].to_vec();
+        let mut adj_nodes = vec![0usize; 2 * edges.len()];
+        let mut adj_edges = vec![0usize; 2 * edges.len()];
+        for (e, &(i, j)) in edges.iter().enumerate() {
+            adj_nodes[cursor[i]] = j;
+            adj_edges[cursor[i]] = e;
+            cursor[i] += 1;
+            adj_nodes[cursor[j]] = i;
+            adj_edges[cursor[j]] = e;
+            cursor[j] += 1;
+        }
+        Graph { n, edges, adj_offsets, adj_nodes, adj_edges }
+    }
+
+    /// Sorted neighbor list of worker `i` (a CSR slice — no allocation).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj_nodes[self.adj_offsets[i]..self.adj_offsets[i + 1]]
+    }
+
+    /// Edge indices (into [`Graph::edges`]) of worker `i`'s incident
+    /// edges, parallel to [`Graph::neighbors`].
+    pub fn neighbor_edges(&self, i: usize) -> &[usize] {
+        &self.adj_edges[self.adj_offsets[i]..self.adj_offsets[i + 1]]
     }
 
     /// Degree of worker `i`.
     pub fn degree(&self, i: usize) -> usize {
-        self.neighbors[i].len()
+        self.adj_offsets[i + 1] - self.adj_offsets[i]
     }
 
     /// Whether `(i, j)` is an edge.
     pub fn has_edge(&self, i: usize, j: usize) -> bool {
-        self.neighbors[i].binary_search(&j).is_ok()
+        self.neighbors(i).binary_search(&j).is_ok()
+    }
+
+    /// Index of edge `(i, j)` in [`Graph::edges`], if present — O(log deg).
+    pub fn edge_index(&self, i: usize, j: usize) -> Option<usize> {
+        let pos = self.neighbors(i).binary_search(&j).ok()?;
+        Some(self.neighbor_edges(i)[pos])
     }
 
     /// BFS connectivity check.
@@ -246,7 +400,7 @@ impl Graph {
         seen[0] = true;
         let mut count = 1;
         while let Some(u) = queue.pop_front() {
-            for &v in &self.neighbors[u] {
+            for &v in self.neighbors(u) {
                 if !seen[v] {
                     seen[v] = true;
                     count += 1;
@@ -312,6 +466,36 @@ impl Graph {
         let chi2 = 0.5 * max_resist;
         let trace: f64 = (0..self.n).map(|i| lap[(i, i)]).sum();
         Spectrum { chi1, chi2, lambda2, lambda_max, trace }
+    }
+
+    /// Sparse-path spectrum via the `linalg::lanczos` estimator — O(|ℰ|)
+    /// per matvec, never forms a dense matrix. Exact below
+    /// [`lanczos::DENSE_EXACT_LIMIT`] nodes (full deflated spectrum);
+    /// truncated above it (λ₂ from inverse Lanczos, χ₂ from CG-exact
+    /// candidate-edge resistances — see the `lanczos` module docs).
+    pub fn spectrum_lanczos(&self, rates: &[f64], opts: &LanczosOptions) -> Spectrum {
+        let est = lanczos::estimate_spectrum(self.n, &self.edges, rates, opts);
+        // Tr(Λ) = 2·Σ rates, exact without any eigensolve.
+        let trace = 2.0 * rates.iter().sum::<f64>();
+        Spectrum {
+            chi1: 1.0 / est.lambda2,
+            chi2: 0.5 * est.max_resistance,
+            lambda2: est.lambda2,
+            lambda_max: est.lambda_max,
+            trace,
+        }
+    }
+
+    /// Scale-dispatching spectrum: the dense Jacobi route (bit-identical
+    /// to [`Graph::spectrum_with_rates`], so existing small-n replay
+    /// checksums hold) up to [`lanczos::DENSE_EXACT_LIMIT`] nodes, the
+    /// sparse Lanczos estimator beyond.
+    pub fn spectrum_auto(&self, rates: &[f64]) -> Spectrum {
+        if self.n <= lanczos::DENSE_EXACT_LIMIT {
+            self.spectrum_with_rates(rates)
+        } else {
+            self.spectrum_lanczos(rates, &LanczosOptions::sized_for(self.n))
+        }
     }
 }
 
@@ -508,10 +692,180 @@ mod tests {
         assert!(Topology::parse("torus:4").is_err());
         // spec() is the inverse of parse() for every variant.
         for s in ["ring", "complete", "exponential", "star", "path", "hypercube",
-                  "torus:4x8", "erdos:0.3:42"] {
+                  "torus:4x8", "erdos:0.3:42", "cluster_ring:10x100",
+                  "cluster_complete:8x16"] {
             let t = Topology::parse(s).unwrap();
             assert_eq!(Topology::parse(&t.spec()).unwrap(), t, "spec round-trip of '{s}'");
         }
+    }
+
+    #[test]
+    fn hierarchical_grammar_round_trip_and_errors() {
+        assert_eq!(
+            Topology::parse("cluster_ring:10x100").unwrap(),
+            Topology::ClusterRing { clusters: 10, ring: 100 }
+        );
+        assert_eq!(
+            Topology::parse("cluster_complete:4x8").unwrap(),
+            Topology::ClusterComplete { clusters: 4, cluster: 8 }
+        );
+        assert_eq!(Topology::ClusterRing { clusters: 10, ring: 100 }.spec(), "cluster_ring:10x100");
+        assert_eq!(
+            Topology::ClusterComplete { clusters: 4, cluster: 8 }.spec(),
+            "cluster_complete:4x8"
+        );
+        // Error paths: missing dims, malformed dims, wrong arity.
+        for bad in [
+            "cluster_ring", "cluster_ring:4", "cluster_ring:axb", "cluster_ring:4x",
+            "cluster_ring:4x8x2", "cluster_complete", "cluster_complete:x8",
+            "cluster_rings:4x8",
+        ] {
+            assert!(Topology::parse(bad).is_err(), "should reject '{bad}'");
+        }
+        // Dim mismatch fails at build, not parse.
+        let t = Topology::parse("cluster_ring:4x8").unwrap();
+        assert!(Graph::build(&t, 33).is_err());
+        assert!(Graph::build(&t, 32).is_ok());
+    }
+
+    #[test]
+    fn cluster_ring_structure() {
+        // 4 rings of 8, representatives 0, 8, 16, 24 bridged by the
+        // exponential graph over cluster indices: steps 1 and 2 add
+        // {0-8, 8-16, 16-24, 0-24} and {0-16, 8-24} → 6 bridges.
+        let g = Graph::build(&Topology::ClusterRing { clusters: 4, ring: 8 }, 32).unwrap();
+        assert!(g.is_connected());
+        assert_eq!(g.edges.len(), 4 * 8 + 6);
+        // Representatives: ring degree 2 + 3 bridge partners each.
+        for rep in [0, 8, 16, 24] {
+            assert_eq!(g.degree(rep), 5, "rep {rep}");
+        }
+        // Non-representatives keep plain ring degree.
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(0, 16));
+        assert!(!g.has_edge(1, 9));
+
+        // Degenerate shapes stay valid: one cluster = plain ring; size-1
+        // clusters = plain exponential graph over representatives.
+        let one = Graph::build(&Topology::ClusterRing { clusters: 1, ring: 8 }, 8).unwrap();
+        let ring = Graph::build(&Topology::Ring, 8).unwrap();
+        assert_eq!(one.edges, ring.edges);
+        let thin = Graph::build(&Topology::ClusterRing { clusters: 8, ring: 1 }, 8).unwrap();
+        let expo = Graph::build(&Topology::Exponential, 8).unwrap();
+        assert_eq!(thin.edges, expo.edges);
+    }
+
+    #[test]
+    fn cluster_complete_structure() {
+        let g =
+            Graph::build(&Topology::ClusterComplete { clusters: 4, cluster: 4 }, 16).unwrap();
+        assert!(g.is_connected());
+        // 4 complete-4 clusters (6 edges each) + 6 bridges.
+        assert_eq!(g.edges.len(), 4 * 6 + 6);
+        assert!(g.has_edge(0, 4));
+        assert!(g.has_edge(1, 2));
+        assert!(!g.has_edge(1, 5));
+    }
+
+    #[test]
+    fn csr_accessors_are_coherent() {
+        let g = Graph::build(&Topology::Exponential, 16).unwrap();
+        for i in 0..16 {
+            let nbrs = g.neighbors(i);
+            assert_eq!(nbrs.len(), g.degree(i));
+            assert!(nbrs.windows(2).all(|w| w[0] < w[1]), "sorted CSR slice");
+            for (&j, &e) in nbrs.iter().zip(g.neighbor_edges(i)) {
+                let (a, b) = g.edges[e];
+                assert!((a, b) == (i.min(j), i.max(j)), "edge back-pointer");
+                assert_eq!(g.edge_index(i, j), Some(e));
+                assert_eq!(g.edge_index(j, i), Some(e));
+            }
+        }
+        assert_eq!(g.edge_index(0, 3), None);
+    }
+
+    #[test]
+    fn closed_forms_match_dense_spectrum() {
+        for (topo, n) in [
+            (Topology::Ring, 16usize),
+            (Topology::Ring, 9),
+            (Topology::Complete, 16),
+            (Topology::Star, 12),
+        ] {
+            for rate in [1.0, 2.5] {
+                let (chi1, chi2) = topo.closed_form_chis(n, rate).unwrap();
+                let s = Graph::build(&topo, n).unwrap().spectrum(rate);
+                assert!(
+                    (chi1 - s.chi1).abs() < 1e-8 * s.chi1,
+                    "{} n={n} rate={rate}: χ₁ {chi1} vs {}",
+                    topo.name(),
+                    s.chi1
+                );
+                assert!(
+                    (chi2 - s.chi2).abs() < 1e-8 * s.chi2,
+                    "{} n={n} rate={rate}: χ₂ {chi2} vs {}",
+                    topo.name(),
+                    s.chi2
+                );
+            }
+        }
+        assert!(Topology::Hypercube.closed_form_chis(16, 1.0).is_none());
+        assert!(Topology::ClusterRing { clusters: 4, ring: 4 }
+            .closed_form_chis(16, 1.0)
+            .is_none());
+    }
+
+    #[test]
+    fn spectrum_auto_is_dense_at_small_n() {
+        let g = Graph::build(&Topology::Ring, 24).unwrap();
+        let rates = g.edge_rates(1.0);
+        let dense = g.spectrum_with_rates(&rates);
+        let auto = g.spectrum_auto(&rates);
+        assert_eq!(dense.chi1.to_bits(), auto.chi1.to_bits());
+        assert_eq!(dense.chi2.to_bits(), auto.chi2.to_bits());
+        assert_eq!(dense.trace.to_bits(), auto.trace.to_bits());
+    }
+
+    #[test]
+    fn lanczos_spectrum_agrees_with_dense_on_cluster_ring() {
+        let topo = Topology::ClusterRing { clusters: 4, ring: 8 };
+        let g = Graph::build(&topo, 32).unwrap();
+        let rates = g.edge_rates(1.0);
+        let dense = g.spectrum_with_rates(&rates);
+        let sparse = g.spectrum_lanczos(&rates, &crate::linalg::lanczos::LanczosOptions::default());
+        assert!((sparse.chi1 - dense.chi1).abs() < 1e-6 * dense.chi1);
+        assert!((sparse.chi2 - dense.chi2).abs() < 1e-6 * dense.chi2);
+    }
+
+    #[test]
+    fn cluster_ring_flattens_chi1_versus_flat_ring() {
+        // The scaling headline in miniature: at equal n, clusters-of-rings
+        // bridged exponentially have far smaller χ₁ than the flat ring,
+        // and χ₁ stays ~flat as the cluster count grows.
+        let flat = Graph::build(&Topology::Ring, 64).unwrap().spectrum(1.0);
+        let hier = Graph::build(&Topology::ClusterRing { clusters: 8, ring: 8 }, 64)
+            .unwrap()
+            .spectrum(1.0);
+        assert!(
+            hier.chi1 < 0.5 * flat.chi1,
+            "hierarchical χ₁ {} vs flat {}",
+            hier.chi1,
+            flat.chi1
+        );
+        let small = Graph::build(&Topology::ClusterRing { clusters: 4, ring: 8 }, 32)
+            .unwrap()
+            .spectrum(1.0);
+        let big = Graph::build(&Topology::ClusterRing { clusters: 16, ring: 8 }, 128)
+            .unwrap()
+            .spectrum(1.0);
+        // Quadrupling the fleet must not blow χ₁ up the way a flat ring
+        // would (16× there); allow a loose 3× headroom.
+        assert!(
+            big.chi1 < 3.0 * small.chi1,
+            "χ₁ trend: {} (n=128) vs {} (n=32)",
+            big.chi1,
+            small.chi1
+        );
     }
 
     #[test]

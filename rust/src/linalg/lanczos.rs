@@ -1,0 +1,704 @@
+//! Sparse-Laplacian eigenestimation for hierarchical fleets where the
+//! dense Jacobi path (O(n³)) stops being an option.
+//!
+//! The operator is the rate-weighted Laplacian Λ applied in O(|ℰ|) per
+//! matvec straight off the edge list — no dense matrix is ever formed.
+//! The all-ones kernel is deflated explicitly (every iterate is kept
+//! orthogonal to the constant vector), and two regimes cover the scale
+//! axis:
+//!
+//! * **exact** (`max_pairs ≥ n−1`): restarted Lanczos with full
+//!   reorthogonalization runs until all n−1 deflated eigenpairs are
+//!   resolved. The restart — a fresh random vector deflated against every
+//!   resolved Ritz vector — is what recovers degenerate eigenvalues (ring
+//!   and torus spectra are full of multiplicity-2 pairs, which a single
+//!   Krylov sequence can only surface once). Eigenpairs come out at near
+//!   machine precision, so effective resistances match the dense
+//!   `sym_pinv` route within the 1e-6 relative property gate.
+//! * **truncated** (`max_pairs < n−1`): λ₂ comes from *inverse* Lanczos —
+//!   Lanczos on Λ⁺ with each operator apply a deflated conjugate-gradient
+//!   solve — because the low end of a big Laplacian spectrum is clustered
+//!   (ring-like modes are quadratically spaced) and plain Lanczos would
+//!   need thousands of iterations there, while 1/λ₂ is well separated in
+//!   the inverse spectrum. χ₂'s `max` effective resistance is evaluated
+//!   *exactly* (to CG tolerance) on a candidate edge set — truncating the
+//!   spectral sum is hopeless when every one of n−1 modes contributes
+//!   equally, as on rings — and λ_max comes from a cheap values-only
+//!   Lanczos sweep. The candidate heuristic (lowest-rate edges, the
+//!   slow-mode ranking, a deterministic stride sample) can in principle
+//!   miss the true argmax edge, so the truncated χ₂ is a documented
+//!   lower-bound estimate.
+
+use crate::rng::{standard_normal, Xoshiro256};
+
+use super::{dot, norm2, sym_eig, Matrix};
+
+/// Tuning knobs for the estimators.
+#[derive(Clone, Copy, Debug)]
+pub struct LanczosOptions {
+    /// Ritz-pair budget. `≥ n−1` selects exact mode.
+    pub max_pairs: usize,
+    /// Seed of the deterministic start vectors (fixed default so repeated
+    /// estimates of one graph are bit-identical).
+    pub seed: u64,
+}
+
+impl Default for LanczosOptions {
+    fn default() -> Self {
+        LanczosOptions { max_pairs: usize::MAX, seed: 0x51C2_A7E3 }
+    }
+}
+
+impl LanczosOptions {
+    /// Budget scaled to the fleet: exact below [`DENSE_EXACT_LIMIT`]
+    /// nodes, truncated (inverse-Lanczos) above it.
+    pub fn sized_for(n: usize) -> LanczosOptions {
+        let max_pairs =
+            if n <= DENSE_EXACT_LIMIT { n.saturating_sub(1) } else { TRUNCATED_PAIRS };
+        LanczosOptions { max_pairs, ..LanczosOptions::default() }
+    }
+}
+
+/// Below this node count [`LanczosOptions::sized_for`] runs exact mode.
+pub const DENSE_EXACT_LIMIT: usize = 512;
+
+/// Low-end pairs resolved in truncated mode — enough for λ₂ plus the
+/// slow-mode edge ranking that seeds the χ₂ candidates.
+const TRUNCATED_PAIRS: usize = 16;
+
+/// Candidate edges whose resistance is CG-solved exactly in truncated χ₂.
+const CHI2_CANDIDATES: usize = 32;
+
+/// Spectral summary from the sparse path, the estimator-side mirror of
+/// `graph::Spectrum` (the caller adds χ₁ = 1/λ₂ and the trace, which is
+/// 2·Σ rates without any eigensolve).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseSpectrum {
+    pub lambda2: f64,
+    pub lambda_max: f64,
+    /// `max` effective resistance over the probed edges (χ₂ = half this).
+    pub max_resistance: f64,
+    /// True when the full deflated spectrum was resolved (small n).
+    pub exact: bool,
+}
+
+/// Eigenpairs of a rate-weighted Laplacian restricted to the complement
+/// of the all-ones kernel (exact mode output; truncated mode holds the
+/// smallest `max_pairs` eigenpairs and an extremal estimate).
+#[derive(Clone, Debug)]
+pub struct LaplacianEig {
+    pub n: usize,
+    /// Resolved Ritz values, ascending.
+    pub values: Vec<f64>,
+    /// `vectors[k]` is the length-n Ritz vector of `values[k]`.
+    pub vectors: Vec<Vec<f64>>,
+    /// True when all n−1 deflated eigenpairs were resolved.
+    pub exact: bool,
+}
+
+impl LaplacianEig {
+    /// Algebraic connectivity λ₂(Λ).
+    pub fn lambda2(&self) -> f64 {
+        self.values.first().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Largest resolved Ritz value (= λ_max(Λ) in exact mode).
+    pub fn lambda_max(&self) -> f64 {
+        self.values.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Effective resistance `(e_i − e_j)ᵀ Λ⁺ (e_i − e_j)` from the
+    /// spectral expansion over the resolved pairs (exact in exact mode).
+    pub fn resistance(&self, i: usize, j: usize) -> f64 {
+        let cut = self.kernel_cut();
+        let mut r = 0.0;
+        for (theta, y) in self.values.iter().zip(&self.vectors) {
+            if *theta > cut {
+                let d = y[i] - y[j];
+                r += d * d / theta;
+            }
+        }
+        r
+    }
+
+    /// `max_(i,j)∈edges` effective resistance, accumulated Ritz-pair-major
+    /// so the edge sweep is O(|ℰ|) per pair.
+    pub fn max_edge_resistance(&self, edges: &[(usize, usize)]) -> f64 {
+        let mut resist = vec![0.0f64; edges.len()];
+        self.accumulate_edge_resistance(edges, &mut resist);
+        resist.iter().fold(0.0f64, |acc, &r| acc.max(r))
+    }
+
+    fn accumulate_edge_resistance(&self, edges: &[(usize, usize)], resist: &mut [f64]) {
+        let cut = self.kernel_cut();
+        for (theta, y) in self.values.iter().zip(&self.vectors) {
+            if *theta <= cut {
+                continue;
+            }
+            let inv = 1.0 / theta;
+            for (r, &(i, j)) in resist.iter_mut().zip(edges) {
+                let d = y[i] - y[j];
+                *r += d * d * inv;
+            }
+        }
+    }
+
+    /// Threshold below which a Ritz value counts as a numerically zero
+    /// (kernel) mode and is excluded from Λ⁺ (mirrors `sym_pinv`'s cut).
+    fn kernel_cut(&self) -> f64 {
+        1e-10 * self.lambda_max().abs().max(1e-300)
+    }
+}
+
+/// `y = Λ x` off the edge list: `y_i = Σ_j w_ij (x_i − x_j)`.
+fn lap_matvec(edges: &[(usize, usize)], rates: &[f64], x: &[f64], y: &mut [f64]) {
+    y.fill(0.0);
+    for (&(i, j), &w) in edges.iter().zip(rates) {
+        let d = w * (x[i] - x[j]);
+        y[i] += d;
+        y[j] -= d;
+    }
+}
+
+/// Subtract the mean (deflate the constant kernel direction).
+fn project_out_ones(w: &mut [f64]) {
+    let mean: f64 = w.iter().sum::<f64>() / w.len() as f64;
+    for v in w.iter_mut() {
+        *v -= mean;
+    }
+}
+
+/// Remove the components of `w` along `ones/√n` and every vector in
+/// `bases` (two classical Gram–Schmidt passes — "twice is enough").
+fn deflate(w: &mut [f64], bases: &[&[Vec<f64>]]) {
+    for _ in 0..2 {
+        project_out_ones(w);
+        for base in bases {
+            for u in base.iter() {
+                let c = dot(w, u);
+                if c != 0.0 {
+                    for (wv, uv) in w.iter_mut().zip(u) {
+                        *wv -= c * uv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Largest weighted degree — a Gershgorin-style scale for ‖Λ‖.
+fn laplacian_scale(n: usize, edges: &[(usize, usize)], rates: &[f64]) -> f64 {
+    let mut wdeg = vec![0.0f64; n];
+    for (&(i, j), &w) in edges.iter().zip(rates) {
+        wdeg[i] += w;
+        wdeg[j] += w;
+    }
+    2.0 * wdeg.iter().fold(0.0f64, |acc, &d| acc.max(d)).max(1e-300)
+}
+
+/// Exact-mode driver: restarted, fully reorthogonalized Lanczos on Λ
+/// until `min(max_pairs, n−1)` Ritz pairs are resolved.
+pub fn laplacian_eigs(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    opts: &LanczosOptions,
+) -> LaplacianEig {
+    assert_eq!(edges.len(), rates.len(), "one rate per edge");
+    let deflated_dim = n.saturating_sub(1);
+    let target = deflated_dim.min(opts.max_pairs);
+    let breakdown = 1e-12 * laplacian_scale(n, edges, rates);
+
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+    let mut ritz_values: Vec<f64> = Vec::with_capacity(target);
+    let mut ritz_vectors: Vec<Vec<f64>> = Vec::with_capacity(target);
+    let mut scratch = vec![0.0f64; n];
+
+    // Each restart explores the orthogonal complement of everything
+    // resolved so far; the cap only guards against a pathological stall
+    // (every pass resolves ≥ 1 pair, so n−1 restarts always suffice).
+    let max_restarts = deflated_dim + 4;
+    let mut restarts = 0;
+    while ritz_values.len() < target && restarts < max_restarts {
+        restarts += 1;
+        let pass_cap = target - ritz_values.len();
+        let Some(v0) = fresh_start_vector(n, &mut rng, &[&ritz_vectors[..]]) else {
+            break; // subspace numerically exhausted
+        };
+
+        let mut basis: Vec<Vec<f64>> = vec![v0];
+        let mut alphas: Vec<f64> = Vec::with_capacity(pass_cap);
+        let mut betas: Vec<f64> = Vec::new();
+        loop {
+            let j = alphas.len();
+            lap_matvec(edges, rates, &basis[j], &mut scratch);
+            let alpha = dot(&scratch, &basis[j]);
+            alphas.push(alpha);
+            if alphas.len() == pass_cap {
+                break;
+            }
+            // Three-term recurrence, then full reorthogonalization against
+            // the resolved Ritz vectors AND the whole in-pass basis.
+            for (w, v) in scratch.iter_mut().zip(&basis[j]) {
+                *w -= alpha * v;
+            }
+            if j > 0 {
+                let b = betas[j - 1];
+                for (w, v) in scratch.iter_mut().zip(&basis[j - 1]) {
+                    *w -= b * v;
+                }
+            }
+            deflate(&mut scratch, &[&ritz_vectors[..], &basis[..]]);
+            let beta = norm2(&scratch);
+            if beta <= breakdown {
+                break; // invariant subspace: harvest and restart
+            }
+            betas.push(beta);
+            basis.push(scratch.iter().map(|&w| w / beta).collect());
+        }
+        harvest_ritz_pairs(&basis, &alphas, &betas, &mut ritz_values, &mut ritz_vectors);
+    }
+
+    let (values, vectors) = sort_pairs(ritz_values, ritz_vectors);
+    let exact = values.len() == deflated_dim;
+    LaplacianEig { n, values, vectors, exact }
+}
+
+/// Draw a deterministic random vector orthogonal to `ones` and `bases`.
+fn fresh_start_vector(
+    n: usize,
+    rng: &mut Xoshiro256,
+    bases: &[&[Vec<f64>]],
+) -> Option<Vec<f64>> {
+    let mut v0 = vec![0.0f64; n];
+    for _ in 0..8 {
+        for v in v0.iter_mut() {
+            *v = standard_normal(rng);
+        }
+        deflate(&mut v0, bases);
+        let nrm = norm2(&v0);
+        if nrm > 1e-8 {
+            for v in v0.iter_mut() {
+                *v /= nrm;
+            }
+            return Some(v0);
+        }
+    }
+    None
+}
+
+/// Eigendecompose a pass's tridiagonal and append its Ritz pairs.
+fn harvest_ritz_pairs(
+    basis: &[Vec<f64>],
+    alphas: &[f64],
+    betas: &[f64],
+    values: &mut Vec<f64>,
+    vectors: &mut Vec<Vec<f64>>,
+) {
+    let m = alphas.len();
+    if m == 0 {
+        return;
+    }
+    let n = basis[0].len();
+    let mut t = Matrix::zeros(m);
+    for (k, &a) in alphas.iter().enumerate() {
+        t[(k, k)] = a;
+    }
+    for (k, &b) in betas.iter().enumerate() {
+        t[(k, k + 1)] = b;
+        t[(k + 1, k)] = b;
+    }
+    let eig = sym_eig(&t);
+    for k in 0..m {
+        let mut y = vec![0.0f64; n];
+        for (jj, v) in basis.iter().enumerate() {
+            let z = eig.vectors[(jj, k)];
+            if z != 0.0 {
+                for (yv, vv) in y.iter_mut().zip(v) {
+                    *yv += z * vv;
+                }
+            }
+        }
+        values.push(eig.values[k]);
+        vectors.push(y);
+    }
+}
+
+fn sort_pairs(values: Vec<f64>, vectors: Vec<Vec<f64>>) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    order.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    let sorted_values: Vec<f64> = order.iter().map(|&k| values[k]).collect();
+    let mut slots: Vec<Option<Vec<f64>>> = vectors.into_iter().map(Some).collect();
+    let sorted_vectors =
+        order.iter().map(|&k| slots[k].take().expect("taken once")).collect();
+    (sorted_values, sorted_vectors)
+}
+
+/// Deflated conjugate gradient: solve `Λ x = b` on the complement of the
+/// all-ones kernel (`b` must be ⊥ 1; the solution is returned ⊥ 1).
+/// Returns the iterate when the residual drops below `tol·‖b‖` or the
+/// iteration cap is hit (whichever comes first — CG on a PSD system only
+/// improves, so the capped iterate is still the best estimate so far).
+fn cg_solve(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> Vec<f64> {
+    let mut x = vec![0.0f64; n];
+    let mut r = b.to_vec();
+    project_out_ones(&mut r);
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let threshold = (tol * norm2(b)).max(1e-300);
+    let mut ap = vec![0.0f64; n];
+    for it in 0..max_iters {
+        if rs.sqrt() <= threshold {
+            break;
+        }
+        lap_matvec(edges, rates, &p, &mut ap);
+        let denom = dot(&p, &ap);
+        if denom <= 0.0 {
+            break; // numerically singular direction (kernel drift)
+        }
+        let alpha = rs / denom;
+        for ((xv, rv), (pv, av)) in x.iter_mut().zip(r.iter_mut()).zip(p.iter().zip(&ap)) {
+            *xv += alpha * pv;
+            *rv -= alpha * av;
+        }
+        // Re-deflate periodically: rounding lets the kernel component
+        // creep back in over long solves.
+        if it % 64 == 63 {
+            project_out_ones(&mut r);
+        }
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs;
+        rs = rs_new;
+        for (pv, rv) in p.iter_mut().zip(&r) {
+            *pv = rv + beta * *pv;
+        }
+    }
+    project_out_ones(&mut x);
+    x
+}
+
+/// Exact (to CG tolerance) effective resistance of one pair:
+/// `R(i,j) = (e_i − e_j)ᵀ Λ⁺ (e_i − e_j)` via one deflated CG solve.
+pub fn effective_resistance(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    i: usize,
+    j: usize,
+) -> f64 {
+    let mut b = vec![0.0f64; n];
+    b[i] = 1.0;
+    b[j] = -1.0;
+    let x = cg_solve(n, edges, rates, &b, 1e-9, CG_MAX_ITERS);
+    x[i] - x[j]
+}
+
+const CG_MAX_ITERS: usize = 3000;
+
+/// Inverse Lanczos: fully reorthogonalized Lanczos on Λ⁺ (each apply a
+/// deflated CG solve), returning the `pairs` smallest eigenpairs of Λ.
+/// This is where λ₂ comes from at scale — in the inverse spectrum 1/λ₂ is
+/// the well-separated top, so a handful of iterations converge where
+/// plain Lanczos would crawl through the clustered low end.
+fn smallest_eigs(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    pairs: usize,
+    seed: u64,
+) -> LaplacianEig {
+    let iters = (2 * pairs + 8).min(n.saturating_sub(1));
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let Some(v0) = fresh_start_vector(n, &mut rng, &[]) else {
+        return LaplacianEig { n, values: vec![], vectors: vec![], exact: false };
+    };
+    let mut basis: Vec<Vec<f64>> = vec![v0];
+    let mut alphas: Vec<f64> = Vec::with_capacity(iters);
+    let mut betas: Vec<f64> = Vec::new();
+    loop {
+        let j = alphas.len();
+        let mut w = cg_solve(n, edges, rates, &basis[j], 1e-10, CG_MAX_ITERS);
+        let alpha = dot(&w, &basis[j]);
+        alphas.push(alpha);
+        if alphas.len() == iters {
+            break;
+        }
+        for (wv, v) in w.iter_mut().zip(&basis[j]) {
+            *wv -= alpha * v;
+        }
+        if j > 0 {
+            let b = betas[j - 1];
+            for (wv, v) in w.iter_mut().zip(&basis[j - 1]) {
+                *wv -= b * v;
+            }
+        }
+        deflate(&mut w, &[&basis[..]]);
+        let beta = norm2(&w);
+        if beta <= 1e-12 * alphas[0].abs().max(1e-300) {
+            break;
+        }
+        betas.push(beta);
+        basis.push(w.iter().map(|&v| v / beta).collect());
+    }
+    // Ritz pairs of Λ⁺: μ descending are the converged ones; keep the top
+    // `pairs` and map back to eigenvalues of Λ (λ = 1/μ).
+    let mut mu_values: Vec<f64> = Vec::new();
+    let mut mu_vectors: Vec<Vec<f64>> = Vec::new();
+    harvest_ritz_pairs(&basis, &alphas, &betas, &mut mu_values, &mut mu_vectors);
+    let (mu_values, mu_vectors) = sort_pairs(mu_values, mu_vectors);
+    let keep = pairs.min(mu_values.len());
+    let mut values: Vec<f64> = Vec::with_capacity(keep);
+    let mut vectors: Vec<Vec<f64>> = Vec::with_capacity(keep);
+    // Largest μ (last after the ascending sort) ↔ smallest λ.
+    for (mu, y) in mu_values.into_iter().zip(mu_vectors).rev().take(keep) {
+        if mu > 1e-300 {
+            values.push(1.0 / mu);
+            vectors.push(y);
+        }
+    }
+    // `values` is now ascending in λ already (reverse of descending μ).
+    LaplacianEig { n, values, vectors, exact: false }
+}
+
+/// Values-only Lanczos estimate of λ_max (no reorthogonalization, O(n)
+/// memory). Ghost eigenvalues from lost orthogonality don't move the
+/// maximal Ritz value, which is what we keep; Rayleigh–Ritz makes it a
+/// lower bound on the true λ_max.
+fn lambda_max_estimate(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let Some(mut v) = fresh_start_vector(n, &mut rng, &[]) else {
+        return f64::NAN;
+    };
+    let mut v_prev = vec![0.0f64; n];
+    let mut alphas = Vec::with_capacity(iters);
+    let mut betas: Vec<f64> = Vec::new();
+    let mut w = vec![0.0f64; n];
+    for j in 0..iters.min(n.saturating_sub(1)) {
+        lap_matvec(edges, rates, &v, &mut w);
+        let alpha = dot(&w, &v);
+        alphas.push(alpha);
+        for ((wv, vv), pv) in w.iter_mut().zip(&v).zip(&v_prev) {
+            *wv -= alpha * vv;
+            if j > 0 {
+                *wv -= betas[j - 1] * *pv;
+            }
+        }
+        project_out_ones(&mut w);
+        let beta = norm2(&w);
+        if beta <= 1e-12 * alphas[0].abs().max(1e-300) {
+            break;
+        }
+        betas.push(beta);
+        std::mem::swap(&mut v_prev, &mut v);
+        for (vv, wv) in v.iter_mut().zip(&w) {
+            *vv = wv / beta;
+        }
+    }
+    let m = alphas.len();
+    let mut t = Matrix::zeros(m);
+    for (k, &a) in alphas.iter().enumerate() {
+        t[(k, k)] = a;
+    }
+    for (k, &b) in betas.iter().enumerate().take(m.saturating_sub(1)) {
+        t[(k, k + 1)] = b;
+        t[(k + 1, k)] = b;
+    }
+    sym_eig(&t).values.last().copied().unwrap_or(f64::NAN)
+}
+
+/// One-stop sparse spectral estimate: λ₂, λ_max and the maximal edge
+/// resistance, dispatching between the exact and truncated regimes on
+/// `opts.max_pairs` (see the module docs). The caller turns this into the
+/// paper's functionals: χ₁ = 1/λ₂, χ₂ = max_resistance/2.
+pub fn estimate_spectrum(
+    n: usize,
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    opts: &LanczosOptions,
+) -> SparseSpectrum {
+    let deflated_dim = n.saturating_sub(1);
+    if opts.max_pairs >= deflated_dim {
+        let eig = laplacian_eigs(n, edges, rates, opts);
+        return SparseSpectrum {
+            lambda2: eig.lambda2(),
+            lambda_max: eig.lambda_max(),
+            max_resistance: eig.max_edge_resistance(edges),
+            exact: eig.exact,
+        };
+    }
+    let low = smallest_eigs(n, edges, rates, opts.max_pairs.max(4), opts.seed);
+    let lambda_max = lambda_max_estimate(n, edges, rates, 48, opts.seed ^ 0x9E37);
+    let mut max_resistance = 0.0f64;
+    for (i, j) in chi2_candidates(edges, rates, &low) {
+        max_resistance = max_resistance.max(effective_resistance(n, edges, rates, i, j));
+    }
+    SparseSpectrum { lambda2: low.lambda2(), lambda_max, max_resistance, exact: false }
+}
+
+/// Candidate edges for the truncated χ₂ max: the slow-mode ranking from
+/// the resolved low eigenpairs (where slow modes differ most, resistance
+/// is largest), the lowest-rate edges, and a deterministic stride sample
+/// as a safety net.
+fn chi2_candidates(
+    edges: &[(usize, usize)],
+    rates: &[f64],
+    low: &LaplacianEig,
+) -> Vec<(usize, usize)> {
+    let m = edges.len();
+    let budget = CHI2_CANDIDATES.min(m);
+    let mut picked: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    // Slow-mode ranking (partial resistance off the resolved pairs).
+    let mut partial = vec![0.0f64; m];
+    low.accumulate_edge_resistance(edges, &mut partial);
+    let mut by_partial: Vec<usize> = (0..m).collect();
+    by_partial.sort_by(|&a, &b| partial[b].partial_cmp(&partial[a]).unwrap());
+    picked.extend(by_partial.iter().take(budget / 2));
+    // Lowest-rate edges (high per-edge resistance locally).
+    let mut by_rate: Vec<usize> = (0..m).collect();
+    by_rate.sort_by(|&a, &b| rates[a].partial_cmp(&rates[b]).unwrap());
+    picked.extend(by_rate.iter().take(budget / 4));
+    // Deterministic stride sample across the edge list.
+    let stride = (m / budget.max(1)).max(1);
+    picked.extend((0..m).step_by(stride).take(budget / 4));
+    picked.into_iter().take(CHI2_CANDIDATES).map(|e| edges[e]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring_edges(n: usize) -> (Vec<(usize, usize)>, Vec<f64>) {
+        let mut edges: Vec<(usize, usize)> =
+            (0..n).map(|i| (i.min((i + 1) % n), i.max((i + 1) % n))).collect();
+        edges.sort_unstable();
+        edges.dedup();
+        let rates = vec![0.5; edges.len()];
+        (edges, rates)
+    }
+
+    #[test]
+    fn exact_mode_matches_ring_closed_form() {
+        let n = 16;
+        let (edges, rates) = ring_edges(n);
+        let eig = laplacian_eigs(n, &edges, &rates, &LanczosOptions::default());
+        assert!(eig.exact);
+        assert_eq!(eig.values.len(), n - 1);
+        let lambda2 = 1.0 - (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((eig.lambda2() - lambda2).abs() < 1e-9, "{} vs {lambda2}", eig.lambda2());
+        // Adjacent effective resistance on the weighted cycle: (1/w)(n−1)/n.
+        let expect = 2.0 * (n as f64 - 1.0) / n as f64;
+        assert!((eig.resistance(0, 1) - expect).abs() < 1e-8);
+        assert!((eig.max_edge_resistance(&edges) - expect).abs() < 1e-8);
+    }
+
+    #[test]
+    fn exact_mode_handles_degenerate_spectra() {
+        // Complete graph with uniform weight w: λ = n·w with multiplicity
+        // n−1 — one Krylov sequence alone would only surface it once.
+        let n = 12;
+        let w = 1.0 / (n as f64 - 1.0);
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in i + 1..n {
+                edges.push((i, j));
+            }
+        }
+        let rates = vec![w; edges.len()];
+        let eig = laplacian_eigs(n, &edges, &rates, &LanczosOptions::default());
+        assert!(eig.exact);
+        let expect = n as f64 * w;
+        for &v in &eig.values {
+            assert!((v - expect).abs() < 1e-9, "{v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn cg_resistance_matches_spectral_sum() {
+        let n = 24;
+        let (edges, rates) = ring_edges(n);
+        let exact = laplacian_eigs(n, &edges, &rates, &LanczosOptions::default());
+        for &(i, j) in &[(0usize, 1usize), (0, 12), (3, 17)] {
+            let via_cg = effective_resistance(n, &edges, &rates, i, j);
+            let via_sum = exact.resistance(i, j);
+            assert!(
+                (via_cg - via_sum).abs() < 1e-6 * via_sum.max(1.0),
+                "R({i},{j}): cg {via_cg} vs sum {via_sum}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_mode_nails_lambda2_on_a_big_torus() {
+        // 30×20 torus (n = 600, past DENSE_EXACT_LIMIT) exercises the
+        // inverse-Lanczos path with a tractable condition number and a
+        // closed-form λ₂: uniform weight w = 1/4, λ₂ = 2w(1 − cos(2π/30)).
+        let (rows, cols) = (30usize, 20usize);
+        let n = rows * cols;
+        let mut set = std::collections::BTreeSet::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let id = r * cols + c;
+                let right = r * cols + (c + 1) % cols;
+                let down = ((r + 1) % rows) * cols + c;
+                set.insert((id.min(right), id.max(right)));
+                set.insert((id.min(down), id.max(down)));
+            }
+        }
+        let edges: Vec<(usize, usize)> = set.into_iter().collect();
+        let rates = vec![0.25; edges.len()];
+        let opts = LanczosOptions::sized_for(n);
+        assert!(opts.max_pairs < n - 1);
+        let s = estimate_spectrum(n, &edges, &rates, &opts);
+        assert!(!s.exact);
+        let lambda2 = 0.5 * (1.0 - (2.0 * std::f64::consts::PI / rows as f64).cos());
+        let rel = (s.lambda2 - lambda2).abs() / lambda2;
+        assert!(rel < 1e-6, "λ₂ rel err {rel}: {} vs {lambda2}", s.lambda2);
+        // The torus is edge-transitive within each axis class, so the
+        // candidate sweep's max must match an exact per-edge CG solve.
+        let r_row = effective_resistance(n, &edges, &rates, 0, 1);
+        let r_col = effective_resistance(n, &edges, &rates, 0, cols);
+        let expect_r = r_row.max(r_col);
+        assert!(
+            (s.max_resistance - expect_r).abs() < 1e-6 * expect_r,
+            "R {} vs {expect_r}",
+            s.max_resistance
+        );
+        // λ_max = 2 exactly (both axes even); the values-only sweep is a
+        // Rayleigh–Ritz lower bound that should land in the right range.
+        assert!(s.lambda_max <= 2.0 + 1e-9 && s.lambda_max > 1.5, "λ_max {}", s.lambda_max);
+    }
+
+    #[test]
+    fn estimates_are_deterministic() {
+        let (edges, rates) = ring_edges(24);
+        let a = laplacian_eigs(24, &edges, &rates, &LanczosOptions::default());
+        let b = laplacian_eigs(24, &edges, &rates, &LanczosOptions::default());
+        assert_eq!(a.values.len(), b.values.len());
+        for (x, y) in a.values.iter().zip(&b.values) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sized_for_switches_regimes() {
+        assert_eq!(LanczosOptions::sized_for(100).max_pairs, 99);
+        assert_eq!(
+            LanczosOptions::sized_for(DENSE_EXACT_LIMIT).max_pairs,
+            DENSE_EXACT_LIMIT - 1
+        );
+        assert_eq!(LanczosOptions::sized_for(100_000).max_pairs, TRUNCATED_PAIRS);
+    }
+}

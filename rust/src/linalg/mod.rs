@@ -7,6 +7,10 @@
 //! No external linear-algebra crates are reachable offline, so this is a
 //! self-contained implementation sized for `n ≤ ~2048` workers (Jacobi is
 //! O(n³) per sweep and unconditionally stable for symmetric matrices).
+//! Past that, the [`lanczos`] submodule estimates the same functionals in
+//! O(|ℰ|) per matvec off the sparse edge list — the massive-fleet path.
+
+pub mod lanczos;
 
 /// A dense row-major `n × n` matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]

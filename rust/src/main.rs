@@ -35,7 +35,12 @@ fn cli() -> Cli {
     Cli::new("a2cid2", "asynchronous decentralized training with A2CiD2 momentum")
         .opt("config", "TOML experiment config file", None)
         .opt("workers", "number of workers", Some("8"))
-        .opt("topology", "complete|ring|exponential|star|path|hypercube|torus:RxC|erdos:p", Some("ring"))
+        .opt(
+            "topology",
+            "complete|ring|exponential|star|path|hypercube|torus:RxC|erdos:p|\
+             cluster_ring:KxM|cluster_complete:KxM",
+            Some("ring"),
+        )
         .opt(
             "scenario",
             "time-varying network, e.g. 'ring@0,exp@0.5;drop=0.2:0.25:0.75;leave=0.25:0.3;join=0.25:0.7;adapt=1' (supersedes --topology)",

@@ -297,28 +297,47 @@ fn rendezvous_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStat
 /// reply), so a slot array replaces the FIFO `Vec`; monotone arrival
 /// tickets encode the FIFO order ("first queued adjacent worker" ≡
 /// "minimum ticket among the arriver's queued active neighbors").
+///
+/// Alongside the slots, a ticket-ordered index of the *queued* workers:
+/// the Leave/Reconfigure churn scans walk that index — O(waiters) — not
+/// all n slots. At n = 10⁵ with a handful of waiters per churn event,
+/// the old `0..n` sweeps were the coordinator's dominant cost.
 struct WaitSlots {
     slots: Vec<Option<(u64, mpsc::Sender<PairReply>)>>,
+    /// ticket → worker for every queued worker; iteration order is
+    /// ticket-ascending, i.e. arrival (FIFO) order.
+    queued: std::collections::BTreeMap<u64, usize>,
     next_ticket: u64,
 }
 
 impl WaitSlots {
     fn new(n: usize) -> Self {
-        Self { slots: vec![None; n], next_ticket: 0 }
+        Self { slots: vec![None; n], queued: std::collections::BTreeMap::new(), next_ticket: 0 }
     }
 
     fn enqueue(&mut self, w: usize, reply: mpsc::Sender<PairReply>) {
         debug_assert!(self.slots[w].is_none(), "duplicate availability");
         self.slots[w] = Some((self.next_ticket, reply));
+        self.queued.insert(self.next_ticket, w);
         self.next_ticket += 1;
     }
 
     fn take(&mut self, w: usize) -> Option<(u64, mpsc::Sender<PairReply>)> {
-        self.slots[w].take()
+        let entry = self.slots[w].take();
+        if let Some((t, _)) = &entry {
+            self.queued.remove(t);
+        }
+        entry
     }
 
     fn ticket(&self, w: usize) -> Option<u64> {
         self.slots[w].as_ref().map(|(t, _)| *t)
+    }
+
+    /// Snapshot of the queued workers in arrival (ticket) order. A
+    /// snapshot — not an iterator — so callers can `take` while walking.
+    fn queued_in_arrival_order(&self) -> Vec<(u64, usize)> {
+        self.queued.iter().map(|(&t, &w)| (t, w)).collect()
     }
 }
 
@@ -383,32 +402,30 @@ fn batched_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
                     }
                     let _ = waits.take(worker);
                     // Release waiters whose whole union neighborhood
-                    // departed.
-                    for w in 0..n {
-                        if waits.ticket(w).is_some()
-                            && net.union_neighbors(w).iter().all(|nb| left.contains(nb))
-                        {
-                            let (_, reply) = waits.take(w).expect("checked above");
+                    // departed — only the queued set is scanned.
+                    for (_, w) in waits.queued_in_arrival_order() {
+                        if net.union_neighbors(w).iter().all(|nb| left.contains(nb)) {
+                            let (_, reply) = waits.take(w).expect("queued snapshot");
                             let _ = reply.send(PairReply::NoPartnerEver);
                         }
                     }
                 }
                 CoordMsg::Reconfigure => {
                     // Worker churn: release scenario-departed waiters with
-                    // Cancelled so they can never be paired.
-                    for w in 0..n {
-                        if waits.ticket(w).is_some() && !net.is_active(w) {
-                            let (_, reply) = waits.take(w).expect("checked above");
+                    // Cancelled so they can never be paired. Only the
+                    // queued set is scanned — O(waiters), not O(n).
+                    for (_, w) in waits.queued_in_arrival_order() {
+                        if !net.is_active(w) {
+                            let (_, reply) = waits.take(w).expect("queued snapshot");
                             let _ = reply.send(PairReply::Cancelled);
                         }
                     }
                     // The active graph changed: greedily pair now-adjacent
-                    // waiters in arrival order (ticket ascending), each
-                    // with its earliest-ticket LATER-queued active
-                    // neighbor — exactly the rendezvous FIFO re-scan.
-                    let mut order: Vec<(u64, usize)> =
-                        (0..n).filter_map(|w| waits.ticket(w).map(|t| (t, w))).collect();
-                    order.sort_unstable();
+                    // waiters in arrival order (the queued index is
+                    // already ticket-ascending), each with its earliest-
+                    // ticket LATER-queued active neighbor — exactly the
+                    // rendezvous FIFO re-scan.
+                    let order = waits.queued_in_arrival_order();
                     for &(t, w) in &order {
                         if waits.ticket(w) != Some(t) {
                             continue; // already matched earlier this pass

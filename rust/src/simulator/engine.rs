@@ -145,7 +145,7 @@ pub fn run_simulation(
                 in_fleet[w] = false;
             }
             for &j in &ch.joined {
-                let donor = plan.union.neighbors[j].iter().copied().find(|&d| in_fleet[d]);
+                let donor = plan.union.neighbors(j).iter().copied().find(|&d| in_fleet[d]);
                 if let Some(d) = donor {
                     let donor_x = workers[d].x.clone();
                     core.rejoin_from(&mut workers[j], &donor_x, ch.t);

@@ -67,7 +67,7 @@ fn churn_replay_agrees_across_engine_paths_at_event_granularity() {
                 in_fleet[w] = false;
             }
             for &j in &ch.joined {
-                let donor = plan.union.neighbors[j].iter().copied().find(|&d| in_fleet[d]);
+                let donor = plan.union.neighbors(j).iter().copied().find(|&d| in_fleet[d]);
                 if let Some(d) = donor {
                     // Simulator path and runtime path use the SAME donor
                     // rule (smallest active union neighbor) and the same

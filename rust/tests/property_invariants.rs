@@ -329,3 +329,82 @@ fn prop_poisson_budget_matches_rate() {
         );
     });
 }
+
+/// The sparse Lanczos spectrum estimator agrees with the dense Jacobi
+/// eigensolver to 1e-6 relative on random connected graphs — (χ₁, χ₂)
+/// both — across sizes, densities, rates, and seeds, including the
+/// induced subgraphs a churn event leaves behind (remapped alive
+/// workers, exactly what `active_chis` hands the estimator mid-run).
+#[test]
+fn prop_lanczos_spectrum_matches_dense_on_random_graphs() {
+    use a2cid2::linalg::lanczos::LanczosOptions;
+
+    fn connected(n: usize, edges: &[(usize, usize)]) -> bool {
+        let mut adj = vec![Vec::new(); n];
+        for &(i, j) in edges {
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == n
+    }
+
+    fn assert_close(name: &str, sparse: f64, dense: f64) {
+        let rel = (sparse - dense).abs() / dense.abs().max(1e-300);
+        assert!(rel < 1e-6, "{name}: sparse {sparse} vs dense {dense} (rel {rel:.3e})");
+    }
+
+    let max_n = if cfg!(debug_assertions) { 96 } else { 256 };
+    check("lanczos-vs-dense", 12, |rng| {
+        let n = usize_in(rng, 4, max_n);
+        let p = f64_in(rng, 0.25, 0.9);
+        let seed = rng.next_u64();
+        let graph = Graph::build(&Topology::ErdosRenyi { p, seed }, n).unwrap();
+        let rate = f64_in(rng, 0.1, 4.0);
+        let rates = graph.edge_rates(rate);
+        let dense = graph.spectrum_with_rates(&rates);
+        let sparse = graph.spectrum_lanczos(&rates, &LanczosOptions::sized_for(graph.n));
+        assert_close("chi1", sparse.chi1, dense.chi1);
+        assert_close("chi2", sparse.chi2, dense.chi2);
+        assert_close("lambda2", sparse.lambda2, dense.lambda2);
+
+        // Post-churn active subgraph: drop a random ~quarter of the
+        // workers, remap the survivors contiguously (the same remap
+        // `active_chis` performs), and re-check on the induced graph.
+        let alive: Vec<usize> = (0..n).filter(|_| rng.next_u64() % 4 != 0).collect();
+        if alive.len() < 3 {
+            return;
+        }
+        let mut remap = vec![usize::MAX; n];
+        for (new, &old) in alive.iter().enumerate() {
+            remap[old] = new;
+        }
+        let sub_edges: Vec<(usize, usize)> = graph
+            .edges
+            .iter()
+            .filter(|(i, j)| remap[*i] != usize::MAX && remap[*j] != usize::MAX)
+            .map(|&(i, j)| (remap[i], remap[j]))
+            .collect();
+        if sub_edges.is_empty() || !connected(alive.len(), &sub_edges) {
+            return; // a disconnected remnant never reaches the estimator
+        }
+        let sub = Graph::from_edges(alive.len(), sub_edges);
+        let sub_rates = sub.edge_rates(rate);
+        let dense = sub.spectrum_with_rates(&sub_rates);
+        let sparse = sub.spectrum_lanczos(&sub_rates, &LanczosOptions::sized_for(sub.n));
+        assert_close("churn chi1", sparse.chi1, dense.chi1);
+        assert_close("churn chi2", sparse.chi2, dense.chi2);
+    });
+}
