@@ -1,0 +1,8 @@
+//! The algorithm zoo head-to-head as a bench target: every update rule
+//! (`adpsgd`, `a2cid2`, `localsgd:4`, `allreduce`) on the shared
+//! consensus race and the ring / churn training units, at the
+//! env-selected scale. Resolved through the experiment registry, which
+//! prints the table and maintains the `BENCH_compare.json` artifact
+//! (cargo runs benches with cwd = the package root, so the file lands
+//! under `rust/`) for CI to archive.
+a2cid2::bench_main!(compare);

@@ -165,8 +165,9 @@ impl Bench {
 }
 
 fn main() {
-    let full = std::env::var("A2CID2_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
-    let smoke = std::env::var("A2CID2_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let knobs = a2cid2::config::env::knobs();
+    let full = knobs.bench_full;
+    let smoke = knobs.bench_smoke;
     let iters = if smoke {
         5
     } else if full {

@@ -2,7 +2,10 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, positional
 //! arguments and subcommands; generates usage text from the declared
-//! options.
+//! options. Every subcommand shares ONE option namespace (declared once
+//! via [`Cli::opt`]/[`Cli::flag`]); a [`SubSpec`] then scopes which of
+//! the shared options each subcommand accepts, so `a2cid2 spectrum
+//! --steps 9` fails loudly instead of silently ignoring the option.
 
 use std::collections::BTreeMap;
 
@@ -15,11 +18,25 @@ pub struct OptSpec {
     pub is_flag: bool,
 }
 
+/// The surface of one subcommand: its one-line description plus the
+/// subset of the shared options/flags it accepts. Only options the user
+/// typed explicitly are validated — seeded defaults never trip it.
+#[derive(Clone, Debug)]
+pub struct SubSpec {
+    pub name: &'static str,
+    pub about: String,
+    pub opts: Vec<&'static str>,
+    pub flags: Vec<&'static str>,
+}
+
 /// Parsed arguments for one (sub)command.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: Option<String>,
     pub options: BTreeMap<String, String>,
+    /// Option names the user provided explicitly (seeded defaults are
+    /// not listed) — the set subcommand validation checks.
+    pub set: Vec<String>,
     pub flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -29,11 +46,12 @@ pub struct Cli {
     pub program: &'static str,
     pub about: &'static str,
     pub specs: Vec<OptSpec>,
+    pub subs: Vec<SubSpec>,
 }
 
 impl Cli {
     pub fn new(program: &'static str, about: &'static str) -> Self {
-        Self { program, about, specs: Vec::new() }
+        Self { program, about, specs: Vec::new(), subs: Vec::new() }
     }
 
     pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
@@ -43,6 +61,25 @@ impl Cli {
 
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Declare a subcommand: which shared options and flags it accepts.
+    /// Unknown subcommands are left unvalidated (the caller rejects
+    /// them); every name listed here must be a declared option/flag.
+    pub fn sub(
+        mut self,
+        name: &'static str,
+        about: impl Into<String>,
+        opts: &[&'static str],
+        flags: &[&'static str],
+    ) -> Self {
+        self.subs.push(SubSpec {
+            name,
+            about: about.into(),
+            opts: opts.to_vec(),
+            flags: flags.to_vec(),
+        });
         self
     }
 
@@ -87,6 +124,7 @@ impl Cli {
                                 .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
                         }
                     };
+                    args.set.push(name.clone());
                     args.options.insert(name, value);
                 }
             } else if args.command.is_none() {
@@ -96,7 +134,44 @@ impl Cli {
             }
             i += 1;
         }
+        self.validate_for_sub(&args)?;
         Ok(args)
+    }
+
+    /// If the parsed command has a [`SubSpec`], reject explicitly-set
+    /// options and flags outside its declared surface.
+    fn validate_for_sub(&self, args: &Args) -> crate::Result<()> {
+        let Some(sub) = args
+            .command
+            .as_deref()
+            .and_then(|c| self.subs.iter().find(|s| s.name == c))
+        else {
+            return Ok(());
+        };
+        let allowed = |names: &[&'static str]| {
+            if names.is_empty() {
+                "none".to_string()
+            } else {
+                names.iter().map(|n| format!("--{n}")).collect::<Vec<_>>().join(", ")
+            }
+        };
+        for name in &args.set {
+            anyhow::ensure!(
+                sub.opts.iter().any(|o| o == name),
+                "--{name} does not apply to '{}' (its options: {})",
+                sub.name,
+                allowed(&sub.opts)
+            );
+        }
+        for flag in &args.flags {
+            anyhow::ensure!(
+                sub.flags.iter().any(|f| f == flag),
+                "--{flag} does not apply to '{}' (its flags: {})",
+                sub.name,
+                allowed(&sub.flags)
+            );
+        }
+        Ok(())
     }
 
     /// Render usage text.
@@ -112,6 +187,21 @@ impl Cli {
                 }
             };
             out.push_str(&format!("  --{}{}\n      {}\n", s.name, tail, s.help));
+        }
+        if !self.subs.is_empty() {
+            out.push_str("\nSubcommands:\n");
+            for sub in &self.subs {
+                out.push_str(&format!("  {} — {}\n", sub.name, sub.about));
+                let surface: Vec<String> = sub
+                    .opts
+                    .iter()
+                    .chain(sub.flags.iter())
+                    .map(|n| format!("--{n}"))
+                    .collect();
+                if !surface.is_empty() {
+                    out.push_str(&format!("      accepts: {}\n", surface.join(" ")));
+                }
+            }
         }
         out
     }
@@ -191,5 +281,61 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(cli().parse(&argv(&["--workers"])).is_err());
+    }
+
+    fn scoped_cli() -> Cli {
+        cli()
+            .opt("rate", "comm rate", Some("1.0"))
+            .sub("run", "train something", &["workers", "topology"], &["verbose"])
+            .sub("inspect", "look at a graph", &["topology"], &[])
+    }
+
+    #[test]
+    fn sub_accepts_its_own_options_and_defaults() {
+        // Explicit in-scope options pass; out-of-scope options that were
+        // only seeded as defaults (rate) never trip validation.
+        let a = scoped_cli().parse(&argv(&["run", "--workers", "4", "--verbose"])).unwrap();
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.get("rate"), Some("1.0"));
+        assert_eq!(a.set, vec!["workers"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn sub_rejects_out_of_scope_option_naming_the_surface() {
+        let err = scoped_cli()
+            .parse(&argv(&["inspect", "--workers", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--workers does not apply to 'inspect'"), "{err}");
+        assert!(err.contains("--topology"), "error lists the allowed set: {err}");
+    }
+
+    #[test]
+    fn sub_rejects_out_of_scope_flag() {
+        let err = scoped_cli()
+            .parse(&argv(&["inspect", "--verbose"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--verbose does not apply to 'inspect'"), "{err}");
+        assert!(err.contains("none"), "empty flag surface renders as 'none': {err}");
+    }
+
+    #[test]
+    fn unknown_subcommand_is_left_unvalidated() {
+        // The caller rejects unknown subcommands; the parser must not
+        // second-guess options for commands it has no spec for.
+        let a = scoped_cli().parse(&argv(&["mystery", "--rate", "2.0"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("mystery"));
+        assert_eq!(a.get("rate"), Some("2.0"));
+    }
+
+    #[test]
+    fn usage_lists_subcommand_surfaces() {
+        let u = scoped_cli().usage();
+        assert!(u.contains("Subcommands:"), "{u}");
+        assert!(u.contains("run — train something"), "{u}");
+        assert!(u.contains("accepts: --workers --topology --verbose"), "{u}");
+        assert!(u.contains("accepts: --topology\n"), "{u}");
     }
 }

@@ -1,0 +1,128 @@
+//! The process-wide `A2CID2_*` environment knobs, read ONCE.
+//!
+//! Every out-of-band switch the crate honors lives here, with a
+//! single-read-per-process contract: the first call to [`knobs`] reads
+//! the environment into a [`OnceLock`] and later mutations of the
+//! process environment are invisible. That is deliberate — the knobs
+//! configure process-wide singletons (the kernel backend, the chunk
+//! pool, the bench scale) that must not change identity mid-run, and a
+//! single documented read site keeps "which env vars does this binary
+//! care about?" answerable by one module.
+//!
+//! | variable | effect |
+//! |---|---|
+//! | `A2CID2_ARTIFACTS` | artifact directory override (`BENCH_*.json`, HLO manifests) |
+//! | `A2CID2_BENCH_FULL` | `1` = paper-sized experiment grids (`Scale::Full`) |
+//! | `A2CID2_BENCH_SMOKE` | `1` = keep the perf bench to its smoke subset |
+//! | `A2CID2_BLESS` | `1` = rewrite golden files with the observed values |
+//! | `A2CID2_KERNEL_BACKEND` | `auto`\|`scalar`\|`simd`\|`avx2`\|`neon`\|`avx512` kernel dispatch |
+//! | `A2CID2_POOL_THREADS` | total pool lanes (`1` = fully serial); sizes the kernel chunk pool AND the experiment grid runner |
+//!
+//! Tests that must observe a knob's default should `remove_var` BEFORE
+//! the first [`knobs`] call in the process (the cached read makes later
+//! removals no-ops, which is exactly the contract).
+
+use std::sync::OnceLock;
+
+/// Every `A2CID2_*` variable the crate reads, sorted. The exhaustiveness
+/// test below pins this list against [`Knobs`]' fields; grep for these
+/// names to find the (single) consumer of each.
+pub const VARS: [&str; 6] = [
+    "A2CID2_ARTIFACTS",
+    "A2CID2_BENCH_FULL",
+    "A2CID2_BENCH_SMOKE",
+    "A2CID2_BLESS",
+    "A2CID2_KERNEL_BACKEND",
+    "A2CID2_POOL_THREADS",
+];
+
+/// The parsed knob values (one field per entry of [`VARS`]).
+#[derive(Clone, Debug, Default)]
+pub struct Knobs {
+    /// `A2CID2_ARTIFACTS`: artifact directory override.
+    pub artifacts_dir: Option<String>,
+    /// `A2CID2_BENCH_FULL=1`: run the paper-sized grids.
+    pub bench_full: bool,
+    /// `A2CID2_BENCH_SMOKE=1`: keep the perf bench to its smoke subset.
+    pub bench_smoke: bool,
+    /// `A2CID2_BLESS=1`: rewrite golden entries with observed values.
+    pub bless: bool,
+    /// `A2CID2_KERNEL_BACKEND`: raw backend choice (validation happens at
+    /// the dispatch site, which knows the accepted names).
+    pub kernel_backend: Option<String>,
+    /// `A2CID2_POOL_THREADS`: total pool lanes; `>= 1` or ignored.
+    pub pool_threads: Option<usize>,
+}
+
+fn read() -> Knobs {
+    let flag = |name: &str| std::env::var(name).map(|v| v == "1").unwrap_or(false);
+    Knobs {
+        artifacts_dir: std::env::var("A2CID2_ARTIFACTS").ok(),
+        bench_full: flag("A2CID2_BENCH_FULL"),
+        bench_smoke: flag("A2CID2_BENCH_SMOKE"),
+        bless: flag("A2CID2_BLESS"),
+        kernel_backend: std::env::var("A2CID2_KERNEL_BACKEND").ok(),
+        pool_threads: std::env::var("A2CID2_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1),
+    }
+}
+
+/// The process-wide knobs, read from the environment exactly once.
+pub fn knobs() -> &'static Knobs {
+    static KNOBS: OnceLock<Knobs> = OnceLock::new();
+    KNOBS.get_or_init(read)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exhaustiveness contract: [`VARS`] lists every knob, sorted
+    /// and unique, and [`Knobs`] carries exactly one field per variable
+    /// (pinned by the struct literal below — adding a knob without
+    /// growing both this list and the struct fails to compile or fails
+    /// here).
+    #[test]
+    fn vars_list_is_sorted_unique_and_matches_knobs() {
+        assert!(VARS.windows(2).all(|w| w[0] < w[1]), "sorted + unique: {VARS:?}");
+        assert!(VARS.iter().all(|v| v.starts_with("A2CID2_")), "one namespace");
+        // One field per variable, same order as the docs table.
+        let Knobs {
+            artifacts_dir: _,
+            bench_full: _,
+            bench_smoke: _,
+            bless: _,
+            kernel_backend: _,
+            pool_threads: _,
+        } = Knobs::default();
+        assert_eq!(VARS.len(), 6);
+    }
+
+    #[test]
+    fn knobs_read_once_and_are_stable() {
+        let a = knobs() as *const Knobs;
+        let b = knobs() as *const Knobs;
+        assert_eq!(a, b, "same cached instance");
+        // Defaults are inert when the variables are unset.
+        let k = read();
+        if std::env::var("A2CID2_BENCH_FULL").is_err() {
+            assert!(!k.bench_full);
+        }
+        if std::env::var("A2CID2_POOL_THREADS").is_err() {
+            assert!(k.pool_threads.is_none());
+        }
+    }
+
+    #[test]
+    fn pool_threads_rejects_zero_and_garbage() {
+        // The parse-and-filter pipeline (shared by the pool and the grid
+        // runner) ignores 0 and non-numeric values rather than erroring.
+        let parse = |v: &str| v.parse::<usize>().ok().filter(|&n| n >= 1);
+        assert_eq!(parse("4"), Some(4));
+        assert_eq!(parse("1"), Some(1));
+        assert_eq!(parse("0"), None);
+        assert_eq!(parse("lots"), None);
+    }
+}

@@ -6,6 +6,7 @@
 //! array values, `#` comments. No serde offline — the parser is ~150 lines
 //! and fully tested.
 
+pub mod env;
 mod parser;
 pub mod scenario;
 
@@ -41,6 +42,84 @@ impl Method {
             Method::AllReduce => "ar-sgd",
             Method::AsyncBaseline => "async-baseline",
             Method::Acid => "a2cid2",
+        }
+    }
+}
+
+/// Which per-event update rule the engines run — the algorithm-zoo axis.
+///
+/// [`Method`] predates this enum and survives as the coarse dispatch the
+/// older configs/CLI use; `Algorithm` is the full zoo: it adds
+/// [`Algorithm::LocalSgd`] (H local gradient steps between pairings, à la
+/// locally-asynchronous local-SGD) which no `Method` can express. Every
+/// `Algorithm` still maps back onto a `Method` ([`Algorithm::method`]) so
+/// the simulator/runtime plumbing that branches on `Method` keeps
+/// working; the per-event behavior difference lives in
+/// [`crate::engine::DynamicsCore`]'s `UpdateRule`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Asynchronous gossip + continuous momentum (the paper's Eq. 4).
+    A2cid2,
+    /// Plain asynchronous pairwise averaging, no momentum (AD-PSGD).
+    AdPsgd,
+    /// Pairwise averaging gated on `h` local gradient steps since the
+    /// worker's last applied communication (locally-async local-SGD).
+    LocalSgd { h: u64 },
+    /// Synchronous All-Reduce SGD (the centralized baseline).
+    AllReduce,
+}
+
+impl Algorithm {
+    /// Parse `a2cid2 | adpsgd | localsgd:H | allreduce` (plus the same
+    /// aliases [`Method::parse`] accepts for the overlapping variants).
+    pub fn parse(s: &str) -> crate::Result<Algorithm> {
+        if let Some(h) = s.strip_prefix("localsgd:") {
+            let h: u64 = h
+                .parse()
+                .map_err(|_| anyhow::anyhow!("localsgd:H needs an integer H, got '{s}'"))?;
+            anyhow::ensure!(h >= 1, "localsgd:H needs H >= 1 (H = 1 is adpsgd-paced)");
+            return Ok(Algorithm::LocalSgd { h });
+        }
+        Ok(match s {
+            "a2cid2" | "acid" => Algorithm::A2cid2,
+            "adpsgd" | "baseline" | "async-baseline" => Algorithm::AdPsgd,
+            "allreduce" | "ar" | "ar-sgd" => Algorithm::AllReduce,
+            "localsgd" => anyhow::bail!("localsgd needs a pacing: 'localsgd:H' with H >= 1"),
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' (expected a2cid2|adpsgd|localsgd:H|allreduce)"
+            ),
+        })
+    }
+
+    /// The algorithm a legacy [`Method`] means (the back-compat default).
+    pub fn from_method(m: Method) -> Algorithm {
+        match m {
+            Method::AllReduce => Algorithm::AllReduce,
+            Method::AsyncBaseline => Algorithm::AdPsgd,
+            Method::Acid => Algorithm::A2cid2,
+        }
+    }
+
+    /// The coarse [`Method`] this algorithm runs under (which engine
+    /// branch/parameter family applies). LocalSgd is an η = 0 gossip
+    /// dynamic with a gated pairing, so it rides the async-baseline
+    /// plumbing.
+    pub fn method(&self) -> Method {
+        match self {
+            Algorithm::A2cid2 => Method::Acid,
+            Algorithm::AdPsgd | Algorithm::LocalSgd { .. } => Method::AsyncBaseline,
+            Algorithm::AllReduce => Method::AllReduce,
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Algorithm::A2cid2 => write!(f, "a2cid2"),
+            Algorithm::AdPsgd => write!(f, "adpsgd"),
+            Algorithm::LocalSgd { h } => write!(f, "localsgd:{h}"),
+            Algorithm::AllReduce => write!(f, "allreduce"),
         }
     }
 }
@@ -95,6 +174,10 @@ pub struct ExperimentConfig {
     /// per-phase adaptive (η, α̃)). When set it supersedes `topology`;
     /// see [`Scenario`] for the string syntax.
     pub scenario: Option<Scenario>,
+    /// Explicit update rule (TOML `algorithm = "…"`, CLI `--algo`).
+    /// `None` derives from `method`, so every pre-zoo config is
+    /// unchanged; see [`ExperimentConfig::algo`] for the precedence.
+    pub algorithm: Option<Algorithm>,
 }
 
 impl Default for ExperimentConfig {
@@ -115,13 +198,24 @@ impl Default for ExperimentConfig {
             seed: 0,
             compute_jitter: 0.1,
             scenario: None,
+            algorithm: None,
         }
     }
 }
 
 impl ExperimentConfig {
+    /// The effective update rule: the scenario's `algo=` key wins, then
+    /// the config's `algorithm`, then the legacy `method` mapping.
+    pub fn algo(&self) -> Algorithm {
+        self.scenario
+            .as_ref()
+            .and_then(|s| s.algo)
+            .or(self.algorithm)
+            .unwrap_or(Algorithm::from_method(self.method))
+    }
+
     /// Validate invariants; returns self for chaining.
-    pub fn validate(self) -> crate::Result<Self> {
+    pub fn validate(mut self) -> crate::Result<Self> {
         anyhow::ensure!(self.n_workers >= 2, "need >= 2 workers");
         anyhow::ensure!(self.comm_rate >= 0.0, "negative comm rate");
         anyhow::ensure!(self.batch_size >= 1, "batch size must be >= 1");
@@ -130,19 +224,33 @@ impl ExperimentConfig {
         anyhow::ensure!(self.steps_per_worker >= 1, "need >= 1 step");
         anyhow::ensure!(self.dataset_size >= self.batch_size, "dataset < batch");
         anyhow::ensure!(self.compute_jitter >= 0.0, "negative jitter");
+        if let (Some(a), Some(sa)) = (self.algorithm, self.scenario.as_ref().and_then(|s| s.algo))
+        {
+            anyhow::ensure!(
+                a == sa,
+                "algorithm '{a}' conflicts with the scenario's 'algo={sa}'"
+            );
+        }
+        let algo = self.algo();
         if let Some(sc) = &self.scenario {
             // A scenario only shapes the gossip network; the synchronous
             // All-Reduce baseline would silently ignore it — reject
             // rather than hand back numbers the scenario never touched.
             anyhow::ensure!(
-                self.method != Method::AllReduce,
-                "scenario requires an asynchronous method; allreduce ignores the gossip network"
+                algo != Algorithm::AllReduce,
+                "scenario requires an asynchronous algorithm; allreduce ignores the gossip network"
             );
             // Surface bad phase/worker-count combinations (e.g. torus
             // dims) at config time; the engines compile the full plan
             // (incl. the spectrum eigensolve) once, at run start.
             sc.validate_for(self.n_workers)?;
         }
+        // Canonicalize: `method` always mirrors the effective algorithm,
+        // so the engines' coarse `Method` branches (parameter family,
+        // allreduce dispatch) cannot disagree with the update rule. A
+        // no-op for every pre-zoo config (`algo()` derives from `method`
+        // when nothing is set).
+        self.method = algo.method();
         Ok(self)
     }
 
@@ -166,6 +274,7 @@ impl ExperimentConfig {
                 "seed" => cfg.seed = value.as_int()? as u64,
                 "compute_jitter" => cfg.compute_jitter = value.as_float()?,
                 "scenario" => cfg.scenario = Some(Scenario::parse(value.as_str()?)?),
+                "algorithm" => cfg.algorithm = Some(Algorithm::parse(value.as_str()?)?),
                 "sharding" => {
                     cfg.sharding = match value.as_str()? {
                         "full" | "full-shuffled" => Sharding::FullShuffled,
@@ -272,5 +381,76 @@ seed = 7
         assert_eq!(Method::parse("a2cid2").unwrap(), Method::Acid);
         assert!(Method::parse("sync").is_err());
         assert_eq!(Task::parse("gm100").unwrap(), Task::ImagenetLike);
+    }
+
+    #[test]
+    fn algorithm_parse_display_round_trip() {
+        for (s, a) in [
+            ("a2cid2", Algorithm::A2cid2),
+            ("adpsgd", Algorithm::AdPsgd),
+            ("localsgd:4", Algorithm::LocalSgd { h: 4 }),
+            ("allreduce", Algorithm::AllReduce),
+        ] {
+            assert_eq!(Algorithm::parse(s).unwrap(), a);
+            assert_eq!(a.to_string(), s, "Display round-trips the canonical spelling");
+        }
+        // Method aliases resolve too.
+        assert_eq!(Algorithm::parse("acid").unwrap(), Algorithm::A2cid2);
+        assert_eq!(Algorithm::parse("baseline").unwrap(), Algorithm::AdPsgd);
+        assert_eq!(Algorithm::parse("ar").unwrap(), Algorithm::AllReduce);
+        // Errors: unknown, unpaced localsgd, zero pacing, junk pacing.
+        assert!(Algorithm::parse("nope").is_err());
+        assert!(Algorithm::parse("localsgd").is_err());
+        assert!(Algorithm::parse("localsgd:0").is_err());
+        assert!(Algorithm::parse("localsgd:x").is_err());
+    }
+
+    #[test]
+    fn algorithm_method_round_trip() {
+        for m in [Method::AllReduce, Method::AsyncBaseline, Method::Acid] {
+            assert_eq!(Algorithm::from_method(m).method(), m);
+        }
+        // LocalSgd rides the async-baseline plumbing.
+        assert_eq!(Algorithm::LocalSgd { h: 3 }.method(), Method::AsyncBaseline);
+    }
+
+    #[test]
+    fn algorithm_key_canonicalizes_method() {
+        // `algorithm` wins over a conflicting legacy `method`, and
+        // validate re-derives `method` so engine dispatch agrees.
+        let text = "[experiment]\nmethod = \"a2cid2\"\nalgorithm = \"adpsgd\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.algo(), Algorithm::AdPsgd);
+        assert_eq!(cfg.method, Method::AsyncBaseline);
+        // Defaulting: no `algorithm` key derives from `method` (a2cid2).
+        let cfg = ExperimentConfig::from_toml("[experiment]\n").unwrap();
+        assert_eq!(cfg.algo(), Algorithm::A2cid2);
+        assert!(cfg.algorithm.is_none());
+        // localsgd pacing survives the TOML round trip.
+        let text = "[experiment]\nalgorithm = \"localsgd:8\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.algo(), Algorithm::LocalSgd { h: 8 });
+        assert_eq!(cfg.method, Method::AsyncBaseline);
+        // Bad algorithm strings are config errors.
+        assert!(ExperimentConfig::from_toml("[experiment]\nalgorithm = \"wat\"\n").is_err());
+    }
+
+    #[test]
+    fn scenario_algo_precedence_and_conflicts() {
+        // The scenario's algo= key is the effective rule.
+        let text = "[experiment]\nscenario = \"ring@0;algo=adpsgd\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.algo(), Algorithm::AdPsgd);
+        assert_eq!(cfg.method, Method::AsyncBaseline);
+        // Agreeing config + scenario keys are fine…
+        let ok = "[experiment]\nalgorithm = \"adpsgd\"\nscenario = \"ring@0;algo=adpsgd\"\n";
+        assert!(ExperimentConfig::from_toml(ok).is_ok());
+        // …conflicting ones are rejected rather than silently resolved.
+        let bad = "[experiment]\nalgorithm = \"a2cid2\"\nscenario = \"ring@0;algo=adpsgd\"\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        // allreduce via the algorithm axis + scenario: same rejection as
+        // the legacy method path.
+        let ar = "[experiment]\nalgorithm = \"allreduce\"\nscenario = \"ring@0,exp@0.5\"\n";
+        assert!(ExperimentConfig::from_toml(ar).is_err());
     }
 }

@@ -25,6 +25,7 @@
 //! leave  := leave=FRAC:T[:SEED]          FRAC of the fleet departs at T
 //! join   := join=FRAC:T                  departed workers re-join at T
 //! adapt  := adapt=0|1                    re-derive (η, α̃) per phase (default 1)
+//! algo   := algo=a2cid2|adpsgd|localsgd:H|allreduce   update rule (default: config's)
 //! ```
 //!
 //! All times are *fractions of the run horizon* in `[0, 1)`; the horizon
@@ -61,6 +62,7 @@
 use std::collections::HashMap;
 use std::fmt;
 
+use super::Algorithm;
 use crate::graph::{Graph, Spectrum, Topology};
 use crate::rng::{standard_normal, Xoshiro256};
 
@@ -136,6 +138,11 @@ pub struct Scenario {
     /// phase switch / churn event (`adapt=1`, the default) instead of
     /// holding phase-0's parameters (`adapt=0`).
     pub adaptive: bool,
+    /// Update rule to run this scenario under (`algo=` option). `None`
+    /// (the default, rendered as nothing by `Display`) defers to the
+    /// config/CLI, so every pre-zoo scenario string is unchanged. The
+    /// option exists so one *string* fully names a compare arm.
+    pub algo: Option<Algorithm>,
 }
 
 /// One timed network update of a compiled plan. `None`/empty fields are
@@ -236,6 +243,7 @@ impl Scenario {
             drift: None,
             churn: Vec::new(),
             adaptive: true,
+            algo: None,
         }
     }
 
@@ -289,6 +297,7 @@ impl Scenario {
             drift: None,
             churn: Vec::new(),
             adaptive: true,
+            algo: None,
         };
         for opt in parts {
             let opt = opt.trim();
@@ -407,6 +416,9 @@ impl Scenario {
                     anyhow::ensure!(v <= 1, "adapt must be 0 or 1, got {v}");
                     scenario.adaptive = v == 1;
                 }
+                // The algorithm value itself may contain ':' (localsgd:H),
+                // so it parses from the raw value, not the ':'-split fields.
+                "algo" => scenario.algo = Some(Algorithm::parse(val)?),
                 other => anyhow::bail!("unknown scenario option '{other}'"),
             }
         }
@@ -840,6 +852,9 @@ impl fmt::Display for Scenario {
         if !self.adaptive {
             f.write_str(";adapt=0")?;
         }
+        if let Some(a) = &self.algo {
+            write!(f, ";algo={a}")?;
+        }
         Ok(())
     }
 }
@@ -908,9 +923,23 @@ mod tests {
             "ring@0;wat=1",          // unknown option
             "ring@0;drop",           // not key=value
             "ring@1.2",              // time out of range
+            "ring@0;algo=nope",      // unknown algorithm
+            "ring@0;algo=localsgd",  // localsgd without pacing
+            "ring@0;algo=localsgd:0", // zero pacing
         ] {
             assert!(Scenario::parse(bad).is_err(), "should reject '{bad}'");
         }
+    }
+
+    #[test]
+    fn parses_algo_option() {
+        let s = Scenario::parse("ring@0;algo=adpsgd").unwrap();
+        assert_eq!(s.algo, Some(Algorithm::AdPsgd));
+        // The ':' inside localsgd:H is part of the value, not a field split.
+        let s = Scenario::parse("ring@0;algo=localsgd:4").unwrap();
+        assert_eq!(s.algo, Some(Algorithm::LocalSgd { h: 4 }));
+        // Unset stays None (the config/CLI decides).
+        assert_eq!(Scenario::parse("ring@0").unwrap().algo, None);
     }
 
     #[test]
@@ -950,6 +979,9 @@ mod tests {
             "ring@0,exponential@0.5;drop=0.2:0.25:0.75:7;het=0.5;drift=0.3:4:1",
             "ring@0;leave=0.25:0.2:9;join=0.25:0.6",
             "ring@0;leave=0.25:0.2;adapt=0",
+            "ring@0;algo=adpsgd",
+            "ring@0;leave=0.25:0.2;adapt=0;algo=localsgd:4",
+            "ring@0,exponential@0.5;drop=0.2:0.25:0.75:7;algo=a2cid2",
         ] {
             let parsed = Scenario::parse(s).unwrap();
             let rendered = parsed.to_string();

@@ -9,11 +9,95 @@
 //! way, the same code path applies the update, so a scenario validated in
 //! fast simulation runs unchanged under true asynchrony.
 
-use crate::config::Method;
+use std::sync::Arc;
+
+use crate::config::{Algorithm, Method};
 use crate::gossip::dynamics::{comm_event, WorkerState};
 use crate::gossip::{AcidParams, Mixer};
 use crate::graph::Spectrum;
 use crate::optim::{LrSchedule, Sgd};
+
+/// A pluggable per-event update rule: which (η, α, α̃) the dynamic runs
+/// with, and whether a proposed pairing is admitted at all. The rule is
+/// selected ONCE per run (when the core is built) — the per-event hot
+/// path only ever sees the resolved [`AcidParams`]/[`Mixer`], plus one
+/// cheap `admits_pair` counter check, so no dynamic dispatch reaches the
+/// vector kernels.
+///
+/// All asynchronous algorithms share the engines' seeded event stream:
+/// a rule never *reschedules* events, it only decides how (and whether)
+/// each one applies. That is what makes head-to-head arms comparable —
+/// same Poisson clocks, different update rules.
+pub trait UpdateRule: Send + Sync + std::fmt::Debug {
+    /// Canonical algorithm name (matches the config grammar).
+    fn name(&self) -> &'static str;
+
+    /// The (η, α, α̃) this rule runs with over the given network.
+    fn params(&self, spectrum: &Spectrum) -> AcidParams;
+
+    /// Whether this endpoint is ready to communicate. Default: always.
+    fn admits_endpoint(&self, _w: &WorkerState) -> bool {
+        true
+    }
+
+    /// Whether a proposed pairing applies. Default: both endpoints ready.
+    fn admits_pair(&self, a: &WorkerState, b: &WorkerState) -> bool {
+        self.admits_endpoint(a) && self.admits_endpoint(b)
+    }
+}
+
+/// The paper's accelerated dynamic (Eq. 4, Prop. 3.6 parameters).
+#[derive(Clone, Copy, Debug)]
+pub struct A2cid2Rule;
+
+impl UpdateRule for A2cid2Rule {
+    fn name(&self) -> &'static str {
+        "a2cid2"
+    }
+
+    fn params(&self, spectrum: &Spectrum) -> AcidParams {
+        AcidParams::from_spectrum(spectrum)
+    }
+}
+
+/// AD-PSGD-style plain pairwise averaging: η = 0, α = α̃ = ½, every
+/// pairing applies (Lian et al., 2018 — the paper's async baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct AdPsgdRule;
+
+impl UpdateRule for AdPsgdRule {
+    fn name(&self) -> &'static str {
+        "adpsgd"
+    }
+
+    fn params(&self, _spectrum: &Spectrum) -> AcidParams {
+        AcidParams::baseline()
+    }
+}
+
+/// Locally-asynchronous local SGD: plain averaging like AD-PSGD, but an
+/// endpoint only communicates after `h` local gradient steps since its
+/// last applied pairing. Pairings proposed too early are skipped (the
+/// event still ticks the shared stream; it just does not apply).
+#[derive(Clone, Copy, Debug)]
+pub struct LocalSgdRule {
+    /// Local gradient steps required between two applied pairings.
+    pub h: u64,
+}
+
+impl UpdateRule for LocalSgdRule {
+    fn name(&self) -> &'static str {
+        "localsgd"
+    }
+
+    fn params(&self, _spectrum: &Spectrum) -> AcidParams {
+        AcidParams::baseline()
+    }
+
+    fn admits_endpoint(&self, w: &WorkerState) -> bool {
+        w.n_grads.saturating_sub(w.grads_at_last_comm) >= self.h
+    }
+}
 
 /// Engine-agnostic event application for the Eq. 4 dynamic.
 #[derive(Clone, Debug)]
@@ -24,27 +108,43 @@ pub struct DynamicsCore {
     pub mixer: Mixer,
     /// Per-worker learning-rate schedule, indexed by local step count.
     pub lr: LrSchedule,
+    /// The update rule this core was built for (selected once per run).
+    pub rule: Arc<dyn UpdateRule>,
 }
 
 impl DynamicsCore {
-    /// Build from explicit parameters.
+    /// Build from explicit parameters (the A²CiD² Eq. 4 rule; for other
+    /// algorithms use [`DynamicsCore::for_algorithm`]).
     pub fn with_params(acid: AcidParams, lr: LrSchedule) -> Self {
-        Self { acid, mixer: Mixer::new(acid.eta), lr }
+        Self { acid, mixer: Mixer::new(acid.eta), lr, rule: Arc::new(A2cid2Rule) }
     }
 
-    /// Build for a method over a network spectrum: [`Method::Acid`] takes
-    /// the Prop. 3.6 parameters, the async baseline η = 0.
-    /// [`Method::AllReduce`] has no gossip dynamic and is rejected.
-    pub fn for_method(method: Method, spectrum: &Spectrum, lr: LrSchedule) -> crate::Result<Self> {
-        anyhow::ensure!(
-            method != Method::AllReduce,
-            "the gossip dynamics core is for the asynchronous methods"
-        );
-        let acid = match method {
-            Method::Acid => AcidParams::from_spectrum(spectrum),
-            _ => AcidParams::baseline(),
+    /// Build for an asynchronous algorithm over a network spectrum: the
+    /// rule resolves its own (η, α, α̃) — [`Algorithm::A2cid2`] takes the
+    /// Prop. 3.6 parameters, the averaging rules η = 0.
+    /// [`Algorithm::AllReduce`] has no gossip dynamic and is rejected.
+    pub fn for_algorithm(
+        algo: Algorithm,
+        spectrum: &Spectrum,
+        lr: LrSchedule,
+    ) -> crate::Result<Self> {
+        let rule: Arc<dyn UpdateRule> = match algo {
+            Algorithm::A2cid2 => Arc::new(A2cid2Rule),
+            Algorithm::AdPsgd => Arc::new(AdPsgdRule),
+            Algorithm::LocalSgd { h } => Arc::new(LocalSgdRule { h }),
+            Algorithm::AllReduce => anyhow::bail!(
+                "the gossip dynamics core is for the asynchronous algorithms"
+            ),
         };
-        Ok(Self::with_params(acid, lr))
+        let acid = rule.params(spectrum);
+        Ok(Self { acid, mixer: Mixer::new(acid.eta), lr, rule })
+    }
+
+    /// Build for a legacy [`Method`]: [`Method::Acid`] maps to the
+    /// A²CiD² rule, the async baseline to AD-PSGD averaging (they are the
+    /// same η = 0 dynamic). [`Method::AllReduce`] is rejected.
+    pub fn for_method(method: Method, spectrum: &Spectrum, lr: LrSchedule) -> crate::Result<Self> {
+        Self::for_algorithm(Algorithm::from_method(method), spectrum, lr)
     }
 
     /// Swap in new (η, α, α̃) mid-run (the adaptive per-phase path). The
@@ -96,9 +196,17 @@ impl DynamicsCore {
     }
 
     /// Apply one full pairwise communication event at time `t` with both
-    /// endpoints in hand (the virtual-time engine's path; fused).
-    pub fn comm_event(&self, a: &mut WorkerState, b: &mut WorkerState, t: f64) {
+    /// endpoints in hand (the virtual-time engine's path; fused). Returns
+    /// whether the pairing applied: rules that pace communication (local
+    /// SGD) skip pairings proposed before both endpoints are ready, and
+    /// skipped pairings leave both states untouched so every algorithm
+    /// replays the same seeded event stream.
+    pub fn comm_event(&self, a: &mut WorkerState, b: &mut WorkerState, t: f64) -> bool {
+        if !self.rule.admits_pair(a, b) {
+            return false;
+        }
         comm_event(a, b, t, &self.acid, &self.mixer);
+        true
     }
 
     /// Bring a worker's pair up to time `t` (lazy momentum flow). Used
@@ -198,6 +306,89 @@ mod tests {
         assert!(acid.acid.is_accelerated());
         assert_eq!(acid.mixer.eta, acid.acid.eta);
         assert!(DynamicsCore::for_method(Method::AllReduce, &spectrum(), lr).is_err());
+    }
+
+    #[test]
+    fn for_algorithm_selects_rules_and_parameters() {
+        let lr = LrSchedule::Constant { lr: 0.1 };
+        let acid =
+            DynamicsCore::for_algorithm(Algorithm::A2cid2, &spectrum(), lr.clone()).unwrap();
+        assert!(acid.acid.is_accelerated());
+        assert_eq!(acid.rule.name(), "a2cid2");
+        let adpsgd =
+            DynamicsCore::for_algorithm(Algorithm::AdPsgd, &spectrum(), lr.clone()).unwrap();
+        assert!(!adpsgd.acid.is_accelerated());
+        assert_eq!(adpsgd.rule.name(), "adpsgd");
+        assert_eq!(adpsgd.acid, AcidParams::baseline());
+        let local = DynamicsCore::for_algorithm(
+            Algorithm::LocalSgd { h: 3 },
+            &spectrum(),
+            lr.clone(),
+        )
+        .unwrap();
+        assert_eq!(local.rule.name(), "localsgd");
+        assert_eq!(local.acid, AcidParams::baseline());
+        assert!(
+            DynamicsCore::for_algorithm(Algorithm::AllReduce, &spectrum(), lr).is_err()
+        );
+    }
+
+    #[test]
+    fn localsgd_gate_skips_pairings_until_h_local_steps() {
+        let core = DynamicsCore::for_algorithm(
+            Algorithm::LocalSgd { h: 2 },
+            &spectrum(),
+            LrSchedule::Constant { lr: 0.1 },
+        )
+        .unwrap();
+        let mut a = WorkerState::new(vec![0.0, 4.0]);
+        let mut b = WorkerState::new(vec![2.0, 0.0]);
+        let mut opt = Sgd::new(0.0);
+        // Neither endpoint has taken a step: the pairing must be skipped
+        // and leave both states untouched.
+        let a_before = a.clone();
+        assert!(!core.comm_event(&mut a, &mut b, 0.1));
+        assert_eq!(a.x, a_before.x);
+        assert_eq!(a.n_comms, 0);
+        // One step each is still below H = 2.
+        core.grad_event(&mut a, 0.2, &mut opt, &[0.0, 0.0]);
+        core.grad_event(&mut b, 0.2, &mut opt, &[0.0, 0.0]);
+        assert!(!core.comm_event(&mut a, &mut b, 0.3));
+        // Two steps each: the pairing applies and is plain averaging.
+        core.grad_event(&mut a, 0.4, &mut opt, &[0.0, 0.0]);
+        core.grad_event(&mut b, 0.4, &mut opt, &[0.0, 0.0]);
+        assert!(core.comm_event(&mut a, &mut b, 0.5));
+        assert_eq!(a.x, vec![1.0, 2.0]);
+        assert_eq!(b.x, vec![1.0, 2.0]);
+        assert_eq!(a.n_comms, 1);
+        // The gate re-arms: the very next pairing is skipped again.
+        assert!(!core.comm_event(&mut a, &mut b, 0.6));
+        assert_eq!(a.n_comms, 1);
+        // A one-sided ready endpoint is not enough.
+        core.grad_event(&mut a, 0.7, &mut opt, &[0.0, 0.0]);
+        core.grad_event(&mut a, 0.8, &mut opt, &[0.0, 0.0]);
+        assert!(!core.comm_event(&mut a, &mut b, 0.9));
+    }
+
+    #[test]
+    fn adpsgd_gated_comm_conserves_pair_mean() {
+        // The gated comm_event path for AD-PSGD is exact pairwise
+        // averaging: applied on every proposal, pair mean conserved.
+        let core = DynamicsCore::for_algorithm(
+            Algorithm::AdPsgd,
+            &spectrum(),
+            LrSchedule::Constant { lr: 0.1 },
+        )
+        .unwrap();
+        let mut a = WorkerState::new(vec![1.0, -3.0, 2.0]);
+        let mut b = WorkerState::new(vec![5.0, 0.5, -1.0]);
+        let sum = |u: &WorkerState, v: &WorkerState| -> f64 {
+            u.x.iter().chain(v.x.iter()).map(|&p| p as f64).sum()
+        };
+        let before = sum(&a, &b);
+        assert!(core.comm_event(&mut a, &mut b, 0.5));
+        assert!((sum(&a, &b) - before).abs() < 1e-5);
+        assert_eq!(a.x, b.x, "η = 0 pairing is exact averaging");
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub mod multiplex;
 pub mod sampler;
 pub mod scheduler;
 
-pub use self::core::{DynamicsCore, LossEma};
+pub use self::core::{
+    A2cid2Rule, AdPsgdRule, DynamicsCore, LocalSgdRule, LossEma, UpdateRule,
+};
 pub use multiplex::{Frame, MultiplexEngine};
 pub use sampler::BatchSampler;
 pub use scheduler::{Scheduler, Tick, VirtualTimeScheduler, WallClock};

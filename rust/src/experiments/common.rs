@@ -10,7 +10,7 @@ use crate::data::{Dataset, GaussianMixture, Sharding};
 use crate::gossip::dynamics::comm_event;
 use crate::gossip::{consensus_distance_sq, AcidParams, Mixer, WorkerState};
 use crate::graph::{Graph, Topology};
-use crate::metrics::{Series, Stats};
+use crate::metrics::{Recorder, Series, Stats};
 use crate::model::{Mlp, Model};
 use crate::rng::{standard_normal, Xoshiro256};
 use crate::simulator::{run_allreduce, run_simulation, ArTimingConfig, EventKind, EventQueue};
@@ -25,9 +25,10 @@ pub enum Scale {
 }
 
 impl Scale {
-    /// Read `A2CID2_BENCH_FULL` from the environment.
+    /// Read `A2CID2_BENCH_FULL` (via the process-wide
+    /// [`crate::config::env::knobs`] cache).
     pub fn from_env() -> Scale {
-        if std::env::var("A2CID2_BENCH_FULL").map(|v| v == "1").unwrap_or(false) {
+        if crate::config::env::knobs().bench_full {
             Scale::Full
         } else {
             Scale::Quick
@@ -140,13 +141,9 @@ impl GridRunner {
     /// capped at 8 (each point is itself a full training run — a handful
     /// of lanes saturates the memory bus).
     pub fn from_env() -> GridRunner {
-        let width = std::env::var("A2CID2_POOL_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
-            });
+        let width = crate::config::env::knobs().pool_threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        });
         GridRunner::with_width(width)
     }
 
@@ -346,6 +343,18 @@ pub fn variant_grid_cells<V: Sync>(
         .run(&points, |&(vi, n)| aggregate_config_seeds(seeds, &mk(&variants[vi], n), &metric))
 }
 
+/// Communication count at the first recorded sample at or after time `t`
+/// — pairs with `Series::first_time_below` to turn a loss target into a
+/// comms-to-target count (shared by `sweep` and `compare`).
+pub fn comms_at(recorder: &Recorder, t: f64) -> Option<u64> {
+    recorder
+        .get("comms")?
+        .points
+        .iter()
+        .find(|(tt, _)| *tt >= t)
+        .map(|(_, v)| *v as u64)
+}
+
 /// Gossip-only consensus decay probe shared by `tab1` and `ablation`:
 /// random initial `x` on the ring, communications at rate 1 per worker,
 /// no gradients. Returns the first time ‖πx‖² drops below `target_frac`
@@ -410,6 +419,7 @@ pub fn base_config(scale: Scale) -> ExperimentConfig {
         seed: 0,
         compute_jitter: 0.1,
         scenario: None,
+        algorithm: None,
     }
 }
 

@@ -36,13 +36,16 @@
 //! | [`scaling`]  | beyond | massive fleets: cluster_ring(k,m) χ₁ vs flat ring, multiplexed to 10⁵+ |
 //! | [`scenario`] | beyond | A²CiD² across a mid-run topology switch + dropout |
 //! | [`sweep`]    | beyond | dropout × switch × churn × adaptive grid |
+//! | [`compare`]  | beyond | algorithm zoo head-to-head: consensus race + training, comms-to-target per arm |
 //!
 //! The beyond-paper drivers stress what the paper's experiments never
 //! exercise: [`scenario`] runs A²CiD² on *time-varying* networks,
 //! [`ablation`] probes the (η, α̃) prescription, and [`sweep`] charts the
 //! dropout × switch-time × churn grid comparing per-phase adaptive
 //! parameters against frozen phase-0 values (maintaining the
-//! machine-readable `BENCH_sweep.json`).
+//! machine-readable `BENCH_sweep.json`). [`compare`] races the whole
+//! algorithm zoo (`adpsgd`, `a2cid2`, `localsgd:H`, `allreduce`) on
+//! shared seeded workloads, one `BENCH_compare.json` row per arm.
 //!
 //! Every registered id is under the paper-conformance contract:
 //! `a2cid2 verify <id|all>` diffs the consolidated record against the
@@ -51,6 +54,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod compare;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

@@ -125,12 +125,19 @@ register!(
     "dropout × switch × churn × adaptive grid",
     artifact = "BENCH_sweep.json"
 );
+register!(
+    Compare,
+    compare,
+    "beyond",
+    "algorithm zoo head-to-head: consensus race + training, comms-to-target per arm",
+    artifact = "BENCH_compare.json"
+);
 
 /// Every registered experiment, in `experiment all` execution order.
 pub fn all() -> &'static [&'static dyn Experiment] {
     static REGISTRY: &[&dyn Experiment] = &[
         &Fig1, &Fig2, &Fig3, &Fig4, &Fig5, &Fig6, &Fig7, &Tab1, &Tab2, &Tab3, &Tab4, &Tab5,
-        &Tab6, &Ablation, &Scaling, &ScenarioExp, &Sweep,
+        &Tab6, &Ablation, &Scaling, &ScenarioExp, &Sweep, &Compare,
     ];
     REGISTRY
 }
@@ -255,7 +262,9 @@ pub fn run_cli(
     outcome
 }
 
-fn known_ids() -> String {
+/// Comma-joined registered ids — error messages and the CLI `--help`
+/// text (regenerated from the registry, never hand-listed) share it.
+pub fn known_ids() -> String {
     all().iter().map(|e| e.id()).collect::<Vec<_>>().join(", ")
 }
 

@@ -25,11 +25,11 @@ use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, Method, Scenario, Task};
 use crate::data::{GaussianMixture, Sharding};
-use crate::metrics::{Record, Recorder, Table};
+use crate::metrics::{Record, Table};
 use crate::model::Logistic;
 use crate::simulator::{run_simulation, SimResult};
 
-use super::common::{GridRunner, Scale};
+use super::common::{comms_at, GridRunner, Scale};
 use super::{Report, Summary};
 
 /// Target loss = this fraction of the first recorded training loss.
@@ -106,6 +106,7 @@ fn base_cfg(scale: Scale) -> ExperimentConfig {
         seed: 11,
         compute_jitter: 0.1,
         scenario: None,
+        algorithm: None,
     }
 }
 
@@ -121,16 +122,6 @@ pub fn scenario_string(drop_frac: f64, switch_at: f64, churn: bool, adaptive: bo
         s.push_str(";adapt=0");
     }
     s
-}
-
-/// Communication count at the first recorded sample at or after time `t`.
-fn comms_at(recorder: &Recorder, t: f64) -> Option<u64> {
-    recorder
-        .get("comms")?
-        .points
-        .iter()
-        .find(|(tt, _)| *tt >= t)
-        .map(|(_, v)| *v as u64)
 }
 
 fn run_point(cfg: &ExperimentConfig, target_loss: f64) -> crate::Result<(SimResult, Option<u64>)> {

@@ -35,6 +35,11 @@ pub struct WorkerState {
     pub n_grads: u64,
     /// Number of communication events applied.
     pub n_comms: u64,
+    /// Value of `n_grads` when the last communication event was applied
+    /// (0 before the first pairing). Update rules that pace communication
+    /// by local progress — local SGD's "H gradient steps between
+    /// pairings" — gate on `n_grads - grads_at_last_comm`.
+    pub grads_at_last_comm: u64,
 }
 
 impl WorkerState {
@@ -43,7 +48,7 @@ impl WorkerState {
     pub fn new(x: Vec<f32>) -> Self {
         let x = AlignedVec::from(x);
         let xt = x.clone();
-        Self { x, xt, t_last: 0.0, n_grads: 0, n_comms: 0 }
+        Self { x, xt, t_last: 0.0, n_grads: 0, n_comms: 0, grads_at_last_comm: 0 }
     }
 
     /// Parameter dimension.
@@ -121,6 +126,7 @@ impl WorkerState {
             &mut self.xt,
         );
         self.n_comms += 1;
+        self.grads_at_last_comm = self.n_grads;
     }
 
     /// The receive-side half of a runtime pairing: fold this worker's own
@@ -155,6 +161,7 @@ impl WorkerState {
             self.t_last = t;
         }
         self.n_comms += 1;
+        self.grads_at_last_comm = self.n_grads;
     }
 }
 
@@ -195,6 +202,8 @@ pub fn comm_event(
     }
     a.n_comms += 1;
     b.n_comms += 1;
+    a.grads_at_last_comm = a.n_grads;
+    b.grads_at_last_comm = b.n_grads;
 }
 
 #[cfg(test)]

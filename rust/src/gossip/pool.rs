@@ -276,10 +276,7 @@ impl ChunkPool {
 /// job runs the same seeded scenario at two widths and diffs the traces
 /// — the fixed chunk boundaries must make the width unobservable.
 pub fn configured_extra_threads() -> usize {
-    let lanes = std::env::var("A2CID2_POOL_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n >= 1);
+    let lanes = crate::config::env::knobs().pool_threads;
     match lanes {
         Some(n) => (n - 1).min(7),
         None => {

@@ -166,7 +166,8 @@ fn simd_backend() -> Option<&'static dyn KernelBackend> {
 }
 
 fn select_backend() -> &'static dyn KernelBackend {
-    let choice = std::env::var("A2CID2_KERNEL_BACKEND").unwrap_or_default();
+    let choice =
+        crate::config::env::knobs().kernel_backend.clone().unwrap_or_default();
     match choice.trim().to_ascii_lowercase().as_str() {
         "" | "auto" => simd_backend().unwrap_or_else(scalar_backend),
         "scalar" => scalar_backend(),

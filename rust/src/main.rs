@@ -1,25 +1,31 @@
 //! `a2cid2` — the launcher.
 //!
 //! ```text
-//! a2cid2 train       [--config cfg.toml] [--workers N] [--topology T] ...
+//! a2cid2 train       [--config cfg.toml] [--workers N] [--algo A] ...
 //! a2cid2 spectrum    --topology ring --workers 64 [--rate 1.0]
 //! a2cid2 experiment  <id|all> [--filter SUBSTR] [--json PATH]
 //! a2cid2 verify      [id|all] [--filter SUBSTR] [--json PATH] [--experiments-json PATH]
+//! a2cid2 compare     [--json PATH]            # algorithm zoo head-to-head
 //! a2cid2 timeline    [--workers 8] [--rounds 20]
 //! a2cid2 replay      [--scenario S] [--dim D] [--out trace.csv]   # determinism probe
 //! ```
 //!
-//! Experiments resolve through the registry
-//! (`a2cid2::experiments::registry`): `experiment all` runs every
-//! registered id, `--filter` narrows by substring, and `--json` writes
-//! the consolidated per-experiment artifact (`BENCH_experiments.json`).
-//! `verify` runs the same experiments and diffs every headline metric
-//! against the checked-in oracle (`rust/oracle/paper.toml`), writing
-//! `BENCH_conformance.json` and failing on any out-of-tolerance row
-//! (README §Verify).
+//! Every subcommand shares ONE option namespace declared once in
+//! [`cli`]; per-subcommand [`a2cid2::cli::SubSpec`]s scope which shared
+//! options apply, and the usage text (including the experiment id lists)
+//! is generated from the experiment registry. Experiments resolve
+//! through that registry (`a2cid2::experiments::registry`): `experiment
+//! all` runs every registered id, `--filter` narrows by substring, and
+//! `--json` writes the consolidated per-experiment artifact
+//! (`BENCH_experiments.json`). `verify` runs the same experiments and
+//! diffs every headline metric against the checked-in oracle
+//! (`rust/oracle/paper.toml`), writing `BENCH_conformance.json` and
+//! failing on any out-of-tolerance row (README §Verify). `compare` is a
+//! shortcut for `experiment compare` — the update-rule zoo
+//! (a2cid2/adpsgd/localsgd/allreduce) head-to-head.
 
 use a2cid2::cli::Cli;
-use a2cid2::config::{ExperimentConfig, Method, Scenario, Task};
+use a2cid2::config::{Algorithm, ExperimentConfig, Method, Scenario, Task};
 use a2cid2::experiments::{registry, Scale};
 use a2cid2::graph::{Graph, Topology};
 use a2cid2::metrics::Table;
@@ -47,6 +53,11 @@ fn cli() -> Cli {
             None,
         )
         .opt("method", "allreduce|baseline|a2cid2", Some("a2cid2"))
+        .opt(
+            "algo",
+            "a2cid2|adpsgd|localsgd:H|allreduce — per-event update rule (supersedes --method)",
+            None,
+        )
         .opt("task", "cifar-like|imagenet-like", Some("cifar-like"))
         .opt("rate", "p2p communications per gradient step", Some("1.0"))
         .opt("steps", "gradient steps per worker", Some("500"))
@@ -69,18 +80,66 @@ fn cli() -> Cli {
             None,
         )
         .flag("full", "run experiments at paper scale (same as A2CID2_BENCH_FULL=1)")
+        .sub(
+            "train",
+            "run one configuration end to end and print the headline metrics",
+            &[
+                "config", "workers", "topology", "scenario", "method", "algo", "task", "rate",
+                "steps", "lr", "seed", "out",
+            ],
+            &["full"],
+        )
+        .sub(
+            "spectrum",
+            "print a topology's gossip spectrum and the derived (eta, alpha~)",
+            &["workers", "topology", "rate"],
+            &["full"],
+        )
+        .sub(
+            "experiment",
+            format!("run registered experiments by id ({}, all)", registry::known_ids()),
+            &["filter", "json"],
+            &["full"],
+        )
+        .sub(
+            "verify",
+            format!(
+                "run experiments and diff them against the paper oracle ({}, all)",
+                registry::known_ids()
+            ),
+            &["filter", "json", "experiments-json"],
+            &["full"],
+        )
+        .sub(
+            "compare",
+            "algorithm zoo head-to-head (shortcut for `experiment compare`)",
+            &["json"],
+            &["full"],
+        )
+        .sub(
+            "replay",
+            "determinism probe: seeded scenario run + FNV checksum of the averaged parameters",
+            &[
+                "config", "workers", "topology", "scenario", "method", "algo", "task", "rate",
+                "steps", "lr", "seed", "dim", "out",
+            ],
+            &["full"],
+        )
+        .sub(
+            "timeline",
+            "ASCII sync-vs-async worker utilization timelines",
+            &["workers", "rounds"],
+            &["full"],
+        )
 }
 
 fn real_main() -> a2cid2::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = cli();
     if argv.is_empty() {
+        // usage() ends with the per-subcommand surfaces (generated from
+        // the SubSpecs, ids from the registry) — nothing to hand-list.
         println!("{}", spec.usage());
-        println!(
-            "Subcommands: train | spectrum | \
-             experiment <id|all> [--filter SUBSTR] [--json PATH] | \
-             verify [id|all] [--filter SUBSTR] [--json PATH] | timeline | replay"
-        );
         return Ok(());
     }
     let args = spec.parse(&argv)?;
@@ -181,6 +240,11 @@ fn real_main() -> a2cid2::Result<()> {
                 scale,
             )?;
         }
+        Some("compare") => {
+            // The algorithm zoo head-to-head is a registered experiment;
+            // this subcommand is sugar for `experiment compare`.
+            registry::run_cli("compare", None, args.get("json").map(std::path::Path::new), scale)?;
+        }
         Some("replay") => {
             // Determinism probe: run a seeded scenario on a synthetic
             // Logistic model whose dimension is a CLI knob, so CI can
@@ -264,6 +328,9 @@ fn build_config(args: &a2cid2::cli::Args) -> a2cid2::Result<ExperimentConfig> {
     cfg.seed = args.get_parse("seed")?;
     if let Some(s) = args.get("scenario") {
         cfg.scenario = Some(Scenario::parse(s)?);
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algorithm = Some(Algorithm::parse(a)?);
     }
     cfg.validate()
 }

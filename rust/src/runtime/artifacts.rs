@@ -156,7 +156,7 @@ pub fn write_atomic(path: &Path, contents: &[u8]) -> crate::Result<()> {
 /// Locate the artifact directory: `$A2CID2_ARTIFACTS` or `./artifacts`
 /// relative to the crate root / current dir.
 pub fn default_artifact_dir() -> PathBuf {
-    if let Ok(dir) = std::env::var("A2CID2_ARTIFACTS") {
+    if let Some(dir) = &crate::config::env::knobs().artifacts_dir {
         return PathBuf::from(dir);
     }
     for base in [".", env!("CARGO_MANIFEST_DIR")] {

@@ -51,8 +51,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::scenario::NetUpdate;
-use crate::config::{Method, NetworkPlan, Scenario};
-use crate::engine::{BatchSampler, DynamicsCore, LossEma, Scheduler, WallClock};
+use crate::config::{Algorithm, Method, NetworkPlan, Scenario};
+use crate::engine::{BatchSampler, DynamicsCore, LossEma, Scheduler, UpdateRule, WallClock};
 use crate::gossip::dynamics::WorkerState;
 use crate::gossip::AcidParams;
 use crate::graph::Graph;
@@ -216,7 +216,17 @@ pub fn run_async(
 ) -> crate::Result<RuntimeResult> {
     let n = graph.n;
     anyhow::ensure!(grad_sources.len() == n, "need one grad source per worker");
-    anyhow::ensure!(opts.method != Method::AllReduce, "run_async is for async methods");
+    // The update rule: a scenario's `algo=` key wins, else the legacy
+    // method maps onto its algorithm (Acid → a2cid2, baseline → adpsgd).
+    let algo = opts
+        .scenario
+        .as_ref()
+        .and_then(|s| s.algo)
+        .unwrap_or(Algorithm::from_method(opts.method));
+    anyhow::ensure!(
+        algo != Algorithm::AllReduce,
+        "run_async is for the asynchronous algorithms"
+    );
     for s in &grad_sources {
         anyhow::ensure!(s.dim() == init.len(), "grad source dim mismatch");
     }
@@ -228,7 +238,7 @@ pub fn run_async(
         Some(sc) => sc.compile(n, opts.comm_rate, opts.steps_per_worker as f64, &vec![1.0; n])?,
         None => NetworkPlan::static_plan((*graph).clone(), opts.comm_rate, &vec![1.0; n]),
     };
-    let core = Arc::new(DynamicsCore::for_method(opts.method, &plan.spectrum, opts.lr.clone())?);
+    let core = Arc::new(DynamicsCore::for_algorithm(algo, &plan.spectrum, opts.lr.clone())?);
     let wall = Arc::new(WallClock::new(&plan));
     // Seed the published (η, α, α̃) with the phase-0 values; worker
     // threads track this cell so adaptive retunes reach them mid-run.
@@ -651,6 +661,20 @@ fn comm_loop(
             std::thread::sleep(Duration::from_micros(200));
             continue;
         }
+        // Pacing rules (local SGD): an endpoint that has not taken H
+        // local steps since its last applied pairing does not announce
+        // availability. The skipped opportunity still consumes one
+        // budget unit — the budget models the shared Poisson clocks, and
+        // a skipped proposal is still a spent clock tick — so the run
+        // drains on the same schedule as an always-admitting rule.
+        let ready = {
+            let st = cell.state.lock().unwrap();
+            core.rule.admits_endpoint(&st)
+        };
+        if !ready {
+            cell.comm_budget.fetch_sub(1, Ordering::Release);
+            continue;
+        }
         let peer = match wait_for_partner(w, coord) {
             Pairing::Partner(p) => p,
             Pairing::Retry => {
@@ -794,6 +818,45 @@ mod tests {
         let grads: u64 = res.grads_per_worker.iter().sum();
         let ratio = total as f64 / grads as f64;
         assert!((0.4..1.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn localsgd_scenario_paces_runtime_comms() {
+        // The `algo=localsgd:4` scenario key must reach the runtime's
+        // comm loop: at most one applied pairing per 4 local steps per
+        // endpoint, and the run still terminates.
+        let n = 4;
+        let steps = 100u64;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 3));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::AsyncBaseline,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: steps,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: Some(Scenario::parse("ring@0;algo=localsgd:4").unwrap()),
+        };
+        let srcs = paced_sources(n, &model, &shards, Duration::from_micros(300));
+        let res = run_async(graph, srcs, init, opts).unwrap();
+        assert_eq!(res.grads_per_worker, vec![steps; n]);
+        let total: u64 = res.comms_per_worker.iter().sum();
+        assert!(total > 0, "some pairings must still apply");
+        for (w, &c) in res.comms_per_worker.iter().enumerate() {
+            assert!(
+                c <= res.grads_per_worker[w] / 4 + 1,
+                "worker {w}: {c} comms for {} grads breaks the H = 4 gate",
+                res.grads_per_worker[w]
+            );
+        }
+        assert!(!res.acid.is_accelerated(), "local SGD averages with η = 0");
     }
 
     #[test]

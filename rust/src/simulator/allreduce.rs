@@ -169,6 +169,7 @@ mod tests {
             seed: 4,
             compute_jitter: 0.2,
             scenario: None,
+            algorithm: None,
         }
     }
 

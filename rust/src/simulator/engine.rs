@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{ExperimentConfig, Method, NetworkPlan};
+use crate::config::{Algorithm, ExperimentConfig, NetworkPlan};
 use crate::data::ShardedIndices;
 use crate::engine::{BatchSampler, DynamicsCore, LossEma, Tick, VirtualTimeScheduler};
 use crate::gossip::consensus_distance;
@@ -62,8 +62,9 @@ impl SimResult {
 
 /// Run the asynchronous decentralized dynamic of Eq. 4 in virtual time.
 ///
-/// * `cfg.method` picks baseline (η = 0) vs A²CiD² (Prop. 3.6 parameters);
-///   [`Method::AllReduce`] is rejected — use [`super::run_allreduce`].
+/// * `cfg.algo()` picks the update rule — A²CiD² (Prop. 3.6 parameters),
+///   AD-PSGD averaging (η = 0), or paced local SGD;
+///   [`Algorithm::AllReduce`] is rejected — use [`super::run_allreduce`].
 /// * `cfg.scenario` (if set) supersedes `cfg.topology` with a compiled
 ///   time-varying network plan, replayed deterministically under the seed.
 /// * Terminates when the total number of gradient events reaches
@@ -74,9 +75,10 @@ pub fn run_simulation(
     model: Arc<dyn Model>,
     shards: &ShardedIndices,
 ) -> crate::Result<SimResult> {
+    let algo = cfg.algo();
     anyhow::ensure!(
-        cfg.method != Method::AllReduce,
-        "run_simulation is for the asynchronous methods; use run_allreduce"
+        algo != Algorithm::AllReduce,
+        "run_simulation is for the asynchronous algorithms; use run_allreduce"
     );
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     // Straggler model: per-worker compute speed ~ N(1, jitter), floored.
@@ -103,7 +105,7 @@ pub fn run_simulation(
     let spectrum = plan.spectrum;
     let schedule =
         LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
-    let mut core = DynamicsCore::for_method(cfg.method, &spectrum, schedule)?;
+    let mut core = DynamicsCore::for_algorithm(algo, &spectrum, schedule)?;
     // Adaptive (η, α̃): scenario updates that change the phase or the
     // worker set carry the active subgraph's (χ₁, χ₂) unless the
     // scenario was compiled with `adapt=0`.
@@ -126,6 +128,10 @@ pub fn run_simulation(
     let mut grad = vec![0.0f32; model.dim()];
     let mut loss_ema = f64::NAN;
     let mut grads_done = 0u64;
+    // Communication events actually APPLIED (pacing rules like local SGD
+    // skip proposed pairings; for always-admitting rules this equals the
+    // scheduler's proposal count, keeping the series bit-identical).
+    let mut applied_comms = 0u64;
     // Record ~500 points per series regardless of run length.
     let record_every = (total_grads / 500).max(1);
 
@@ -173,7 +179,7 @@ pub fn run_simulation(
                     // Communication cost so far, aligned with the loss
                     // samples — the sweep reads "comm events to target
                     // loss" off these two series.
-                    recorder.record("comms", t, sched.n_comm_events() as f64);
+                    recorder.record("comms", t, applied_comms as f64);
                 }
                 if grads_done % (record_every * 10) == 0 {
                     recorder.record("consensus", t, consensus_distance(&workers));
@@ -181,7 +187,9 @@ pub fn run_simulation(
             }
             Tick::Comm { i, j, t } => {
                 let (a, b) = two_mut(&mut workers, i, j);
-                core.comm_event(a, b, t);
+                if core.comm_event(a, b, t) {
+                    applied_comms += 1;
+                }
             }
         }
     }
@@ -200,7 +208,7 @@ pub fn run_simulation(
         spectrum,
         acid: core.acid,
         n_grads: sched.n_grad_events(),
-        n_comms: sched.n_comm_events(),
+        n_comms: applied_comms,
         net_updates: crate::engine::Scheduler::updates_applied(&sched),
         t_end,
         grads_per_worker,
@@ -211,7 +219,7 @@ pub fn run_simulation(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Scenario, Task};
+    use crate::config::{Method, Scenario, Task};
     use crate::data::{GaussianMixture, Sharding};
     use crate::graph::Topology;
     use crate::model::Logistic;
@@ -233,6 +241,7 @@ mod tests {
             seed: 1,
             compute_jitter: 0.1,
             scenario: None,
+            algorithm: None,
         }
     }
 
@@ -338,6 +347,27 @@ mod tests {
         let max = *res.grads_per_worker.iter().max().unwrap();
         // Asynchrony: slow workers do fewer steps (Tab. 6's #∇ spread).
         assert!(max > min, "expected straggler spread, got uniform {min}");
+    }
+
+    #[test]
+    fn localsgd_algorithm_paces_communication() {
+        // Same seed ⇒ same proposed event stream; the H = 4 gate must
+        // skip a visible fraction of the pairings while the gradient
+        // budget stays identical.
+        let cfg = small_cfg(Method::AsyncBaseline);
+        let (base, _) = run_cfg(&cfg);
+        let mut paced_cfg = cfg.clone();
+        paced_cfg.algorithm = Some(Algorithm::LocalSgd { h: 4 });
+        let (paced, _) = run_cfg(&paced_cfg);
+        assert!(
+            paced.n_comms < base.n_comms,
+            "gate must skip pairings: {} vs {}",
+            paced.n_comms,
+            base.n_comms
+        );
+        assert!(paced.n_comms > 0, "but not all of them");
+        assert_eq!(paced.grads_per_worker.iter().sum::<u64>(), 600);
+        assert!(!paced.acid.is_accelerated(), "local SGD averages with η = 0");
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub fn check_or_bless(path: &Path, key: &str, observed: &str) -> crate::Result<G
             path.display()
         )
     })?;
-    let force = std::env::var("A2CID2_BLESS").map(|v| v == "1").unwrap_or(false);
+    let force = crate::config::env::knobs().bless;
     if current == "pending" || force {
         let updated = rewrite(&text, key, observed)?;
         write_atomic(path, updated.as_bytes())?;

@@ -13,11 +13,14 @@
 //! consolidated rows that `BENCH_experiments.json` archives).
 //!
 //! A metric names a field of the consolidated per-experiment record
-//! (`final_loss`, `final_consensus`, `accuracy`, `n_rows`, `wall_ms`) or
+//! (`final_loss`, `final_consensus`, `accuracy`, `n_rows`, `wall_ms`),
 //! a dotted path into its nested row set (`rows.2.chi1` — index, then
-//! field). A check passes iff the observed value is finite and
-//! `|observed − expected| ≤ abs + rel·|expected|`; no tolerance keys
-//! means an exact match. Verdicts render to `BENCH_conformance.json`
+//! field), or a cross-metric RATIO `"<path> / <path>"` — both sides
+//! resolve through [`extract`] and the observed value is their quotient,
+//! so claims like "A²CiD²'s comms-to-target is at most half of
+//! AD-PSGD's" are one checked-in row. A check passes iff the observed
+//! value is finite and `|observed − expected| ≤ abs + rel·|expected|`;
+//! no tolerance keys means an exact match. Verdicts render to `BENCH_conformance.json`
 //! (one row per compared metric) via the same serde-free [`Record`]
 //! writer as every other artifact.
 
@@ -112,7 +115,7 @@ impl Check {
 
     /// Judge this check against a consolidated experiment record.
     pub fn judge(&self, rec: &Record) -> Verdict {
-        let observed = extract(rec, &self.metric);
+        let observed = extract_metric(rec, &self.metric);
         let pass = matches!(observed, Some(o)
             if o.is_finite() && (o - self.expected).abs() <= self.allowed());
         Verdict {
@@ -204,6 +207,16 @@ pub fn extract(rec: &Record, path: &str) -> Option<f64> {
     match cur {
         Cursor::Val(v) => v.as_f64(),
         Cursor::Rec(_) => None, // path ended on a row, not a metric
+    }
+}
+
+/// [`extract`] extended with the ratio form: a metric containing
+/// `" / "` resolves both paths and observes their quotient (a zero
+/// denominator yields a non-finite value, which every check rejects).
+pub fn extract_metric(rec: &Record, metric: &str) -> Option<f64> {
+    match metric.split_once(" / ") {
+        Some((num, den)) => Some(extract(rec, num.trim())? / extract(rec, den.trim())?),
+        None => extract(rec, metric),
     }
 }
 
@@ -498,6 +511,34 @@ scales = "full"
         assert_eq!(extract(&r, "rows.chi1"), None, "rows need an index first");
         assert_eq!(extract(&r, "nope"), None);
         assert_eq!(extract(&r, "id.0"), None, "cannot path into a scalar");
+    }
+
+    #[test]
+    fn extract_metric_resolves_ratios() {
+        let r = rec();
+        // 13.16 / 0.94 = 14.0
+        let ratio = extract_metric(&r, "rows.1.chi1 / rows.0.chi1").unwrap();
+        assert!((ratio - 14.0).abs() < 1e-9, "{ratio}");
+        // Plain paths still resolve through the same entry point.
+        assert_eq!(extract_metric(&r, "final_loss"), Some(1.6));
+        // A missing side resolves to None, not a panic or a bogus value.
+        assert_eq!(extract_metric(&r, "rows.1.chi1 / nope"), None);
+        assert_eq!(extract_metric(&r, "nope / rows.1.chi1"), None);
+        // Zero denominator: non-finite, so a judge would fail, not pass.
+        let z = Record::new().f64("a", 1.0).f64("b", 0.0);
+        assert!(!extract_metric(&z, "a / b").unwrap().is_finite());
+    }
+
+    #[test]
+    fn ratio_checks_parse_and_judge() {
+        let o = Oracle::parse(
+            "[fig9.rows.1.chi1 / rows.0.chi1]\nexpected = 14.0\nabs = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(o.checks[0].metric, "rows.1.chi1 / rows.0.chi1");
+        let v = &o.judge("fig9", &rec(), Scale::Quick)[0];
+        assert_eq!(v.outcome, Outcome::Pass, "{}", v.message());
+        assert!((v.observed.unwrap() - 14.0).abs() < 1e-9);
     }
 
     #[test]

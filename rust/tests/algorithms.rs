@@ -1,0 +1,275 @@
+//! Integration: the algorithm zoo under the shared `DynamicsCore`.
+//!
+//! The zoo's contract is *one seeded event stream, many update rules*:
+//! rules may SKIP a proposed pairing (local SGD's pacing gate) but never
+//! reschedule one, so every algorithm replays the identical tick
+//! sequence for a given seed, and both engine code paths — the
+//! simulator's fused two-endpoint pass and the runtime's
+//! mix_into/comm_apply pairing (gated the same way the worker loop
+//! gates availability) — agree at event granularity under every rule.
+//! On top of the replay contract: AD-PSGD's pairwise averaging
+//! conserves the pair mean end to end, selecting `algorithm = a2cid2`
+//! explicitly is bit-identical to the pre-zoo default (the golden
+//! replay checksums cannot move), and every arm of the zoo is
+//! seed-deterministic through the config surface.
+
+use std::sync::Arc;
+
+use a2cid2::config::{Algorithm, ExperimentConfig, Method, Task};
+use a2cid2::data::{GaussianMixture, Sharding};
+use a2cid2::engine::{DynamicsCore, UpdateRule};
+use a2cid2::gossip::{consensus_distance, WorkerState};
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::model::Logistic;
+use a2cid2::optim::{LrSchedule, Sgd};
+use a2cid2::simulator::{
+    run_allreduce, run_simulation, ArTimingConfig, EventKind, EventQueue,
+};
+use a2cid2::util::two_mut;
+
+/// The asynchronous arms (all-reduce has no event stream to replay).
+fn async_arms() -> Vec<Algorithm> {
+    vec![Algorithm::AdPsgd, Algorithm::A2cid2, Algorithm::LocalSgd { h: 4 }]
+}
+
+/// Deterministic pseudo-gradient keyed by (worker, step) so replicas
+/// consume identical gradients without a dataset.
+fn grad_of(w: usize, k: u64, dim: usize) -> Vec<f32> {
+    (0..dim).map(|i| ((w * 31 + i) as f32 * 0.11 + k as f32 * 0.01).cos()).collect()
+}
+
+/// Replay one seeded ring-8 event stream under `algo` through BOTH
+/// engine code paths side by side. Returns the tick trace
+/// `(t, kind-tag, index)` and the number of APPLIED pairings.
+fn replay_both_paths(algo: Algorithm) -> (Vec<(f64, u8, usize)>, u64, u64) {
+    let (n, dim) = (8, 16);
+    let graph = Graph::build(&Topology::Ring, n).unwrap();
+    let rates = graph.edge_rates(1.0);
+    let spectrum = graph.spectrum_with_rates(&rates);
+    let lr = LrSchedule::Constant { lr: 0.05 };
+    let core = DynamicsCore::for_algorithm(algo, &spectrum, lr).unwrap();
+
+    let init: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut sim: Vec<WorkerState> = (0..n).map(|_| WorkerState::new(init.clone())).collect();
+    let mut rt: Vec<WorkerState> = (0..n).map(|_| WorkerState::new(init.clone())).collect();
+    let mut opt_sim: Vec<Sgd> = (0..n).map(|_| Sgd::new(0.0)).collect();
+    let mut opt_rt: Vec<Sgd> = (0..n).map(|_| Sgd::new(0.0)).collect();
+    let mut buf_a = vec![0.0f32; dim];
+    let mut buf_b = vec![0.0f32; dim];
+
+    let mut queue = EventQueue::new(&vec![1.0; n], &rates, 42);
+    let mut trace = Vec::new();
+    let mut proposed = 0u64;
+    let mut applied = 0u64;
+    for _ in 0..2000 {
+        let ev = queue.next(f64::INFINITY).expect("events keep flowing");
+        match ev.kind {
+            EventKind::Grad { worker } => {
+                trace.push((ev.t, 0u8, worker));
+                let g = grad_of(worker, sim[worker].n_grads, dim);
+                core.grad_event(&mut sim[worker], ev.t, &mut opt_sim[worker], &g);
+                core.grad_event(&mut rt[worker], ev.t, &mut opt_rt[worker], &g);
+            }
+            EventKind::Comm { edge } => {
+                trace.push((ev.t, 1u8, edge));
+                proposed += 1;
+                let (i, j) = graph.edges[edge];
+                // Simulator: both endpoints fused in one pass; the rule
+                // gates inside comm_event.
+                let sim_applied = {
+                    let (a, b) = two_mut(&mut sim, i, j);
+                    core.comm_event(a, b, ev.t)
+                };
+                // Runtime: the worker loop asks the rule for readiness
+                // before announcing availability, then does read-only
+                // sends + one locked RMW per endpoint.
+                let rt_applied = core.rule.admits_pair(&rt[i], &rt[j]);
+                if rt_applied {
+                    core.mix_into(&rt[i], ev.t, &mut buf_a);
+                    core.mix_into(&rt[j], ev.t, &mut buf_b);
+                    core.comm_apply(&mut rt[i], ev.t, &buf_b);
+                    core.comm_apply(&mut rt[j], ev.t, &buf_a);
+                }
+                assert_eq!(
+                    sim_applied, rt_applied,
+                    "{algo}: the engines disagreed on whether a pairing applies"
+                );
+                if sim_applied {
+                    applied += 1;
+                }
+            }
+        }
+    }
+    // Event-granularity agreement between the two engine paths.
+    let (ca, cb) = (consensus_distance(&sim), consensus_distance(&rt));
+    assert!(
+        (ca - cb).abs() <= 1e-4 * (1.0 + ca.abs()),
+        "{algo}: consensus diverged between engine paths: {ca} vs {cb}"
+    );
+    for w in 0..n {
+        for (u, v) in sim[w].x.iter().zip(rt[w].x.iter()) {
+            assert!(
+                (u - v).abs() <= 1e-4 * (1.0 + u.abs()),
+                "{algo}: worker {w} diverged between engine paths: {u} vs {v}"
+            );
+        }
+        assert_eq!(sim[w].n_comms, rt[w].n_comms, "{algo}: applied-comm counters");
+        assert_eq!(sim[w].n_grads, rt[w].n_grads, "{algo}: gradient counters");
+    }
+    (trace, proposed, applied)
+}
+
+#[test]
+fn every_algorithm_replays_the_same_tick_stream_through_both_engines() {
+    let runs: Vec<_> = async_arms().into_iter().map(replay_both_paths).collect();
+    // Rules skip, they never reschedule: the (time, kind, index) trace
+    // is identical across every algorithm for the same seed.
+    let (reference, proposed, adpsgd_applied) = (&runs[0].0, runs[0].1, runs[0].2);
+    assert!(proposed > 100, "pairings actually proposed: {proposed}");
+    for (trace, p, _) in &runs {
+        assert_eq!(trace, reference, "the seeded tick stream is algorithm-independent");
+        assert_eq!(*p, proposed);
+    }
+    // Always-admitting rules apply every proposal; the local-SGD gate
+    // genuinely skips some (its pacing is the whole point) yet still
+    // communicates.
+    assert_eq!(adpsgd_applied, proposed, "adpsgd applies every proposal");
+    assert_eq!(runs[1].2, proposed, "a2cid2 applies every proposal");
+    let localsgd_applied = runs[2].2;
+    assert!(
+        localsgd_applied > 0 && localsgd_applied < proposed,
+        "localsgd:4 skips some proposals but not all: {localsgd_applied}/{proposed}"
+    );
+}
+
+#[test]
+fn adpsgd_conserves_the_pair_mean_end_to_end() {
+    let (n, dim) = (8, 16);
+    let graph = Graph::build(&Topology::Ring, n).unwrap();
+    let rates = graph.edge_rates(1.0);
+    let spectrum = graph.spectrum_with_rates(&rates);
+    let core = DynamicsCore::for_algorithm(
+        Algorithm::AdPsgd,
+        &spectrum,
+        LrSchedule::Constant { lr: 0.0 },
+    )
+    .unwrap();
+    let mut rng = a2cid2::rng::Xoshiro256::seed_from_u64(3);
+    let mut workers: Vec<WorkerState> = (0..n)
+        .map(|_| {
+            WorkerState::new(
+                (0..dim).map(|_| a2cid2::rng::standard_normal(&mut rng) as f32).collect(),
+            )
+        })
+        .collect();
+    let fleet_mean = |ws: &[WorkerState]| -> Vec<f64> {
+        let mut m = vec![0.0f64; dim];
+        for w in ws {
+            for (mi, xi) in m.iter_mut().zip(w.x.iter()) {
+                *mi += f64::from(*xi) / n as f64;
+            }
+        }
+        m
+    };
+    let m0 = fleet_mean(&workers);
+    let mut queue = EventQueue::new(&vec![1e-12; n], &rates, 9);
+    for _ in 0..500 {
+        let ev = queue.next(f64::INFINITY).unwrap();
+        if let EventKind::Comm { edge } = ev.kind {
+            let (i, j) = graph.edges[edge];
+            let before: Vec<f64> = workers[i]
+                .x
+                .iter()
+                .zip(workers[j].x.iter())
+                .map(|(a, b)| f64::from(*a) + f64::from(*b))
+                .collect();
+            let (a, b) = two_mut(&mut workers, i, j);
+            assert!(core.comm_event(a, b, ev.t), "adpsgd admits every pairing");
+            for (k, s) in before.iter().enumerate() {
+                let after = f64::from(workers[i].x[k]) + f64::from(workers[j].x[k]);
+                assert!(
+                    (after - s).abs() <= 1e-4 * (1.0 + s.abs()),
+                    "pair sum moved at coord {k}: {s} -> {after}"
+                );
+            }
+        }
+    }
+    // Conservation composes: the fleet mean is where it started, and the
+    // gradient-free dynamic has genuinely contracted toward it.
+    let m1 = fleet_mean(&workers);
+    for (a, b) in m0.iter().zip(&m1) {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()), "fleet mean drifted: {a} vs {b}");
+    }
+    assert!(consensus_distance(&workers) < 1.0, "plain averaging still contracts");
+}
+
+fn zoo_cfg(algo: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        n_workers: 8,
+        topology: Topology::Ring,
+        method: Method::Acid,
+        task: Task::CifarLike,
+        comm_rate: 1.0,
+        batch_size: 8,
+        base_lr: 0.02,
+        momentum: 0.0,
+        weight_decay: 0.0,
+        steps_per_worker: 60,
+        sharding: Sharding::FullShuffled,
+        dataset_size: 256,
+        seed: 11,
+        compute_jitter: 0.1,
+        scenario: None,
+        algorithm: Some(algo),
+    }
+    .validate()
+    .unwrap()
+}
+
+#[test]
+fn explicit_a2cid2_selection_is_bit_identical_to_the_default() {
+    // `algorithm = a2cid2` must take the exact code path the pre-zoo
+    // engine took (the golden replay checksums pin the same property at
+    // the artifact level).
+    let explicit = zoo_cfg(Algorithm::A2cid2);
+    let mut implicit = explicit.clone();
+    implicit.algorithm = None;
+    let ds = Arc::new(GaussianMixture::cifar_like().sample(explicit.dataset_size, 5));
+    let shards = explicit.sharding.assign(&ds, explicit.n_workers, explicit.seed);
+    let model = Arc::new(Logistic::new(ds, 0.0));
+    let a = run_simulation(&explicit, model.clone(), &shards).unwrap();
+    let b = run_simulation(&implicit, model, &shards).unwrap();
+    assert_eq!(a.avg_params, b.avg_params, "explicit selection changed the dynamics");
+    assert_eq!(a.n_comms, b.n_comms);
+    assert_eq!(a.n_grads, b.n_grads);
+    assert_eq!(a.acid, b.acid);
+}
+
+#[test]
+fn every_zoo_arm_is_seed_deterministic_through_the_config_surface() {
+    let ds = Arc::new(GaussianMixture::cifar_like().sample(256, 5));
+    for algo in [
+        Algorithm::AdPsgd,
+        Algorithm::A2cid2,
+        Algorithm::LocalSgd { h: 4 },
+        Algorithm::AllReduce,
+    ] {
+        let cfg = zoo_cfg(algo);
+        let shards = cfg.sharding.assign(&ds, cfg.n_workers, cfg.seed);
+        let model = Arc::new(Logistic::new(ds.clone(), 0.0));
+        if algo == Algorithm::AllReduce {
+            let t = ArTimingConfig::default();
+            let a = run_allreduce(&cfg, model.clone(), &shards, &t).unwrap();
+            let b = run_allreduce(&cfg, model, &shards, &t).unwrap();
+            assert_eq!(a.params, b.params, "allreduce replay is bit-identical");
+            assert!(a.final_loss().is_finite());
+            continue;
+        }
+        let a = run_simulation(&cfg, model.clone(), &shards).unwrap();
+        let b = run_simulation(&cfg, model, &shards).unwrap();
+        assert_eq!(a.avg_params, b.avg_params, "{algo}: replay is bit-identical");
+        assert_eq!(a.n_comms, b.n_comms, "{algo}");
+        assert!(a.final_loss().is_finite(), "{algo}: training stays live");
+        assert_eq!(a.acid, b.acid, "{algo}");
+    }
+}

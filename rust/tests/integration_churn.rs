@@ -160,6 +160,7 @@ fn simulator_churn_scenario_is_seed_deterministic() {
         seed: 11,
         compute_jitter: 0.1,
         scenario: Some(Scenario::parse(CHURN_SCENARIO).unwrap()),
+        algorithm: None,
     };
     let ds = Arc::new(GaussianMixture::cifar_like().sample(cfg.dataset_size, 5));
     let shards = cfg.sharding.assign(&ds, cfg.n_workers, cfg.seed);

@@ -213,6 +213,7 @@ fn simulator_and_runtime_agree_on_convergence() {
         seed: 0,
         compute_jitter: 0.1,
         scenario: None,
+        algorithm: None,
     };
     let sim = a2cid2::simulator::run_simulation(&cfg, model.clone(), &shards).unwrap();
     let sim_acc = model.accuracy(&sim.avg_params, &test).unwrap();

@@ -33,6 +33,7 @@ fn cfg(n: usize, scenario: &str) -> ExperimentConfig {
         seed: 11,
         compute_jitter: 0.1,
         scenario: Some(Scenario::parse(scenario).unwrap()),
+        algorithm: None,
     }
 }
 

@@ -26,6 +26,7 @@ fn cfg(n: usize, topo: Topology, method: Method, steps: u64) -> ExperimentConfig
         seed: 0,
         compute_jitter: 0.1,
         scenario: None,
+        algorithm: None,
     }
 }
 

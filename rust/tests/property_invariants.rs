@@ -151,6 +151,7 @@ fn prop_simulator_deterministic_replay() {
             seed,
             compute_jitter: 0.2,
             scenario: None,
+            algorithm: None,
         };
         let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 1));
         let shards = cfg.sharding.assign(&ds, 4, seed);
