@@ -10,6 +10,9 @@
 //!   * snapshot-read latency: published seqlock cell vs mutex lock+copy;
 //!   * every hot kernel per explicit backend (scalar reference vs
 //!     runtime-dispatched SIMD) against a same-size memcpy roofline;
+//!   * memory locality: pooled kernels on pinned vs unpinned lanes over
+//!     first-touch-placed buffers, a remote-touch counterfactual, and a
+//!     per-NUMA-node memcpy roofline;
 //!   * coordinator matching throughput: pairings/s, rendezvous vs
 //!     batched strategy, at n = 16 / 64 / 256 workers;
 //!   * simulator event throughput (events/s);
@@ -123,6 +126,43 @@ impl Bench {
         self.json.push(format!(
             "{{\"kernel\": \"{kernel}\", \"backend\": \"{backend}\", \"elements\": {elements}, \
              \"kind\": \"kernel\", \"ns_per_iter\": {:.1}, \"gb_per_s\": {gbs:.3}}}",
+            secs * 1e9
+        ));
+    }
+
+    /// One measured kernel on an explicit (possibly pinned) pool:
+    /// labeled `kernel[backend][pinned|unpinned]` in the table; the JSON
+    /// row carries both `backend` and `pinned` fields so the CI perf
+    /// gate tracks the pinned and unpinned trajectories separately.
+    #[allow(clippy::too_many_arguments)]
+    fn locality_row(
+        &mut self,
+        kernel: &str,
+        backend: &str,
+        pinned: bool,
+        elements: usize,
+        secs: f64,
+        bytes: usize,
+        notes: &str,
+    ) {
+        let gbs = gb_per_s(bytes, secs);
+        let time = if secs >= 1e-4 {
+            format!("{:.2} ms", secs * 1e3)
+        } else {
+            format!("{:.2} us", secs * 1e6)
+        };
+        let tag = if pinned { "pinned" } else { "unpinned" };
+        self.table.row(&[
+            format!("{kernel}[{backend}][{tag}]"),
+            elements.to_string(),
+            time,
+            format!("{gbs:.1}"),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"backend\": \"{backend}\", \"pinned\": {pinned}, \
+             \"elements\": {elements}, \"kind\": \"kernel\", \"ns_per_iter\": {:.1}, \
+             \"gb_per_s\": {gbs:.3}}}",
             secs * 1e9
         ));
     }
@@ -437,6 +477,167 @@ fn main() {
             );
         }
         println!("(kernel dispatch latched to backend: {})", vecops::backend_name());
+    }
+
+    // ---- Memory locality: pinned pool lanes + first-touch placement --
+    // Pooled kernels on two same-width pools: one with lanes pinned to
+    // cores (node-major interleave) and buffers first-touched by their
+    // sticky owner lanes, one unpinned with the same buffers placed
+    // wherever the unpinned lanes happened to run. Plus a remote-touch
+    // counterfactual (claim offset rotated so every lane works chunks
+    // another lane first-touched) and a per-node memcpy roofline.
+    // Single-node hosts still produce every row — pinning is then pure
+    // cache affinity and the speedups hover near 1x.
+    {
+        use a2cid2::gossip::pool::{AlignedVec, ChunkPool};
+        use a2cid2::locality;
+
+        let topo = locality::topology();
+        let backend = vecops::backend_name();
+        let l_iters = if smoke {
+            5
+        } else if full {
+            100
+        } else {
+            30
+        };
+        let sizes: &[usize] = if full {
+            &[1 << 20, 1 << 22, 1 << 24]
+        } else {
+            &[1 << 20, 1 << 22]
+        };
+        let top = *sizes.last().unwrap();
+        let extra = 3; // width 4: spans nodes under the interleave, CI-sized
+        let unpinned_pool = ChunkPool::new_with_pinning(extra, false);
+        let pinned_pool = ChunkPool::new_with_pinning(extra, true);
+        let mut cp_marks = [0.0f64; 2]; // comm_pair secs at `top`, [unpinned, pinned]
+        for &nl in sizes {
+            for (p, is_pinned) in [(&unpinned_pool, false), (&pinned_pool, true)] {
+                let mut xa = AlignedVec::zeroed_on(p, nl);
+                let mut ta = AlignedVec::zeroed_on(p, nl);
+                let mut xb = AlignedVec::zeroed_on(p, nl);
+                let mut tb = AlignedVec::zeroed_on(p, nl);
+                xa.as_mut_slice().fill(1.0);
+                ta.as_mut_slice().fill(0.5);
+                xb.as_mut_slice().fill(-1.0);
+                tb.as_mut_slice().fill(0.25);
+                let t_cp = time_it(2, l_iters, || {
+                    pool::comm_pair_fused_on(
+                        p,
+                        0.9,
+                        0.1,
+                        0.8,
+                        0.2,
+                        0.5,
+                        1.5,
+                        xa.as_mut_slice(),
+                        ta.as_mut_slice(),
+                        xb.as_mut_slice(),
+                        tb.as_mut_slice(),
+                    );
+                    std::hint::black_box(xa.as_slice());
+                });
+                bench.locality_row(
+                    "comm_pair_fused",
+                    backend,
+                    is_pinned,
+                    nl,
+                    t_cp,
+                    32 * nl,
+                    "4R + 4W, width-4 pool",
+                );
+                let t_mp = time_it(2, l_iters, || {
+                    pool::mix_pair_on(p, 0.9, 0.1, xa.as_mut_slice(), ta.as_mut_slice());
+                    std::hint::black_box(xa.as_slice());
+                });
+                bench.locality_row(
+                    "mix_pair",
+                    backend,
+                    is_pinned,
+                    nl,
+                    t_mp,
+                    16 * nl,
+                    "2R + 2W, width-4 pool",
+                );
+                if nl == top {
+                    cp_marks[is_pinned as usize] = t_cp;
+                }
+            }
+        }
+        bench.note_row(
+            "locality pinned speedup",
+            top,
+            cp_marks[1],
+            &format!("{:.2}x", cp_marks[0] / cp_marks[1]),
+            cp_marks[0] / cp_marks[1],
+            &format!(
+                "{} NUMA node(s); informational on single-node hosts",
+                topo.n_nodes()
+            ),
+        );
+
+        // Counterfactual: the SAME pinned pool and buffers, claim offset
+        // rotated so every lane starts on chunks another lane
+        // first-touched — the cross-node traffic the sticky assignment
+        // exists to avoid. Distinct kernel name so the CI perf gate
+        // never mistakes this row for the sticky one.
+        {
+            let mut xa = AlignedVec::zeroed_on(&pinned_pool, top);
+            let mut ta = AlignedVec::zeroed_on(&pinned_pool, top);
+            let mut xb = AlignedVec::zeroed_on(&pinned_pool, top);
+            let mut tb = AlignedVec::zeroed_on(&pinned_pool, top);
+            pinned_pool.set_claim_offset(pinned_pool.lanes() / 2);
+            let t = time_it(2, l_iters, || {
+                pool::comm_pair_fused_on(
+                    &pinned_pool,
+                    0.9,
+                    0.1,
+                    0.8,
+                    0.2,
+                    0.5,
+                    1.5,
+                    xa.as_mut_slice(),
+                    ta.as_mut_slice(),
+                    xb.as_mut_slice(),
+                    tb.as_mut_slice(),
+                );
+                std::hint::black_box(xa.as_slice());
+            });
+            pinned_pool.set_claim_offset(0);
+            bench.locality_row(
+                "comm_pair_fused remote-touch",
+                backend,
+                true,
+                top,
+                t,
+                32 * top,
+                "claim offset width/2",
+            );
+        }
+
+        // Per-node memcpy roofline: pin the timing thread to each node's
+        // first core, first-touch the buffers there, copy locally.
+        for (k, node) in topo.nodes.iter().enumerate() {
+            let Some(&cpu) = node.first() else { continue };
+            if !locality::pin_current_thread(cpu) {
+                println!("(skipping node{k} memcpy roofline: pinning unavailable)");
+                break;
+            }
+            let srcn = vec![1.0f32; top];
+            let mut dstn = vec![1.0f32; top];
+            let t = time_it(2, l_iters, || {
+                dstn.copy_from_slice(&srcn);
+                std::hint::black_box(&dstn);
+            });
+            locality::unpin_current_thread();
+            bench.row(
+                &format!("memcpy node{k} (local)"),
+                top,
+                t,
+                8 * top,
+                "1R + 1W, pinned first-touch",
+            );
+        }
     }
 
     // ---- Snapshot-read latency: seqlock cell vs mutex lock+copy ------

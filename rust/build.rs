@@ -1,0 +1,31 @@
+//! Toolchain probe: AVX-512 intrinsics are stable only from Rust 1.89,
+//! and this crate builds on older toolchains too. The `a2cid2_avx512`
+//! cfg gates `gossip::vecops::avx512` so the crate compiles everywhere
+//! and the 512-bit path simply does not exist (runtime selection falls
+//! back to the 256-bit backend) on toolchains that predate it.
+
+use std::process::Command;
+
+fn rustc_version() -> Option<(u64, u64)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc123 2025-07-01)" — second word is the version.
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    // Declared unconditionally so `unexpected_cfgs` (deny-by-default in
+    // CI's clippy run) knows the name even when the cfg is off.
+    println!("cargo:rustc-check-cfg=cfg(a2cid2_avx512)");
+    if let Some((major, minor)) = rustc_version() {
+        if (major, minor) >= (1, 89) {
+            println!("cargo:rustc-cfg=a2cid2_avx512");
+        }
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -16,7 +16,16 @@
 //! | `A2CID2_BENCH_SMOKE` | `1` = keep the perf bench to its smoke subset |
 //! | `A2CID2_BLESS` | `1` = rewrite golden files with the observed values |
 //! | `A2CID2_KERNEL_BACKEND` | `auto`\|`scalar`\|`simd`\|`avx2`\|`neon`\|`avx512` kernel dispatch |
+//! | `A2CID2_MUX_THREADS` | total lanes of the multiplexed engine's private tick pool; falls back to `A2CID2_POOL_THREADS` |
+//! | `A2CID2_NUMA` | `0`\|`1`\|`auto`: owner-lane first-touch placement of large `AlignedVec` buffers |
+//! | `A2CID2_PIN` | `0`\|`1`\|`auto`: pin pool lanes / runtime worker threads to cores |
 //! | `A2CID2_POOL_THREADS` | total pool lanes (`1` = fully serial); sizes the kernel chunk pool AND the experiment grid runner |
+//!
+//! `A2CID2_POOL_THREADS` historically sized BOTH the global kernel pool
+//! and the `MultiplexEngine`'s private tick pool; `A2CID2_MUX_THREADS`
+//! splits the latter out (e.g. a wide kernel pool with a narrow tick
+//! pool on a shared host). Unset, it inherits `A2CID2_POOL_THREADS`, so
+//! existing determinism matrices keep their meaning.
 //!
 //! Tests that must observe a knob's default should `remove_var` BEFORE
 //! the first [`knobs`] call in the process (the cached read makes later
@@ -27,12 +36,15 @@ use std::sync::OnceLock;
 /// Every `A2CID2_*` variable the crate reads, sorted. The exhaustiveness
 /// test below pins this list against [`Knobs`]' fields; grep for these
 /// names to find the (single) consumer of each.
-pub const VARS: [&str; 6] = [
+pub const VARS: [&str; 9] = [
     "A2CID2_ARTIFACTS",
     "A2CID2_BENCH_FULL",
     "A2CID2_BENCH_SMOKE",
     "A2CID2_BLESS",
     "A2CID2_KERNEL_BACKEND",
+    "A2CID2_MUX_THREADS",
+    "A2CID2_NUMA",
+    "A2CID2_PIN",
     "A2CID2_POOL_THREADS",
 ];
 
@@ -50,6 +62,15 @@ pub struct Knobs {
     /// `A2CID2_KERNEL_BACKEND`: raw backend choice (validation happens at
     /// the dispatch site, which knows the accepted names).
     pub kernel_backend: Option<String>,
+    /// `A2CID2_MUX_THREADS`: total multiplexed-engine tick-pool lanes;
+    /// `>= 1` or ignored; falls back to [`pool_threads`](Self::pool_threads).
+    pub mux_threads: Option<usize>,
+    /// `A2CID2_NUMA`: raw first-touch policy (`0|1|auto`, validated in
+    /// [`crate::locality`], which owns the topology it depends on).
+    pub numa: Option<String>,
+    /// `A2CID2_PIN`: raw affinity policy (`0|1|auto`, validated in
+    /// [`crate::locality`]).
+    pub pin: Option<String>,
     /// `A2CID2_POOL_THREADS`: total pool lanes; `>= 1` or ignored.
     pub pool_threads: Option<usize>,
 }
@@ -62,6 +83,12 @@ fn read() -> Knobs {
         bench_smoke: flag("A2CID2_BENCH_SMOKE"),
         bless: flag("A2CID2_BLESS"),
         kernel_backend: std::env::var("A2CID2_KERNEL_BACKEND").ok(),
+        mux_threads: std::env::var("A2CID2_MUX_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1),
+        numa: std::env::var("A2CID2_NUMA").ok(),
+        pin: std::env::var("A2CID2_PIN").ok(),
         pool_threads: std::env::var("A2CID2_POOL_THREADS")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
@@ -95,9 +122,12 @@ mod tests {
             bench_smoke: _,
             bless: _,
             kernel_backend: _,
+            mux_threads: _,
+            numa: _,
+            pin: _,
             pool_threads: _,
         } = Knobs::default();
-        assert_eq!(VARS.len(), 6);
+        assert_eq!(VARS.len(), 9);
     }
 
     #[test]

@@ -5,7 +5,20 @@
 //! the *exact* virtual-time event stream ([`VirtualTimeScheduler`], so
 //! every replay guarantee holds) but executes it cooperatively: M
 //! virtual workers multiplexed over one fixed [`ChunkPool`] whose width
-//! is pinned by the same `A2CID2_POOL_THREADS` knob as the kernel pool.
+//! is pinned by `A2CID2_MUX_THREADS` (falling back to the kernel pool's
+//! `A2CID2_POOL_THREADS`, so one knob can still size both).
+//!
+//! ## Worker→lane affinity
+//!
+//! Within a frame, ticks are bucketed by a stable hash of their primary
+//! worker id onto a preferred pool lane before fan-out, and bucket `l`'s
+//! tick groups carry chunk ids `≡ l (mod width)` — exactly the range
+//! lane `l` drains first under the pool's sticky claiming. A virtual
+//! worker therefore keeps landing on the same lane — and, with
+//! `A2CID2_PIN`, the same core's L2 — frame after frame, while
+//! steal-after-drain keeps lanes with light buckets busy. Ticks commute
+//! within a frame (disjoint worker sets), so the grouping is invisible
+//! to the result bits at any width, pinned or not.
 //!
 //! ## Frames
 //!
@@ -83,10 +96,11 @@ pub struct MultiplexEngine {
 
 impl MultiplexEngine {
     /// Build from a compiled plan; pool width follows
-    /// `A2CID2_POOL_THREADS` (the caller's thread participates, so width
-    /// 1 means zero extra threads — fully serial).
+    /// `A2CID2_MUX_THREADS`, falling back to `A2CID2_POOL_THREADS` (the
+    /// caller's thread participates, so width 1 means zero extra threads
+    /// — fully serial).
     pub fn new(plan: &NetworkPlan, seed: u64) -> Self {
-        Self::with_extra_threads(plan, seed, pool::configured_extra_threads())
+        Self::with_extra_threads(plan, seed, pool::configured_mux_extra_threads())
     }
 
     /// Build with an explicit number of extra pool threads (tests pin
@@ -213,14 +227,65 @@ impl MultiplexEngine {
                 comm(t, a, b);
             }
         };
-        let n_chunks = ticks.len().div_ceil(TICKS_PER_CHUNK);
-        self.pool.run(n_chunks, &|c| {
-            let lo = c * TICKS_PER_CHUNK;
-            let hi = (lo + TICKS_PER_CHUNK).min(ticks.len());
-            for tick in &ticks[lo..hi] {
-                run_tick(tick);
+        let width = self.pool.lanes();
+        if width <= 1 || ticks.len() <= TICKS_PER_CHUNK {
+            // One lane (or one group): contiguous spans, nothing to route.
+            let n_chunks = ticks.len().div_ceil(TICKS_PER_CHUNK);
+            self.pool.run(n_chunks, &|c| {
+                let lo = c * TICKS_PER_CHUNK;
+                let hi = (lo + TICKS_PER_CHUNK).min(ticks.len());
+                for tick in &ticks[lo..hi] {
+                    run_tick(tick);
+                }
+            });
+            return;
+        }
+        // Worker→lane affinity: counting-sort tick indices into per-lane
+        // buckets keyed by the primary worker's preferred lane, then hand
+        // bucket l out as chunk ids ≡ l (mod width) so the pool's sticky
+        // claiming sends each bucket to its lane first. O(frame) and a
+        // few small Vecs per frame — noise next to the ticks themselves.
+        let mut lane_of = Vec::with_capacity(ticks.len());
+        let mut counts = vec![0u32; width];
+        for &tick in ticks {
+            let (a, _) = Self::tick_workers(tick);
+            let lane = Self::preferred_lane(a, width);
+            lane_of.push(lane as u32);
+            counts[lane] += 1;
+        }
+        let mut starts = vec![0u32; width + 1];
+        for l in 0..width {
+            starts[l + 1] = starts[l] + counts[l];
+        }
+        let mut order = vec![0u32; ticks.len()];
+        let mut cursor = starts.clone();
+        for (i, &l) in lane_of.iter().enumerate() {
+            order[cursor[l as usize] as usize] = i as u32;
+            cursor[l as usize] += 1;
+        }
+        let max_groups =
+            counts.iter().map(|&c| (c as usize).div_ceil(TICKS_PER_CHUNK)).max().unwrap_or(0);
+        let (order, starts) = (&order, &starts);
+        self.pool.run(width * max_groups, &|c| {
+            let (lane, group) = (c % width, c / width);
+            let bucket_lo = starts[lane] as usize;
+            let bucket_hi = starts[lane + 1] as usize;
+            let lo = bucket_lo + group * TICKS_PER_CHUNK;
+            if lo >= bucket_hi {
+                return; // this lane's bucket has fewer groups than the max
+            }
+            let hi = (lo + TICKS_PER_CHUNK).min(bucket_hi);
+            for &ti in &order[lo..hi] {
+                run_tick(&ticks[ti as usize]);
             }
         });
+    }
+
+    /// Stable worker→lane hash (Fibonacci multiplicative): uniform over
+    /// lanes, a pure function of the worker id so a worker's ticks land
+    /// on the same lane in every frame of every run.
+    fn preferred_lane(worker: usize, width: usize) -> usize {
+        (((worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) % width as u64) as usize
     }
 }
 
@@ -426,6 +491,57 @@ mod tests {
             let (multi, n_multi) = run_multiplexed(&plan, 11, 2500, 6, extra);
             assert_eq!(n_multi, 2500, "extra={extra}");
             assert_slots_bit_equal(&serial, &multi);
+        }
+    }
+
+    #[test]
+    fn affinity_fanout_runs_every_tick_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        // The counting-sort routing must be a permutation of the frame:
+        // wide frames (> TICKS_PER_CHUNK) at width > 1 take the bucketed
+        // path, and each tick's handler fires exactly once.
+        let plan = plan("exponential@0", 1024, 1e6);
+        let mut eng = MultiplexEngine::with_extra_threads(&plan, 5, 3);
+        let mut slots = init_slots(1024, 2);
+        let mut ran_wide_frame = false;
+        for _ in 0..20 {
+            let Some(frame) = eng.next_frame() else { break };
+            ran_wide_frame |= frame.ticks.len() > TICKS_PER_CHUNK;
+            let hits: Vec<AtomicU32> = (0..frame.ticks.len()).map(|_| AtomicU32::new(0)).collect();
+            let expect: Vec<Tick> = frame.ticks.clone();
+            let hits_ref = &hits;
+            let expect_ref = &expect;
+            let count = |worker: usize, t: f64| {
+                let idx = expect_ref
+                    .iter()
+                    .position(|&tk| match tk {
+                        Tick::Grad { worker: w, t: tt } => w == worker && tt == t,
+                        Tick::Comm { i, t: tt, .. } => i == worker && tt == t,
+                    })
+                    .expect("handler fired for a tick not in the frame");
+                hits_ref[idx].fetch_add(1, Ordering::SeqCst);
+            };
+            eng.execute(
+                &mut slots,
+                &frame.ticks,
+                &|worker, t, _s: &mut Slot| count(worker, t),
+                &|_t, _a: &mut Slot, _b: &mut Slot| {},
+            );
+            // Comm ticks don't carry the worker through the handler, so
+            // count them via the grad path only; every grad tick must
+            // have fired exactly once and nothing else.
+            for (k, tick) in frame.ticks.iter().enumerate() {
+                if matches!(tick, Tick::Grad { .. }) {
+                    assert_eq!(hits[k].load(Ordering::SeqCst), 1, "tick {k}");
+                }
+            }
+        }
+        assert!(ran_wide_frame, "test never exercised the bucketed path");
+        // The hash is a pure function: same worker, same lane, any call.
+        for w in 0..64 {
+            let l = MultiplexEngine::preferred_lane(w, 4);
+            assert!(l < 4);
+            assert_eq!(l, MultiplexEngine::preferred_lane(w, 4));
         }
     }
 

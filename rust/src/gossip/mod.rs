@@ -16,9 +16,10 @@
 //! * [`consensus`] — the consensus distance `‖πx‖_F` tracked in Fig. 5b;
 //! * [`vecops`] — the fused vector kernels backing the hot path (the Rust
 //!   mirror of the L1 Pallas kernel, used when PJRT is not in the loop),
-//!   behind a runtime-dispatched backend layer: a scalar reference and a
-//!   bit-identical explicit-SIMD backend (AVX2/NEON), selected once per
-//!   process via `A2CID2_KERNEL_BACKEND`;
+//!   behind a runtime-dispatched backend layer: a scalar reference and
+//!   bit-identical explicit-SIMD backends (AVX2/NEON, plus AVX-512 where
+//!   the toolchain and CPU allow), selected once per process via
+//!   `A2CID2_KERNEL_BACKEND`;
 //! * [`pool`] — the deterministic chunked kernel pool that shards the
 //!   fused kernels across threads for large `dim` (fixed chunk
 //!   boundaries, so pooled results stay bit-identical to single-thread).

@@ -20,6 +20,20 @@
 //! through an epoch-tagged compare-exchange so a straggler from a
 //! finished job can never claim (or run) a chunk of the next one.
 //!
+//! **Memory locality.** Lanes have stable identities: chunk `i` belongs
+//! to lane `i % width` (the caller is lane 0) and each lane drains its
+//! own range before stealing from the others — claims stay epoch-CAS'd,
+//! so stealing is race-free and, because chunk *boundaries* are fixed,
+//! claim order is provably irrelevant to the result bits. Under the
+//! `A2CID2_PIN` policy ([`crate::locality::pin_lanes`]) worker lanes pin
+//! themselves to distinct cores, spread round-robin across NUMA nodes;
+//! under `A2CID2_NUMA` ([`crate::locality::numa_first_touch`]) large
+//! [`AlignedVec`] buffers are first-touch-zeroed chunk-by-chunk by their
+//! sticky owner lanes, so each page lands on the node of the core that
+//! will stream it on every later kernel call. Both default to `auto`
+//! (engage only on multi-node hosts) and degrade to today's behavior
+//! when off — none of it changes a single arithmetic operation.
+//!
 //! Both engines reach this module through the same call chain —
 //! [`crate::engine::DynamicsCore`] → [`super::dynamics`] → the wrappers
 //! below — so the simulator and the threaded runtime shard identically.
@@ -33,7 +47,7 @@
 //! pool). Kernels must never re-enter the pool from inside a chunk task
 //! (jobs are serialized on one slot).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 use super::vecops;
@@ -76,9 +90,18 @@ struct Shared {
     start: Condvar,
     /// The caller parks here until `remaining` drains.
     done: Condvar,
-    /// `(epoch << 32) | next_chunk`: claims are CAS increments, so a
-    /// claim can only succeed against the epoch it was read for.
-    cursor: AtomicU64,
+    /// One claim cursor per lane: `cursors[l]` holds
+    /// `(epoch << 32) | k`, where lane `l`'s k-th own chunk is chunk
+    /// `l + k·width`. Claims are CAS increments, so a claim can only
+    /// succeed against the epoch it was read for; striding by `width`
+    /// keeps every chunk owned by exactly one cursor, so "claimed
+    /// exactly once" still follows from per-cursor monotonicity.
+    cursors: Vec<AtomicU64>,
+    /// Rotation applied to the claim scan: lane `l` starts draining the
+    /// range of lane `(l + offset) % width`. 0 (the default) is the
+    /// sticky policy; tests and the cross-NUMA counterfactual bench set
+    /// it nonzero to force every lane onto a remote lane's range.
+    claim_offset: AtomicUsize,
     /// Chunks claimed but not yet finished + chunks not yet claimed.
     remaining: AtomicU64,
     /// A chunk task panicked during the current job; the caller
@@ -96,39 +119,51 @@ impl Shared {
     /// re-raise on the calling thread once the job is fully drained —
     /// which also guarantees no worker still touches the caller's
     /// borrowed slices when the panic unwinds its frame.
-    fn work(&self, epoch: u32, n_chunks: u32, task: TaskPtr) {
-        loop {
-            let c = self.cursor.load(Ordering::SeqCst);
-            if (c >> 32) as u32 != epoch {
-                return; // a newer job took the slot; we never claimed
-            }
-            let idx = (c & IDX_MASK) as u32;
-            if idx >= n_chunks {
-                return; // every chunk claimed
-            }
-            if self
-                .cursor
-                .compare_exchange(c, c + 1, Ordering::SeqCst, Ordering::SeqCst)
-                .is_err()
-            {
-                continue;
-            }
-            // SAFETY: the successful same-epoch claim above proves the
-            // owning `run` frame is still parked in its drain loop (it
-            // cannot return while this claimed chunk's `remaining`
-            // decrement is outstanding), so the pointee is alive.
-            let task: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
-            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                task(idx as usize)
-            }));
-            if ok.is_err() {
-                self.panicked.store(true, Ordering::SeqCst);
-            }
-            if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-                // Last chunk of the job: wake the caller. Taking the job
-                // mutex pairs with the caller's check-then-wait.
-                let _g = self.job.lock().unwrap();
-                self.done.notify_all();
+    /// Sticky claiming: `lane` drains its own chunk range (chunks
+    /// `lane, lane + width, lane + 2·width, …`) to exhaustion first,
+    /// then steals from the other lanes' ranges in scan order. A lane's
+    /// range never refills within a job (its cursor only grows), so one
+    /// pass over all `width` cursors suffices — after it, every chunk
+    /// of this epoch has been claimed by somebody.
+    fn work(&self, lane: usize, epoch: u32, n_chunks: u32, task: TaskPtr) {
+        let width = self.cursors.len();
+        let offset = self.claim_offset.load(Ordering::Relaxed);
+        for s in 0..width {
+            let m = (lane + offset + s) % width;
+            let cur = &self.cursors[m];
+            loop {
+                let c = cur.load(Ordering::SeqCst);
+                if (c >> 32) as u32 != epoch {
+                    return; // a newer job took the slot; we never claimed
+                }
+                let k = (c & IDX_MASK) as usize;
+                let chunk = m + k * width;
+                if chunk >= n_chunks as usize {
+                    break; // lane m's range is drained; move to the next
+                }
+                if cur
+                    .compare_exchange(c, c + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_err()
+                {
+                    continue;
+                }
+                // SAFETY: the successful same-epoch claim above proves the
+                // owning `run` frame is still parked in its drain loop (it
+                // cannot return while this claimed chunk's `remaining`
+                // decrement is outstanding), so the pointee is alive.
+                let task_ref: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    task_ref(chunk)
+                }));
+                if ok.is_err() {
+                    self.panicked.store(true, Ordering::SeqCst);
+                }
+                if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // Last chunk of the job: wake the caller. Taking the
+                    // job mutex pairs with the caller's check-then-wait.
+                    let _g = self.job.lock().unwrap();
+                    self.done.notify_all();
+                }
             }
         }
     }
@@ -146,22 +181,47 @@ pub struct ChunkPool {
 impl ChunkPool {
     /// Build a pool with `extra_threads` workers; the calling thread
     /// always participates, so total parallelism is `extra_threads + 1`.
+    /// Lanes pin themselves to cores when the `A2CID2_PIN` policy says
+    /// so ([`crate::locality::pin_lanes`]).
     pub fn new(extra_threads: usize) -> Self {
+        Self::new_with_pinning(extra_threads, crate::locality::pin_lanes())
+    }
+
+    /// As [`ChunkPool::new`], with pinning decided by the caller instead
+    /// of the env policy — the locality bench and tests build pinned and
+    /// unpinned pools side by side in one process. Worker lane `l`
+    /// (`1 ..= extra_threads`) pins to
+    /// [`cpu_for_slot(l)`](crate::locality::Topology::cpu_for_slot),
+    /// spreading lanes round-robin across NUMA nodes; lane 0 is whatever
+    /// thread calls [`run`](Self::run) and is never pinned here. A
+    /// failed pin warns once and the lane runs unpinned — placement is
+    /// best-effort, correctness never depends on it.
+    pub fn new_with_pinning(extra_threads: usize, pin: bool) -> Self {
+        let width = extra_threads + 1;
         let shared = std::sync::Arc::new(Shared {
             job: Mutex::new(Job { epoch: 0, n_chunks: 0, task: None }),
             start: Condvar::new(),
             done: Condvar::new(),
-            cursor: AtomicU64::new(0),
+            cursors: (0..width).map(|_| AtomicU64::new(0)).collect(),
+            claim_offset: AtomicUsize::new(0),
             remaining: AtomicU64::new(0),
             panicked: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
+        let topo = crate::locality::topology();
         let threads = (0..extra_threads)
             .map(|i| {
+                let lane = i + 1;
+                let cpu = if pin { topo.cpu_for_slot(lane) } else { None };
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("a2cid2-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || {
+                        if let Some(c) = cpu {
+                            crate::locality::pin_current_thread(c);
+                        }
+                        worker_loop(&shared, lane)
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
@@ -180,6 +240,17 @@ impl ChunkPool {
     /// Total parallel lanes (workers + the calling thread).
     pub fn lanes(&self) -> usize {
         self.threads.len() + 1
+    }
+
+    /// Rotate the claim scan: lane `l` drains lane `(l + offset) % width`'s
+    /// chunk range first instead of its own. Results are bit-identical at
+    /// any offset (fixed chunk boundaries make claim order irrelevant) —
+    /// this exists so the regression tests can prove it and so the bench
+    /// can measure the cross-NUMA-touch counterfactual, where every
+    /// pinned lane deliberately streams a remote lane's first-touched
+    /// pages. Takes effect on the next job.
+    pub fn set_claim_offset(&self, offset: usize) {
+        self.shared.claim_offset.store(offset, Ordering::Relaxed);
     }
 
     /// Run `task(chunk)` for every `chunk in 0..n_chunks`, returning once
@@ -245,11 +316,14 @@ impl ChunkPool {
                 g.n_chunks = n_chunks as u32;
                 g.task = Some(tp);
                 self.shared.remaining.store(n_chunks as u64, Ordering::SeqCst);
-                self.shared.cursor.store((g.epoch as u64) << 32, Ordering::SeqCst);
+                for cur in &self.shared.cursors {
+                    cur.store((g.epoch as u64) << 32, Ordering::SeqCst);
+                }
                 self.shared.start.notify_all();
                 (g.epoch, g.n_chunks)
             };
-            self.shared.work(epoch, n, tp);
+            // The caller participates as lane 0.
+            self.shared.work(0, epoch, n, tp);
             {
                 let mut g = self.shared.job.lock().unwrap();
                 while self.shared.remaining.load(Ordering::SeqCst) > 0 {
@@ -268,15 +342,29 @@ impl ChunkPool {
 }
 
 /// Extra worker threads the `A2CID2_POOL_THREADS` policy prescribes —
-/// the sizing [`ChunkPool::global`] uses, shared with the multiplexed
-/// virtual-worker engine so one env var pins every pool in the process.
+/// the sizing [`ChunkPool::global`] uses.
 /// `A2CID2_POOL_THREADS=1` means fully serial (zero extra threads);
 /// unset falls back to available cores, capped small (the kernels are
 /// memory-bound; a handful of streams saturates DRAM). CI's determinism
 /// job runs the same seeded scenario at two widths and diffs the traces
 /// — the fixed chunk boundaries must make the width unobservable.
 pub fn configured_extra_threads() -> usize {
-    let lanes = crate::config::env::knobs().pool_threads;
+    extra_threads_for(crate::config::env::knobs().pool_threads)
+}
+
+/// Extra worker threads for the multiplexed engine's private tick pool:
+/// `A2CID2_MUX_THREADS`, falling back to `A2CID2_POOL_THREADS` (for
+/// years one knob sized both pools; setting only the shared knob keeps
+/// that meaning), then to available cores. The two pools really are
+/// independent — the mux pool shards *ticks*, the global pool shards
+/// *elements* — so a wide kernel pool with a narrow tick pool is a
+/// legitimate shape on a shared host.
+pub fn configured_mux_extra_threads() -> usize {
+    let k = crate::config::env::knobs();
+    extra_threads_for(k.mux_threads.or(k.pool_threads))
+}
+
+fn extra_threads_for(lanes: Option<usize>) -> usize {
     match lanes {
         Some(n) => (n - 1).min(7),
         None => {
@@ -305,7 +393,7 @@ impl std::fmt::Debug for ChunkPool {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, lane: usize) {
     let mut seen_epoch: u32 = 0;
     loop {
         let (epoch, n_chunks, task) = {
@@ -323,7 +411,7 @@ fn worker_loop(shared: &Shared) {
             }
         };
         seen_epoch = epoch;
-        shared.work(epoch, n_chunks, task);
+        shared.work(lane, epoch, n_chunks, task);
     }
 }
 
@@ -373,7 +461,61 @@ impl AlignedVec {
     }
 
     /// Allocate a zeroed buffer of `len` elements.
+    ///
+    /// Under the `A2CID2_NUMA` first-touch policy
+    /// ([`crate::locality::numa_first_touch`]), pool-scale buffers are
+    /// zero-touched chunk-by-chunk by their sticky owner lanes on the
+    /// global pool, so each page lands on the NUMA node of the core
+    /// that will stream it on every later kernel call (Linux places a
+    /// page on the node of the thread that first writes it). With the
+    /// policy off — or below pool scale — this is a plain zeroed
+    /// allocation touched by whoever writes first, exactly as before.
     pub fn zeroed(len: usize) -> Self {
+        if len >= POOL_MIN_DIM && crate::locality::numa_first_touch() {
+            return Self::zeroed_on(ChunkPool::global(), len);
+        }
+        Self::zeroed_serial(len)
+    }
+
+    /// First-touch a pool-scale buffer on an explicit pool, regardless
+    /// of the env policy — the locality bench and tests place buffers on
+    /// pools they built themselves. Falls back to the serial path below
+    /// pool scale or when `pool` is busy ([`ChunkPool::try_run`] — a
+    /// rejoining worker cloning state mid-job must not deadlock).
+    pub fn zeroed_on(pool: &ChunkPool, len: usize) -> Self {
+        if len < POOL_MIN_DIM {
+            return Self::zeroed_serial(len);
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size; the memory stays logically
+        // uninitialized until every chunk below has been `write_bytes`'d
+        // — only raw pointers touch it until then, never a slice.
+        let raw = unsafe { std::alloc::alloc(layout) } as *mut f32;
+        let Some(ptr) = std::ptr::NonNull::new(raw) else {
+            std::alloc::handle_alloc_error(layout)
+        };
+        #[derive(Clone, Copy)]
+        struct RawMut(*mut f32);
+        // SAFETY: distinct chunks write disjoint ranges of one live
+        // allocation, same argument as `Span`.
+        unsafe impl Send for RawMut {}
+        unsafe impl Sync for RawMut {}
+        let base = RawMut(ptr.as_ptr());
+        let pooled = pool.try_run(n_chunks(len), &|c| {
+            let (lo, hi) = chunk_bounds(len, c);
+            // SAFETY: in-bounds disjoint range of the allocation above.
+            unsafe { std::ptr::write_bytes(base.0.add(lo), 0, hi - lo) };
+        });
+        if !pooled {
+            // SAFETY: whole allocation, exclusively owned.
+            unsafe { std::ptr::write_bytes(ptr.as_ptr(), 0, len) };
+        }
+        Self { ptr, len }
+    }
+
+    /// The pre-locality allocation path: zeroed by the allocator, pages
+    /// placed wherever the first writer runs.
+    fn zeroed_serial(len: usize) -> Self {
         if len == 0 {
             return Self { ptr: std::ptr::NonNull::dangling(), len: 0 };
         }
@@ -387,10 +529,13 @@ impl AlignedVec {
         Self { ptr, len }
     }
 
-    /// Allocate and copy `src` into an aligned buffer.
+    /// Allocate and copy `src` into an aligned buffer. The copy itself
+    /// is pool-sharded at pool scale ([`copy`]), so under first-touch
+    /// the same sticky lanes that placed each chunk's pages also stream
+    /// the bytes in.
     pub fn from_slice(src: &[f32]) -> Self {
         let mut buf = Self::zeroed(src.len());
-        buf.as_mut_slice().copy_from_slice(src);
+        copy(src, buf.as_mut_slice());
         buf
     }
 
@@ -697,6 +842,38 @@ pub fn comm_pair_fused(
     xb: &mut [f32],
     xtb: &mut [f32],
 ) {
+    comm_pair_fused_on(
+        ChunkPool::global(),
+        waa,
+        wba,
+        wab,
+        wbb,
+        alpha,
+        alpha_tilde,
+        xa,
+        xta,
+        xb,
+        xtb,
+    )
+}
+
+/// As [`comm_pair_fused`], sharded on an explicit pool — the locality
+/// bench and regression tests drive pinned and unpinned pools (at any
+/// claim offset) side by side and prove the bits never move.
+#[allow(clippy::too_many_arguments)]
+pub fn comm_pair_fused_on(
+    pool: &ChunkPool,
+    waa: f32,
+    wba: f32,
+    wab: f32,
+    wbb: f32,
+    alpha: f32,
+    alpha_tilde: f32,
+    xa: &mut [f32],
+    xta: &mut [f32],
+    xb: &mut [f32],
+    xtb: &mut [f32],
+) {
     let len = xa.len();
     if len < POOL_MIN_DIM {
         return vecops::comm_pair_fused(
@@ -708,7 +885,7 @@ pub fn comm_pair_fused(
     assert_eq!(xtb.len(), len);
     let (sa, sta) = (Span::of_mut(xa), Span::of_mut(xta));
     let (sb, stb) = (Span::of_mut(xb), Span::of_mut(xtb));
-    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+    let pooled = pool.try_run(n_chunks(len), &|c| {
         let (lo, hi) = chunk_bounds(len, c);
         unsafe {
             vecops::comm_pair_fused(
@@ -736,13 +913,19 @@ pub fn comm_pair_fused(
 /// This is what routes `sync_all` / final-evaluation mixing through the
 /// chunk pool at large `dim`, like the mid-run kernels.
 pub fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+    mix_pair_on(ChunkPool::global(), wa, wb, x, xt)
+}
+
+/// As [`mix_pair`], sharded on an explicit pool (see
+/// [`comm_pair_fused_on`] for why that exists).
+pub fn mix_pair_on(pool: &ChunkPool, wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
     let len = x.len();
     if len < POOL_MIN_DIM {
         return vecops::mix_pair(wa, wb, x, xt);
     }
     assert_eq!(xt.len(), len);
     let (xs, ts) = (Span::of_mut(x), Span::of_mut(xt));
-    let pooled = ChunkPool::global().try_run(n_chunks(len), &|c| {
+    let pooled = pool.try_run(n_chunks(len), &|c| {
         let (lo, hi) = chunk_bounds(len, c);
         unsafe {
             vecops::mix_pair(wa, wb, xs.write(lo, hi), ts.write(lo, hi));
@@ -932,6 +1115,84 @@ mod tests {
                 assert_eq!(k.load(Ordering::SeqCst), 1, "chunk {c} of {n}");
             }
         }
+    }
+
+    #[test]
+    fn sticky_claiming_runs_every_chunk_exactly_once_at_any_offset() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        // Per-lane cursors must still cover 0..n exactly once whether
+        // lanes drain their own range first (offset 0) or are forced
+        // onto remote ranges (the stolen/counterfactual offsets).
+        let pool = ChunkPool::new_with_pinning(3, false);
+        for offset in [0usize, 1, 2, 3, 7] {
+            pool.set_claim_offset(offset);
+            for n in [0usize, 1, 2, 3, 4, 7, 64, 65] {
+                let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+                pool.run(n, &|c| {
+                    counts[c].fetch_add(1, Ordering::SeqCst);
+                });
+                for (c, k) in counts.iter().enumerate() {
+                    assert_eq!(k.load(Ordering::SeqCst), 1, "chunk {c} of {n} at offset {offset}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_touch_zeroed_matches_serial_zeroed() {
+        // Owner-lane first touch changes which thread writes each page,
+        // never the contents: all-zero, page-aligned, and kernel results
+        // over it are bit-identical to a serially zeroed buffer.
+        let pool = ChunkPool::new_with_pinning(3, false);
+        for len in [0usize, 3, CHUNK, DIM, 4 * CHUNK] {
+            let ft = AlignedVec::zeroed_on(&pool, len);
+            assert_eq!(ft.len(), len);
+            assert!(ft.iter().all(|&v| v == 0.0), "len {len}");
+            if len * 4 >= PAGE {
+                assert_eq!(ft.as_slice().as_ptr() as usize % PAGE, 0);
+            }
+        }
+        let src = randvec(DIM, 31);
+        let mut a = AlignedVec::zeroed_on(&pool, DIM);
+        a.as_mut_slice().copy_from_slice(&src);
+        let b = AlignedVec::from_slice(&src);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn explicit_pool_wrappers_bit_identical_to_global_and_serial() {
+        let (x0, t0) = (randvec(DIM, 41), randvec(DIM, 42));
+        let (xb0, tb0) = (randvec(DIM, 43), randvec(DIM, 44));
+        let pool = ChunkPool::new_with_pinning(3, false);
+        for offset in [0usize, 2] {
+            pool.set_claim_offset(offset);
+            let (mut xa, mut ta, mut xb, mut tb) =
+                (x0.clone(), t0.clone(), xb0.clone(), tb0.clone());
+            comm_pair_fused_on(
+                &pool, 0.85, 0.15, 0.6, 0.4, 0.5, 1.9, &mut xa, &mut ta, &mut xb, &mut tb,
+            );
+            mix_pair_on(&pool, 0.7, 0.3, &mut xa, &mut ta);
+            let (mut rxa, mut rta, mut rxb, mut rtb) =
+                (x0.clone(), t0.clone(), xb0.clone(), tb0.clone());
+            vecops::comm_pair_fused(
+                0.85, 0.15, 0.6, 0.4, 0.5, 1.9, &mut rxa, &mut rta, &mut rxb, &mut rtb,
+            );
+            vecops::mix_pair(0.7, 0.3, &mut rxa, &mut rta);
+            assert_eq!(xa, rxa, "offset {offset}");
+            assert_eq!(ta, rta);
+            assert_eq!(xb, rxb);
+            assert_eq!(tb, rtb);
+        }
+    }
+
+    #[test]
+    fn mux_thread_knob_falls_back_to_pool_knob() {
+        // Both knobs are Option<usize> lanes; the transform is shared.
+        assert_eq!(super::extra_threads_for(Some(1)), 0);
+        assert_eq!(super::extra_threads_for(Some(4)), 3);
+        assert_eq!(super::extra_threads_for(Some(64)), 7, "capped");
+        // Unset follows the core count, never exceeding the cap.
+        assert!(super::extra_threads_for(None) <= 7);
     }
 
     #[test]

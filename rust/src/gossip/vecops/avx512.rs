@@ -1,0 +1,419 @@
+//! Real AVX-512 backend: 16 f32 lanes per step, runtime-detected.
+//!
+//! Compiled only when the toolchain is new enough to have stable AVX-512
+//! intrinsics (the `a2cid2_avx512` cfg, probed by `build.rs`), and handed
+//! out only after [`available`] confirmed `avx512f` at runtime. Selected
+//! by `A2CID2_KERNEL_BACKEND=avx512`; `auto` keeps preferring the 256-bit
+//! backend (see `simd.rs` for why the 512-bit opt-in is explicit).
+//!
+//! Bit-identity contract, same as every backend: separate
+//! `_mm512_mul_ps` + `_mm512_add_ps` (no FMA contraction), scalar tails
+//! on ragged lengths, and the one reduction ([`KernelBackend::sq_dist`])
+//! walks 8-element blocks whose eight widened f64 lanes land in ONE
+//! `__m512d` accumulator — exactly the scalar reference's fixed
+//! `SQ_DIST_LANES`-striped partial sums, folded in the same order.
+
+use super::KernelBackend;
+
+/// The 512-bit backend. Handed out by `super::select_backend` only after
+/// [`available`] confirmed `avx512f`, which makes the `unsafe` kernel
+/// calls inside sound.
+pub(super) struct Avx512Backend;
+
+/// Singleton instance (the dispatch layer deals in `&'static dyn`).
+pub(super) static AVX512_BACKEND: Avx512Backend = Avx512Backend;
+
+/// Whether this backend can run on the current CPU.
+pub(super) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+}
+
+#[allow(clippy::too_many_arguments)]
+impl KernelBackend for Avx512Backend {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+
+    fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::axpy(a, x, y) }
+    }
+
+    fn mix_into(&self, wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), out.len());
+        unsafe { imp::mix_into(wa, wb, x, xt, out) }
+    }
+
+    fn grad_step(&self, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), g.len());
+        unsafe { imp::grad_step(gamma, g, x, xt) }
+    }
+
+    fn comm_only(&self, alpha: f32, alpha_tilde: f32, xj: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), xj.len());
+        unsafe { imp::comm_only(alpha, alpha_tilde, xj, x, xt) }
+    }
+
+    fn mix_pair(&self, wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        unsafe { imp::mix_pair(wa, wb, x, xt) }
+    }
+
+    fn mix_grad(&self, wa: f32, wb: f32, gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), g.len());
+        unsafe { imp::mix_grad(wa, wb, gamma, g, x, xt) }
+    }
+
+    fn comm_apply_fused(
+        &self,
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        assert_eq!(x.len(), xt.len());
+        assert_eq!(x.len(), xj.len());
+        unsafe { imp::comm_apply_fused(wa, wb, alpha, alpha_tilde, xj, x, xt) }
+    }
+
+    fn comm_pair_fused(
+        &self,
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        assert_eq!(xa.len(), xta.len());
+        assert_eq!(xa.len(), xb.len());
+        assert_eq!(xa.len(), xtb.len());
+        unsafe { imp::comm_pair_fused(waa, wba, wab, wbb, alpha, alpha_tilde, xa, xta, xb, xtb) }
+    }
+
+    fn sq_dist(&self, x: &[f32], y: &[f32]) -> f64 {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::sq_dist(x, y) }
+    }
+
+    fn average_pair(&self, x: &mut [f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        unsafe { imp::average_pair(x, y) }
+    }
+}
+
+/// AVX-512F: 16 f32 lanes per step. Safety: callers (the trait impl
+/// above) guarantee equal slice lengths and that `avx512f` was detected.
+mod imp {
+    use crate::gossip::vecops::scalar;
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 16;
+
+    /// Prefetch distance in elements (1 KiB per f32 stream) — same as
+    /// the 256-bit backend (`simd.rs`), where the rationale lives.
+    const PF: usize = 256;
+
+    /// Hint-prefetch `p[i]` into L1. `wrapping_add` because the address
+    /// may run past the slice near the end of a loop — prefetch never
+    /// faults, so an out-of-range hint is merely ignored.
+    #[inline(always)]
+    unsafe fn pf(p: *const f32, i: usize) {
+        _mm_prefetch::<_MM_HINT_T0>(p.wrapping_add(i) as *const i8);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm512_set1_ps(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
+            let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm512_loadu_ps(y.as_ptr().add(i));
+            // y + (a·x): separate mul and add — no FMA (bit-identity).
+            let r = _mm512_add_ps(vy, _mm512_mul_ps(va, vx));
+            _mm512_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        scalar::axpy(a, &x[i..], &mut y[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mix_into(wa: f32, wb: f32, x: &[f32], xt: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let vwa = _mm512_set1_ps(wa);
+        let vwb = _mm512_set1_ps(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            pf(out.as_ptr(), i + PF);
+            let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm512_loadu_ps(xt.as_ptr().add(i));
+            let r = _mm512_add_ps(_mm512_mul_ps(vwa, vx), _mm512_mul_ps(vwb, vt));
+            _mm512_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += LANES;
+        }
+        scalar::mix_into(wa, wb, &x[i..], &xt[i..], &mut out[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn grad_step(gamma: f32, g: &[f32], x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let va = _mm512_set1_ps(-gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            let vg = _mm512_loadu_ps(g.as_ptr().add(i));
+            let step = _mm512_mul_ps(va, vg);
+            let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm512_loadu_ps(xt.as_ptr().add(i));
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), _mm512_add_ps(vx, step));
+            _mm512_storeu_ps(xt.as_mut_ptr().add(i), _mm512_add_ps(vt, step));
+            i += LANES;
+        }
+        scalar::grad_step(gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn comm_only(
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let va = _mm512_set1_ps(alpha);
+        let vat = _mm512_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+            let vt = _mm512_loadu_ps(xt.as_ptr().add(i));
+            let vp = _mm512_loadu_ps(xj.as_ptr().add(i));
+            let m = _mm512_sub_ps(vx, vp);
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), _mm512_sub_ps(vx, _mm512_mul_ps(va, m)));
+            _mm512_storeu_ps(xt.as_mut_ptr().add(i), _mm512_sub_ps(vt, _mm512_mul_ps(vat, m)));
+            i += LANES;
+        }
+        scalar::comm_only(alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mix_pair(wa: f32, wb: f32, x: &mut [f32], xt: &mut [f32]) {
+        let n = x.len();
+        let vwa = _mm512_set1_ps(wa);
+        let vwb = _mm512_set1_ps(wb);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            let a = _mm512_loadu_ps(x.as_ptr().add(i));
+            let b = _mm512_loadu_ps(xt.as_ptr().add(i));
+            let rx = _mm512_add_ps(_mm512_mul_ps(vwa, a), _mm512_mul_ps(vwb, b));
+            let rt = _mm512_add_ps(_mm512_mul_ps(vwb, a), _mm512_mul_ps(vwa, b));
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm512_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::mix_pair(wa, wb, &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn mix_grad(
+        wa: f32,
+        wb: f32,
+        gamma: f32,
+        g: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = _mm512_set1_ps(wa);
+        let vwb = _mm512_set1_ps(wb);
+        let vg2 = _mm512_set1_ps(gamma);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            let a = _mm512_loadu_ps(x.as_ptr().add(i));
+            let b = _mm512_loadu_ps(xt.as_ptr().add(i));
+            let vg = _mm512_loadu_ps(g.as_ptr().add(i));
+            let step = _mm512_mul_ps(vg2, vg);
+            let rx = _mm512_sub_ps(
+                _mm512_add_ps(_mm512_mul_ps(vwa, a), _mm512_mul_ps(vwb, b)),
+                step,
+            );
+            let rt = _mm512_sub_ps(
+                _mm512_add_ps(_mm512_mul_ps(vwb, a), _mm512_mul_ps(vwa, b)),
+                step,
+            );
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm512_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::mix_grad(wa, wb, gamma, &g[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn comm_apply_fused(
+        wa: f32,
+        wb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xj: &[f32],
+        x: &mut [f32],
+        xt: &mut [f32],
+    ) {
+        let n = x.len();
+        let vwa = _mm512_set1_ps(wa);
+        let vwb = _mm512_set1_ps(wb);
+        let va = _mm512_set1_ps(alpha);
+        let vat = _mm512_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            let a = _mm512_loadu_ps(x.as_ptr().add(i));
+            let b = _mm512_loadu_ps(xt.as_ptr().add(i));
+            let vp = _mm512_loadu_ps(xj.as_ptr().add(i));
+            let mixed_x = _mm512_add_ps(_mm512_mul_ps(vwa, a), _mm512_mul_ps(vwb, b));
+            let mixed_t = _mm512_add_ps(_mm512_mul_ps(vwb, a), _mm512_mul_ps(vwa, b));
+            let m = _mm512_sub_ps(mixed_x, vp);
+            let rx = _mm512_sub_ps(mixed_x, _mm512_mul_ps(va, m));
+            let rt = _mm512_sub_ps(mixed_t, _mm512_mul_ps(vat, m));
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), rx);
+            _mm512_storeu_ps(xt.as_mut_ptr().add(i), rt);
+            i += LANES;
+        }
+        scalar::comm_apply_fused(wa, wb, alpha, alpha_tilde, &xj[i..], &mut x[i..], &mut xt[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn comm_pair_fused(
+        waa: f32,
+        wba: f32,
+        wab: f32,
+        wbb: f32,
+        alpha: f32,
+        alpha_tilde: f32,
+        xa: &mut [f32],
+        xta: &mut [f32],
+        xb: &mut [f32],
+        xtb: &mut [f32],
+    ) {
+        let n = xa.len();
+        let vwaa = _mm512_set1_ps(waa);
+        let vwba = _mm512_set1_ps(wba);
+        let vwab = _mm512_set1_ps(wab);
+        let vwbb = _mm512_set1_ps(wbb);
+        let va = _mm512_set1_ps(alpha);
+        let vat = _mm512_set1_ps(alpha_tilde);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(xa.as_ptr(), i + PF);
+            pf(xta.as_ptr(), i + PF);
+            pf(xb.as_ptr(), i + PF);
+            pf(xtb.as_ptr(), i + PF);
+            let a = _mm512_loadu_ps(xa.as_ptr().add(i));
+            let ta = _mm512_loadu_ps(xta.as_ptr().add(i));
+            let b = _mm512_loadu_ps(xb.as_ptr().add(i));
+            let tb = _mm512_loadu_ps(xtb.as_ptr().add(i));
+            let ma = _mm512_add_ps(_mm512_mul_ps(vwaa, a), _mm512_mul_ps(vwba, ta));
+            let mta = _mm512_add_ps(_mm512_mul_ps(vwba, a), _mm512_mul_ps(vwaa, ta));
+            let mb = _mm512_add_ps(_mm512_mul_ps(vwab, b), _mm512_mul_ps(vwbb, tb));
+            let mtb = _mm512_add_ps(_mm512_mul_ps(vwbb, b), _mm512_mul_ps(vwab, tb));
+            let m = _mm512_sub_ps(ma, mb);
+            _mm512_storeu_ps(xa.as_mut_ptr().add(i), _mm512_sub_ps(ma, _mm512_mul_ps(va, m)));
+            _mm512_storeu_ps(
+                xta.as_mut_ptr().add(i),
+                _mm512_sub_ps(mta, _mm512_mul_ps(vat, m)),
+            );
+            _mm512_storeu_ps(xb.as_mut_ptr().add(i), _mm512_add_ps(mb, _mm512_mul_ps(va, m)));
+            _mm512_storeu_ps(
+                xtb.as_mut_ptr().add(i),
+                _mm512_add_ps(mtb, _mm512_mul_ps(vat, m)),
+            );
+            i += LANES;
+        }
+        scalar::comm_pair_fused(
+            waa,
+            wba,
+            wab,
+            wbb,
+            alpha,
+            alpha_tilde,
+            &mut xa[i..],
+            &mut xta[i..],
+            &mut xb[i..],
+            &mut xtb[i..],
+        );
+    }
+
+    /// 8-element blocks (NOT 16): the stripe layout is fixed at
+    /// `SQ_DIST_LANES = 8` f64 lanes, which is exactly one `__m512d` —
+    /// lane `k` of the accumulator is the scalar reference's `acc[k]`.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn sq_dist(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len();
+        let mut vacc = _mm512_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            // Difference in f32 (one rounding, same as scalar), THEN
+            // widen to f64 and square exactly.
+            let d = _mm512_cvtps_pd(_mm256_sub_ps(vx, vy));
+            vacc = _mm512_add_pd(vacc, _mm512_mul_pd(d, d));
+            i += 8;
+        }
+        let mut acc = [0.0f64; 8];
+        _mm512_storeu_pd(acc.as_mut_ptr(), vacc);
+        for (k, j) in (i..n).enumerate() {
+            let d = (x[j] - y[j]) as f64;
+            acc[k] += d * d;
+        }
+        acc.iter().sum()
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn average_pair(x: &mut [f32], y: &mut [f32]) {
+        let n = x.len();
+        let vhalf = _mm512_set1_ps(0.5);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
+            let a = _mm512_loadu_ps(x.as_ptr().add(i));
+            let b = _mm512_loadu_ps(y.as_ptr().add(i));
+            let m = _mm512_mul_ps(vhalf, _mm512_add_ps(a, b));
+            _mm512_storeu_ps(x.as_mut_ptr().add(i), m);
+            _mm512_storeu_ps(y.as_mut_ptr().add(i), m);
+            i += LANES;
+        }
+        scalar::average_pair(&mut x[i..], &mut y[i..]);
+    }
+}

@@ -14,14 +14,21 @@
 //!   construction: same per-element expression, separate multiply and
 //!   add (no FMA contraction), scalar tails, and a fixed
 //!   [`SQ_DIST_LANES`]-striped accumulation order for the one reduction.
+//! * `avx512` — a real 512-bit path (16 f32 lanes), compiled when the
+//!   toolchain has stable AVX-512 intrinsics (the `a2cid2_avx512` cfg
+//!   from `build.rs`) and offered only when the CPU reports `avx512f`.
+//!   Same bit-identity construction as `simd`.
 //!
 //! The backend is selected ONCE per process, on first kernel use:
-//! `A2CID2_KERNEL_BACKEND=auto` (default) picks SIMD when the CPU
-//! supports it, `scalar` forces the reference, and
-//! `simd`/`avx2`/`neon`/`avx512` force the wide path (panicking if the
-//! CPU cannot run it — `avx512` maps to the 256-bit path, see
-//! `simd.rs` for why there is no separate 512-bit code path). Because
-//! every backend is bit-identical, the replay goldens in
+//! `A2CID2_KERNEL_BACKEND=auto` (default) picks the 256-bit SIMD path
+//! when the CPU supports it (deliberately NOT AVX-512 — the kernels are
+//! memory-bound at the dims where the backend matters, and 512-bit
+//! execution downclocks several client parts), `scalar` forces the
+//! reference, `simd`/`avx2`/`neon` force the 256-bit wide path, and
+//! `avx512` requests the 512-bit path, falling back to the 256-bit one
+//! where it is unavailable (older toolchain or CPU — the historical
+//! alias behavior) and panicking only if no wide path exists at all.
+//! Because every backend is bit-identical, the replay goldens in
 //! `rust/oracle/replay_golden.toml` and both engines' determinism
 //! guarantees hold regardless of the selection; CI runs the golden
 //! replay under both `scalar` and `auto` to enforce exactly that.
@@ -32,6 +39,8 @@
 //! backend's achieved bandwidth against the memcpy roofline.
 
 pub mod scalar;
+#[cfg(all(target_arch = "x86_64", a2cid2_avx512))]
+mod avx512;
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 mod simd;
 
@@ -48,8 +57,8 @@ pub use scalar::SQ_DIST_LANES;
 /// integration tests enforce this property for every in-tree backend).
 #[allow(clippy::too_many_arguments)]
 pub trait KernelBackend: Send + Sync {
-    /// Short stable identifier ("scalar", "avx2", "neon") — used by the
-    /// `A2CID2_KERNEL_BACKEND` override, bench rows, and logs.
+    /// Short stable identifier ("scalar", "avx2", "neon", "avx512") —
+    /// used by the `A2CID2_KERNEL_BACKEND` override, bench rows, and logs.
     fn name(&self) -> &'static str;
 
     /// `y ← y + a·x` (axpy).
@@ -165,13 +174,30 @@ fn simd_backend() -> Option<&'static dyn KernelBackend> {
     None
 }
 
+fn avx512_backend() -> Option<&'static dyn KernelBackend> {
+    #[cfg(all(target_arch = "x86_64", a2cid2_avx512))]
+    {
+        if avx512::available() {
+            return Some(&avx512::AVX512_BACKEND);
+        }
+    }
+    None
+}
+
 fn select_backend() -> &'static dyn KernelBackend {
     let choice =
         crate::config::env::knobs().kernel_backend.clone().unwrap_or_default();
     match choice.trim().to_ascii_lowercase().as_str() {
         "" | "auto" => simd_backend().unwrap_or_else(scalar_backend),
         "scalar" => scalar_backend(),
-        "simd" | "wide" | "avx2" | "neon" | "avx512" => simd_backend().unwrap_or_else(|| {
+        "simd" | "wide" | "avx2" | "neon" => simd_backend().unwrap_or_else(|| {
+            panic!("A2CID2_KERNEL_BACKEND={choice}: no SIMD backend on this CPU/arch")
+        }),
+        // Falls back to the 256-bit path when the 512-bit one is out of
+        // reach (toolchain or CPU) — "avx512" historically aliased the
+        // 256-bit backend, and keeping that meaning lets one env matrix
+        // span heterogeneous fleets without per-host branching.
+        "avx512" => avx512_backend().or_else(simd_backend).unwrap_or_else(|| {
             panic!("A2CID2_KERNEL_BACKEND={choice}: no SIMD backend on this CPU/arch")
         }),
         other => {
@@ -187,7 +213,7 @@ pub fn backend() -> &'static dyn KernelBackend {
     *BACKEND.get_or_init(select_backend)
 }
 
-/// Name of the selected backend ("scalar", "avx2", "neon").
+/// Name of the selected backend ("scalar", "avx2", "neon", "avx512").
 pub fn backend_name() -> &'static str {
     backend().name()
 }
@@ -197,6 +223,9 @@ pub fn backend_name() -> &'static str {
 pub fn available_backends() -> Vec<&'static dyn KernelBackend> {
     let mut v: Vec<&'static dyn KernelBackend> = vec![scalar_backend()];
     if let Some(s) = simd_backend() {
+        v.push(s);
+    }
+    if let Some(s) = avx512_backend() {
         v.push(s);
     }
     v
@@ -525,7 +554,7 @@ mod tests {
     fn backend_dispatch_is_latched_and_known() {
         let name = backend_name();
         assert!(
-            matches!(name, "scalar" | "avx2" | "neon"),
+            matches!(name, "scalar" | "avx2" | "neon" | "avx512"),
             "unexpected backend {name}"
         );
         // Latched: the same selection is returned on every call.

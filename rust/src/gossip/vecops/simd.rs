@@ -13,11 +13,19 @@
 //! keeps one virtual f64 accumulator per stripe lane, matching the
 //! scalar reference's fixed `SQ_DIST_LANES`-striped accumulation order.
 //!
-//! There is intentionally no separate AVX-512 path: these kernels are
-//! memory-bound at the dims where the backend matters (the 256-bit path
-//! already saturates DRAM), 512-bit execution downclocks several client
-//! parts, and the 512-bit intrinsics need a much newer toolchain. The
-//! `avx512` env value therefore selects this backend.
+//! Every streaming loop issues an explicit software prefetch
+//! (`_mm_prefetch` / `prfm pldl1keep`) one `PF`-stride ahead per input
+//! stream. Prefetch is a pure hint — it never faults (so pointers past
+//! the slice end are fine) and never changes a result bit — but on the
+//! NUMA-placed buffers the pool produces it hides remote-node latency
+//! the hardware prefetcher gives up on at page boundaries.
+//!
+//! A real AVX-512 path lives in the sibling `avx512` module (compiled
+//! when the toolchain is new enough, selected by
+//! `A2CID2_KERNEL_BACKEND=avx512`); `auto` keeps preferring this
+//! 256-bit backend — the kernels are memory-bound at the dims where the
+//! backend matters, and 512-bit execution downclocks several client
+//! parts — so the opt-in is explicit.
 
 use super::KernelBackend;
 
@@ -141,12 +149,27 @@ mod imp {
 
     const LANES: usize = 8;
 
+    /// Prefetch distance in elements (1 KiB per f32 stream): far enough
+    /// ahead to cover DRAM latency at streaming pace, close enough to
+    /// stay in the L1 fill window.
+    const PF: usize = 256;
+
+    /// Hint-prefetch `p[i]` into L1. `wrapping_add` because the address
+    /// may run past the slice near the end of a loop — prefetch never
+    /// faults, so an out-of-range hint is merely ignored.
+    #[inline(always)]
+    unsafe fn pf(p: *const f32, i: usize) {
+        _mm_prefetch::<_MM_HINT_T0>(p.wrapping_add(i) as *const i8);
+    }
+
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         let n = x.len();
         let va = _mm256_set1_ps(a);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
             let vy = _mm256_loadu_ps(y.as_ptr().add(i));
             // y + (a·x): separate mul and add — no FMA (bit-identity).
@@ -164,6 +187,9 @@ mod imp {
         let vwb = _mm256_set1_ps(wb);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            pf(out.as_ptr(), i + PF);
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
             let vt = _mm256_loadu_ps(xt.as_ptr().add(i));
             let r = _mm256_add_ps(_mm256_mul_ps(vwa, vx), _mm256_mul_ps(vwb, vt));
@@ -179,6 +205,9 @@ mod imp {
         let va = _mm256_set1_ps(-gamma);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let vg = _mm256_loadu_ps(g.as_ptr().add(i));
             let step = _mm256_mul_ps(va, vg);
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
@@ -203,6 +232,9 @@ mod imp {
         let vat = _mm256_set1_ps(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
             let vt = _mm256_loadu_ps(xt.as_ptr().add(i));
             let vp = _mm256_loadu_ps(xj.as_ptr().add(i));
@@ -223,6 +255,8 @@ mod imp {
         let vwb = _mm256_set1_ps(wb);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = _mm256_loadu_ps(x.as_ptr().add(i));
             let b = _mm256_loadu_ps(xt.as_ptr().add(i));
             let rx = _mm256_add_ps(_mm256_mul_ps(vwa, a), _mm256_mul_ps(vwb, b));
@@ -249,6 +283,9 @@ mod imp {
         let vgamma = _mm256_set1_ps(gamma);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = _mm256_loadu_ps(x.as_ptr().add(i));
             let b = _mm256_loadu_ps(xt.as_ptr().add(i));
             let vg = _mm256_loadu_ps(g.as_ptr().add(i));
@@ -280,6 +317,9 @@ mod imp {
         let vat = _mm256_set1_ps(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = _mm256_loadu_ps(x.as_ptr().add(i));
             let b = _mm256_loadu_ps(xt.as_ptr().add(i));
             let vp = _mm256_loadu_ps(xj.as_ptr().add(i));
@@ -318,6 +358,10 @@ mod imp {
         let vat = _mm256_set1_ps(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xa.as_ptr(), i + PF);
+            pf(xta.as_ptr(), i + PF);
+            pf(xb.as_ptr(), i + PF);
+            pf(xtb.as_ptr(), i + PF);
             let va = _mm256_loadu_ps(xa.as_ptr().add(i));
             let vta = _mm256_loadu_ps(xta.as_ptr().add(i));
             let vb = _mm256_loadu_ps(xb.as_ptr().add(i));
@@ -362,6 +406,8 @@ mod imp {
         let mut acc_hi = _mm256_setzero_pd();
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
             let vy = _mm256_loadu_ps(y.as_ptr().add(i));
             let d = _mm256_sub_ps(vx, vy); // f32 difference, then widen — as scalar
@@ -389,6 +435,8 @@ mod imp {
         let vhalf = _mm256_set1_ps(0.5);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let a = _mm256_loadu_ps(x.as_ptr().add(i));
             let b = _mm256_loadu_ps(y.as_ptr().add(i));
             let m = _mm256_mul_ps(vhalf, _mm256_add_ps(a, b));
@@ -409,12 +457,31 @@ mod imp {
 
     const LANES: usize = 4;
 
+    /// Prefetch distance in elements (1 KiB per f32 stream) — see the
+    /// x86_64 twin for the rationale.
+    const PF: usize = 256;
+
+    /// Hint-prefetch `p[i]` into L1 (`prfm pldl1keep`; aarch64 has no
+    /// stable prefetch intrinsic). `wrapping_add` because the address
+    /// may run past the slice near the end of a loop — prefetch never
+    /// faults, so an out-of-range hint is merely ignored.
+    #[inline(always)]
+    unsafe fn pf(p: *const f32, i: usize) {
+        core::arch::asm!(
+            "prfm pldl1keep, [{0}]",
+            in(reg) p.wrapping_add(i),
+            options(nomem, nostack, preserves_flags),
+        );
+    }
+
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         let n = x.len();
         let va = vdupq_n_f32(a);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let vx = vld1q_f32(x.as_ptr().add(i));
             let vy = vld1q_f32(y.as_ptr().add(i));
             // y + (a·x): vmulq + vaddq, never vmlaq (fused FMLA).
@@ -431,6 +498,9 @@ mod imp {
         let vwb = vdupq_n_f32(wb);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
+            pf(out.as_ptr(), i + PF);
             let vx = vld1q_f32(x.as_ptr().add(i));
             let vt = vld1q_f32(xt.as_ptr().add(i));
             let r = vaddq_f32(vmulq_f32(vwa, vx), vmulq_f32(vwb, vt));
@@ -446,6 +516,9 @@ mod imp {
         let va = vdupq_n_f32(-gamma);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let vg = vld1q_f32(g.as_ptr().add(i));
             let step = vmulq_f32(va, vg);
             let vx = vld1q_f32(x.as_ptr().add(i));
@@ -470,6 +543,9 @@ mod imp {
         let vat = vdupq_n_f32(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let vx = vld1q_f32(x.as_ptr().add(i));
             let vt = vld1q_f32(xt.as_ptr().add(i));
             let vp = vld1q_f32(xj.as_ptr().add(i));
@@ -488,6 +564,8 @@ mod imp {
         let vwb = vdupq_n_f32(wb);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = vld1q_f32(x.as_ptr().add(i));
             let b = vld1q_f32(xt.as_ptr().add(i));
             let rx = vaddq_f32(vmulq_f32(vwa, a), vmulq_f32(vwb, b));
@@ -514,6 +592,9 @@ mod imp {
         let vgamma = vdupq_n_f32(gamma);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(g.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = vld1q_f32(x.as_ptr().add(i));
             let b = vld1q_f32(xt.as_ptr().add(i));
             let vg = vld1q_f32(g.as_ptr().add(i));
@@ -545,6 +626,9 @@ mod imp {
         let vat = vdupq_n_f32(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xj.as_ptr(), i + PF);
+            pf(x.as_ptr(), i + PF);
+            pf(xt.as_ptr(), i + PF);
             let a = vld1q_f32(x.as_ptr().add(i));
             let b = vld1q_f32(xt.as_ptr().add(i));
             let vp = vld1q_f32(xj.as_ptr().add(i));
@@ -581,6 +665,10 @@ mod imp {
         let vat = vdupq_n_f32(alpha_tilde);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(xa.as_ptr(), i + PF);
+            pf(xta.as_ptr(), i + PF);
+            pf(xb.as_ptr(), i + PF);
+            pf(xtb.as_ptr(), i + PF);
             let va = vld1q_f32(xa.as_ptr().add(i));
             let vta = vld1q_f32(xta.as_ptr().add(i));
             let vb = vld1q_f32(xb.as_ptr().add(i));
@@ -621,6 +709,8 @@ mod imp {
         let mut acc67 = vdupq_n_f64(0.0);
         let mut i = 0usize;
         while i + 8 <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let d0 = vsubq_f32(vld1q_f32(x.as_ptr().add(i)), vld1q_f32(y.as_ptr().add(i)));
             let d1 = vsubq_f32(
                 vld1q_f32(x.as_ptr().add(i + 4)),
@@ -656,6 +746,8 @@ mod imp {
         let vhalf = vdupq_n_f32(0.5);
         let mut i = 0usize;
         while i + LANES <= n {
+            pf(x.as_ptr(), i + PF);
+            pf(y.as_ptr(), i + PF);
             let a = vld1q_f32(x.as_ptr().add(i));
             let b = vld1q_f32(y.as_ptr().add(i));
             let m = vmulq_f32(vhalf, vaddq_f32(a, b));

@@ -36,6 +36,7 @@ pub mod experiments;
 pub mod gossip;
 pub mod graph;
 pub mod linalg;
+pub mod locality;
 pub mod metrics;
 pub mod model;
 pub mod optim;

@@ -1,0 +1,449 @@
+//! CPU topology discovery and thread affinity — the memory-locality layer.
+//!
+//! The pooled kernel path is memory-bandwidth-bound at fleet scale, so
+//! where a page lives relative to the core that streams it is the last
+//! lever on raw kernel speed. This module gives the rest of the crate
+//! three things, all with zero new dependencies:
+//!
+//! * **Topology** ([`topology`]): the set of CPUs this process may run
+//!   on, grouped by NUMA node. Discovered from
+//!   `/sys/devices/system/node/node*/cpulist` intersected with the
+//!   process's affinity mask (`sched_getaffinity`), so restricted
+//!   cpusets in CI containers are respected. Machines without the sysfs
+//!   tree (or without NUMA) collapse to a single node.
+//! * **Pinning** ([`pin_current_thread`] / [`unpin_current_thread`]):
+//!   `sched_setaffinity` issued as a raw syscall through
+//!   `core::arch::asm!` — the workspace is network-free and vendors no
+//!   `libc`, and the two affinity syscalls are the only kernel surface
+//!   we need. Non-Linux targets (and non-x86_64/aarch64) compile these
+//!   to no-ops that return `false`, so the crate builds unchanged on
+//!   macOS; callers treat a failed pin as "run unpinned".
+//! * **Policy** ([`pin_lanes`] / [`numa_first_touch`]): the
+//!   `A2CID2_PIN` / `A2CID2_NUMA` knobs (`0|1|auto`). `auto` — the
+//!   default — only engages on machines that actually report more than
+//!   one NUMA node: on a laptop or single-socket CI runner pinning buys
+//!   nothing and can hurt an oversubscribed host, so we stay out of the
+//!   scheduler's way. Failures (EPERM under a restrictive seccomp
+//!   profile, invalid knob values) warn once on stderr and degrade to
+//!   unpinned operation; they never abort a run.
+//!
+//! None of this touches arithmetic: affinity and page placement change
+//! *where* a chunk is computed, never *what* is computed, so every
+//! golden replay checksum holds bit-for-bit under any policy (see
+//! `gossip::pool` for why claim order is irrelevant).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Upper bound on CPU ids we can express in an affinity mask
+/// (16 × 64-bit words — comfortably above any current host).
+const MASK_WORDS: usize = 16;
+pub const MAX_CPUS: usize = MASK_WORDS * 64;
+
+/// The CPUs this process may run on, grouped by NUMA node.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// `nodes[k]` = sorted CPU ids of the k-th populated NUMA node that
+    /// intersects the process's allowed set. Always at least one entry.
+    pub nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Number of NUMA nodes with at least one allowed CPU.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total number of allowed CPUs across all nodes.
+    pub fn n_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.len()).sum()
+    }
+
+    /// CPU for logical slot `i`, interleaved node-major: slot 0 → first
+    /// CPU of node 0, slot 1 → first CPU of node 1, …, wrapping within
+    /// each node once every node has been visited. Spreading consecutive
+    /// lanes across nodes balances memory bandwidth (each node's
+    /// controllers serve an equal share of lanes) and pairs with sticky
+    /// chunk claiming so chunk ranges distribute evenly too.
+    pub fn cpu_for_slot(&self, slot: usize) -> Option<usize> {
+        let nn = self.nodes.len();
+        if nn == 0 {
+            return None;
+        }
+        let node = &self.nodes[slot % nn];
+        if node.is_empty() {
+            return None;
+        }
+        Some(node[(slot / nn) % node.len()])
+    }
+
+    /// NUMA node index that [`cpu_for_slot`](Self::cpu_for_slot) places
+    /// slot `i` on.
+    pub fn node_of_slot(&self, slot: usize) -> Option<usize> {
+        if self.nodes.is_empty() {
+            None
+        } else {
+            Some(slot % self.nodes.len())
+        }
+    }
+}
+
+/// Parse a sysfs cpulist string such as `"0-15,32-47"` or `"0,2,4"`.
+///
+/// Returns the expanded, sorted CPU ids; malformed fragments are
+/// skipped rather than failing the whole list (sysfs is trusted, but a
+/// partial parse beats a panic during startup).
+pub fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                for c in lo..=hi.min(MAX_CPUS - 1) {
+                    cpus.push(c);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            if c < MAX_CPUS {
+                cpus.push(c);
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// Process-wide topology, discovered once on first use.
+pub fn topology() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(detect)
+}
+
+fn detect() -> Topology {
+    let allowed = allowed_cpus().unwrap_or_else(|| {
+        let n = std::thread::available_parallelism().map_or(1, |p| p.get());
+        (0..n).collect()
+    });
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+                continue;
+            };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let cpus: Vec<usize> = parse_cpu_list(&list)
+                .into_iter()
+                .filter(|c| allowed.binary_search(c).is_ok())
+                .collect();
+            if !cpus.is_empty() {
+                nodes.push((idx, cpus));
+            }
+        }
+    }
+    nodes.sort_by_key(|(idx, _)| *idx);
+    let nodes: Vec<Vec<usize>> = nodes.into_iter().map(|(_, cpus)| cpus).collect();
+    if nodes.is_empty() {
+        // No sysfs NUMA tree (macOS, stripped containers): one node.
+        Topology {
+            nodes: vec![allowed],
+        }
+    } else {
+        Topology { nodes }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Raw affinity syscalls (Linux x86_64 / aarch64); no-ops elsewhere.
+// ---------------------------------------------------------------------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use super::MASK_WORDS;
+
+    #[cfg(target_arch = "x86_64")]
+    const NR_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const NR_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const NR_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const NR_GETAFFINITY: usize = 123;
+
+    /// `syscall(nr, pid, len, maskp)` — the shared 3-argument shape of
+    /// both affinity syscalls. `pid == 0` targets the calling thread.
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Affinity mask of the calling thread, or `None` on syscall error.
+    pub fn get_mask() -> Option<[u64; MASK_WORDS]> {
+        let mut mask = [0u64; MASK_WORDS];
+        // On success the kernel returns the number of bytes it copied.
+        let r = unsafe {
+            syscall3(
+                NR_GETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_mut_ptr() as usize,
+            )
+        };
+        (r > 0).then_some(mask)
+    }
+
+    /// Set the calling thread's affinity mask; `true` on success.
+    pub fn set_mask(mask: &[u64; MASK_WORDS]) -> bool {
+        let r = unsafe {
+            syscall3(
+                NR_SETAFFINITY,
+                0,
+                std::mem::size_of_val(mask),
+                mask.as_ptr() as usize,
+            )
+        };
+        r == 0
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use super::MASK_WORDS;
+
+    // Affinity is best-effort: unsupported targets simply never pin.
+    pub fn get_mask() -> Option<[u64; MASK_WORDS]> {
+        None
+    }
+
+    pub fn set_mask(_mask: &[u64; MASK_WORDS]) -> bool {
+        false
+    }
+}
+
+/// The process's startup affinity mask, captured on first use so
+/// [`unpin_current_thread`] can restore it after a temporary pin (the
+/// per-node roofline bench pins the timing thread and must put it back).
+fn startup_mask() -> Option<&'static [u64; MASK_WORDS]> {
+    static MASK: OnceLock<Option<[u64; MASK_WORDS]>> = OnceLock::new();
+    MASK.get_or_init(sys::get_mask).as_ref()
+}
+
+/// Sorted CPU ids the calling thread is currently allowed to run on, or
+/// `None` where affinity is unsupported.
+pub fn allowed_cpus() -> Option<Vec<usize>> {
+    let mask = sys::get_mask()?;
+    let mut cpus = Vec::new();
+    for (w, &bits) in mask.iter().enumerate() {
+        let mut bits = bits;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            cpus.push(w * 64 + b);
+            bits &= bits - 1;
+        }
+    }
+    Some(cpus)
+}
+
+static PIN_FAILED_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Pin the calling thread to a single CPU. Returns `false` — after a
+/// one-time stderr warning — if the syscall fails or the target does
+/// not support affinity; callers then run unpinned.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    if cpu >= MAX_CPUS {
+        return false;
+    }
+    // Capture the restore mask before narrowing it.
+    let _ = startup_mask();
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    let ok = sys::set_mask(&mask);
+    if !ok && !PIN_FAILED_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "a2cid2: sched_setaffinity(cpu {cpu}) failed or is unsupported; \
+             running unpinned (further affinity warnings suppressed)"
+        );
+    }
+    ok
+}
+
+/// Restore the calling thread's affinity to the process's startup mask.
+pub fn unpin_current_thread() -> bool {
+    match startup_mask() {
+        Some(mask) => sys::set_mask(mask),
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Policy knobs
+// ---------------------------------------------------------------------
+
+/// Tri-state of the `A2CID2_PIN` / `A2CID2_NUMA` env knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// `0`: never pin / never first-touch.
+    Off,
+    /// `1`: always attempt (degrading gracefully on failure).
+    On,
+    /// unset or `auto`: engage only on multi-node machines.
+    Auto,
+}
+
+fn parse_policy(raw: Option<&str>, var: &str, warned: &AtomicBool) -> Policy {
+    match raw {
+        None | Some("") | Some("auto") => Policy::Auto,
+        Some("0") => Policy::Off,
+        Some("1") => Policy::On,
+        Some(other) => {
+            if !warned.swap(true, Ordering::Relaxed) {
+                eprintln!("a2cid2: ignoring invalid {var}={other:?} (expected 0|1|auto)");
+            }
+            Policy::Auto
+        }
+    }
+}
+
+/// Parsed `A2CID2_PIN` policy.
+pub fn pin_policy() -> Policy {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    parse_policy(
+        crate::config::env::knobs().pin.as_deref(),
+        "A2CID2_PIN",
+        &WARNED,
+    )
+}
+
+/// Parsed `A2CID2_NUMA` policy.
+pub fn numa_policy() -> Policy {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    parse_policy(
+        crate::config::env::knobs().numa.as_deref(),
+        "A2CID2_NUMA",
+        &WARNED,
+    )
+}
+
+fn effective(policy: Policy) -> bool {
+    match policy {
+        Policy::Off => false,
+        Policy::On => true,
+        Policy::Auto => topology().n_nodes() > 1,
+    }
+}
+
+/// Should pool lanes (and runtime worker threads) be pinned to cores?
+pub fn pin_lanes() -> bool {
+    effective(pin_policy())
+}
+
+/// Should large [`gossip::pool::AlignedVec`](crate::gossip::pool::AlignedVec)
+/// buffers be first-touch-initialized by their owning pool lanes?
+pub fn numa_first_touch() -> bool {
+    effective(numa_policy())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parser_handles_ranges_singletons_and_garbage() {
+        assert_eq!(parse_cpu_list("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpu_list("0-2,8,10-11\n"), vec![0, 1, 2, 8, 10, 11]);
+        assert_eq!(parse_cpu_list(" 5 , 1 - 2 "), vec![1, 2, 5]);
+        assert_eq!(parse_cpu_list(""), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list("x,3,y-4"), vec![3]);
+        // Duplicates collapse.
+        assert_eq!(parse_cpu_list("1,1,1-2"), vec![1, 2]);
+    }
+
+    #[test]
+    fn topology_reports_at_least_one_node_and_cpu() {
+        let t = topology();
+        assert!(t.n_nodes() >= 1);
+        assert!(t.n_cpus() >= 1);
+        // Every slot resolves to a CPU that the topology contains.
+        let all: Vec<usize> = t.nodes.iter().flatten().copied().collect();
+        for slot in 0..t.n_cpus() * 2 + 3 {
+            let cpu = t.cpu_for_slot(slot).expect("slot must map to a cpu");
+            assert!(all.contains(&cpu));
+            assert!(t.node_of_slot(slot).unwrap() < t.n_nodes());
+        }
+    }
+
+    #[test]
+    fn slot_interleave_spreads_across_nodes_round_robin() {
+        let t = Topology {
+            nodes: vec![vec![0, 1], vec![4, 5]],
+        };
+        let cpus: Vec<usize> = (0..6).map(|s| t.cpu_for_slot(s).unwrap()).collect();
+        assert_eq!(cpus, vec![0, 4, 1, 5, 0, 4]);
+    }
+
+    #[test]
+    fn pinning_roundtrip_never_panics_and_restores_affinity() {
+        // On Linux this pins to the first allowed CPU and restores the
+        // startup mask; on other targets both calls are no-ops → false.
+        if let Some(cpus) = allowed_cpus() {
+            let before = cpus.clone();
+            let c = *cpus.first().expect("non-empty allowed set");
+            if pin_current_thread(c) {
+                assert_eq!(allowed_cpus().unwrap(), vec![c]);
+                assert!(unpin_current_thread());
+                assert_eq!(allowed_cpus().unwrap(), before);
+            }
+        } else {
+            assert!(!pin_current_thread(0));
+            assert!(!unpin_current_thread());
+        }
+    }
+
+    #[test]
+    fn policy_parser_accepts_tri_state_and_warns_on_garbage() {
+        let w = AtomicBool::new(false);
+        assert_eq!(parse_policy(None, "X", &w), Policy::Auto);
+        assert_eq!(parse_policy(Some(""), "X", &w), Policy::Auto);
+        assert_eq!(parse_policy(Some("auto"), "X", &w), Policy::Auto);
+        assert_eq!(parse_policy(Some("0"), "X", &w), Policy::Off);
+        assert_eq!(parse_policy(Some("1"), "X", &w), Policy::On);
+        assert!(!w.load(Ordering::Relaxed));
+        assert_eq!(parse_policy(Some("yes"), "X", &w), Policy::Auto);
+        assert!(w.load(Ordering::Relaxed));
+    }
+}

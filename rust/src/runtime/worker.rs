@@ -267,11 +267,22 @@ pub fn run_async(
     let (coord_tx, coord_handle) = spawn_coordinator(wall.clone());
     let start = Instant::now();
 
+    // Worker→core affinity: with `A2CID2_PIN` engaged and enough CPUs, a
+    // worker's gradient and comm threads share one core (they alternate
+    // on the same state and published cell, so co-locating them keeps
+    // that traffic within one cache hierarchy; the node-major slot
+    // interleave spreads distinct workers across NUMA nodes). With more
+    // workers than CPUs the oversubscription would turn pinning into a
+    // scheduling straitjacket, so the runtime leaves placement to the OS.
+    let topo = crate::locality::topology();
+    let pin_workers = crate::locality::pin_lanes() && n <= topo.n_cpus();
+
     let mut grad_handles = Vec::new();
     let mut comm_handles = Vec::new();
     for w in (0..n).rev() {
         let inbox = inboxes.pop().unwrap();
         let src = grad_sources.pop().unwrap();
+        let cpu = if pin_workers { topo.cpu_for_slot(w) } else { None };
         grad_handles.push(spawn_grad_thread(
             w,
             src,
@@ -280,6 +291,7 @@ pub fn run_async(
             wall.clone(),
             opts.clone(),
             start,
+            cpu,
         ));
         comm_handles.push(spawn_comm_thread(
             w,
@@ -290,6 +302,7 @@ pub fn run_async(
             core.clone(),
             wall.clone(),
             start,
+            cpu,
         ));
     }
 
@@ -452,6 +465,7 @@ pub fn run_async(
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_grad_thread(
     w: usize,
     mut src: Box<dyn GradSource>,
@@ -460,10 +474,14 @@ fn spawn_grad_thread(
     wall: Arc<WallClock>,
     opts: RuntimeOptions,
     start: Instant,
+    cpu: Option<usize>,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
         .name(format!("a2cid2-grad-{w}"))
         .spawn(move || {
+            if let Some(c) = cpu {
+                crate::locality::pin_current_thread(c);
+            }
             // The completion flag must be set on EVERY exit path (incl.
             // gradient-source failures) or the monitor loop spins forever.
             let result = grad_loop(w, &mut src, &cell, &core, &wall, &opts, start);
@@ -559,10 +577,14 @@ fn spawn_comm_thread(
     core: Arc<DynamicsCore>,
     wall: Arc<WallClock>,
     start: Instant,
+    cpu: Option<usize>,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
         .name(format!("a2cid2-comm-{w}"))
         .spawn(move || {
+            if let Some(c) = cpu {
+                crate::locality::pin_current_thread(c);
+            }
             // Leave + the completion flag must fire on EVERY exit path
             // (incl. bus errors), or the coordinator and monitor wait
             // forever on this worker.

@@ -245,6 +245,42 @@ fn dispatched_free_fns_match_scalar_reference() {
     assert_eq!(bits(&td), bits(&t_ref), "dispatched via {}", vecops::backend_name());
 }
 
+/// AVX-512 coverage is implicit above (it joins `available_backends()`
+/// when compiled and detected), which makes its ABSENCE silent. This
+/// test prints a visible skip marker when the backend is missing — so a
+/// CI log answers "did the 512-bit path actually run?" at a glance —
+/// and pins one dense end-to-end identity check when it is present.
+#[test]
+fn avx512_backend_bit_identical_or_visibly_skipped() {
+    let Some(be) = available_backends().into_iter().find(|b| b.name() == "avx512") else {
+        println!("SKIPPED: avx512 backend unavailable on this CPU/toolchain");
+        return;
+    };
+    for (i, &n) in [0usize, 15, 16, 17, 31, 33, 4097].iter().enumerate() {
+        let a0 = rv(n, 5000 + i as u64);
+        let ta0 = rv(n, 5100 + i as u64);
+        let b0 = rv(n, 5200 + i as u64);
+        let tb0 = rv(n, 5300 + i as u64);
+        let (mut a_ref, mut ta_ref) = (a0.clone(), ta0.clone());
+        let (mut b_ref, mut tb_ref) = (b0.clone(), tb0.clone());
+        scalar_backend().comm_pair_fused(
+            0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut a_ref, &mut ta_ref, &mut b_ref, &mut tb_ref,
+        );
+        let (mut a, mut ta) = (a0.clone(), ta0.clone());
+        let (mut b, mut tb) = (b0.clone(), tb0.clone());
+        be.comm_pair_fused(0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut a, &mut ta, &mut b, &mut tb);
+        assert_eq!(bits(&a), bits(&a_ref), "avx512 comm_pair a len={n}");
+        assert_eq!(bits(&ta), bits(&ta_ref), "avx512 comm_pair ta len={n}");
+        assert_eq!(bits(&b), bits(&b_ref), "avx512 comm_pair b len={n}");
+        assert_eq!(bits(&tb), bits(&tb_ref), "avx512 comm_pair tb len={n}");
+        assert_eq!(
+            be.sq_dist(&a0, &b0).to_bits(),
+            scalar_backend().sq_dist(&a0, &b0).to_bits(),
+            "avx512 sq_dist len={n}"
+        );
+    }
+}
+
 /// `sq_dist` across pool widths: the pooled consensus path never calls
 /// it chunked (the striped order is a whole-slice contract), but the
 /// large-dim sizes here overlap the pool threshold region so any future

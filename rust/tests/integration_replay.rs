@@ -1,8 +1,10 @@
 //! The determinism replay, promoted from CI into `cargo test`: the
 //! seeded churn scenario (topology switch + dropout window + a
 //! leave/join cycle) must produce BIT-identical output across kernel-pool
-//! widths (1 and 4) AND kernel backends (scalar reference vs the
-//! auto-dispatched SIMD path), and the FNV checksum over the final
+//! widths (1 and 4), kernel backends (scalar reference vs the
+//! auto-dispatched SIMD path), AND thread affinity (`A2CID2_PIN=0/1` —
+//! pinned lanes + first-touch placement), and the FNV checksum over the
+//! final
 //! averaged parameters must reproduce the checked-in golden value
 //! (`rust/oracle/replay_golden.toml` — blessed on first run, pinned
 //! thereafter; see `testing::golden`).
@@ -33,17 +35,18 @@ const ARGS: [&str; 10] = [
     "replay", "--scenario", SCENARIO, "--workers", "8", "--steps", "40", "--seed", "7", "--dim",
 ];
 
-fn replay_at(width: &str, backend: &str) -> String {
+fn replay_at(width: &str, backend: &str, pin: &str) -> String {
     let out = Command::new(env!("CARGO_BIN_EXE_a2cid2"))
         .args(ARGS)
         .arg("65536")
         .env("A2CID2_POOL_THREADS", width)
         .env("A2CID2_KERNEL_BACKEND", backend)
+        .env("A2CID2_PIN", pin)
         .output()
         .expect("spawn a2cid2 replay");
     assert!(
         out.status.success(),
-        "replay at pool width {width} / backend '{backend}' failed:\n{}",
+        "replay at pool width {width} / backend '{backend}' / pin {pin} failed:\n{}",
         String::from_utf8_lossy(&out.stderr)
     );
     String::from_utf8(out.stdout).expect("replay output is UTF-8")
@@ -61,31 +64,39 @@ fn extract_checksum(stdout: &str) -> String {
 
 #[test]
 fn churn_replay_reproduces_golden_checksums_across_widths_and_backends() {
-    // The reference cell: serial scalar.
-    let reference = replay_at("1", "scalar");
+    // The reference cell: serial scalar, affinity off.
+    let reference = replay_at("1", "scalar", "0");
     // The probe must actually engage the pool, or the width axis tests
     // nothing. (Backend engagement is asserted separately below: a
     // typo'd backend name panics the subprocess, failing replay_at.)
-    let pooled_scalar = replay_at("4", "scalar");
+    let pooled_scalar = replay_at("4", "scalar", "0");
     assert!(
         pooled_scalar.contains("pool ON"),
         "probe did not engage the pool:\n{pooled_scalar}"
     );
 
-    // Cross-width and cross-backend bit-determinism: the entire stdout —
-    // event counts, checksum, everything printed — must be identical in
-    // all four cells. This is the in-process half of the contract; no CI
-    // dependency.
-    for (width, backend) in [("4", "scalar"), ("1", "auto"), ("4", "auto")] {
-        let run = if width == "4" && backend == "scalar" {
+    // Cross-width, cross-backend, and cross-affinity bit-determinism:
+    // the entire stdout — event counts, checksum, everything printed —
+    // must be identical in every cell. `A2CID2_PIN=1` pins pool lanes
+    // and worker threads and routes buffer zeroing through first-touch
+    // placement; none of that may move a bit. This is the in-process
+    // half of the contract; no CI dependency.
+    for (width, backend, pin) in [
+        ("4", "scalar", "0"),
+        ("1", "auto", "0"),
+        ("4", "auto", "0"),
+        ("4", "scalar", "1"),
+        ("4", "auto", "1"),
+    ] {
+        let run = if width == "4" && backend == "scalar" && pin == "0" {
             pooled_scalar.clone()
         } else {
-            replay_at(width, backend)
+            replay_at(width, backend, pin)
         };
         assert_eq!(
             reference, run,
-            "replay output diverged: pool width {width}, backend '{backend}' \
-             vs serial scalar"
+            "replay output diverged: pool width {width}, backend '{backend}', \
+             pin {pin} vs serial scalar unpinned"
         );
     }
 

@@ -1,0 +1,122 @@
+//! Memory-locality regression tests: affinity pinning, first-touch
+//! placement, and sticky/stolen chunk claiming must NEVER change a bit.
+//!
+//! The contract under test (see `gossip::pool` and `locality`): chunk
+//! boundaries are fixed at `CHUNK` elements and every kernel is
+//! element-wise within its chunk, so WHERE a chunk's pages live, WHICH
+//! lane claims it, and in WHAT order the claims happen are all invisible
+//! to the arithmetic. These tests drive the full placement matrix —
+//! {pinned, unpinned} × {sticky, stolen (rotated claim offset)} × pool
+//! widths {1, 4} — against the serial reference and require exact
+//! equality, the same property the golden replay checksums pin
+//! end-to-end in CI.
+
+use a2cid2::gossip::pool::{self, AlignedVec, ChunkPool, CHUNK, PAGE};
+use a2cid2::gossip::vecops;
+use a2cid2::locality;
+use a2cid2::rng::Xoshiro256;
+
+/// 4 full chunks + a ragged tail: wide enough that a width-4 pool gives
+/// every lane a sticky chunk, ragged so the tail path is exercised.
+const DIM: usize = 4 * CHUNK + 1234;
+
+fn random_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn placement_matrix_is_bit_identical_to_serial() {
+    let mut rng = Xoshiro256::seed_from_u64(0xA2C1D2);
+    let xa0 = random_vec(&mut rng, DIM);
+    let ta0 = random_vec(&mut rng, DIM);
+    let xb0 = random_vec(&mut rng, DIM);
+    let tb0 = random_vec(&mut rng, DIM);
+
+    // Serial reference.
+    let (mut rxa, mut rta) = (xa0.clone(), ta0.clone());
+    let (mut rxb, mut rtb) = (xb0.clone(), tb0.clone());
+    vecops::comm_pair_fused(
+        0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut rxa, &mut rta, &mut rxb, &mut rtb,
+    );
+    vecops::mix_pair(0.7, 0.3, &mut rxa, &mut rta);
+
+    for extra in [0usize, 3] {
+        for pin in [false, true] {
+            let p = ChunkPool::new_with_pinning(extra, pin);
+            // Offset 0 = pure sticky claiming; nonzero offsets start
+            // every lane on another lane's range (all-stolen work).
+            for offset in [0usize, 1, 2] {
+                p.set_claim_offset(offset);
+                let (mut xa, mut ta) = (xa0.clone(), ta0.clone());
+                let (mut xb, mut tb) = (xb0.clone(), tb0.clone());
+                pool::comm_pair_fused_on(
+                    &p, 0.9, 0.1, 0.8, 0.2, 0.5, 1.5, &mut xa, &mut ta, &mut xb, &mut tb,
+                );
+                pool::mix_pair_on(&p, 0.7, 0.3, &mut xa, &mut ta);
+                let case = format!("extra={extra} pin={pin} offset={offset}");
+                assert_eq!(xa, rxa, "xa diverged: {case}");
+                assert_eq!(ta, rta, "ta diverged: {case}");
+                assert_eq!(xb, rxb, "xb diverged: {case}");
+                assert_eq!(tb, rtb, "tb diverged: {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn first_touch_buffers_are_zero_aligned_and_roundtrip() {
+    let p = ChunkPool::new_with_pinning(3, true);
+    for len in [0usize, 7, CHUNK, DIM] {
+        let v = AlignedVec::zeroed_on(&p, len);
+        assert_eq!(v.len(), len);
+        assert!(v.as_slice().iter().all(|&x| x == 0.0), "len={len} not zeroed");
+        if len * 4 >= PAGE {
+            assert_eq!(
+                v.as_slice().as_ptr() as usize % PAGE,
+                0,
+                "len={len} not page-aligned"
+            );
+        }
+    }
+    // A first-touch-placed buffer is an ordinary buffer to the kernels.
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let src = random_vec(&mut rng, DIM);
+    let mut placed = AlignedVec::zeroed_on(&p, DIM);
+    placed.as_mut_slice().copy_from_slice(&src);
+    assert_eq!(placed.as_slice(), &src[..]);
+}
+
+#[test]
+fn topology_is_sane_and_covers_every_lane_slot() {
+    let topo = locality::topology();
+    assert!(topo.n_nodes() >= 1);
+    assert!(topo.n_cpus() >= 1);
+    for slot in 0..64 {
+        let cpu = topo.cpu_for_slot(slot);
+        if let Some(c) = cpu {
+            assert!(
+                topo.nodes.iter().any(|n| n.contains(&c)),
+                "slot {slot} mapped to unknown cpu {c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pinning_roundtrip_is_harmless_wherever_it_lands() {
+    // Pin to the first known CPU (may legitimately fail under a
+    // restricted cpuset or non-Linux target), then restore the startup
+    // mask. Neither call may panic, and work proceeds either way.
+    let topo = locality::topology();
+    if let Some(c) = topo.cpu_for_slot(0) {
+        let pinned = locality::pin_current_thread(c);
+        let restored = locality::unpin_current_thread();
+        if pinned {
+            assert!(restored, "pinned but could not restore startup affinity");
+        }
+    }
+    let ones = vec![1.0f32; 64];
+    let mut x = vec![1.0f32; 64];
+    vecops::axpy(2.0, &ones, &mut x);
+    assert!(x.iter().all(|&v| v == 3.0));
+}
