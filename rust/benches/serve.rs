@@ -1,0 +1,360 @@
+//! Serve bench — the load generator for the training-as-a-service path.
+//!
+//! Measures what `a2cid2 serve` adds on top of a plain controlled run:
+//!   * training throughput (fleet grads/s) with NO snapshot readers — the
+//!     baseline the daemon must not sink;
+//!   * the same run with N concurrent reader threads hammering
+//!     `ServeControl::consensus_snapshot` off the lock-free cells:
+//!     snapshot-read QPS plus the training-throughput degradation it
+//!     costs (target <= 10% — readers retry on seqlock tears, they never
+//!     block the writers);
+//!   * post-run serving: consensus assembly latency once the fleet is
+//!     done (the daemon keeps answering `snapshot` after `stop`);
+//!   * the runtime checkpoint path: encode+decode round trip, the full
+//!     save→load cycle through `write_atomic`, and the FNV-1a checksum.
+//!
+//! Alongside the printed table every row lands machine-readable in
+//! `BENCH_serve.json` (same `kind: kernel|derived` tagging as
+//! `BENCH_perf.json`) so the degradation number is pinned for future PRs.
+//!
+//! `A2CID2_BENCH_FULL=1` raises sizes and reader counts;
+//! `A2CID2_BENCH_SMOKE=1` shrinks everything to a CI-sized smoke run.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use a2cid2::config::Method;
+use a2cid2::data::{GaussianMixture, Sharding};
+use a2cid2::graph::{Graph, Topology};
+use a2cid2::metrics::Table;
+use a2cid2::model::{Logistic, Model};
+use a2cid2::optim::LrSchedule;
+use a2cid2::rng::Xoshiro256;
+use a2cid2::runtime::serve::{fnv1a_params, RuntimeCheckpoint};
+use a2cid2::runtime::{
+    run_async_controlled, GradSource, RuntimeOptions, RustGradSource, ServeControl,
+};
+
+/// Time `f` over `iters` iterations after `warmup`, returning seconds/iter.
+fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Table + machine-readable JSON rows, following `BENCH_perf.json`'s
+/// schema: `kind: "kernel"` rows carry `ns_per_iter`/`gb_per_s`,
+/// `kind: "derived"` rows carry `value`.
+struct Bench {
+    table: Table,
+    json: Vec<String>,
+}
+
+impl Bench {
+    fn new() -> Self {
+        Self {
+            table: Table::new(
+                "Serve — snapshot load vs training throughput",
+                &["path", "elements", "time/iter", "value", "notes"],
+            ),
+            json: Vec::new(),
+        }
+    }
+
+    fn row(&mut self, kernel: &str, elements: usize, secs: f64, bytes: usize, notes: &str) {
+        let gbs = bytes as f64 / secs / 1e9;
+        let time = if secs >= 1e-4 {
+            format!("{:.2} ms", secs * 1e3)
+        } else {
+            format!("{:.2} us", secs * 1e6)
+        };
+        self.table.row(&[
+            kernel.into(),
+            elements.to_string(),
+            time,
+            format!("{gbs:.1} GB/s"),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"elements\": {elements}, \"kind\": \"kernel\", \
+             \"ns_per_iter\": {:.1}, \"gb_per_s\": {gbs:.3}}}",
+            secs * 1e9
+        ));
+    }
+
+    fn note_row(
+        &mut self,
+        kernel: &str,
+        elements: usize,
+        secs: f64,
+        display: &str,
+        value: f64,
+        notes: &str,
+    ) {
+        self.table.row(&[
+            kernel.into(),
+            elements.to_string(),
+            format!("{:.0} ns", secs * 1e9),
+            display.into(),
+            notes.into(),
+        ]);
+        self.json.push(format!(
+            "{{\"kernel\": \"{kernel}\", \"elements\": {elements}, \"kind\": \"derived\", \
+             \"value\": {value:.4}}}"
+        ));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "[")?;
+        for (i, row) in self.json.iter().enumerate() {
+            let comma = if i + 1 == self.json.len() { "" } else { "," };
+            writeln!(f, "  {row}{comma}")?;
+        }
+        writeln!(f, "]")?;
+        Ok(())
+    }
+}
+
+/// Outcome of one loaded run: training throughput plus the reader side.
+struct Loaded {
+    grads_per_sec: f64,
+    wall_secs: f64,
+    /// Successful (`Some`) consensus reads across all reader threads.
+    reads: u64,
+    /// Reads per second over the training window.
+    qps: f64,
+    model_dim: usize,
+    /// The control block outlives the run — the daemon serves snapshots
+    /// and checkpoints off it after `stop`, and so do the post-run rows.
+    ctrl: Arc<ServeControl>,
+    avg_params: Vec<f32>,
+    grads_total: u64,
+}
+
+/// One controlled training run with `readers` concurrent snapshot-reader
+/// threads. The grad sources are paced (`pace` per step) so training
+/// models real gradient compute instead of a pure CPU spin — that is the
+/// regime the <= 10% degradation target is meant for.
+fn run_loaded(n: usize, steps: u64, pace: Duration, readers: usize, ds_dim: usize) -> Loaded {
+    let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+    let ds = Arc::new(
+        GaussianMixture { dim: ds_dim, n_classes: 2, margin: 3.0, sigma: 1.0 }.sample(128, 11),
+    );
+    let shards = Sharding::FullShuffled.assign(&ds, n, 11);
+    let model = Arc::new(Logistic::new(ds, 0.0));
+    let model_dim = model.dim();
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let init = model.init_params(&mut rng);
+    let sources: Vec<Box<dyn GradSource>> = (0..n)
+        .map(|w| {
+            let mut s = RustGradSource::new(
+                model.clone() as Arc<dyn Model>,
+                shards.per_worker[w].clone(),
+                4,
+                w as u64,
+            );
+            s.extra_delay = Some(pace);
+            Box::new(s) as Box<dyn GradSource>
+        })
+        .collect();
+    let opts = RuntimeOptions {
+        comm_rate: 1.0,
+        method: Method::Acid,
+        lr: LrSchedule::Constant { lr: 0.05 },
+        momentum: 0.9,
+        steps_per_worker: steps,
+        seed: 11,
+        monitor_interval: Duration::from_millis(5),
+        link_delay: None,
+        scenario: None,
+    };
+
+    let ctrl = Arc::new(ServeControl::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reads = Arc::new(AtomicU64::new(0));
+    // Readers start before the run and tolerate the pre-startup `None`;
+    // only `Some` reads count toward QPS.
+    let handles: Vec<_> = (0..readers)
+        .map(|_| {
+            let ctrl = ctrl.clone();
+            let stop = stop.clone();
+            let reads = reads.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    match ctrl.consensus_snapshot() {
+                        Some(snap) => {
+                            std::hint::black_box(snap[0]);
+                            reads.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let res = run_async_controlled(graph, sources, init, opts, ctrl.clone())
+        .expect("loaded run completes");
+    stop.store(true, Ordering::Release);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let grads_total: u64 = res.grads_per_worker.iter().sum();
+    let reads = reads.load(Ordering::Acquire);
+    Loaded {
+        grads_per_sec: grads_total as f64 / res.wall_secs,
+        wall_secs: res.wall_secs,
+        reads,
+        qps: reads as f64 / res.wall_secs,
+        model_dim,
+        ctrl,
+        avg_params: res.avg_params,
+        grads_total,
+    }
+}
+
+fn main() {
+    let knobs = a2cid2::config::env::knobs();
+    let full = knobs.bench_full;
+    let smoke = knobs.bench_smoke;
+
+    let n_workers = 4usize;
+    let (steps, ds_dim) = if smoke {
+        (200u64, 512usize)
+    } else if full {
+        (4_000, 16_384)
+    } else {
+        (1_000, 4_096)
+    };
+    let pace = Duration::from_micros(250);
+    let reader_counts: &[usize] = if smoke {
+        &[2]
+    } else if full {
+        &[1, 2, 4, 8]
+    } else {
+        &[1, 4]
+    };
+
+    let mut bench = Bench::new();
+
+    // ---- Baseline: the fleet alone -----------------------------------
+    let base = run_loaded(n_workers, steps, pace, 0, ds_dim);
+    let dim = base.model_dim;
+    bench.note_row(
+        "train throughput (no readers)",
+        dim,
+        base.wall_secs / (base.grads_total.max(1) as f64),
+        &format!("{:.0} grads/s", base.grads_per_sec),
+        base.grads_per_sec,
+        &format!("{n_workers} workers, {steps} steps, paced {}us", pace.as_micros()),
+    );
+
+    // ---- Loaded: snapshot readers vs the same fleet ------------------
+    let mut worst_degradation = 0.0f64;
+    for &r in reader_counts {
+        let loaded = run_loaded(n_workers, steps, pace, r, ds_dim);
+        bench.note_row(
+            &format!("train throughput ({r} readers)"),
+            dim,
+            loaded.wall_secs / (loaded.grads_total.max(1) as f64),
+            &format!("{:.0} grads/s", loaded.grads_per_sec),
+            loaded.grads_per_sec,
+            &format!("{} consensus reads landed", loaded.reads),
+        );
+        bench.note_row(
+            &format!("snapshot QPS ({r} readers)"),
+            dim,
+            if loaded.qps > 0.0 { 1.0 / loaded.qps } else { 0.0 },
+            &format!("{:.0}/s", loaded.qps),
+            loaded.qps,
+            "consensus_snapshot off lock-free cells",
+        );
+        let degradation =
+            (base.grads_per_sec - loaded.grads_per_sec) / base.grads_per_sec * 100.0;
+        worst_degradation = worst_degradation.max(degradation);
+        bench.note_row(
+            &format!("train degradation ({r} readers)"),
+            dim,
+            loaded.wall_secs / (loaded.grads_total.max(1) as f64),
+            &format!("{degradation:.1}%"),
+            degradation,
+            "vs no readers; target <= 10%",
+        );
+    }
+    bench.note_row(
+        "train degradation (worst)",
+        dim,
+        0.0,
+        &format!("{worst_degradation:.1}%"),
+        worst_degradation,
+        "max over reader counts; target <= 10%",
+    );
+
+    // ---- Post-run serving: the daemon after `stop` -------------------
+    // The cells stay registered after the run returns, so `snapshot` and
+    // `checkpoint` keep working; these rows time that quiescent path.
+    let ctrl = base.ctrl;
+    let iters = if smoke { 20 } else { 200 };
+    let t = time_it(3, iters, || {
+        std::hint::black_box(ctrl.consensus_snapshot());
+    });
+    // n cell reads + one mean write per element.
+    bench.row(
+        "consensus snapshot (post-run)",
+        dim,
+        t,
+        4 * dim * (n_workers + 1),
+        &format!("mean over {n_workers} cells"),
+    );
+
+    // ---- Runtime checkpoint path -------------------------------------
+    let ck = RuntimeCheckpoint {
+        n_workers: n_workers as u32,
+        seed: 11,
+        grads: base.grads_total,
+        params: base.avg_params.clone(),
+    };
+    let t = time_it(3, iters, || {
+        let bytes = ck.to_bytes();
+        let back = RuntimeCheckpoint::from_bytes(&bytes).unwrap();
+        std::hint::black_box(back.params[0]);
+    });
+    bench.row("checkpoint encode+decode", dim, t, 2 * 4 * dim, "in-memory round trip");
+
+    let dir = std::env::temp_dir().join(format!("a2serve_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create bench temp dir");
+    let path = dir.join("bench.ckpt");
+    let t = time_it(2, iters.min(50), || {
+        ck.save(&path).expect("checkpoint save");
+        let back = RuntimeCheckpoint::load(&path).expect("checkpoint load");
+        std::hint::black_box(back.grads);
+    });
+    bench.row("checkpoint save+load", dim, t, 2 * 4 * dim, "write_atomic staging + rename");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let t = time_it(3, iters, || {
+        std::hint::black_box(fnv1a_params(&ck.params));
+    });
+    bench.row("fnv1a checksum", dim, t, 4 * dim, "1R, the `snapshot` reply hash");
+
+    bench.table.print();
+    if worst_degradation > 10.0 {
+        println!(
+            "WARNING: snapshot readers cost {worst_degradation:.1}% training throughput \
+             (target <= 10%)"
+        );
+    }
+    match bench.write_json("BENCH_serve.json") {
+        Ok(()) => println!("wrote BENCH_serve.json ({} rows)", bench.json.len()),
+        Err(e) => println!("(failed to write BENCH_serve.json: {e})"),
+    }
+}

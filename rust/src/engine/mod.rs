@@ -28,5 +28,5 @@ pub use self::core::{
     A2cid2Rule, AdPsgdRule, DynamicsCore, LocalSgdRule, LossEma, UpdateRule,
 };
 pub use multiplex::{Frame, MultiplexEngine};
-pub use sampler::BatchSampler;
-pub use scheduler::{Scheduler, Tick, VirtualTimeScheduler, WallClock};
+pub use sampler::{BatchSampler, SamplerState};
+pub use scheduler::{Scheduler, SchedulerState, Tick, VirtualTimeScheduler, WallClock};

@@ -54,6 +54,14 @@ pub struct NetChange {
     pub chis: Option<(f64, f64)>,
 }
 
+/// The resumable position of a [`VirtualTimeScheduler`] — see
+/// [`VirtualTimeScheduler::state`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerState {
+    pub queue: crate::simulator::events::EventQueueState,
+    pub applied: u64,
+}
+
 /// Exact virtual-time scheduler: the superposed Poisson clock plus the
 /// plan's pending updates, applied *between* events in timestamp order.
 pub struct VirtualTimeScheduler {
@@ -96,6 +104,36 @@ impl VirtualTimeScheduler {
 
     pub fn n_comm_events(&self) -> u64 {
         self.queue.n_comm_events
+    }
+
+    /// Checkpoint surface: the Poisson clock's full position plus the
+    /// count of plan updates already applied. The pending-update tail and
+    /// the union edge list are NOT captured — both are pure functions of
+    /// the compiled plan, which restore reconstructs. Call only with
+    /// [`VirtualTimeScheduler::drain_changes`] drained (checkpoints sit
+    /// at tick boundaries); a pending change would be silently dropped.
+    pub fn state(&self) -> SchedulerState {
+        debug_assert!(self.changes.is_empty(), "checkpoint with undrained changes");
+        SchedulerState { queue: self.queue.state(), applied: self.applied }
+    }
+
+    /// Restore a scheduler freshly built over the SAME plan and seed
+    /// family: drops the already-applied prefix of the pending updates,
+    /// then resumes the event queue exactly.
+    pub fn restore(&mut self, st: &SchedulerState) -> crate::Result<()> {
+        anyhow::ensure!(
+            (st.applied as usize) <= self.pending.len(),
+            "checkpoint applied {} updates but the plan compiles only {}",
+            st.applied,
+            self.pending.len(),
+        );
+        for _ in 0..st.applied {
+            self.pending.pop_front();
+        }
+        self.queue.restore(&st.queue)?;
+        self.applied = st.applied;
+        self.changes.clear();
+        Ok(())
     }
 
     /// Pop the next dynamics event, applying every plan update whose time
@@ -521,6 +559,33 @@ mod tests {
         assert!(!saw_non_ring_before_switch, "chord fired before the switch");
         assert!(saw_non_ring_after_switch, "chords never fired after the switch");
         assert_eq!(sched.updates_applied(), 1);
+    }
+
+    #[test]
+    fn virtual_scheduler_state_round_trip_resumes_the_tick_stream() {
+        // Drive across a phase switch + churn so `applied`, epochs, and
+        // stale heap entries are all non-trivial at the snapshot point,
+        // then restore a FRESH scheduler and compare tick tails exactly.
+        let p = plan("ring@0,complete@0.5;leave=0.25:0.25:3;join=0.25:0.75", 8, 100.0);
+        let mut sched = VirtualTimeScheduler::new(&p, 21);
+        for _ in 0..1500 {
+            sched.next().unwrap();
+            sched.drain_changes();
+        }
+        let st = sched.state();
+        assert!(sched.updates_applied() > 0, "snapshot sits past a plan update");
+        let tail: Vec<Tick> = (0..1500).map(|_| sched.next().unwrap()).collect();
+        let mut resumed = VirtualTimeScheduler::new(&p, 21);
+        resumed.restore(&st).unwrap();
+        assert_eq!(resumed.updates_applied(), st.applied);
+        let resumed_tail: Vec<Tick> = (0..1500).map(|_| resumed.next().unwrap()).collect();
+        assert_eq!(tail, resumed_tail, "bit-identical resumed tick stream");
+        // A checkpoint claiming more applied updates than the plan has is
+        // rejected.
+        let mut bad = st.clone();
+        bad.applied = p.updates.len() as u64 + 1;
+        let mut fresh = VirtualTimeScheduler::new(&p, 21);
+        assert!(fresh.restore(&bad).is_err());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! a2cid2 compare     [--json PATH]            # algorithm zoo head-to-head
 //! a2cid2 timeline    [--workers 8] [--rounds 20]
 //! a2cid2 replay      [--scenario S] [--dim D] [--out trace.csv]   # determinism probe
+//!                    [--checkpoint-at K --checkpoint ck.bin] [--restore ck.bin]
+//! a2cid2 serve       --socket /tmp/a2.sock [--workers N --dim D --steps S] [--restore run.ckpt]
 //! ```
 //!
 //! Every subcommand shares ONE option namespace declared once in
@@ -66,6 +68,22 @@ fn cli() -> Cli {
         .opt("rounds", "timeline rounds", Some("20"))
         .opt("dim", "replay: feature dimension of the synthetic model", Some("16"))
         .opt("out", "CSV output path for curves", None)
+        .opt("socket", "serve: Unix control socket path", None)
+        .opt(
+            "checkpoint",
+            "replay: write a simulator checkpoint to PATH at --checkpoint-at, then exit",
+            None,
+        )
+        .opt(
+            "checkpoint-at",
+            "replay: engine tick to checkpoint at (simulated interruption)",
+            None,
+        )
+        .opt(
+            "restore",
+            "replay: resume from a simulator checkpoint; serve: start from a runtime checkpoint",
+            None,
+        )
         .opt("filter", "experiment all: only run ids containing SUBSTR", None)
         .opt(
             "json",
@@ -121,7 +139,16 @@ fn cli() -> Cli {
             "determinism probe: seeded scenario run + FNV checksum of the averaged parameters",
             &[
                 "config", "workers", "topology", "scenario", "method", "algo", "task", "rate",
-                "steps", "lr", "seed", "dim", "out",
+                "steps", "lr", "seed", "dim", "out", "checkpoint", "checkpoint-at", "restore",
+            ],
+            &["full"],
+        )
+        .sub(
+            "serve",
+            "training-as-a-service daemon: live injection, snapshots, checkpoints over a Unix socket",
+            &[
+                "workers", "topology", "method", "rate", "steps", "lr", "seed", "dim", "socket",
+                "restore",
             ],
             &["full"],
         )
@@ -273,15 +300,34 @@ fn real_main() -> a2cid2::Result<()> {
                 cfg.seed,
                 cfg.scenario.as_ref().map_or("-".to_string(), |s| s.to_string()),
             );
-            let res = a2cid2::simulator::run_simulation(&cfg, model, &shards)?;
+            let mut engine = a2cid2::simulator::SimEngine::new(&cfg, model, &shards)?;
+            if let Some(path) = args.get("restore") {
+                // Resume a previously-interrupted run: the constructor
+                // rebuilt everything derivable from the config; the
+                // checkpoint overwrites the mutable loop state, so the
+                // resumed trace is bit-identical to an uninterrupted one.
+                let ck = a2cid2::simulator::SimCheckpoint::load(std::path::Path::new(path))?;
+                engine.restore(&ck)?;
+                println!("replay: restored from {path} (tick {})", engine.ticks_done());
+            }
+            if let Some(k) = args.get("checkpoint-at") {
+                // Simulated interruption: step to tick K, persist the
+                // engine state, exit WITHOUT finishing the run.
+                let k: u64 = k
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--checkpoint-at must be a tick count: {e}"))?;
+                let out = args.get("checkpoint").ok_or_else(|| {
+                    anyhow::anyhow!("--checkpoint-at needs --checkpoint PATH to write to")
+                })?;
+                while engine.ticks_done() < k && engine.step()? {}
+                engine.checkpoint().save(std::path::Path::new(out))?;
+                println!("replay: checkpointed at tick {} to {out}", engine.ticks_done());
+                return Ok(());
+            }
+            let res = engine.run()?;
             // FNV-1a over the averaged parameters' exact bit patterns:
             // any single-ULP divergence across runs/pool widths flips it.
-            let mut h: u64 = 0xcbf29ce484222325;
-            for v in &res.avg_params {
-                for b in v.to_bits().to_le_bytes() {
-                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-                }
-            }
+            let h = a2cid2::runtime::serve::fnv1a_params(&res.avg_params);
             println!(
                 "replay: grads={} comms={} net_updates={} checksum={h:016x}",
                 res.n_grads, res.n_comms, res.net_updates
@@ -289,6 +335,94 @@ fn real_main() -> a2cid2::Result<()> {
             if let Some(path) = args.get("out") {
                 res.recorder.write_csv(std::path::Path::new(path), 2000)?;
                 println!("trace written to {path}");
+            }
+        }
+        Some("serve") => {
+            // Training as a service: the same synthetic Logistic task as
+            // `replay`, run on the threaded runtime under a ServeDaemon —
+            // inject scenarios, read snapshots, and checkpoint over the
+            // Unix control socket; `shutdown` ends the process.
+            use a2cid2::model::Model;
+            let n: usize = args.get_parse("workers")?;
+            let topo = Topology::parse(args.get("topology").unwrap())?;
+            let method = Method::parse(args.get("method").unwrap())?;
+            let rate: f64 = args.get_parse("rate")?;
+            let steps: u64 = args.get_parse("steps")?;
+            let lr: f64 = args.get_parse("lr")?;
+            let seed: u64 = args.get_parse("seed")?;
+            let dim: usize = args.get_parse("dim")?;
+            let socket = args
+                .get("socket")
+                .ok_or_else(|| anyhow::anyhow!("serve needs --socket PATH"))?;
+            let graph = std::sync::Arc::new(Graph::build(&topo, n)?);
+            let ds = std::sync::Arc::new(
+                a2cid2::data::GaussianMixture { dim, n_classes: 2, margin: 3.0, sigma: 1.0 }
+                    .sample(64, seed ^ 0xD5),
+            );
+            let shards = a2cid2::data::Sharding::FullShuffled.assign(&ds, n, seed);
+            let model = std::sync::Arc::new(a2cid2::model::Logistic::new(ds, 0.0));
+            let init = match args.get("restore") {
+                Some(p) => {
+                    let ck = a2cid2::runtime::serve::RuntimeCheckpoint::load(
+                        std::path::Path::new(p),
+                    )?;
+                    anyhow::ensure!(
+                        ck.n_workers as usize == n && ck.params.len() == model.dim(),
+                        "checkpoint {p} is for n={} dim={}, serve was asked for n={n} dim={}",
+                        ck.n_workers,
+                        ck.params.len(),
+                        model.dim()
+                    );
+                    println!("serve: restored consensus model from {p} (grads={})", ck.grads);
+                    ck.params
+                }
+                None => {
+                    let mut rng = a2cid2::rng::Xoshiro256::seed_from_u64(seed);
+                    model.init_params(&mut rng)
+                }
+            };
+            let sources: Vec<Box<dyn a2cid2::runtime::GradSource>> = (0..n)
+                .map(|w| {
+                    Box::new(a2cid2::runtime::RustGradSource::new(
+                        model.clone() as std::sync::Arc<dyn Model>,
+                        shards.per_worker[w].clone(),
+                        4,
+                        seed ^ (w as u64),
+                    )) as Box<dyn a2cid2::runtime::GradSource>
+                })
+                .collect();
+            let opts = a2cid2::runtime::RuntimeOptions {
+                comm_rate: rate,
+                method,
+                lr: a2cid2::optim::LrSchedule::Constant { lr },
+                momentum: 0.9,
+                steps_per_worker: steps,
+                seed,
+                monitor_interval: std::time::Duration::from_millis(20),
+                link_delay: None,
+                scenario: None,
+            };
+            println!(
+                "serve: n={n} topology={} method={} dim={} steps={steps} socket={socket}",
+                topo.name(),
+                method.name(),
+                model.dim()
+            );
+            let daemon = a2cid2::runtime::ServeDaemon::start(
+                graph,
+                sources,
+                init,
+                opts,
+                std::path::Path::new(socket),
+            )?;
+            println!("serve: listening on {socket}");
+            if let Some(r) = daemon.wait()? {
+                println!(
+                    "serve: run complete: grads={} comms={} net_updates={}",
+                    r.grads_per_worker.iter().sum::<u64>(),
+                    r.comms_per_worker.iter().sum::<u64>(),
+                    r.net_updates
+                );
             }
         }
         Some("timeline") => {

@@ -44,6 +44,19 @@ impl Sgd {
     pub fn reset(&mut self) {
         self.velocity.fill(0.0);
     }
+
+    /// Checkpoint surface: the raw velocity buffer (empty until the first
+    /// momentum-bearing [`Sgd::direction`] call — the lazy-size contract).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Overwrite the velocity buffer from a checkpoint. An empty slice
+    /// restores the pristine lazily-sized state.
+    pub fn restore_velocity(&mut self, v: &[f32]) {
+        self.velocity.clear();
+        self.velocity.extend_from_slice(v);
+    }
 }
 
 /// Learning-rate schedules.
@@ -155,6 +168,22 @@ mod tests {
         assert_eq!(opt.direction(&g), &[1.75]);
         opt.reset();
         assert_eq!(opt.direction(&g), &[1.0]);
+    }
+
+    #[test]
+    fn sgd_velocity_round_trips() {
+        let mut opt = Sgd::new(0.5);
+        let g = vec![1.0f32, 2.0];
+        opt.direction(&g);
+        opt.direction(&g);
+        let snap = opt.velocity().to_vec();
+        assert_eq!(snap, vec![1.5, 3.0]);
+        // A fresh optimizer restored from the snapshot continues the
+        // same momentum trajectory.
+        let mut fresh = Sgd::new(0.5);
+        assert!(fresh.velocity().is_empty(), "lazily sized until first use");
+        fresh.restore_velocity(&snap);
+        assert_eq!(opt.direction(&g), fresh.direction(&g));
     }
 
     #[test]

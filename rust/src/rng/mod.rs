@@ -56,6 +56,26 @@ impl Xoshiro256 {
         Self { s }
     }
 
+    /// Rebuild a generator from a previously captured [`Xoshiro256::state`].
+    /// The all-zero state is rejected (xoshiro256++ would emit zeros
+    /// forever); it can never be produced by `seed_from_u64`/`split`.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s.iter().any(|&w| w != 0), "all-zero xoshiro state");
+        Self { s }
+    }
+
+    /// The raw 256-bit stream position. `from_state(state())` resumes the
+    /// stream exactly — the checkpoint/restore surface.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Overwrite this generator's stream position in place.
+    pub fn restore(&mut self, s: [u64; 4]) {
+        assert!(s.iter().any(|&w| w != 0), "all-zero xoshiro state");
+        self.s = s;
+    }
+
     /// Next raw 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -150,6 +170,30 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn state_round_trip_resumes_the_stream() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..50).map(|_| a.next_u64()).collect();
+        // from_state resumes mid-stream…
+        let mut b = Xoshiro256::from_state(snap);
+        let resumed: Vec<u64> = (0..50).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, resumed);
+        // …and restore() rewinds in place.
+        a.restore(snap);
+        let rewound: Vec<u64> = (0..50).map(|_| a.next_u64()).collect();
+        assert_eq!(tail, rewound);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_state_rejected() {
+        Xoshiro256::from_state([0; 4]);
     }
 
     #[test]

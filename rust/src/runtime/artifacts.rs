@@ -128,25 +128,46 @@ impl Manifest {
     }
 }
 
-/// Write `contents` to `path` atomically: write a `.tmp` sibling, then
-/// rename it over the destination. Readers — CI's artifact upload, a
-/// plotter watching `BENCH_*.json` — never observe a half-written file,
-/// and a crash mid-write leaves the previous artifact intact.
+/// Write `contents` to `path` atomically: write a uniquely named staging
+/// sibling, then rename it over the destination. Readers — CI's artifact
+/// upload, a plotter watching `BENCH_*.json`, a daemon client polling a
+/// checkpoint — never observe a half-written file, and a crash mid-write
+/// leaves the previous artifact intact.
+///
+/// The staging name embeds the process id and a process-wide counter.
+/// The historical fixed `.tmp` sibling raced concurrent writers of the
+/// same destination: writer A's staging file could be overwritten by
+/// writer B mid-write and then renamed by A, publishing B's torn bytes
+/// under A's rename — or removed out from under B entirely. With unique
+/// staging names each rename publishes exactly the bytes its own writer
+/// staged; last rename wins, every observable state is some writer's
+/// complete payload.
 pub fn write_atomic(path: &Path, contents: &[u8]) -> crate::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static STAGING_SEQ: AtomicU64 = AtomicU64::new(0);
+
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
         }
     }
     let mut tmp = path.as_os_str().to_owned();
-    tmp.push(".tmp");
+    tmp.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        STAGING_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
     let tmp = PathBuf::from(tmp);
-    std::fs::write(&tmp, contents)
-        .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    if let Err(e) = std::fs::write(&tmp, contents) {
+        // A failed write must not leave a partial staging file behind
+        // (ENOSPC can fail after creating the file).
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("writing {}: {e}", tmp.display());
+    }
     if let Err(e) = std::fs::rename(&tmp, path) {
         // A failed rename must not leave the half-artifact sibling
-        // behind (a watcher globbing BENCH_*.json.tmp, or a later
-        // successful write, would trip over it).
+        // behind (a watcher globbing staging files, or a directory
+        // cleanup, would trip over it).
         let _ = std::fs::remove_file(&tmp);
         anyhow::bail!("renaming {} over {}: {e}", tmp.display(), path.display());
     }
@@ -197,6 +218,17 @@ mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
         assert!(Manifest::parse("x kind=grad\n", PathBuf::new()).is_err(), "missing file=");
     }
 
+    /// Staging files left anywhere under `dir` (any name containing
+    /// ".tmp" — the unique staging names all end with it).
+    fn staging_files(dir: &Path) -> Vec<String> {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp"))
+            .collect()
+    }
+
     #[test]
     fn write_atomic_replaces_and_leaves_no_tmp() {
         let dir = std::env::temp_dir().join("a2cid2_write_atomic_test");
@@ -206,7 +238,67 @@ mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
         assert_eq!(std::fs::read(&path).unwrap(), b"first");
         write_atomic(&path, b"second").unwrap();
         assert_eq!(std::fs::read(&path).unwrap(), b"second");
-        assert!(!dir.join("out.json.tmp").exists());
+        assert!(staging_files(&dir).is_empty(), "{:?}", staging_files(&dir));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_concurrent_writers_never_publish_torn_bytes() {
+        // The bugfix regression test: many threads hammer the SAME
+        // destination with distinct self-consistent payloads. Under the
+        // old fixed `.tmp` staging name a reader could observe a mix of
+        // two writers' bytes (writer A renames the file writer B is
+        // mid-way through rewriting); with unique staging names every
+        // read must be exactly one writer's complete payload.
+        let dir = std::env::temp_dir().join(format!(
+            "a2cid2_write_atomic_race_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("contended.bin");
+        // Payloads are constant-filled and length-tagged so any splice
+        // of two writers is detectable.
+        let payload = |w: u8| vec![w; 4096 + w as usize];
+        write_atomic(&path, &payload(1)).unwrap();
+
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for w in 1..=4u8 {
+            let path = path.clone();
+            let stop = stop.clone();
+            writers.push(std::thread::spawn(move || {
+                let mut n = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    write_atomic(&path, &payload(w)).unwrap();
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let reader = {
+            let path = path.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let bytes = std::fs::read(&path).unwrap();
+                    let w = bytes[0];
+                    assert!((1..=4).contains(&w), "unknown writer tag {w}");
+                    assert_eq!(bytes.len(), 4096 + w as usize, "torn length");
+                    assert!(bytes.iter().all(|&b| b == w), "spliced payload");
+                    reads += 1;
+                }
+                reads
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let writes: u64 = writers.into_iter().map(|h| h.join().unwrap()).sum();
+        let reads = reader.join().unwrap();
+        assert!(writes > 20, "writers made progress: {writes}");
+        assert!(reads > 20, "reader made progress: {reads}");
+        assert!(staging_files(&dir).is_empty(), "{:?}", staging_files(&dir));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -238,8 +330,9 @@ mlp_init file=mlp_init.bin kind=init model=mlp param_dim=4 seed=0
         assert!(format!("{err:#}").contains("renaming"), "{err:#}");
         assert!(dest.is_dir(), "destination left intact");
         assert!(
-            !dir.join("out.json.tmp").exists(),
-            "failed rename must not leave the .tmp sibling behind"
+            staging_files(&dir).is_empty(),
+            "failed rename must not leave staging siblings behind: {:?}",
+            staging_files(&dir)
         );
         std::fs::remove_dir_all(dir).ok();
     }

@@ -289,6 +289,15 @@ fn rendezvous_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStat
             }
         }
     }
+    // Drain-safe shutdown: on EVERY exit path (all workers left, or the
+    // channel closed) release still-queued waiters with a definitive
+    // Cancelled instead of silently dropping their reply senders. The
+    // worker side also maps a dropped sender to Stop, but an explicit
+    // reply keeps the exit ordering deterministic — a parked worker
+    // observes shutdown immediately, not whenever the drop propagates.
+    for (_, reply) in queue.drain(..) {
+        let _ = reply.send(PairReply::Cancelled);
+    }
     stats
 }
 
@@ -451,6 +460,13 @@ fn batched_loop(net: &WallClock, rx: mpsc::Receiver<CoordMsg>) -> PairingStats {
             }
         }
     }
+    // Drain-safe shutdown: same contract as the rendezvous loop — every
+    // still-queued waiter gets a definitive Cancelled on coordinator
+    // exit, never a silently dropped reply sender.
+    for (_, w) in waits.queued_in_arrival_order() {
+        let (_, reply) = waits.take(w).expect("queued snapshot");
+        let _ = reply.send(PairReply::Cancelled);
+    }
     stats
 }
 
@@ -475,6 +491,24 @@ mod tests {
         let (rtx, rrx) = mpsc::channel();
         tx.send(CoordMsg::Available { worker, reply: rtx }).unwrap();
         rrx
+    }
+
+    #[test]
+    fn coordinator_exit_releases_queued_waiters() {
+        // A worker parked waiting for a pairing whose coordinator exits
+        // (every channel sender dropped) must observe shutdown as a
+        // definitive Cancelled reply — not a silently dropped sender.
+        for strategy in BOTH {
+            let (tx, handle) = spawn_coordinator_with(ring(4), strategy);
+            let r0 = available(&tx, 0); // no partner: stays queued
+            drop(tx); // coordinator's recv errors -> exit path
+            assert_eq!(
+                r0.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+                PairReply::Cancelled,
+                "{strategy:?}"
+            );
+            handle.join().unwrap();
+        }
     }
 
     #[test]

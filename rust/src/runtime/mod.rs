@@ -34,11 +34,16 @@ pub mod coordinator;
 pub mod pjrt;
 #[cfg(feature = "pjrt")]
 pub mod pjrt_grad;
+pub mod serve;
 pub mod snapshot;
 pub mod worker;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use clock::TimeNormalizer;
 pub use coordinator::{CoordMsg, MatchStrategy, PairReply, PairingStats};
+pub use serve::ServeDaemon;
 pub use snapshot::{ConsensusAccumulator, SnapshotCell};
-pub use worker::{run_async, GradSource, RustGradSource, RuntimeOptions, RuntimeResult};
+pub use worker::{
+    run_async, run_async_controlled, GradSource, RustGradSource, RuntimeOptions, RuntimeResult,
+    ServeControl,
+};

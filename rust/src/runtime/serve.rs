@@ -1,0 +1,692 @@
+//! `a2cid2 serve` — training as a service over a Unix control socket.
+//!
+//! A [`ServeDaemon`] owns one threaded-runtime training run
+//! ([`crate::runtime::worker::run_async_controlled`]) plus a Unix domain
+//! socket accept loop. Clients speak a line-delimited protocol: one
+//! UTF-8 command line in, exactly one JSON object line back.
+//!
+//! ```text
+//! status                 → {"running": …, "done": …, "grads": …, "injected_applied": …, "metrics": …}
+//! inject <scenario>      → {"ok": true, "updates": N, "dropped_edges": D}
+//! snapshot               → {"dim": …, "checksum": "<fnv1a hex>", "norm": …}
+//! metrics [cursor]       → {"next": C, "records": [ … ]}
+//! checkpoint <path>      → {"ok": true, "path": …, "grads": …, "dim": …}
+//! stop                   → {"ok": true}          (drain-stop the run; daemon keeps serving)
+//! shutdown               → {"ok": true}          (stop + exit the accept loop)
+//! ```
+//!
+//! Errors come back as `{"error": "…"}` — the connection stays usable.
+//!
+//! `inject` reuses the [`Scenario`] grammar verbatim: the daemon compiles
+//! the string with [`Scenario::compile`] and queues every resulting
+//! [`NetUpdate`] through [`ServeControl::inject`]; the monitor applies
+//! them on its next tick via the same epoch-gated [`WallClock`] publish
+//! path a scenario replay uses (`t` stamps are ignored — injection means
+//! *now*). A single-phase scenario (`complete@0`) compiles to zero
+//! updates, so the daemon synthesizes one from the plan's initial state:
+//! "switch to this topology now". Because a compiled plan indexes edge
+//! rates by ITS OWN union edge list while the running [`WallClock`] is
+//! fixed to the union the run started with, every injected update is
+//! remapped onto the running union — rates for edges the running union
+//! does not carry are dropped (and counted in the reply), running-union
+//! edges the injected topology omits go silent (rate 0).
+//!
+//! `snapshot` and `checkpoint` assemble the consensus model off the
+//! per-worker lock-free [`crate::runtime::SnapshotCell`]s — concurrent
+//! readers never take a state lock and never stall the training writers.
+//! A runtime checkpoint ([`RuntimeCheckpoint`]) is the consensus
+//! parameters plus run metadata in a versioned binary format, written
+//! through [`write_atomic`]; a restart is a fresh run seeded with those
+//! parameters (the threaded runtime is wall-clock driven, so unlike the
+//! virtual-time simulator's [`crate::simulator::SimCheckpoint`] there is
+//! no bit-identical trace to resume — the contract is "continue training
+//! from the saved consensus model").
+//!
+//! [`WallClock`]: crate::engine::WallClock
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write as _};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::scenario::NetUpdate;
+use crate::config::Scenario;
+use crate::graph::Graph;
+use crate::metrics::Record;
+use crate::runtime::artifacts::write_atomic;
+use crate::runtime::worker::{
+    run_async_controlled, GradSource, RuntimeOptions, RuntimeResult, ServeControl,
+};
+
+/// 8-byte magic + version prefix of a runtime checkpoint file.
+pub const RUNTIME_CKPT_MAGIC: &[u8; 8] = b"A2SRVCK1";
+
+/// A threaded-runtime checkpoint: the consensus model plus the metadata
+/// a restart validates against. Wire format (all little-endian):
+/// magic, n_workers u32, seed u64, grads u64, dim u64, params f32-bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeCheckpoint {
+    pub n_workers: u32,
+    pub seed: u64,
+    /// Fleet-total completed gradient steps at capture time.
+    pub grads: u64,
+    /// Consensus model (mean of every worker's published parameters).
+    pub params: Vec<f32>,
+}
+
+impl RuntimeCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 + 8 + 8 + 8 + 4 * self.params.len());
+        out.extend_from_slice(RUNTIME_CKPT_MAGIC);
+        out.extend_from_slice(&self.n_workers.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.grads.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for v in &self.params {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Self> {
+        let take = |bytes: &[u8], at: &mut usize, n: usize| -> crate::Result<Vec<u8>> {
+            anyhow::ensure!(
+                bytes.len() - *at >= n,
+                "truncated runtime checkpoint: wanted {n} bytes at {at}, have {}",
+                bytes.len() - *at
+            );
+            let out = bytes[*at..*at + n].to_vec();
+            *at += n;
+            Ok(out)
+        };
+        let mut at = 0usize;
+        let magic = take(bytes, &mut at, 8)?;
+        anyhow::ensure!(
+            magic == RUNTIME_CKPT_MAGIC,
+            "not a runtime checkpoint (bad magic {magic:02x?})"
+        );
+        let n_workers = u32::from_le_bytes(take(bytes, &mut at, 4)?.try_into().unwrap());
+        let seed = u64::from_le_bytes(take(bytes, &mut at, 8)?.try_into().unwrap());
+        let grads = u64::from_le_bytes(take(bytes, &mut at, 8)?.try_into().unwrap());
+        let dim = u64::from_le_bytes(take(bytes, &mut at, 8)?.try_into().unwrap()) as usize;
+        // Guard against allocating from a corrupt length field.
+        anyhow::ensure!(
+            bytes.len() - at == 4 * dim,
+            "runtime checkpoint length mismatch: dim {dim} wants {} payload bytes, have {}",
+            4 * dim,
+            bytes.len() - at
+        );
+        let mut params = Vec::with_capacity(dim);
+        for chunk in bytes[at..].chunks_exact(4) {
+            params.push(f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap())));
+        }
+        Ok(Self { n_workers, seed, grads, params })
+    }
+
+    /// Write through the atomic-rename path (crash-safe, race-safe).
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        write_atomic(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read checkpoint {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// FNV-1a over the exact bit patterns of a parameter vector — the same
+/// fingerprint `a2cid2 replay` prints, so socket clients and CI can diff
+/// snapshots without shipping the full vector.
+pub fn fnv1a_params(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in params {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Compile a scenario string into injectable updates for a run whose
+/// [`WallClock`] was built over `running` (see the module docs for the
+/// remapping contract). Returns the updates plus the count of injected
+/// edge-rate entries that had to be dropped because the running union
+/// does not carry their edge.
+///
+/// [`WallClock`]: crate::engine::WallClock
+pub fn compile_injection(
+    scenario: &str,
+    running: &Graph,
+    comm_rate: f64,
+    horizon: f64,
+) -> crate::Result<(Vec<NetUpdate>, usize)> {
+    let n = running.n;
+    let sc = Scenario::parse(scenario)?;
+    let plan = sc.compile(n, comm_rate, horizon, &vec![1.0; n])?;
+    let mut updates = plan.updates;
+    if updates.is_empty() {
+        // Single-phase scenario: "switch to this state now".
+        updates.push(NetUpdate {
+            t: 0.0,
+            edge_rates: Some(plan.initial_edge_rates.clone()),
+            grad_rates: Some(plan.initial_grad_rates.clone()),
+            edge_diff: Vec::new(),
+            grad_diff: Vec::new(),
+            leave: Vec::new(),
+            join: Vec::new(),
+            chis: Some((plan.spectrum.chi1, plan.spectrum.chi2)),
+        });
+    }
+    let mut dropped = 0usize;
+    for upd in &mut updates {
+        if let Some(rates) = upd.edge_rates.take() {
+            let by_pair: HashMap<(usize, usize), f64> =
+                plan.union.edges.iter().copied().zip(rates).collect();
+            dropped += by_pair
+                .iter()
+                .filter(|(&(i, j), &r)| r > 0.0 && !running.has_edge(i, j))
+                .count();
+            let remapped: Vec<f64> = running
+                .edges
+                .iter()
+                .map(|ij| by_pair.get(ij).copied().unwrap_or(0.0))
+                .collect();
+            upd.edge_rates = Some(remapped);
+            // The compiled diff indexes the OLD union; clear it so the
+            // scheduler falls back to the dense vector above.
+            upd.edge_diff.clear();
+        }
+    }
+    Ok((updates, dropped))
+}
+
+/// State shared between the run thread, the accept loop, and every
+/// connection handler.
+struct Shared {
+    ctrl: Arc<ServeControl>,
+    outcome: Mutex<Option<crate::Result<RuntimeResult>>>,
+    shutdown: AtomicBool,
+    /// The union graph the running `WallClock` is fixed to.
+    union: Arc<Graph>,
+    comm_rate: f64,
+    horizon: f64,
+    seed: u64,
+}
+
+/// The training-as-a-service daemon: one controlled runtime run plus a
+/// Unix-socket control plane. See the module docs for the protocol.
+pub struct ServeDaemon {
+    shared: Arc<Shared>,
+    run: Option<JoinHandle<()>>,
+    accept: Option<JoinHandle<()>>,
+    socket_path: PathBuf,
+}
+
+impl ServeDaemon {
+    /// Bind `socket`, start training, start serving. The run begins on
+    /// the static `graph` topology; evolve it live via `inject`.
+    pub fn start(
+        graph: Arc<Graph>,
+        grad_sources: Vec<Box<dyn GradSource>>,
+        init: Vec<f32>,
+        opts: RuntimeOptions,
+        socket: &Path,
+    ) -> crate::Result<ServeDaemon> {
+        anyhow::ensure!(
+            opts.scenario.is_none(),
+            "serve runs start on the static --topology; push changes over the socket instead"
+        );
+        // A stale socket file from a dead daemon would make bind fail.
+        let _ = std::fs::remove_file(socket);
+        let listener = UnixListener::bind(socket)
+            .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", socket.display()))?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            ctrl: Arc::new(ServeControl::new()),
+            outcome: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            union: graph.clone(),
+            comm_rate: opts.comm_rate,
+            horizon: opts.steps_per_worker as f64,
+            seed: opts.seed,
+        });
+        let run = {
+            let shared = shared.clone();
+            let ctrl = shared.ctrl.clone();
+            std::thread::Builder::new()
+                .name("a2cid2-serve-run".into())
+                .spawn(move || {
+                    let r = run_async_controlled(graph, grad_sources, init, opts, ctrl);
+                    *shared.outcome.lock().unwrap() = Some(r);
+                })
+                .expect("spawn serve run thread")
+        };
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("a2cid2-serve-accept".into())
+                .spawn(move || accept_loop(listener, &shared))
+                .expect("spawn serve accept thread")
+        };
+        Ok(ServeDaemon {
+            shared,
+            run: Some(run),
+            accept: Some(accept),
+            socket_path: socket.to_path_buf(),
+        })
+    }
+
+    /// The control block (same handles the socket handlers use), for
+    /// in-process supervision and tests.
+    pub fn ctrl(&self) -> Arc<ServeControl> {
+        self.shared.ctrl.clone()
+    }
+
+    /// Whether a `shutdown` command has been received.
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Block until a `shutdown` command lands (halting any still-active
+    /// run), then return the training outcome (`None` only if the run
+    /// thread was never able to report, i.e. it panicked).
+    pub fn wait(mut self) -> crate::Result<Option<RuntimeResult>> {
+        while !self.is_shutdown() {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // `shutdown` already requested the halt; make it idempotent here
+        // so wait() converges even if the flag was set in-process.
+        self.shared.ctrl.request_halt();
+        if let Some(h) = self.run.take() {
+            h.join().map_err(|_| anyhow::anyhow!("serve run thread panicked"))?;
+        }
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("serve accept thread panicked"))?;
+        }
+        let _ = std::fs::remove_file(&self.socket_path);
+        let outcome = self.shared.outcome.lock().unwrap().take();
+        outcome.transpose()
+    }
+}
+
+fn accept_loop(listener: UnixListener, shared: &Arc<Shared>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = shared.clone();
+                handlers.push(
+                    std::thread::Builder::new()
+                        .name("a2cid2-serve-conn".into())
+                        .spawn(move || handle_client(stream, &shared))
+                        .expect("spawn serve connection handler"),
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    // Handlers poll the shutdown flag between reads (bounded read
+    // timeout), so joining here cannot hang on an idle client.
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_client(stream: UnixStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // EOF; serve a final unterminated command if any.
+                let cmd = line.trim().to_string();
+                if !cmd.is_empty() {
+                    let _ = writeln!(writer, "{}", dispatch(&cmd, shared));
+                }
+                return;
+            }
+            Ok(_) => {
+                let cmd = line.trim().to_string();
+                line.clear();
+                if cmd.is_empty() {
+                    continue;
+                }
+                let reply = dispatch(&cmd, shared);
+                if writeln!(writer, "{reply}").is_err() || writer.flush().is_err() {
+                    return;
+                }
+            }
+            // Timeout mid-wait (or mid-line: read_line keeps what it got
+            // in `line`, so partial commands survive the retry).
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn err_json(msg: impl std::fmt::Display) -> String {
+    Record::new().str("error", &msg.to_string()).to_json()
+}
+
+/// Execute one command line, producing exactly one JSON reply line.
+fn dispatch(cmd: &str, shared: &Shared) -> String {
+    let mut parts = cmd.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    let arg = parts.next().map(str::trim).filter(|s| !s.is_empty());
+    match (verb, arg) {
+        ("status", _) => {
+            let (_, cursor) = shared.ctrl.metrics_since(usize::MAX);
+            Record::new()
+                .bool("running", shared.ctrl.is_running())
+                .bool("done", shared.outcome.lock().unwrap().is_some())
+                .u64("grads", shared.ctrl.grads_total())
+                .u64("injected_applied", shared.ctrl.injected_applied())
+                .u64("metrics", cursor as u64)
+                .to_json()
+        }
+        ("inject", Some(s)) => {
+            match compile_injection(s, &shared.union, shared.comm_rate, shared.horizon) {
+                Ok((updates, dropped)) => {
+                    let n = updates.len();
+                    shared.ctrl.inject(updates);
+                    Record::new()
+                        .bool("ok", true)
+                        .u64("updates", n as u64)
+                        .u64("dropped_edges", dropped as u64)
+                        .to_json()
+                }
+                Err(e) => err_json(format!("inject: {e:#}")),
+            }
+        }
+        ("inject", None) => err_json("inject needs a scenario string"),
+        ("snapshot", _) => match shared.ctrl.consensus_snapshot() {
+            Some(p) => {
+                let norm = p.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+                Record::new()
+                    .u64("dim", p.len() as u64)
+                    .str("checksum", &format!("{:016x}", fnv1a_params(&p)))
+                    .f64("norm", norm)
+                    .to_json()
+            }
+            None => err_json("no snapshot yet (run not started)"),
+        },
+        ("metrics", cursor) => {
+            let from = match cursor.map(str::parse::<usize>).transpose() {
+                Ok(c) => c.unwrap_or(0),
+                Err(_) => return err_json("metrics cursor must be an integer"),
+            };
+            let (records, next) = shared.ctrl.metrics_since(from);
+            format!("{{\"next\": {next}, \"records\": [{}]}}", records.join(", "))
+        }
+        ("checkpoint", Some(path)) => match shared.ctrl.consensus_snapshot() {
+            Some(params) => {
+                let ck = RuntimeCheckpoint {
+                    n_workers: shared.union.n as u32,
+                    seed: shared.seed,
+                    grads: shared.ctrl.grads_total(),
+                    params,
+                };
+                match ck.save(Path::new(path)) {
+                    Ok(()) => Record::new()
+                        .bool("ok", true)
+                        .str("path", path)
+                        .u64("grads", ck.grads)
+                        .u64("dim", ck.params.len() as u64)
+                        .to_json(),
+                    Err(e) => err_json(format!("checkpoint: {e:#}")),
+                }
+            }
+            None => err_json("no snapshot yet (run not started)"),
+        },
+        ("checkpoint", None) => err_json("checkpoint needs a destination path"),
+        ("stop", _) => {
+            shared.ctrl.request_halt();
+            Record::new().bool("ok", true).to_json()
+        }
+        ("shutdown", _) => {
+            shared.ctrl.request_halt();
+            shared.shutdown.store(true, Ordering::Release);
+            Record::new().bool("ok", true).to_json()
+        }
+        _ => err_json(format!(
+            "unknown command {verb:?} (status|inject|snapshot|metrics|checkpoint|stop|shutdown)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::data::{GaussianMixture, Sharding};
+    use crate::graph::Topology;
+    use crate::model::{Logistic, Model};
+    use crate::optim::LrSchedule;
+    use crate::rng::Xoshiro256;
+    use crate::runtime::worker::{run_async, RustGradSource};
+    use std::time::Instant;
+
+    #[test]
+    fn runtime_checkpoint_round_trips_and_rejects_corruption() {
+        let ck = RuntimeCheckpoint {
+            n_workers: 4,
+            seed: 7,
+            grads: 1234,
+            params: vec![1.5, -0.25, f32::MIN_POSITIVE, 0.0],
+        };
+        let bytes = ck.to_bytes();
+        assert_eq!(RuntimeCheckpoint::from_bytes(&bytes).unwrap(), ck);
+        // Every proper prefix fails cleanly.
+        for cut in 0..bytes.len() {
+            assert!(RuntimeCheckpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(RuntimeCheckpoint::from_bytes(&bad).is_err());
+        // Corrupt dim field cannot overallocate: it fails the payload
+        // length check before any allocation happens.
+        let mut huge = bytes.clone();
+        // The dim field sits after magic(8) + n_workers(4) + seed(8) + grads(8).
+        huge[28..36].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = RuntimeCheckpoint::from_bytes(&huge).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+        // Save/load through the atomic write path.
+        let dir = std::env::temp_dir().join(format!("a2srv_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        ck.save(&path).unwrap();
+        assert_eq!(RuntimeCheckpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injection_compiles_and_remaps_onto_the_running_union() {
+        // Running union ring(4); inject `complete@0`. The two chords the
+        // ring cannot carry are dropped (and counted); the four ring
+        // edges come back live.
+        let ring = Graph::build(&Topology::Ring, 4).unwrap();
+        let (updates, dropped) = compile_injection("complete@0", &ring, 1.0, 100.0).unwrap();
+        assert_eq!(updates.len(), 1, "single phase synthesizes one update");
+        assert_eq!(dropped, 2, "complete(4) has 2 chords off the ring");
+        let rates = updates[0].edge_rates.as_ref().unwrap();
+        assert_eq!(rates.len(), ring.edges.len(), "indexed by the RUNNING union");
+        assert!(rates.iter().all(|&r| r > 0.0));
+        assert!(updates[0].edge_diff.is_empty(), "dense fallback engaged");
+        assert!(updates[0].chis.is_some(), "single-phase switch carries a spectrum");
+        // Multi-phase + churn strings compile through the same path.
+        let (updates, _) =
+            compile_injection("ring@0,complete@0.5;leave=0.25:0.3:1;join=0.25:0.7", &ring, 1.0, 100.0)
+                .unwrap();
+        assert!(updates.len() >= 3, "switch + leave + join: {}", updates.len());
+        for u in &updates {
+            if let Some(r) = &u.edge_rates {
+                assert_eq!(r.len(), ring.edges.len());
+                assert!(u.edge_diff.is_empty());
+            }
+        }
+        // Garbage is a clean error.
+        assert!(compile_injection("no-such@grammar!!", &ring, 1.0, 100.0).is_err());
+    }
+
+    /// One round-trip on the client side of the line protocol.
+    fn roundtrip(reader: &mut BufReader<UnixStream>, writer: &mut UnixStream, cmd: &str) -> String {
+        writeln!(writer, "{cmd}").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply.trim().to_string()
+    }
+
+    #[test]
+    fn daemon_serves_inject_snapshot_metrics_checkpoint_stop_restart() {
+        // The full serve lifecycle over a real socket: start → status →
+        // inject → snapshot → metrics → checkpoint → stop → (drained)
+        // status → shutdown → wait, then restart a fresh run from the
+        // checkpoint file.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 21));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let init = model.init_params(&mut rng);
+        let sources: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| {
+                let mut s = RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                );
+                s.extra_delay = Some(Duration::from_micros(200));
+                Box::new(s) as Box<dyn GradSource>
+            })
+            .collect();
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 1_000_000, // runs until stopped
+            seed: 3,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: None,
+        };
+        let dir = std::env::temp_dir().join(format!("a2serve_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let socket = dir.join("ctl.sock");
+        let ckpt = dir.join("run.ckpt");
+
+        let daemon =
+            ServeDaemon::start(graph.clone(), sources, init, opts, &socket).unwrap();
+        let ctrl = daemon.ctrl();
+        let t0 = Instant::now();
+        while ctrl.metrics_since(0).1 < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "run never started ticking");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        let stream = UnixStream::connect(&socket).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let rt = |r: &mut BufReader<UnixStream>, w: &mut UnixStream, c: &str| roundtrip(r, w, c);
+
+        let status = rt(&mut reader, &mut writer, "status");
+        assert!(status.contains("\"running\": true"), "{status}");
+        let inj = rt(&mut reader, &mut writer, "inject complete@0");
+        assert!(inj.contains("\"ok\": true") && inj.contains("\"updates\": 1"), "{inj}");
+        let t0 = Instant::now();
+        while ctrl.injected_applied() < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "injection never applied");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = rt(&mut reader, &mut writer, "snapshot");
+        assert!(
+            snap.contains(&format!("\"dim\": {}", model.dim())) && snap.contains("checksum"),
+            "{snap}"
+        );
+        let met = rt(&mut reader, &mut writer, "metrics 0");
+        assert!(met.starts_with("{\"next\": ") && met.contains("\"grads\""), "{met}");
+        let ck_reply = rt(&mut reader, &mut writer, &format!("checkpoint {}", ckpt.display()));
+        assert!(ck_reply.contains("\"ok\": true"), "{ck_reply}");
+        let bad = rt(&mut reader, &mut writer, "inject no-such@grammar!!");
+        assert!(bad.contains("\"error\""), "{bad}");
+        let unknown = rt(&mut reader, &mut writer, "frobnicate");
+        assert!(unknown.contains("\"error\""), "{unknown}");
+
+        let stop = rt(&mut reader, &mut writer, "stop");
+        assert!(stop.contains("\"ok\": true"), "{stop}");
+        // The run drains; the daemon keeps serving afterwards.
+        let t0 = Instant::now();
+        loop {
+            assert!(t0.elapsed() < Duration::from_secs(30), "stop never drained");
+            let status = rt(&mut reader, &mut writer, "status");
+            if status.contains("\"done\": true") {
+                assert!(status.contains("\"running\": false"), "{status}");
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Snapshot and checkpoint still work off the registered cells.
+        let snap = rt(&mut reader, &mut writer, "snapshot");
+        assert!(snap.contains("checksum"), "{snap}");
+        let bye = rt(&mut reader, &mut writer, "shutdown");
+        assert!(bye.contains("\"ok\": true"), "{bye}");
+        drop((reader, writer));
+
+        let res = daemon.wait().unwrap().expect("run reported an outcome");
+        let total: u64 = res.grads_per_worker.iter().sum();
+        assert!(total > 0, "trained before the stop");
+        assert!(res.net_updates >= 1, "the injected switch landed");
+        assert!(!socket.exists(), "socket file cleaned up");
+
+        // Restart from the checkpoint: metadata validates, and a fresh
+        // short run trains from the saved consensus model.
+        let ck = RuntimeCheckpoint::load(&ckpt).unwrap();
+        assert_eq!(ck.n_workers, n as u32);
+        assert_eq!(ck.seed, 3);
+        assert_eq!(ck.params.len(), model.dim());
+        let sources2: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| {
+                Box::new(RustGradSource::new(
+                    model.clone() as Arc<dyn Model>,
+                    shards.per_worker[w].clone(),
+                    8,
+                    w as u64,
+                )) as Box<dyn GradSource>
+            })
+            .collect();
+        let opts2 = RuntimeOptions {
+            steps_per_worker: 20,
+            momentum: 0.0,
+            monitor_interval: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let res2 = run_async(graph, sources2, ck.params, opts2).unwrap();
+        assert_eq!(res2.grads_per_worker, vec![20; n]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

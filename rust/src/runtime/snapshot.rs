@@ -287,6 +287,78 @@ mod tests {
     }
 
     #[test]
+    fn checkpointer_sweeps_never_stall_writers_or_tear() {
+        // The serve daemon's checkpoint/query path: a "checkpointer"
+        // thread assembling full-fleet consensus snapshots (reading EVERY
+        // cell back-to-back, like `ServeControl::consensus_snapshot`)
+        // while each cell's writer publishes flat out. The seqlock
+        // contract under test: readers never block writers — the
+        // checkpointer must observe only torn-free, monotone snapshots,
+        // and every writer must keep making substantial progress while
+        // being swept.
+        let dim = 1024;
+        let n_cells = 4;
+        let cells: Vec<Arc<SnapshotCell>> = (0..n_cells)
+            .map(|_| Arc::new(SnapshotCell::new(&vec![0.0f32; dim])))
+            .collect();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let writers: Vec<_> = cells
+            .iter()
+            .map(|cell| {
+                let cell = cell.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut buf = vec![0.0f32; dim];
+                    let mut v = 0u32;
+                    while !stop.load(Ordering::Relaxed) {
+                        v = v.wrapping_add(1);
+                        buf.fill(v as f32);
+                        cell.publish(&buf);
+                    }
+                    v
+                })
+            })
+            .collect();
+
+        let checkpointer = {
+            let cells = cells.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut row = vec![0.0f32; dim];
+                let mut last = vec![0.0f32; n_cells];
+                let mut sweeps = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for (c, cell) in cells.iter().enumerate() {
+                        cell.read_into_slice(&mut row);
+                        let first = row[0];
+                        assert!(
+                            row.iter().all(|&x| x == first),
+                            "torn checkpoint row from cell {c}"
+                        );
+                        assert!(first >= last[c], "cell {c} went backwards");
+                        last[c] = first;
+                    }
+                    sweeps += 1;
+                }
+                sweeps
+            })
+        };
+
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        stop.store(true, Ordering::Relaxed);
+        let sweeps = checkpointer.join().unwrap();
+        assert!(sweeps > 50, "checkpointer made progress: {sweeps}");
+        for (c, w) in writers.into_iter().enumerate() {
+            let versions = w.join().unwrap();
+            assert!(
+                versions > 1000,
+                "writer {c} stalled under checkpoint sweeps: {versions} publishes"
+            );
+        }
+    }
+
+    #[test]
     fn consensus_accumulator_matches_consensus_of() {
         let rows: Vec<Vec<f32>> = vec![
             vec![1.0, -2.0, 0.5, 3.0],

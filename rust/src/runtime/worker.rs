@@ -46,6 +46,7 @@
 //! snapshot, so the pairwise update stays symmetric and the pair mean is
 //! conserved.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -169,13 +170,154 @@ pub struct RuntimeResult {
     pub net_updates: u64,
 }
 
+/// Control surface for a supervised runtime run — the seam the serve
+/// daemon drives. A plain [`run_async`] is a controlled run with a
+/// default (inert) control block.
+///
+/// * **Drain-stop** ([`ServeControl::request_halt`]): gradient threads
+///   finish their in-flight step and exit, communication threads drain
+///   like any budget-exhausted worker, and the run returns a normal
+///   [`RuntimeResult`] — the same orderly wind-down as natural
+///   completion, just earlier. Parked (churned-out) threads observe the
+///   halt too, so a stop can never hang on a departed worker.
+/// * **Live injection** ([`ServeControl::inject`]): compiled
+///   [`NetUpdate`]s queued from outside; the monitor applies each on its
+///   next tick through the very same epoch-gated [`WallClock`] publish
+///   path the scenario replay uses (topology switch, rate change, churn
+///   — anything the scenario grammar compiles to).
+/// * **Concurrent snapshot reads** ([`ServeControl::consensus_snapshot`]):
+///   the per-worker published [`SnapshotCell`]s are registered here at
+///   startup, so any number of external readers can assemble a
+///   consensus-model snapshot off the lock-free seqlocks without
+///   touching a state lock or stalling a writer.
+/// * **Metrics stream** ([`ServeControl::metrics_since`]): one
+///   consolidated-JSON record appended per monitor tick.
+pub struct ServeControl {
+    halt: AtomicBool,
+    injected: Mutex<VecDeque<NetUpdate>>,
+    injected_applied: AtomicU64,
+    cells: Mutex<Vec<Arc<SnapshotCell>>>,
+    metrics: Mutex<Vec<String>>,
+    running: AtomicBool,
+    /// Fleet-total completed gradient steps, refreshed each monitor tick
+    /// (the daemon stamps checkpoints with it).
+    grads_total: AtomicU64,
+}
+
+impl Default for ServeControl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeControl {
+    pub fn new() -> Self {
+        Self {
+            halt: AtomicBool::new(false),
+            injected: Mutex::new(VecDeque::new()),
+            injected_applied: AtomicU64::new(0),
+            cells: Mutex::new(Vec::new()),
+            metrics: Mutex::new(Vec::new()),
+            running: AtomicBool::new(false),
+            grads_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Ask the run to stop draining-safely. Idempotent.
+    pub fn request_halt(&self) {
+        self.halt.store(true, Ordering::Release);
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halt.load(Ordering::Acquire)
+    }
+
+    /// Queue compiled network updates for the monitor's next tick (their
+    /// `t` stamps are ignored — injection means *now*). Applied in FIFO
+    /// order, one tick may apply several.
+    pub fn inject(&self, updates: Vec<NetUpdate>) {
+        self.injected.lock().unwrap().extend(updates);
+    }
+
+    /// Number of injected updates applied so far.
+    pub fn injected_applied(&self) -> u64 {
+        self.injected_applied.load(Ordering::Acquire)
+    }
+
+    /// Whether a controlled run is currently between startup and return.
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::Acquire)
+    }
+
+    /// Fleet-total completed gradient steps, as of the last monitor tick.
+    pub fn grads_total(&self) -> u64 {
+        self.grads_total.load(Ordering::Acquire)
+    }
+
+    /// The per-worker published snapshot cells (empty before startup).
+    /// Cloned `Arc`s — hold them as long as you like; reads stay
+    /// lock-free and never block the training writers.
+    pub fn snapshot_cells(&self) -> Vec<Arc<SnapshotCell>> {
+        self.cells.lock().unwrap().clone()
+    }
+
+    /// Assemble a consensus-model snapshot (the mean of every worker's
+    /// published parameters) off the lock-free cells. `None` before
+    /// startup. Each per-worker read is torn-free (seqlock); the mean is
+    /// taken across whatever each worker most recently published — the
+    /// same consistency the monitor's consensus measurement has.
+    pub fn consensus_snapshot(&self) -> Option<Vec<f32>> {
+        let cells = self.snapshot_cells();
+        let first = cells.first()?;
+        let dim = first.dim();
+        let mut mean = vec![0.0f64; dim];
+        let mut buf = vec![0.0f32; dim];
+        for c in &cells {
+            c.read_into_slice(&mut buf);
+            for (m, &v) in mean.iter_mut().zip(&buf) {
+                *m += v as f64;
+            }
+        }
+        let inv = 1.0 / cells.len() as f64;
+        Some(mean.iter().map(|&m| (m * inv) as f32).collect())
+    }
+
+    /// Metrics records appended since index `from` (one JSON line per
+    /// monitor tick), plus the next cursor to poll from.
+    pub fn metrics_since(&self, from: usize) -> (Vec<String>, usize) {
+        let m = self.metrics.lock().unwrap();
+        let start = from.min(m.len());
+        (m[start..].to_vec(), m.len())
+    }
+
+    fn set_running(&self, v: bool) {
+        self.running.store(v, Ordering::Release);
+    }
+
+    fn register_cells(&self, cells: &[Arc<Cell>]) {
+        *self.cells.lock().unwrap() = cells.iter().map(|c| c.published.clone()).collect();
+    }
+
+    fn drain_injected(&self) -> Vec<NetUpdate> {
+        let mut q = self.injected.lock().unwrap();
+        let out: Vec<NetUpdate> = q.drain(..).collect();
+        out
+    }
+
+    fn push_metric(&self, line: String) {
+        self.metrics.lock().unwrap().push(line);
+    }
+}
+
 /// Shared per-worker cell.
 struct Cell {
     state: Mutex<WorkerState>,
     /// Published snapshot of `x` (double-buffered seqlock): the gradient
     /// thread and the monitor read here without taking `state`. Whoever
-    /// mutates `x` under the lock publishes before releasing it.
-    published: SnapshotCell,
+    /// mutates `x` under the lock publishes before releasing it. Behind
+    /// an `Arc` so [`ServeControl`] can hand the cell to concurrent
+    /// external readers (the daemon's snapshot query path).
+    published: Arc<SnapshotCell>,
     /// Remaining p2p averagings before the next budget refill.
     comm_budget: AtomicI64,
     grads_done: AtomicU64,
@@ -210,9 +352,23 @@ impl Cell {
 /// `graph`, starting from the shared `init` parameters.
 pub fn run_async(
     graph: Arc<Graph>,
+    grad_sources: Vec<Box<dyn GradSource>>,
+    init: Vec<f32>,
+    opts: RuntimeOptions,
+) -> crate::Result<RuntimeResult> {
+    run_async_controlled(graph, grad_sources, init, opts, Arc::new(ServeControl::new()))
+}
+
+/// [`run_async`] under external supervision: the `ctrl` block receives
+/// the published snapshot cells and the metrics stream, and its halt
+/// flag / injection queue are honored by the worker threads and the
+/// monitor. This is the entry point the serve daemon drives.
+pub fn run_async_controlled(
+    graph: Arc<Graph>,
     mut grad_sources: Vec<Box<dyn GradSource>>,
     init: Vec<f32>,
     opts: RuntimeOptions,
+    ctrl: Arc<ServeControl>,
 ) -> crate::Result<RuntimeResult> {
     let n = graph.n;
     anyhow::ensure!(grad_sources.len() == n, "need one grad source per worker");
@@ -249,7 +405,7 @@ pub fn run_async(
         .map(|_| {
             Arc::new(Cell {
                 state: Mutex::new(WorkerState::new(init.clone())),
-                published: SnapshotCell::new(&init),
+                published: Arc::new(SnapshotCell::new(&init)),
                 comm_budget: AtomicI64::new(0),
                 grads_done: AtomicU64::new(0),
                 comms_done: AtomicU64::new(0),
@@ -266,6 +422,8 @@ pub fn run_async(
     let (bus, mut inboxes) = build_bus(n, opts.link_delay);
     let (coord_tx, coord_handle) = spawn_coordinator(wall.clone());
     let start = Instant::now();
+    ctrl.register_cells(&cells);
+    ctrl.set_running(true);
 
     // Worker→core affinity: with `A2CID2_PIN` engaged and enough CPUs, a
     // worker's gradient and comm threads share one core (they alternate
@@ -292,6 +450,7 @@ pub fn run_async(
             opts.clone(),
             start,
             cpu,
+            ctrl.clone(),
         ));
         comm_handles.push(spawn_comm_thread(
             w,
@@ -303,6 +462,7 @@ pub fn run_async(
             wall.clone(),
             start,
             cpu,
+            ctrl.clone(),
         ));
     }
 
@@ -350,6 +510,14 @@ pub fn run_async(
     let mut next_update = pending.next();
     loop {
         std::thread::sleep(opts.monitor_interval);
+        // Live injection: updates pushed through the control block apply
+        // NOW, through the same epoch-gated publish path as the
+        // scenario's own updates (their compile-time `t` stamps are
+        // ignored — the injector decides *when* by injecting).
+        for upd in ctrl.drain_injected() {
+            apply_update(&upd, &mut snapbuf);
+            ctrl.injected_applied.fetch_add(1, Ordering::Release);
+        }
         // Scenario replay: the plan's horizon is denominated in gradient
         // steps per worker, so the replay clock is the mean completed
         // step count — exact from the first step, unlike Cell::now(),
@@ -392,8 +560,10 @@ pub fn run_async(
             wall.finalize_updates();
         }
         let t = start.elapsed().as_secs_f64();
-        let consensus_sq = consensus_acc.measure(cells.iter().map(|c| &c.published));
-        recorder.record("consensus", t, (consensus_sq / n as f64).sqrt());
+        let consensus_sq =
+            consensus_acc.measure(cells.iter().map(|c| c.published.as_ref()));
+        let consensus = (consensus_sq / n as f64).sqrt();
+        recorder.record("consensus", t, consensus);
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
         for c in &cells {
@@ -403,9 +573,30 @@ pub fn run_async(
                 loss_n += 1;
             }
         }
-        if loss_n > 0 {
-            recorder.record("train_loss", t, loss_sum / loss_n as f64);
+        let mean_loss = if loss_n > 0 { Some(loss_sum / loss_n as f64) } else { None };
+        if let Some(l) = mean_loss {
+            recorder.record("train_loss", t, l);
         }
+        // Incremental metrics stream: one consolidated-JSON record per
+        // monitor tick (the daemon serves these over the socket; a
+        // detached run just accumulates them in memory).
+        let grads_total: u64 =
+            cells.iter().map(|c| c.grads_done.load(Ordering::Relaxed)).sum();
+        let comms_total: u64 =
+            cells.iter().map(|c| c.comms_done.load(Ordering::Relaxed)).sum();
+        let active = (0..n).filter(|&w| wall.is_active(w)).count() as u64;
+        ctrl.grads_total.store(grads_total, Ordering::Release);
+        ctrl.push_metric(
+            crate::metrics::Record::new()
+                .f64("t_wall", t)
+                .u64("grads", grads_total)
+                .u64("comms", comms_total)
+                .u64("active_workers", active)
+                .u64("net_updates", Scheduler::updates_applied(&wall))
+                .f64("consensus", consensus)
+                .opt_f64("train_loss", mean_loss)
+                .to_json(),
+        );
         let all_done = cells.iter().all(|c| {
             c.grad_done.load(Ordering::Acquire) && c.comm_done.load(Ordering::Acquire)
         });
@@ -414,6 +605,7 @@ pub fn run_async(
         }
     }
     drop(coord_tx);
+    ctrl.set_running(false);
 
     for h in grad_handles {
         h.join().map_err(|_| anyhow::anyhow!("grad thread panicked"))??;
@@ -475,6 +667,7 @@ fn spawn_grad_thread(
     opts: RuntimeOptions,
     start: Instant,
     cpu: Option<usize>,
+    ctrl: Arc<ServeControl>,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
         .name(format!("a2cid2-grad-{w}"))
@@ -484,13 +677,14 @@ fn spawn_grad_thread(
             }
             // The completion flag must be set on EVERY exit path (incl.
             // gradient-source failures) or the monitor loop spins forever.
-            let result = grad_loop(w, &mut src, &cell, &core, &wall, &opts, start);
+            let result = grad_loop(w, &mut src, &cell, &core, &wall, &opts, start, &ctrl);
             cell.grad_done.store(true, Ordering::Release);
             result
         })
         .expect("spawn grad thread")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn grad_loop(
     w: usize,
     src: &mut Box<dyn GradSource>,
@@ -499,6 +693,7 @@ fn grad_loop(
     wall: &WallClock,
     opts: &RuntimeOptions,
     start: Instant,
+    ctrl: &ServeControl,
 ) -> crate::Result<()> {
     let mut opt = Sgd::new(opts.momentum);
     let mut rng = Xoshiro256::seed_from_u64(opts.seed ^ (w as u64) << 20);
@@ -511,11 +706,17 @@ fn grad_loop(
     let (mut acid_seen, p0) = wall.acid_snapshot();
     core.set_params(p0);
     for step in 0..opts.steps_per_worker {
+        // Drain-stop: finish between steps, never mid-update. The parked
+        // loop below checks too, so a halted run can never hang on a
+        // churned-out worker waiting for a re-join that will not come.
+        if ctrl.halted() {
+            return Ok(());
+        }
         // Churn: a departed worker parks (no steps, no budget refills)
         // until the scenario re-joins it — or exits once no remaining
         // update can.
         while !wall.is_active(w) {
-            if wall.departed_for_good(w) {
+            if wall.departed_for_good(w) || ctrl.halted() {
                 return Ok(());
             }
             std::thread::sleep(Duration::from_millis(1));
@@ -578,6 +779,7 @@ fn spawn_comm_thread(
     wall: Arc<WallClock>,
     start: Instant,
     cpu: Option<usize>,
+    ctrl: Arc<ServeControl>,
 ) -> std::thread::JoinHandle<crate::Result<()>> {
     std::thread::Builder::new()
         .name(format!("a2cid2-comm-{w}"))
@@ -588,7 +790,8 @@ fn spawn_comm_thread(
             // Leave + the completion flag must fire on EVERY exit path
             // (incl. bus errors), or the coordinator and monitor wait
             // forever on this worker.
-            let result = comm_loop(w, &cell, &inbox, &bus, &coord, &core, &wall, start);
+            let result =
+                comm_loop(w, &cell, &inbox, &bus, &coord, &core, &wall, start, &ctrl);
             let _ = coord.send(CoordMsg::Leave { worker: w });
             cell.comm_done.store(true, Ordering::Release);
             result
@@ -647,6 +850,7 @@ fn comm_loop(
     core: &DynamicsCore,
     wall: &WallClock,
     start: Instant,
+    ctrl: &ServeControl,
 ) -> crate::Result<()> {
     // §Perf: the buffer received from each pairing is recycled as the
     // next pairing's send buffer — zero steady-state allocation on the
@@ -660,6 +864,13 @@ fn comm_loop(
     let (mut acid_seen, p0) = wall.acid_snapshot();
     core.set_params(p0);
     loop {
+        // Drain-stop: checked only at the top of a pairing — once
+        // matched, the pairing runs to completion (breaking between the
+        // bus send and the inbox receive would strand the peer). The
+        // leftover budget is best-effort, like a churn departure's.
+        if ctrl.halted() {
+            break;
+        }
         // Churn: a departed worker stops announcing availability. Its
         // leftover budget is best-effort — once training is over (the
         // grad thread exited, possibly because the departure is final)
@@ -1066,6 +1277,194 @@ mod tests {
         );
         let c = res.recorder.get("consensus").unwrap();
         assert!(c.points.iter().all(|(_, v)| v.is_finite()));
+    }
+
+    #[test]
+    fn halt_drains_mid_run_and_a_restart_completes() {
+        // The serve daemon's stop/restart path: request_halt on a run
+        // sized to outlive the test by orders of magnitude, join with a
+        // bounded timeout (a hang here is exactly the stranded-worker /
+        // parked-thread drain bug this guards against), then restart a
+        // fresh run from the halted run's averaged parameters — the
+        // runtime checkpoint contract.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 6));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 1_000_000, // would run ~forever without the halt
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: None,
+        };
+        let ctrl = Arc::new(ServeControl::new());
+        let handle = {
+            let (graph, ctrl) = (graph.clone(), ctrl.clone());
+            let srcs = paced_sources(n, &model, &shards, Duration::from_micros(200));
+            let init = init.clone();
+            std::thread::spawn(move || run_async_controlled(graph, srcs, init, opts, ctrl))
+        };
+        // Let it train for a few monitor ticks, then stop.
+        let t0 = Instant::now();
+        while ctrl.metrics_since(0).1 < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "run never started ticking");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        ctrl.request_halt();
+        let t0 = Instant::now();
+        while !handle.is_finished() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "halted run failed to drain"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let res = handle.join().unwrap().unwrap();
+        assert!(!ctrl.is_running());
+        let total: u64 = res.grads_per_worker.iter().sum();
+        assert!(total > 0, "did some training before the halt");
+        assert!(total < n as u64 * 1_000_000, "halt cut the run short");
+        // Restart: a fresh run seeded with the halted run's consensus
+        // model runs to natural completion.
+        let opts2 = RuntimeOptions {
+            steps_per_worker: 20,
+            momentum: 0.0,
+            monitor_interval: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let res2 = run_async(graph, sources(n, &model, &shards), res.avg_params.clone(), opts2)
+            .unwrap();
+        assert_eq!(res2.grads_per_worker, vec![20; n]);
+    }
+
+    #[test]
+    fn injected_updates_apply_through_the_scenario_path() {
+        // Live injection: a ring→complete switch compiled from the
+        // scenario grammar and pushed through the control block must land
+        // via the same epoch-gated WallClock publish path a scenario
+        // replay uses — counted in net_updates, visible as chord
+        // pairings the static ring could never produce.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 5));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::AsyncBaseline,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 150,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: None, // static ring: the only update is the injected one
+        };
+        let ctrl = Arc::new(ServeControl::new());
+        let handle = {
+            let (graph, ctrl) = (graph.clone(), ctrl.clone());
+            let srcs = paced_sources(n, &model, &shards, Duration::from_micros(300));
+            std::thread::spawn(move || run_async_controlled(graph, srcs, init, opts, ctrl))
+        };
+        let t0 = Instant::now();
+        while !ctrl.is_running() {
+            assert!(t0.elapsed() < Duration::from_secs(30), "run never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Compile the switch exactly as the daemon does — through the
+        // scenario grammar (the update's own `t` stamp is ignored;
+        // injection means now).
+        let plan = Scenario::parse("ring@0,complete@0.5")
+            .unwrap()
+            .compile(n, 1.0, 1.0, &[1.0; n])
+            .unwrap();
+        ctrl.inject(vec![plan.updates[0].clone()]);
+        let t0 = Instant::now();
+        while ctrl.injected_applied() < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "injection never applied");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let res = handle.join().unwrap().unwrap();
+        assert_eq!(res.net_updates, 1, "injected update counted like a scenario's");
+        assert_eq!(res.grads_per_worker, vec![150; n]);
+        let ring = Graph::build(&Topology::Ring, n).unwrap();
+        let chord_pairings: u64 = (0..n)
+            .flat_map(|i| (i + 1..n).map(move |j| (i, j)))
+            .filter(|&(i, j)| !ring.has_edge(i, j))
+            .map(|(i, j)| res.pairing.counts[i][j])
+            .sum();
+        assert!(chord_pairings > 0, "the injected switch opened the chords");
+    }
+
+    #[test]
+    fn concurrent_snapshot_and_metrics_reads_during_a_run() {
+        // The daemon's query path: external readers hammer
+        // consensus_snapshot() off the lock-free cells for the whole run;
+        // training must complete all steps and every observed snapshot
+        // must be dimension-correct and finite. The metrics stream must
+        // be cursor-pollable JSON, one record per monitor tick.
+        let n = 4;
+        let graph = Arc::new(Graph::build(&Topology::Ring, n).unwrap());
+        let ds = Arc::new(GaussianMixture::cifar_like().sample(128, 9));
+        let shards = Sharding::FullShuffled.assign(&ds, n, 0);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let init = model.init_params(&mut rng);
+        let opts = RuntimeOptions {
+            comm_rate: 1.0,
+            method: Method::Acid,
+            lr: LrSchedule::Constant { lr: 0.02 },
+            momentum: 0.0,
+            steps_per_worker: 100,
+            seed: 0,
+            monitor_interval: Duration::from_millis(2),
+            link_delay: None,
+            scenario: None,
+        };
+        let ctrl = Arc::new(ServeControl::new());
+        assert!(ctrl.consensus_snapshot().is_none(), "no cells before startup");
+        let handle = {
+            let (graph, ctrl) = (graph.clone(), ctrl.clone());
+            let srcs = paced_sources(n, &model, &shards, Duration::from_micros(200));
+            std::thread::spawn(move || run_async_controlled(graph, srcs, init, opts, ctrl))
+        };
+        let mut reads = 0u64;
+        let t0 = Instant::now();
+        while !handle.is_finished() {
+            assert!(t0.elapsed() < Duration::from_secs(60), "run hung");
+            if let Some(snap) = ctrl.consensus_snapshot() {
+                assert_eq!(snap.len(), model.dim());
+                assert!(snap.iter().all(|v| v.is_finite()));
+                reads += 1;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        let res = handle.join().unwrap().unwrap();
+        assert_eq!(res.grads_per_worker, vec![100; n]);
+        assert!(reads > 0, "snapshots were read concurrently");
+        // Metrics stream: each record is one JSON object per tick, and
+        // polling from the end cursor returns nothing new.
+        let (lines, cursor) = ctrl.metrics_since(0);
+        assert_eq!(lines.len(), cursor);
+        assert!(cursor >= 1, "at least one monitor tick recorded");
+        for l in &lines {
+            assert!(
+                l.starts_with('{') && l.contains("\"grads\"") && l.contains("\"consensus\""),
+                "malformed metrics record: {l}"
+            );
+        }
+        let (more, c2) = ctrl.metrics_since(cursor);
+        assert!(more.is_empty() && c2 == cursor);
     }
 
     #[test]

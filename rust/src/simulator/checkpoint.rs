@@ -1,0 +1,648 @@
+//! Versioned binary checkpoint format for [`super::SimEngine`].
+//!
+//! A checkpoint captures every piece of *mutable* loop state — model
+//! parameters, A²CiD² momentum rows, optimizer velocities, sampler
+//! cursors/RNG streams, the scheduler's event-queue state, and the
+//! progress counters. Constructor-derived state (the compiled network
+//! plan, the data shards, the LR schedule) is a pure function of the
+//! config, so a restore rebuilds it by constructing a fresh engine from
+//! the same config and validates the checkpoint's metadata against it.
+//!
+//! ## Wire format
+//!
+//! ```text
+//! magic   8 bytes   b"A2CKPT01"
+//! version u32       1
+//! n_sects u32
+//! sect*   { tag: u32, len: u64, payload: [u8; len] }
+//! ```
+//!
+//! All integers and floats are little-endian; `f64`/`f32` are stored as
+//! raw IEEE-754 bits (NaN-safe — `loss_ema` starts as NaN). Sections
+//! are written in tag order; readers index them by tag, so a future
+//! version can append sections without breaking old readers of its
+//! mandatory prefix. Unknown tags are skipped; a missing mandatory tag
+//! or a truncated payload is an error, never UB.
+//!
+//! Files are written through [`crate::runtime::artifacts::write_atomic`]
+//! so a crashed checkpoint never leaves a half-written file at the
+//! destination path.
+
+use std::path::Path;
+
+use crate::engine::{SamplerState, SchedulerState};
+use crate::gossip::AcidParams;
+use crate::simulator::events::EventQueueState;
+
+/// File magic: "A2CKPT" + 2-digit format generation.
+pub const MAGIC: &[u8; 8] = b"A2CKPT01";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+const TAG_META: u32 = 1;
+const TAG_SCHED: u32 = 2;
+const TAG_WORKERS: u32 = 3;
+const TAG_OPTIMS: u32 = 4;
+const TAG_SAMPLERS: u32 = 5;
+const TAG_CORE: u32 = 6;
+const TAG_PROGRESS: u32 = 7;
+
+/// Identity of the run a checkpoint belongs to. Restore refuses to
+/// install state into an engine built from a different config — a
+/// silent mismatch would not crash, it would just produce a divergent
+/// (and therefore worthless) trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    pub n_workers: u32,
+    pub dim: u64,
+    pub seed: u64,
+    pub steps_per_worker: u64,
+    pub batch_size: u32,
+    /// `Algorithm` display string (e.g. `a2cid2`, `local-sgd:4`).
+    pub algo: String,
+}
+
+/// One worker's mutable replica state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerCkpt {
+    pub x: Vec<f32>,
+    pub xt: Vec<f32>,
+    pub t_last: f64,
+    pub n_grads: u64,
+    pub n_comms: u64,
+    pub grads_at_last_comm: u64,
+}
+
+/// Complete mutable state of a paused [`super::SimEngine`].
+#[derive(Clone, Debug)]
+pub struct SimCheckpoint {
+    pub meta: CheckpointMeta,
+    pub sched: SchedulerState,
+    pub workers: Vec<WorkerCkpt>,
+    /// Per-worker SGD velocity buffers (empty = pristine lazily-sized).
+    pub velocities: Vec<Vec<f32>>,
+    pub samplers: Vec<SamplerState>,
+    /// The (η, α, α̃) in effect — adaptive retunes move these mid-run.
+    pub acid: AcidParams,
+    pub loss_ema: f64,
+    pub grads_done: u64,
+    pub applied_comms: u64,
+    pub ticks_done: u64,
+    pub in_fleet: Vec<bool>,
+}
+
+// ---------------------------------------------------------------------
+// Little-endian byte plumbing. Hand-rolled: the crate deliberately has
+// no serde dependency, and the format is simple enough that explicit
+// code is clearer than a derive.
+// ---------------------------------------------------------------------
+
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "truncated checkpoint: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed vector guard: a corrupt length must not turn
+    /// into a multi-gigabyte allocation before the truncation check.
+    fn len(&mut self, elem_bytes: usize) -> crate::Result<usize> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            "corrupt checkpoint: length {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> crate::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn u32s(&mut self) -> crate::Result<Vec<u32>> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn str(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|e| anyhow::anyhow!("checkpoint string not UTF-8: {e}"))?
+            .to_string())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+impl SimCheckpoint {
+    /// Serialize to the versioned section format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut sections: Vec<(u32, Vec<u8>)> = Vec::new();
+
+        let mut w = ByteWriter::new();
+        w.u32(self.meta.n_workers);
+        w.u64(self.meta.dim);
+        w.u64(self.meta.seed);
+        w.u64(self.meta.steps_per_worker);
+        w.u32(self.meta.batch_size);
+        w.str(&self.meta.algo);
+        sections.push((TAG_META, w.buf));
+
+        let mut w = ByteWriter::new();
+        let q: &EventQueueState = &self.sched.queue;
+        w.u64(self.sched.applied);
+        w.u64(q.entries.len() as u64);
+        for &(t, k, idx, epoch) in &q.entries {
+            w.f64(t);
+            w.u8(k);
+            w.u64(idx as u64);
+            w.u32(epoch);
+        }
+        w.f64s(&q.grad_rates);
+        w.f64s(&q.comm_rates);
+        w.u32s(&q.grad_epoch);
+        w.u32s(&q.comm_epoch);
+        for &s in &q.rng {
+            w.u64(s);
+        }
+        w.f64(q.now);
+        w.u64(q.n_grad_events);
+        w.u64(q.n_comm_events);
+        w.u64(q.n_rate_updates);
+        sections.push((TAG_SCHED, w.buf));
+
+        let mut w = ByteWriter::new();
+        w.u32(self.workers.len() as u32);
+        for wk in &self.workers {
+            w.f32s(&wk.x);
+            w.f32s(&wk.xt);
+            w.f64(wk.t_last);
+            w.u64(wk.n_grads);
+            w.u64(wk.n_comms);
+            w.u64(wk.grads_at_last_comm);
+        }
+        sections.push((TAG_WORKERS, w.buf));
+
+        let mut w = ByteWriter::new();
+        w.u32(self.velocities.len() as u32);
+        for v in &self.velocities {
+            w.f32s(v);
+        }
+        sections.push((TAG_OPTIMS, w.buf));
+
+        let mut w = ByteWriter::new();
+        w.u32(self.samplers.len() as u32);
+        for s in &self.samplers {
+            w.u64(s.cursor as u64);
+            for &x in &s.rng {
+                w.u64(x);
+            }
+        }
+        sections.push((TAG_SAMPLERS, w.buf));
+
+        let mut w = ByteWriter::new();
+        w.f64(self.acid.eta);
+        w.f64(self.acid.alpha);
+        w.f64(self.acid.alpha_tilde);
+        sections.push((TAG_CORE, w.buf));
+
+        let mut w = ByteWriter::new();
+        w.f64(self.loss_ema);
+        w.u64(self.grads_done);
+        w.u64(self.applied_comms);
+        w.u64(self.ticks_done);
+        w.u64(self.in_fleet.len() as u64);
+        for &b in &self.in_fleet {
+            w.u8(b as u8);
+        }
+        sections.push((TAG_PROGRESS, w.buf));
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+        for (tag, payload) in &sections {
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    /// Parse the versioned section format. Every section payload must be
+    /// consumed exactly; unknown tags are skipped (forward-compat room).
+    pub fn from_bytes(buf: &[u8]) -> crate::Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let magic = r.take(8)?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "not a checkpoint file (bad magic {:02x?})",
+            &magic[..magic.len().min(8)]
+        );
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads {VERSION})"
+        );
+        let n_sects = r.u32()?;
+
+        let mut meta: Option<CheckpointMeta> = None;
+        let mut sched: Option<SchedulerState> = None;
+        let mut workers: Option<Vec<WorkerCkpt>> = None;
+        let mut velocities: Option<Vec<Vec<f32>>> = None;
+        let mut samplers: Option<Vec<SamplerState>> = None;
+        let mut acid: Option<AcidParams> = None;
+        let mut progress: Option<(f64, u64, u64, u64, Vec<bool>)> = None;
+
+        for _ in 0..n_sects {
+            let tag = r.u32()?;
+            let len = r.u64()? as usize;
+            let payload = r.take(len)?;
+            let mut s = ByteReader::new(payload);
+            match tag {
+                TAG_META => {
+                    meta = Some(CheckpointMeta {
+                        n_workers: s.u32()?,
+                        dim: s.u64()?,
+                        seed: s.u64()?,
+                        steps_per_worker: s.u64()?,
+                        batch_size: s.u32()?,
+                        algo: s.str()?,
+                    });
+                }
+                TAG_SCHED => {
+                    let applied = s.u64()?;
+                    let n = s.len(8 + 1 + 8 + 4)?;
+                    let mut entries = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let t = s.f64()?;
+                        let k = s.u8()?;
+                        let idx = s.u64()? as usize;
+                        let epoch = s.u32()?;
+                        entries.push((t, k, idx, epoch));
+                    }
+                    let grad_rates = s.f64s()?;
+                    let comm_rates = s.f64s()?;
+                    let grad_epoch = s.u32s()?;
+                    let comm_epoch = s.u32s()?;
+                    let mut rng = [0u64; 4];
+                    for slot in &mut rng {
+                        *slot = s.u64()?;
+                    }
+                    let now = s.f64()?;
+                    let n_grad_events = s.u64()?;
+                    let n_comm_events = s.u64()?;
+                    let n_rate_updates = s.u64()?;
+                    sched = Some(SchedulerState {
+                        queue: EventQueueState {
+                            entries,
+                            grad_rates,
+                            comm_rates,
+                            grad_epoch,
+                            comm_epoch,
+                            rng,
+                            now,
+                            n_grad_events,
+                            n_comm_events,
+                            n_rate_updates,
+                        },
+                        applied,
+                    });
+                }
+                TAG_WORKERS => {
+                    let n = s.u32()? as usize;
+                    let mut ws = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        ws.push(WorkerCkpt {
+                            x: s.f32s()?,
+                            xt: s.f32s()?,
+                            t_last: s.f64()?,
+                            n_grads: s.u64()?,
+                            n_comms: s.u64()?,
+                            grads_at_last_comm: s.u64()?,
+                        });
+                    }
+                    workers = Some(ws);
+                }
+                TAG_OPTIMS => {
+                    let n = s.u32()? as usize;
+                    let mut vs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        vs.push(s.f32s()?);
+                    }
+                    velocities = Some(vs);
+                }
+                TAG_SAMPLERS => {
+                    let n = s.u32()? as usize;
+                    let mut ss = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let cursor = s.u64()? as usize;
+                        let mut rng = [0u64; 4];
+                        for slot in &mut rng {
+                            *slot = s.u64()?;
+                        }
+                        ss.push(SamplerState { cursor, rng });
+                    }
+                    samplers = Some(ss);
+                }
+                TAG_CORE => {
+                    acid = Some(AcidParams {
+                        eta: s.f64()?,
+                        alpha: s.f64()?,
+                        alpha_tilde: s.f64()?,
+                    });
+                }
+                TAG_PROGRESS => {
+                    let loss_ema = s.f64()?;
+                    let grads_done = s.u64()?;
+                    let applied_comms = s.u64()?;
+                    let ticks_done = s.u64()?;
+                    let n = s.len(1)?;
+                    let raw = s.take(n)?;
+                    let in_fleet = raw.iter().map(|&b| b != 0).collect();
+                    progress =
+                        Some((loss_ema, grads_done, applied_comms, ticks_done, in_fleet));
+                }
+                // Unknown tag from a newer writer: payload already
+                // skipped by the outer take(len).
+                _ => continue,
+            }
+            anyhow::ensure!(
+                s.done(),
+                "checkpoint section {tag} has {} trailing bytes",
+                payload.len() - s.pos
+            );
+        }
+
+        let missing = |what: &str| anyhow::anyhow!("checkpoint missing mandatory {what} section");
+        let (loss_ema, grads_done, applied_comms, ticks_done, in_fleet) =
+            progress.ok_or_else(|| missing("progress"))?;
+        Ok(SimCheckpoint {
+            meta: meta.ok_or_else(|| missing("meta"))?,
+            sched: sched.ok_or_else(|| missing("scheduler"))?,
+            workers: workers.ok_or_else(|| missing("workers"))?,
+            velocities: velocities.ok_or_else(|| missing("optimizers"))?,
+            samplers: samplers.ok_or_else(|| missing("samplers"))?,
+            acid: acid.ok_or_else(|| missing("core"))?,
+            loss_ema,
+            grads_done,
+            applied_comms,
+            ticks_done,
+            in_fleet,
+        })
+    }
+
+    /// Write atomically (unique staging file + rename; see
+    /// [`crate::runtime::artifacts::write_atomic`]).
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        crate::runtime::artifacts::write_atomic(path, &self.to_bytes())
+    }
+
+    /// Read and parse a checkpoint file.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read checkpoint {}: {e}", path.display()))?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimCheckpoint {
+        SimCheckpoint {
+            meta: CheckpointMeta {
+                n_workers: 3,
+                dim: 4,
+                seed: 7,
+                steps_per_worker: 50,
+                batch_size: 8,
+                algo: "a2cid2".to_string(),
+            },
+            sched: SchedulerState {
+                queue: EventQueueState {
+                    entries: vec![(0.5, 0, 1, 0), (0.75, 1, 0, 2)],
+                    grad_rates: vec![1.0, 0.9, 1.1],
+                    comm_rates: vec![0.5, 0.5, 0.5],
+                    grad_epoch: vec![0, 0, 1],
+                    comm_epoch: vec![2, 0, 0],
+                    rng: [1, 2, 3, 4],
+                    now: 0.25,
+                    n_grad_events: 10,
+                    n_comm_events: 5,
+                    n_rate_updates: 1,
+                },
+                applied: 1,
+            },
+            workers: (0..3)
+                .map(|w| WorkerCkpt {
+                    x: vec![w as f32; 4],
+                    xt: vec![w as f32 + 0.5; 4],
+                    t_last: 0.2 * w as f64,
+                    n_grads: 3 + w as u64,
+                    n_comms: w as u64,
+                    grads_at_last_comm: w as u64,
+                })
+                .collect(),
+            velocities: vec![vec![0.1, 0.2, 0.3, 0.4], Vec::new(), vec![1.0; 4]],
+            samplers: (0..3)
+                .map(|w| SamplerState { cursor: w, rng: [w as u64 + 1, 2, 3, 4] })
+                .collect(),
+            acid: AcidParams { eta: 1.5, alpha: 0.5, alpha_tilde: 0.7 },
+            loss_ema: f64::NAN,
+            grads_done: 9,
+            applied_comms: 4,
+            ticks_done: 14,
+            in_fleet: vec![true, false, true],
+        }
+    }
+
+    fn assert_round_trip_eq(a: &SimCheckpoint, b: &SimCheckpoint) {
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.sched, b.sched);
+        assert_eq!(a.workers, b.workers);
+        assert_eq!(a.velocities, b.velocities);
+        assert_eq!(a.samplers, b.samplers);
+        assert_eq!(a.acid.eta.to_bits(), b.acid.eta.to_bits());
+        assert_eq!(a.acid.alpha.to_bits(), b.acid.alpha.to_bits());
+        assert_eq!(a.acid.alpha_tilde.to_bits(), b.acid.alpha_tilde.to_bits());
+        // NaN-safe float comparison: the bits must survive, not the ==.
+        assert_eq!(a.loss_ema.to_bits(), b.loss_ema.to_bits());
+        assert_eq!(a.grads_done, b.grads_done);
+        assert_eq!(a.applied_comms, b.applied_comms);
+        assert_eq!(a.ticks_done, b.ticks_done);
+        assert_eq!(a.in_fleet, b.in_fleet);
+    }
+
+    #[test]
+    fn byte_round_trip_is_lossless() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC);
+        let back = SimCheckpoint::from_bytes(&bytes).unwrap();
+        assert_round_trip_eq(&ck, &back);
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        let ck = sample();
+        assert_eq!(ck.to_bytes(), ck.to_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(SimCheckpoint::from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+
+        let mut bad = bytes.clone();
+        bad[8] = 99; // version LE byte 0
+        assert!(SimCheckpoint::from_bytes(&bad)
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+
+        // Every proper prefix must fail cleanly, never panic.
+        for cut in [7, 12, 17, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                SimCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes parsed"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_length_does_not_overallocate() {
+        let ck = sample();
+        let mut bytes = ck.to_bytes();
+        // The workers section starts with a u32 count followed by a
+        // u64 x-vector length; smash a plausible interior length field
+        // to u64::MAX and require a clean error (the guard compares
+        // against remaining payload before allocating).
+        let pos = bytes.len() - 9;
+        for b in &mut bytes[pos..pos + 8] {
+            *b = 0xFF;
+        }
+        assert!(SimCheckpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trips_through_atomic_writes() {
+        let dir = std::env::temp_dir().join(format!("a2ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        // A second save over the same path replaces it atomically.
+        ck.save(&path).unwrap();
+        let back = SimCheckpoint::load(&path).unwrap();
+        assert_round_trip_eq(&ck, &back);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "staging files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

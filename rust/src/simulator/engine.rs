@@ -19,6 +19,7 @@ use crate::metrics::Recorder;
 use crate::model::Model;
 use crate::optim::{LrSchedule, Sgd};
 use crate::rng::{Normal, Xoshiro256};
+use crate::simulator::checkpoint::{CheckpointMeta, SimCheckpoint, WorkerCkpt};
 use crate::util::two_mut;
 
 /// Outcome of one simulated run.
@@ -60,6 +61,378 @@ impl SimResult {
     }
 }
 
+/// The virtual-time event loop as a steppable object.
+///
+/// [`run_simulation`] used to own the whole loop in one function body;
+/// the serve daemon's checkpoint/restore needs to *pause* the loop at an
+/// event boundary, serialize every piece of mutable state, and later
+/// rebuild an engine that continues bit-identically. `SimEngine` holds
+/// that state explicitly:
+///
+/// * [`SimEngine::new`] reproduces the exact construction (and RNG call)
+///   order of the original function, so a fresh engine from the same
+///   config is bit-identical to the pre-refactor loop;
+/// * [`SimEngine::step`] executes exactly one scheduler tick (changes
+///   drained first, then the Grad/Comm arm);
+/// * [`SimEngine::checkpoint`] / [`SimEngine::restore`] capture and
+///   reinstall the mutable state between ticks — constructor-time state
+///   (plan, spectrum, shards, LR schedule) is deliberately NOT captured:
+///   it is a pure function of the config and is rebuilt by constructing
+///   a fresh engine from the same config before restoring.
+///
+/// The metrics [`Recorder`] is NOT part of a checkpoint: a resumed run
+/// re-records only the tail of the series. The final parameters (and
+/// hence the replay checksum) are unaffected — they never read the
+/// recorder.
+pub struct SimEngine {
+    cfg: ExperimentConfig,
+    model: Arc<dyn Model>,
+    plan: NetworkPlan,
+    spectrum: Spectrum,
+    core: DynamicsCore,
+    adaptive: bool,
+    sched: VirtualTimeScheduler,
+    workers: Vec<WorkerState>,
+    optims: Vec<Sgd>,
+    samplers: Vec<BatchSampler>,
+    total_grads: u64,
+    recorder: Recorder,
+    grad: Vec<f32>,
+    loss_ema: f64,
+    grads_done: u64,
+    applied_comms: u64,
+    record_every: u64,
+    in_fleet: Vec<bool>,
+    /// Scheduler ticks executed so far (grad + comm). The unit the CLI's
+    /// `--checkpoint-at K` counts in.
+    ticks_done: u64,
+}
+
+impl SimEngine {
+    /// Build a fresh engine. Construction order (and in particular the
+    /// order of draws against the seeded RNG) matches the historical
+    /// `run_simulation` body exactly — bit-compatibility with every
+    /// golden checksum depends on it.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        model: Arc<dyn Model>,
+        shards: &ShardedIndices,
+    ) -> crate::Result<Self> {
+        let algo = cfg.algo();
+        anyhow::ensure!(
+            algo != Algorithm::AllReduce,
+            "run_simulation is for the asynchronous algorithms; use run_allreduce"
+        );
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+        // Straggler model: per-worker compute speed ~ N(1, jitter), floored.
+        let mut speed_dist = Normal::new(1.0, cfg.compute_jitter);
+        let grad_rates: Vec<f64> = (0..cfg.n_workers)
+            .map(|_| speed_dist.sample(&mut rng).max(0.2))
+            .collect();
+
+        // The network plan: either the static topology or a compiled
+        // scenario (horizon = expected per-worker steps at unit rate).
+        let plan = match &cfg.scenario {
+            Some(sc) => sc.compile(
+                cfg.n_workers,
+                cfg.comm_rate,
+                cfg.steps_per_worker as f64,
+                &grad_rates,
+            )?,
+            None => NetworkPlan::static_plan(
+                Graph::build(&cfg.topology, cfg.n_workers)?,
+                cfg.comm_rate,
+                &grad_rates,
+            ),
+        };
+        let spectrum = plan.spectrum;
+        let schedule =
+            LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
+        let core = DynamicsCore::for_algorithm(algo, &spectrum, schedule)?;
+        // Adaptive (η, α̃): scenario updates that change the phase or the
+        // worker set carry the active subgraph's (χ₁, χ₂) unless the
+        // scenario was compiled with `adapt=0`.
+        let adaptive = cfg.scenario.as_ref().is_some_and(|s| s.adaptive);
+        let sched = VirtualTimeScheduler::new(&plan, cfg.seed ^ 0x5EED);
+
+        // Worker states: identical init (the paper's initial All-Reduce).
+        let init = model.init_params(&mut rng);
+        let workers: Vec<WorkerState> =
+            (0..cfg.n_workers).map(|_| WorkerState::new(init.clone())).collect();
+        let optims: Vec<Sgd> = (0..cfg.n_workers)
+            .map(|_| Sgd::new(cfg.momentum as f32))
+            .collect();
+        let samplers: Vec<BatchSampler> = (0..cfg.n_workers)
+            .map(|w| BatchSampler::new(shards.per_worker[w].clone(), rng.split(w as u64)))
+            .collect();
+
+        let total_grads = cfg.steps_per_worker * cfg.n_workers as u64;
+        let grad = vec![0.0f32; model.dim()];
+        // Record ~500 points per series regardless of run length.
+        let record_every = (total_grads / 500).max(1);
+        let n = cfg.n_workers;
+
+        Ok(Self {
+            cfg: cfg.clone(),
+            model,
+            plan,
+            spectrum,
+            core,
+            adaptive,
+            sched,
+            workers,
+            optims,
+            samplers,
+            total_grads,
+            recorder: Recorder::new(),
+            grad,
+            loss_ema: f64::NAN,
+            grads_done: 0,
+            // Communication events actually APPLIED (pacing rules like
+            // local SGD skip proposed pairings; for always-admitting
+            // rules this equals the scheduler's proposal count, keeping
+            // the series bit-identical).
+            applied_comms: 0,
+            record_every,
+            // Churn bookkeeping: which workers are currently in the
+            // fleet (the donor for a re-join is the smallest-index
+            // active union neighbor — the same rule the runtime's
+            // monitor applies).
+            in_fleet: vec![true; n],
+            ticks_done: 0,
+        })
+    }
+
+    /// True once the gradient budget is exhausted and [`SimEngine::step`]
+    /// will do nothing more.
+    pub fn done(&self) -> bool {
+        self.grads_done >= self.total_grads
+    }
+
+    /// Scheduler ticks executed so far.
+    pub fn ticks_done(&self) -> u64 {
+        self.ticks_done
+    }
+
+    /// Gradient events executed so far (out of
+    /// `n_workers × steps_per_worker`).
+    pub fn grads_done(&self) -> u64 {
+        self.grads_done
+    }
+
+    /// Execute one scheduler tick. Returns `Ok(false)` once the total
+    /// gradient budget is reached (the engine is then ready for
+    /// [`SimEngine::finish`]).
+    pub fn step(&mut self) -> crate::Result<bool> {
+        if self.grads_done >= self.total_grads {
+            return Ok(false);
+        }
+        let tick = self
+            .sched
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("event queue drained unexpectedly"))?;
+        // Process scheduler-recorded changes BEFORE the popped tick:
+        // every change has a timestamp at or before the tick's, so churn
+        // re-inits and retunes stay event-ordered.
+        for ch in self.sched.drain_changes() {
+            for &w in &ch.left {
+                self.in_fleet[w] = false;
+            }
+            for &j in &ch.joined {
+                let donor = self
+                    .plan
+                    .union
+                    .neighbors(j)
+                    .iter()
+                    .copied()
+                    .find(|&d| self.in_fleet[d]);
+                if let Some(d) = donor {
+                    let donor_x = self.workers[d].x.clone();
+                    self.core.rejoin_from(&mut self.workers[j], &donor_x, ch.t);
+                }
+            }
+            for &j in &ch.joined {
+                self.in_fleet[j] = true;
+            }
+            if self.adaptive {
+                if let Some((c1, c2)) = ch.chis {
+                    self.core.retune(c1, c2);
+                }
+            }
+        }
+        match tick {
+            Tick::Grad { worker, t } => {
+                let batch = self.samplers[worker].next_batch(self.cfg.batch_size);
+                let loss =
+                    self.model.loss_grad(&self.workers[worker].x, batch, &mut self.grad) as f64;
+                let lr = self.core.grad_event(
+                    &mut self.workers[worker],
+                    t,
+                    &mut self.optims[worker],
+                    &self.grad,
+                );
+                self.loss_ema = LossEma::fold(self.loss_ema, loss, 0.98);
+                self.grads_done += 1;
+                if self.grads_done % self.record_every == 0 {
+                    self.recorder.record("train_loss", t, self.loss_ema);
+                    self.recorder.record("lr", t, lr as f64);
+                    // Communication cost so far, aligned with the loss
+                    // samples — the sweep reads "comm events to target
+                    // loss" off these two series.
+                    self.recorder.record("comms", t, self.applied_comms as f64);
+                }
+                if self.grads_done % (self.record_every * 10) == 0 {
+                    self.recorder.record("consensus", t, consensus_distance(&self.workers));
+                }
+            }
+            Tick::Comm { i, j, t } => {
+                let (a, b) = two_mut(&mut self.workers, i, j);
+                if self.core.comm_event(a, b, t) {
+                    self.applied_comms += 1;
+                }
+            }
+        }
+        self.ticks_done += 1;
+        Ok(true)
+    }
+
+    /// Close out the run: sync all workers to the final time (completes
+    /// the lazy mixing), then take the final consensus + average (the
+    /// paper's closing All-Reduce).
+    pub fn finish(mut self) -> SimResult {
+        let t_end = self.sched.now();
+        self.core.sync_all(&mut self.workers, t_end);
+        self.recorder.record("consensus", t_end, consensus_distance(&self.workers));
+        let avg_params = crate::gossip::consensus::average_params(&self.workers);
+        let grads_per_worker: Vec<u64> = self.workers.iter().map(|w| w.n_grads).collect();
+
+        SimResult {
+            recorder: self.recorder,
+            avg_params,
+            spectrum: self.spectrum,
+            acid: self.core.acid,
+            n_grads: self.sched.n_grad_events(),
+            n_comms: self.applied_comms,
+            net_updates: crate::engine::Scheduler::updates_applied(&self.sched),
+            t_end,
+            grads_per_worker,
+            workers: self.workers,
+        }
+    }
+
+    /// Drive the loop to completion.
+    pub fn run(mut self) -> crate::Result<SimResult> {
+        while self.step()? {}
+        Ok(self.finish())
+    }
+
+    /// Capture every piece of mutable loop state into a
+    /// [`SimCheckpoint`]. Must be called between ticks (which is the only
+    /// time caller code can run). Constructor-derived state — the plan,
+    /// the shards, the LR schedule — is identified by config metadata
+    /// instead of being serialized; [`SimEngine::restore`] validates the
+    /// metadata against the rebuilt engine.
+    pub fn checkpoint(&self) -> SimCheckpoint {
+        SimCheckpoint {
+            meta: CheckpointMeta {
+                n_workers: self.cfg.n_workers as u32,
+                dim: self.model.dim() as u64,
+                seed: self.cfg.seed,
+                steps_per_worker: self.cfg.steps_per_worker,
+                batch_size: self.cfg.batch_size as u32,
+                algo: self.cfg.algo().to_string(),
+            },
+            sched: self.sched.state(),
+            workers: self
+                .workers
+                .iter()
+                .map(|w| WorkerCkpt {
+                    x: w.x.to_vec(),
+                    xt: w.xt.to_vec(),
+                    t_last: w.t_last,
+                    n_grads: w.n_grads,
+                    n_comms: w.n_comms,
+                    grads_at_last_comm: w.grads_at_last_comm,
+                })
+                .collect(),
+            velocities: self.optims.iter().map(|o| o.velocity().to_vec()).collect(),
+            samplers: self.samplers.iter().map(|s| s.state()).collect(),
+            acid: self.core.acid,
+            loss_ema: self.loss_ema,
+            grads_done: self.grads_done,
+            applied_comms: self.applied_comms,
+            ticks_done: self.ticks_done,
+            in_fleet: self.in_fleet.clone(),
+        }
+    }
+
+    /// Reinstall checkpointed state into a freshly constructed engine.
+    /// The engine must have been built from the same config + model +
+    /// shards the checkpoint was taken under; metadata mismatches are
+    /// rejected rather than silently producing a divergent trace.
+    pub fn restore(&mut self, ck: &SimCheckpoint) -> crate::Result<()> {
+        let m = &ck.meta;
+        anyhow::ensure!(
+            m.n_workers as usize == self.cfg.n_workers
+                && m.dim as usize == self.model.dim()
+                && m.seed == self.cfg.seed
+                && m.steps_per_worker == self.cfg.steps_per_worker
+                && m.batch_size as u32 == self.cfg.batch_size as u32
+                && m.algo == self.cfg.algo().to_string(),
+            "checkpoint metadata does not match this run's config: \
+             checkpoint (n={}, dim={}, seed={}, steps={}, batch={}, algo={}) \
+             vs config (n={}, dim={}, seed={}, steps={}, batch={}, algo={})",
+            m.n_workers,
+            m.dim,
+            m.seed,
+            m.steps_per_worker,
+            m.batch_size,
+            m.algo,
+            self.cfg.n_workers,
+            self.model.dim(),
+            self.cfg.seed,
+            self.cfg.steps_per_worker,
+            self.cfg.batch_size,
+            self.cfg.algo(),
+        );
+        anyhow::ensure!(
+            ck.workers.len() == self.workers.len()
+                && ck.velocities.len() == self.optims.len()
+                && ck.samplers.len() == self.samplers.len()
+                && ck.in_fleet.len() == self.in_fleet.len(),
+            "checkpoint worker-set size mismatch"
+        );
+        for w in &ck.workers {
+            anyhow::ensure!(
+                w.x.len() == self.model.dim() && w.xt.len() == self.model.dim(),
+                "checkpoint parameter dimension mismatch"
+            );
+        }
+        self.sched.restore(&ck.sched)?;
+        for (dst, src) in self.workers.iter_mut().zip(&ck.workers) {
+            dst.x.copy_from_slice(&src.x);
+            dst.xt.copy_from_slice(&src.xt);
+            dst.t_last = src.t_last;
+            dst.n_grads = src.n_grads;
+            dst.n_comms = src.n_comms;
+            dst.grads_at_last_comm = src.grads_at_last_comm;
+        }
+        for (opt, v) in self.optims.iter_mut().zip(&ck.velocities) {
+            opt.restore_velocity(v);
+        }
+        for (s, st) in self.samplers.iter_mut().zip(&ck.samplers) {
+            s.restore(st);
+        }
+        self.core.set_params(ck.acid);
+        self.loss_ema = ck.loss_ema;
+        self.grads_done = ck.grads_done;
+        self.applied_comms = ck.applied_comms;
+        self.ticks_done = ck.ticks_done;
+        self.in_fleet.copy_from_slice(&ck.in_fleet);
+        Ok(())
+    }
+}
+
 /// Run the asynchronous decentralized dynamic of Eq. 4 in virtual time.
 ///
 /// * `cfg.algo()` picks the update rule — A²CiD² (Prop. 3.6 parameters),
@@ -75,145 +448,7 @@ pub fn run_simulation(
     model: Arc<dyn Model>,
     shards: &ShardedIndices,
 ) -> crate::Result<SimResult> {
-    let algo = cfg.algo();
-    anyhow::ensure!(
-        algo != Algorithm::AllReduce,
-        "run_simulation is for the asynchronous algorithms; use run_allreduce"
-    );
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    // Straggler model: per-worker compute speed ~ N(1, jitter), floored.
-    let mut speed_dist = Normal::new(1.0, cfg.compute_jitter);
-    let grad_rates: Vec<f64> = (0..cfg.n_workers)
-        .map(|_| speed_dist.sample(&mut rng).max(0.2))
-        .collect();
-
-    // The network plan: either the static topology or a compiled
-    // scenario (horizon = expected per-worker steps at unit rate).
-    let plan = match &cfg.scenario {
-        Some(sc) => sc.compile(
-            cfg.n_workers,
-            cfg.comm_rate,
-            cfg.steps_per_worker as f64,
-            &grad_rates,
-        )?,
-        None => NetworkPlan::static_plan(
-            Graph::build(&cfg.topology, cfg.n_workers)?,
-            cfg.comm_rate,
-            &grad_rates,
-        ),
-    };
-    let spectrum = plan.spectrum;
-    let schedule =
-        LrSchedule::paper_cifar_sqrt(cfg.base_lr, cfg.n_workers, cfg.steps_per_worker);
-    let mut core = DynamicsCore::for_algorithm(algo, &spectrum, schedule)?;
-    // Adaptive (η, α̃): scenario updates that change the phase or the
-    // worker set carry the active subgraph's (χ₁, χ₂) unless the
-    // scenario was compiled with `adapt=0`.
-    let adaptive = cfg.scenario.as_ref().is_some_and(|s| s.adaptive);
-    let mut sched = VirtualTimeScheduler::new(&plan, cfg.seed ^ 0x5EED);
-
-    // Worker states: identical init (the paper's initial All-Reduce).
-    let init = model.init_params(&mut rng);
-    let mut workers: Vec<WorkerState> =
-        (0..cfg.n_workers).map(|_| WorkerState::new(init.clone())).collect();
-    let mut optims: Vec<Sgd> = (0..cfg.n_workers)
-        .map(|_| Sgd::new(cfg.momentum as f32))
-        .collect();
-    let mut samplers: Vec<BatchSampler> = (0..cfg.n_workers)
-        .map(|w| BatchSampler::new(shards.per_worker[w].clone(), rng.split(w as u64)))
-        .collect();
-
-    let total_grads = cfg.steps_per_worker * cfg.n_workers as u64;
-    let mut recorder = Recorder::new();
-    let mut grad = vec![0.0f32; model.dim()];
-    let mut loss_ema = f64::NAN;
-    let mut grads_done = 0u64;
-    // Communication events actually APPLIED (pacing rules like local SGD
-    // skip proposed pairings; for always-admitting rules this equals the
-    // scheduler's proposal count, keeping the series bit-identical).
-    let mut applied_comms = 0u64;
-    // Record ~500 points per series regardless of run length.
-    let record_every = (total_grads / 500).max(1);
-
-    // Churn bookkeeping: which workers are currently in the fleet (the
-    // donor for a re-join is the smallest-index active union neighbor —
-    // the same rule the runtime's monitor applies).
-    let mut in_fleet = vec![true; cfg.n_workers];
-    while grads_done < total_grads {
-        let tick = sched
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("event queue drained unexpectedly"))?;
-        // Process scheduler-recorded changes BEFORE the popped tick:
-        // every change has a timestamp at or before the tick's, so churn
-        // re-inits and retunes stay event-ordered.
-        for ch in sched.drain_changes() {
-            for &w in &ch.left {
-                in_fleet[w] = false;
-            }
-            for &j in &ch.joined {
-                let donor = plan.union.neighbors(j).iter().copied().find(|&d| in_fleet[d]);
-                if let Some(d) = donor {
-                    let donor_x = workers[d].x.clone();
-                    core.rejoin_from(&mut workers[j], &donor_x, ch.t);
-                }
-            }
-            for &j in &ch.joined {
-                in_fleet[j] = true;
-            }
-            if adaptive {
-                if let Some((c1, c2)) = ch.chis {
-                    core.retune(c1, c2);
-                }
-            }
-        }
-        match tick {
-            Tick::Grad { worker, t } => {
-                let batch = samplers[worker].next_batch(cfg.batch_size);
-                let loss = model.loss_grad(&workers[worker].x, batch, &mut grad) as f64;
-                let lr = core.grad_event(&mut workers[worker], t, &mut optims[worker], &grad);
-                loss_ema = LossEma::fold(loss_ema, loss, 0.98);
-                grads_done += 1;
-                if grads_done % record_every == 0 {
-                    recorder.record("train_loss", t, loss_ema);
-                    recorder.record("lr", t, lr as f64);
-                    // Communication cost so far, aligned with the loss
-                    // samples — the sweep reads "comm events to target
-                    // loss" off these two series.
-                    recorder.record("comms", t, applied_comms as f64);
-                }
-                if grads_done % (record_every * 10) == 0 {
-                    recorder.record("consensus", t, consensus_distance(&workers));
-                }
-            }
-            Tick::Comm { i, j, t } => {
-                let (a, b) = two_mut(&mut workers, i, j);
-                if core.comm_event(a, b, t) {
-                    applied_comms += 1;
-                }
-            }
-        }
-    }
-
-    // Sync all workers to the final time (completes the lazy mixing), then
-    // take the final consensus + average (the paper's closing All-Reduce).
-    let t_end = sched.now();
-    core.sync_all(&mut workers, t_end);
-    recorder.record("consensus", t_end, consensus_distance(&workers));
-    let avg_params = crate::gossip::consensus::average_params(&workers);
-    let grads_per_worker: Vec<u64> = workers.iter().map(|w| w.n_grads).collect();
-
-    Ok(SimResult {
-        recorder,
-        avg_params,
-        spectrum,
-        acid: core.acid,
-        n_grads: sched.n_grad_events(),
-        n_comms: applied_comms,
-        net_updates: crate::engine::Scheduler::updates_applied(&sched),
-        t_end,
-        grads_per_worker,
-        workers,
-    })
+    SimEngine::new(cfg, model, shards)?.run()
 }
 
 #[cfg(test)]
@@ -485,6 +720,99 @@ mod tests {
         base_cfg.method = Method::AsyncBaseline;
         let (base, _) = run_cfg(&base_cfg);
         assert!(!base.acid.is_accelerated());
+    }
+
+    #[test]
+    fn stepped_engine_matches_run_simulation() {
+        // The refactor contract: driving SimEngine tick by tick is the
+        // same computation as the one-shot wrapper, bit for bit.
+        let cfg = small_cfg(Method::Acid);
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }
+                .sample(cfg.dataset_size, 2),
+        );
+        let shards = cfg.sharding.assign(&ds, cfg.n_workers, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let one_shot = run_simulation(&cfg, model.clone(), &shards).unwrap();
+        let mut eng = SimEngine::new(&cfg, model, &shards).unwrap();
+        while eng.step().unwrap() {}
+        assert!(eng.done());
+        let stepped = eng.finish();
+        assert_eq!(one_shot.avg_params, stepped.avg_params);
+        assert_eq!(one_shot.n_comms, stepped.n_comms);
+        assert_eq!(one_shot.t_end.to_bits(), stepped.t_end.to_bits());
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bit_identically() {
+        // The tentpole invariant: a run interrupted at tick K and resumed
+        // from a (serialized!) checkpoint produces the exact bytes of an
+        // uninterrupted run — through churn, adaptive retunes, and
+        // momentum. Exercised again at pool scale + across processes by
+        // tests/integration_replay.rs.
+        let mut cfg = small_cfg(Method::Acid);
+        cfg.n_workers = 8;
+        cfg.momentum = 0.9;
+        cfg.scenario = Some(
+            Scenario::parse("ring@0,exponential@0.5;leave=0.25:0.3:1;join=0.25:0.7")
+                .unwrap(),
+        );
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }
+                .sample(cfg.dataset_size, 2),
+        );
+        let shards = cfg.sharding.assign(&ds, cfg.n_workers, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+
+        let base = run_simulation(&cfg, model.clone(), &shards).unwrap();
+
+        let mut eng = SimEngine::new(&cfg, model.clone(), &shards).unwrap();
+        for _ in 0..600 {
+            assert!(eng.step().unwrap());
+        }
+        // Round-trip the checkpoint through its wire format, then throw
+        // the interrupted engine away entirely.
+        let bytes = eng.checkpoint().to_bytes();
+        drop(eng);
+        let ck = SimCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck.ticks_done, 600);
+
+        let mut resumed = SimEngine::new(&cfg, model, &shards).unwrap();
+        resumed.restore(&ck).unwrap();
+        let res = resumed.run().unwrap();
+
+        assert_eq!(base.avg_params, res.avg_params, "resumed trace diverged");
+        assert_eq!(base.n_comms, res.n_comms);
+        assert_eq!(base.n_grads, res.n_grads);
+        assert_eq!(base.net_updates, res.net_updates);
+        assert_eq!(base.t_end.to_bits(), res.t_end.to_bits());
+        assert_eq!(base.acid, res.acid);
+        for (a, b) in base.workers.iter().zip(&res.workers) {
+            assert_eq!(a.n_grads, b.n_grads);
+            assert_eq!(a.n_comms, b.n_comms);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_config() {
+        let cfg = small_cfg(Method::Acid);
+        let ds = Arc::new(
+            GaussianMixture { dim: 8, n_classes: 4, margin: 3.0, sigma: 1.0 }
+                .sample(cfg.dataset_size, 2),
+        );
+        let shards = cfg.sharding.assign(&ds, cfg.n_workers, 3);
+        let model = Arc::new(Logistic::new(ds, 0.0));
+        let mut eng = SimEngine::new(&cfg, model.clone(), &shards).unwrap();
+        for _ in 0..10 {
+            eng.step().unwrap();
+        }
+        let ck = eng.checkpoint();
+        // Different seed ⇒ different run identity ⇒ refuse.
+        let mut other_cfg = cfg.clone();
+        other_cfg.seed = 99;
+        let mut other = SimEngine::new(&other_cfg, model, &shards).unwrap();
+        let err = other.restore(&ck).unwrap_err().to_string();
+        assert!(err.contains("metadata"), "unexpected error: {err}");
     }
 
     #[test]

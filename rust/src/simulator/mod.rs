@@ -11,11 +11,13 @@
 //! asynchrony on a smaller grid.
 
 mod allreduce;
+pub mod checkpoint;
 pub mod engine;
 pub mod events;
 pub mod trace;
 
 pub use allreduce::{allreduce_round_time, run_allreduce, ArResult, ArTimingConfig};
-pub use engine::{run_simulation, SimResult};
-pub use events::{Event, EventKind, EventQueue};
+pub use checkpoint::{CheckpointMeta, SimCheckpoint, WorkerCkpt};
+pub use engine::{run_simulation, SimEngine, SimResult};
+pub use events::{Event, EventKind, EventQueue, EventQueueState};
 pub use trace::{simulate_timeline, TimelineStats};

@@ -19,8 +19,19 @@
 //! `rust/oracle/replay_golden.toml`.
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use crate::runtime::artifacts::write_atomic;
+
+/// Serializes the read-modify-write bless cycle within this process.
+/// `cargo test` runs tests in parallel threads; two tests blessing
+/// DIFFERENT keys in the SAME file would otherwise interleave their
+/// read → rewrite → publish cycles and one bless would silently revert
+/// the other (each rename is atomic — the fixed-staging race is solved
+/// in `write_atomic` — but the cycle as a whole is not). Cross-process
+/// blessing remains last-writer-wins; the test harness only blesses
+/// from one process.
+static BLESS_LOCK: Mutex<()> = Mutex::new(());
 
 /// How a golden comparison resolved (mismatches are `Err`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +46,10 @@ pub enum GoldenStatus {
 /// Compare `observed` against golden `key` in `path`, blessing pending
 /// entries. See the module docs for the protocol.
 pub fn check_or_bless(path: &Path, key: &str, observed: &str) -> crate::Result<GoldenStatus> {
+    // Hold the process-wide bless lock for the whole read-check-rewrite
+    // cycle (a poisoned lock just means another test's assert fired
+    // while blessing; the file itself is never half-written).
+    let _guard = BLESS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read golden file {}: {e}", path.display()))?;
     let current = lookup(&text, key).ok_or_else(|| {
@@ -133,6 +148,42 @@ mod tests {
         assert!(err.contains("not declared"), "{err}");
         std::fs::remove_file(&path).ok();
         assert!(check_or_bless(&path, "replay_w1", "x").is_err());
+    }
+
+    #[test]
+    fn concurrent_blessing_of_distinct_keys_loses_neither() {
+        // Regression test for the bless write-race: N threads each bless
+        // their own pending key in ONE shared golden file, concurrently.
+        // Without the process-wide bless lock, interleaved
+        // read → rewrite → publish cycles revert each other's updates.
+        let n = 8;
+        let mut contents = String::from("# shared oracle\n");
+        for k in 0..n {
+            contents.push_str(&format!("key_{k} = \"pending\"\n"));
+        }
+        let path = temp("race", &contents);
+        let handles: Vec<_> = (0..n)
+            .map(|k| {
+                let path = path.clone();
+                std::thread::spawn(move || {
+                    check_or_bless(&path, &format!("key_{k}"), &format!("value_{k}")).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), GoldenStatus::Blessed);
+        }
+        // Every key holds ITS OWN observed value — nothing reverted to
+        // pending, nothing overwritten by a sibling's cycle.
+        let text = std::fs::read_to_string(&path).unwrap();
+        for k in 0..n {
+            assert!(
+                text.contains(&format!("key_{k} = \"value_{k}\"")),
+                "key_{k} lost its bless:\n{text}"
+            );
+        }
+        assert!(text.starts_with("# shared oracle\n"), "comments survive");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -119,3 +119,94 @@ fn churn_replay_reproduces_golden_checksums_across_widths_and_backends() {
         }
     }
 }
+
+/// One interrupted replay: run to tick `at`, checkpoint, exit; then a
+/// SECOND process restores from the file and runs to completion.
+/// Returns the resumed process's full stdout.
+fn replay_interrupted_at(width: &str, at: &str, ckpt: &Path) -> String {
+    let ckpt_str = ckpt.to_str().expect("utf-8 temp path");
+    let out = Command::new(env!("CARGO_BIN_EXE_a2cid2"))
+        .args(ARGS)
+        .arg("65536")
+        .args(["--checkpoint-at", at, "--checkpoint", ckpt_str])
+        .env("A2CID2_POOL_THREADS", width)
+        .env("A2CID2_KERNEL_BACKEND", "auto")
+        .env("A2CID2_PIN", "0")
+        .output()
+        .expect("spawn a2cid2 replay (checkpoint leg)");
+    assert!(
+        out.status.success(),
+        "checkpoint leg at width {width} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(
+        stdout.contains(&format!("checkpointed at tick {at}")),
+        "interruption did not land at tick {at}:\n{stdout}"
+    );
+    assert!(
+        !stdout.contains("checksum="),
+        "the interrupted leg must exit before finishing:\n{stdout}"
+    );
+    let out = Command::new(env!("CARGO_BIN_EXE_a2cid2"))
+        .args(ARGS)
+        .arg("65536")
+        .args(["--restore", ckpt_str])
+        .env("A2CID2_POOL_THREADS", width)
+        .env("A2CID2_KERNEL_BACKEND", "auto")
+        .env("A2CID2_PIN", "0")
+        .output()
+        .expect("spawn a2cid2 replay (resume leg)");
+    assert!(
+        out.status.success(),
+        "resume leg at width {width} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+#[test]
+fn checkpoint_restore_reproduces_the_uninterrupted_golden_checksum() {
+    // The tentpole determinism contract: interrupt the churn replay at an
+    // arbitrary tick, persist the full engine state (params, momentum,
+    // sampler cursors, RNG positions, event queue), restore in a FRESH
+    // process, run to completion — and land on the SAME golden checksum
+    // as an uninterrupted run, at pool widths 1 and 4. The golden keys
+    // are shared with the uninterrupted test above, so a divergence
+    // between the two paths cannot hide behind a re-bless.
+    let dir = std::env::temp_dir().join(format!("a2ckpt_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let golden = Path::new(env!("CARGO_MANIFEST_DIR")).join("oracle/replay_golden.toml");
+    for (width, key) in [
+        ("1", "churn_replay_w8_s40_seed7_dim65536_pool1"),
+        ("4", "churn_replay_w8_s40_seed7_dim65536_pool4"),
+    ] {
+        let ckpt = dir.join(format!("interrupt_w{width}.ckpt"));
+        // Tick 137 sits mid-run, past the first scenario updates — an
+        // arbitrary but fixed interruption point.
+        let resumed = replay_interrupted_at(width, "137", &ckpt);
+        assert!(resumed.contains("restored from"), "{resumed}");
+        let checksum = extract_checksum(&resumed);
+        match check_or_bless(&golden, key, &checksum).unwrap_or_else(|e| panic!("{e:#}")) {
+            GoldenStatus::Matched => {}
+            GoldenStatus::Blessed => println!(
+                "blessed {key} = {checksum} via the RESUMED path — commit to pin it"
+            ),
+        }
+        // Resumed event counts must match the uninterrupted run's too —
+        // the checksum pins the parameters, these pin the trace.
+        let uninterrupted = replay_at(width, "auto", "0");
+        let tail = |s: &str| {
+            s.lines()
+                .find(|l| l.contains("checksum="))
+                .map(String::from)
+                .unwrap_or_default()
+        };
+        assert_eq!(
+            tail(&resumed),
+            tail(&uninterrupted),
+            "resumed grads/comms/net_updates/checksum line diverged at width {width}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
